@@ -1,0 +1,61 @@
+//! Dataflow explorer: print each family's loop nest and per-operand
+//! reuse factors / access counts for any model layer — the Table I +
+//! Fig. 6 view, useful for understanding *why* one schedule beats
+//! another.
+//!
+//!     cargo run --release --example dataflow_explorer [paper|cifar100|tiny]
+
+use eocas::arch::Architecture;
+use eocas::config::EnergyConfig;
+use eocas::dataflow::templates::{all_families, sram_tile_bits};
+use eocas::energy::conv_energy;
+use eocas::model::SnnModel;
+use eocas::reuse::workload_access;
+use eocas::workload::generate;
+
+fn main() -> anyhow::Result<()> {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "paper".into());
+    let model = match which.as_str() {
+        "paper" => SnnModel::paper_layer(),
+        "cifar100" => SnnModel::cifar100_snn(),
+        "tiny" => eocas::coordinator::trained_model(),
+        other => anyhow::bail!("unknown model {other}"),
+    };
+    let cfg = EnergyConfig::default();
+    let arch = Architecture::paper_default();
+    let wls = generate(&model, &[], cfg.nominal_activity).map_err(anyhow::Error::msg)?;
+    let wl = &wls[0];
+
+    for w in wl.convs() {
+        println!(
+            "=============== {} convolution (layer {}) ===============",
+            w.phase.name(),
+            w.layer
+        );
+        for (fam, m) in all_families(w, &arch) {
+            println!("--- {} (utilization {:.0}%)", fam.name(), m.utilization(&arch.array) * 100.0);
+            print!("{}", m.render_loop_nest());
+            let ce = conv_energy(w, &m, &arch, &cfg);
+            println!(
+                "  energy: compute {:.2} uJ + memory {:.2} uJ = {:.2} uJ  ({} cycles)",
+                ce.compute_j * 1e6,
+                ce.mem_j() * 1e6,
+                ce.total_j() * 1e6,
+                ce.cycles
+            );
+            for (spec, acc) in workload_access(w, &m) {
+                println!(
+                    "    {:<9} RU(reg) {:>8.1} RU(sram) {:>9.1}  reg-fills {:>12.0} sram-fills {:>12.0}  tile {:>8} b",
+                    spec.tensor,
+                    acc.ru_reg,
+                    acc.ru_sram,
+                    acc.reg_fills,
+                    acc.sram_fills,
+                    sram_tile_bits(&spec, &m),
+                );
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Full design-space sweep: reproduces Table III (array schemes),
+//! Table IV/V (dataflows) and Fig. 5 (energy intervals) in one run, over
+//! both the paper's representative layer and the full CIFAR-100 network.
+//!
+//!     cargo run --release --example dse_sweep
+
+use eocas::arch::ArchPool;
+use eocas::config::EnergyConfig;
+use eocas::dse::{explore, DseConfig};
+use eocas::model::SnnModel;
+use eocas::report::{self, ReportCtx};
+use eocas::sparsity::SparsityProfile;
+use eocas::workload::generate;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = EnergyConfig::default();
+
+    // ---- Paper setting: Fig. 4 layer ------------------------------------
+    let ctx = ReportCtx::paper_default();
+    print!("{}", report::table3_array_schemes(&ctx).render());
+    print!("{}", report::table4_dataflow_energy(&ctx).render());
+    print!("{}", report::table5_compute_energy(&ctx).render());
+    let (fig5_table, fig5_txt) = report::fig5_energy_intervals(&ctx, 6);
+    println!("{fig5_txt}");
+    let _ = fig5_table; // full listing written by `eocas report all`
+
+    // ---- Full-network sweep: CIFAR-100 SNN with depth-decaying activity --
+    let model = SnnModel::cifar100_snn();
+    let n_layers = model.shaped_layers().map_err(anyhow::Error::msg)?.len();
+    let sparsity = SparsityProfile::synthetic_decay(n_layers, 0.35, 0.8);
+    println!("\n=== full-network sweep: {} ===", model.name);
+    let wls = generate(&model, &sparsity.per_layer, cfg.nominal_activity)
+        .map_err(anyhow::Error::msg)?;
+    // Extended pool: every 256-MAC arrangement x 3 memory scalings.
+    let pool = ArchPool::extended(256, &[0.5, 1.0, 2.0]);
+    let start = std::time::Instant::now();
+    let res = explore(&pool, &wls, &cfg, &DseConfig { random_samples: 2, ..Default::default() });
+    println!(
+        "explored {} candidates in {:.0} ms",
+        res.evaluations,
+        start.elapsed().as_secs_f64() * 1e3
+    );
+    let best = res.best().unwrap();
+    println!(
+        "optimum: {} ({}) + {} @ {:.1} uJ / training pass",
+        best.arch.array.label(),
+        best.arch.label(),
+        best.dataflow,
+        best.overall_j * 1e6
+    );
+    let (lo, hi) = res.energy_interval().unwrap();
+    println!("energy interval across the pool: [{:.1}, {:.1}] uJ ({:.1}x spread)",
+        lo * 1e6, hi * 1e6, hi / lo);
+    println!("pareto (energy vs cycles):");
+    for c in res.pareto().iter().take(8) {
+        println!(
+            "  {:>7} mem x{:<4.2} {:<16} {:>12.1} uJ {:>12} cycles",
+            c.arch.array.label(),
+            c.arch.mem.total_bytes() as f64 / 2_176_000.0,
+            c.dataflow,
+            c.overall_j * 1e6,
+            c.cycles
+        );
+    }
+    Ok(())
+}

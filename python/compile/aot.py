@@ -1,0 +1,129 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the Rust runtime.
+
+Run once via ``make artifacts``. Python never executes at simulation /
+training-orchestration time: the Rust binary loads these artifacts with
+``HloModuleProto::from_text_file`` and runs them on the PJRT CPU client.
+
+HLO text (NOT ``lowered.compile()``/serialized protos) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Artifacts
+---------
+ train_step.hlo.txt   (w1,w2,w3, x, y_onehot, lr) -> (w1',w2',w3', loss, rates[2])
+ forward.hlo.txt      (w1,w2,w3, x)               -> (logits, rates[2])
+ spike_conv.hlo.txt   (spikes[N,K], w[K,M])       -> (out[N,M])   [microbench]
+ manifest.json        shapes + hyperparameters for the Rust side
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import lif as lif_mod
+
+DEFAULT_BATCH = 16
+DEFAULT_TIMESTEPS = 4
+DEFAULT_CLASSES = 10
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(batch, timesteps, classes):
+    shapes = [s for _, s in model.param_shapes(classes)]
+    args = (
+        tuple(jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes)
+        + (
+            jax.ShapeDtypeStruct((batch,) + model.INPUT, jnp.float32),
+            jax.ShapeDtypeStruct((batch, classes), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+    )
+
+    def step(w1, w2, w3, x, y, lr):
+        return model.train_step([w1, w2, w3], x, y, lr, timesteps)
+
+    return jax.jit(step).lower(*args)
+
+
+def lower_forward(batch, timesteps, classes):
+    shapes = [s for _, s in model.param_shapes(classes)]
+    args = tuple(jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes) + (
+        jax.ShapeDtypeStruct((batch,) + model.INPUT, jnp.float32),
+    )
+
+    def fwd(w1, w2, w3, x):
+        return model.eval_step([w1, w2, w3], x, timesteps)
+
+    return jax.jit(fwd).lower(*args)
+
+
+def lower_spike_conv(n, k, m):
+    from .kernels.spike_conv import spike_matmul
+
+    args = (
+        jax.ShapeDtypeStruct((n, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, m), jnp.float32),
+    )
+    return jax.jit(lambda s, w: (spike_matmul(s, w),)).lower(*args)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--timesteps", type=int, default=DEFAULT_TIMESTEPS)
+    ap.add_argument("--classes", type=int, default=DEFAULT_CLASSES)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def emit(name, lowered):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    emit("train_step.hlo.txt", lower_train_step(args.batch, args.timesteps, args.classes))
+    emit("forward.hlo.txt", lower_forward(args.batch, args.timesteps, args.classes))
+    # Microbench kernel at the paper's Fig. 4 inner-product geometry
+    # (patches of the 32ch 3x3 layer): K = 32*9 = 288, M = 32.
+    emit("spike_conv.hlo.txt", lower_spike_conv(1024, 288, 32))
+
+    manifest = {
+        "batch": args.batch,
+        "timesteps": args.timesteps,
+        "classes": args.classes,
+        "input": list(model.INPUT),
+        "lif": {"alpha": float(lif_mod.ALPHA), "th_f": float(lif_mod.TH_F)},
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in model.param_shapes(args.classes)
+        ],
+        "spiking_layers": 2,
+        "artifacts": {
+            "train_step": "train_step.hlo.txt",
+            "forward": "forward.hlo.txt",
+            "spike_conv": "spike_conv.hlo.txt",
+        },
+        "spike_conv_bench": {"n": 1024, "k": 288, "m": 32},
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: the LIF soma update (paper eq. 1/3) with the
+boxcar-surrogate backward of eq. 6/7 wired as a custom VJP.
+
+Forward (the paper's "soma unit", SSIII-D: 3 comparators, 3 muxes, 1 adder,
+1 multiplier):
+
+    u_t = alpha * u_{t-1} * (1 - s_{t-1}) + conv_t          (eq. 1)
+    s_t = [u_t >= th_f]                                     (eq. 3)
+
+Backward (the "grad unit": 2 multipliers, 2 adders, 2 muxes), given
+upstream gradients (du_next = dL/du_t via the t+1 path, gs = dL/ds_t):
+
+    f'(u) = [th_l <= u <= th_r]                             (boxcar)
+    du = alpha * du_next * (1 - s_t)  +  beta * gs * f'(u)  (eq. 6)
+
+and the reset-path term dL/ds_{t-1} -= alpha * du * u_{t-1} emerges from
+differentiating eq. 1's (1 - s_{t-1}) factor — jax's autodiff of the scan
+produces it from this op's vjp (eq. 7's temporal term).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# LIF constants (paper SSII-B; values typical for BPTT-trained LIF).
+ALPHA = 0.5     # leak factor
+TH_F = 1.0      # firing threshold
+TH_L, TH_R = 0.0, 2.0   # surrogate boxcar window
+BETA = 1.0      # surrogate scale
+
+
+def _lif_fwd_kernel(u_ref, s_ref, c_ref, u_out_ref, s_out_ref):
+    """Elementwise soma update for one tile."""
+    u_prev = u_ref[...]
+    s_prev = s_ref[...]
+    conv = c_ref[...]
+    u = ALPHA * u_prev * (1.0 - s_prev) + conv
+    u_out_ref[...] = u
+    s_out_ref[...] = (u >= TH_F).astype(jnp.float32)
+
+
+def _lif_bwd_kernel(u_ref, uprev_ref, sprev_ref, du_next_ref, gs_ref,
+                    du_ref, dc_ref, duprev_ref, dsprev_ref):
+    """Elementwise grad-unit update for one tile (eq. 6 + eq. 1 vjp)."""
+    u = u_ref[...]
+    u_prev = uprev_ref[...]
+    s_prev = sprev_ref[...]
+    du_next = du_next_ref[...]
+    gs = gs_ref[...]
+    fprime = jnp.where((u >= TH_L) & (u <= TH_R), 1.0, 0.0)
+    du = du_next + BETA * gs * fprime          # dL/du_t (eq. 6's structure)
+    dc_ref[...] = du                            # du_t/dconv_t = 1
+    du_ref[...] = du
+    duprev_ref[...] = ALPHA * du * (1.0 - s_prev)   # temporal path
+    dsprev_ref[...] = -ALPHA * du * u_prev          # reset path (eq. 7)
+
+
+def _elementwise_call(kernel, inputs, n_out, *, interpret=True):
+    """Run an elementwise Pallas kernel over flattened, row-tiled arrays."""
+    shape = inputs[0].shape
+    flat = [x.reshape(-1) for x in inputs]
+    n = flat[0].shape[0]
+    bn = min(4096, n)
+    pad = -n % bn
+    if pad:
+        flat = [jnp.pad(x, (0, pad)) for x in flat]
+    total = n + pad
+    grid = (total // bn,)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,)) for _ in flat],
+        out_specs=[pl.BlockSpec((bn,), lambda i: (i,)) for _ in range(n_out)],
+        out_shape=[jax.ShapeDtypeStruct((total,), jnp.float32) for _ in range(n_out)],
+        interpret=interpret,
+    )(*flat)
+    return [o[:n].reshape(shape) for o in outs]
+
+
+@jax.custom_vjp
+def lif_step(u_prev, s_prev, conv):
+    """One LIF timestep: returns (u_t, s_t)."""
+    u, s = _elementwise_call(_lif_fwd_kernel, [u_prev, s_prev, conv], 2)
+    return u, s
+
+
+def _lif_step_fwd(u_prev, s_prev, conv):
+    u, s = lif_step(u_prev, s_prev, conv)
+    return (u, s), (u, u_prev, s_prev)
+
+
+def _lif_step_bwd(res, grads):
+    u, u_prev, s_prev = res
+    du_next, gs = grads
+    _du, dc, du_prev, ds_prev = _elementwise_call(
+        _lif_bwd_kernel, [u, u_prev, s_prev, du_next, gs], 4
+    )
+    return du_prev, ds_prev, dc
+
+
+lif_step.defvjp(_lif_step_fwd, _lif_step_bwd)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def lif_rollout(conv_seq):
+    """Scan the LIF over a [T, ...] sequence of conv drives.
+
+    Returns (spikes [T, ...], firing_rate scalar). The scan's autodiff
+    composes this op's vjp into exactly the paper's BPTT recursion
+    (eqs. 6-8).
+    """
+    u0 = jnp.zeros_like(conv_seq[0])
+    s0 = jnp.zeros_like(conv_seq[0])
+
+    def step(carry, conv):
+        u_prev, s_prev = carry
+        u, s = lif_step(u_prev, s_prev, conv)
+        return (u, s), s
+
+    _, spikes = jax.lax.scan(step, (u0, s0), conv_seq)
+    return spikes, jnp.mean(spikes)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference twin here, written with
+nothing but ``jax.numpy``/``lax`` primitives. pytest sweeps shapes and
+dtypes (hypothesis) asserting allclose between kernel and oracle, and an
+explicit hand-rolled BPTT (the paper's eqs. 6-7 recursion) checks that
+the custom-VJP composition through ``lax.scan`` equals the paper's math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import lif as lif_mod
+
+
+def spike_matmul_ref(spikes, weights):
+    """[N,K] 0/1 x [K,M] -> [N,M] with explicit gating."""
+    gated = jnp.where(spikes > 0.5, 1.0, 0.0)
+    return gated @ weights
+
+
+def fp_matmul_ref(x, weights):
+    return x @ weights
+
+
+def conv2d_ref(x, w, padding):
+    """Plain NCHW/OIHW convolution, stride 1."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def spike_conv2d_ref(spikes, w, padding):
+    """Forward spike convolution oracle (paper eq. 2)."""
+    return conv2d_ref(jnp.where(spikes > 0.5, 1.0, 0.0), w, padding)
+
+
+def lif_step_ref(u_prev, s_prev, conv):
+    """Paper eq. 1 + eq. 3."""
+    u = lif_mod.ALPHA * u_prev * (1.0 - s_prev) + conv
+    s = (u >= lif_mod.TH_F).astype(jnp.float32)
+    return u, s
+
+
+def lif_rollout_ref(conv_seq):
+    """Python-loop LIF rollout (matches kernels.lif.lif_rollout)."""
+    u = jnp.zeros_like(conv_seq[0])
+    s = jnp.zeros_like(conv_seq[0])
+    spikes = []
+    for t in range(conv_seq.shape[0]):
+        u, s = lif_step_ref(u, s, conv_seq[t])
+        spikes.append(s)
+    spikes = jnp.stack(spikes)
+    return spikes, jnp.mean(spikes)
+
+
+def manual_bptt_lif(conv_seq, g_spike_seq):
+    """The paper's explicit backward recursion through a LIF layer.
+
+    Given upstream spike gradients ``g_spike_seq[t]`` (= the ConvBP term of
+    eq. 7), compute dL/dconv_t with eqs. 6-7 verbatim:
+
+        (7)  ds_t = -alpha * du_{t+1} * u_t + ConvBP_t
+        (6)  du_t = alpha * du_{t+1} * (1 - s_t) + beta * ds_t * f'(u_t)
+
+    and dL/dconv_t = du_t (eq. 1: du_t/dconv_t = 1). This must equal
+    jax.grad through ``lif_rollout``'s custom VJPs exactly.
+    """
+    a, beta = lif_mod.ALPHA, lif_mod.BETA
+    T = conv_seq.shape[0]
+    # Forward, storing states.
+    u = jnp.zeros_like(conv_seq[0])
+    s = jnp.zeros_like(conv_seq[0])
+    us, ss = [], []
+    for t in range(T):
+        u, s = lif_step_ref(u, s, conv_seq[t])
+        us.append(u)
+        ss.append(s)
+    # Backward recursion.
+    du_next = jnp.zeros_like(conv_seq[0])  # dL/du_{t+1}
+    dconv = [None] * T
+    for t in reversed(range(T)):
+        u_t, s_t = us[t], ss[t]
+        ds_t = g_spike_seq[t] - a * du_next * u_t              # eq. (7)
+        fprime = ((u_t >= lif_mod.TH_L) & (u_t <= lif_mod.TH_R)).astype(jnp.float32)
+        du_t = a * du_next * (1.0 - s_t) + beta * ds_t * fprime  # eq. (6)
+        dconv[t] = du_t
+        du_next = du_t
+    return jnp.stack(dconv)

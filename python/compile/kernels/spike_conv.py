@@ -1,0 +1,153 @@
+"""L1 Pallas kernels: the spike (Mux-Add) convolution hot-spot.
+
+The paper's FP core is an E x F array of Mux-Add units: a 1-bit spike
+gates an FP16 weight into an accumulator (eq. 2/4/5). On a TPU-shaped
+target the insight maps differently (DESIGN.md par.7): the MXU cannot skip
+cycles on zeros, so spike sparsity pays off as *bandwidth* (1-bit spikes
+cut HBM<->VMEM input traffic 16x) while the convolution itself becomes a
+masked matmul over im2col patches tiled into VMEM via BlockSpec.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+the Rust runtime executes (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile for the patch dimension. 128 matches both the MXU systolic edge
+# and a comfortable VMEM footprint (128*K*4B with K<=1k is <512kB).
+BLOCK_ROWS = 128
+
+
+def _spike_matmul_kernel(s_ref, w_ref, o_ref):
+    """One row-tile of the spike convolution: o = mux(s) @ w.
+
+    ``s_ref`` holds 0/1 spike values. The explicit ``where`` keeps the
+    Mux-Add semantics of the paper's FP core (a spike *gates* the weight
+    row; there is no multiplier on the spike path) and hardens the kernel
+    against non-binary inputs.
+    """
+    s = s_ref[...]
+    gated = jnp.where(s > 0.5, 1.0, 0.0)
+    o_ref[...] = jnp.dot(gated, w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _fp_matmul_kernel(x_ref, w_ref, o_ref):
+    """One row-tile of the BP convolution: a plain FP MAC matmul
+    (the paper's Mul-Add core, eq. 8/9)."""
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _tiled_matmul(kernel, x, w, *, block_rows=BLOCK_ROWS, interpret=True):
+    """Launch ``kernel`` over row-tiles of ``x @ w``.
+
+    x: [N, K], w: [K, M] -> [N, M]. N is padded up to a multiple of the
+    row tile; K and M ride along whole (they are small for SNN layers:
+    K = C*R*S, M = out channels).
+    """
+    n, k = x.shape
+    k2, m = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bn = min(block_rows, n)
+    n_pad = -n % bn
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // bn,)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, m), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+    return out[:n]
+
+
+def spike_matmul(spikes, weights, *, interpret=True):
+    """Forward spike convolution inner product: [N,K] 0/1 x [K,M] -> [N,M]."""
+    return _tiled_matmul(_spike_matmul_kernel, spikes, weights, interpret=interpret)
+
+
+def fp_matmul(x, weights, *, interpret=True):
+    """FP16-style MAC matmul (BP/WG convolutions): [N,K] x [K,M] -> [N,M]."""
+    return _tiled_matmul(_fp_matmul_kernel, x, weights, interpret=interpret)
+
+
+def im2col(x, kernel, padding):
+    """Extract convolution patches: [B,C,H,W] -> [B*P*Q, C*R*S].
+
+    Column layout matches OIHW weights reshaped to [C*R*S, M] via
+    ``w.transpose(1,2,3,0).reshape(C*R*S, M)``.
+    """
+    b, c, h, w = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kernel, kernel),
+        window_strides=(1, 1),
+        padding=((padding, padding), (padding, padding)),
+    )  # [B, C*R*S, P, Q]
+    crs = patches.shape[1]
+    p, q = patches.shape[2], patches.shape[3]
+    return patches.transpose(0, 2, 3, 1).reshape(b * p * q, crs), (p, q)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def spike_conv2d(spikes, weights, _unused, kernel, padding):
+    """Spike convolution with hand-wired BPTT-convolution backward.
+
+    Forward  (paper eq. 2, FP core):  Mux-Add patches x weights.
+    Backward (paper eq. 8, BP core):  FP MAC matmul against w^T.
+    Weight grad (paper eq. 10, WG):   spike patches^T x grad (Mux-Add).
+
+    Differentiation does NOT flow into ``spikes`` through this op's
+    d/d(spikes) path alone — the surrogate path lives in the LIF kernel.
+    Here d/d(spikes) is the exact convolution transpose (eq. 8).
+    ``_unused`` keeps the signature stable for vjp bookkeeping.
+    """
+    del _unused
+    b, c, h, w = spikes.shape
+    m = weights.shape[0]
+    cols, (p, q) = im2col(spikes, kernel, padding)
+    wmat = weights.transpose(1, 2, 3, 0).reshape(-1, m)
+    out = spike_matmul(cols, wmat)
+    return out.reshape(b, p, q, m).transpose(0, 3, 1, 2)
+
+
+def _spike_conv2d_fwd(spikes, weights, _unused, kernel, padding):
+    out = spike_conv2d(spikes, weights, _unused, kernel, padding)
+    return out, (spikes, weights)
+
+
+def _spike_conv2d_bwd(kernel, padding, res, g):
+    spikes, weights = res
+    b, c, h, w = spikes.shape
+    m = weights.shape[0]
+    # --- WG (eq. 10): dw[m, c, r, s] = sum_{b,p,q} g[b,m,p,q] * patch ---
+    cols, (p, q) = im2col(spikes, kernel, padding)  # [B*P*Q, C*R*S]
+    gmat = g.transpose(0, 2, 3, 1).reshape(b * p * q, m)  # [B*P*Q, M]
+    # Spike patches gate the gradient accumulation: Mux-Add semantics.
+    dw_mat = spike_matmul(cols.T, gmat)  # [C*R*S, M]
+    dw = dw_mat.reshape(c, kernel, kernel, m).transpose(3, 0, 1, 2)
+    # --- BP (eq. 8): ds = g (*) w', the transposed convolution ----------
+    # conv-transpose == conv of g with spatially flipped, M<->C swapped w.
+    w_flip = weights[:, :, ::-1, ::-1].transpose(1, 0, 2, 3)  # [C, M, R, S]
+    gcols, _ = im2col(g, kernel, kernel - 1 - padding)
+    wmat_t = w_flip.transpose(1, 2, 3, 0).reshape(-1, c)
+    ds = fp_matmul(gcols, wmat_t).reshape(b, h, w, c).transpose(0, 3, 1, 2)
+    return ds, dw, None
+
+
+spike_conv2d.defvjp(_spike_conv2d_fwd, _spike_conv2d_bwd)
+
+
+def spike_conv2d_apply(spikes, weights, kernel, padding):
+    """Public entry: spike conv [B,C,H,W] x [M,C,R,S] -> [B,M,P,Q]."""
+    return spike_conv2d(spikes, weights, 0.0, kernel, padding)

@@ -1,0 +1,122 @@
+"""L2: the deep-SNN training computation (paper SSII), in JAX.
+
+The network mirrors ``rust/src/model``'s ``tiny_snn`` preset: a direct-
+encoded input convolution, two spiking LIF conv blocks with 2x2 average
+pooling, and a membrane-accumulating linear readout. Training is full
+BPTT (eqs. 1-3 forward, 6-8 + 10 backward) with softmax cross-entropy on
+the time-averaged readout and plain SGD.
+
+Every spike convolution goes through the L1 Pallas kernels
+(``kernels.spike_conv``); every LIF update goes through the Pallas soma/
+grad kernels (``kernels.lif``). The train step also returns per-layer
+firing rates — the measured ``Spar^l`` the Rust DSE consumes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lif as lif_mod
+from .kernels import ref as ref_mod
+from .kernels.spike_conv import spike_conv2d_apply
+
+# ---------------------------------------------------------------------------
+# Architecture (kept in lockstep with rust/src/model's tiny_snn preset).
+# ---------------------------------------------------------------------------
+
+INPUT = (3, 16, 16)
+CONV1_CH = 16
+CONV2_CH = 32
+KERNEL = 3
+PADDING = 1
+
+
+def param_shapes(classes):
+    """Ordered parameter list: name -> shape (OIHW convs, [in,out] linear)."""
+    flat = CONV2_CH * (INPUT[1] // 4) * (INPUT[2] // 4)
+    return [
+        ("w1", (CONV1_CH, INPUT[0], KERNEL, KERNEL)),
+        ("w2", (CONV2_CH, CONV1_CH, KERNEL, KERNEL)),
+        ("w3", (flat, classes)),
+    ]
+
+
+def init_params(key, classes):
+    """He-style init, matching what the Rust trainer generates."""
+    params = []
+    for _, shape in param_shapes(classes):
+        key, sub = jax.random.split(key)
+        fan_in = 1
+        for d in shape[1:] if len(shape) == 4 else shape[:1]:
+            fan_in *= d
+        params.append(jax.random.normal(sub, shape) * (2.0 / fan_in) ** 0.5)
+    return params
+
+
+def avg_pool2(x):
+    """2x2 average pooling on NCHW."""
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass over T timesteps.
+# ---------------------------------------------------------------------------
+
+
+def forward(params, x, timesteps):
+    """Run the SNN for ``timesteps`` steps.
+
+    Returns (logits [B, classes], firing rates per spiking layer [2]).
+    The input image is direct-encoded: the analog frame drives conv1 at
+    every timestep (the standard encoding for BPTT-trained deep SNNs),
+    so conv1 is a dense convolution; conv2 and the readout see 1-bit
+    spikes and use the spike (Mux-Add) kernels.
+    """
+    w1, w2, w3 = params
+    b = x.shape[0]
+
+    # Layer 1 drive is timestep-invariant: compute once, reuse each step.
+    drive1 = ref_mod.conv2d_ref(x, w1, PADDING)  # [B, C1, H, W]
+    drive1_seq = jnp.broadcast_to(drive1, (timesteps,) + drive1.shape)
+    spikes1, fr1 = lif_mod.lif_rollout(drive1_seq)          # [T, B, C1, H, W]
+    pooled1 = jax.vmap(avg_pool2)(spikes1)                  # [T, B, C1, H/2, W/2]
+
+    # Layer 2: spike convolution (Pallas Mux-Add kernel) per timestep.
+    drive2_seq = jax.vmap(
+        lambda s: spike_conv2d_apply(s, w2, KERNEL, PADDING)
+    )(pooled1)
+    spikes2, fr2 = lif_mod.lif_rollout(drive2_seq)
+    pooled2 = jax.vmap(avg_pool2)(spikes2)                  # [T, B, C2, H/4, W/4]
+
+    # Readout: membrane accumulation (no spiking) of a linear layer on the
+    # flattened spike maps, averaged over time.
+    flat = pooled2.reshape(timesteps, b, -1)
+    logits = jnp.einsum("tbf,fc->bc", flat, w3) / timesteps
+    return logits, jnp.stack([fr1, fr2])
+
+
+def loss_fn(params, x, y_onehot, timesteps):
+    logits, rates = forward(params, x, timesteps)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    return loss, (logits, rates)
+
+
+def train_step(params, x, y_onehot, lr, timesteps):
+    """One SGD step. Returns (new_params..., loss, firing_rates[2])."""
+    (loss, (_logits, rates)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, x, y_onehot, timesteps
+    )
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new_params) + (loss, rates)
+
+
+def eval_step(params, x, timesteps):
+    """Inference: (logits, firing rates)."""
+    logits, rates = forward(params, x, timesteps)
+    return logits, rates
+
+
+def accuracy(params, x, y, timesteps):
+    logits, _ = forward(params, x, timesteps)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))

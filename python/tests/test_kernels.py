@@ -1,0 +1,206 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes; every comparison is exact-tolerance allclose
+(interpret-mode Pallas and the oracle run the same f32 arithmetic).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lif as lif_mod
+from compile.kernels import ref
+from compile.kernels.spike_conv import (
+    fp_matmul,
+    im2col,
+    spike_conv2d_apply,
+    spike_matmul,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_spikes(key, shape, p=0.3):
+    return (jax.random.uniform(key, shape) < p).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# spike_matmul / fp_matmul vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    k=st.integers(1, 64),
+    m=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spike_matmul_matches_ref(n, k, m, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    s = rand_spikes(k1, (n, k))
+    w = jax.random.normal(k2, (k, m))
+    got = spike_matmul(s, w)
+    want = ref.spike_matmul_ref(s, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    k=st.integers(1, 48),
+    m=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fp_matmul_matches_ref(n, k, m, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (n, k))
+    w = jax.random.normal(k2, (k, m))
+    np.testing.assert_allclose(
+        np.asarray(fp_matmul(x, w)), np.asarray(ref.fp_matmul_ref(x, w)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_spike_matmul_gates_nonbinary_inputs():
+    # Values <= 0.5 must be treated as no-spike: Mux semantics.
+    s = jnp.array([[0.4, 0.6], [1.0, 0.0]])
+    w = jnp.array([[1.0], [10.0]])
+    got = spike_matmul(s, w)
+    np.testing.assert_allclose(np.asarray(got), [[10.0], [1.0]])
+
+
+# ---------------------------------------------------------------------------
+# spike_conv2d: forward + custom-VJP backward vs autodiff of the oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    c=st.integers(1, 8),
+    m=st.integers(1, 8),
+    hw=st.sampled_from([4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spike_conv2d_forward_matches_ref(b, c, m, hw, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    s = rand_spikes(k1, (b, c, hw, hw))
+    w = jax.random.normal(k2, (m, c, 3, 3))
+    got = spike_conv2d_apply(s, w, 3, 1)
+    want = ref.spike_conv2d_ref(s, w, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_spike_conv2d_grads_match_autodiff_of_ref(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = rand_spikes(k1, (2, 4, 6, 6))
+    w = jax.random.normal(k2, (5, 4, 3, 3))
+    g = jax.random.normal(k3, (2, 5, 6, 6))
+
+    # Kernel path (custom VJP implementing eqs. 8 & 10).
+    def f_kernel(s_, w_):
+        return jnp.sum(spike_conv2d_apply(s_, w_, 3, 1) * g)
+
+    ds_k, dw_k = jax.grad(f_kernel, argnums=(0, 1))(s, w)
+
+    # Oracle path: autodiff of the dense conv on the gated input.
+    def f_ref(s_, w_):
+        return jnp.sum(ref.conv2d_ref(s_, w_, 1) * g)
+
+    ds_r, dw_r = jax.grad(f_ref, argnums=(0, 1))(s, w)
+    np.testing.assert_allclose(np.asarray(dw_k), np.asarray(dw_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ds_k), np.asarray(ds_r), rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_layout_matches_weights():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 3, 5, 5))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 3, 3))
+    cols, (p, q) = im2col(x, 3, 1)
+    wmat = w.transpose(1, 2, 3, 0).reshape(-1, 4)
+    out = (cols @ wmat).reshape(2, p, q, 4).transpose(0, 3, 1, 2)
+    want = ref.conv2d_ref(x, w, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LIF kernel vs oracle; BPTT vs the paper's explicit recursion
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.sampled_from([(4,), (2, 3), (2, 3, 4), (1, 2, 3, 4)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lif_step_matches_ref(shape, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    u_prev = jax.random.normal(k1, shape)
+    s_prev = rand_spikes(k2, shape, 0.5)
+    conv = jax.random.normal(k3, shape)
+    u, s = lif_mod.lif_step(u_prev, s_prev, conv)
+    u_r, s_r = ref.lif_step_ref(u_prev, s_prev, conv)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(u_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r))
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_lif_rollout_matches_ref(t, seed):
+    key = jax.random.PRNGKey(seed)
+    conv_seq = jax.random.normal(key, (t, 2, 3, 4, 4))
+    spikes, fr = lif_mod.lif_rollout(conv_seq)
+    spikes_r, fr_r = ref.lif_rollout_ref(conv_seq)
+    np.testing.assert_allclose(np.asarray(spikes), np.asarray(spikes_r))
+    np.testing.assert_allclose(float(fr), float(fr_r), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_lif_bptt_matches_paper_recursion(t, seed):
+    """jax.grad through the scan of Pallas custom-VJP LIF steps must equal
+    the hand-rolled eqs. 6-7 recursion (manual_bptt_lif)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    conv_seq = jax.random.normal(k1, (t, 2, 3, 3))
+    g_spike = jax.random.normal(k2, (t, 2, 3, 3))
+
+    def loss(cs):
+        spikes, _ = lif_mod.lif_rollout(cs)
+        return jnp.sum(spikes * g_spike)
+
+    dconv_auto = jax.grad(loss)(conv_seq)
+    dconv_manual = ref.manual_bptt_lif(conv_seq, g_spike)
+    np.testing.assert_allclose(
+        np.asarray(dconv_auto), np.asarray(dconv_manual), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_surrogate_window_gates_gradient():
+    # u far outside [TH_L, TH_R] -> zero gradient through the spike.
+    conv_seq = jnp.full((1, 1, 1), 100.0)  # u = 100 >> TH_R
+
+    def loss(cs):
+        spikes, _ = lif_mod.lif_rollout(cs)
+        return jnp.sum(spikes)
+
+    g = jax.grad(loss)(conv_seq)
+    np.testing.assert_allclose(np.asarray(g), 0.0)
+
+
+def test_firing_rate_is_mean_spikes():
+    conv_seq = jnp.stack([jnp.full((2, 2), 10.0), jnp.full((2, 2), -10.0)])
+    spikes, fr = lif_mod.lif_rollout(conv_seq)
+    assert float(fr) == pytest.approx(0.5)
+    np.testing.assert_allclose(np.asarray(spikes[0]), 1.0)
+    np.testing.assert_allclose(np.asarray(spikes[1]), 0.0)

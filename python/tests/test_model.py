@@ -1,0 +1,92 @@
+"""L2 model tests: shapes, gradient flow, and training convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CLASSES = 10
+BATCH = 8
+T = 3
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), CLASSES)
+
+
+def synthetic_batch(key, batch=BATCH):
+    """Class-conditional Gaussian blobs (same recipe as the Rust trainer)."""
+    k1, k2 = jax.random.split(key)
+    y = jax.random.randint(k1, (batch,), 0, CLASSES)
+    means = (y[:, None, None, None].astype(jnp.float32) / CLASSES - 0.5) * 2.0
+    x = means + 0.5 * jax.random.normal(k2, (batch,) + model.INPUT)
+    y_onehot = jax.nn.one_hot(y, CLASSES)
+    return x, y, y_onehot
+
+
+def test_forward_shapes(params):
+    x, _, _ = synthetic_batch(jax.random.PRNGKey(1))
+    logits, rates = model.forward(params, x, T)
+    assert logits.shape == (BATCH, CLASSES)
+    assert rates.shape == (2,)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert 0.0 <= float(rates[0]) <= 1.0
+    assert 0.0 <= float(rates[1]) <= 1.0
+
+
+def test_param_shapes_cover_network():
+    shapes = model.param_shapes(CLASSES)
+    assert [n for n, _ in shapes] == ["w1", "w2", "w3"]
+    assert shapes[0][1] == (16, 3, 3, 3)
+    assert shapes[1][1] == (32, 16, 3, 3)
+    assert shapes[2][1] == (32 * 4 * 4, CLASSES)
+
+
+def test_gradients_flow_to_all_params(params):
+    x, _, y1 = synthetic_batch(jax.random.PRNGKey(2))
+    (_, _aux), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+        params, x, y1, T
+    )
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert float(jnp.abs(g).max()) > 0.0, "dead gradient"
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_train_step_reduces_loss(params):
+    """A few SGD steps on a fixed batch must reduce the loss."""
+    step = jax.jit(lambda ps, x, y, lr: model.train_step(list(ps), x, y, lr, T))
+    x, _, y1 = synthetic_batch(jax.random.PRNGKey(3))
+    ps = tuple(params)
+    losses = []
+    for _ in range(8):
+        out = step(ps, x, y1, jnp.float32(0.5))
+        ps, loss = out[:3], out[3]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert losses[0] == pytest.approx(np.log(CLASSES), rel=0.5)
+
+
+def test_firing_rates_respond_to_input_scale(params):
+    x, _, _ = synthetic_batch(jax.random.PRNGKey(4))
+    _, quiet = model.forward(params, 0.01 * x, T)
+    _, loud = model.forward(params, 10.0 * x, T)
+    assert float(loud[0]) > float(quiet[0])
+
+
+def test_accuracy_bounds(params):
+    x, y, _ = synthetic_batch(jax.random.PRNGKey(5))
+    acc = model.accuracy(params, x, y, T)
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_avg_pool2():
+    x = jnp.arange(16.0).reshape(1, 1, 4, 4)
+    p = model.avg_pool2(x)
+    assert p.shape == (1, 1, 2, 2)
+    np.testing.assert_allclose(np.asarray(p[0, 0]), [[2.5, 4.5], [10.5, 12.5]])

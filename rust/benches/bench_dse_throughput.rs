@@ -1,0 +1,57 @@
+//! Bench: the L3 hot path — mapping-evaluation throughput of the DSE
+//! engine (DESIGN.md §9 target: >= 100k evaluations/s/core).
+//!
+//! Measures (a) a single layer-energy evaluation, (b) a single-threaded
+//! pool sweep, (c) the multi-threaded sweep, and reports evaluations/s.
+//! EXPERIMENTS.md §Perf records before/after for the optimization pass.
+
+use eocas::arch::{ArchPool, Architecture};
+use eocas::config::EnergyConfig;
+use eocas::dataflow::templates::{generate as gen_mapping, Family};
+use eocas::dse::{explore, DseConfig};
+use eocas::energy::{conv_energy, layer_energy_for_family};
+use eocas::model::SnnModel;
+use eocas::util::bench::{black_box, time_it};
+use eocas::workload::generate;
+
+fn main() {
+    let cfg = EnergyConfig::default();
+    let arch = Architecture::paper_default();
+    let wls = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
+    let wl = &wls[0];
+
+    // (a) innermost unit: one conv-energy evaluation with a pre-built
+    // mapping (the quantity the 100k/s/core target is stated over).
+    let mapping = gen_mapping(Family::AdvWs, &wl.fp, &arch);
+    let s = time_it("conv_energy (prebuilt mapping)", 1000, 1.5, || {
+        black_box(conv_energy(&wl.fp, &mapping, &arch, &cfg));
+    });
+    println!("{}", s.report());
+    println!("  => {:.0} conv evaluations/s/core\n", 1e9 / s.mean_ns);
+
+    // (b) full layer evaluation incl. template generation + capacity fit.
+    let s = time_it("layer_energy_for_family (template+fit+3 convs)", 200, 1.5, || {
+        black_box(layer_energy_for_family(wl, Family::AdvWs, &arch, &cfg));
+    });
+    println!("{}", s.report());
+    println!("  => {:.0} layer evaluations/s/core\n", 1e9 / s.mean_ns);
+
+    // (c) pool sweeps, 1 thread vs all cores.
+    let pool = ArchPool::extended(256, &[0.5, 1.0, 2.0]);
+    let cifar = generate(&SnnModel::cifar100_snn(), &[], 0.75).unwrap();
+    for threads in [1usize, 0] {
+        let dse_cfg = DseConfig { random_samples: 4, threads, ..Default::default() };
+        let label = if threads == 1 { "1 thread" } else { "all cores" };
+        let mut evals = 0usize;
+        let s = time_it(&format!("DSE sweep cifar100 x 27 archs ({label})"), 3, 2.0, || {
+            evals = explore(&pool, &cifar, &cfg, &dse_cfg).evaluations;
+        });
+        println!("{}", s.report());
+        println!(
+            "  => {} candidates x {} layers, {:.0} candidate-evals/s\n",
+            evals,
+            cifar.len(),
+            evals as f64 / (s.mean_ns / 1e9)
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerates **Fig. 5** (candidate architectures across energy
+//! intervals) — the DSE scatter over the architecture pool with
+//! randomized mapping samples — and times the exploration.
+//!
+//! Paper reference: "Several possible architectures appear in different
+//! energy intervals", optimum = 16x16 at 124.57 uJ conv energy.
+
+use eocas::report::{fig5_energy_intervals, ReportCtx};
+use eocas::util::bench::{black_box, time_it};
+
+fn main() {
+    let ctx = ReportCtx::paper_default();
+    let (table, txt) = fig5_energy_intervals(&ctx, 6);
+    println!("{txt}");
+    print!("{}", table.render());
+
+    let stats = time_it("fig5: pool x families x 6 random samples", 5, 1.0, || {
+        black_box(fig5_energy_intervals(&ctx, 6));
+    });
+    println!("{}", stats.report());
+}

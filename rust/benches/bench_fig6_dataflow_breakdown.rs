@@ -1,0 +1,16 @@
+//! Bench: regenerates **Fig. 6** (dataflow loop-nest structures + the
+//! energy breakdown of convolutions at the 16x16 MAC scheme) and times
+//! the per-dataflow breakdown computation.
+
+use eocas::report::{fig6_dataflow_breakdown, ReportCtx};
+use eocas::util::bench::{black_box, time_it};
+
+fn main() {
+    let ctx = ReportCtx::paper_default();
+    print!("{}", fig6_dataflow_breakdown(&ctx));
+
+    let stats = time_it("fig6: loop nests + breakdown (5 dataflows)", 20, 1.0, || {
+        black_box(fig6_dataflow_breakdown(&ctx));
+    });
+    println!("{}", stats.report());
+}

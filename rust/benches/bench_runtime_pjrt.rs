@@ -1,0 +1,53 @@
+//! Bench: PJRT runtime latency — artifact compile time, spike-conv kernel
+//! execution, full train-step execution, and steps/s of the training
+//! loop. Skips (exit 0) when artifacts are missing.
+
+use eocas::runtime::{artifact, Runtime, Tensor};
+use eocas::trainer::{Trainer, TrainerConfig};
+use eocas::util::bench::{black_box, fmt_ns, time_it};
+use eocas::util::prng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    if artifact("train_step.hlo.txt").is_err() {
+        println!("bench_runtime_pjrt: artifacts missing — run `make artifacts` (skipping)");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+
+    // Compile latency (uncached; the runtime caches afterwards).
+    let t0 = std::time::Instant::now();
+    let conv = rt.load(&artifact("spike_conv.hlo.txt")?)?;
+    println!("compile spike_conv.hlo.txt: {}", fmt_ns(t0.elapsed().as_nanos() as f64));
+    let t0 = std::time::Instant::now();
+    let _train = rt.load(&artifact("train_step.hlo.txt")?)?;
+    println!("compile train_step.hlo.txt: {}", fmt_ns(t0.elapsed().as_nanos() as f64));
+
+    // Spike-conv kernel execution: [1024, 288] x [288, 32].
+    let mut rng = SplitMix64::new(5);
+    let spikes: Vec<f32> =
+        (0..1024 * 288).map(|_| if rng.bernoulli(0.25) { 1.0 } else { 0.0 }).collect();
+    let weights: Vec<f32> = (0..288 * 32).map(|_| rng.normal() as f32).collect();
+    let st = Tensor::from_f32(&spikes, &[1024, 288])?;
+    let wt = Tensor::from_f32(&weights, &[288, 32])?;
+    let s = time_it("spike_conv execute [1024,288]x[288,32]", 50, 2.0, || {
+        black_box(conv.run(&[st.clone(), wt.clone()]).unwrap());
+    });
+    println!("{}", s.report());
+    let macs = 1024.0 * 288.0 * 32.0;
+    println!(
+        "  => {:.2} GMAC/s through PJRT (interpret-lowered Pallas kernel)\n",
+        macs / s.mean_ns
+    );
+
+    // Full training step.
+    let mut trainer = Trainer::new(&rt, 1)?;
+    let log = trainer.train(&TrainerConfig { steps: 12, lr: 0.1, seed: 1, log_every: 0 })?;
+    println!(
+        "train loop: {} steps in {:.2} s => {:.1} steps/s (B=16, T=4 BPTT)",
+        log.steps,
+        log.wall_secs,
+        log.steps as f64 / log.wall_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerates **Table III** (conv read/write energy vs MAC array
+//! scheme at 256 MACs / 2.03 MB) and times the sweep.
+//!
+//! Paper reference rows (uJ): 16x16 = 124.57 < 4x64 = 135.81 <
+//! 8x32 = 141.24 < 2x128 = 156.58 — the reproduced *shape* is "16x16
+//! optimal"; absolute values differ by calibration (EXPERIMENTS.md).
+
+use eocas::report::{table3_array_schemes, ReportCtx};
+use eocas::util::bench::{black_box, time_it};
+
+fn main() {
+    let ctx = ReportCtx::paper_default();
+    print!("{}", table3_array_schemes(&ctx).render());
+    let stats = time_it("table3: 4-scheme sweep (Fig.4 layer)", 20, 1.0, || {
+        black_box(table3_array_schemes(&ctx));
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerates **Table V** (computation-only energy per dataflow)
+//! and verifies the paper's point that compute energy is nearly constant
+//! across dataflows (the differences in Table IV are memory access).
+//!
+//! Paper reference (uJ compute overall): 259.2 – 267.0 across dataflows.
+
+use eocas::dataflow::templates::Family;
+use eocas::energy::model_energy_for_family;
+use eocas::report::{table5_compute_energy, ReportCtx};
+use eocas::util::bench::{black_box, time_it};
+
+fn main() {
+    let ctx = ReportCtx::paper_default();
+    print!("{}", table5_compute_energy(&ctx).render());
+
+    let computes: Vec<f64> = Family::ALL
+        .iter()
+        .map(|&f| {
+            model_energy_for_family(&ctx.workloads, f, &ctx.arch, &ctx.cfg)
+                .iter()
+                .map(|l| l.compute_j())
+                .sum::<f64>()
+                * 1e6
+        })
+        .collect();
+    let (lo, hi) = eocas::util::stats::min_max(&computes).unwrap();
+    println!(
+        "compute-energy spread across dataflows: {:.2}% (paper: ~3%)\n",
+        (hi - lo) / hi * 100.0
+    );
+
+    let stats = time_it("table5: compute-energy evaluation", 50, 1.0, || {
+        black_box(table5_compute_energy(&ctx));
+    });
+    println!("{}", stats.report());
+}

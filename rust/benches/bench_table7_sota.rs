@@ -1,0 +1,36 @@
+//! Bench: regenerates **Table VI** (FPGA comparison) and **Table VII**
+//! (ASIC comparison) with "This Work" rows derived live from the perf
+//! model, and re-validates the paper's §IV-B headline claims.
+//!
+//! Paper reference: 0.452 W, 0.5 TOPS, 1.11 TOPS/W, 6.83 mm², 2.03 MB;
+//! 2.76x TrueNorth efficiency; 49.25% less memory than SATA; ~1/10 the
+//! power of TVLSI'23 [16].
+
+use eocas::compare::{headline_claims, our_asic_row};
+use eocas::dataflow::templates::Family;
+use eocas::energy::model_energy_for_family;
+use eocas::perfmodel::{chip_metrics, AreaModel};
+use eocas::report::{table6_fpga, table7_asic, ReportCtx};
+use eocas::util::bench::{black_box, time_it};
+
+fn main() {
+    let ctx = ReportCtx::paper_default();
+    print!("{}", table6_fpga(&ctx).render());
+    print!("{}", table7_asic(&ctx).render());
+
+    let layers = model_energy_for_family(&ctx.workloads, Family::AdvWs, &ctx.arch, &ctx.cfg);
+    let metrics = chip_metrics(&layers, &ctx.arch, &ctx.cfg, &AreaModel::default());
+    let claims = headline_claims(&our_asic_row(&metrics));
+    println!(
+        "headline claims: {:.2}x TrueNorth TOPS/W (paper 2.76x) | {:.1}% less memory than SATA (paper 49.25%) | {:.2}x TVLSI'23 power (paper ~0.1x)\n",
+        claims.eff_vs_truenorth,
+        claims.mem_saving_vs_sata * 100.0,
+        claims.power_ratio_vs_tvlsi16
+    );
+
+    let stats = time_it("table6+7: SOTA comparison derivation", 50, 1.0, || {
+        black_box(table6_fpga(&ctx));
+        black_box(table7_asic(&ctx));
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,315 @@
+//! Accelerator architecture descriptions (§III-A/§III-B).
+//!
+//! The paper's general SNN-training near-memory architecture: an `E × F`
+//! compute array (Mux-Add units in the FP core, Mul-Add units in the BP/WG
+//! core), a pool of on-chip SRAM macros (V₁…V₈ of Table II), and DRAM
+//! behind them. The *architecture pool* enumerates candidate array
+//! arrangements and memory provisionings; each candidate is evaluated
+//! against each dataflow by the reuse/energy machinery.
+
+use crate::config::EnergyConfig;
+use crate::util::divisors;
+
+/// The three storage levels of the paper's hierarchy (Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemLevel {
+    /// PE-local registers inside the compute array.
+    Reg,
+    /// On-chip SRAM macros (V₁…V₈).
+    Sram,
+    /// Off-chip DRAM.
+    Dram,
+}
+
+impl MemLevel {
+    pub const ALL: [MemLevel; 3] = [MemLevel::Reg, MemLevel::Sram, MemLevel::Dram];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemLevel::Reg => "Reg",
+            MemLevel::Sram => "SRAM",
+            MemLevel::Dram => "DRAM",
+        }
+    }
+}
+
+/// The SRAM macros of Table II. Each stores one training variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SramId {
+    /// V₁: input spikes `s^{l-1}` (1-bit).
+    V1Spike,
+    /// V₂: forward weights `w^{l-1}`.
+    V2Weight,
+    /// V₃: forward convolution output `ConvFP`.
+    V3ConvFp,
+    /// V₄: potential gradients `∇u^{l+1}`.
+    V4DeltaU,
+    /// V₅: transposed weights `w′^l`.
+    V5WeightT,
+    /// V₆: backward convolution output `ConvBP`.
+    V6ConvBp,
+    /// V₇: this layer's spikes `s^l` (1-bit, WG input).
+    V7SpikeOut,
+    /// V₈: weight gradients `∇w^l`.
+    V8DeltaW,
+}
+
+impl SramId {
+    pub const ALL: [SramId; 8] = [
+        SramId::V1Spike,
+        SramId::V2Weight,
+        SramId::V3ConvFp,
+        SramId::V4DeltaU,
+        SramId::V5WeightT,
+        SramId::V6ConvBp,
+        SramId::V7SpikeOut,
+        SramId::V8DeltaW,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SramId::V1Spike => "V1(s^{l-1})",
+            SramId::V2Weight => "V2(w^{l-1})",
+            SramId::V3ConvFp => "V3(ConvFP)",
+            SramId::V4DeltaU => "V4(du^{l+1})",
+            SramId::V5WeightT => "V5(w')",
+            SramId::V6ConvBp => "V6(ConvBP)",
+            SramId::V7SpikeOut => "V7(s^l)",
+            SramId::V8DeltaW => "V8(dw)",
+        }
+    }
+}
+
+/// One SRAM macro: capacity + the bitwidth of the variable it stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SramMacro {
+    pub id: SramId,
+    pub bytes: u64,
+    pub word_bits: u32,
+}
+
+/// The on-chip memory provisioning: all eight macros of Table II.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoryPool {
+    pub srams: Vec<SramMacro>,
+}
+
+impl MemoryPool {
+    /// The paper's 2.03 MB provisioning (Table III), split across the
+    /// eight macros roughly proportionally to the variables they hold on
+    /// the Fig. 4 workload (spike macros are small — 1-bit data).
+    pub fn paper_default() -> MemoryPool {
+        let k = 1024u64;
+        MemoryPool {
+            srams: vec![
+                SramMacro { id: SramId::V1Spike, bytes: 32 * k, word_bits: 1 },
+                SramMacro { id: SramId::V2Weight, bytes: 224 * k, word_bits: 16 },
+                SramMacro { id: SramId::V3ConvFp, bytes: 384 * k, word_bits: 16 },
+                SramMacro { id: SramId::V4DeltaU, bytes: 384 * k, word_bits: 16 },
+                SramMacro { id: SramId::V5WeightT, bytes: 256 * k, word_bits: 16 },
+                SramMacro { id: SramId::V6ConvBp, bytes: 384 * k, word_bits: 16 },
+                SramMacro { id: SramId::V7SpikeOut, bytes: 32 * k, word_bits: 1 },
+                SramMacro { id: SramId::V8DeltaW, bytes: 288 * k, word_bits: 16 },
+            ],
+        }
+    }
+
+    /// A uniformly scaled copy (capacity sweep for Fig. 5's pool).
+    pub fn scaled(&self, factor: f64) -> MemoryPool {
+        MemoryPool {
+            srams: self
+                .srams
+                .iter()
+                .map(|m| SramMacro {
+                    bytes: ((m.bytes as f64 * factor) as u64).max(1024),
+                    ..*m
+                })
+                .collect(),
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.srams.iter().map(|m| m.bytes).sum()
+    }
+
+    pub fn get(&self, id: SramId) -> &SramMacro {
+        self.srams.iter().find(|m| m.id == id).expect("memory pool is missing a macro")
+    }
+
+    /// Read energy (pJ/bit) of a macro under `cfg`'s size scaling.
+    pub fn read_pj(&self, id: SramId, cfg: &EnergyConfig) -> f64 {
+        cfg.sram_read_pj_at(self.get(id).bytes)
+    }
+
+    pub fn write_pj(&self, id: SramId, cfg: &EnergyConfig) -> f64 {
+        cfg.sram_write_pj_at(self.get(id).bytes)
+    }
+}
+
+/// An `E × F` compute-array arrangement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArrayScheme {
+    /// Rows (`E`): the reduction axis in the paper's design (column
+    /// accumulators sum over rows).
+    pub rows: u32,
+    /// Columns (`F`).
+    pub cols: u32,
+}
+
+impl ArrayScheme {
+    pub fn new(rows: u32, cols: u32) -> Self {
+        Self { rows, cols }
+    }
+
+    pub fn macs(&self) -> u32 {
+        self.rows * self.cols
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.rows, self.cols)
+    }
+
+    /// All arrangements with exactly `macs` units (the paper fixes 256 and
+    /// considers 2×128 / 4×64 / 8×32 / 16×16; we enumerate every divisor
+    /// pair with rows ≤ cols collapsed out — rows and cols are
+    /// architecturally distinct here, so both orders are kept).
+    pub fn enumerate(macs: u32) -> Vec<ArrayScheme> {
+        divisors(macs as u64)
+            .into_iter()
+            .map(|r| ArrayScheme::new(r as u32, (macs as u64 / r) as u32))
+            .collect()
+    }
+
+    /// The paper's four candidate schemes for 256 MACs (Table III order).
+    pub fn paper_candidates() -> Vec<ArrayScheme> {
+        vec![
+            ArrayScheme::new(16, 16),
+            ArrayScheme::new(2, 128),
+            ArrayScheme::new(8, 32),
+            ArrayScheme::new(4, 64),
+        ]
+    }
+}
+
+/// A complete candidate architecture: array + memory pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Architecture {
+    pub array: ArrayScheme,
+    pub mem: MemoryPool,
+    /// Per-PE register file: bits available for stationary operands +
+    /// partial sums (the paper's Mux-Add unit holds a 1-bit spike reg and
+    /// two 16-bit regs; we allow DSE over richer PEs).
+    pub pe_reg_bits: u32,
+}
+
+impl Architecture {
+    pub fn paper_default() -> Architecture {
+        Architecture {
+            array: ArrayScheme::new(16, 16),
+            mem: MemoryPool::paper_default(),
+            pe_reg_bits: 64,
+        }
+    }
+
+    pub fn with_array(array: ArrayScheme) -> Architecture {
+        Architecture { array, ..Architecture::paper_default() }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} array, {} on-chip",
+            self.array.label(),
+            crate::util::fmt_bytes(self.mem.total_bytes())
+        )
+    }
+}
+
+/// The architecture pool fed to the DSE (§III-B "The architecture pool is
+/// generated based on the memory pool and the general accelerator
+/// architecture").
+#[derive(Debug, Clone)]
+pub struct ArchPool {
+    pub candidates: Vec<Architecture>,
+}
+
+impl ArchPool {
+    /// The paper's pool: 256 MACs in four arrangements over the 2.03 MB
+    /// memory pool.
+    pub fn paper_pool() -> ArchPool {
+        ArchPool {
+            candidates: ArrayScheme::paper_candidates()
+                .into_iter()
+                .map(Architecture::with_array)
+                .collect(),
+        }
+    }
+
+    /// An extended pool: every divisor arrangement of `macs` MACs crossed
+    /// with memory scalings. Used for Fig. 5's "several possible
+    /// architectures appear in different energy intervals".
+    pub fn extended(macs: u32, mem_scales: &[f64]) -> ArchPool {
+        let base = MemoryPool::paper_default();
+        let mut candidates = Vec::new();
+        for array in ArrayScheme::enumerate(macs) {
+            // Degenerate 1-wide arrays are allowed in the pool; the energy
+            // model will price their poor reuse.
+            for &s in mem_scales {
+                candidates.push(Architecture {
+                    array,
+                    mem: base.scaled(s),
+                    pe_reg_bits: 64,
+                });
+            }
+        }
+        ArchPool { candidates }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_pool_totals_2mb() {
+        let mem = MemoryPool::paper_default();
+        let total = mem.total_bytes();
+        // paper: 2.03 MB
+        assert!(
+            (2_000_000..2_130_000).contains(&total),
+            "total {total} bytes not ~2.03 MB"
+        );
+        assert_eq!(mem.srams.len(), 8);
+    }
+
+    #[test]
+    fn scheme_enumeration_covers_paper_candidates() {
+        let all = ArrayScheme::enumerate(256);
+        assert_eq!(all.len(), 9); // 1,2,4,...,256
+        for cand in ArrayScheme::paper_candidates() {
+            assert!(all.contains(&cand), "{cand:?}");
+            assert_eq!(cand.macs(), 256);
+        }
+    }
+
+    #[test]
+    fn sram_energy_reflects_macro_size() {
+        let cfg = EnergyConfig::default();
+        let mem = MemoryPool::paper_default();
+        // The 32 kB spike macro must be cheaper per bit than the 384 kB
+        // conv macro.
+        assert!(mem.read_pj(SramId::V1Spike, &cfg) < mem.read_pj(SramId::V3ConvFp, &cfg));
+    }
+
+    #[test]
+    fn scaled_pool_keeps_structure() {
+        let mem = MemoryPool::paper_default().scaled(0.5);
+        assert_eq!(mem.srams.len(), 8);
+        assert!(mem.total_bytes() < MemoryPool::paper_default().total_bytes());
+    }
+
+    #[test]
+    fn extended_pool_size() {
+        let pool = ArchPool::extended(256, &[0.5, 1.0, 2.0]);
+        assert_eq!(pool.candidates.len(), 9 * 3);
+    }
+}

@@ -1,0 +1,230 @@
+//! SOTA comparison data (Tables VI & VII of the paper).
+//!
+//! The literature rows are fixed values transcribed from the paper's
+//! comparison tables ([7] TCAS-II'20, [13] TCAS-II'21, [14] TCAS-I'23 for
+//! FPGA; [4] TrueNorth TCAD'15, [15] SATA TCAD'23, [16] TVLSI'23 for
+//! ASIC). "This work" rows are *derived* from our models so the
+//! comparison tracks whatever architecture EOCAS actually selects.
+
+use crate::arch::Architecture;
+use crate::perfmodel::{self, ChipMetrics, FpgaModel};
+
+/// One row of the FPGA comparison (Table VI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FpgaRow {
+    pub name: &'static str,
+    pub device: &'static str,
+    pub network: &'static str,
+    pub training: bool,
+    pub luts: Option<u64>,
+    pub ffs: Option<u64>,
+    pub dsps: Option<u64>,
+    pub memory_mb: Option<f64>,
+    pub freq_mhz: f64,
+}
+
+/// One row of the ASIC comparison (Table VII).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsicRow {
+    pub name: &'static str,
+    pub process_nm: u32,
+    pub network: &'static str,
+    pub training: bool,
+    pub weight_precision: &'static str,
+    pub memory_mb: Option<f64>,
+    pub throughput_tops: Option<f64>,
+    pub area_mm2: Option<f64>,
+    pub power_w: Option<f64>,
+    pub tops_per_w: Option<f64>,
+}
+
+/// Literature rows of Table VI (FPGA).
+pub fn fpga_literature() -> Vec<FpgaRow> {
+    vec![
+        FpgaRow {
+            name: "TCAS-II [7]",
+            device: "Kintex-7",
+            network: "SNN",
+            training: false,
+            luts: Some(34_000),
+            ffs: Some(5_000),
+            dsps: Some(256),
+            memory_mb: None,
+            freq_mhz: 143.0,
+        },
+        FpgaRow {
+            name: "TCAS-II [13]",
+            device: "ZCU102",
+            network: "SNN",
+            training: false,
+            luts: Some(11_000),
+            ffs: Some(7_000),
+            dsps: None,
+            memory_mb: Some(1.88),
+            freq_mhz: 200.0,
+        },
+        FpgaRow {
+            name: "TCAS-I [14]",
+            device: "ZCU102",
+            network: "DNN",
+            training: false,
+            luts: Some(144_000),
+            ffs: Some(168_000),
+            dsps: Some(1_268),
+            memory_mb: Some(2.99),
+            freq_mhz: 300.0,
+        },
+    ]
+}
+
+/// Literature rows of Table VII (ASIC).
+pub fn asic_literature() -> Vec<AsicRow> {
+    vec![
+        AsicRow {
+            name: "TCAD [4] (TrueNorth)",
+            process_nm: 28,
+            network: "SNN",
+            training: false,
+            weight_precision: "INT1",
+            memory_mb: None,
+            throughput_tops: Some(0.0581),
+            area_mm2: Some(430.0),
+            power_w: Some(0.065),
+            tops_per_w: Some(0.4),
+        },
+        AsicRow {
+            name: "TCAD [15] (SATA)",
+            process_nm: 65,
+            network: "SNN",
+            training: false,
+            weight_precision: "INT8",
+            memory_mb: Some(4.0),
+            throughput_tops: None,
+            area_mm2: None,
+            power_w: None,
+            tops_per_w: None,
+        },
+        AsicRow {
+            name: "TVLSI [16]",
+            process_nm: 28,
+            network: "DNN",
+            training: true,
+            weight_precision: "PINT(8,3)",
+            memory_mb: None,
+            throughput_tops: Some(14.71),
+            area_mm2: Some(17.26),
+            power_w: Some(4.45),
+            tops_per_w: Some(3.31),
+        },
+    ]
+}
+
+/// "This work" FPGA row derived from the resource model.
+pub fn our_fpga_row(arch: &Architecture, fm: &FpgaModel, freq_mhz: f64) -> FpgaRow {
+    let (luts, ffs, dsps, mem) = perfmodel::fpga_resources(arch, fm);
+    FpgaRow {
+        name: "This Work",
+        device: "VCU128",
+        network: "SNN",
+        training: true,
+        luts: Some(luts),
+        ffs: Some(ffs),
+        dsps: Some(dsps),
+        memory_mb: Some(mem),
+        freq_mhz,
+    }
+}
+
+/// "This work" ASIC row derived from the chip metrics.
+pub fn our_asic_row(metrics: &ChipMetrics) -> AsicRow {
+    AsicRow {
+        name: "This Work",
+        process_nm: 28,
+        network: "SNN",
+        training: true,
+        weight_precision: "FP16",
+        memory_mb: Some(metrics.memory_mb),
+        throughput_tops: Some(metrics.peak_tops),
+        area_mm2: Some(metrics.area_mm2),
+        power_w: Some(metrics.power_w),
+        tops_per_w: Some(metrics.tops_per_w),
+    }
+}
+
+/// §IV-B's headline cross-work claims, recomputed from our derived row so
+/// they hold for whatever EOCAS selects (used by tests and EXPERIMENTS.md).
+pub struct Claims {
+    /// Energy-efficiency ratio vs TrueNorth (paper: 2.76×).
+    pub eff_vs_truenorth: f64,
+    /// Memory saving vs SATA (paper: 49.25% lower).
+    pub mem_saving_vs_sata: f64,
+    /// Power ratio vs the Transformer trainer [16] (paper: ~1/10).
+    pub power_ratio_vs_tvlsi16: f64,
+}
+
+pub fn headline_claims(ours: &AsicRow) -> Claims {
+    let lit = asic_literature();
+    let truenorth = &lit[0];
+    let sata = &lit[1];
+    let tvlsi = &lit[2];
+    Claims {
+        eff_vs_truenorth: ours.tops_per_w.unwrap_or(0.0) / truenorth.tops_per_w.unwrap(),
+        mem_saving_vs_sata: 1.0
+            - ours.memory_mb.unwrap_or(f64::NAN) / sata.memory_mb.unwrap(),
+        power_ratio_vs_tvlsi16: ours.power_w.unwrap_or(f64::NAN) / tvlsi.power_w.unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnergyConfig;
+    use crate::dataflow::templates::Family;
+    use crate::energy::model_energy_for_family;
+    use crate::model::SnnModel;
+    use crate::perfmodel::chip_metrics;
+    use crate::workload::generate;
+
+    fn our_metrics() -> ChipMetrics {
+        let wls = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
+        let arch = Architecture::paper_default();
+        let cfg = EnergyConfig::default();
+        let layers = model_energy_for_family(&wls, Family::AdvWs, &arch, &cfg);
+        chip_metrics(&layers, &arch, &cfg, &crate::perfmodel::AreaModel::default())
+    }
+
+    #[test]
+    fn literature_tables_are_complete() {
+        assert_eq!(fpga_literature().len(), 3);
+        assert_eq!(asic_literature().len(), 3);
+        assert!(fpga_literature().iter().all(|r| !r.training));
+    }
+
+    #[test]
+    fn we_are_the_only_snn_training_design() {
+        let ours = our_fpga_row(&Architecture::paper_default(), &FpgaModel::default(), 500.0);
+        assert!(ours.training);
+        assert_eq!(ours.network, "SNN");
+        assert!(fpga_literature().iter().all(|r| !(r.training && r.network == "SNN")));
+    }
+
+    #[test]
+    fn headline_claims_match_paper_shape() {
+        let ours = our_asic_row(&our_metrics());
+        let claims = headline_claims(&ours);
+        // Paper: 2.76x better TOPS/W than TrueNorth. Accept the band.
+        assert!(claims.eff_vs_truenorth > 1.5, "{}", claims.eff_vs_truenorth);
+        // Paper: 49.25% less memory than SATA (2.03 vs 4 MB).
+        assert!((claims.mem_saving_vs_sata - 0.4925).abs() < 0.03, "{}", claims.mem_saving_vs_sata);
+        // Paper: roughly one tenth of [16]'s power.
+        assert!(claims.power_ratio_vs_tvlsi16 < 0.25, "{}", claims.power_ratio_vs_tvlsi16);
+    }
+
+    #[test]
+    fn dsp_count_below_dnn_accelerator() {
+        // Paper: "supports BP-based SNN training with reduced DSP usage"
+        // vs [14]'s 1268.
+        let ours = our_fpga_row(&Architecture::paper_default(), &FpgaModel::default(), 500.0);
+        assert!(ours.dsps.unwrap() < 1268);
+    }
+}

@@ -1,0 +1,390 @@
+//! TOML-subset parser for EOCAS configuration files.
+//!
+//! No `toml`/`serde` crates exist in the offline vendor set, so EOCAS
+//! implements the subset it uses:
+//!
+//! * `[table]` and `[nested.table]` headers
+//! * `[[array.of.tables]]`
+//! * `key = value` with string / integer / float / bool / array values
+//! * `#` comments, blank lines
+//!
+//! Unsupported TOML (dates, multi-line strings, inline tables, dotted keys
+//! in assignments) is rejected with a line-numbered error rather than
+//! silently misparsed.
+
+use std::collections::BTreeMap;
+
+/// Parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+    /// `[[name]]` array-of-tables.
+    TableArray(Vec<BTreeMap<String, TomlValue>>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric accessor: integers widen to f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, TomlValue>> {
+        match self {
+            TomlValue::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Navigate a dotted path ("mem.sram.read_pj").
+    pub fn path(&self, dotted: &str) -> Option<&TomlValue> {
+        let mut cur = self;
+        for part in dotted.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// `path()` + `as_f64()` with a descriptive error.
+    pub fn req_f64(&self, dotted: &str) -> Result<f64, String> {
+        self.path(dotted)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("missing or non-numeric config key `{dotted}`"))
+    }
+
+    pub fn req_i64(&self, dotted: &str) -> Result<i64, String> {
+        self.path(dotted)
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| format!("missing or non-integer config key `{dotted}`"))
+    }
+
+    pub fn req_str(&self, dotted: &str) -> Result<&str, String> {
+        self.path(dotted)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("missing or non-string config key `{dotted}`"))
+    }
+
+    /// Optional f64 with default.
+    pub fn opt_f64(&self, dotted: &str, default: f64) -> f64 {
+        self.path(dotted).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+}
+
+/// Parse a TOML document into a root table value.
+pub fn parse(text: &str) -> Result<TomlValue, String> {
+    let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+    // Current insertion target as a path of keys from the root.
+    let mut current_path: Vec<String> = Vec::new();
+    let mut current_is_array = false;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| format!("config line {}: {msg}: {raw:?}", lineno + 1);
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty table-array name"));
+            }
+            push_table_array(&mut root, &path).map_err(|m| err(&m))?;
+            current_path = path;
+            current_is_array = true;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty table name"));
+            }
+            ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+            current_path = path;
+            current_is_array = false;
+        } else if let Some(eq) = find_top_level_eq(&line) {
+            let key = line[..eq].trim().to_string();
+            let val_str = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            if key.contains('.') {
+                return Err(err("dotted keys in assignments are not supported"));
+            }
+            let val = parse_value(val_str).map_err(|m| err(&m))?;
+            let target = if current_is_array {
+                last_table_array_entry(&mut root, &current_path).map_err(|m| err(&m))?
+            } else {
+                table_at(&mut root, &current_path).map_err(|m| err(&m))?
+            };
+            if target.insert(key.clone(), val).is_some() {
+                return Err(err(&format!("duplicate key `{key}`")));
+            }
+        } else {
+            return Err(err("unrecognized syntax"));
+        }
+    }
+    Ok(TomlValue::Table(root))
+}
+
+/// Parse a file.
+pub fn parse_file(path: &std::path::Path) -> Result<TomlValue, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a string literal must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quotes are not supported".into());
+        }
+        return Ok(TomlValue::Str(
+            inner.replace("\\n", "\n").replace("\\t", "\t").replace("\\\\", "\\"),
+        ));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        // Arrays of scalars only; split on commas not inside strings.
+        let mut items = Vec::new();
+        let mut depth_str = false;
+        let mut start = 0usize;
+        for (i, c) in inner.char_indices() {
+            match c {
+                '"' => depth_str = !depth_str,
+                ',' if !depth_str => {
+                    items.push(parse_value(&inner[start..i])?);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        items.push(parse_value(&inner[start..])?);
+        return Ok(TomlValue::Array(items));
+    }
+    // Numbers: try i64 first (TOML distinguishes), then f64 (handles
+    // underscores as digit separators).
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, TomlValue>, String> {
+    let mut cur = root;
+    for key in path {
+        let entry = cur
+            .entry(key.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        cur = match entry {
+            TomlValue::Table(t) => t,
+            TomlValue::TableArray(v) => {
+                v.last_mut().ok_or_else(|| format!("empty table array `{key}`"))?
+            }
+            _ => return Err(format!("`{key}` is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, TomlValue>, String> {
+    ensure_table(root, path)
+}
+
+fn push_table_array(
+    root: &mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> Result<(), String> {
+    let (last, parents) = path.split_last().ok_or("empty path")?;
+    let parent = ensure_table(root, parents)?;
+    match parent
+        .entry(last.clone())
+        .or_insert_with(|| TomlValue::TableArray(Vec::new()))
+    {
+        TomlValue::TableArray(v) => {
+            v.push(BTreeMap::new());
+            Ok(())
+        }
+        _ => Err(format!("`{last}` is not an array of tables")),
+    }
+}
+
+fn last_table_array_entry<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, TomlValue>, String> {
+    let (last, parents) = path.split_last().ok_or("empty path")?;
+    let parent = ensure_table(root, parents)?;
+    match parent.get_mut(last) {
+        Some(TomlValue::TableArray(v)) => {
+            v.last_mut().ok_or_else(|| "empty table array".to_string())
+        }
+        _ => Err(format!("`{last}` is not an array of tables")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+title = "energy table"   # trailing comment
+version = 2
+scale = 1.5
+enabled = true
+dims = [1, 2, 3]
+
+[mem.sram]
+read_pj = 0.21
+write_pj = 0.25
+
+[mem.dram]
+read_pj = 18.0
+
+[[layer]]
+name = "conv1"
+channels = 32
+
+[[layer]]
+name = "conv2"
+channels = 64
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = parse(SAMPLE).unwrap();
+        assert_eq!(v.req_str("title").unwrap(), "energy table");
+        assert_eq!(v.req_i64("version").unwrap(), 2);
+        assert_eq!(v.req_f64("scale").unwrap(), 1.5);
+        assert_eq!(v.path("enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(v.req_f64("mem.sram.read_pj").unwrap(), 0.21);
+        assert_eq!(v.req_f64("mem.dram.read_pj").unwrap(), 18.0);
+        let layers = match v.path("layer").unwrap() {
+            TomlValue::TableArray(v) => v,
+            _ => panic!("expected table array"),
+        };
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[1].get("channels").unwrap().as_i64(), Some(64));
+    }
+
+    #[test]
+    fn arrays_of_scalars() {
+        let v = parse("xs = [1, 2.5, \"a\", true]").unwrap();
+        let xs = v.path("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 4);
+        assert_eq!(xs[1].as_f64(), Some(2.5));
+        assert_eq!(xs[2].as_str(), Some("a"));
+    }
+
+    #[test]
+    fn underscore_digit_separator() {
+        let v = parse("n = 1_048_576").unwrap();
+        assert_eq!(v.req_i64("n").unwrap(), 1_048_576);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("nonsense").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("a = ").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let v = parse("s = \"a#b\"").unwrap();
+        assert_eq!(v.req_str("s").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn missing_key_errors_name_the_path() {
+        let v = parse("[a]\nb = 1").unwrap();
+        let e = v.req_f64("a.missing").unwrap_err();
+        assert!(e.contains("a.missing"));
+    }
+}

@@ -1,0 +1,303 @@
+//! Dataflow representation: spatial unrolling + per-level temporal tiling.
+//!
+//! A [`Mapping`] describes how one convolution's eight-dimensional loop
+//! grid is executed on an `E × F` array backed by SRAM and DRAM (Fig. 3's
+//! hierarchy). Two observations keep the representation small:
+//!
+//! 1. For the paper's reuse-factor model (Table I, eqs. 20–22) only the
+//!    *level* at which each loop iterates matters, not the order of loops
+//!    within a level — a reuse factor is a product of irrelevant-loop
+//!    extents below a boundary. A mapping is therefore a per-dimension
+//!    factor triple (register / SRAM / DRAM) plus the spatial factors.
+//! 2. Spatial unrolling contributes multicast (inputs/weights) or
+//!    adder-tree reduction (outputs) reuse exactly like an irrelevant
+//!    temporal loop at the register boundary.
+//!
+//! The five named dataflow families of §IV-A (WS1, WS2, OS, RS and the
+//! paper's Advanced WS) are generated in [`templates`].
+
+pub mod templates;
+
+use crate::arch::ArrayScheme;
+use crate::workload::{ConvDims, Dim};
+
+/// How one convolution is scheduled onto the architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mapping {
+    /// Family label ("AdvWS", "WS1", …) for reports.
+    pub name: String,
+    /// Spatial unrolling across array rows (`E`): `(dim, factor)` pairs,
+    /// product must not exceed the row count.
+    pub spatial_rows: Vec<(Dim, u64)>,
+    /// Spatial unrolling across array columns (`F`).
+    pub spatial_cols: Vec<(Dim, u64)>,
+    /// Temporal tile factor of each dim iterated at the register level
+    /// (innermost loops, data resident in PE registers).
+    pub reg: [u64; 8],
+    /// Temporal tile factor of each dim iterated at the SRAM level.
+    pub sram: [u64; 8],
+    /// Remaining factor of each dim iterated at the DRAM level
+    /// (outermost loops).
+    pub dram: [u64; 8],
+    /// Whether the array reduces partial sums across *columns* as well as
+    /// rows. The paper's design has per-column accumulators plus a row
+    /// accumulator (§III-A), so most dataflows reduce on both axes; a
+    /// row-stationary array only accumulates along its rows, which is what
+    /// makes its WG psum traffic catastrophic (Table IV's RS column).
+    pub col_reduce: bool,
+    /// Whether the schedule provides sliding-window (halo) input reuse —
+    /// a line buffer or a diagonal shift network. Output-stationary scan
+    /// orders have neither: each PE fetches its full receptive field, so
+    /// inputs are re-read `R×S` times (Table IV's OS column).
+    pub halo_reuse: bool,
+}
+
+impl Mapping {
+    /// Build a mapping, deriving the DRAM-level factors as the ceiling
+    /// remainder so the product always covers each dimension.
+    pub fn derive(
+        name: impl Into<String>,
+        dims: &ConvDims,
+        spatial_rows: Vec<(Dim, u64)>,
+        spatial_cols: Vec<(Dim, u64)>,
+        reg: [u64; 8],
+        sram: [u64; 8],
+    ) -> Mapping {
+        let mut m = Mapping {
+            name: name.into(),
+            spatial_rows,
+            spatial_cols,
+            reg,
+            sram,
+            dram: [1; 8],
+            col_reduce: true,
+            halo_reuse: true,
+        };
+        for d in Dim::ALL {
+            let i = d.idx();
+            let covered = m.spatial_factor(d) * m.reg[i].max(1) * m.sram[i].max(1);
+            m.reg[i] = m.reg[i].max(1);
+            m.sram[i] = m.sram[i].max(1);
+            m.dram[i] = crate::util::ceil_div(dims.get(d), covered.max(1)).max(1);
+        }
+        m
+    }
+
+    /// Total spatial unrolling of `d` across both array axes.
+    pub fn spatial_factor(&self, d: Dim) -> u64 {
+        let row: u64 = self
+            .spatial_rows
+            .iter()
+            .filter(|(sd, _)| *sd == d)
+            .map(|(_, f)| *f)
+            .product();
+        let col: u64 = self
+            .spatial_cols
+            .iter()
+            .filter(|(sd, _)| *sd == d)
+            .map(|(_, f)| *f)
+            .product();
+        row * col
+    }
+
+    /// Temporal factor of `d` at a level (register=0, sram=1, dram=2).
+    pub fn temporal(&self, d: Dim, level: usize) -> u64 {
+        match level {
+            0 => self.reg[d.idx()],
+            1 => self.sram[d.idx()],
+            2 => self.dram[d.idx()],
+            _ => 1,
+        }
+    }
+
+    /// Number of array PEs actually used.
+    pub fn used_pes(&self) -> u64 {
+        let r: u64 = self.spatial_rows.iter().map(|(_, f)| f).product();
+        let c: u64 = self.spatial_cols.iter().map(|(_, f)| f).product();
+        r * c
+    }
+
+    /// Spatial utilization of the array in `[0, 1]`.
+    pub fn utilization(&self, array: &ArrayScheme) -> f64 {
+        self.used_pes() as f64 / array.macs() as f64
+    }
+
+    /// The *scheduled* grid size: product over dims of
+    /// spatial × reg × sram × dram. With non-dividing tile factors this can
+    /// exceed `dims.total()` (padding overcount); the ratio is the mapping
+    /// inefficiency.
+    pub fn scheduled_total(&self) -> u64 {
+        Dim::ALL
+            .iter()
+            .map(|&d| self.spatial_factor(d) * self.reg[d.idx()] * self.sram[d.idx()] * self.dram[d.idx()])
+            .product()
+    }
+
+    /// Execution cycles: one array pass per temporal point.
+    pub fn cycles(&self) -> u64 {
+        Dim::ALL
+            .iter()
+            .map(|&d| self.reg[d.idx()] * self.sram[d.idx()] * self.dram[d.idx()])
+            .product()
+    }
+
+    /// Validate the mapping against `dims` and `array`. Returns a list of
+    /// violations (empty = valid).
+    pub fn validate(&self, dims: &ConvDims, array: &ArrayScheme) -> Vec<String> {
+        let mut errs = Vec::new();
+        let rows: u64 = self.spatial_rows.iter().map(|(_, f)| f).product();
+        let cols: u64 = self.spatial_cols.iter().map(|(_, f)| f).product();
+        if rows > array.rows as u64 {
+            errs.push(format!("row unroll {rows} exceeds E={}", array.rows));
+        }
+        if cols > array.cols as u64 {
+            errs.push(format!("col unroll {cols} exceeds F={}", array.cols));
+        }
+        for d in Dim::ALL {
+            let covered = self.spatial_factor(d)
+                * self.reg[d.idx()]
+                * self.sram[d.idx()]
+                * self.dram[d.idx()];
+            if covered < dims.get(d) {
+                errs.push(format!(
+                    "dim {} covered {covered} < extent {}",
+                    d.name(),
+                    dims.get(d)
+                ));
+            }
+        }
+        for (d, f) in self.spatial_rows.iter().chain(self.spatial_cols.iter()) {
+            if *f == 0 {
+                errs.push(format!("zero spatial factor on {}", d.name()));
+            }
+            if *f > dims.get(*d) {
+                errs.push(format!(
+                    "spatial factor {f} on {} exceeds extent {}",
+                    d.name(),
+                    dims.get(*d)
+                ));
+            }
+        }
+        errs
+    }
+
+    /// Render the loop nest as text (innermost at the bottom), for Fig. 6's
+    /// "dataflow structures" panel.
+    pub fn render_loop_nest(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("dataflow {}\n", self.name));
+        let fmt_level = |label: &str, factors: &[u64; 8]| -> String {
+            let mut s = String::new();
+            for d in Dim::ALL.iter().rev() {
+                let f = factors[d.idx()];
+                if f > 1 {
+                    s.push_str(&format!("  for {} in 0..{}   # {label}\n", d.name().to_lowercase(), f));
+                }
+            }
+            s
+        };
+        out.push_str(&fmt_level("DRAM", &self.dram));
+        out.push_str(&fmt_level("SRAM", &self.sram));
+        out.push_str(&fmt_level("Reg", &self.reg));
+        let spatial: Vec<String> = self
+            .spatial_rows
+            .iter()
+            .map(|(d, f)| format!("{}:{f}|rows", d.name()))
+            .chain(self.spatial_cols.iter().map(|(d, f)| format!("{}:{f}|cols", d.name())))
+            .collect();
+        out.push_str(&format!("  parallel-for [{}]   # {}x array\n", spatial.join(", "), self.used_pes()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ConvDims;
+
+    fn dims() -> ConvDims {
+        // Fig. 4: N=1 T=6 M=32 C=32 P=32 Q=32 R=3 S=3
+        ConvDims::new(1, 6, 32, 32, 32, 32, 3, 3)
+    }
+
+    #[test]
+    fn derive_covers_all_dims() {
+        let d = dims();
+        let mut reg = [1u64; 8];
+        reg[Dim::Q.idx()] = 32;
+        let mut sram = [1u64; 8];
+        sram[Dim::R.idx()] = 3;
+        sram[Dim::S.idx()] = 3;
+        sram[Dim::T.idx()] = 6;
+        let m = Mapping::derive(
+            "t",
+            &d,
+            vec![(Dim::C, 16)],
+            vec![(Dim::M, 16)],
+            reg,
+            sram,
+        );
+        assert!(m.validate(&d, &ArrayScheme::new(16, 16)).is_empty());
+        // C: spatial 16, needs dram factor 2; M: spatial 16 -> dram 2.
+        assert_eq!(m.dram[Dim::C.idx()], 2);
+        assert_eq!(m.dram[Dim::M.idx()], 2);
+        assert_eq!(m.dram[Dim::P.idx()], 32);
+        assert_eq!(m.spatial_factor(Dim::C), 16);
+    }
+
+    #[test]
+    fn utilization_and_cycles() {
+        let d = dims();
+        let m = Mapping::derive(
+            "t",
+            &d,
+            vec![(Dim::C, 8)],
+            vec![(Dim::M, 16)],
+            [1; 8],
+            [1; 8],
+        );
+        let arr = ArrayScheme::new(16, 16);
+        assert!((m.utilization(&arr) - 0.5).abs() < 1e-12);
+        // cycles = scheduled_total / used_pes
+        assert_eq!(m.cycles() * m.used_pes(), m.scheduled_total());
+    }
+
+    #[test]
+    fn validation_catches_overflow_and_undercover() {
+        let d = dims();
+        let m = Mapping {
+            name: "bad".into(),
+            spatial_rows: vec![(Dim::C, 32)],
+            spatial_cols: vec![(Dim::M, 8)],
+            reg: [1; 8],
+            sram: [1; 8],
+            dram: [1; 8],
+            col_reduce: true,
+            halo_reuse: true,
+        };
+        let errs = m.validate(&d, &ArrayScheme::new(16, 16));
+        assert!(errs.iter().any(|e| e.contains("row unroll")));
+        assert!(errs.iter().any(|e| e.contains("covered")));
+    }
+
+    #[test]
+    fn scheduled_total_overcounts_non_dividing_tiles() {
+        let d = ConvDims::new(1, 1, 10, 1, 1, 1, 1, 1);
+        let mut reg = [1u64; 8];
+        reg[Dim::M.idx()] = 3; // 10 = 3*ceil(10/3)=3*4=12 > 10
+        let m = Mapping::derive("t", &d, vec![], vec![], reg, [1; 8]);
+        assert_eq!(m.scheduled_total(), 12);
+        assert!(m.scheduled_total() >= d.total());
+    }
+
+    #[test]
+    fn loop_nest_rendering_mentions_levels() {
+        let d = dims();
+        let mut sram = [1u64; 8];
+        sram[Dim::T.idx()] = 6;
+        let m = Mapping::derive("demo", &d, vec![(Dim::C, 16)], vec![(Dim::M, 16)], [1; 8], sram);
+        let txt = m.render_loop_nest();
+        assert!(txt.contains("# SRAM"));
+        assert!(txt.contains("parallel-for"));
+    }
+}

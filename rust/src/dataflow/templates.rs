@@ -1,0 +1,439 @@
+//! The five dataflow families evaluated in §IV-A: two conventional
+//! weight-stationary schedules (WS1, WS2), output-stationary (OS),
+//! row-stationary (RS), and the paper's Advanced WS.
+//!
+//! Each template turns a convolution workload + architecture into a
+//! concrete [`Mapping`]: a spatial unroll plus per-level tile factors,
+//! then shrinks SRAM tiles until every operand's tile fits its Table-II
+//! macro. Templates are *mechanical* over the loop grid, so applying the
+//! FP-oriented schedule to the BP or WG grid yields the (different) reuse
+//! the paper reports for those phases.
+
+use crate::arch::Architecture;
+use crate::reuse::{operand_specs, OperandSpec};
+use crate::util::{ceil_div, divisors};
+use crate::workload::{ConvWorkload, Dim};
+
+use super::Mapping;
+
+/// The dataflow families of §IV-A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// The paper's proposal: dual-axis channel decomposition, weights tiled
+    /// in registers, partial sums resident in SRAM, single DRAM pass.
+    AdvWs,
+    /// Conventional WS, input tiled over output positions at the register
+    /// level; weights persist across the timestep loop.
+    Ws1,
+    /// Conventional WS with the timestep loop outside DRAM — weights and
+    /// partial sums re-streamed per timestep.
+    Ws2,
+    /// Output-stationary: reduction loops in registers, weights streamed.
+    Os,
+    /// Row-stationary (Eyeriss-like): kernel rows pinned spatially.
+    Rs,
+}
+
+impl Family {
+    pub const ALL: [Family; 5] = [Family::AdvWs, Family::Ws1, Family::Ws2, Family::Os, Family::Rs];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::AdvWs => "Advanced WS",
+            Family::Ws1 => "WS1",
+            Family::Ws2 => "WS2",
+            Family::Os => "OS",
+            Family::Rs => "RS",
+        }
+    }
+}
+
+/// Largest divisor of `extent` that is ≤ `cap` (≥ 1). Divisor-aligned
+/// tiles avoid padding overcount. Allocation-free (template generation
+/// sits on the DSE hot path).
+fn fit_div(extent: u64, cap: u64) -> u64 {
+    if extent == 0 {
+        return 1;
+    }
+    let cap = cap.max(1);
+    if extent <= cap {
+        return extent;
+    }
+    // Walk candidate divisors downward from cap; for the small extents
+    // here (dimension sizes) this beats building the divisor list.
+    let mut best = 1;
+    let mut d = 1;
+    while d * d <= extent {
+        if extent % d == 0 {
+            if d <= cap && d > best {
+                best = d;
+            }
+            let q = extent / d;
+            if q <= cap && q > best {
+                best = q;
+            }
+        }
+        d += 1;
+    }
+    best
+}
+
+/// Generate the mapping of `family` for workload `w` on `arch`.
+pub fn generate(family: Family, w: &ConvWorkload, arch: &Architecture) -> Mapping {
+    let d = &w.dims;
+    let e_cap = arch.array.rows as u64;
+    let f_cap = arch.array.cols as u64;
+    let ext = |dim: Dim| d.get(dim);
+
+    let (spatial_rows, spatial_cols, reg, sram) = match family {
+        Family::Ws1 => {
+            // Weights of one channel block stationary; the remaining
+            // channel blocks iterate at DRAM level, so partial sums spill
+            // (and the input re-streams) once per block.
+            let e = fit_div(ext(Dim::C), e_cap);
+            let f = fit_div(ext(Dim::M), f_cap);
+            let mut reg = [1u64; 8];
+            reg[Dim::P.idx()] = fit_div(ext(Dim::P), 4);
+            reg[Dim::Q.idx()] = fit_div(ext(Dim::Q), 32);
+            let mut sram = [1u64; 8];
+            sram[Dim::R.idx()] = ext(Dim::R);
+            sram[Dim::S.idx()] = ext(Dim::S);
+            sram[Dim::T.idx()] = ext(Dim::T);
+            (vec![(Dim::C, e)], vec![(Dim::M, f)], reg, sram)
+        }
+        Family::Ws2 => {
+            // Same array use as WS1 but only a single output row tiled in
+            // registers, a short output-column strip in SRAM, and the
+            // timestep loop pushed out to DRAM: weights and partial sums
+            // are re-streamed every timestep.
+            let e = fit_div(ext(Dim::C), e_cap);
+            let f = fit_div(ext(Dim::M), f_cap);
+            let mut reg = [1u64; 8];
+            reg[Dim::Q.idx()] = fit_div(ext(Dim::Q), 32);
+            let mut sram = [1u64; 8];
+            sram[Dim::R.idx()] = ext(Dim::R);
+            sram[Dim::S.idx()] = ext(Dim::S);
+            sram[Dim::P.idx()] = fit_div(ext(Dim::P), 2);
+            (vec![(Dim::C, e)], vec![(Dim::M, f)], reg, sram)
+        }
+        Family::Os => {
+            // Outputs pinned to PEs: the reduction loops (C, R, S tiles)
+            // iterate in registers; weights stream from SRAM each cycle,
+            // the output-channel remainder and timestep loops live at DRAM
+            // level, and the window-scan order provides no halo line
+            // buffer (halo_reuse = false below).
+            let e = fit_div(ext(Dim::P), e_cap);
+            let f = fit_div(ext(Dim::M), f_cap);
+            let mut reg = [1u64; 8];
+            reg[Dim::R.idx()] = ext(Dim::R);
+            reg[Dim::S.idx()] = ext(Dim::S);
+            reg[Dim::C.idx()] = fit_div(ext(Dim::C), 8);
+            let mut sram = [1u64; 8];
+            sram[Dim::Q.idx()] = ext(Dim::Q);
+            sram[Dim::C.idx()] = ceil_div(ext(Dim::C), reg[Dim::C.idx()]);
+            (vec![(Dim::P, e)], vec![(Dim::M, f)], reg, sram)
+        }
+        Family::Rs => {
+            // Kernel rows pinned across array rows, output columns across
+            // array columns; kernel cols + an output-row tile iterate in
+            // registers. Partial sums spill row-wise (the paper's "partial
+            // sums are stored row-wise in partial sum SRAM").
+            let e = fit_div(ext(Dim::R), e_cap);
+            let f = fit_div(ext(Dim::Q), f_cap);
+            let mut reg = [1u64; 8];
+            reg[Dim::S.idx()] = ext(Dim::S);
+            reg[Dim::P.idx()] = fit_div(ext(Dim::P), 4);
+            let mut sram = [1u64; 8];
+            sram[Dim::C.idx()] = ext(Dim::C);
+            sram[Dim::T.idx()] = ext(Dim::T);
+            sram[Dim::M.idx()] = fit_div(ext(Dim::M), 8);
+            sram[Dim::R.idx()] = ceil_div(ext(Dim::R), e);
+            sram[Dim::Q.idx()] = ceil_div(ext(Dim::Q), f);
+            (vec![(Dim::R, e)], vec![(Dim::Q, f)], reg, sram)
+        }
+        Family::AdvWs => {
+            // Dual-axis channel decomposition: input channels split across
+            // rows *and* the column remainder next to the output-channel
+            // split ("input channels are further split in the horizontal
+            // direction"). Everything but the batch loop completes within
+            // one SRAM residency -> every operand makes a single DRAM pass.
+            let e = fit_div(ext(Dim::C), e_cap);
+            let f1 = fit_div(ext(Dim::M), f_cap);
+            let leftover = f_cap / f1.max(1);
+            let c_rest = ceil_div(ext(Dim::C), e);
+            let f2 = fit_div(c_rest, leftover);
+            let mut reg = [1u64; 8];
+            reg[Dim::P.idx()] = fit_div(ext(Dim::P), 8);
+            reg[Dim::Q.idx()] = fit_div(ext(Dim::Q), 32);
+            let mut sram = [1u64; 8];
+            sram[Dim::R.idx()] = ext(Dim::R);
+            sram[Dim::S.idx()] = ext(Dim::S);
+            sram[Dim::T.idx()] = ext(Dim::T);
+            sram[Dim::M.idx()] = ceil_div(ext(Dim::M), f1);
+            sram[Dim::C.idx()] = ceil_div(ext(Dim::C), e * f2);
+            sram[Dim::P.idx()] = ceil_div(ext(Dim::P), reg[Dim::P.idx()]);
+            sram[Dim::Q.idx()] = ceil_div(ext(Dim::Q), reg[Dim::Q.idx()]);
+            let mut cols = vec![(Dim::M, f1)];
+            if f2 > 1 {
+                cols.push((Dim::C, f2));
+            }
+            (vec![(Dim::C, e)], cols, reg, sram)
+        }
+    };
+
+    let mut m = Mapping::derive(family.name(), d, spatial_rows, spatial_cols, reg, sram);
+    // RS arrays accumulate along rows only (no per-column adder trees):
+    // partial sums produced by different columns spill individually.
+    if family == Family::Rs {
+        m.col_reduce = false;
+    }
+    // OS window-scan order has no input line buffer: no halo reuse.
+    if family == Family::Os {
+        m.halo_reuse = false;
+    }
+    fit_to_capacity(m, w, arch)
+}
+
+/// SRAM tile footprint (bits) of one operand under `m`: the product of the
+/// operand-relevant extents resident below the DRAM boundary.
+///
+/// Residency model: within one SRAM pass, the batch/timestep loops stream
+/// outermost (only one `n, t` slice is ever buffered), and halo operands
+/// keep an `R`-row line buffer rather than replicating the tile per kernel
+/// offset — so `N`/`T` SRAM factors and halo `R`/`S` factors do not
+/// multiply the resident tile.
+pub fn sram_tile_bits(spec: &OperandSpec, m: &Mapping) -> u64 {
+    let mut spatial = [1u64; 8];
+    for (d, f) in m.spatial_rows.iter().chain(m.spatial_cols.iter()) {
+        spatial[d.idx()] *= *f;
+    }
+    tile_bits_raw(spec, &spatial, &m.reg, &m.sram, m.halo_reuse)
+}
+
+/// Allocation-free tile-footprint kernel shared by [`sram_tile_bits`]
+/// and the capacity fitter's inner loop (the DSE hot path).
+#[inline]
+fn tile_bits_raw(
+    spec: &OperandSpec,
+    spatial: &[u64; 8],
+    reg: &[u64; 8],
+    sram: &[u64; 8],
+    halo_reuse: bool,
+) -> u64 {
+    let mut elems: u64 = 1;
+    for dim in Dim::ALL {
+        // Dims irrelevant to the operand don't index it. (The +R-1 halo
+        // fringe is ignored as a second-order term.)
+        if spec.irr[dim.idx()] {
+            continue;
+        }
+        if spec.halo && halo_reuse && matches!(dim, Dim::R | Dim::S) {
+            continue;
+        }
+        let mut f = spatial[dim.idx()] * reg[dim.idx()];
+        if !matches!(dim, Dim::N | Dim::T) {
+            f *= sram[dim.idx()];
+        }
+        elems *= f;
+    }
+    elems * spec.bits as u64
+}
+
+/// Shrink SRAM-level tile factors until every operand tile fits its
+/// Table-II macro. Halving proceeds from the largest shrinkable factor;
+/// `Mapping::derive` afterwards pushes the remainder to DRAM.
+fn fit_to_capacity(m: Mapping, w: &ConvWorkload, arch: &Architecture) -> Mapping {
+    let specs = operand_specs(w);
+    let mut sram = m.sram;
+    let mut reg = m.reg;
+    // Precompute per-dim spatial products once; the shrink loop below is
+    // the DSE's hottest path and must not allocate.
+    let mut spatial = [1u64; 8];
+    for (d, f) in m.spatial_rows.iter().chain(m.spatial_cols.iter()) {
+        spatial[d.idx()] *= *f;
+    }
+    let rebuild = |reg: [u64; 8], sram: [u64; 8]| {
+        let mut cur = Mapping::derive(
+            m.name.clone(),
+            &w.dims,
+            m.spatial_rows.clone(),
+            m.spatial_cols.clone(),
+            reg,
+            sram,
+        );
+        cur.col_reduce = m.col_reduce;
+        cur.halo_reuse = m.halo_reuse;
+        cur
+    };
+    // At most ~64 halvings per dim can ever be needed (factors are u64).
+    for _ in 0..512 {
+        // (is_reg_level, dim idx, tile excess)
+        let mut worst: Option<(bool, usize, u64)> = None;
+        for spec in &specs {
+            let cap_bits = arch.mem.get(spec.sram).bytes * 8;
+            let tile = tile_bits_raw(spec, &spatial, &reg, &sram, m.halo_reuse);
+            if tile > cap_bits {
+                let excess = tile - cap_bits;
+                let tile_dim = |dim: &Dim| {
+                    !spec.irr[dim.idx()]
+                        && !(spec.halo && m.halo_reuse && matches!(dim, Dim::R | Dim::S))
+                };
+                // Prefer shrinking SRAM factors (N/T never count toward
+                // residency, so skip them); fall back to register tiles.
+                let cand = Dim::ALL
+                    .iter()
+                    .filter(|dim| {
+                        tile_dim(dim) && !matches!(dim, Dim::N | Dim::T) && sram[dim.idx()] > 1
+                    })
+                    .max_by_key(|dim| sram[dim.idx()])
+                    .map(|dim| (false, dim.idx()))
+                    .or_else(|| {
+                        Dim::ALL
+                            .iter()
+                            .filter(|dim| tile_dim(dim) && reg[dim.idx()] > 1)
+                            .max_by_key(|dim| reg[dim.idx()])
+                            .map(|dim| (true, dim.idx()))
+                    });
+                if let Some((is_reg, idx)) = cand {
+                    if worst.map(|(_, _, e)| excess > e).unwrap_or(true) {
+                        worst = Some((is_reg, idx, excess));
+                    }
+                }
+            }
+        }
+        match worst {
+            Some((true, idx, _)) => reg[idx] = (reg[idx] / 2).max(1),
+            Some((false, idx, _)) => sram[idx] = (sram[idx] / 2).max(1),
+            None => return rebuild(reg, sram),
+        }
+    }
+    rebuild(reg, sram)
+}
+
+/// Generate the mappings of every family for one workload.
+pub fn all_families(w: &ConvWorkload, arch: &Architecture) -> Vec<(Family, Mapping)> {
+    Family::ALL.iter().map(|&f| (f, generate(f, w, arch))).collect()
+}
+
+/// Re-run capacity fitting on an externally modified mapping (used by the
+/// DSE's randomized sampler after jittering tile factors).
+pub fn refit(m: Mapping, w: &ConvWorkload, arch: &Architecture) -> Mapping {
+    fit_to_capacity(m, w, arch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Architecture, ArrayScheme};
+    use crate::model::SnnModel;
+    use crate::workload::generate as gen_workload;
+
+    fn setup() -> (crate::workload::LayerWorkload, Architecture) {
+        let wl = gen_workload(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0);
+        (wl, Architecture::paper_default())
+    }
+
+    #[test]
+    fn all_families_produce_valid_mappings_for_all_phases() {
+        let (wl, arch) = setup();
+        for w in wl.convs() {
+            for (fam, m) in all_families(w, &arch) {
+                let errs = m.validate(&w.dims, &arch.array);
+                assert!(
+                    errs.is_empty(),
+                    "{} on {:?}: {errs:?}",
+                    fam.name(),
+                    w.phase
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn advws_single_dram_pass() {
+        let (wl, arch) = setup();
+        let m = generate(Family::AdvWs, &wl.fp, &arch);
+        // Only the batch dim (N=1 here) remains at DRAM level: all DRAM
+        // factors must be 1 for the Fig. 4 layer.
+        assert!(m.dram.iter().all(|&f| f == 1), "dram factors {:?}", m.dram);
+    }
+
+    #[test]
+    fn advws_uses_full_array_on_paper_layer() {
+        let (wl, arch) = setup();
+        let m = generate(Family::AdvWs, &wl.fp, &arch);
+        assert!((m.utilization(&arch.array) - 1.0).abs() < 1e-12, "util {}", m.utilization(&arch.array));
+    }
+
+    #[test]
+    fn ws2_restreams_per_timestep() {
+        let (wl, arch) = setup();
+        let m = generate(Family::Ws2, &wl.fp, &arch);
+        assert_eq!(m.dram[crate::workload::Dim::T.idx()], 6);
+    }
+
+    #[test]
+    fn rs_has_low_utilization_with_3x3_kernels() {
+        let (wl, arch) = setup();
+        let m = generate(Family::Rs, &wl.fp, &arch);
+        // rows pinned to R=3 of 16.
+        assert!(m.utilization(&arch.array) < 0.25);
+    }
+
+    #[test]
+    fn capacity_fitting_respects_macros() {
+        let (wl, arch) = setup();
+        // Shrink memory brutally: 1/64 of the paper pool.
+        let tiny = Architecture {
+            mem: arch.mem.scaled(1.0 / 64.0),
+            ..arch.clone()
+        };
+        for w in wl.convs() {
+            for (fam, m) in all_families(w, &tiny) {
+                for spec in crate::reuse::operand_specs(w) {
+                    let cap = tiny.mem.get(spec.sram).bytes * 8;
+                    let tile = sram_tile_bits(&spec, &m);
+                    assert!(
+                        tile <= cap,
+                        "{} {} tile {tile} > cap {cap}",
+                        fam.name(),
+                        spec.tensor
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn templates_work_on_odd_shapes() {
+        // 5x5 kernel, 20 channels, 14x14 maps, stride 1.
+        let model = crate::model::SnnModel {
+            name: "odd".into(),
+            input: (20, 14, 14),
+            layers: vec![crate::model::LayerSpec::Conv {
+                out_channels: 24,
+                kernel: 5,
+                stride: 1,
+                padding: 2,
+            }],
+            timesteps: 3,
+            batch: 2,
+        };
+        let wl = gen_workload(&model, &[], 0.5).unwrap().remove(0);
+        let arch = Architecture::with_array(ArrayScheme::new(8, 32));
+        for w in wl.convs() {
+            for (fam, m) in all_families(w, &arch) {
+                let errs = m.validate(&w.dims, &arch.array);
+                assert!(errs.is_empty(), "{}: {errs:?}", fam.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fit_div_prefers_divisors() {
+        assert_eq!(fit_div(32, 16), 16);
+        assert_eq!(fit_div(20, 16), 10);
+        assert_eq!(fit_div(7, 4), 1);
+        assert_eq!(fit_div(7, 7), 7);
+    }
+}

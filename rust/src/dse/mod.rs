@@ -1,0 +1,331 @@
+//! Design-space exploration: the outer loop of Fig. 2.
+//!
+//! EOCAS "takes SNN models, accelerator architecture and a memory pool as
+//! inputs to generate dataflows and evaluate the performance of each
+//! situation to obtain the optimal architecture and dataflow". This module
+//! crosses the architecture pool with the dataflow families (plus, for
+//! Fig. 5's energy-interval scatter, randomized mapping perturbations),
+//! evaluates every candidate with the energy model, and reports the
+//! optimum and the Pareto front. Evaluation is embarrassingly parallel
+//! and runs on `std::thread` workers.
+
+pub mod mapper;
+
+use std::sync::Mutex;
+
+use crate::arch::{ArchPool, Architecture};
+use crate::config::EnergyConfig;
+use crate::dataflow::templates::{self, Family};
+use crate::dataflow::Mapping;
+use crate::energy::{conv_energy, unit_energy, LayerEnergy};
+use crate::util::prng::SplitMix64;
+use crate::workload::{ConvWorkload, Dim, LayerWorkload};
+
+/// One evaluated point of the design space.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub arch: Architecture,
+    /// Dataflow family, or "random-N" for sampled mappings.
+    pub dataflow: String,
+    pub layers: Vec<LayerEnergy>,
+    pub overall_j: f64,
+    pub conv_mem_j: f64,
+    pub cycles: u64,
+}
+
+/// DSE knobs.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub families: Vec<Family>,
+    /// Extra randomized mapping samples per (architecture, family).
+    pub random_samples: usize,
+    pub seed: u64,
+    /// Worker threads (0 = available_parallelism).
+    pub threads: usize,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        Self { families: Family::ALL.to_vec(), random_samples: 0, seed: 0xE0CA5, threads: 0 }
+    }
+}
+
+/// Result of an exploration run.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub candidates: Vec<Candidate>,
+    pub evaluations: usize,
+}
+
+impl DseResult {
+    /// Minimum-energy candidate.
+    pub fn best(&self) -> Option<&Candidate> {
+        self.candidates
+            .iter()
+            .min_by(|a, b| a.overall_j.partial_cmp(&b.overall_j).unwrap())
+    }
+
+    /// Pareto front over (energy, cycles), ascending by energy.
+    pub fn pareto(&self) -> Vec<&Candidate> {
+        let mut sorted: Vec<&Candidate> = self.candidates.iter().collect();
+        sorted.sort_by(|a, b| a.overall_j.partial_cmp(&b.overall_j).unwrap());
+        let mut front: Vec<&Candidate> = Vec::new();
+        let mut best_cycles = u64::MAX;
+        for c in sorted {
+            if c.cycles < best_cycles {
+                best_cycles = c.cycles;
+                front.push(c);
+            }
+        }
+        front
+    }
+
+    /// Energy interval (min, max) over all candidates — Fig. 5's spread.
+    pub fn energy_interval(&self) -> Option<(f64, f64)> {
+        crate::util::stats::min_max(
+            &self.candidates.iter().map(|c| c.overall_j).collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Evaluate one (architecture, family) pair over all layers.
+pub fn evaluate_family(
+    wls: &[LayerWorkload],
+    family: Family,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+) -> Candidate {
+    let layers: Vec<LayerEnergy> = wls
+        .iter()
+        .map(|wl| crate::energy::layer_energy_for_family(wl, family, arch, cfg))
+        .collect();
+    finish_candidate(arch.clone(), family.name().to_string(), layers)
+}
+
+/// Evaluate explicit per-phase mappings (used by the random sampler and by
+/// callers that hand-build mappings).
+pub fn evaluate_mappings(
+    wls: &[LayerWorkload],
+    label: String,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+    mapper: &mut dyn FnMut(&ConvWorkload) -> Mapping,
+) -> Candidate {
+    let layers: Vec<LayerEnergy> = wls
+        .iter()
+        .map(|wl| LayerEnergy {
+            layer: wl.layer,
+            fp: conv_energy(&wl.fp, &mapper(&wl.fp), arch, cfg),
+            bp: conv_energy(&wl.bp, &mapper(&wl.bp), arch, cfg),
+            wg: conv_energy(&wl.wg, &mapper(&wl.wg), arch, cfg),
+            units: unit_energy(&wl.units, arch, cfg),
+        })
+        .collect();
+    finish_candidate(arch.clone(), label, layers)
+}
+
+fn finish_candidate(arch: Architecture, dataflow: String, layers: Vec<LayerEnergy>) -> Candidate {
+    let overall_j = layers.iter().map(|l| l.overall_j()).sum();
+    let conv_mem_j = layers.iter().map(|l| l.conv_mem_j()).sum();
+    let cycles = layers.iter().map(|l| l.cycles()).sum();
+    Candidate { arch, dataflow, layers, overall_j, conv_mem_j, cycles }
+}
+
+/// Randomly perturb a family template's tile factors (×2 / ÷2 jitters on
+/// register and SRAM factors), keeping the mapping valid and capacity-fit.
+pub fn jittered_mapping(
+    w: &ConvWorkload,
+    arch: &Architecture,
+    family: Family,
+    rng: &mut SplitMix64,
+) -> Mapping {
+    let base = templates::generate(family, w, arch);
+    let mut reg = base.reg;
+    let mut sram = base.sram;
+    for d in Dim::ALL {
+        let i = d.idx();
+        match rng.next_below(4) {
+            0 if reg[i] > 1 => reg[i] /= 2,
+            1 => {
+                let grown = reg[i] * 2;
+                if base.spatial_factor(d) * grown <= w.dims.get(d) {
+                    reg[i] = grown;
+                }
+            }
+            2 if sram[i] > 1 => sram[i] /= 2,
+            3 => {
+                let grown = sram[i] * 2;
+                if base.spatial_factor(d) * reg[i] * grown <= w.dims.get(d) {
+                    sram[i] = grown;
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut m = Mapping::derive(
+        format!("{}~jitter", base.name),
+        &w.dims,
+        base.spatial_rows.clone(),
+        base.spatial_cols.clone(),
+        reg,
+        sram,
+    );
+    m.col_reduce = base.col_reduce;
+    m.halo_reuse = base.halo_reuse;
+    templates::refit(m, w, arch)
+}
+
+/// Run the full exploration: every architecture × every family
+/// (+ `random_samples` jittered variants each), in parallel.
+pub fn explore(
+    pool: &ArchPool,
+    wls: &[LayerWorkload],
+    cfg: &EnergyConfig,
+    dse: &DseConfig,
+) -> DseResult {
+    // Work items: (arch index, family, sample index or None).
+    let mut items: Vec<(usize, Family, Option<usize>)> = Vec::new();
+    for (ai, _) in pool.candidates.iter().enumerate() {
+        for &fam in &dse.families {
+            items.push((ai, fam, None));
+            for s in 0..dse.random_samples {
+                items.push((ai, fam, Some(s)));
+            }
+        }
+    }
+    let n_threads = if dse.threads > 0 {
+        dse.threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+    .min(items.len().max(1));
+
+    // Thread-local result buffers merged once at the end: the per-item
+    // mutex showed up in profiles (EXPERIMENTS.md §Perf, iteration 3).
+    let results = Mutex::new(Vec::with_capacity(items.len()));
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| {
+                let mut local = Vec::with_capacity(items.len() / n_threads + 1);
+                loop {
+                    let idx = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if idx >= items.len() {
+                        break;
+                    }
+                    let (ai, fam, sample) = items[idx];
+                    let arch = &pool.candidates[ai];
+                    let cand = match sample {
+                        None => evaluate_family(wls, fam, arch, cfg),
+                        Some(s) => {
+                            // Deterministic per-item stream: seed ⊕ item id.
+                            let mut rng = SplitMix64::new(
+                                dse.seed ^ ((ai as u64) << 32) ^ ((s as u64) << 8) ^ fam as u64,
+                            );
+                            let label = format!("{}~rand{}", fam.name(), s);
+                            let mut mapper = |w: &ConvWorkload| jittered_mapping(w, arch, fam, &mut rng);
+                            evaluate_mappings(wls, label, arch, cfg, &mut mapper)
+                        }
+                    };
+                    local.push(cand);
+                }
+                results.lock().unwrap().append(&mut local);
+            });
+        }
+    });
+    let mut candidates = results.into_inner().unwrap();
+    // Deterministic output order regardless of thread interleaving.
+    candidates.sort_by(|a, b| {
+        a.arch
+            .array
+            .label()
+            .cmp(&b.arch.array.label())
+            .then(a.dataflow.cmp(&b.dataflow))
+    });
+    let evaluations = candidates.len();
+    DseResult { candidates, evaluations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SnnModel;
+    use crate::workload::generate;
+
+    fn setup() -> (ArchPool, Vec<LayerWorkload>, EnergyConfig) {
+        let wls = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
+        (ArchPool::paper_pool(), wls, EnergyConfig::default())
+    }
+
+    #[test]
+    fn exploration_finds_paper_optimum() {
+        let (pool, wls, cfg) = setup();
+        let res = explore(&pool, &wls, &cfg, &DseConfig::default());
+        assert_eq!(res.evaluations, 4 * 5);
+        let best = res.best().unwrap();
+        // Table III + IV: 16x16 with Advanced WS is the optimum.
+        assert_eq!(best.arch.array.label(), "16x16");
+        assert_eq!(best.dataflow, "Advanced WS");
+    }
+
+    #[test]
+    fn random_samples_expand_the_space_without_beating_validity() {
+        let (pool, wls, cfg) = setup();
+        let dse = DseConfig { random_samples: 3, ..Default::default() };
+        let res = explore(&pool, &wls, &cfg, &dse);
+        assert_eq!(res.evaluations, 4 * 5 * 4);
+        // Every sampled mapping must have produced finite positive energy.
+        assert!(res.candidates.iter().all(|c| c.overall_j.is_finite() && c.overall_j > 0.0));
+    }
+
+    #[test]
+    fn jittered_mappings_stay_valid() {
+        let (pool, wls, cfg) = setup();
+        let _ = cfg;
+        let arch = &pool.candidates[0];
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..100 {
+            for fam in Family::ALL {
+                let m = jittered_mapping(&wls[0].fp, arch, fam, &mut rng);
+                let errs = m.validate(&wls[0].fp.dims, &arch.array);
+                assert!(errs.is_empty(), "{fam:?}: {errs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_monotone() {
+        let (pool, wls, cfg) = setup();
+        let dse = DseConfig { random_samples: 5, ..Default::default() };
+        let res = explore(&pool, &wls, &cfg, &dse);
+        let front = res.pareto();
+        assert!(!front.is_empty());
+        for pair in front.windows(2) {
+            assert!(pair[1].overall_j >= pair[0].overall_j);
+            assert!(pair[1].cycles < pair[0].cycles);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let (pool, wls, cfg) = setup();
+        let mk = |threads| {
+            let dse = DseConfig { random_samples: 2, threads, ..Default::default() };
+            explore(&pool, &wls, &cfg, &dse)
+                .candidates
+                .iter()
+                .map(|c| (c.dataflow.clone(), c.overall_j))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(mk(1), mk(4));
+    }
+
+    #[test]
+    fn energy_interval_brackets_best() {
+        let (pool, wls, cfg) = setup();
+        let res = explore(&pool, &wls, &cfg, &DseConfig::default());
+        let (lo, hi) = res.energy_interval().unwrap();
+        assert!(lo <= res.best().unwrap().overall_j);
+        assert!(hi >= lo);
+    }
+}

@@ -1,0 +1,38 @@
+//! # EOCAS — Energy-Oriented Computing Architecture Simulator for SNN training
+//!
+//! Reproduction of *"EOCAS: Energy-Oriented Computing Architecture
+//! Simulator for SNN Training"* (Ma et al., 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the simulator: workload generation from deep-SNN
+//!   models ([`workload`]), the architecture pool ([`arch`]), dataflow
+//!   loop-nest templates ([`dataflow`]), reuse-factor analysis ([`reuse`]),
+//!   the energy model ([`energy`]), performance/resource models
+//!   ([`perfmodel`]), design-space exploration ([`dse`]), and the training
+//!   orchestrator ([`trainer`]) that measures real spike sparsity through
+//!   the PJRT runtime ([`runtime`]).
+//! * **L2/L1 (build time)** — `python/compile/` lowers the JAX SNN training
+//!   step (with Pallas spike-convolution and LIF kernels) to HLO text
+//!   artifacts that [`runtime`] loads; Python never runs at simulation or
+//!   serving time.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod arch;
+pub mod compare;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dse;
+pub mod energy;
+pub mod model;
+pub mod perfmodel;
+pub mod report;
+pub mod reuse;
+pub mod runtime;
+pub mod sim;
+pub mod sparsity;
+pub mod trainer;
+pub mod util;
+pub mod workload;

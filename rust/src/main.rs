@@ -1,0 +1,297 @@
+//! `eocas` — CLI for the EOCAS simulator.
+//!
+//! Subcommands
+//! -----------
+//! * `report <name>`   regenerate a paper table/figure (or `all`)
+//! * `simulate`        evaluate one model × architecture × dataflow
+//! * `dse`             explore the design space, print optimum + Pareto
+//! * `train`           run SNN BPTT through PJRT, write the run log
+//! * `pipeline`        end-to-end: train → measured sparsity → DSE → reports
+//!
+//! (Arg parsing is hand-rolled: no clap in the offline vendor set.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use eocas::arch::ArchPool;
+use eocas::config::EnergyConfig;
+use eocas::coordinator::{self, PipelineConfig};
+use eocas::dataflow::templates::Family;
+use eocas::dse::{self, DseConfig};
+use eocas::energy::model_energy_for_family;
+use eocas::model::SnnModel;
+use eocas::report::{self, ReportCtx};
+use eocas::runtime::Runtime;
+use eocas::sparsity::SparsityProfile;
+use eocas::trainer::{Trainer, TrainerConfig};
+use eocas::workload::generate;
+
+const USAGE: &str = "\
+eocas — Energy-Oriented Computing Architecture Simulator for SNN training
+
+USAGE:
+  eocas report <workload|table1|table3|table4|table5|table6|table7|fig5|fig6|all>
+               [--out DIR] [--model paper|cifar100|tiny] [--sparsity PATH]
+  eocas simulate [--model paper|cifar100|tiny] [--dataflow advws|ws1|ws2|os|rs]
+                 [--activity X] [--config PATH]
+  eocas dse      [--samples N] [--threads N] [--model ...]
+  eocas train    [--steps N] [--lr X] [--seed N] [--log PATH]
+  eocas pipeline [--steps N] [--out DIR] [--reuse]
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Split `args` into positionals and `--key value` flags
+/// (`--flag` followed by another flag or end counts as boolean "true").
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let has_val = i + 1 < args.len() && !args[i + 1].starts_with("--");
+            if has_val {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn pick_model(flags: &HashMap<String, String>) -> anyhow::Result<SnnModel> {
+    match flags.get("model").map(|s| s.as_str()).unwrap_or("paper") {
+        "paper" => Ok(SnnModel::paper_layer()),
+        "cifar100" => Ok(SnnModel::cifar100_snn()),
+        "tiny" => Ok(coordinator::trained_model()),
+        other => anyhow::bail!("unknown model `{other}` (paper|cifar100|tiny)"),
+    }
+}
+
+fn pick_family(name: &str) -> anyhow::Result<Family> {
+    Ok(match name.to_lowercase().as_str() {
+        "advws" | "advanced" | "advanced-ws" => Family::AdvWs,
+        "ws1" => Family::Ws1,
+        "ws2" => Family::Ws2,
+        "os" => Family::Os,
+        "rs" => Family::Rs,
+        other => anyhow::bail!("unknown dataflow `{other}`"),
+    })
+}
+
+fn energy_config(flags: &HashMap<String, String>) -> anyhow::Result<EnergyConfig> {
+    match flags.get("config") {
+        Some(p) => EnergyConfig::load(std::path::Path::new(p))
+            .map_err(|e| anyhow::anyhow!("config: {e}")),
+        None => Ok(EnergyConfig::default()),
+    }
+}
+
+fn report_ctx(flags: &HashMap<String, String>) -> anyhow::Result<ReportCtx> {
+    let cfg = energy_config(flags)?;
+    let model = pick_model(flags)?;
+    let n_layers = model.shaped_layers().map(|l| l.len()).unwrap_or(1);
+    let sparsity = match flags.get("sparsity") {
+        Some(p) => SparsityProfile::load(std::path::Path::new(p))
+            .map_err(|e| anyhow::anyhow!("sparsity: {e}"))?,
+        None => SparsityProfile::nominal(n_layers, cfg.nominal_activity),
+    };
+    Ok(ReportCtx::with_model(model, sparsity, cfg))
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let (pos, flags) = parse_flags(args);
+    let cmd = pos.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "help" | "-h" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "report" => {
+            let what = pos.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let ctx = report_ctx(&flags)?;
+            match what {
+                "workload" => print!("{}", report::workload_table(&ctx).render()),
+                "table1" => print!("{}", report::table1_reuse_factors(&ctx).render()),
+                "table3" => print!("{}", report::table3_array_schemes(&ctx).render()),
+                "table4" => print!("{}", report::table4_dataflow_energy(&ctx).render()),
+                "table5" => print!("{}", report::table5_compute_energy(&ctx).render()),
+                "table6" | "table7-fpga" => print!("{}", report::table6_fpga(&ctx).render()),
+                "table7" | "table7-asic" => print!("{}", report::table7_asic(&ctx).render()),
+                "fig5" => {
+                    let (t, txt) = report::fig5_energy_intervals(&ctx, 4);
+                    println!("{txt}");
+                    print!("{}", t.render());
+                }
+                "fig6" => print!("{}", report::fig6_dataflow_breakdown(&ctx)),
+                "all" => {
+                    let out =
+                        PathBuf::from(flags.get("out").cloned().unwrap_or("reports".into()));
+                    let files = report::write_all(&ctx, &out)?;
+                    println!("wrote {} report files under {}", files.len(), out.display());
+                    print!("{}", report::table4_dataflow_energy(&ctx).render());
+                }
+                other => anyhow::bail!("unknown report `{other}`"),
+            }
+            Ok(())
+        }
+        "simulate" => {
+            let cfg = energy_config(&flags)?;
+            let model = pick_model(&flags)?;
+            let fam = pick_family(flags.get("dataflow").map(|s| s.as_str()).unwrap_or("advws"))?;
+            let activity: f64 = flags
+                .get("activity")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(cfg.nominal_activity);
+            let wls = generate(&model, &[], activity).map_err(|e| anyhow::anyhow!(e))?;
+            let arch = eocas::arch::Architecture::paper_default();
+            let layers = model_energy_for_family(&wls, fam, &arch, &cfg);
+            println!("{model}");
+            println!("architecture: {}   dataflow: {}", arch.label(), fam.name());
+            let mut total = 0.0;
+            for le in &layers {
+                println!(
+                    "  layer {:>2}: FP {:>9.3} uJ  BP {:>9.3} uJ  WG {:>9.3} uJ  overall {:>9.3} uJ",
+                    le.layer,
+                    le.fp_total_j() * 1e6,
+                    le.bp_total_j() * 1e6,
+                    le.wg_total_j() * 1e6,
+                    le.overall_j() * 1e6
+                );
+                total += le.overall_j();
+            }
+            println!("total: {:.3} uJ over {} layers", total * 1e6, layers.len());
+            let metrics = eocas::perfmodel::chip_metrics(
+                &layers,
+                &arch,
+                &cfg,
+                &eocas::perfmodel::AreaModel::default(),
+            );
+            println!(
+                "power {:.3} W | peak {:.3} TOPS | {:.2} TOPS/W | area {:.2} mm2 | util {:.0}%",
+                metrics.power_w,
+                metrics.peak_tops,
+                metrics.tops_per_w,
+                metrics.area_mm2,
+                metrics.utilization * 100.0
+            );
+            Ok(())
+        }
+        "dse" => {
+            let cfg = energy_config(&flags)?;
+            let model = pick_model(&flags)?;
+            let wls = generate(&model, &[], cfg.nominal_activity)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let dse_cfg = DseConfig {
+                random_samples: flags
+                    .get("samples")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(0),
+                threads: flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(0),
+                ..Default::default()
+            };
+            let pool = ArchPool::paper_pool();
+            let start = std::time::Instant::now();
+            let res = dse::explore(&pool, &wls, &cfg, &dse_cfg);
+            let dt = start.elapsed();
+            println!(
+                "explored {} candidates in {:.1} ms ({:.0} evals/s)",
+                res.evaluations,
+                dt.as_secs_f64() * 1e3,
+                res.evaluations as f64 / dt.as_secs_f64()
+            );
+            let best = res.best().unwrap();
+            println!(
+                "optimum: {} + {} @ {:.3} uJ",
+                best.arch.array.label(),
+                best.dataflow,
+                best.overall_j * 1e6
+            );
+            println!("pareto front (energy vs cycles):");
+            for c in res.pareto() {
+                println!(
+                    "  {:>7} {:<12} {:>12.3} uJ {:>12} cycles",
+                    c.arch.array.label(),
+                    c.dataflow,
+                    c.overall_j * 1e6,
+                    c.cycles
+                );
+            }
+            Ok(())
+        }
+        "train" => {
+            let tcfg = TrainerConfig {
+                steps: flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(300),
+                lr: flags.get("lr").map(|s| s.parse()).transpose()?.unwrap_or(0.1),
+                seed: flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42),
+                log_every: flags.get("log-every").map(|s| s.parse()).transpose()?.unwrap_or(25),
+            };
+            let rt = Runtime::cpu()?;
+            let mut trainer = Trainer::new(&rt, tcfg.seed)?;
+            println!(
+                "training tiny-snn: B={} T={} classes={} on {}",
+                trainer.spec.batch,
+                trainer.spec.timesteps,
+                trainer.spec.classes,
+                rt.platform()
+            );
+            let log = trainer.train(&tcfg)?;
+            let path = PathBuf::from(
+                flags.get("log").cloned().unwrap_or("reports/train_run.json".into()),
+            );
+            log.save(&path)?;
+            println!(
+                "done: loss {:.4} -> {:.4}, firing rates {:?}, acc {:.2}, {:.1}s -> {}",
+                log.losses.first().unwrap_or(&f64::NAN),
+                log.losses.last().unwrap_or(&f64::NAN),
+                log.firing_rates,
+                log.train_accuracy,
+                log.wall_secs,
+                path.display()
+            );
+            Ok(())
+        }
+        "pipeline" => {
+            let cfg = PipelineConfig {
+                trainer: TrainerConfig {
+                    steps: flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(200),
+                    ..Default::default()
+                },
+                out_dir: PathBuf::from(flags.get("out").cloned().unwrap_or("reports".into())),
+                reuse_run_log: flags.contains_key("reuse"),
+                ..Default::default()
+            };
+            let outcome = coordinator::run(&cfg)?;
+            println!(
+                "pipeline complete: optimum {} + {} @ {:.3} uJ; {} reports",
+                outcome.best_arch,
+                outcome.best_dataflow,
+                outcome.best_energy_j * 1e6,
+                outcome.report_files.len()
+            );
+            Ok(())
+        }
+        other => {
+            eprint!("{USAGE}");
+            anyhow::bail!("unknown command `{other}`")
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! Deep-SNN model descriptions (§II-A of the paper).
+//!
+//! An [`SnnModel`] is the simulator-side description of the network being
+//! trained: layer shapes, kernel sizes, timesteps `T` and batch `B`. Shape
+//! inference walks the layer list so downstream modules (workload
+//! generation, energy assessment) always see consistent `H/W/C/M/P/Q/R/S`
+//! values. Presets cover the paper's representative CIFAR-100 layer
+//! (Fig. 4) and two full networks used by the examples and the trainer.
+
+use std::fmt;
+
+/// One layer of a deep SNN. Only shapes matter to the simulator; weights
+/// live in the JAX artifacts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// 2-D spike convolution followed by a LIF soma.
+    Conv {
+        out_channels: u32,
+        kernel: u32,
+        stride: u32,
+        padding: u32,
+    },
+    /// 2×2 average pooling (halves the feature map; negligible energy,
+    /// tracked for shape inference and soma counts only).
+    AvgPool2,
+    /// Fully connected classifier head followed by a LIF soma; modelled as
+    /// a 1×1 convolution over a 1×1 feature map for workload purposes.
+    Linear { out_features: u32 },
+}
+
+/// A layer with inferred input/output shapes attached.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapedLayer {
+    pub index: usize,
+    pub spec: LayerSpec,
+    /// Input feature map: channels, height, width.
+    pub in_c: u32,
+    pub in_h: u32,
+    pub in_w: u32,
+    /// Output feature map: channels, height, width.
+    pub out_c: u32,
+    pub out_h: u32,
+    pub out_w: u32,
+}
+
+impl ShapedLayer {
+    /// Does this layer carry a convolution workload (Conv or Linear)?
+    pub fn is_compute(&self) -> bool {
+        !matches!(self.spec, LayerSpec::AvgPool2)
+    }
+
+    /// Kernel height/width (R = S in this repo, matching the paper).
+    pub fn kernel(&self) -> u32 {
+        match self.spec {
+            LayerSpec::Conv { kernel, .. } => kernel,
+            LayerSpec::Linear { .. } => 1,
+            LayerSpec::AvgPool2 => 0,
+        }
+    }
+
+    /// Number of weight parameters in this layer.
+    pub fn param_count(&self) -> u64 {
+        if !self.is_compute() {
+            return 0;
+        }
+        let k = self.kernel() as u64;
+        self.in_c as u64 * self.out_c as u64 * k * k
+    }
+
+    /// Neurons in the output feature map (soma count per timestep, per
+    /// batch element).
+    pub fn neuron_count(&self) -> u64 {
+        self.out_c as u64 * self.out_h as u64 * self.out_w as u64
+    }
+}
+
+/// A complete SNN training task description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnnModel {
+    pub name: String,
+    /// Input image: channels, height, width.
+    pub input: (u32, u32, u32),
+    pub layers: Vec<LayerSpec>,
+    /// LIF timesteps per sample.
+    pub timesteps: u32,
+    /// Training batch size.
+    pub batch: u32,
+}
+
+impl SnnModel {
+    /// Run shape inference over the layer list.
+    ///
+    /// Panics are avoided: malformed models (zero dims, pooling below 2×2)
+    /// return an error naming the offending layer.
+    pub fn shaped_layers(&self) -> Result<Vec<ShapedLayer>, String> {
+        let (mut c, mut h, mut w) = self.input;
+        if c == 0 || h == 0 || w == 0 {
+            return Err(format!("model {}: zero input dims", self.name));
+        }
+        let mut out = Vec::with_capacity(self.layers.len());
+        for (index, spec) in self.layers.iter().enumerate() {
+            let (in_c, in_h, in_w) = (c, h, w);
+            let (out_c, out_h, out_w) = match *spec {
+                LayerSpec::Conv { out_channels, kernel, stride, padding } => {
+                    if kernel == 0 || stride == 0 || out_channels == 0 {
+                        return Err(format!("layer {index}: zero conv parameter"));
+                    }
+                    let eff_h = in_h + 2 * padding;
+                    let eff_w = in_w + 2 * padding;
+                    if eff_h < kernel || eff_w < kernel {
+                        return Err(format!(
+                            "layer {index}: kernel {kernel} larger than padded input {eff_h}x{eff_w}"
+                        ));
+                    }
+                    (
+                        out_channels,
+                        (eff_h - kernel) / stride + 1,
+                        (eff_w - kernel) / stride + 1,
+                    )
+                }
+                LayerSpec::AvgPool2 => {
+                    if in_h < 2 || in_w < 2 {
+                        return Err(format!("layer {index}: pooling below 2x2 input"));
+                    }
+                    (in_c, in_h / 2, in_w / 2)
+                }
+                LayerSpec::Linear { out_features } => {
+                    if out_features == 0 {
+                        return Err(format!("layer {index}: zero linear width"));
+                    }
+                    // Flatten: treat the whole incoming fm as channels of a
+                    // 1x1 map so the conv-workload machinery applies.
+                    (out_features, 1, 1)
+                }
+            };
+            let shaped = ShapedLayer {
+                index,
+                spec: spec.clone(),
+                in_c: if matches!(spec, LayerSpec::Linear { .. }) { in_c * in_h * in_w } else { in_c },
+                in_h: if matches!(spec, LayerSpec::Linear { .. }) { 1 } else { in_h },
+                in_w: if matches!(spec, LayerSpec::Linear { .. }) { 1 } else { in_w },
+                out_c,
+                out_h,
+                out_w,
+            };
+            out.push(shaped);
+            c = out_c;
+            h = out_h;
+            w = out_w;
+        }
+        Ok(out)
+    }
+
+    /// Total trainable parameters.
+    pub fn param_count(&self) -> u64 {
+        self.shaped_layers().map(|ls| ls.iter().map(|l| l.param_count()).sum()).unwrap_or(0)
+    }
+
+    /// Total neurons (sum over compute layers' output maps).
+    pub fn neuron_count(&self) -> u64 {
+        self.shaped_layers()
+            .map(|ls| ls.iter().filter(|l| l.is_compute()).map(|l| l.neuron_count()).sum())
+            .unwrap_or(0)
+    }
+
+    // ------------------------------------------------------------------
+    // Presets
+    // ------------------------------------------------------------------
+
+    /// The paper's representative layer (Fig. 4): P/Q=32, R/S=3, M=C=32,
+    /// T=6, N=1, padding=1, stride=1 on a 32×32 feature map.
+    pub fn paper_layer() -> SnnModel {
+        SnnModel {
+            name: "paper-fig4-layer".into(),
+            input: (32, 32, 32),
+            layers: vec![LayerSpec::Conv { out_channels: 32, kernel: 3, stride: 1, padding: 1 }],
+            timesteps: 6,
+            batch: 1,
+        }
+    }
+
+    /// A CIFAR-100-class deep SNN (VGG-ish): the full-network workload used
+    /// by multi-layer sweeps and the paper's "deep SNN training" setting.
+    pub fn cifar100_snn() -> SnnModel {
+        SnnModel {
+            name: "cifar100-snn".into(),
+            input: (3, 32, 32),
+            layers: vec![
+                LayerSpec::Conv { out_channels: 32, kernel: 3, stride: 1, padding: 1 },
+                LayerSpec::Conv { out_channels: 32, kernel: 3, stride: 1, padding: 1 },
+                LayerSpec::AvgPool2,
+                LayerSpec::Conv { out_channels: 64, kernel: 3, stride: 1, padding: 1 },
+                LayerSpec::Conv { out_channels: 64, kernel: 3, stride: 1, padding: 1 },
+                LayerSpec::AvgPool2,
+                LayerSpec::Conv { out_channels: 128, kernel: 3, stride: 1, padding: 1 },
+                LayerSpec::AvgPool2,
+                LayerSpec::Linear { out_features: 100 },
+            ],
+            timesteps: 6,
+            batch: 1,
+        }
+    }
+
+    /// The small SNN actually trained end-to-end by `examples/train_snn`
+    /// (compact enough to BPTT on the CPU PJRT backend in seconds/step).
+    pub fn tiny_snn(batch: u32, timesteps: u32, classes: u32) -> SnnModel {
+        SnnModel {
+            name: "tiny-snn".into(),
+            input: (3, 16, 16),
+            layers: vec![
+                LayerSpec::Conv { out_channels: 16, kernel: 3, stride: 1, padding: 1 },
+                LayerSpec::AvgPool2,
+                LayerSpec::Conv { out_channels: 32, kernel: 3, stride: 1, padding: 1 },
+                LayerSpec::AvgPool2,
+                LayerSpec::Linear { out_features: classes },
+            ],
+            timesteps,
+            batch,
+        }
+    }
+}
+
+impl fmt::Display for SnnModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{} (T={}, B={}, input {}x{}x{}, {} params, {} neurons)",
+            self.name,
+            self.timesteps,
+            self.batch,
+            self.input.0,
+            self.input.1,
+            self.input.2,
+            self.param_count(),
+            self.neuron_count()
+        )?;
+        if let Ok(layers) = self.shaped_layers() {
+            for l in &layers {
+                writeln!(
+                    f,
+                    "  [{:>2}] {:<28} {:>3}x{:>2}x{:>2} -> {:>3}x{:>2}x{:>2}",
+                    l.index,
+                    format!("{:?}", l.spec),
+                    l.in_c,
+                    l.in_h,
+                    l.in_w,
+                    l.out_c,
+                    l.out_h,
+                    l.out_w
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_layer_shapes_match_fig4() {
+        let m = SnnModel::paper_layer();
+        let ls = m.shaped_layers().unwrap();
+        assert_eq!(ls.len(), 1);
+        let l = &ls[0];
+        assert_eq!((l.in_c, l.in_h, l.in_w), (32, 32, 32));
+        assert_eq!((l.out_c, l.out_h, l.out_w), (32, 32, 32));
+        assert_eq!(l.kernel(), 3);
+        assert_eq!(l.param_count(), 32 * 32 * 9);
+        assert_eq!(l.neuron_count(), 32 * 32 * 32);
+    }
+
+    #[test]
+    fn cifar_model_shape_chain() {
+        let m = SnnModel::cifar100_snn();
+        let ls = m.shaped_layers().unwrap();
+        // After three 2x2 pools from 32x32: 4x4 fm into the linear layer.
+        let linear = ls.last().unwrap();
+        assert_eq!(linear.in_c, 128 * 4 * 4);
+        assert_eq!((linear.out_c, linear.out_h, linear.out_w), (100, 1, 1));
+        assert!(m.param_count() > 100_000);
+    }
+
+    #[test]
+    fn pooling_halves() {
+        let m = SnnModel::tiny_snn(4, 4, 10);
+        let ls = m.shaped_layers().unwrap();
+        assert_eq!(ls[1].out_h, 8);
+        assert_eq!(ls[3].out_h, 4);
+    }
+
+    #[test]
+    fn invalid_models_error() {
+        let bad = SnnModel {
+            name: "bad".into(),
+            input: (3, 2, 2),
+            layers: vec![LayerSpec::Conv { out_channels: 8, kernel: 5, stride: 1, padding: 0 }],
+            timesteps: 1,
+            batch: 1,
+        };
+        assert!(bad.shaped_layers().is_err());
+        let zero = SnnModel { name: "z".into(), input: (0, 1, 1), layers: vec![], timesteps: 1, batch: 1 };
+        assert!(zero.shaped_layers().is_err());
+    }
+
+    #[test]
+    fn stride_two_conv() {
+        let m = SnnModel {
+            name: "s2".into(),
+            input: (3, 32, 32),
+            layers: vec![LayerSpec::Conv { out_channels: 8, kernel: 3, stride: 2, padding: 1 }],
+            timesteps: 2,
+            batch: 1,
+        };
+        let ls = m.shaped_layers().unwrap();
+        assert_eq!((ls[0].out_h, ls[0].out_w), (16, 16));
+    }
+}

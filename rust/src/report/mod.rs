@@ -1,0 +1,474 @@
+//! Report generation: regenerates every table and figure of the paper's
+//! evaluation (§IV) from the simulator's own numbers.
+//!
+//! Each `table*`/`fig*` function returns a rendered [`Table`] (ASCII +
+//! CSV); [`write_all`] dumps the full set under `reports/`. The bench
+//! harnesses print the same rows, so `cargo bench` output and CLI output
+//! always agree.
+
+use std::path::Path;
+
+use crate::arch::{ArchPool, Architecture, ArrayScheme};
+use crate::compare;
+use crate::config::EnergyConfig;
+use crate::dataflow::templates::{self, Family};
+use crate::dse::{self, DseConfig};
+use crate::energy::{layer_energy_for_family, model_energy_for_family};
+use crate::model::SnnModel;
+use crate::perfmodel::{chip_metrics, AreaModel, FpgaModel};
+use crate::sparsity::SparsityProfile;
+use crate::util::table::{bar_chart, fmt_f, fmt_uj, Align, Table};
+use crate::workload::{generate, LayerWorkload};
+
+/// Everything needed to produce the paper's experiment set.
+pub struct ReportCtx {
+    pub model: SnnModel,
+    pub workloads: Vec<LayerWorkload>,
+    pub arch: Architecture,
+    pub cfg: EnergyConfig,
+    pub sparsity: SparsityProfile,
+}
+
+impl ReportCtx {
+    /// The paper's experimental setting: Fig. 4 layer, 16×16 array,
+    /// 2.03 MB pool, nominal activity.
+    pub fn paper_default() -> ReportCtx {
+        let cfg = EnergyConfig::default();
+        let model = SnnModel::paper_layer();
+        let sparsity = SparsityProfile::nominal(1, cfg.nominal_activity);
+        let workloads = generate(&model, &sparsity.per_layer, cfg.nominal_activity).unwrap();
+        ReportCtx { model, workloads, arch: Architecture::paper_default(), cfg, sparsity }
+    }
+
+    /// Same reports for an arbitrary model + measured sparsity.
+    pub fn with_model(model: SnnModel, sparsity: SparsityProfile, cfg: EnergyConfig) -> ReportCtx {
+        let workloads = generate(&model, &sparsity.per_layer, cfg.nominal_activity).unwrap();
+        ReportCtx { model, workloads, arch: Architecture::paper_default(), cfg, sparsity }
+    }
+}
+
+/// Fig. 4-style workload summary (layers, dims, op counts, activity).
+pub fn workload_table(ctx: &ReportCtx) -> Table {
+    let mut t = Table::new(
+        format!("Workload: {} (Fig. 4 parameters per layer)", ctx.model.name),
+        &["layer", "phase", "N", "T", "M", "C", "P", "Q", "R", "S", "ops(M)", "Spar"],
+    );
+    for wl in &ctx.workloads {
+        for w in wl.convs() {
+            let d = &w.dims;
+            t.add_row(vec![
+                wl.layer.to_string(),
+                w.phase.name().into(),
+                d.sizes[0].to_string(),
+                d.sizes[1].to_string(),
+                d.sizes[2].to_string(),
+                d.sizes[3].to_string(),
+                d.sizes[4].to_string(),
+                d.sizes[5].to_string(),
+                d.sizes[6].to_string(),
+                d.sizes[7].to_string(),
+                fmt_f(d.total() as f64 / 1e6, 1),
+                fmt_f(w.activity, 2),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table I: reuse factors of the optimal (Advanced WS) mapping.
+pub fn table1_reuse_factors(ctx: &ReportCtx) -> Table {
+    let wl = &ctx.workloads[0];
+    let m_fp = templates::generate(Family::AdvWs, &wl.fp, &ctx.arch);
+    let m_bp = templates::generate(Family::AdvWs, &wl.bp, &ctx.arch);
+    let m_wg = templates::generate(Family::AdvWs, &wl.wg, &ctx.arch);
+    let rus = crate::reuse::ru_table(&wl.fp, &wl.bp, &wl.wg, &m_fp, &m_bp, &m_wg);
+    let names = [
+        "s^{l-1}", "w^{l-1}", "ConvFP", "du^{l+1}", "w'^l", "ConvBP", "s^l", "du^l", "dw^l",
+    ];
+    let mut t = Table::new(
+        "Table I: reuse factors (Advanced WS on the Fig. 4 layer)",
+        &["variable", "RU(reg)", "RU(sram)"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right]);
+    for (i, name) in names.iter().enumerate() {
+        t.add_row(vec![
+            format!("RU{}/RU{} {}", 2 * i + 1, 2 * i + 2, name),
+            fmt_f(rus[2 * i], 1),
+            fmt_f(rus[2 * i + 1], 1),
+        ]);
+    }
+    t
+}
+
+/// Table III: conv energy across array schemes at fixed 256 MACs / 2.03 MB.
+pub fn table3_array_schemes(ctx: &ReportCtx) -> Table {
+    let mut rows: Vec<(String, f64, f64)> = ArrayScheme::paper_candidates()
+        .into_iter()
+        .map(|s| {
+            let arch = Architecture::with_array(s);
+            let layers =
+                model_energy_for_family(&ctx.workloads, Family::AdvWs, &arch, &ctx.cfg);
+            let conv: f64 = layers.iter().map(|l| l.conv_mem_j()).sum();
+            let overall: f64 = layers.iter().map(|l| l.overall_j()).sum();
+            (s.label(), conv, overall)
+        })
+        .collect();
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut t = Table::new(
+        "Table III: conv read/write energy vs MAC array scheme (256 MACs, 2.03 MB SRAM)",
+        &["case", "SRAM", "MACs", "scheme", "conv mem energy (uJ)", "overall (uJ)"],
+    )
+    .aligns(&[Align::Right, Align::Left, Align::Right, Align::Left, Align::Right, Align::Right]);
+    for (i, (label, conv, overall)) in rows.iter().enumerate() {
+        t.add_row(vec![
+            (i + 1).to_string(),
+            crate::util::fmt_bytes(ctx.arch.mem.total_bytes()),
+            "256".into(),
+            label.clone(),
+            fmt_uj(*conv),
+            fmt_uj(*overall),
+        ]);
+    }
+    t
+}
+
+/// Table IV: overall energy of the five dataflows, split by phase.
+pub fn table4_dataflow_energy(ctx: &ReportCtx) -> Table {
+    let mut t = Table::new(
+        "Table IV: overall energy of dataflows (uJ; computation + memory access)",
+        &[
+            "dataflow", "spike conv", "soma", "FP total", "fp conv", "grad", "BP total",
+            "WG total", "Overall",
+        ],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for fam in Family::ALL {
+        let layers = model_energy_for_family(&ctx.workloads, fam, &ctx.arch, &ctx.cfg);
+        let sum = |f: &dyn Fn(&crate::energy::LayerEnergy) -> f64| -> f64 {
+            layers.iter().map(|l| f(l)).sum()
+        };
+        t.add_row(vec![
+            fam.name().into(),
+            fmt_uj(sum(&|l| l.fp.total_j())),
+            fmt_uj(sum(&|l| l.units.soma_j())),
+            fmt_uj(sum(&|l| l.fp_total_j())),
+            fmt_uj(sum(&|l| l.bp.total_j())),
+            fmt_uj(sum(&|l| l.units.grad_j())),
+            fmt_uj(sum(&|l| l.bp_total_j())),
+            fmt_uj(sum(&|l| l.wg_total_j())),
+            fmt_uj(sum(&|l| l.overall_j())),
+        ]);
+    }
+    t
+}
+
+/// Table V: compute-only energy of the five dataflows.
+pub fn table5_compute_energy(ctx: &ReportCtx) -> Table {
+    let mut t = Table::new(
+        "Table V: computation energy of dataflows (uJ)",
+        &["dataflow", "spike conv", "soma", "FP", "fp conv", "grad", "BP", "WG", "Overall"],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for fam in Family::ALL {
+        let layers = model_energy_for_family(&ctx.workloads, fam, &ctx.arch, &ctx.cfg);
+        let sum = |f: &dyn Fn(&crate::energy::LayerEnergy) -> f64| -> f64 {
+            layers.iter().map(|l| f(l)).sum()
+        };
+        let fp_c = sum(&|l| l.fp.compute_j);
+        let soma_c = sum(&|l| l.units.soma_compute_j);
+        let bp_c = sum(&|l| l.bp.compute_j);
+        let grad_c = sum(&|l| l.units.grad_compute_j);
+        let wg_c = sum(&|l| l.wg.compute_j);
+        t.add_row(vec![
+            fam.name().into(),
+            fmt_uj(fp_c),
+            fmt_uj(soma_c),
+            fmt_uj(fp_c + soma_c),
+            fmt_uj(bp_c),
+            fmt_uj(grad_c),
+            fmt_uj(bp_c + grad_c),
+            fmt_uj(wg_c),
+            fmt_uj(fp_c + soma_c + bp_c + grad_c + wg_c),
+        ]);
+    }
+    t
+}
+
+/// Table VI: FPGA comparison.
+pub fn table6_fpga(ctx: &ReportCtx) -> Table {
+    let fmt_opt_u = |v: Option<u64>| v.map(|x| format!("{}K", x / 1000)).unwrap_or("-".into());
+    let fmt_opt_f =
+        |v: Option<f64>, d: usize| v.map(|x| fmt_f(x, d)).unwrap_or("-".into());
+    let mut t = Table::new(
+        "Table VI: comparison among SOTA FPGA designs",
+        &["design", "device", "network", "training", "LUTs", "FF", "DSP", "Mem(MB)", "Freq(MHz)"],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let ours = compare::our_fpga_row(&ctx.arch, &FpgaModel::default(), ctx.cfg.clock_hz / 1e6);
+    for r in std::iter::once(ours).chain(compare::fpga_literature()) {
+        t.add_row(vec![
+            r.name.into(),
+            r.device.into(),
+            r.network.into(),
+            if r.training { "Able" } else { "Unable" }.into(),
+            fmt_opt_u(r.luts),
+            fmt_opt_u(r.ffs),
+            r.dsps.map(|d| d.to_string()).unwrap_or("-".into()),
+            fmt_opt_f(r.memory_mb, 2),
+            fmt_f(r.freq_mhz, 0),
+        ]);
+    }
+    t
+}
+
+/// Table VII: ASIC comparison ("This work" derived from the perf model).
+pub fn table7_asic(ctx: &ReportCtx) -> Table {
+    let layers = model_energy_for_family(&ctx.workloads, Family::AdvWs, &ctx.arch, &ctx.cfg);
+    let metrics = chip_metrics(&layers, &ctx.arch, &ctx.cfg, &AreaModel::default());
+    let ours = compare::our_asic_row(&metrics);
+    let fmt_opt = |v: Option<f64>, d: usize| v.map(|x| fmt_f(x, d)).unwrap_or("-".into());
+    let mut t = Table::new(
+        "Table VII: comparison among SOTA ASIC designs",
+        &[
+            "design", "process", "network", "training", "precision", "Mem(MB)", "TOPS",
+            "Area(mm2)", "Power(W)", "TOPS/W",
+        ],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Left,
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for r in std::iter::once(ours).chain(compare::asic_literature()) {
+        t.add_row(vec![
+            r.name.into(),
+            format!("{}nm", r.process_nm),
+            r.network.into(),
+            if r.training { "Able" } else { "Unable" }.into(),
+            r.weight_precision.into(),
+            fmt_opt(r.memory_mb, 2),
+            fmt_opt(r.throughput_tops, 3),
+            fmt_opt(r.area_mm2, 2),
+            fmt_opt(r.power_w, 3),
+            fmt_opt(r.tops_per_w, 2),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5: candidate architectures spread over energy intervals.
+/// Returns (table of all candidates, histogram text).
+pub fn fig5_energy_intervals(ctx: &ReportCtx, samples: usize) -> (Table, String) {
+    let pool = ArchPool::paper_pool();
+    let dse_cfg = DseConfig { random_samples: samples, ..Default::default() };
+    let res = dse::explore(&pool, &ctx.workloads, &ctx.cfg, &dse_cfg);
+    let mut t = Table::new(
+        "Fig. 5: candidate architectures across energy intervals",
+        &["scheme", "dataflow", "overall (uJ)", "conv mem (uJ)", "cycles"],
+    )
+    .aligns(&[Align::Left, Align::Left, Align::Right, Align::Right, Align::Right]);
+    for c in &res.candidates {
+        t.add_row(vec![
+            c.arch.array.label(),
+            c.dataflow.clone(),
+            fmt_uj(c.overall_j),
+            fmt_uj(c.conv_mem_j),
+            c.cycles.to_string(),
+        ]);
+    }
+    let energies: Vec<f64> = res.candidates.iter().map(|c| c.overall_j * 1e6).collect();
+    let (lo, hi) = crate::util::stats::min_max(&energies).unwrap();
+    let hist = crate::util::stats::histogram(&energies, lo, hi + 1e-9, 8);
+    let mut txt = format!(
+        "Fig. 5: {} candidates, energy interval [{:.1}, {:.1}] uJ, optimum = {} + {}\n",
+        res.evaluations,
+        lo,
+        hi,
+        res.best().unwrap().arch.array.label(),
+        res.best().unwrap().dataflow,
+    );
+    let bin_w = (hi - lo) / 8.0;
+    let items: Vec<(String, f64)> = hist
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            (format!("[{:>6.0},{:>6.0})uJ", lo + i as f64 * bin_w, lo + (i + 1) as f64 * bin_w), n as f64 * 1e-6)
+        })
+        .collect();
+    txt.push_str(&bar_chart("candidates per energy bin", &items, 40));
+    (t, txt)
+}
+
+/// Fig. 6: dataflow loop nests + energy breakdown at the 16×16 scheme.
+pub fn fig6_dataflow_breakdown(ctx: &ReportCtx) -> String {
+    let wl = &ctx.workloads[0];
+    let mut out = String::new();
+    out.push_str("Fig. 6: dataflows and the energy breakdown of convolutions (16x16 MACs)\n\n");
+    for fam in Family::ALL {
+        let le = layer_energy_for_family(wl, fam, &ctx.arch, &ctx.cfg);
+        let m_fp = templates::generate(fam, &wl.fp, &ctx.arch);
+        out.push_str(&m_fp.render_loop_nest());
+        let items: Vec<(String, f64)> = [
+            ("FP compute".to_string(), le.fp.compute_j),
+            ("FP memory".to_string(), le.fp.mem_j()),
+            ("BP compute".to_string(), le.bp.compute_j),
+            ("BP memory".to_string(), le.bp.mem_j()),
+            ("WG compute".to_string(), le.wg.compute_j),
+            ("WG memory".to_string(), le.wg.mem_j()),
+        ]
+        .to_vec();
+        out.push_str(&bar_chart(
+            &format!("{} energy breakdown (uJ)", fam.name()),
+            &items,
+            40,
+        ));
+        // Per-operand detail (reg/sram/dram split).
+        for ce in [&le.fp, &le.bp, &le.wg] {
+            for o in &ce.operands {
+                out.push_str(&format!(
+                    "    {:>3} {:<9} reg {:>9} sram {:>9} dram {:>9} (uJ)\n",
+                    ce.phase.name(),
+                    o.tensor,
+                    fmt_uj(o.reg_j),
+                    fmt_uj(o.sram_j),
+                    fmt_uj(o.dram_j),
+                ));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write every report (ASCII + CSV) under `dir`.
+pub fn write_all(ctx: &ReportCtx, dir: &Path) -> std::io::Result<Vec<std::path::PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut written = Vec::new();
+    let mut dump = |name: &str, txt: String, csv: Option<String>| -> std::io::Result<()> {
+        let p = dir.join(format!("{name}.txt"));
+        std::fs::write(&p, txt)?;
+        written.push(p);
+        if let Some(csv) = csv {
+            let p = dir.join(format!("{name}.csv"));
+            std::fs::write(&p, csv)?;
+            written.push(p);
+        }
+        Ok(())
+    };
+    let t = workload_table(ctx);
+    dump("workload", t.render(), Some(t.to_csv()))?;
+    let t = table1_reuse_factors(ctx);
+    dump("table1_reuse_factors", t.render(), Some(t.to_csv()))?;
+    let t = table3_array_schemes(ctx);
+    dump("table3_array_schemes", t.render(), Some(t.to_csv()))?;
+    let t = table4_dataflow_energy(ctx);
+    dump("table4_dataflow_energy", t.render(), Some(t.to_csv()))?;
+    let t = table5_compute_energy(ctx);
+    dump("table5_compute_energy", t.render(), Some(t.to_csv()))?;
+    let t = table6_fpga(ctx);
+    dump("table6_fpga", t.render(), Some(t.to_csv()))?;
+    let t = table7_asic(ctx);
+    dump("table7_asic", t.render(), Some(t.to_csv()))?;
+    let (t, txt) = fig5_energy_intervals(ctx, 4);
+    dump("fig5_energy_intervals", format!("{txt}\n{}", t.render()), Some(t.to_csv()))?;
+    dump("fig6_dataflow_breakdown", fig6_dataflow_breakdown(ctx), None)?;
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render() {
+        let ctx = ReportCtx::paper_default();
+        assert!(workload_table(&ctx).render().contains("FP"));
+        assert!(table1_reuse_factors(&ctx).n_rows() == 9);
+        let t3 = table3_array_schemes(&ctx);
+        assert_eq!(t3.n_rows(), 4);
+        // Best row first; must be 16x16 (Table III).
+        assert!(t3.render().lines().nth(4).unwrap().contains("16x16"));
+        assert_eq!(table4_dataflow_energy(&ctx).n_rows(), 5);
+        assert_eq!(table5_compute_energy(&ctx).n_rows(), 5);
+        assert_eq!(table6_fpga(&ctx).n_rows(), 4);
+        assert_eq!(table7_asic(&ctx).n_rows(), 4);
+    }
+
+    #[test]
+    fn fig6_contains_all_families_and_loop_nests() {
+        let ctx = ReportCtx::paper_default();
+        let txt = fig6_dataflow_breakdown(&ctx);
+        for fam in Family::ALL {
+            assert!(txt.contains(fam.name()), "{}", fam.name());
+        }
+        assert!(txt.contains("parallel-for"));
+        assert!(txt.contains("ConvFP"));
+    }
+
+    #[test]
+    fn fig5_reports_the_optimum() {
+        let ctx = ReportCtx::paper_default();
+        let (t, txt) = fig5_energy_intervals(&ctx, 2);
+        assert!(t.n_rows() >= 4 * 5);
+        assert!(txt.contains("optimum = 16x16 + Advanced WS"));
+    }
+
+    #[test]
+    fn write_all_produces_files() {
+        let ctx = ReportCtx::paper_default();
+        let dir = std::env::temp_dir().join(format!("eocas_reports_{}", std::process::id()));
+        let files = write_all(&ctx, &dir).unwrap();
+        assert!(files.len() >= 10);
+        for f in &files {
+            assert!(f.exists());
+            assert!(std::fs::metadata(f).unwrap().len() > 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_layer_ctx_renders() {
+        let cfg = EnergyConfig::default();
+        let sp = SparsityProfile::synthetic_decay(6, 0.3, 0.8);
+        let ctx = ReportCtx::with_model(SnnModel::cifar100_snn(), sp, cfg);
+        assert!(table4_dataflow_energy(&ctx).n_rows() == 5);
+        assert!(workload_table(&ctx).n_rows() >= 18);
+    }
+}

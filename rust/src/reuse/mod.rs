@@ -1,0 +1,401 @@
+//! Reuse-factor analysis (Table I; the `RU₁ … RU₁₈` of eqs. 20–22).
+//!
+//! For each convolution operand, the number of accesses a mapping induces
+//! at each storage level is `scheduled_total / RU(level)`, where the reuse
+//! factor `RU` is the product of the extents of loops *irrelevant* to that
+//! operand that iterate strictly below the level boundary — plus the
+//! spatial multicast / adder-tree-reduction factors of irrelevant array
+//! dimensions. This is the analytical model the paper credits to ZigZag
+//! [9] and specializes to SNN training's operand set.
+
+use crate::arch::SramId;
+use crate::dataflow::Mapping;
+use crate::workload::{ConvWorkload, Dim, Phase};
+
+/// The three operand roles of a convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// The streamed, activation-like operand (spikes in FP/WG, `∇u^{l+1}`
+    /// in BP). Enjoys sliding-window (halo) reuse once rows are buffered
+    /// in SRAM, and spatial multicast across output-channel columns.
+    Input,
+    /// The stationary, weight-like operand (`w`, `w′`, or `∇u^l` in WG —
+    /// the operand indexed by the dims that are *not* accumulated).
+    Stationary,
+    /// The accumulated operand (`ConvFP`, `ConvBP`, `∇w`).
+    Output,
+}
+
+/// Static description of one operand under one phase.
+#[derive(Debug, Clone)]
+pub struct OperandSpec {
+    pub role: Role,
+    pub tensor: &'static str,
+    pub bits: u32,
+    pub sram: SramId,
+    /// Base irrelevant-dimension mask (indexed by [`Dim::idx`]).
+    pub irr: [bool; 8],
+    /// Sliding-window halo reuse: adds `R`,`S` irrelevance at the SRAM
+    /// boundary and spatially.
+    pub halo: bool,
+}
+
+fn mask(dims: &[Dim]) -> [bool; 8] {
+    let mut m = [false; 8];
+    for d in dims {
+        m[d.idx()] = true;
+    }
+    m
+}
+
+/// The three operand specs for a workload's phase, in the order
+/// (input, stationary, output) — matching Table I's row groups.
+pub fn operand_specs(w: &ConvWorkload) -> [OperandSpec; 3] {
+    match w.phase {
+        Phase::Fp => [
+            OperandSpec {
+                role: Role::Input,
+                tensor: "s^{l-1}",
+                bits: w.in_bits,
+                sram: SramId::V1Spike,
+                irr: mask(&[Dim::M]),
+                halo: true,
+            },
+            OperandSpec {
+                role: Role::Stationary,
+                tensor: "w^{l-1}",
+                bits: w.w_bits,
+                sram: SramId::V2Weight,
+                irr: mask(&[Dim::N, Dim::T, Dim::P, Dim::Q]),
+                halo: false,
+            },
+            OperandSpec {
+                role: Role::Output,
+                tensor: "ConvFP",
+                bits: w.out_bits,
+                sram: SramId::V3ConvFp,
+                irr: mask(&[Dim::C, Dim::R, Dim::S]),
+                halo: false,
+            },
+        ],
+        Phase::Bp => [
+            OperandSpec {
+                role: Role::Input,
+                tensor: "du^{l+1}",
+                bits: w.in_bits,
+                sram: SramId::V4DeltaU,
+                irr: mask(&[Dim::M]),
+                halo: true,
+            },
+            OperandSpec {
+                role: Role::Stationary,
+                tensor: "w'^l",
+                bits: w.w_bits,
+                sram: SramId::V5WeightT,
+                irr: mask(&[Dim::N, Dim::T, Dim::P, Dim::Q]),
+                halo: false,
+            },
+            OperandSpec {
+                role: Role::Output,
+                tensor: "ConvBP",
+                bits: w.out_bits,
+                sram: SramId::V6ConvBp,
+                irr: mask(&[Dim::C, Dim::R, Dim::S]),
+                halo: false,
+            },
+        ],
+        Phase::Wg => [
+            // Streamed spikes from the forward pass.
+            OperandSpec {
+                role: Role::Input,
+                tensor: "s^l",
+                bits: w.in_bits,
+                sram: SramId::V7SpikeOut,
+                irr: mask(&[Dim::M]),
+                halo: true,
+            },
+            // ∇u^l plays the stationary role but is indexed like an
+            // output feature map (irrelevant to C, R, S).
+            OperandSpec {
+                role: Role::Stationary,
+                tensor: "du^l",
+                bits: w.w_bits,
+                sram: SramId::V4DeltaU,
+                irr: mask(&[Dim::C, Dim::R, Dim::S]),
+                halo: false,
+            },
+            // ∇w accumulates over batch, time and output positions.
+            OperandSpec {
+                role: Role::Output,
+                tensor: "dw^l",
+                bits: w.out_bits,
+                sram: SramId::V8DeltaW,
+                irr: mask(&[Dim::N, Dim::T, Dim::P, Dim::Q]),
+                halo: false,
+            },
+        ],
+    }
+}
+
+/// Reuse factors and access counts of one operand under one mapping.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperandAccess {
+    /// Reuse factor at the register boundary (Table I "Registers" column;
+    /// `RU₁/RU₃/RU₅/…`). Includes spatial multicast/reduction.
+    pub ru_reg: f64,
+    /// Reuse factor at the SRAM boundary (`RU₂/RU₄/RU₆/…`).
+    pub ru_sram: f64,
+    /// Register fill events = SRAM-side accesses (paper: the
+    /// `(r^w + s^r)/RU` term's count).
+    pub reg_fills: f64,
+    /// SRAM fill events = DRAM-side accesses (the `(s^w + m^r)/RU` term).
+    pub sram_fills: f64,
+}
+
+/// Whether `d` is irrelevant to `spec` at the given boundary.
+fn irr_at(spec: &OperandSpec, d: Dim, sram_boundary: bool, halo_reuse: bool) -> bool {
+    if spec.irr[d.idx()] {
+        return true;
+    }
+    if spec.halo && halo_reuse && matches!(d, Dim::R | Dim::S) {
+        // Halo reuse exists only once a sliding-window line buffer exists,
+        // i.e. at the SRAM boundary and across the array's shift network.
+        return sram_boundary;
+    }
+    false
+}
+
+/// Spatial reuse factor of an operand: multicast (input/stationary) or
+/// adder-tree reduction (output) across array dims irrelevant to it.
+///
+/// Outputs only get *column* reduction when the array has per-column
+/// adder trees (`Mapping::col_reduce`); multicast of read operands needs
+/// only broadcast wiring and is always available.
+pub(crate) fn spatial_reuse(spec: &OperandSpec, m: &Mapping) -> f64 {
+    let mut f = 1.0;
+    let irr_spatial = |d: Dim| {
+        // Spatial halo reuse (R/S unrolled) is granted: systolic shift
+        // networks propagate input rows diagonally (Eyeriss-style).
+        spec.irr[d.idx()] || (spec.halo && m.halo_reuse && matches!(d, Dim::R | Dim::S))
+    };
+    for (d, factor) in &m.spatial_rows {
+        if irr_spatial(*d) {
+            f *= *factor as f64;
+        }
+    }
+    for (d, factor) in &m.spatial_cols {
+        if irr_spatial(*d) && (spec.role != Role::Output || m.col_reduce) {
+            f *= *factor as f64;
+        }
+    }
+    f
+}
+
+/// Compute access counts for one operand.
+pub fn operand_access(spec: &OperandSpec, m: &Mapping) -> OperandAccess {
+    let total = m.scheduled_total() as f64;
+    let sp = spatial_reuse(spec, m);
+    let mut ru_reg = sp;
+    for d in Dim::ALL {
+        if irr_at(spec, d, false, m.halo_reuse) {
+            ru_reg *= m.reg[d.idx()] as f64;
+        }
+    }
+    let mut ru_sram = ru_reg;
+    for d in Dim::ALL {
+        if irr_at(spec, d, true, m.halo_reuse) {
+            ru_sram *= m.sram[d.idx()] as f64;
+            if !irr_at(spec, d, false, m.halo_reuse) {
+                // Halo dims start contributing at the SRAM boundary; their
+                // register-level factor also counts there.
+                ru_sram *= m.reg[d.idx()] as f64;
+            }
+        }
+    }
+    OperandAccess {
+        ru_reg,
+        ru_sram,
+        reg_fills: total / ru_reg,
+        sram_fills: total / ru_sram,
+    }
+}
+
+/// All three operands' access counts for a workload under a mapping, in
+/// (input, stationary, output) order.
+pub fn workload_access(w: &ConvWorkload, m: &Mapping) -> [(OperandSpec, OperandAccess); 3] {
+    let specs = operand_specs(w);
+    specs.map(|s| {
+        let a = operand_access(&s, m);
+        (s, a)
+    })
+}
+
+/// The paper's Table I view: the 18 reuse factors for a layer's three
+/// convolutions (FP: RU₁–RU₆, BP: RU₇–RU₁₂, WG: RU₁₃–RU₁₈), ordered as
+/// (input reg, input sram, stationary reg, stationary sram, output reg,
+/// output sram) per phase.
+pub fn ru_table(
+    fp: &ConvWorkload,
+    bp: &ConvWorkload,
+    wg: &ConvWorkload,
+    m_fp: &Mapping,
+    m_bp: &Mapping,
+    m_wg: &Mapping,
+) -> [f64; 18] {
+    let mut out = [0.0; 18];
+    for (k, (w, m)) in [(fp, m_fp), (bp, m_bp), (wg, m_wg)].iter().enumerate() {
+        let acc = workload_access(w, m);
+        for (j, (_, a)) in acc.iter().enumerate() {
+            out[k * 6 + j * 2] = a.ru_reg;
+            out[k * 6 + j * 2 + 1] = a.ru_sram;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArrayScheme;
+    use crate::model::SnnModel;
+    use crate::workload::{generate, ConvDims};
+
+    fn fp_workload() -> ConvWorkload {
+        generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0).fp
+    }
+
+    /// A simple weight-stationary mapping for tests.
+    fn ws_mapping(dims: &ConvDims) -> Mapping {
+        let mut reg = [1u64; 8];
+        reg[Dim::P.idx()] = 4;
+        reg[Dim::Q.idx()] = 32;
+        let mut sram = [1u64; 8];
+        sram[Dim::R.idx()] = 3;
+        sram[Dim::S.idx()] = 3;
+        sram[Dim::T.idx()] = 6;
+        sram[Dim::C.idx()] = 2;
+        Mapping::derive("ws-test", dims, vec![(Dim::C, 16)], vec![(Dim::M, 16)], reg, sram)
+    }
+
+    #[test]
+    fn weight_reuse_counts_irrelevant_loops_only() {
+        let w = fp_workload();
+        let m = ws_mapping(&w.dims);
+        let [(_, _inp), (_, sta), (_, _out)] = workload_access(&w, &m).map(|(s, a)| (s, a));
+        // Weight irrelevant dims: N,T,P,Q. At reg level: P(4)*Q(32) = 128.
+        assert_eq!(sta.ru_reg, 128.0);
+        // At sram: × T(6).
+        assert_eq!(sta.ru_sram, 128.0 * 6.0);
+        let total = m.scheduled_total() as f64;
+        assert_eq!(sta.reg_fills, total / 128.0);
+    }
+
+    #[test]
+    fn input_gets_multicast_and_halo() {
+        let w = fp_workload();
+        let m = ws_mapping(&w.dims);
+        let acc = workload_access(&w, &m);
+        let inp = acc[0].1;
+        // Spatial: M mapped on cols (16) is irrelevant -> multicast 16.
+        assert_eq!(inp.ru_reg, 16.0);
+        // Halo grants R*S reuse at the SRAM boundary: 16 * 9.
+        assert_eq!(inp.ru_sram, 16.0 * 9.0);
+    }
+
+    #[test]
+    fn output_reduces_spatially_over_c() {
+        let w = fp_workload();
+        let m = ws_mapping(&w.dims);
+        let out = workload_access(&w, &m)[2].1;
+        // C on rows (16) is irrelevant to the output -> adder-tree
+        // reduction 16; at SRAM also R(3)*S(3)*C_sram(2).
+        assert_eq!(out.ru_reg, 16.0);
+        assert_eq!(out.ru_sram, 16.0 * 9.0 * 2.0);
+    }
+
+    #[test]
+    fn wg_roles_swap_masks() {
+        let wl = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0);
+        let specs = operand_specs(&wl.wg);
+        // Output of WG is ∇w: irrelevant to N,T,P,Q (weight-shaped).
+        assert!(specs[2].irr[Dim::N.idx()] && specs[2].irr[Dim::P.idx()]);
+        assert!(!specs[2].irr[Dim::M.idx()]);
+        // Stationary is ∇u: irrelevant to C,R,S (fm-shaped).
+        assert!(specs[1].irr[Dim::C.idx()] && specs[1].irr[Dim::R.idx()]);
+    }
+
+    #[test]
+    fn more_reg_tiling_monotonically_reduces_stationary_fills() {
+        let w = fp_workload();
+        let mut reg_small = [1u64; 8];
+        reg_small[Dim::Q.idx()] = 8;
+        let mut reg_big = reg_small;
+        reg_big[Dim::Q.idx()] = 32;
+        let sram = [1u64; 8];
+        let m_small =
+            Mapping::derive("s", &w.dims, vec![(Dim::C, 16)], vec![(Dim::M, 16)], reg_small, sram);
+        let m_big =
+            Mapping::derive("b", &w.dims, vec![(Dim::C, 16)], vec![(Dim::M, 16)], reg_big, sram);
+        let f_small = workload_access(&w, &m_small)[1].1.reg_fills;
+        let f_big = workload_access(&w, &m_big)[1].1.reg_fills;
+        assert!(f_big < f_small);
+    }
+
+    #[test]
+    fn ru_table_has_18_entries_all_positive() {
+        let wl = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0);
+        let m_fp = ws_mapping(&wl.fp.dims);
+        let m_bp = ws_mapping(&wl.bp.dims);
+        let m_wg = ws_mapping(&wl.wg.dims);
+        let rus = ru_table(&wl.fp, &wl.bp, &wl.wg, &m_fp, &m_bp, &m_wg);
+        assert!(rus.iter().all(|&r| r >= 1.0));
+        // sram RU >= reg RU for every operand
+        for k in 0..9 {
+            assert!(rus[2 * k + 1] >= rus[2 * k]);
+        }
+    }
+
+    #[test]
+    fn property_access_counts_bounded_by_total() {
+        use crate::util::check::{ensure, forall};
+        let w = fp_workload();
+        let arr = ArrayScheme::new(16, 16);
+        forall(
+            0xE0CA5,
+            200,
+            |r| {
+                let mut reg = [1u64; 8];
+                let mut sram = [1u64; 8];
+                for i in 0..8 {
+                    reg[i] = 1 << r.next_below(3);
+                    sram[i] = 1 << r.next_below(3);
+                }
+                let e = 1u64 << r.next_below(5);
+                let f = 1u64 << r.next_below(5);
+                Mapping::derive(
+                    "rand",
+                    &w.dims,
+                    vec![(Dim::C, e.min(16))],
+                    vec![(Dim::M, f.min(16))],
+                    reg,
+                    sram,
+                )
+            },
+            |m| {
+                if !m.validate(&w.dims, &arr).is_empty() {
+                    return Ok(()); // invalid mappings are rejected upstream
+                }
+                let total = m.scheduled_total() as f64;
+                for (spec, a) in workload_access(&w, m) {
+                    ensure(a.reg_fills <= total + 0.5, format!("{} reg_fills > total", spec.tensor))?;
+                    ensure(
+                        a.sram_fills <= a.reg_fills + 0.5,
+                        format!("{} sram_fills > reg_fills", spec.tensor),
+                    )?;
+                    ensure(a.ru_reg >= 1.0, "ru_reg < 1")?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

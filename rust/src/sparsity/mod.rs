@@ -1,0 +1,139 @@
+//! Spike-sparsity profiles (the paper's Contribution 1).
+//!
+//! The energy equations scale spike-convolution adds by `Spar^l`
+//! (eqs. 5/12). A [`SparsityProfile`] supplies that per-layer multiplier.
+//! Three sources:
+//!
+//! 1. **Paper-nominal**: the constant the calibration uses (DESIGN.md §4).
+//! 2. **Synthetic**: depth-decaying firing-rate curves matching the usual
+//!    empirical observation that deeper SNN layers fire more sparsely.
+//! 3. **Measured**: per-layer firing rates recorded by the trainer
+//!    (`trainer::RunLog`) from an actual BPTT run through the PJRT
+//!    runtime — the closed loop the reproduction demonstrates end to end.
+
+use crate::util::json::Json;
+
+/// Per-layer spike-activity multipliers (`Spar^l` in the paper's
+/// equations: the fraction that scales FP16 adds in spike convolutions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsityProfile {
+    /// Human-readable provenance ("nominal", "measured step 300", …).
+    pub source: String,
+    /// One multiplier per compute layer, each in `[0, 1]`.
+    pub per_layer: Vec<f64>,
+}
+
+impl SparsityProfile {
+    /// The constant profile used by the paper-shaped tables.
+    pub fn nominal(layers: usize, value: f64) -> SparsityProfile {
+        SparsityProfile { source: format!("nominal({value})"), per_layer: vec![value; layers] }
+    }
+
+    /// A synthetic depth-decaying profile: firing activity starts at
+    /// `first` and decays geometrically by `decay` per layer (observed
+    /// SNN behaviour: later layers fire less).
+    pub fn synthetic_decay(layers: usize, first: f64, decay: f64) -> SparsityProfile {
+        let per_layer =
+            (0..layers).map(|i| (first * decay.powi(i as i32)).clamp(0.0, 1.0)).collect();
+        SparsityProfile { source: format!("synthetic(first={first},decay={decay})"), per_layer }
+    }
+
+    /// Build from measured firing rates. The firing rate *is* the add
+    /// multiplier: an add executes exactly when the spike is 1.
+    pub fn from_firing_rates(rates: &[f64], source: impl Into<String>) -> SparsityProfile {
+        SparsityProfile {
+            source: source.into(),
+            per_layer: rates.iter().map(|r| r.clamp(0.0, 1.0)).collect(),
+        }
+    }
+
+    /// Parse from a trainer run-log JSON (`{"firing_rates": [..]}` plus
+    /// metadata), as written by `trainer::RunLog::save`.
+    pub fn from_run_log(json: &Json) -> Result<SparsityProfile, String> {
+        let rates = json
+            .get("firing_rates")
+            .and_then(|v| v.as_arr())
+            .ok_or("run log missing `firing_rates`")?;
+        let per_layer: Option<Vec<f64>> = rates.iter().map(|v| v.as_f64()).collect();
+        let per_layer = per_layer.ok_or("non-numeric firing rate")?;
+        if per_layer.is_empty() {
+            return Err("empty firing_rates".into());
+        }
+        if per_layer.iter().any(|r| !(0.0..=1.0).contains(r)) {
+            return Err("firing rate outside [0,1]".into());
+        }
+        let step = json.get("step").and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        Ok(SparsityProfile {
+            source: format!("measured(step={step})"),
+            per_layer,
+        })
+    }
+
+    /// Load from a run-log file on disk.
+    pub fn load(path: &std::path::Path) -> Result<SparsityProfile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::from_run_log(&Json::parse(&text)?)
+    }
+
+    /// Mean activity across layers.
+    pub fn mean(&self) -> f64 {
+        crate::util::stats::mean(&self.per_layer)
+    }
+
+    /// The paper reports "sparsity" as `1 - firing rate`; this view is
+    /// used in reports.
+    pub fn sparsity_view(&self) -> Vec<f64> {
+        self.per_layer.iter().map(|a| 1.0 - a).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_is_constant() {
+        let p = SparsityProfile::nominal(4, 0.75);
+        assert_eq!(p.per_layer, vec![0.75; 4]);
+        assert!((p.mean() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decay_profile_decreases_and_clamps() {
+        let p = SparsityProfile::synthetic_decay(5, 0.4, 0.7);
+        for w in p.per_layer.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        let clamped = SparsityProfile::synthetic_decay(3, 2.0, 1.0);
+        assert!(clamped.per_layer.iter().all(|&x| x <= 1.0));
+    }
+
+    #[test]
+    fn parses_run_log() {
+        let j = Json::parse(r#"{"firing_rates": [0.21, 0.12, 0.08], "step": 300}"#).unwrap();
+        let p = SparsityProfile::from_run_log(&j).unwrap();
+        assert_eq!(p.per_layer.len(), 3);
+        assert!(p.source.contains("300"));
+        assert_eq!(p.sparsity_view()[0], 1.0 - 0.21);
+    }
+
+    #[test]
+    fn rejects_bad_run_logs() {
+        assert!(SparsityProfile::from_run_log(&Json::parse("{}").unwrap()).is_err());
+        assert!(SparsityProfile::from_run_log(
+            &Json::parse(r#"{"firing_rates": []}"#).unwrap()
+        )
+        .is_err());
+        assert!(SparsityProfile::from_run_log(
+            &Json::parse(r#"{"firing_rates": [1.5]}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn firing_rates_clamp() {
+        let p = SparsityProfile::from_firing_rates(&[-0.1, 0.5, 1.2], "t");
+        assert_eq!(p.per_layer, vec![0.0, 0.5, 1.0]);
+    }
+}

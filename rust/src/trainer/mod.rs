@@ -1,0 +1,382 @@
+//! Training orchestrator: drives real SNN BPTT through the PJRT runtime.
+//!
+//! This is the "measured sparsity" half of the reproduction (Contribution
+//! 1): the Rust side owns the training loop — synthetic CIFAR-like data
+//! generation, parameter state, SGD stepping by repeatedly executing the
+//! AOT-compiled `train_step.hlo.txt` — and records the loss curve plus the
+//! per-layer spike firing rates that the DSE consumes as `Spar^l`.
+//! Python never runs here.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{artifact, load_manifest, Module, Runtime, Tensor};
+use crate::util::json::Json;
+use crate::util::prng::SplitMix64;
+
+/// Hyperparameters of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Print a progress line every N steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        Self { steps: 300, lr: 0.1, seed: 42, log_every: 25 }
+    }
+}
+
+/// Shapes read from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub batch: usize,
+    pub timesteps: usize,
+    pub classes: usize,
+    pub input: [usize; 3],
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    pub spiking_layers: usize,
+}
+
+impl ModelSpec {
+    pub fn from_manifest(m: &Json) -> Result<ModelSpec> {
+        let get = |k: &str| -> Result<f64> {
+            m.get(k).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("manifest missing `{k}`"))
+        };
+        let input: Vec<usize> = m
+            .get("input")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing `input`"))?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as usize)
+            .collect();
+        let params = m
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing `params`"))?
+            .iter()
+            .map(|p| {
+                let name = p.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0) as usize).collect())
+                    .unwrap_or_default();
+                (name, shape)
+            })
+            .collect();
+        Ok(ModelSpec {
+            batch: get("batch")? as usize,
+            timesteps: get("timesteps")? as usize,
+            classes: get("classes")? as usize,
+            input: [input[0], input[1], input[2]],
+            param_shapes: params,
+            spiking_layers: get("spiking_layers")? as usize,
+        })
+    }
+}
+
+/// Synthetic CIFAR-100-like dataset: class-conditional Gaussian blobs
+/// (deterministic from the seed; same recipe as python/tests/test_model).
+/// Class k's pixels are N(2·(k/K − 0.5), 0.5²) — linearly separable enough
+/// to train against, structured enough to produce realistic firing rates.
+pub struct SyntheticDataset {
+    rng: SplitMix64,
+    spec: ModelSpec,
+}
+
+impl SyntheticDataset {
+    pub fn new(seed: u64, spec: ModelSpec) -> Self {
+        Self { rng: SplitMix64::new(seed), spec }
+    }
+
+    /// One batch: (images [B,C,H,W] flat, labels, one-hot [B,classes] flat).
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<usize>, Vec<f32>) {
+        let b = self.spec.batch;
+        let pix: usize = self.spec.input.iter().product();
+        let k = self.spec.classes;
+        let mut x = Vec::with_capacity(b * pix);
+        let mut y = Vec::with_capacity(b);
+        let mut onehot = vec![0.0f32; b * k];
+        for i in 0..b {
+            let label = self.rng.next_below(k as u64) as usize;
+            y.push(label);
+            onehot[i * k + label] = 1.0;
+            let mean = 2.0 * (label as f64 / k as f64 - 0.5);
+            for _ in 0..pix {
+                x.push((mean + 0.5 * self.rng.normal()) as f32);
+            }
+        }
+        (x, y, onehot)
+    }
+}
+
+/// The result of a training run; serializes to the run-log JSON that
+/// `sparsity::SparsityProfile::load` consumes.
+#[derive(Debug, Clone)]
+pub struct RunLog {
+    pub losses: Vec<f64>,
+    /// Final-step firing rate per spiking layer.
+    pub firing_rates: Vec<f64>,
+    pub steps: usize,
+    pub train_accuracy: f64,
+    pub wall_secs: f64,
+}
+
+impl RunLog {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("losses", Json::from_f64s(&self.losses))
+            .set("firing_rates", Json::from_f64s(&self.firing_rates))
+            .set("step", Json::Num(self.steps as f64))
+            .set("train_accuracy", Json::Num(self.train_accuracy))
+            .set("wall_secs", Json::Num(self.wall_secs));
+        j
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().dumps()).context("write run log")
+    }
+}
+
+/// He-style initialization matching `model.init_params` statistically
+/// (exact values differ — convergence, not bit-equality, is the contract).
+pub fn init_params(rng: &mut SplitMix64, shapes: &[(String, Vec<usize>)]) -> Vec<(Vec<f32>, Vec<usize>)> {
+    shapes
+        .iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product();
+            let fan_in: usize = if shape.len() == 4 {
+                shape[1..].iter().product()
+            } else {
+                shape[0]
+            };
+            let scale = (2.0 / fan_in as f64).sqrt();
+            let data: Vec<f32> = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+            (data, shape.clone())
+        })
+        .collect()
+}
+
+/// The trainer: owns runtime handles + parameter state.
+pub struct Trainer {
+    train_mod: std::sync::Arc<Module>,
+    forward_mod: std::sync::Arc<Module>,
+    pub spec: ModelSpec,
+    params: Vec<Tensor>,
+}
+
+impl Trainer {
+    /// Load artifacts and initialize parameters.
+    pub fn new(rt: &Runtime, seed: u64) -> Result<Trainer> {
+        let manifest = load_manifest()?;
+        let spec = ModelSpec::from_manifest(&manifest)?;
+        let train_mod = rt.load(&artifact("train_step.hlo.txt")?)?;
+        let forward_mod = rt.load(&artifact("forward.hlo.txt")?)?;
+        let mut rng = SplitMix64::new(seed);
+        let params = init_params(&mut rng, &spec.param_shapes)
+            .into_iter()
+            .map(|(data, shape)| Tensor::from_f32(&data, &shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trainer { train_mod, forward_mod, spec, params })
+    }
+
+    /// Run `cfg.steps` SGD steps; returns the run log.
+    pub fn train(&mut self, cfg: &TrainerConfig) -> Result<RunLog> {
+        let start = std::time::Instant::now();
+        let mut data = SyntheticDataset::new(cfg.seed ^ 0xDA7A, self.spec.clone());
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut rates = vec![0.0; self.spec.spiking_layers];
+        let mut last_acc = 0.0;
+        for step in 0..cfg.steps {
+            let (x, y, onehot) = data.next_batch();
+            let xt = Tensor::from_f32(
+                &x,
+                &[
+                    self.spec.batch,
+                    self.spec.input[0],
+                    self.spec.input[1],
+                    self.spec.input[2],
+                ],
+            )?;
+            let yt = Tensor::from_f32(&onehot, &[self.spec.batch, self.spec.classes])?;
+            let mut inputs: Vec<Tensor> = self.params.clone();
+            inputs.push(xt.clone());
+            inputs.push(yt);
+            inputs.push(Tensor::scalar(cfg.lr));
+            let out = self.train_mod.run(&inputs)?;
+            let n_params = self.params.len();
+            if out.len() != n_params + 2 {
+                return Err(anyhow!("train_step returned {} outputs", out.len()));
+            }
+            self.params = out[..n_params].to_vec();
+            let loss = out[n_params].item()? as f64;
+            let rate_vec = out[n_params + 1].to_vec()?;
+            for (r, v) in rates.iter_mut().zip(rate_vec.iter()) {
+                *r = *v as f64;
+            }
+            losses.push(loss);
+            if !loss.is_finite() {
+                return Err(anyhow!("loss diverged at step {step}"));
+            }
+            if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+                last_acc = self.eval_accuracy(&xt, &y)?;
+                eprintln!(
+                    "step {step:>4}  loss {loss:.4}  acc {last_acc:.2}  rates {:?}",
+                    rates.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>()
+                );
+            }
+        }
+        Ok(RunLog {
+            losses,
+            firing_rates: rates,
+            steps: cfg.steps,
+            train_accuracy: last_acc,
+            wall_secs: start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Batch accuracy through the forward artifact.
+    pub fn eval_accuracy(&self, x: &Tensor, labels: &[usize]) -> Result<f64> {
+        let mut inputs: Vec<Tensor> = self.params.clone();
+        inputs.push(x.clone());
+        let out = self.forward_mod.run(&inputs)?;
+        let logits = out[0].to_vec()?;
+        let k = self.spec.classes;
+        let mut correct = 0usize;
+        for (i, &label) in labels.iter().enumerate() {
+            let row = &logits[i * k..(i + 1) * k];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            if pred == label {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / labels.len() as f64)
+    }
+
+    /// Mean firing rates from a forward pass on a fresh batch.
+    pub fn measure_rates(&self, seed: u64) -> Result<Vec<f64>> {
+        let mut data = SyntheticDataset::new(seed, self.spec.clone());
+        let (x, _, _) = data.next_batch();
+        let xt = Tensor::from_f32(
+            &x,
+            &[self.spec.batch, self.spec.input[0], self.spec.input[1], self.spec.input[2]],
+        )?;
+        let mut inputs: Vec<Tensor> = self.params.clone();
+        inputs.push(xt);
+        let out = self.forward_mod.run(&inputs)?;
+        Ok(out[1].to_vec()?.iter().map(|&v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            batch: 4,
+            timesteps: 2,
+            classes: 10,
+            input: [3, 8, 8],
+            param_shapes: vec![
+                ("w1".into(), vec![16, 3, 3, 3]),
+                ("w3".into(), vec![192, 10]),
+            ],
+            spiking_layers: 2,
+        }
+    }
+
+    #[test]
+    fn synthetic_batches_are_deterministic_and_labeled() {
+        let mut a = SyntheticDataset::new(1, spec());
+        let mut b = SyntheticDataset::new(1, spec());
+        let (xa, ya, oa) = a.next_batch();
+        let (xb, yb, ob) = b.next_batch();
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        assert_eq!(oa, ob);
+        assert_eq!(xa.len(), 4 * 3 * 8 * 8);
+        // one-hot rows sum to 1
+        for i in 0..4 {
+            let s: f32 = oa[i * 10..(i + 1) * 10].iter().sum();
+            assert_eq!(s, 1.0);
+            assert_eq!(oa[i * 10 + ya[i]], 1.0);
+        }
+    }
+
+    #[test]
+    fn class_means_are_ordered() {
+        let mut d = SyntheticDataset::new(7, spec());
+        let mut sums = vec![(0.0f64, 0usize); 10];
+        for _ in 0..50 {
+            let (x, y, _) = d.next_batch();
+            let pix = 3 * 8 * 8;
+            for (i, &label) in y.iter().enumerate() {
+                let m: f32 = x[i * pix..(i + 1) * pix].iter().sum::<f32>() / pix as f32;
+                sums[label].0 += m as f64;
+                sums[label].1 += 1;
+            }
+        }
+        let lo = sums[0].0 / sums[0].1.max(1) as f64;
+        let hi = sums[9].0 / sums[9].1.max(1) as f64;
+        assert!(hi > lo, "class means not ordered: {lo} vs {hi}");
+    }
+
+    #[test]
+    fn init_params_match_shapes_and_scale() {
+        let mut rng = SplitMix64::new(3);
+        let ps = init_params(&mut rng, &spec().param_shapes);
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].0.len(), 16 * 3 * 9);
+        let std: f64 = {
+            let xs: Vec<f64> = ps[0].0.iter().map(|&v| v as f64).collect();
+            crate::util::stats::std_dev(&xs)
+        };
+        let expect = (2.0f64 / 27.0).sqrt();
+        assert!((std - expect).abs() / expect < 0.2, "std {std} vs {expect}");
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let j = Json::parse(
+            r#"{"batch": 16, "timesteps": 4, "classes": 10,
+                "input": [3, 16, 16], "spiking_layers": 2,
+                "params": [{"name": "w1", "shape": [16, 3, 3, 3]}]}"#,
+        )
+        .unwrap();
+        let s = ModelSpec::from_manifest(&j).unwrap();
+        assert_eq!(s.batch, 16);
+        assert_eq!(s.input, [3, 16, 16]);
+        assert_eq!(s.param_shapes[0].1, vec![16, 3, 3, 3]);
+    }
+
+    #[test]
+    fn run_log_round_trips_into_sparsity_profile() {
+        let log = RunLog {
+            losses: vec![2.3, 1.9],
+            firing_rates: vec![0.22, 0.11],
+            steps: 2,
+            train_accuracy: 0.5,
+            wall_secs: 1.0,
+        };
+        let j = log.to_json();
+        let prof = crate::sparsity::SparsityProfile::from_run_log(&j).unwrap();
+        assert_eq!(prof.per_layer, vec![0.22, 0.11]);
+    }
+
+    // End-to-end training through PJRT is exercised by
+    // rust/tests/e2e_training.rs (requires `make artifacts`).
+}

@@ -1,0 +1,99 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use [`time_it`] for timings and print the paper
+//! tables alongside, so benchmark output doubles as the table/figure
+//! regeneration record captured in `bench_output.txt`.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Run `f` repeatedly: a warm-up, then timed iterations until both
+/// `min_iters` and `min_secs` are satisfied (capped at `max_iters`).
+pub fn time_it(name: &str, min_iters: usize, min_secs: f64, mut f: impl FnMut()) -> BenchStats {
+    // Warm-up.
+    for _ in 0..min_iters.clamp(1, 3) {
+        f();
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    let max_iters = 100_000;
+    while (samples_ns.len() < min_iters || start.elapsed().as_secs_f64() < min_secs)
+        && samples_ns.len() < max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+    }
+    let mean = crate::util::stats::mean(&samples_ns);
+    BenchStats {
+        name: name.to_string(),
+        iters: samples_ns.len(),
+        mean_ns: mean,
+        p50_ns: crate::util::stats::percentile(&samples_ns, 50.0),
+        p95_ns: crate::util::stats::percentile(&samples_ns, 95.0),
+        min_ns: samples_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs_enough_iterations() {
+        let mut n = 0u64;
+        let s = time_it("noop", 10, 0.0, || n += 1);
+        assert!(s.iters >= 10);
+        assert!(s.mean_ns >= 0.0);
+        assert!(s.p95_ns >= s.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(12.0), "12 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 us");
+        assert_eq!(fmt_ns(2_000_000.0), "2.00 ms");
+        assert_eq!(fmt_ns(3.1e9), "3.10 s");
+    }
+}

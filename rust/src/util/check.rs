@@ -1,0 +1,79 @@
+//! A tiny property-based testing harness.
+//!
+//! `proptest`/`quickcheck` are unavailable offline, so EOCAS carries its own
+//! micro-harness: generate N random cases from a seeded [`SplitMix64`],
+//! run the property, and on failure report the seed + case index so the
+//! exact case replays deterministically. Shrinking is intentionally not
+//! implemented — cases here are small structured values where the failing
+//! input is readable as-is.
+
+use crate::util::prng::SplitMix64;
+
+/// Run `prop` on `n` random cases drawn by `gen`. Panics with the failing
+/// case's debug representation, case index and seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    n: usize,
+    mut gen: impl FnMut(&mut SplitMix64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = SplitMix64::new(seed);
+    for i in 0..n {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!("property failed (seed={seed}, case #{i}):\n  input: {case:?}\n  error: {msg}");
+        }
+    }
+}
+
+/// Convenience: assert two floats are within relative tolerance.
+pub fn close(a: f64, b: f64, rtol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1e-12);
+    let rel = (a - b).abs() / scale;
+    if rel <= rtol {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (rtol {rtol}, rel {rel:.3e})"))
+    }
+}
+
+/// Convenience: assert a boolean with a message.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |r| r.next_below(100),
+            |&x| {
+                count += 1;
+                ensure(x < 100, "bound")
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, 50, |r| r.next_below(10), |&x| ensure(x < 5, format!("{x} >= 5")));
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+    }
+}

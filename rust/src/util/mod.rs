@@ -1,0 +1,77 @@
+//! Foundation utilities (no external crates available offline, so these are
+//! all built in-repo): PRNG, statistics, table/figure rendering, JSON, and a
+//! micro property-testing harness.
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+/// Human-readable byte size ("2.03 MB" style, powers of 10 to match the
+/// paper's "2.03MB" SRAM budget convention).
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} kB", b / 1e3)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// All divisors of `n`, ascending. Used by tilers and the array-scheme
+/// enumerator (n is always small: dimension extents, MAC counts).
+pub fn divisors(n: u64) -> Vec<u64> {
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(2_030_000), "2.03 MB");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1_500), "1.50 kB");
+    }
+
+    #[test]
+    fn ceil_division() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+
+    #[test]
+    fn divisors_of_36() {
+        assert_eq!(divisors(36), vec![1, 2, 3, 4, 6, 9, 12, 18, 36]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(256).len(), 9);
+    }
+}

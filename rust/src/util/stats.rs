@@ -1,0 +1,162 @@
+//! Small statistics helpers used by the trainer, benchmarks and reports.
+
+/// Arithmetic mean; 0.0 on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for fewer than two samples.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, `p` in `[0, 100]`. Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Min/max as a pair; `None` on empty input.
+pub fn min_max(xs: &[f64]) -> Option<(f64, f64)> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    Some((lo, hi))
+}
+
+/// Fixed-width histogram over `[lo, hi]` with `bins` buckets.
+/// Values outside the range clamp into the edge buckets.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let idx = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        counts[idx] += 1;
+    }
+    counts
+}
+
+/// Exponential moving average with smoothing factor `alpha` in (0, 1].
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let v = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        acc = Some(v);
+        out.push(v);
+    }
+    out
+}
+
+/// Ordinary least-squares slope of `ys` against index 0..n. Used to test
+/// that training loss trends downward without depending on exact values.
+pub fn ols_slope(ys: &[f64]) -> f64 {
+    let n = ys.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let xm = (n as f64 - 1.0) / 2.0;
+    let ym = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &y) in ys.iter().enumerate() {
+        let dx = i as f64 - xm;
+        num += dx * (y - ym);
+        den += dx * dx;
+    }
+    num / den
+}
+
+/// Relative difference `|a-b| / max(|a|,|b|, eps)`.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let scale = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / scale
+}
+
+/// Geometric mean of strictly positive values; 0.0 on empty input.
+pub fn geo_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs = [0.1, 0.2, 0.5, 0.9, -3.0, 7.0];
+        let h = histogram(&xs, 0.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<usize>(), xs.len());
+        assert_eq!(h[0], 3); // 0.1, 0.2 and clamped -3.0
+        assert_eq!(h[3], 2); // 0.9 and clamped 7.0
+    }
+
+    #[test]
+    fn slope_signs() {
+        let down: Vec<f64> = (0..50).map(|i| 10.0 - 0.1 * i as f64).collect();
+        let up: Vec<f64> = (0..50).map(|i| 0.1 * i as f64).collect();
+        assert!(ols_slope(&down) < 0.0);
+        assert!(ols_slope(&up) > 0.0);
+    }
+
+    #[test]
+    fn ema_smooths_towards_signal() {
+        let xs = vec![0.0, 10.0, 10.0, 10.0, 10.0];
+        let e = ema(&xs, 0.5);
+        assert_eq!(e[0], 0.0);
+        assert!(e[4] > 8.0 && e[4] < 10.0);
+    }
+
+    #[test]
+    fn geo_mean_of_ratios() {
+        let g = geo_mean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,219 @@
+//! ASCII table renderer for report output.
+//!
+//! Every paper table (III, IV, V, VII) is regenerated through this renderer
+//! so the CLI and the bench harnesses print consistent, diff-able text.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: header row + data rows, rendered with box-drawing
+/// ASCII. Cells are plain `String`s; numeric formatting is the caller's job
+/// (helpers below).
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        let header: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+        let aligns = vec![Align::Right; header.len()];
+        Self { title: title.into(), header, aligns, rows: Vec::new() }
+    }
+
+    /// Set per-column alignment (panics if the length mismatches).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a String with a title line, a separator and padded columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let c = &cells[i];
+                let pad = widths[i] - c.len();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(c);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(c);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&self.title);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting) for machine consumption.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format microjoules with 3 decimal places (matches the paper's tables).
+pub fn fmt_uj(joules: f64) -> String {
+    format!("{:.3}", joules * 1e6)
+}
+
+/// Format a float with `d` decimals.
+pub fn fmt_f(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Format a count with thousands separators (1_234_567 -> "1,234,567").
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+/// A crude horizontal bar chart used for "figures" (Fig. 5 / Fig. 6) in
+/// terminal output: label, value, bar scaled to the max.
+pub fn bar_chart(title: &str, items: &[(String, f64)], width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-30);
+    let lw = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (label, v) in items {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {label:<lw$} | {bar:<width$} {val:.3}\n",
+            bar = "#".repeat(n.min(width)),
+            val = v * 1e6,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_padding() {
+        let mut t = Table::new("T", &["a", "long_header"]);
+        t.add_row(vec!["1".into(), "2".into()]);
+        t.add_row(vec!["100".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("long_header"));
+        // all lines between separators have equal width
+        let lines: Vec<&str> = s.lines().collect();
+        let w = lines[1].len();
+        for l in &lines[1..] {
+            assert_eq!(l.len(), w, "line {l:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.add_row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.add_row(vec!["x,y".into(), "plain".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_uj(124.57e-6), "124.570");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+        assert_eq!(fmt_count(12), "12");
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart("demo", &[("a".into(), 1e-6), ("bb".into(), 2e-6)], 10);
+        assert!(s.contains("##########")); // the max bar hits full width
+    }
+}

@@ -1,0 +1,426 @@
+//! Workload generation (§III-B "The workload is generated based on the deep
+//! SNN models").
+//!
+//! Each compute layer of an [`SnnModel`](crate::model::SnnModel) yields
+//! three convolution workloads — forward spike convolution (FP, eq. 2),
+//! backward potential-gradient convolution (BP, eq. 8) and the weight
+//! gradient (WG, eq. 10) — plus fixed-function soma and grad-unit work
+//! (§III-D). Operation counts implement the paper's eqs. (4), (5), (9),
+//! (11) and (12).
+
+use crate::model::{ShapedLayer, SnnModel};
+
+/// The eight convolution loop dimensions used throughout the simulator
+/// (Fig. 4's parameter set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    /// Batch (the paper's `N`/`B`).
+    N,
+    /// Timestep.
+    T,
+    /// Output channels (`M`).
+    M,
+    /// Input channels (`C`).
+    C,
+    /// Output rows (`P`, = `H` for stride-1 same-pad convs).
+    P,
+    /// Output cols (`Q`, = `W`).
+    Q,
+    /// Kernel rows (`R`).
+    R,
+    /// Kernel cols (`S`).
+    S,
+}
+
+impl Dim {
+    pub const ALL: [Dim; 8] = [Dim::N, Dim::T, Dim::M, Dim::C, Dim::P, Dim::Q, Dim::R, Dim::S];
+
+    pub fn idx(self) -> usize {
+        match self {
+            Dim::N => 0,
+            Dim::T => 1,
+            Dim::M => 2,
+            Dim::C => 3,
+            Dim::P => 4,
+            Dim::Q => 5,
+            Dim::R => 6,
+            Dim::S => 7,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::N => "N",
+            Dim::T => "T",
+            Dim::M => "M",
+            Dim::C => "C",
+            Dim::P => "P",
+            Dim::Q => "Q",
+            Dim::R => "R",
+            Dim::S => "S",
+        }
+    }
+}
+
+/// Extents of the eight loop dimensions for one convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvDims {
+    pub sizes: [u64; 8],
+}
+
+impl ConvDims {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(n: u64, t: u64, m: u64, c: u64, p: u64, q: u64, r: u64, s: u64) -> Self {
+        Self { sizes: [n, t, m, c, p, q, r, s] }
+    }
+
+    pub fn get(&self, d: Dim) -> u64 {
+        self.sizes[d.idx()]
+    }
+
+    /// Total MAC-grid size: the product of all eight extents. This is the
+    /// common prefactor of eqs. (4), (9) and (11).
+    pub fn total(&self) -> u64 {
+        self.sizes.iter().product()
+    }
+}
+
+/// Which training phase a convolution belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Forward spike convolution, eq. (2).
+    Fp,
+    /// Backward potential-gradient convolution, eq. (8).
+    Bp,
+    /// Weight-gradient computation, eq. (10).
+    Wg,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 3] = [Phase::Fp, Phase::Bp, Phase::Wg];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Fp => "FP",
+            Phase::Bp => "BP",
+            Phase::Wg => "WG",
+        }
+    }
+}
+
+/// Arithmetic flavour of a convolution's inner operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// 1-bit spike × FP16 weight: multiplexer + sparsity-gated FP16 add
+    /// (the FP and WG convolutions).
+    SpikeMuxAdd,
+    /// FP16 × FP16 MAC (the BP convolution).
+    FpMacc,
+}
+
+/// Operation counts for one convolution workload (the paper's
+/// `Mux/Add/Mul` operands).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCounts {
+    pub mux: u64,
+    pub mul: u64,
+    /// FP16 additions actually executed. For spike convolutions this is
+    /// activity-scaled (eq. 5 / eq. 12); stored as f64 because the
+    /// activity factor is fractional.
+    pub add: f64,
+}
+
+/// One convolution workload: dims + operand bitwidths + op kind + spike
+/// activity. This is the unit the dataflow/energy machinery evaluates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvWorkload {
+    /// Index of the source layer in the model.
+    pub layer: usize,
+    pub phase: Phase,
+    pub dims: ConvDims,
+    pub kind: OpKind,
+    /// Bitwidths: streamed input operand, stationary weight-like operand,
+    /// output operand. (FP: 1/16/16 — spikes in; BP: 16/16/16; WG: the
+    /// "weight-like" operand is ∇u (16b) and the streamed one is the spike
+    /// map (1b), output ∇w 16b.)
+    pub in_bits: u32,
+    pub w_bits: u32,
+    pub out_bits: u32,
+    /// Spike-activity multiplier `Spar^l` applied to FP16 adds for
+    /// spike convolutions (eq. 5 / 12). Ignored for `FpMacc`.
+    pub activity: f64,
+}
+
+impl ConvWorkload {
+    /// Operation counts per the paper's equations.
+    ///
+    /// * FP  (eqs. 4–5):  `Mux = Π dims`, `Add = Π dims × Spar`
+    /// * BP  (eq. 9):     `Mul = Add = Π dims`
+    /// * WG  (eqs. 11–12):`Mux = Π dims`, `Add = Π(without P) × (C·P·Spar·Q + 1)`
+    ///   — which we evaluate exactly, including the `+1` bias-like term.
+    pub fn op_counts(&self) -> OpCounts {
+        let total = self.dims.total();
+        match (self.kind, self.phase) {
+            (OpKind::FpMacc, _) => OpCounts { mux: 0, mul: total, add: total as f64 },
+            (OpKind::SpikeMuxAdd, Phase::Wg) => {
+                // eq. (12): B*T*R*S*M * (C*H*Spar*W + 1)
+                let d = &self.dims;
+                let outer = d.get(Dim::N) * d.get(Dim::T) * d.get(Dim::R) * d.get(Dim::S)
+                    * d.get(Dim::M);
+                let inner = d.get(Dim::C) as f64
+                    * d.get(Dim::P) as f64
+                    * d.get(Dim::Q) as f64
+                    * self.activity
+                    + 1.0;
+                OpCounts { mux: total, mul: 0, add: outer as f64 * inner }
+            }
+            (OpKind::SpikeMuxAdd, _) => {
+                OpCounts { mux: total, mul: 0, add: total as f64 * self.activity }
+            }
+        }
+    }
+
+    /// Footprint in bits of each operand (input, weight-like, output) —
+    /// used for capacity checks and DRAM-traffic floors.
+    pub fn footprints_bits(&self) -> (u64, u64, u64) {
+        let d = &self.dims;
+        let input = d.get(Dim::N)
+            * d.get(Dim::T)
+            * d.get(Dim::C)
+            * d.get(Dim::P)
+            * d.get(Dim::Q)
+            * self.in_bits as u64;
+        let weight = d.get(Dim::M) * d.get(Dim::C) * d.get(Dim::R) * d.get(Dim::S)
+            * self.w_bits as u64;
+        let output = d.get(Dim::N)
+            * d.get(Dim::T)
+            * d.get(Dim::M)
+            * d.get(Dim::P)
+            * d.get(Dim::Q)
+            * self.out_bits as u64;
+        (input, weight, output)
+    }
+}
+
+/// Fixed-function (non-configurable) unit work for one layer (§III-D).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitWork {
+    /// Soma evaluations: `B × T × M × P × Q` LIF updates (eq. 1/3).
+    pub soma_ops: u64,
+    /// Grad-unit evaluations: same grid, eq. (6)/(7).
+    pub grad_ops: u64,
+    /// Bits moved by the soma unit per layer pass (potential/spike
+    /// save-and-restore for BPTT — reads conv result + u_{t-1} + s_{t-1},
+    /// writes u_t, s_t and the surrogate step mask).
+    pub soma_sram_bits: u64,
+    pub soma_dram_bits: u64,
+    pub grad_sram_bits: u64,
+    pub grad_dram_bits: u64,
+}
+
+/// The full workload for a model: one entry per compute layer.
+#[derive(Debug, Clone)]
+pub struct LayerWorkload {
+    pub layer: usize,
+    pub fp: ConvWorkload,
+    pub bp: ConvWorkload,
+    pub wg: ConvWorkload,
+    pub units: UnitWork,
+}
+
+impl LayerWorkload {
+    pub fn convs(&self) -> [&ConvWorkload; 3] {
+        [&self.fp, &self.bp, &self.wg]
+    }
+}
+
+/// Generate the training workload for every compute layer of `model`.
+///
+/// `activity` supplies the per-layer spike activity multiplier `Spar^l`
+/// (index = compute-layer ordinal). Layers beyond the slice reuse its last
+/// value; an empty slice means `default_activity` everywhere.
+pub fn generate(
+    model: &SnnModel,
+    activity: &[f64],
+    default_activity: f64,
+) -> Result<Vec<LayerWorkload>, String> {
+    let shaped = model.shaped_layers()?;
+    let n = model.batch as u64;
+    let t = model.timesteps as u64;
+    let mut out = Vec::new();
+    let mut compute_idx = 0usize;
+    for l in shaped.iter().filter(|l| l.is_compute()) {
+        let act = activity
+            .get(compute_idx)
+            .or_else(|| activity.last())
+            .copied()
+            .unwrap_or(default_activity);
+        compute_idx += 1;
+        out.push(layer_workload(l, n, t, act));
+    }
+    Ok(out)
+}
+
+fn layer_workload(l: &ShapedLayer, n: u64, t: u64, activity: f64) -> LayerWorkload {
+    let (m, c) = (l.out_c as u64, l.in_c as u64);
+    let (p, q) = (l.out_h as u64, l.out_w as u64);
+    let k = l.kernel() as u64;
+
+    // FP (eq. 2): spikes s^{l-1} (1b) ⊛ weights w^{l-1} (16b) → ConvFP (16b)
+    let fp = ConvWorkload {
+        layer: l.index,
+        phase: Phase::Fp,
+        dims: ConvDims::new(n, t, m, c, p, q, k, k),
+        kind: OpKind::SpikeMuxAdd,
+        in_bits: 1,
+        w_bits: 16,
+        out_bits: 16,
+        activity,
+    };
+    // BP (eq. 8): ∇u^{l+1} (16b) ⊛ w'^l (16b) → ConvBP (16b). The loop
+    // grid transposes M and C relative to FP (eq. 9); for stride-1
+    // same-pad convs the total grid size is identical.
+    let bp = ConvWorkload {
+        layer: l.index,
+        phase: Phase::Bp,
+        dims: ConvDims::new(n, t, c, m, p, q, k, k),
+        kind: OpKind::FpMacc,
+        in_bits: 16,
+        w_bits: 16,
+        out_bits: 16,
+        activity: 1.0,
+    };
+    // WG (eq. 10): ∇u^l (16b, "weight-like" stationary role) with spikes
+    // s^{l-1} (1b, streamed) → ∇w^l (16b, accumulated over N,T,P,Q).
+    let wg = ConvWorkload {
+        layer: l.index,
+        phase: Phase::Wg,
+        dims: ConvDims::new(n, t, m, c, p, q, k, k),
+        kind: OpKind::SpikeMuxAdd,
+        in_bits: 1,
+        w_bits: 16,
+        out_bits: 16,
+        activity,
+    };
+
+    // §III-D fixed-function units. Counts per layer pass over all
+    // timesteps and batch elements.
+    let somas = n * t * m * p * q;
+    // Soma SRAM traffic per evaluation: read ConvFP (16b) + u_{t-1} (16b)
+    // + s_{t-1} (1b); write u_t (16b) + s_t (1b) + step mask (1b).
+    let soma_sram_bits = somas * (16 + 16 + 1 + 16 + 1 + 1);
+    // BPTT state spill: u_t and s_t and the step mask must persist until
+    // the backward pass → DRAM write now, DRAM read in BP.
+    let soma_dram_bits = somas * (16 + 1 + 1);
+    // Grad unit: reads ConvBP (16b) + ∇u_{t+1} (16b) + u_t (16b) + step
+    // mask (1b); writes ∇u_t (16b) and ∇s_t contribution (16b).
+    let grad_sram_bits = somas * (16 + 16 + 16 + 1 + 16 + 16);
+    // Restores the spilled forward state (u_t, s_t, mask) from DRAM.
+    let grad_dram_bits = somas * (16 + 1 + 1);
+
+    LayerWorkload {
+        layer: l.index,
+        fp,
+        bp,
+        wg,
+        units: UnitWork {
+            soma_ops: somas,
+            grad_ops: somas,
+            soma_sram_bits,
+            soma_dram_bits,
+            grad_sram_bits,
+            grad_dram_bits,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SnnModel;
+
+    fn paper_wl() -> LayerWorkload {
+        generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0)
+    }
+
+    #[test]
+    fn fig4_op_counts_match_equations() {
+        let wl = paper_wl();
+        // eq. (4): B*T*C*H*W*M*R*S = 1*6*32*32*32*32*3*3
+        let expect = 1u64 * 6 * 32 * 32 * 32 * 32 * 3 * 3;
+        assert_eq!(expect, 56_623_104);
+        let fp = wl.fp.op_counts();
+        assert_eq!(fp.mux, expect);
+        assert!((fp.add - expect as f64 * 0.75).abs() < 1.0); // eq. (5)
+        let bp = wl.bp.op_counts();
+        assert_eq!(bp.mul, expect); // eq. (9)
+        assert!((bp.add - expect as f64).abs() < 1.0);
+        let wg = wl.wg.op_counts();
+        assert_eq!(wg.mux, expect); // eq. (11)
+        // eq. (12): B*T*R*S*M*(C*H*Spar*W + 1)
+        let outer = 1u64 * 6 * 3 * 3 * 32;
+        let inner = 32.0 * 32.0 * 0.75 * 32.0 + 1.0;
+        assert!((wg.add - outer as f64 * inner).abs() < 1.0);
+    }
+
+    #[test]
+    fn soma_grad_counts() {
+        let wl = paper_wl();
+        assert_eq!(wl.units.soma_ops, 6 * 32 * 32 * 32); // B*T*M*P*Q
+        assert_eq!(wl.units.grad_ops, wl.units.soma_ops);
+        assert!(wl.units.soma_dram_bits > 0);
+    }
+
+    #[test]
+    fn bp_transposes_channels() {
+        let m = SnnModel {
+            name: "asym".into(),
+            input: (8, 16, 16),
+            layers: vec![crate::model::LayerSpec::Conv {
+                out_channels: 24,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+            }],
+            timesteps: 2,
+            batch: 2,
+        };
+        let wl = &generate(&m, &[], 0.5).unwrap()[0];
+        assert_eq!(wl.fp.dims.get(Dim::M), 24);
+        assert_eq!(wl.fp.dims.get(Dim::C), 8);
+        assert_eq!(wl.bp.dims.get(Dim::M), 8); // M and C swap in BP
+        assert_eq!(wl.bp.dims.get(Dim::C), 24);
+        assert_eq!(wl.fp.dims.total(), wl.bp.dims.total());
+    }
+
+    #[test]
+    fn per_layer_activity_assignment() {
+        let m = SnnModel::cifar100_snn();
+        let acts = [0.9, 0.5, 0.3];
+        let wls = generate(&m, &acts, 0.75).unwrap();
+        assert_eq!(wls[0].fp.activity, 0.9);
+        assert_eq!(wls[1].fp.activity, 0.5);
+        assert_eq!(wls[2].fp.activity, 0.3);
+        // layers beyond the slice reuse the last entry
+        assert_eq!(wls.last().unwrap().fp.activity, 0.3);
+    }
+
+    #[test]
+    fn footprints_are_sane() {
+        let wl = paper_wl();
+        let (i, w, o) = wl.fp.footprints_bits();
+        assert_eq!(i, 6 * 32 * 32 * 32); // 1-bit spikes
+        assert_eq!(w, 32 * 32 * 9 * 16);
+        assert_eq!(o, 6 * 32 * 32 * 32 * 16);
+    }
+
+    #[test]
+    fn linear_layer_becomes_1x1_conv() {
+        let m = SnnModel::tiny_snn(2, 4, 10);
+        let wls = generate(&m, &[], 0.75).unwrap();
+        let fc = wls.last().unwrap();
+        assert_eq!(fc.fp.dims.get(Dim::R), 1);
+        assert_eq!(fc.fp.dims.get(Dim::P), 1);
+        assert_eq!(fc.fp.dims.get(Dim::M), 10);
+    }
+}

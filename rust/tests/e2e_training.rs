@@ -1,0 +1,107 @@
+//! End-to-end integration: the PJRT runtime executing real AOT artifacts.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI always
+//! builds artifacts first via the Makefile's `test` target).
+
+use eocas::runtime::{artifact, Runtime, Tensor};
+use eocas::trainer::{Trainer, TrainerConfig};
+use eocas::util::stats;
+
+fn artifacts_available() -> bool {
+    artifact("train_step.hlo.txt").is_ok()
+}
+
+#[test]
+fn spike_conv_artifact_matches_host_reference() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let module = rt.load(&artifact("spike_conv.hlo.txt").unwrap()).unwrap();
+    // Geometry from the manifest: [1024, 288] x [288, 32].
+    let (n, k, m) = (1024usize, 288usize, 32usize);
+    let mut rng = eocas::util::prng::SplitMix64::new(9);
+    let spikes: Vec<f32> =
+        (0..n * k).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect();
+    let weights: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+    let out = module
+        .run(&[
+            Tensor::from_f32(&spikes, &[n, k]).unwrap(),
+            Tensor::from_f32(&weights, &[k, m]).unwrap(),
+        ])
+        .unwrap();
+    let got = out[0].to_vec().unwrap();
+    assert_eq!(got.len(), n * m);
+    // Host-side oracle: the same Mux-Add accumulation.
+    for row in [0usize, 17, 511, 1023] {
+        for col in [0usize, 5, 31] {
+            let mut acc = 0.0f32;
+            for i in 0..k {
+                if spikes[row * k + i] > 0.5 {
+                    acc += weights[i * m + col];
+                }
+            }
+            let g = got[row * m + col];
+            assert!(
+                (acc - g).abs() <= 1e-3 * (1.0 + acc.abs()),
+                "({row},{col}): host {acc} vs artifact {g}"
+            );
+        }
+    }
+}
+
+#[test]
+fn training_loss_trends_down_through_pjrt() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut trainer = Trainer::new(&rt, 7).unwrap();
+    let log = trainer
+        .train(&TrainerConfig { steps: 40, lr: 0.15, seed: 7, log_every: 0 })
+        .unwrap();
+    assert_eq!(log.losses.len(), 40);
+    assert!(log.losses.iter().all(|l| l.is_finite()));
+    // Loss must trend downward (OLS slope on the smoothed curve).
+    let slope = stats::ols_slope(&stats::ema(&log.losses, 0.2));
+    assert!(slope < 0.0, "slope {slope}, losses {:?}", log.losses);
+    // Firing rates must be measured, plausible, and non-degenerate.
+    assert_eq!(log.firing_rates.len(), 2);
+    for r in &log.firing_rates {
+        assert!((0.001..0.95).contains(r), "rate {r}");
+    }
+}
+
+#[test]
+fn forward_artifact_is_deterministic() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let trainer = Trainer::new(&rt, 3).unwrap();
+    let a = trainer.measure_rates(11).unwrap();
+    let b = trainer.measure_rates(11).unwrap();
+    assert_eq!(a, b);
+    let c = trainer.measure_rates(12).unwrap();
+    assert_ne!(a, c, "different batches should differ");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let p = artifact("forward.hlo.txt").unwrap();
+    let t0 = std::time::Instant::now();
+    let _m1 = rt.load(&p).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _m2 = rt.load(&p).unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 2, "cache miss? first {first:?} second {second:?}");
+}

@@ -1,0 +1,162 @@
+//! Cross-module integration tests (no PJRT artifacts required).
+
+use eocas::arch::{ArchPool, Architecture, ArrayScheme};
+use eocas::config::{toml, EnergyConfig};
+use eocas::dataflow::templates::Family;
+use eocas::dse::{explore, DseConfig};
+use eocas::energy::{layer_energy_for_family, model_energy_for_family};
+use eocas::model::{LayerSpec, SnnModel};
+use eocas::report::{self, ReportCtx};
+use eocas::sparsity::SparsityProfile;
+use eocas::workload::generate;
+
+#[test]
+fn energy_config_file_round_trips() {
+    // The shipped config must parse and reproduce the built-in defaults.
+    let path = std::path::Path::new("configs/energy_28nm.toml");
+    let from_file = EnergyConfig::load(path).expect("load configs/energy_28nm.toml");
+    assert_eq!(from_file, EnergyConfig::default());
+}
+
+#[test]
+fn config_overrides_flow_into_energy() {
+    let doc = toml::parse("[mem.dram]\nread_pj_per_bit = 36.0\nwrite_pj_per_bit = 36.0\n").unwrap();
+    let cfg2x = EnergyConfig::from_toml(&doc).unwrap();
+    let cfg = EnergyConfig::default();
+    let wls = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
+    let arch = Architecture::paper_default();
+    let base = layer_energy_for_family(&wls[0], Family::AdvWs, &arch, &cfg);
+    let heavy = layer_energy_for_family(&wls[0], Family::AdvWs, &arch, &cfg2x);
+    // Doubling DRAM energy must raise overall energy but not compute.
+    assert!(heavy.overall_j() > base.overall_j());
+    assert_eq!(heavy.compute_j(), base.compute_j());
+}
+
+#[test]
+fn full_stack_paper_reproduction_shape() {
+    // The three headline shapes of the paper's evaluation, end to end:
+    let ctx = ReportCtx::paper_default();
+
+    // (1) Table III: 16x16 is the optimal array scheme.
+    let t3 = report::table3_array_schemes(&ctx);
+    let first_row = t3.render().lines().nth(4).unwrap().to_string();
+    assert!(first_row.contains("16x16"), "{first_row}");
+
+    // (2) Table IV: Advanced WS wins overall.
+    let pool = ArchPool::paper_pool();
+    let res = explore(&pool, &ctx.workloads, &ctx.cfg, &DseConfig::default());
+    let best = res.best().unwrap();
+    assert_eq!(best.dataflow, "Advanced WS");
+    assert_eq!(best.arch.array.label(), "16x16");
+
+    // (3) Table V: compute energy is dataflow-invariant (< 1% spread).
+    let computes: Vec<f64> = Family::ALL
+        .iter()
+        .map(|&f| {
+            model_energy_for_family(&ctx.workloads, f, &ctx.arch, &ctx.cfg)
+                .iter()
+                .map(|l| l.compute_j())
+                .sum()
+        })
+        .collect();
+    let (lo, hi) = eocas::util::stats::min_max(&computes).unwrap();
+    assert!((hi - lo) / hi < 0.01, "{computes:?}");
+}
+
+#[test]
+fn paper_energy_magnitudes() {
+    // Calibration contract (DESIGN.md §4): AdvWS overall on the Fig. 4
+    // layer must stay within 15% of the paper's 758.6 uJ.
+    let ctx = ReportCtx::paper_default();
+    let layers = model_energy_for_family(&ctx.workloads, Family::AdvWs, &ctx.arch, &ctx.cfg);
+    let overall_uj: f64 = layers.iter().map(|l| l.overall_j()).sum::<f64>() * 1e6;
+    assert!(
+        (645.0..875.0).contains(&overall_uj),
+        "AdvWS overall {overall_uj} uJ vs paper 758.6"
+    );
+}
+
+#[test]
+fn measured_sparsity_changes_the_numbers_not_the_winner() {
+    let cfg = EnergyConfig::default();
+    let model = SnnModel::paper_layer();
+    let lo = ReportCtx::with_model(model.clone(), SparsityProfile::nominal(1, 0.10), cfg.clone());
+    let hi = ReportCtx::with_model(model, SparsityProfile::nominal(1, 0.90), cfg.clone());
+    for ctx in [&lo, &hi] {
+        let pool = ArchPool::paper_pool();
+        let res = explore(&pool, &ctx.workloads, &ctx.cfg, &DseConfig::default());
+        assert_eq!(res.best().unwrap().dataflow, "Advanced WS");
+    }
+    let e_lo: f64 = model_energy_for_family(&lo.workloads, Family::AdvWs, &lo.arch, &cfg)
+        .iter()
+        .map(|l| l.overall_j())
+        .sum();
+    let e_hi: f64 = model_energy_for_family(&hi.workloads, Family::AdvWs, &hi.arch, &cfg)
+        .iter()
+        .map(|l| l.overall_j())
+        .sum();
+    assert!(e_hi > e_lo);
+}
+
+#[test]
+fn deep_network_sweep_is_consistent() {
+    // Per-layer energies of the CIFAR-100 net must sum to the model total
+    // and stay finite across every family and scheme.
+    let cfg = EnergyConfig::default();
+    let wls = generate(&SnnModel::cifar100_snn(), &[], 0.5).unwrap();
+    for scheme in ArrayScheme::paper_candidates() {
+        let arch = Architecture::with_array(scheme);
+        for fam in Family::ALL {
+            let layers = model_energy_for_family(&wls, fam, &arch, &cfg);
+            assert_eq!(layers.len(), wls.len());
+            for l in &layers {
+                assert!(l.overall_j().is_finite() && l.overall_j() > 0.0);
+                assert!(l.fp_total_j() > 0.0 && l.bp_total_j() > 0.0 && l.wg_total_j() > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn odd_shaped_models_survive_the_whole_stack() {
+    // Non-power-of-two channels, 5x5 kernels, stride 2, rectangular input.
+    let model = SnnModel {
+        name: "odd".into(),
+        input: (3, 24, 20),
+        layers: vec![
+            LayerSpec::Conv { out_channels: 12, kernel: 5, stride: 1, padding: 2 },
+            LayerSpec::Conv { out_channels: 20, kernel: 3, stride: 2, padding: 1 },
+            LayerSpec::AvgPool2,
+            LayerSpec::Linear { out_features: 7 },
+        ],
+        timesteps: 3,
+        batch: 5,
+    };
+    let cfg = EnergyConfig::default();
+    let sp = SparsityProfile::synthetic_decay(4, 0.4, 0.7);
+    let wls = generate(&model, &sp.per_layer, 0.5).unwrap();
+    let pool = ArchPool::paper_pool();
+    let res = explore(&pool, &wls, &cfg, &DseConfig { random_samples: 1, ..Default::default() });
+    assert_eq!(res.evaluations, 4 * 5 * 2);
+    assert!(res.best().unwrap().overall_j > 0.0);
+}
+
+#[test]
+fn reports_write_and_reload() {
+    let ctx = ReportCtx::paper_default();
+    let dir = std::env::temp_dir().join(format!("eocas_it_{}", std::process::id()));
+    let files = report::write_all(&ctx, &dir).unwrap();
+    // CSVs must parse as CSV (header + rows with equal column count).
+    for f in files.iter().filter(|f| f.extension().map(|e| e == "csv").unwrap_or(false)) {
+        let text = std::fs::read_to_string(f).unwrap();
+        let mut lines = text.lines();
+        let header_cols = lines.next().unwrap().split(',').count();
+        for line in lines {
+            assert!(
+                line.split(',').count() >= header_cols,
+                "ragged CSV {f:?}: {line}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,148 @@
+//! Randomized model-level validation: the analytical reuse/energy model
+//! against the event-level odometer, over randomly generated SNN layers
+//! and mappings (not just the paper's fixed workload).
+
+use eocas::arch::{Architecture, ArrayScheme, MemoryPool};
+use eocas::config::EnergyConfig;
+use eocas::dataflow::templates::{all_families, Family};
+use eocas::energy::layer_energy_for_family;
+use eocas::model::{LayerSpec, SnnModel};
+use eocas::sim;
+use eocas::util::prng::SplitMix64;
+use eocas::workload::{generate, LayerWorkload};
+
+/// Random small layer (extents kept tiny so the odometer walk is cheap).
+fn random_small_workload(rng: &mut SplitMix64) -> LayerWorkload {
+    let c = 1 + rng.next_below(6) as u32;
+    let m = 1 + rng.next_below(6) as u32;
+    let hw = 3 + rng.next_below(5) as u32; // 3..7
+    let k = *rng.choose(&[1u32, 3]);
+    let model = SnnModel {
+        name: "rand".into(),
+        input: (c, hw, hw),
+        layers: vec![LayerSpec::Conv {
+            out_channels: m,
+            kernel: k,
+            stride: 1,
+            padding: k / 2,
+        }],
+        timesteps: 1 + rng.next_below(3) as u32,
+        batch: 1 + rng.next_below(3) as u32,
+    };
+    generate(&model, &[], 0.5).unwrap().remove(0)
+}
+
+fn random_small_arch(rng: &mut SplitMix64) -> Architecture {
+    let rows = 1u32 << rng.next_below(3); // 1..4
+    let cols = 1u32 << rng.next_below(3);
+    Architecture {
+        array: ArrayScheme::new(rows, cols),
+        mem: MemoryPool::paper_default(),
+        pe_reg_bits: 64,
+    }
+}
+
+#[test]
+fn odometer_agrees_on_random_layers_and_architectures() {
+    let mut rng = SplitMix64::new(0xBEEF);
+    let mut checked = 0usize;
+    for _ in 0..40 {
+        let wl = random_small_workload(&mut rng);
+        let arch = random_small_arch(&mut rng);
+        for w in wl.convs() {
+            for (fam, m) in all_families(w, &arch) {
+                if !m.validate(&w.dims, &arch.array).is_empty() {
+                    continue;
+                }
+                // Skip walks that would be slow; most random cases fit.
+                let temporal: u64 = (0..3)
+                    .map(|lvl| {
+                        eocas::workload::Dim::ALL
+                            .iter()
+                            .map(|&d| m.temporal(d, lvl))
+                            .product::<u64>()
+                    })
+                    .product();
+                if temporal > 1 << 20 {
+                    continue;
+                }
+                let mm = sim::max_mismatch(w, &m, 1 << 22);
+                assert!(
+                    mm < 1e-9,
+                    "{} {:?} on {}: mismatch {mm}",
+                    fam.name(),
+                    w.phase,
+                    arch.array.label()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 300, "only {checked} cases walked");
+}
+
+#[test]
+fn energy_is_monotone_in_every_technology_constant() {
+    // Raising any single energy constant must not lower any dataflow's
+    // total energy (a classic metamorphic test for cost models).
+    let wls = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
+    let arch = Architecture::paper_default();
+    let base_cfg = EnergyConfig::default();
+    let base: Vec<f64> = Family::ALL
+        .iter()
+        .map(|&f| layer_energy_for_family(&wls[0], f, &arch, &base_cfg).overall_j())
+        .collect();
+    let bumps: Vec<(&str, EnergyConfig)> = vec![
+        ("mux", EnergyConfig { op_mux_pj: base_cfg.op_mux_pj * 2.0, ..base_cfg.clone() }),
+        ("add", EnergyConfig { op_add_pj: base_cfg.op_add_pj * 2.0, ..base_cfg.clone() }),
+        ("mul", EnergyConfig { op_mul_pj: base_cfg.op_mul_pj * 2.0, ..base_cfg.clone() }),
+        ("dram_r", EnergyConfig { dram_read_pj: base_cfg.dram_read_pj * 2.0, ..base_cfg.clone() }),
+        ("dram_w", EnergyConfig { dram_write_pj: base_cfg.dram_write_pj * 2.0, ..base_cfg.clone() }),
+        ("sram_r", EnergyConfig { sram_read_pj: base_cfg.sram_read_pj * 2.0, ..base_cfg.clone() }),
+        ("sram_w", EnergyConfig { sram_write_pj: base_cfg.sram_write_pj * 2.0, ..base_cfg.clone() }),
+        ("reg_w", EnergyConfig { reg_write_pj: base_cfg.reg_write_pj * 2.0, ..base_cfg.clone() }),
+    ];
+    for (name, cfg) in bumps {
+        for (i, &fam) in Family::ALL.iter().enumerate() {
+            let e = layer_energy_for_family(&wls[0], fam, &arch, &cfg).overall_j();
+            assert!(
+                e >= base[i] - 1e-18,
+                "bumping {name} lowered {} energy: {e} < {}",
+                fam.name(),
+                base[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn bigger_workloads_cost_more_energy_and_cycles() {
+    let arch = Architecture::paper_default();
+    let cfg = EnergyConfig::default();
+    let small = generate(&SnnModel::tiny_snn(1, 2, 10), &[], 0.5).unwrap();
+    let big = generate(&SnnModel::tiny_snn(4, 4, 10), &[], 0.5).unwrap();
+    let sum = |wls: &[LayerWorkload]| -> (f64, u64) {
+        wls.iter()
+            .map(|wl| {
+                let le = layer_energy_for_family(wl, Family::AdvWs, &arch, &cfg);
+                (le.overall_j(), le.cycles())
+            })
+            .fold((0.0, 0), |(e, c), (de, dc)| (e + de, c + dc))
+    };
+    let (e_small, c_small) = sum(&small);
+    let (e_big, c_big) = sum(&big);
+    // 4x batch x 2x timesteps = 8x the work.
+    assert!(e_big > 4.0 * e_small, "{e_big} vs {e_small}");
+    assert!(c_big > 4 * c_small);
+}
+
+#[test]
+fn op_counts_scale_linearly_in_batch_and_time() {
+    let base = generate(&SnnModel::tiny_snn(1, 1, 10), &[], 0.5).unwrap();
+    let scaled = generate(&SnnModel::tiny_snn(3, 2, 10), &[], 0.5).unwrap();
+    for (b, s) in base.iter().zip(&scaled) {
+        let (bm, sm) = (b.fp.op_counts().mux, s.fp.op_counts().mux);
+        assert_eq!(sm, bm * 6, "layer {}: {sm} vs {bm}", b.layer);
+        assert_eq!(s.units.soma_ops, b.units.soma_ops * 6);
+    }
+}
