@@ -11,19 +11,20 @@ use eocas::dataflow::templates::{all_families, sram_tile_bits};
 use eocas::energy::conv_energy;
 use eocas::model::SnnModel;
 use eocas::reuse::workload_access;
+use eocas::util::error::Result;
 use eocas::workload::generate;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let which = std::env::args().nth(1).unwrap_or_else(|| "paper".into());
     let model = match which.as_str() {
         "paper" => SnnModel::paper_layer(),
         "cifar100" => SnnModel::cifar100_snn(),
         "tiny" => eocas::coordinator::trained_model(),
-        other => anyhow::bail!("unknown model {other}"),
+        other => eocas::bail!("unknown model {other}"),
     };
     let cfg = EnergyConfig::default();
     let arch = Architecture::paper_default();
-    let wls = generate(&model, &[], cfg.nominal_activity).map_err(anyhow::Error::msg)?;
+    let wls = generate(&model, &[], cfg.nominal_activity)?;
     let wl = &wls[0];
 
     for w in wl.convs() {

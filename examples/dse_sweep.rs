@@ -1,20 +1,19 @@
 //! Full design-space sweep: reproduces Table III (array schemes),
 //! Table IV/V (dataflows) and Fig. 5 (energy intervals) in one run, over
-//! both the paper's representative layer and the full CIFAR-100 network.
+//! both the paper's representative layer and the full CIFAR-100 network —
+//! all through the unified `Session` batch API.
 //!
 //!     cargo run --release --example dse_sweep
 
 use eocas::arch::ArchPool;
-use eocas::config::EnergyConfig;
 use eocas::dse::{explore, DseConfig};
 use eocas::model::SnnModel;
 use eocas::report::{self, ReportCtx};
+use eocas::session::Session;
 use eocas::sparsity::SparsityProfile;
-use eocas::workload::generate;
+use eocas::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
-    let cfg = EnergyConfig::default();
-
+fn main() -> Result<()> {
     // ---- Paper setting: Fig. 4 layer ------------------------------------
     let ctx = ReportCtx::paper_default();
     print!("{}", report::table3_array_schemes(&ctx).render());
@@ -26,21 +25,26 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Full-network sweep: CIFAR-100 SNN with depth-decaying activity --
     let model = SnnModel::cifar100_snn();
-    let n_layers = model.shaped_layers().map_err(anyhow::Error::msg)?.len();
+    let n_layers = model.shaped_layers()?.len();
     let sparsity = SparsityProfile::synthetic_decay(n_layers, 0.35, 0.8);
     println!("\n=== full-network sweep: {} ===", model.name);
-    let wls = generate(&model, &sparsity.per_layer, cfg.nominal_activity)
-        .map_err(anyhow::Error::msg)?;
     // Extended pool: every 256-MAC arrangement x 3 memory scalings.
-    let pool = ArchPool::extended(256, &[0.5, 1.0, 2.0]);
+    let session = Session::builder()
+        .arch_pool(ArchPool::extended(256, &[0.5, 1.0, 2.0]))
+        .build();
     let start = std::time::Instant::now();
-    let res = explore(&pool, &wls, &cfg, &DseConfig { random_samples: 2, ..Default::default() });
+    let res = explore(
+        &session,
+        &model,
+        &sparsity,
+        &DseConfig { random_samples: 2, ..Default::default() },
+    )?;
     println!(
         "explored {} candidates in {:.0} ms",
         res.evaluations,
         start.elapsed().as_secs_f64() * 1e3
     );
-    let best = res.best().unwrap();
+    let best = res.best().expect("non-empty pool");
     println!(
         "optimum: {} ({}) + {} @ {:.1} uJ / training pass",
         best.arch.array.label(),

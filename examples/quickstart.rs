@@ -4,49 +4,44 @@
 //!     cargo run --release --example quickstart
 //!
 //! This touches the whole analytical stack — model → workload → dataflow
-//! template → reuse analysis → energy model → perf model — in ~30 lines.
+//! template → reuse analysis → energy model → perf model — through the
+//! one front door (`Session::evaluate`) in ~25 lines.
 
 use eocas::arch::Architecture;
-use eocas::config::EnergyConfig;
 use eocas::dataflow::templates::Family;
-use eocas::energy::model_energy_for_family;
 use eocas::model::SnnModel;
-use eocas::perfmodel::{chip_metrics, AreaModel};
-use eocas::workload::generate;
+use eocas::session::{EvalRequest, Session};
+use eocas::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // 1. The workload: the paper's CIFAR-100 representative layer
     //    (P=Q=32, R=S=3, M=C=32, T=6, N=1).
     let model = SnnModel::paper_layer();
     println!("{model}");
 
-    // 2. Its training workload (FP + BP + WG convolutions, eqs. 4-12),
-    //    at the nominal spike activity.
-    let cfg = EnergyConfig::default();
-    let workloads = generate(&model, &[], cfg.nominal_activity).map_err(anyhow::Error::msg)?;
-
-    // 3. The architecture EOCAS selects (Table III): 16x16 MACs, 2.03 MB.
+    // 2. The architecture EOCAS selects (Table III): 16x16 MACs, 2.03 MB.
     let arch = Architecture::paper_default();
     println!("architecture: {}", arch.label());
 
-    // 4. Evaluate under the paper's Advanced-WS dataflow.
-    let layers = model_energy_for_family(&workloads, Family::AdvWs, &arch, &cfg);
-    for le in &layers {
+    // 3. Evaluate under the paper's Advanced-WS dataflow.
+    let session = Session::new();
+    let res = session.evaluate(&EvalRequest::new(model, arch, Family::AdvWs))?;
+    for le in &res.layers {
         println!(
             "FP {:.2} uJ (conv {:.2} + soma {:.2}) | BP {:.2} uJ (conv {:.2} + grad {:.2}) | WG {:.2} uJ | overall {:.2} uJ",
             le.fp_total_j() * 1e6,
             le.fp.total_j() * 1e6,
-            le.units.soma_j() * 1e6,
+            le.soma_j() * 1e6,
             le.bp_total_j() * 1e6,
             le.bp.total_j() * 1e6,
-            le.units.grad_j() * 1e6,
+            le.grad_j() * 1e6,
             le.wg_total_j() * 1e6,
             le.overall_j() * 1e6,
         );
     }
 
-    // 5. Chip-level metrics (the paper's §IV-B numbers).
-    let m = chip_metrics(&layers, &arch, &cfg, &AreaModel::default());
+    // 4. Chip-level metrics (the paper's §IV-B numbers).
+    let m = &res.chip;
     println!(
         "power {:.3} W | peak {:.3} TOPS | {:.2} TOPS/W | area {:.2} mm2 | mem {:.2} MB",
         m.power_w, m.peak_tops, m.tops_per_w, m.area_mm2, m.memory_mb

@@ -10,9 +10,10 @@
 
 use eocas::coordinator::{run, PipelineConfig};
 use eocas::trainer::TrainerConfig;
+use eocas::util::error::Result;
 use eocas::util::stats;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
     let cfg = PipelineConfig {
         trainer: TrainerConfig { steps, lr: 0.1, seed: 42, log_every: 25 },
@@ -38,7 +39,9 @@ fn main() -> anyhow::Result<()> {
         losses.last().unwrap(),
         outcome.run_log.train_accuracy
     );
-    anyhow::ensure!(slope < 0.0, "loss did not trend downward");
+    if slope >= 0.0 {
+        eocas::bail!("loss did not trend downward");
+    }
 
     // --- Measured sparsity -> DSE ---------------------------------------
     println!("\n=== measured spike activity (Spar^l) ===");

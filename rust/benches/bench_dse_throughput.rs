@@ -1,16 +1,19 @@
-//! Bench: the L3 hot path — mapping-evaluation throughput of the DSE
-//! engine (DESIGN.md §9 target: >= 100k evaluations/s/core).
+//! Bench: the L3 hot path — evaluation throughput of the unified
+//! `Session` API, which is the real serving path (DESIGN.md §9 target:
+//! >= 100k evaluations/s/core on prebuilt mappings).
 //!
-//! Measures (a) a single layer-energy evaluation, (b) a single-threaded
-//! pool sweep, (c) the multi-threaded sweep, and reports evaluations/s.
-//! EXPERIMENTS.md §Perf records before/after for the optimization pass.
+//! Measures (a) a single conv-energy evaluation, (b) a cold single
+//! `Session::evaluate`, (c) a warm (cached) `evaluate`, and (d) the
+//! batched DSE sweep through `evaluate_many` at 1 thread vs all cores.
 
 use eocas::arch::{ArchPool, Architecture};
 use eocas::config::EnergyConfig;
 use eocas::dataflow::templates::{generate as gen_mapping, Family};
 use eocas::dse::{explore, DseConfig};
-use eocas::energy::{conv_energy, layer_energy_for_family};
+use eocas::energy::conv_energy;
 use eocas::model::SnnModel;
+use eocas::session::{EvalRequest, Session};
+use eocas::sparsity::SparsityProfile;
 use eocas::util::bench::{black_box, time_it};
 use eocas::workload::generate;
 
@@ -29,28 +32,50 @@ fn main() {
     println!("{}", s.report());
     println!("  => {:.0} conv evaluations/s/core\n", 1e9 / s.mean_ns);
 
-    // (b) full layer evaluation incl. template generation + capacity fit.
-    let s = time_it("layer_energy_for_family (template+fit+3 convs)", 200, 1.5, || {
-        black_box(layer_energy_for_family(wl, Family::AdvWs, &arch, &cfg));
+    // (b/c) the serving path: Session::evaluate cold vs warm. The warm
+    // number is what repeated scenarios cost in a long-lived session.
+    let session = Session::builder().threads(1).build();
+    let req = EvalRequest::new(SnnModel::paper_layer(), arch.clone(), Family::AdvWs);
+    let s = time_it("Session::evaluate (cold, cleared cache)", 200, 1.5, || {
+        session.clear_caches();
+        black_box(session.evaluate(&req).unwrap());
     });
     println!("{}", s.report());
-    println!("  => {:.0} layer evaluations/s/core\n", 1e9 / s.mean_ns);
+    println!("  => {:.0} cold evaluations/s\n", 1e9 / s.mean_ns);
 
-    // (c) pool sweeps, 1 thread vs all cores.
-    let pool = ArchPool::extended(256, &[0.5, 1.0, 2.0]);
-    let cifar = generate(&SnnModel::cifar100_snn(), &[], 0.75).unwrap();
+    session.evaluate(&req).unwrap(); // prime the cache
+    let s = time_it("Session::evaluate (warm cache hit)", 2000, 1.5, || {
+        black_box(session.evaluate(&req).unwrap());
+    });
+    println!("{}", s.report());
+    let stats = session.cache_stats();
+    println!(
+        "  => {:.0} warm evaluations/s ({} hits / {} misses)\n",
+        1e9 / s.mean_ns,
+        stats.result_hits,
+        stats.result_misses
+    );
+
+    // (d) batched pool sweeps through evaluate_many, 1 thread vs all
+    // cores — the path BENCH_*.json trajectories track.
+    let cifar = SnnModel::cifar100_snn();
+    let sparsity = SparsityProfile::nominal(0, 0.75);
     for threads in [1usize, 0] {
-        let dse_cfg = DseConfig { random_samples: 4, threads, ..Default::default() };
+        let session = Session::builder()
+            .arch_pool(ArchPool::extended(256, &[0.5, 1.0, 2.0]))
+            .threads(threads)
+            .build();
+        let dse_cfg = DseConfig { random_samples: 4, ..Default::default() };
         let label = if threads == 1 { "1 thread" } else { "all cores" };
         let mut evals = 0usize;
         let s = time_it(&format!("DSE sweep cifar100 x 27 archs ({label})"), 3, 2.0, || {
-            evals = explore(&pool, &cifar, &cfg, &dse_cfg).evaluations;
+            session.clear_caches();
+            evals = explore(&session, &cifar, &sparsity, &dse_cfg).unwrap().evaluations;
         });
         println!("{}", s.report());
         println!(
-            "  => {} candidates x {} layers, {:.0} candidate-evals/s\n",
+            "  => {} candidate-evals, {:.0} candidate-evals/s\n",
             evals,
-            cifar.len(),
             evals as f64 / (s.mean_ns / 1e9)
         );
     }

@@ -1,18 +1,26 @@
 //! Bench: PJRT runtime latency — artifact compile time, spike-conv kernel
 //! execution, full train-step execution, and steps/s of the training
-//! loop. Skips (exit 0) when artifacts are missing.
+//! loop. Skips (exit 0) when artifacts are missing or the binary was
+//! built without the `pjrt` feature.
 
 use eocas::runtime::{artifact, Runtime, Tensor};
 use eocas::trainer::{Trainer, TrainerConfig};
 use eocas::util::bench::{black_box, fmt_ns, time_it};
+use eocas::util::error::Result;
 use eocas::util::prng::SplitMix64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     if artifact("train_step.hlo.txt").is_err() {
         println!("bench_runtime_pjrt: artifacts missing — run `make artifacts` (skipping)");
         return Ok(());
     }
-    let rt = Runtime::cpu()?;
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("bench_runtime_pjrt: {e} (skipping)");
+            return Ok(());
+        }
+    };
     println!("platform: {}", rt.platform());
 
     // Compile latency (uncached; the runtime caches afterwards).

@@ -1,37 +1,53 @@
 //! Bench: regenerates **Table IV** (overall energy of the five dataflows,
 //! computation + memory access) and checks the paper's headline orderings
-//! at runtime, then times the evaluation.
+//! at runtime, then times the evaluation through the batched Session API.
 //!
 //! Paper reference (uJ overall): AdvWS 758.6 < WS1 1146.8 < WS2 1715.5 <
 //! OS 1958.4 ≈ RS 1966.2; AdvWS saves 33.8–61.4%.
 
 use eocas::dataflow::templates::Family;
-use eocas::energy::model_energy_for_family;
 use eocas::report::{table4_dataflow_energy, ReportCtx};
+use eocas::session::EvalRequest;
 use eocas::util::bench::{black_box, time_it};
 
 fn main() {
     let ctx = ReportCtx::paper_default();
     print!("{}", table4_dataflow_energy(&ctx).render());
 
-    // Runtime assertion of the reproduced shape.
-    let total = |f: Family| -> f64 {
-        model_energy_for_family(&ctx.workloads, f, &ctx.arch, &ctx.cfg)
-            .iter()
-            .map(|l| l.overall_j())
-            .sum()
-    };
-    let adv = total(Family::AdvWs);
-    let worst = Family::ALL.iter().map(|&f| total(f)).fold(f64::MIN, f64::max);
+    // Runtime assertion of the reproduced shape, via the Session API.
+    let reqs: Vec<EvalRequest> = Family::ALL
+        .iter()
+        .map(|&f| {
+            EvalRequest::new(ctx.model.clone(), ctx.arch.clone(), f)
+                .with_sparsity(ctx.sparsity.clone())
+        })
+        .collect();
+    let results: Vec<f64> = ctx
+        .session
+        .evaluate_many(&reqs)
+        .into_iter()
+        .map(|r| r.unwrap().overall_j)
+        .collect();
+    let adv = results[0];
+    let worst = results.iter().fold(f64::MIN, |a, &b| a.max(b));
     println!(
         "Advanced WS saves {:.1}% vs the worst dataflow (paper: up to 61.4%)\n",
         (1.0 - adv / worst) * 100.0
     );
-    assert!(Family::ALL.iter().all(|&f| total(f) >= adv), "AdvWS must win");
+    assert!(results.iter().all(|&t| t >= adv), "AdvWS must win");
 
-    let stats = time_it("table4: 5-dataflow evaluation (Fig.4 layer)", 20, 1.0, || {
-        for f in Family::ALL {
-            black_box(model_energy_for_family(&ctx.workloads, f, &ctx.arch, &ctx.cfg));
+    let stats = time_it("table4: 5-dataflow batch (Fig.4 layer, warm session)", 20, 1.0, || {
+        for r in ctx.session.evaluate_many(&reqs) {
+            black_box(r.unwrap());
+        }
+    });
+    println!("{}", stats.report());
+
+    ctx.session.clear_caches();
+    let stats = time_it("table4: 5-dataflow batch (cold cache)", 20, 1.0, || {
+        ctx.session.clear_caches();
+        for r in ctx.session.evaluate_many(&reqs) {
+            black_box(r.unwrap());
         }
     });
     println!("{}", stats.report());

@@ -5,23 +5,26 @@
 //! Paper reference (uJ compute overall): 259.2 – 267.0 across dataflows.
 
 use eocas::dataflow::templates::Family;
-use eocas::energy::model_energy_for_family;
 use eocas::report::{table5_compute_energy, ReportCtx};
+use eocas::session::EvalRequest;
 use eocas::util::bench::{black_box, time_it};
 
 fn main() {
     let ctx = ReportCtx::paper_default();
     print!("{}", table5_compute_energy(&ctx).render());
 
-    let computes: Vec<f64> = Family::ALL
+    let reqs: Vec<EvalRequest> = Family::ALL
         .iter()
         .map(|&f| {
-            model_energy_for_family(&ctx.workloads, f, &ctx.arch, &ctx.cfg)
-                .iter()
-                .map(|l| l.compute_j())
-                .sum::<f64>()
-                * 1e6
+            EvalRequest::new(ctx.model.clone(), ctx.arch.clone(), f)
+                .with_sparsity(ctx.sparsity.clone())
         })
+        .collect();
+    let computes: Vec<f64> = ctx
+        .session
+        .evaluate_many(&reqs)
+        .into_iter()
+        .map(|r| r.unwrap().compute_j * 1e6)
         .collect();
     let (lo, hi) = eocas::util::stats::min_max(&computes).unwrap();
     println!(

@@ -8,8 +8,6 @@
 
 use eocas::compare::{headline_claims, our_asic_row};
 use eocas::dataflow::templates::Family;
-use eocas::energy::model_energy_for_family;
-use eocas::perfmodel::{chip_metrics, AreaModel};
 use eocas::report::{table6_fpga, table7_asic, ReportCtx};
 use eocas::util::bench::{black_box, time_it};
 
@@ -18,8 +16,8 @@ fn main() {
     print!("{}", table6_fpga(&ctx).render());
     print!("{}", table7_asic(&ctx).render());
 
-    let layers = model_energy_for_family(&ctx.workloads, Family::AdvWs, &ctx.arch, &ctx.cfg);
-    let metrics = chip_metrics(&layers, &ctx.arch, &ctx.cfg, &AreaModel::default());
+    // Chip metrics come straight off the session evaluation.
+    let metrics = ctx.evaluate(Family::AdvWs).chip.clone();
     let claims = headline_claims(&our_asic_row(&metrics));
     println!(
         "headline claims: {:.2}x TrueNorth TOPS/W (paper 2.76x) | {:.1}% less memory than SATA (paper 49.25%) | {:.2}x TVLSI'23 power (paper ~0.1x)\n",

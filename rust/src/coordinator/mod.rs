@@ -4,27 +4,29 @@
 //! This is the composition the reproduction demonstrates: EOCAS's energy
 //! assessment consuming *measured* per-layer firing rates from a real
 //! BPTT run executed through the PJRT runtime, instead of nominal
-//! constants.
+//! constants. One [`Session`] carries the whole loop, so the DSE sweep
+//! and the report set share workload generation and evaluation caches.
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
-
-use crate::arch::ArchPool;
 use crate::config::EnergyConfig;
 use crate::dse::{self, DseConfig};
+use crate::err;
 use crate::model::SnnModel;
 use crate::report::{self, ReportCtx};
 use crate::runtime::Runtime;
+use crate::session::Session;
 use crate::sparsity::SparsityProfile;
 use crate::trainer::{RunLog, Trainer, TrainerConfig};
-use crate::workload::generate;
+use crate::util::error::{Context, Result};
 
 /// Pipeline options.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
     pub trainer: TrainerConfig,
     pub dse: DseConfig,
+    /// Worker threads for the evaluation session (0 = all cores).
+    pub threads: usize,
     /// Where to write the run log + reports.
     pub out_dir: PathBuf,
     /// Skip training and reuse an existing run log if present.
@@ -36,6 +38,7 @@ impl Default for PipelineConfig {
         Self {
             trainer: TrainerConfig::default(),
             dse: DseConfig::default(),
+            threads: 0,
             out_dir: PathBuf::from("reports"),
             reuse_run_log: false,
         }
@@ -63,7 +66,7 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineOutcome> {
         eprintln!("[pipeline] reusing {}", log_path.display());
         let text = std::fs::read_to_string(&log_path)?;
         let j = crate::util::json::Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parse run log: {e}"))?;
+            .map_err(|e| err!("parse run log: {e}"))?;
         let losses = j
             .get("losses")
             .and_then(|v| v.as_arr())
@@ -99,22 +102,23 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineOutcome> {
 
     // 2. Measured sparsity profile.
     let sparsity = SparsityProfile::from_run_log(&run_log.to_json())
-        .map_err(|e| anyhow::anyhow!("sparsity from run log: {e}"))?;
+        .map_err(|e| err!("sparsity from run log: {e}"))?;
     eprintln!(
         "[pipeline] measured firing rates: {:?} (source {})",
         sparsity.per_layer, sparsity.source
     );
 
-    // 3. DSE over the trained model with measured Spar^l.
-    let energy_cfg = EnergyConfig::default();
+    // 3. DSE over the trained model with measured Spar^l, through one
+    //    shared evaluation session.
+    let session = Session::builder()
+        .energy_config(EnergyConfig::default())
+        .threads(cfg.threads)
+        .build();
     let model = trained_model();
-    // Spiking layers are the conv after the input layer + the readout's
-    // spike input; extend the measured rates over compute layers.
-    let wls = generate(&model, &sparsity.per_layer, energy_cfg.nominal_activity)
-        .map_err(|e| anyhow::anyhow!("workload: {e}"))?;
-    let pool = ArchPool::paper_pool();
-    let res = dse::explore(&pool, &wls, &energy_cfg, &cfg.dse);
-    let best = res.best().expect("non-empty DSE");
+    let res = dse::explore(&session, &model, &sparsity, &cfg.dse)?;
+    let best = res.best().ok_or_else(|| {
+        err!("design space is empty (no architectures or dataflow families configured)")
+    })?;
     eprintln!(
         "[pipeline] optimum: {} + {} @ {:.2} uJ ({} candidates)",
         best.arch.array.label(),
@@ -122,15 +126,17 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineOutcome> {
         best.overall_j * 1e6,
         res.evaluations
     );
+    let (best_arch, best_dataflow, best_energy_j) =
+        (best.arch.array.label(), best.dataflow.clone(), best.overall_j);
 
-    // 4. Reports with measured sparsity.
-    let ctx = ReportCtx::with_model(model, sparsity.clone(), energy_cfg);
+    // 4. Reports with measured sparsity, reusing the session's caches.
+    let ctx = ReportCtx::with_session(session, model, sparsity.clone())?;
     let report_files = report::write_all(&ctx, &cfg.out_dir)?;
 
     Ok(PipelineOutcome {
-        best_arch: best.arch.array.label(),
-        best_dataflow: best.dataflow.clone(),
-        best_energy_j: best.overall_j,
+        best_arch,
+        best_dataflow,
+        best_energy_j,
         run_log,
         sparsity,
         report_files,

@@ -3,31 +3,35 @@
 //! EOCAS "takes SNN models, accelerator architecture and a memory pool as
 //! inputs to generate dataflows and evaluate the performance of each
 //! situation to obtain the optimal architecture and dataflow". This module
-//! crosses the architecture pool with the dataflow families (plus, for
-//! Fig. 5's energy-interval scatter, randomized mapping perturbations),
-//! evaluates every candidate with the energy model, and reports the
-//! optimum and the Pareto front. Evaluation is embarrassingly parallel
-//! and runs on `std::thread` workers.
+//! crosses the session's architecture pool with the dataflow families
+//! (plus, for Fig. 5's energy-interval scatter, randomized mapping
+//! perturbations) and is now a thin sweep over the unified evaluation
+//! API: it builds one [`EvalRequest`] per candidate and submits the whole
+//! batch through [`Session::evaluate_many`], which supplies the worker
+//! pool and the workload/result caches.
 
 pub mod mapper;
 
-use std::sync::Mutex;
+use std::sync::Arc;
 
-use crate::arch::{ArchPool, Architecture};
-use crate::config::EnergyConfig;
+use crate::arch::Architecture;
 use crate::dataflow::templates::{self, Family};
 use crate::dataflow::Mapping;
-use crate::energy::{conv_energy, unit_energy, LayerEnergy};
+use crate::model::SnnModel;
+use crate::session::{EvalRequest, EvalResult, Session};
+use crate::sparsity::SparsityProfile;
+use crate::util::error::Result;
 use crate::util::prng::SplitMix64;
-use crate::workload::{ConvWorkload, Dim, LayerWorkload};
+use crate::workload::{ConvWorkload, Dim};
 
 /// One evaluated point of the design space.
 #[derive(Debug, Clone)]
 pub struct Candidate {
     pub arch: Architecture,
-    /// Dataflow family, or "random-N" for sampled mappings.
+    /// Dataflow family, or "<family>~rand-N" for sampled mappings.
     pub dataflow: String,
-    pub layers: Vec<LayerEnergy>,
+    /// Full evaluation behind this point (layer breakdown, chip metrics).
+    pub result: Arc<EvalResult>,
     pub overall_j: f64,
     pub conv_mem_j: f64,
     pub cycles: u64,
@@ -40,13 +44,11 @@ pub struct DseConfig {
     /// Extra randomized mapping samples per (architecture, family).
     pub random_samples: usize,
     pub seed: u64,
-    /// Worker threads (0 = available_parallelism).
-    pub threads: usize,
 }
 
 impl Default for DseConfig {
     fn default() -> Self {
-        Self { families: Family::ALL.to_vec(), random_samples: 0, seed: 0xE0CA5, threads: 0 }
+        Self { families: Family::ALL.to_vec(), random_samples: 0, seed: 0xE0CA5 }
     }
 }
 
@@ -58,7 +60,7 @@ pub struct DseResult {
 }
 
 impl DseResult {
-    /// Minimum-energy candidate.
+    /// Minimum-energy candidate (`None` for an empty pool/family set).
     pub fn best(&self) -> Option<&Candidate> {
         self.candidates
             .iter()
@@ -88,51 +90,10 @@ impl DseResult {
     }
 }
 
-/// Evaluate one (architecture, family) pair over all layers.
-pub fn evaluate_family(
-    wls: &[LayerWorkload],
-    family: Family,
-    arch: &Architecture,
-    cfg: &EnergyConfig,
-) -> Candidate {
-    let layers: Vec<LayerEnergy> = wls
-        .iter()
-        .map(|wl| crate::energy::layer_energy_for_family(wl, family, arch, cfg))
-        .collect();
-    finish_candidate(arch.clone(), family.name().to_string(), layers)
-}
-
-/// Evaluate explicit per-phase mappings (used by the random sampler and by
-/// callers that hand-build mappings).
-pub fn evaluate_mappings(
-    wls: &[LayerWorkload],
-    label: String,
-    arch: &Architecture,
-    cfg: &EnergyConfig,
-    mapper: &mut dyn FnMut(&ConvWorkload) -> Mapping,
-) -> Candidate {
-    let layers: Vec<LayerEnergy> = wls
-        .iter()
-        .map(|wl| LayerEnergy {
-            layer: wl.layer,
-            fp: conv_energy(&wl.fp, &mapper(&wl.fp), arch, cfg),
-            bp: conv_energy(&wl.bp, &mapper(&wl.bp), arch, cfg),
-            wg: conv_energy(&wl.wg, &mapper(&wl.wg), arch, cfg),
-            units: unit_energy(&wl.units, arch, cfg),
-        })
-        .collect();
-    finish_candidate(arch.clone(), label, layers)
-}
-
-fn finish_candidate(arch: Architecture, dataflow: String, layers: Vec<LayerEnergy>) -> Candidate {
-    let overall_j = layers.iter().map(|l| l.overall_j()).sum();
-    let conv_mem_j = layers.iter().map(|l| l.conv_mem_j()).sum();
-    let cycles = layers.iter().map(|l| l.cycles()).sum();
-    Candidate { arch, dataflow, layers, overall_j, conv_mem_j, cycles }
-}
-
 /// Randomly perturb a family template's tile factors (×2 / ÷2 jitters on
 /// register and SRAM factors), keeping the mapping valid and capacity-fit.
+/// The session's jittered-evaluation path (`EvalOptions::jitter_seed`)
+/// calls this per phase with one RNG stream.
 pub fn jittered_mapping(
     w: &ConvWorkload,
     arch: &Architecture,
@@ -175,66 +136,60 @@ pub fn jittered_mapping(
     templates::refit(m, w, arch)
 }
 
-/// Run the full exploration: every architecture × every family
-/// (+ `random_samples` jittered variants each), in parallel.
-pub fn explore(
-    pool: &ArchPool,
-    wls: &[LayerWorkload],
-    cfg: &EnergyConfig,
-    dse: &DseConfig,
-) -> DseResult {
-    // Work items: (arch index, family, sample index or None).
-    let mut items: Vec<(usize, Family, Option<usize>)> = Vec::new();
-    for (ai, _) in pool.candidates.iter().enumerate() {
-        for &fam in &dse.families {
-            items.push((ai, fam, None));
-            for s in 0..dse.random_samples {
-                items.push((ai, fam, Some(s)));
-            }
-        }
-    }
-    let n_threads = if dse.threads > 0 {
-        dse.threads
-    } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-    }
-    .min(items.len().max(1));
+/// Deterministic per-candidate jitter seed (stable across runs and
+/// thread counts).
+fn jitter_seed(base: u64, arch_idx: usize, sample: usize, fam: Family) -> u64 {
+    base ^ ((arch_idx as u64) << 32) ^ ((sample as u64) << 8) ^ fam as u64
+}
 
-    // Thread-local result buffers merged once at the end: the per-item
-    // mutex showed up in profiles (EXPERIMENTS.md §Perf, iteration 3).
-    let results = Mutex::new(Vec::with_capacity(items.len()));
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads {
-            scope.spawn(|| {
-                let mut local = Vec::with_capacity(items.len() / n_threads + 1);
-                loop {
-                    let idx = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if idx >= items.len() {
-                        break;
-                    }
-                    let (ai, fam, sample) = items[idx];
-                    let arch = &pool.candidates[ai];
-                    let cand = match sample {
-                        None => evaluate_family(wls, fam, arch, cfg),
-                        Some(s) => {
-                            // Deterministic per-item stream: seed ⊕ item id.
-                            let mut rng = SplitMix64::new(
-                                dse.seed ^ ((ai as u64) << 32) ^ ((s as u64) << 8) ^ fam as u64,
-                            );
-                            let label = format!("{}~rand{}", fam.name(), s);
-                            let mut mapper = |w: &ConvWorkload| jittered_mapping(w, arch, fam, &mut rng);
-                            evaluate_mappings(wls, label, arch, cfg, &mut mapper)
-                        }
-                    };
-                    local.push(cand);
-                }
-                results.lock().unwrap().append(&mut local);
-            });
+/// Build the request list for one exploration: every pool architecture ×
+/// every family (+ `random_samples` jittered variants each).
+pub fn requests(
+    session: &Session,
+    model: &SnnModel,
+    sparsity: &SparsityProfile,
+    dse: &DseConfig,
+) -> Vec<EvalRequest> {
+    let mut reqs = Vec::new();
+    for (ai, arch) in session.arch_pool().candidates.iter().enumerate() {
+        for &fam in &dse.families {
+            let base = EvalRequest::new(model.clone(), arch.clone(), fam)
+                .with_sparsity(sparsity.clone());
+            for s in 0..dse.random_samples {
+                reqs.push(base.clone().jittered(
+                    jitter_seed(dse.seed, ai, s, fam),
+                    format!("{}~rand{s}", fam.name()),
+                ));
+            }
+            reqs.push(base);
         }
-    });
-    let mut candidates = results.into_inner().unwrap();
-    // Deterministic output order regardless of thread interleaving.
+    }
+    reqs
+}
+
+/// Run the full exploration as one batched `evaluate_many` call over the
+/// session's architecture pool.
+pub fn explore(
+    session: &Session,
+    model: &SnnModel,
+    sparsity: &SparsityProfile,
+    dse: &DseConfig,
+) -> Result<DseResult> {
+    let reqs = requests(session, model, sparsity, dse);
+    let results = session.evaluate_many(&reqs);
+    let mut candidates = Vec::with_capacity(reqs.len());
+    for (req, res) in reqs.iter().zip(results) {
+        let result = res?;
+        candidates.push(Candidate {
+            arch: req.arch.clone(),
+            dataflow: result.dataflow.clone(),
+            overall_j: result.overall_j,
+            conv_mem_j: result.conv_mem_j,
+            cycles: result.cycles,
+            result,
+        });
+    }
+    // Deterministic output order regardless of request construction.
     candidates.sort_by(|a, b| {
         a.arch
             .array
@@ -243,24 +198,24 @@ pub fn explore(
             .then(a.dataflow.cmp(&b.dataflow))
     });
     let evaluations = candidates.len();
-    DseResult { candidates, evaluations }
+    Ok(DseResult { candidates, evaluations })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::ArchPool;
     use crate::model::SnnModel;
-    use crate::workload::generate;
 
-    fn setup() -> (ArchPool, Vec<LayerWorkload>, EnergyConfig) {
-        let wls = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
-        (ArchPool::paper_pool(), wls, EnergyConfig::default())
+    fn setup() -> (Session, SnnModel, SparsityProfile) {
+        let session = Session::builder().threads(2).build();
+        (session, SnnModel::paper_layer(), SparsityProfile::nominal(1, 0.75))
     }
 
     #[test]
     fn exploration_finds_paper_optimum() {
-        let (pool, wls, cfg) = setup();
-        let res = explore(&pool, &wls, &cfg, &DseConfig::default());
+        let (session, model, sparsity) = setup();
+        let res = explore(&session, &model, &sparsity, &DseConfig::default()).unwrap();
         assert_eq!(res.evaluations, 4 * 5);
         let best = res.best().unwrap();
         // Table III + IV: 16x16 with Advanced WS is the optimum.
@@ -270,9 +225,9 @@ mod tests {
 
     #[test]
     fn random_samples_expand_the_space_without_beating_validity() {
-        let (pool, wls, cfg) = setup();
+        let (session, model, sparsity) = setup();
         let dse = DseConfig { random_samples: 3, ..Default::default() };
-        let res = explore(&pool, &wls, &cfg, &dse);
+        let res = explore(&session, &model, &sparsity, &dse).unwrap();
         assert_eq!(res.evaluations, 4 * 5 * 4);
         // Every sampled mapping must have produced finite positive energy.
         assert!(res.candidates.iter().all(|c| c.overall_j.is_finite() && c.overall_j > 0.0));
@@ -280,8 +235,8 @@ mod tests {
 
     #[test]
     fn jittered_mappings_stay_valid() {
-        let (pool, wls, cfg) = setup();
-        let _ = cfg;
+        let pool = ArchPool::paper_pool();
+        let wls = crate::workload::generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
         let arch = &pool.candidates[0];
         let mut rng = SplitMix64::new(7);
         for _ in 0..100 {
@@ -295,9 +250,9 @@ mod tests {
 
     #[test]
     fn pareto_front_is_monotone() {
-        let (pool, wls, cfg) = setup();
+        let (session, model, sparsity) = setup();
         let dse = DseConfig { random_samples: 5, ..Default::default() };
-        let res = explore(&pool, &wls, &cfg, &dse);
+        let res = explore(&session, &model, &sparsity, &dse).unwrap();
         let front = res.pareto();
         assert!(!front.is_empty());
         for pair in front.windows(2) {
@@ -308,10 +263,12 @@ mod tests {
 
     #[test]
     fn deterministic_across_thread_counts() {
-        let (pool, wls, cfg) = setup();
+        let (_, model, sparsity) = setup();
         let mk = |threads| {
-            let dse = DseConfig { random_samples: 2, threads, ..Default::default() };
-            explore(&pool, &wls, &cfg, &dse)
+            let session = Session::builder().threads(threads).build();
+            let dse = DseConfig { random_samples: 2, ..Default::default() };
+            explore(&session, &model, &sparsity, &dse)
+                .unwrap()
                 .candidates
                 .iter()
                 .map(|c| (c.dataflow.clone(), c.overall_j))
@@ -321,11 +278,35 @@ mod tests {
     }
 
     #[test]
+    fn empty_family_set_yields_no_best() {
+        let (session, model, sparsity) = setup();
+        let dse = DseConfig { families: Vec::new(), ..Default::default() };
+        let res = explore(&session, &model, &sparsity, &dse).unwrap();
+        assert_eq!(res.evaluations, 0);
+        assert!(res.best().is_none());
+        assert!(res.energy_interval().is_none());
+    }
+
+    #[test]
     fn energy_interval_brackets_best() {
-        let (pool, wls, cfg) = setup();
-        let res = explore(&pool, &wls, &cfg, &DseConfig::default());
+        let (session, model, sparsity) = setup();
+        let res = explore(&session, &model, &sparsity, &DseConfig::default()).unwrap();
         let (lo, hi) = res.energy_interval().unwrap();
         assert!(lo <= res.best().unwrap().overall_j);
         assert!(hi >= lo);
+    }
+
+    #[test]
+    fn warm_cache_reexploration_is_identical() {
+        let (session, model, sparsity) = setup();
+        let dse = DseConfig { random_samples: 1, ..Default::default() };
+        let cold = explore(&session, &model, &sparsity, &dse).unwrap();
+        let warm = explore(&session, &model, &sparsity, &dse).unwrap();
+        assert_eq!(cold.evaluations, warm.evaluations);
+        for (a, b) in cold.candidates.iter().zip(&warm.candidates) {
+            assert_eq!(*a.result, *b.result);
+        }
+        let stats = session.cache_stats();
+        assert!(stats.result_hits >= cold.evaluations as u64);
     }
 }

@@ -16,8 +16,12 @@
 //!   artifacts that [`runtime`] loads; Python never runs at simulation or
 //!   serving time.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! Every evaluation — CLI subcommands, the DSE sweep, the pipeline
+//! coordinator, report generation and the benches — goes through one
+//! front door: [`session::Session`] with typed [`session::EvalRequest`] /
+//! [`session::EvalResult`] pairs (batched, cached, executed on a
+//! persistent worker pool). See `DESIGN.md` (repo root) for the Session
+//! API, its JSON schema, and the experiment index.
 
 pub mod arch;
 pub mod compare;
@@ -31,6 +35,7 @@ pub mod perfmodel;
 pub mod report;
 pub mod reuse;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod sparsity;
 pub mod trainer;

@@ -4,28 +4,33 @@
 //! -----------
 //! * `report <name>`   regenerate a paper table/figure (or `all`)
 //! * `simulate`        evaluate one model × architecture × dataflow
+//!                     (`--json` emits the stable `EvalResult` schema)
 //! * `dse`             explore the design space, print optimum + Pareto
 //! * `train`           run SNN BPTT through PJRT, write the run log
 //! * `pipeline`        end-to-end: train → measured sparsity → DSE → reports
 //!
+//! Every evaluation goes through `eocas::session` — the CLI builds one
+//! `Session` per invocation and submits `EvalRequest`s.
 //! (Arg parsing is hand-rolled: no clap in the offline vendor set.)
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use eocas::arch::ArchPool;
+use eocas::arch::{ArchPool, Architecture};
+use eocas::bail;
 use eocas::config::EnergyConfig;
 use eocas::coordinator::{self, PipelineConfig};
 use eocas::dataflow::templates::Family;
 use eocas::dse::{self, DseConfig};
-use eocas::energy::model_energy_for_family;
+use eocas::err;
 use eocas::model::SnnModel;
 use eocas::report::{self, ReportCtx};
 use eocas::runtime::Runtime;
+use eocas::session::{EvalRequest, Session};
 use eocas::sparsity::SparsityProfile;
 use eocas::trainer::{Trainer, TrainerConfig};
-use eocas::workload::generate;
+use eocas::util::error::Result;
 
 const USAGE: &str = "\
 eocas — Energy-Oriented Computing Architecture Simulator for SNN training
@@ -34,10 +39,13 @@ USAGE:
   eocas report <workload|table1|table3|table4|table5|table6|table7|fig5|fig6|all>
                [--out DIR] [--model paper|cifar100|tiny] [--sparsity PATH]
   eocas simulate [--model paper|cifar100|tiny] [--dataflow advws|ws1|ws2|os|rs]
-                 [--activity X] [--config PATH]
+                 [--activity X] [--config PATH] [--sparsity PATH] [--json]
   eocas dse      [--samples N] [--threads N] [--model ...]
   eocas train    [--steps N] [--lr X] [--seed N] [--log PATH]
-  eocas pipeline [--steps N] [--out DIR] [--reuse]
+  eocas pipeline [--steps N] [--out DIR] [--reuse] [--threads N]
+
+Flags take values as `--key value` or `--key=value`; a flag with no value
+is boolean true. Repeating a flag is an error.
 ";
 
 fn main() -> ExitCode {
@@ -45,26 +53,51 @@ fn main() -> ExitCode {
     match run(&args) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             ExitCode::FAILURE
         }
     }
 }
 
-/// Split `args` into positionals and `--key value` flags
-/// (`--flag` followed by another flag or end counts as boolean "true").
-fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+/// Split `args` into positionals and `--key value` / `--key=value` flags.
+///
+/// Rules (unit-tested below):
+/// * `--key value` binds the next token as the value — including negative
+///   numbers (`--lr -0.1`) and anything else that is not itself a `--flag`.
+/// * `--key=value` always binds, even for values that look like flags.
+/// * A `--flag` followed by another `--flag` (or end of input) is boolean
+///   `"true"`.
+/// * Repeating a flag is an error (previously the last value silently
+///   won).
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)> {
     let mut pos = Vec::new();
-    let mut flags = HashMap::new();
+    let mut flags: HashMap<String, String> = HashMap::new();
+    let mut insert = |key: &str, val: String| -> Result<()> {
+        if key.is_empty() {
+            bail!("empty flag name (`--`)");
+        }
+        if flags.insert(key.to_string(), val).is_some() {
+            bail!("flag --{key} given more than once");
+        }
+        Ok(())
+    };
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
+            if let Some((key, val)) = key.split_once('=') {
+                insert(key, val.to_string())?;
+                i += 1;
+                continue;
+            }
+            // `--key value`: the next token is a value unless it is
+            // itself a long flag. Bare negative numbers ("-0.1") are
+            // values, not flags.
             let has_val = i + 1 < args.len() && !args[i + 1].starts_with("--");
             if has_val {
-                flags.insert(key.to_string(), args[i + 1].clone());
+                insert(key, args[i + 1].clone())?;
                 i += 2;
             } else {
-                flags.insert(key.to_string(), "true".to_string());
+                insert(key, "true".to_string())?;
                 i += 1;
             }
         } else {
@@ -72,51 +105,90 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
             i += 1;
         }
     }
-    (pos, flags)
+    Ok((pos, flags))
 }
 
-fn pick_model(flags: &HashMap<String, String>) -> anyhow::Result<SnnModel> {
+/// Parse a flag's value, naming the flag in the error.
+fn parse_num<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|e| err!("--{key} {s}: {e}")),
+    }
+}
+
+fn pick_model(flags: &HashMap<String, String>) -> Result<SnnModel> {
     match flags.get("model").map(|s| s.as_str()).unwrap_or("paper") {
         "paper" => Ok(SnnModel::paper_layer()),
         "cifar100" => Ok(SnnModel::cifar100_snn()),
         "tiny" => Ok(coordinator::trained_model()),
-        other => anyhow::bail!("unknown model `{other}` (paper|cifar100|tiny)"),
+        other => bail!("unknown model `{other}` (paper|cifar100|tiny)"),
     }
 }
 
-fn pick_family(name: &str) -> anyhow::Result<Family> {
+fn pick_family(name: &str) -> Result<Family> {
     Ok(match name.to_lowercase().as_str() {
         "advws" | "advanced" | "advanced-ws" => Family::AdvWs,
         "ws1" => Family::Ws1,
         "ws2" => Family::Ws2,
         "os" => Family::Os,
         "rs" => Family::Rs,
-        other => anyhow::bail!("unknown dataflow `{other}`"),
+        other => bail!("unknown dataflow `{other}`"),
     })
 }
 
-fn energy_config(flags: &HashMap<String, String>) -> anyhow::Result<EnergyConfig> {
+fn energy_config(flags: &HashMap<String, String>) -> Result<EnergyConfig> {
     match flags.get("config") {
-        Some(p) => EnergyConfig::load(std::path::Path::new(p))
-            .map_err(|e| anyhow::anyhow!("config: {e}")),
+        Some(p) => EnergyConfig::load(std::path::Path::new(p)).map_err(|e| err!("config: {e}")),
         None => Ok(EnergyConfig::default()),
     }
 }
 
-fn report_ctx(flags: &HashMap<String, String>) -> anyhow::Result<ReportCtx> {
-    let cfg = energy_config(flags)?;
-    let model = pick_model(flags)?;
-    let n_layers = model.shaped_layers().map(|l| l.len()).unwrap_or(1);
-    let sparsity = match flags.get("sparsity") {
-        Some(p) => SparsityProfile::load(std::path::Path::new(p))
-            .map_err(|e| anyhow::anyhow!("sparsity: {e}"))?,
-        None => SparsityProfile::nominal(n_layers, cfg.nominal_activity),
-    };
-    Ok(ReportCtx::with_model(model, sparsity, cfg))
+/// `--sparsity PATH` (a trainer run log), if given.
+fn sparsity_flag(flags: &HashMap<String, String>) -> Result<Option<SparsityProfile>> {
+    flags
+        .get("sparsity")
+        .map(|p| {
+            SparsityProfile::load(std::path::Path::new(p)).map_err(|e| err!("sparsity: {e}"))
+        })
+        .transpose()
 }
 
-fn run(args: &[String]) -> anyhow::Result<()> {
-    let (pos, flags) = parse_flags(args);
+/// Sparsity profile: `--sparsity PATH` or nominal per-layer activity.
+fn pick_sparsity(
+    flags: &HashMap<String, String>,
+    model: &SnnModel,
+    cfg: &EnergyConfig,
+) -> Result<SparsityProfile> {
+    match sparsity_flag(flags)? {
+        Some(sp) => Ok(sp),
+        None => {
+            let n_layers = model.shaped_layers().map(|l| l.len()).unwrap_or(1);
+            Ok(SparsityProfile::nominal(n_layers, cfg.nominal_activity))
+        }
+    }
+}
+
+/// Build the session-backed report context from CLI flags.
+fn report_ctx(flags: &HashMap<String, String>) -> Result<ReportCtx> {
+    let cfg = energy_config(flags)?;
+    let model = pick_model(flags)?;
+    let sparsity = pick_sparsity(flags, &model, &cfg)?;
+    let session = Session::builder()
+        .energy_config(cfg)
+        .threads(parse_num(flags, "threads", 0usize)?)
+        .build();
+    ReportCtx::with_session(session, model, sparsity)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let (pos, flags) = parse_flags(args)?;
     let cmd = pos.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "help" | "-h" | "--help" => {
@@ -147,7 +219,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     println!("wrote {} report files under {}", files.len(), out.display());
                     print!("{}", report::table4_dataflow_energy(&ctx).render());
                 }
-                other => anyhow::bail!("unknown report `{other}`"),
+                other => bail!("unknown report `{other}`"),
             }
             Ok(())
         }
@@ -155,18 +227,23 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             let cfg = energy_config(&flags)?;
             let model = pick_model(&flags)?;
             let fam = pick_family(flags.get("dataflow").map(|s| s.as_str()).unwrap_or("advws"))?;
-            let activity: f64 = flags
-                .get("activity")
-                .map(|s| s.parse())
-                .transpose()?
-                .unwrap_or(cfg.nominal_activity);
-            let wls = generate(&model, &[], activity).map_err(|e| anyhow::anyhow!(e))?;
-            let arch = eocas::arch::Architecture::paper_default();
-            let layers = model_energy_for_family(&wls, fam, &arch, &cfg);
+            let activity = parse_num(&flags, "activity", cfg.nominal_activity)?;
+            let session = Session::builder().energy_config(cfg).build();
+            // No --sparsity: leave the profile empty so --activity applies
+            // to every layer (the request's default-activity path).
+            let mut req = EvalRequest::new(model.clone(), Architecture::paper_default(), fam)
+                .with_activity(activity);
+            if let Some(sp) = sparsity_flag(&flags)? {
+                req = req.with_sparsity(sp);
+            }
+            let res = session.evaluate(&req)?;
+            if flags.contains_key("json") {
+                println!("{}", res.to_json().dumps());
+                return Ok(());
+            }
             println!("{model}");
-            println!("architecture: {}   dataflow: {}", arch.label(), fam.name());
-            let mut total = 0.0;
-            for le in &layers {
+            println!("architecture: {}   dataflow: {}", res.arch, res.dataflow);
+            for le in &res.layers {
                 println!(
                     "  layer {:>2}: FP {:>9.3} uJ  BP {:>9.3} uJ  WG {:>9.3} uJ  overall {:>9.3} uJ",
                     le.layer,
@@ -175,15 +252,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                     le.wg_total_j() * 1e6,
                     le.overall_j() * 1e6
                 );
-                total += le.overall_j();
             }
-            println!("total: {:.3} uJ over {} layers", total * 1e6, layers.len());
-            let metrics = eocas::perfmodel::chip_metrics(
-                &layers,
-                &arch,
-                &cfg,
-                &eocas::perfmodel::AreaModel::default(),
-            );
+            println!("total: {:.3} uJ over {} layers", res.overall_j * 1e6, res.layers.len());
+            let metrics = &res.chip;
             println!(
                 "power {:.3} W | peak {:.3} TOPS | {:.2} TOPS/W | area {:.2} mm2 | util {:.0}%",
                 metrics.power_w,
@@ -197,20 +268,18 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "dse" => {
             let cfg = energy_config(&flags)?;
             let model = pick_model(&flags)?;
-            let wls = generate(&model, &[], cfg.nominal_activity)
-                .map_err(|e| anyhow::anyhow!(e))?;
+            let sparsity = pick_sparsity(&flags, &model, &cfg)?;
             let dse_cfg = DseConfig {
-                random_samples: flags
-                    .get("samples")
-                    .map(|s| s.parse())
-                    .transpose()?
-                    .unwrap_or(0),
-                threads: flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(0),
+                random_samples: parse_num(&flags, "samples", 0usize)?,
                 ..Default::default()
             };
-            let pool = ArchPool::paper_pool();
+            let session = Session::builder()
+                .energy_config(cfg)
+                .arch_pool(ArchPool::paper_pool())
+                .threads(parse_num(&flags, "threads", 0usize)?)
+                .build();
             let start = std::time::Instant::now();
-            let res = dse::explore(&pool, &wls, &cfg, &dse_cfg);
+            let res = dse::explore(&session, &model, &sparsity, &dse_cfg)?;
             let dt = start.elapsed();
             println!(
                 "explored {} candidates in {:.1} ms ({:.0} evals/s)",
@@ -218,7 +287,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 dt.as_secs_f64() * 1e3,
                 res.evaluations as f64 / dt.as_secs_f64()
             );
-            let best = res.best().unwrap();
+            let best = res.best().ok_or_else(|| {
+                err!("design space is empty (no architectures or dataflow families to explore)")
+            })?;
             println!(
                 "optimum: {} + {} @ {:.3} uJ",
                 best.arch.array.label(),
@@ -239,10 +310,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         }
         "train" => {
             let tcfg = TrainerConfig {
-                steps: flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(300),
-                lr: flags.get("lr").map(|s| s.parse()).transpose()?.unwrap_or(0.1),
-                seed: flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42),
-                log_every: flags.get("log-every").map(|s| s.parse()).transpose()?.unwrap_or(25),
+                steps: parse_num(&flags, "steps", 300usize)?,
+                lr: parse_num(&flags, "lr", 0.1f32)?,
+                seed: parse_num(&flags, "seed", 42u64)?,
+                log_every: parse_num(&flags, "log-every", 25usize)?,
             };
             let rt = Runtime::cpu()?;
             let mut trainer = Trainer::new(&rt, tcfg.seed)?;
@@ -272,9 +343,10 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "pipeline" => {
             let cfg = PipelineConfig {
                 trainer: TrainerConfig {
-                    steps: flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(200),
+                    steps: parse_num(&flags, "steps", 200usize)?,
                     ..Default::default()
                 },
+                threads: parse_num(&flags, "threads", 0usize)?,
                 out_dir: PathBuf::from(flags.get("out").cloned().unwrap_or("reports".into())),
                 reuse_run_log: flags.contains_key("reuse"),
                 ..Default::default()
@@ -291,7 +363,93 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         }
         other => {
             eprint!("{USAGE}");
-            anyhow::bail!("unknown command `{other}`")
+            bail!("unknown command `{other}`")
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn positionals_and_flags_split() {
+        let (pos, flags) =
+            parse_flags(&args(&["report", "table4", "--model", "cifar100"])).unwrap();
+        assert_eq!(pos, vec!["report", "table4"]);
+        assert_eq!(flags.get("model").unwrap(), "cifar100");
+    }
+
+    #[test]
+    fn negative_numeric_values_bind_to_the_flag() {
+        let (pos, flags) = parse_flags(&args(&["train", "--lr", "-0.1", "--steps", "5"])).unwrap();
+        assert_eq!(pos, vec!["train"]);
+        assert_eq!(flags.get("lr").unwrap(), "-0.1");
+        assert_eq!(flags.get("steps").unwrap(), "5");
+        assert_eq!(flags.get("lr").unwrap().parse::<f32>().unwrap(), -0.1);
+    }
+
+    #[test]
+    fn equals_form_binds_even_flaglike_values() {
+        let (_, flags) =
+            parse_flags(&args(&["x", "--lr=-0.1", "--note=--weird", "--out=dir"])).unwrap();
+        assert_eq!(flags.get("lr").unwrap(), "-0.1");
+        assert_eq!(flags.get("note").unwrap(), "--weird");
+        assert_eq!(flags.get("out").unwrap(), "dir");
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let (_, flags) = parse_flags(&args(&["pipeline", "--reuse", "--steps", "7"])).unwrap();
+        assert_eq!(flags.get("reuse").unwrap(), "true");
+        assert_eq!(flags.get("steps").unwrap(), "7");
+        let (_, flags) = parse_flags(&args(&["simulate", "--json"])).unwrap();
+        assert_eq!(flags.get("json").unwrap(), "true");
+    }
+
+    #[test]
+    fn repeated_flags_are_an_error() {
+        let e = parse_flags(&args(&["dse", "--samples", "2", "--samples", "3"])).unwrap_err();
+        assert!(e.to_string().contains("--samples"), "{e}");
+        // `--key=v --key` is also a repeat.
+        assert!(parse_flags(&args(&["x", "--a=1", "--a"])).is_err());
+    }
+
+    #[test]
+    fn empty_flag_name_is_an_error() {
+        assert!(parse_flags(&args(&["x", "--", "y"])).is_err());
+    }
+
+    #[test]
+    fn parse_num_names_the_flag_in_errors() {
+        let (_, flags) = parse_flags(&args(&["dse", "--samples", "many"])).unwrap();
+        let e = parse_num(&flags, "samples", 0usize).unwrap_err();
+        assert!(e.to_string().contains("--samples many"), "{e}");
+        assert_eq!(parse_num(&flags, "threads", 4usize).unwrap(), 4);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert!(run(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn simulate_json_round_trips_through_the_schema() {
+        // The CLI's --json output is exactly EvalResult::to_json; prove
+        // the underlying value round-trips.
+        let session = Session::new();
+        let req = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        );
+        let res = session.evaluate(&req).unwrap();
+        let text = res.to_json().dumps();
+        let back = eocas::session::EvalResult::from_json_str(&text).unwrap();
+        assert_eq!(*res, back);
     }
 }

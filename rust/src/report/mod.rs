@@ -2,48 +2,100 @@
 //! evaluation (§IV) from the simulator's own numbers.
 //!
 //! Each `table*`/`fig*` function returns a rendered [`Table`] (ASCII +
-//! CSV); [`write_all`] dumps the full set under `reports/`. The bench
-//! harnesses print the same rows, so `cargo bench` output and CLI output
-//! always agree.
+//! CSV); [`write_all`] dumps the full set under `reports/`. All energy
+//! numbers come through the unified [`Session`] API — a [`ReportCtx`] is
+//! a session plus the scenario (model, sparsity, reference architecture),
+//! so repeated tables reuse the session's workload/result caches and the
+//! bench harnesses print the same rows the CLI prints.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use crate::arch::{ArchPool, Architecture, ArrayScheme};
+use crate::arch::{Architecture, ArrayScheme};
 use crate::compare;
 use crate::config::EnergyConfig;
 use crate::dataflow::templates::{self, Family};
 use crate::dse::{self, DseConfig};
-use crate::energy::{layer_energy_for_family, model_energy_for_family};
 use crate::model::SnnModel;
-use crate::perfmodel::{chip_metrics, AreaModel, FpgaModel};
+use crate::perfmodel::FpgaModel;
+use crate::session::{EvalRequest, EvalResult, Session};
 use crate::sparsity::SparsityProfile;
+use crate::util::error::Result;
 use crate::util::table::{bar_chart, fmt_f, fmt_uj, Align, Table};
-use crate::workload::{generate, LayerWorkload};
+use crate::workload::LayerWorkload;
 
-/// Everything needed to produce the paper's experiment set.
+/// Everything needed to produce the paper's experiment set: the session
+/// (the evaluation engine) plus one scenario.
 pub struct ReportCtx {
+    pub session: Session,
     pub model: SnnModel,
-    pub workloads: Vec<LayerWorkload>,
-    pub arch: Architecture,
-    pub cfg: EnergyConfig,
     pub sparsity: SparsityProfile,
+    /// Reference architecture for single-architecture tables.
+    pub arch: Architecture,
+    /// Raw generated workloads (loop extents for Fig. 4 / Table I views).
+    pub workloads: Arc<Vec<LayerWorkload>>,
 }
 
 impl ReportCtx {
     /// The paper's experimental setting: Fig. 4 layer, 16×16 array,
     /// 2.03 MB pool, nominal activity.
     pub fn paper_default() -> ReportCtx {
-        let cfg = EnergyConfig::default();
-        let model = SnnModel::paper_layer();
-        let sparsity = SparsityProfile::nominal(1, cfg.nominal_activity);
-        let workloads = generate(&model, &sparsity.per_layer, cfg.nominal_activity).unwrap();
-        ReportCtx { model, workloads, arch: Architecture::paper_default(), cfg, sparsity }
+        let session = Session::new();
+        let nominal = session.energy_config().nominal_activity;
+        ReportCtx::with_session(session, SnnModel::paper_layer(), SparsityProfile::nominal(1, nominal))
+            .expect("paper defaults are a valid scenario")
     }
 
-    /// Same reports for an arbitrary model + measured sparsity.
-    pub fn with_model(model: SnnModel, sparsity: SparsityProfile, cfg: EnergyConfig) -> ReportCtx {
-        let workloads = generate(&model, &sparsity.per_layer, cfg.nominal_activity).unwrap();
-        ReportCtx { model, workloads, arch: Architecture::paper_default(), cfg, sparsity }
+    /// Same reports for an arbitrary model + measured sparsity. Errors
+    /// on models that fail shape inference.
+    pub fn with_model(
+        model: SnnModel,
+        sparsity: SparsityProfile,
+        cfg: EnergyConfig,
+    ) -> Result<ReportCtx> {
+        ReportCtx::with_session(Session::builder().energy_config(cfg).build(), model, sparsity)
+    }
+
+    /// Wrap an existing session (pipeline callers share its caches).
+    /// Errors on models that fail shape inference.
+    pub fn with_session(
+        session: Session,
+        model: SnnModel,
+        sparsity: SparsityProfile,
+    ) -> Result<ReportCtx> {
+        let nominal = session.energy_config().nominal_activity;
+        let workloads = session.workloads(&model, &sparsity, nominal)?;
+        Ok(ReportCtx { session, model, sparsity, arch: Architecture::paper_default(), workloads })
+    }
+
+    /// The session's energy constants.
+    pub fn cfg(&self) -> &EnergyConfig {
+        self.session.energy_config()
+    }
+
+    /// Request for this scenario on an explicit architecture.
+    fn request(&self, arch: &Architecture, family: Family) -> EvalRequest {
+        EvalRequest::new(self.model.clone(), arch.clone(), family)
+            .with_sparsity(self.sparsity.clone())
+    }
+
+    /// Evaluate this scenario under `family` on the reference
+    /// architecture (cached inside the session).
+    pub fn evaluate(&self, family: Family) -> Arc<EvalResult> {
+        self.session
+            .evaluate(&self.request(&self.arch, family))
+            .expect("report evaluation")
+    }
+
+    /// Batch-evaluate all five families on the reference architecture.
+    fn evaluate_families(&self) -> Vec<Arc<EvalResult>> {
+        let reqs: Vec<EvalRequest> =
+            Family::ALL.iter().map(|&f| self.request(&self.arch, f)).collect();
+        self.session
+            .evaluate_many(&reqs)
+            .into_iter()
+            .collect::<Result<Vec<_>, _>>()
+            .expect("report evaluation")
     }
 }
 
@@ -53,7 +105,7 @@ pub fn workload_table(ctx: &ReportCtx) -> Table {
         format!("Workload: {} (Fig. 4 parameters per layer)", ctx.model.name),
         &["layer", "phase", "N", "T", "M", "C", "P", "Q", "R", "S", "ops(M)", "Spar"],
     );
-    for wl in &ctx.workloads {
+    for wl in ctx.workloads.iter() {
         for w in wl.convs() {
             let d = &w.dims;
             t.add_row(vec![
@@ -102,15 +154,18 @@ pub fn table1_reuse_factors(ctx: &ReportCtx) -> Table {
 
 /// Table III: conv energy across array schemes at fixed 256 MACs / 2.03 MB.
 pub fn table3_array_schemes(ctx: &ReportCtx) -> Table {
-    let mut rows: Vec<(String, f64, f64)> = ArrayScheme::paper_candidates()
-        .into_iter()
-        .map(|s| {
-            let arch = Architecture::with_array(s);
-            let layers =
-                model_energy_for_family(&ctx.workloads, Family::AdvWs, &arch, &ctx.cfg);
-            let conv: f64 = layers.iter().map(|l| l.conv_mem_j()).sum();
-            let overall: f64 = layers.iter().map(|l| l.overall_j()).sum();
-            (s.label(), conv, overall)
+    let schemes = ArrayScheme::paper_candidates();
+    let reqs: Vec<EvalRequest> = schemes
+        .iter()
+        .map(|&s| ctx.request(&Architecture::with_array(s), Family::AdvWs))
+        .collect();
+    let results = ctx.session.evaluate_many(&reqs);
+    let mut rows: Vec<(String, f64, f64)> = schemes
+        .iter()
+        .zip(results)
+        .map(|(s, res)| {
+            let res = res.expect("table3 evaluation");
+            (s.label(), res.conv_mem_j, res.overall_j)
         })
         .collect();
     rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
@@ -152,18 +207,17 @@ pub fn table4_dataflow_energy(ctx: &ReportCtx) -> Table {
         Align::Right,
         Align::Right,
     ]);
-    for fam in Family::ALL {
-        let layers = model_energy_for_family(&ctx.workloads, fam, &ctx.arch, &ctx.cfg);
-        let sum = |f: &dyn Fn(&crate::energy::LayerEnergy) -> f64| -> f64 {
-            layers.iter().map(|l| f(l)).sum()
+    for res in ctx.evaluate_families() {
+        let sum = |f: &dyn Fn(&crate::session::LayerBreakdown) -> f64| -> f64 {
+            res.layers.iter().map(|l| f(l)).sum()
         };
         t.add_row(vec![
-            fam.name().into(),
+            res.dataflow.clone(),
             fmt_uj(sum(&|l| l.fp.total_j())),
-            fmt_uj(sum(&|l| l.units.soma_j())),
+            fmt_uj(sum(&|l| l.soma_j())),
             fmt_uj(sum(&|l| l.fp_total_j())),
             fmt_uj(sum(&|l| l.bp.total_j())),
-            fmt_uj(sum(&|l| l.units.grad_j())),
+            fmt_uj(sum(&|l| l.grad_j())),
             fmt_uj(sum(&|l| l.bp_total_j())),
             fmt_uj(sum(&|l| l.wg_total_j())),
             fmt_uj(sum(&|l| l.overall_j())),
@@ -189,18 +243,17 @@ pub fn table5_compute_energy(ctx: &ReportCtx) -> Table {
         Align::Right,
         Align::Right,
     ]);
-    for fam in Family::ALL {
-        let layers = model_energy_for_family(&ctx.workloads, fam, &ctx.arch, &ctx.cfg);
-        let sum = |f: &dyn Fn(&crate::energy::LayerEnergy) -> f64| -> f64 {
-            layers.iter().map(|l| f(l)).sum()
+    for res in ctx.evaluate_families() {
+        let sum = |f: &dyn Fn(&crate::session::LayerBreakdown) -> f64| -> f64 {
+            res.layers.iter().map(|l| f(l)).sum()
         };
         let fp_c = sum(&|l| l.fp.compute_j);
-        let soma_c = sum(&|l| l.units.soma_compute_j);
+        let soma_c = sum(&|l| l.soma_compute_j);
         let bp_c = sum(&|l| l.bp.compute_j);
-        let grad_c = sum(&|l| l.units.grad_compute_j);
+        let grad_c = sum(&|l| l.grad_compute_j);
         let wg_c = sum(&|l| l.wg.compute_j);
         t.add_row(vec![
-            fam.name().into(),
+            res.dataflow.clone(),
             fmt_uj(fp_c),
             fmt_uj(soma_c),
             fmt_uj(fp_c + soma_c),
@@ -234,7 +287,8 @@ pub fn table6_fpga(ctx: &ReportCtx) -> Table {
         Align::Right,
         Align::Right,
     ]);
-    let ours = compare::our_fpga_row(&ctx.arch, &FpgaModel::default(), ctx.cfg.clock_hz / 1e6);
+    let ours =
+        compare::our_fpga_row(&ctx.arch, &FpgaModel::default(), ctx.cfg().clock_hz / 1e6);
     for r in std::iter::once(ours).chain(compare::fpga_literature()) {
         t.add_row(vec![
             r.name.into(),
@@ -253,9 +307,8 @@ pub fn table6_fpga(ctx: &ReportCtx) -> Table {
 
 /// Table VII: ASIC comparison ("This work" derived from the perf model).
 pub fn table7_asic(ctx: &ReportCtx) -> Table {
-    let layers = model_energy_for_family(&ctx.workloads, Family::AdvWs, &ctx.arch, &ctx.cfg);
-    let metrics = chip_metrics(&layers, &ctx.arch, &ctx.cfg, &AreaModel::default());
-    let ours = compare::our_asic_row(&metrics);
+    let res = ctx.evaluate(Family::AdvWs);
+    let ours = compare::our_asic_row(&res.chip);
     let fmt_opt = |v: Option<f64>, d: usize| v.map(|x| fmt_f(x, d)).unwrap_or("-".into());
     let mut t = Table::new(
         "Table VII: comparison among SOTA ASIC designs",
@@ -296,9 +349,9 @@ pub fn table7_asic(ctx: &ReportCtx) -> Table {
 /// Fig. 5: candidate architectures spread over energy intervals.
 /// Returns (table of all candidates, histogram text).
 pub fn fig5_energy_intervals(ctx: &ReportCtx, samples: usize) -> (Table, String) {
-    let pool = ArchPool::paper_pool();
     let dse_cfg = DseConfig { random_samples: samples, ..Default::default() };
-    let res = dse::explore(&pool, &ctx.workloads, &ctx.cfg, &dse_cfg);
+    let res = dse::explore(&ctx.session, &ctx.model, &ctx.sparsity, &dse_cfg)
+        .expect("fig5 exploration");
     let mut t = Table::new(
         "Fig. 5: candidate architectures across energy intervals",
         &["scheme", "dataflow", "overall (uJ)", "conv mem (uJ)", "cycles"],
@@ -341,9 +394,9 @@ pub fn fig6_dataflow_breakdown(ctx: &ReportCtx) -> String {
     let wl = &ctx.workloads[0];
     let mut out = String::new();
     out.push_str("Fig. 6: dataflows and the energy breakdown of convolutions (16x16 MACs)\n\n");
-    for fam in Family::ALL {
-        let le = layer_energy_for_family(wl, fam, &ctx.arch, &ctx.cfg);
-        let m_fp = templates::generate(fam, &wl.fp, &ctx.arch);
+    for (fam, res) in Family::ALL.iter().zip(ctx.evaluate_families()) {
+        let le = &res.layers[0];
+        let m_fp = templates::generate(*fam, &wl.fp, &ctx.arch);
         out.push_str(&m_fp.render_loop_nest());
         let items: Vec<(String, f64)> = [
             ("FP compute".to_string(), le.fp.compute_j),
@@ -360,11 +413,11 @@ pub fn fig6_dataflow_breakdown(ctx: &ReportCtx) -> String {
             40,
         ));
         // Per-operand detail (reg/sram/dram split).
-        for ce in [&le.fp, &le.bp, &le.wg] {
-            for o in &ce.operands {
+        for (phase, pe) in [("FP", &le.fp), ("BP", &le.bp), ("WG", &le.wg)] {
+            for o in &pe.operands {
                 out.push_str(&format!(
                     "    {:>3} {:<9} reg {:>9} sram {:>9} dram {:>9} (uJ)\n",
-                    ce.phase.name(),
+                    phase,
                     o.tensor,
                     fmt_uj(o.reg_j),
                     fmt_uj(o.sram_j),
@@ -467,8 +520,30 @@ mod tests {
     fn multi_layer_ctx_renders() {
         let cfg = EnergyConfig::default();
         let sp = SparsityProfile::synthetic_decay(6, 0.3, 0.8);
-        let ctx = ReportCtx::with_model(SnnModel::cifar100_snn(), sp, cfg);
+        let ctx = ReportCtx::with_model(SnnModel::cifar100_snn(), sp, cfg).unwrap();
         assert!(table4_dataflow_energy(&ctx).n_rows() == 5);
         assert!(workload_table(&ctx).n_rows() >= 18);
+    }
+
+    #[test]
+    fn invalid_model_is_a_constructor_error() {
+        let bad = SnnModel {
+            name: "bad".into(),
+            input: (0, 0, 0),
+            layers: vec![],
+            timesteps: 1,
+            batch: 1,
+        };
+        let sp = SparsityProfile::nominal(1, 0.5);
+        assert!(ReportCtx::with_model(bad, sp, EnergyConfig::default()).is_err());
+    }
+
+    #[test]
+    fn repeated_tables_reuse_the_session_cache() {
+        let ctx = ReportCtx::paper_default();
+        let a = table4_dataflow_energy(&ctx).render();
+        let b = table4_dataflow_energy(&ctx).render();
+        assert_eq!(a, b);
+        assert!(ctx.session.cache_stats().result_hits >= 5);
     }
 }

@@ -1,138 +1,33 @@
 //! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them.
 //!
-//! This is the only place the `xla` crate is touched. The interchange
-//! format is HLO **text** (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md): jax ≥ 0.5 emits serialized protos with
+//! This is the only place the `xla` crate is touched, and only when the
+//! `pjrt` feature is enabled. The interchange format is HLO **text** (see
+//! `python/compile/aot.py`): jax ≥ 0.5 emits serialized protos with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
 //! text parser reassigns ids and round-trips cleanly.
 //!
 //! Python is never on this path: artifacts are produced once by
 //! `make artifacts`; the Rust binary is self-contained afterwards.
+//!
+//! Offline builds (the default) compile the [`stub`] backend instead: the
+//! full `Runtime`/`Module`/`Tensor` API is present (host-side tensors work
+//! normally) but creating a PJRT client returns a descriptive error, so
+//! everything except real training keeps working without `xla`.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::PathBuf;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 
-/// Wrapper over a PJRT CPU client plus a cache of compiled executables
-/// (compilation of the training-step HLO takes hundreds of ms; every
-/// trainer step reuses the cached executable).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Module>>>,
-}
+#[cfg(feature = "pjrt")]
+mod xla_backend;
+#[cfg(feature = "pjrt")]
+pub use xla_backend::{Module, Runtime, Tensor};
 
-/// A compiled HLO module ready to execute.
-pub struct Module {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text artifact, with caching by path.
-    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Module>> {
-        if let Some(m) = self.cache.lock().unwrap().get(path) {
-            return Ok(m.clone());
-        }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-        let m = std::sync::Arc::new(Module { exe, path: path.to_path_buf() });
-        self.cache.lock().unwrap().insert(path.to_path_buf(), m.clone());
-        Ok(m)
-    }
-}
-
-impl Module {
-    /// Execute with literal inputs; the artifact is lowered with
-    /// `return_tuple=True`, so the single output is a tuple that we
-    /// flatten into a `Vec<Tensor>`.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<&xla::Literal> = inputs.iter().map(|t| &t.lit).collect();
-        let out = self
-            .exe
-            .execute::<&xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.path.display()))?;
-        let result = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        parts.into_iter().map(Tensor::from_literal).collect()
-    }
-}
-
-/// A host-side f32 tensor: the runtime's lingua franca with the HLO
-/// artifacts (all L2 artifacts are lowered at f32; 16-bit widths exist
-/// only inside the energy model).
-#[derive(Clone)]
-pub struct Tensor {
-    pub dims: Vec<usize>,
-    lit: xla::Literal,
-}
-
-impl Tensor {
-    /// Build from data + dims (row-major).
-    pub fn from_f32(data: &[f32], dims: &[usize]) -> Result<Tensor> {
-        let n: usize = dims.iter().product();
-        if n != data.len() {
-            return Err(anyhow!("shape {:?} wants {n} elements, got {}", dims, data.len()));
-        }
-        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(data)
-            .reshape(&dims_i64)
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        Ok(Tensor { dims: dims.to_vec(), lit })
-    }
-
-    /// Scalar convenience.
-    pub fn scalar(v: f32) -> Tensor {
-        Tensor { dims: vec![], lit: xla::Literal::from(v) }
-    }
-
-    fn from_literal(lit: xla::Literal) -> Result<Tensor> {
-        let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
-        let dims = match &shape {
-            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
-            _ => Vec::new(),
-        };
-        Ok(Tensor { dims, lit })
-    }
-
-    /// Copy out as f32.
-    pub fn to_vec(&self) -> Result<Vec<f32>> {
-        self.lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-
-    /// First element (handy for scalar losses).
-    pub fn item(&self) -> Result<f32> {
-        self.lit
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow!("item: {e:?}"))
-    }
-
-    pub fn len(&self) -> usize {
-        self.dims.iter().product()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Module, Runtime, Tensor};
 
 /// Resolve the artifacts directory: `$EOCAS_ARTIFACTS` or `./artifacts`.
 pub fn artifacts_dir() -> PathBuf {
@@ -145,10 +40,7 @@ pub fn artifacts_dir() -> PathBuf {
 pub fn artifact(name: &str) -> Result<PathBuf> {
     let p = artifacts_dir().join(name);
     if !p.exists() {
-        return Err(anyhow!(
-            "artifact {} not found — run `make artifacts` first",
-            p.display()
-        ));
+        bail!("artifact {} not found — run `make artifacts` first", p.display());
     }
     Ok(p)
 }
@@ -158,7 +50,7 @@ pub fn artifact(name: &str) -> Result<PathBuf> {
 pub fn load_manifest() -> Result<crate::util::json::Json> {
     let p = artifact("manifest.json")?;
     let text = std::fs::read_to_string(&p).context("read manifest")?;
-    crate::util::json::Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))
+    crate::util::json::Json::parse(&text).map_err(|e| err!("manifest: {e}"))
 }
 
 #[cfg(test)]
@@ -184,6 +76,12 @@ mod tests {
         assert_eq!(t.item().unwrap(), 3.5);
     }
 
+    #[test]
+    fn missing_artifact_names_path() {
+        let e = artifact("definitely_not_there.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("definitely_not_there"));
+    }
+
     // Execution against a real artifact is covered by rust/tests/
-    // integration tests (requires `make artifacts`).
+    // integration tests (requires `make artifacts` and `--features pjrt`).
 }

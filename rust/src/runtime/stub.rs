@@ -1,0 +1,92 @@
+//! Offline runtime backend (no `xla` crate).
+//!
+//! [`Tensor`] is fully functional — it is just a host-side f32 buffer —
+//! so dataset generation, parameter initialization and every unit test
+//! that never executes an HLO module work identically to the real
+//! backend. [`Runtime::cpu`] fails with an actionable message; since all
+//! execution paths require a `Runtime` value, nothing downstream can
+//! silently "run" without PJRT.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::Result;
+use crate::{bail, err};
+
+const NO_PJRT: &str =
+    "eocas was built without the `pjrt` feature — rebuild with `--features pjrt` \
+     (requires the vendored `xla` bindings) to execute HLO artifacts";
+
+/// Stub PJRT client. Cannot be constructed; see [`Runtime::cpu`].
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails in stub builds.
+    pub fn cpu() -> Result<Runtime> {
+        Err(err!("{NO_PJRT}"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Always fails in stub builds.
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Module>> {
+        Err(err!("cannot load {}: {NO_PJRT}", path.display()))
+    }
+}
+
+/// Stub compiled module.
+pub struct Module {
+    pub path: PathBuf,
+}
+
+impl Module {
+    /// Always fails in stub builds.
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Err(err!("cannot execute {}: {NO_PJRT}", self.path.display()))
+    }
+}
+
+/// A host-side f32 tensor — same API as the `xla`-backed version, backed
+/// by a plain `Vec<f32>`.
+#[derive(Clone)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from data + dims (row-major).
+    pub fn from_f32(data: &[f32], dims: &[usize]) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", dims, data.len());
+        }
+        Ok(Tensor { dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// Scalar convenience.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    /// Copy out as f32.
+    pub fn to_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.data.clone())
+    }
+
+    /// First element (handy for scalar losses).
+    pub fn item(&self) -> Result<f32> {
+        self.data.first().copied().ok_or_else(|| err!("empty tensor has no item"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

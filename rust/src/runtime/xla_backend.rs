@@ -1,0 +1,125 @@
+//! Real PJRT backend over the vendored `xla` bindings (feature `pjrt`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::error::Result;
+use crate::{bail, err};
+
+/// Wrapper over a PJRT CPU client plus a cache of compiled executables
+/// (compilation of the training-step HLO takes hundreds of ms; every
+/// trainer step reuses the cached executable).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Module>>>,
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact, with caching by path.
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Module>> {
+        if let Some(m) = self.cache.lock().unwrap().get(path) {
+            return Ok(m.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| err!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| err!("compile {}: {e:?}", path.display()))?;
+        let m = std::sync::Arc::new(Module { exe, path: path.to_path_buf() });
+        self.cache.lock().unwrap().insert(path.to_path_buf(), m.clone());
+        Ok(m)
+    }
+}
+
+impl Module {
+    /// Execute with literal inputs; the artifact is lowered with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// flatten into a `Vec<Tensor>`.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<&xla::Literal> = inputs.iter().map(|t| &t.lit).collect();
+        let out = self
+            .exe
+            .execute::<&xla::Literal>(&literals)
+            .map_err(|e| err!("execute {}: {e:?}", self.path.display()))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| err!("untuple: {e:?}"))?;
+        parts.into_iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// A host-side f32 tensor: the runtime's lingua franca with the HLO
+/// artifacts (all L2 artifacts are lowered at f32; 16-bit widths exist
+/// only inside the energy model).
+#[derive(Clone)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    lit: xla::Literal,
+}
+
+impl Tensor {
+    /// Build from data + dims (row-major).
+    pub fn from_f32(data: &[f32], dims: &[usize]) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", dims, data.len());
+        }
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims_i64)
+            .map_err(|e| err!("reshape: {e:?}"))?;
+        Ok(Tensor { dims: dims.to_vec(), lit })
+    }
+
+    /// Scalar convenience.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { dims: vec![], lit: xla::Literal::from(v) }
+    }
+
+    fn from_literal(lit: xla::Literal) -> Result<Tensor> {
+        let shape = lit.shape().map_err(|e| err!("shape: {e:?}"))?;
+        let dims = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            _ => Vec::new(),
+        };
+        Ok(Tensor { dims, lit })
+    }
+
+    /// Copy out as f32.
+    pub fn to_vec(&self) -> Result<Vec<f32>> {
+        self.lit.to_vec::<f32>().map_err(|e| err!("to_vec: {e:?}"))
+    }
+
+    /// First element (handy for scalar losses).
+    pub fn item(&self) -> Result<f32> {
+        self.lit.get_first_element::<f32>().map_err(|e| err!("item: {e:?}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

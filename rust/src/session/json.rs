@@ -1,0 +1,528 @@
+//! JSON encoding of [`EvalRequest`]/[`EvalResult`] — the stable wire
+//! schema (`DESIGN.md` documents it; `SCHEMA_VERSION` gates evolution).
+//!
+//! No `serde` offline; encodings are hand-rolled over
+//! [`crate::util::json::Json`], whose object keys are sorted so `dumps`
+//! output is canonical and byte-stable for identical values.
+
+use super::{
+    EvalOptions, EvalRequest, EvalResult, LayerBreakdown, OperandBreakdown, PhaseEnergy,
+    SCHEMA_VERSION,
+};
+use crate::arch::{Architecture, ArrayScheme, MemoryPool, SramId, SramMacro};
+use crate::dataflow::templates::Family;
+use crate::err;
+use crate::model::{LayerSpec, SnnModel};
+use crate::perfmodel::ChipMetrics;
+use crate::sparsity::SparsityProfile;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Accessor helpers
+// ---------------------------------------------------------------------------
+
+fn get<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    j.get(k).ok_or_else(|| err!("missing key `{k}`"))
+}
+
+fn num(j: &Json, k: &str) -> Result<f64> {
+    get(j, k)?.as_f64().ok_or_else(|| err!("key `{k}` is not a number"))
+}
+
+fn uint(j: &Json, k: &str) -> Result<u64> {
+    let v = num(j, k)?;
+    // Strict: fractions would silently truncate, and values above 2^53
+    // no longer round-trip through a JSON number.
+    if v < 0.0 || v.fract() != 0.0 || v > 9_007_199_254_740_992.0 {
+        return Err(err!("key `{k}` is not an exact unsigned integer ({v})"));
+    }
+    Ok(v as u64)
+}
+
+fn text(j: &Json, k: &str) -> Result<String> {
+    Ok(get(j, k)?.as_str().ok_or_else(|| err!("key `{k}` is not a string"))?.to_string())
+}
+
+fn arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json]> {
+    get(j, k)?.as_arr().ok_or_else(|| err!("key `{k}` is not an array"))
+}
+
+fn f64s(j: &Json, k: &str) -> Result<Vec<f64>> {
+    arr(j, k)?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| err!("key `{k}` holds a non-number")))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Component encodings
+// ---------------------------------------------------------------------------
+
+/// Canonical model encoding; also the session's workload-memo key.
+pub fn model_to_json(m: &SnnModel) -> Json {
+    let mut j = Json::obj();
+    j.set("name", Json::Str(m.name.clone()))
+        .set(
+            "input",
+            Json::Arr(vec![
+                Json::Num(m.input.0 as f64),
+                Json::Num(m.input.1 as f64),
+                Json::Num(m.input.2 as f64),
+            ]),
+        )
+        .set("timesteps", Json::Num(m.timesteps as f64))
+        .set("batch", Json::Num(m.batch as f64))
+        .set("layers", Json::Arr(m.layers.iter().map(layer_to_json).collect()));
+    j
+}
+
+fn layer_to_json(l: &LayerSpec) -> Json {
+    let mut j = Json::obj();
+    match *l {
+        LayerSpec::Conv { out_channels, kernel, stride, padding } => {
+            j.set("type", Json::Str("conv".into()))
+                .set("out_channels", Json::Num(out_channels as f64))
+                .set("kernel", Json::Num(kernel as f64))
+                .set("stride", Json::Num(stride as f64))
+                .set("padding", Json::Num(padding as f64));
+        }
+        LayerSpec::AvgPool2 => {
+            j.set("type", Json::Str("avgpool2".into()));
+        }
+        LayerSpec::Linear { out_features } => {
+            j.set("type", Json::Str("linear".into()))
+                .set("out_features", Json::Num(out_features as f64));
+        }
+    }
+    j
+}
+
+pub fn model_from_json(j: &Json) -> Result<SnnModel> {
+    let input = f64s(j, "input")?;
+    if input.len() != 3 {
+        return Err(err!("model `input` wants 3 entries, got {}", input.len()));
+    }
+    let layers = arr(j, "layers")?
+        .iter()
+        .map(layer_from_json)
+        .collect::<Result<Vec<LayerSpec>>>()?;
+    Ok(SnnModel {
+        name: text(j, "name")?,
+        input: (input[0] as u32, input[1] as u32, input[2] as u32),
+        layers,
+        timesteps: uint(j, "timesteps")? as u32,
+        batch: uint(j, "batch")? as u32,
+    })
+}
+
+fn layer_from_json(j: &Json) -> Result<LayerSpec> {
+    match text(j, "type")?.as_str() {
+        "conv" => Ok(LayerSpec::Conv {
+            out_channels: uint(j, "out_channels")? as u32,
+            kernel: uint(j, "kernel")? as u32,
+            stride: uint(j, "stride")? as u32,
+            padding: uint(j, "padding")? as u32,
+        }),
+        "avgpool2" => Ok(LayerSpec::AvgPool2),
+        "linear" => Ok(LayerSpec::Linear { out_features: uint(j, "out_features")? as u32 }),
+        other => Err(err!("unknown layer type `{other}`")),
+    }
+}
+
+fn sram_key(id: SramId) -> &'static str {
+    match id {
+        SramId::V1Spike => "v1_spike",
+        SramId::V2Weight => "v2_weight",
+        SramId::V3ConvFp => "v3_conv_fp",
+        SramId::V4DeltaU => "v4_delta_u",
+        SramId::V5WeightT => "v5_weight_t",
+        SramId::V6ConvBp => "v6_conv_bp",
+        SramId::V7SpikeOut => "v7_spike_out",
+        SramId::V8DeltaW => "v8_delta_w",
+    }
+}
+
+fn sram_from_key(s: &str) -> Result<SramId> {
+    SramId::ALL
+        .into_iter()
+        .find(|&id| sram_key(id) == s)
+        .ok_or_else(|| err!("unknown SRAM macro id `{s}`"))
+}
+
+pub fn arch_to_json(a: &Architecture) -> Json {
+    let mut array = Json::obj();
+    array
+        .set("rows", Json::Num(a.array.rows as f64))
+        .set("cols", Json::Num(a.array.cols as f64));
+    let mem = a
+        .mem
+        .srams
+        .iter()
+        .map(|m| {
+            let mut j = Json::obj();
+            j.set("id", Json::Str(sram_key(m.id).into()))
+                .set("bytes", Json::Num(m.bytes as f64))
+                .set("word_bits", Json::Num(m.word_bits as f64));
+            j
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("array", array)
+        .set("mem", Json::Arr(mem))
+        .set("pe_reg_bits", Json::Num(a.pe_reg_bits as f64));
+    j
+}
+
+pub fn arch_from_json(j: &Json) -> Result<Architecture> {
+    let array = get(j, "array")?;
+    let srams = arr(j, "mem")?
+        .iter()
+        .map(|m| {
+            Ok(SramMacro {
+                id: sram_from_key(&text(m, "id")?)?,
+                bytes: uint(m, "bytes")?,
+                word_bits: uint(m, "word_bits")? as u32,
+            })
+        })
+        .collect::<Result<Vec<SramMacro>>>()?;
+    // Semantic validation: downstream template/energy code assumes a
+    // non-degenerate array and a complete Table-II macro set (missing
+    // macros would panic in `MemoryPool::get`).
+    let (rows, cols) = (uint(array, "rows")? as u32, uint(array, "cols")? as u32);
+    if rows == 0 || cols == 0 {
+        return Err(err!("degenerate array {rows}x{cols}"));
+    }
+    for id in SramId::ALL {
+        if !srams.iter().any(|m| m.id == id) {
+            return Err(err!("memory pool is missing macro `{}`", sram_key(id)));
+        }
+    }
+    Ok(Architecture {
+        array: ArrayScheme::new(rows, cols),
+        mem: MemoryPool { srams },
+        pe_reg_bits: uint(j, "pe_reg_bits")? as u32,
+    })
+}
+
+/// Stable lowercase key for a dataflow family (CLI flag spelling).
+pub fn family_key(f: Family) -> &'static str {
+    match f {
+        Family::AdvWs => "advws",
+        Family::Ws1 => "ws1",
+        Family::Ws2 => "ws2",
+        Family::Os => "os",
+        Family::Rs => "rs",
+    }
+}
+
+pub fn family_from_key(s: &str) -> Result<Family> {
+    Family::ALL
+        .into_iter()
+        .find(|&f| family_key(f) == s)
+        .ok_or_else(|| err!("unknown dataflow family `{s}`"))
+}
+
+fn sparsity_to_json(s: &SparsityProfile) -> Json {
+    let mut j = Json::obj();
+    j.set("source", Json::Str(s.source.clone()))
+        .set("per_layer", Json::from_f64s(&s.per_layer));
+    j
+}
+
+fn sparsity_from_json(j: &Json) -> Result<SparsityProfile> {
+    Ok(SparsityProfile { source: text(j, "source")?, per_layer: f64s(j, "per_layer")? })
+}
+
+fn options_to_json(o: &EvalOptions) -> Json {
+    let mut j = Json::obj();
+    j.set("activity", o.activity.map(Json::Num).unwrap_or(Json::Null))
+        .set(
+            // Stored as a string: u64 seeds above 2^53 would lose
+            // precision in a JSON number.
+            "jitter_seed",
+            o.jitter_seed.map(|s| Json::Str(s.to_string())).unwrap_or(Json::Null),
+        )
+        .set("label", o.label.clone().map(Json::Str).unwrap_or(Json::Null));
+    j
+}
+
+fn options_from_json(j: &Json) -> Result<EvalOptions> {
+    let activity = match get(j, "activity")? {
+        Json::Null => None,
+        v => Some(v.as_f64().ok_or_else(|| err!("`activity` is not a number"))?),
+    };
+    let jitter_seed = match get(j, "jitter_seed")? {
+        Json::Null => None,
+        v => {
+            let s = v.as_str().ok_or_else(|| err!("`jitter_seed` is not a string"))?;
+            Some(s.parse::<u64>().map_err(|e| err!("bad jitter seed `{s}`: {e}"))?)
+        }
+    };
+    let label = match get(j, "label")? {
+        Json::Null => None,
+        v => Some(v.as_str().ok_or_else(|| err!("`label` is not a string"))?.to_string()),
+    };
+    Ok(EvalOptions { activity, jitter_seed, label })
+}
+
+// ---------------------------------------------------------------------------
+// EvalRequest
+// ---------------------------------------------------------------------------
+
+impl EvalRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", Json::Num(SCHEMA_VERSION as f64))
+            .set("model", model_to_json(&self.model))
+            .set("arch", arch_to_json(&self.arch))
+            .set("dataflow", Json::Str(family_key(self.dataflow).into()))
+            .set("sparsity", sparsity_to_json(&self.sparsity))
+            .set("options", options_to_json(&self.options));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<EvalRequest> {
+        check_schema(j)?;
+        Ok(EvalRequest {
+            model: model_from_json(get(j, "model")?)?,
+            arch: arch_from_json(get(j, "arch")?)?,
+            dataflow: family_from_key(&text(j, "dataflow")?)?,
+            sparsity: sparsity_from_json(get(j, "sparsity")?)?,
+            options: options_from_json(get(j, "options")?)?,
+        })
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json_str(text: &str) -> Result<EvalRequest> {
+        let j = Json::parse(text).map_err(|e| err!("request JSON: {e}"))?;
+        EvalRequest::from_json(&j)
+    }
+}
+
+fn check_schema(j: &Json) -> Result<()> {
+    let schema = uint(j, "schema")? as u32;
+    if schema != SCHEMA_VERSION {
+        return Err(err!("schema version {schema} unsupported (expected {SCHEMA_VERSION})"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// EvalResult
+// ---------------------------------------------------------------------------
+
+fn operand_to_json(o: &OperandBreakdown) -> Json {
+    let mut j = Json::obj();
+    j.set("tensor", Json::Str(o.tensor.clone()))
+        .set("reg_j", Json::Num(o.reg_j))
+        .set("sram_j", Json::Num(o.sram_j))
+        .set("dram_j", Json::Num(o.dram_j));
+    j
+}
+
+fn operand_from_json(j: &Json) -> Result<OperandBreakdown> {
+    Ok(OperandBreakdown {
+        tensor: text(j, "tensor")?,
+        reg_j: num(j, "reg_j")?,
+        sram_j: num(j, "sram_j")?,
+        dram_j: num(j, "dram_j")?,
+    })
+}
+
+fn phase_to_json(p: &PhaseEnergy) -> Json {
+    let mut j = Json::obj();
+    j.set("compute_j", Json::Num(p.compute_j))
+        .set("operands", Json::Arr(p.operands.iter().map(operand_to_json).collect()))
+        .set("cycles", Json::Num(p.cycles as f64))
+        .set("utilization", Json::Num(p.utilization));
+    j
+}
+
+fn phase_from_json(j: &Json) -> Result<PhaseEnergy> {
+    Ok(PhaseEnergy {
+        compute_j: num(j, "compute_j")?,
+        operands: arr(j, "operands")?
+            .iter()
+            .map(operand_from_json)
+            .collect::<Result<Vec<_>>>()?,
+        cycles: uint(j, "cycles")?,
+        utilization: num(j, "utilization")?,
+    })
+}
+
+fn layer_breakdown_to_json(l: &LayerBreakdown) -> Json {
+    let mut j = Json::obj();
+    j.set("layer", Json::Num(l.layer as f64))
+        .set("fp", phase_to_json(&l.fp))
+        .set("bp", phase_to_json(&l.bp))
+        .set("wg", phase_to_json(&l.wg))
+        .set("soma_compute_j", Json::Num(l.soma_compute_j))
+        .set("soma_mem_j", Json::Num(l.soma_mem_j))
+        .set("grad_compute_j", Json::Num(l.grad_compute_j))
+        .set("grad_mem_j", Json::Num(l.grad_mem_j));
+    j
+}
+
+fn layer_breakdown_from_json(j: &Json) -> Result<LayerBreakdown> {
+    Ok(LayerBreakdown {
+        layer: uint(j, "layer")? as usize,
+        fp: phase_from_json(get(j, "fp")?)?,
+        bp: phase_from_json(get(j, "bp")?)?,
+        wg: phase_from_json(get(j, "wg")?)?,
+        soma_compute_j: num(j, "soma_compute_j")?,
+        soma_mem_j: num(j, "soma_mem_j")?,
+        grad_compute_j: num(j, "grad_compute_j")?,
+        grad_mem_j: num(j, "grad_mem_j")?,
+    })
+}
+
+fn chip_to_json(c: &ChipMetrics) -> Json {
+    let mut j = Json::obj();
+    j.set("energy_j", Json::Num(c.energy_j))
+        .set("cycles", Json::Num(c.cycles as f64))
+        .set("time_s", Json::Num(c.time_s))
+        .set("power_w", Json::Num(c.power_w))
+        .set("peak_tops", Json::Num(c.peak_tops))
+        .set("achieved_tops", Json::Num(c.achieved_tops))
+        .set("tops_per_w", Json::Num(c.tops_per_w))
+        .set("area_mm2", Json::Num(c.area_mm2))
+        .set("memory_mb", Json::Num(c.memory_mb))
+        .set("utilization", Json::Num(c.utilization));
+    j
+}
+
+fn chip_from_json(j: &Json) -> Result<ChipMetrics> {
+    Ok(ChipMetrics {
+        energy_j: num(j, "energy_j")?,
+        cycles: uint(j, "cycles")?,
+        time_s: num(j, "time_s")?,
+        power_w: num(j, "power_w")?,
+        peak_tops: num(j, "peak_tops")?,
+        achieved_tops: num(j, "achieved_tops")?,
+        tops_per_w: num(j, "tops_per_w")?,
+        area_mm2: num(j, "area_mm2")?,
+        memory_mb: num(j, "memory_mb")?,
+        utilization: num(j, "utilization")?,
+    })
+}
+
+impl EvalResult {
+    pub fn to_json(&self) -> Json {
+        let mut totals = Json::obj();
+        totals
+            .set("overall_j", Json::Num(self.overall_j))
+            .set("conv_mem_j", Json::Num(self.conv_mem_j))
+            .set("compute_j", Json::Num(self.compute_j))
+            .set("cycles", Json::Num(self.cycles as f64));
+        let mut j = Json::obj();
+        j.set("schema", Json::Num(self.schema as f64))
+            .set("model", Json::Str(self.model.clone()))
+            .set("arch", Json::Str(self.arch.clone()))
+            .set("dataflow", Json::Str(self.dataflow.clone()))
+            .set("activity", Json::from_f64s(&self.activity))
+            .set(
+                "layers",
+                Json::Arr(self.layers.iter().map(layer_breakdown_to_json).collect()),
+            )
+            .set("totals", totals)
+            .set("chip", chip_to_json(&self.chip));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<EvalResult> {
+        check_schema(j)?;
+        let totals = get(j, "totals")?;
+        Ok(EvalResult {
+            schema: uint(j, "schema")? as u32,
+            model: text(j, "model")?,
+            arch: text(j, "arch")?,
+            dataflow: text(j, "dataflow")?,
+            activity: f64s(j, "activity")?,
+            layers: arr(j, "layers")?
+                .iter()
+                .map(layer_breakdown_from_json)
+                .collect::<Result<Vec<_>>>()?,
+            overall_j: num(totals, "overall_j")?,
+            conv_mem_j: num(totals, "conv_mem_j")?,
+            compute_j: num(totals, "compute_j")?,
+            cycles: uint(totals, "cycles")?,
+            chip: chip_from_json(get(j, "chip")?)?,
+        })
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json_str(text: &str) -> Result<EvalResult> {
+        let j = Json::parse(text).map_err(|e| err!("result JSON: {e}"))?;
+        EvalResult::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_round_trips_all_layer_kinds() {
+        for model in [
+            SnnModel::paper_layer(),
+            SnnModel::cifar100_snn(),
+            SnnModel::tiny_snn(16, 4, 10),
+        ] {
+            let j = model_to_json(&model);
+            let back = model_from_json(&Json::parse(&j.dumps()).unwrap()).unwrap();
+            assert_eq!(model, back);
+        }
+    }
+
+    #[test]
+    fn arch_round_trips() {
+        let a = Architecture::paper_default();
+        let back = arch_from_json(&Json::parse(&arch_to_json(&a).dumps()).unwrap()).unwrap();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn family_keys_are_bijective() {
+        for f in Family::ALL {
+            assert_eq!(family_from_key(family_key(f)).unwrap(), f);
+        }
+        assert!(family_from_key("systolic").is_err());
+    }
+
+    #[test]
+    fn bad_documents_error_cleanly() {
+        let j = Json::parse(r#"{"schema": 99}"#).unwrap();
+        assert!(EvalRequest::from_json(&j).is_err());
+        assert!(EvalRequest::from_json_str("{").is_err());
+        let e = model_from_json(&Json::parse(r#"{"name": "x"}"#).unwrap()).unwrap_err();
+        assert!(e.to_string().contains("input"), "{e}");
+    }
+
+    #[test]
+    fn fractional_integer_fields_are_rejected() {
+        let j = Json::parse(r#"{"batch": 0.9}"#).unwrap();
+        let e = uint(&j, "batch").unwrap_err();
+        assert!(e.to_string().contains("exact unsigned integer"), "{e}");
+        let j = Json::parse(r#"{"cycles": 1e17}"#).unwrap();
+        assert!(uint(&j, "cycles").is_err());
+        let j = Json::parse(r#"{"n": 42}"#).unwrap();
+        assert_eq!(uint(&j, "n").unwrap(), 42);
+    }
+
+    #[test]
+    fn degenerate_architectures_are_rejected() {
+        let a = Architecture::paper_default();
+        // Zero-sized array.
+        let mut j = arch_to_json(&a);
+        let mut zero = Json::obj();
+        zero.set("rows", Json::Num(0.0)).set("cols", Json::Num(16.0));
+        j.set("array", zero);
+        assert!(arch_from_json(&j).is_err());
+        // Missing macro.
+        let mut small = a.clone();
+        small.mem.srams.pop();
+        let e = arch_from_json(&arch_to_json(&small)).unwrap_err();
+        assert!(e.to_string().contains("missing macro"), "{e}");
+    }
+}

@@ -1,0 +1,808 @@
+//! The simulator's front door: a persistent evaluation [`Session`].
+//!
+//! EOCAS is one closed loop — "SNN models, accelerator architecture and a
+//! memory pool as inputs … evaluate the performance of each situation" —
+//! and this module is the single API that loop goes through. Callers
+//! build a [`Session`] once (energy constants, architecture pool, worker
+//! threads), then submit typed [`EvalRequest`]s and get back
+//! [`EvalResult`]s with the full energy/performance breakdown:
+//!
+//! ```no_run
+//! use eocas::session::{EvalRequest, Session};
+//! use eocas::dataflow::templates::Family;
+//! use eocas::arch::Architecture;
+//! use eocas::model::SnnModel;
+//!
+//! let session = Session::builder().threads(4).build();
+//! let req = EvalRequest::new(
+//!     SnnModel::paper_layer(),
+//!     Architecture::paper_default(),
+//!     Family::AdvWs,
+//! );
+//! let res = session.evaluate(&req).unwrap();
+//! println!("{} uJ", res.overall_j * 1e6);
+//! ```
+//!
+//! Serving-oriented design:
+//!
+//! * **Caching** — workload generation is memoized by
+//!   `(model, sparsity, activity)` and full evaluations by a flat
+//!   structural key over the request, so repeated scenarios are
+//!   near-free.
+//! * **Batching** — [`Session::evaluate_many`] fans a batch out over a
+//!   persistent worker pool (no per-sweep thread spawning) and returns
+//!   results in request order regardless of scheduling.
+//! * **Stable schema** — [`EvalRequest`] and [`EvalResult`] round-trip
+//!   through the JSON schema documented in `DESIGN.md` (`--json` on the
+//!   CLI emits exactly this encoding).
+//!
+//! The DSE (`dse::explore`), the pipeline coordinator, the report
+//! generator and the benches all build on this API.
+
+mod json;
+pub mod workers;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+
+use crate::arch::{ArchPool, Architecture};
+use crate::config::EnergyConfig;
+use crate::dataflow::templates::Family;
+use crate::energy::{
+    conv_energy, model_energy_for_family, unit_energy, ConvEnergy, LayerEnergy,
+};
+use crate::model::SnnModel;
+use crate::perfmodel::{chip_metrics, AreaModel, ChipMetrics};
+use crate::sparsity::SparsityProfile;
+use crate::util::error::Result;
+use crate::util::prng::SplitMix64;
+use crate::workload::{generate, LayerWorkload};
+
+/// Version of the `EvalRequest`/`EvalResult` JSON schema.
+pub const SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Request side
+// ---------------------------------------------------------------------------
+
+/// Per-request evaluation switches.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EvalOptions {
+    /// Default spike activity for layers not covered by the sparsity
+    /// profile (falls back to `EnergyConfig::nominal_activity`).
+    pub activity: Option<f64>,
+    /// Evaluate a randomized perturbation of the family template instead
+    /// of the template itself (the DSE's Fig. 5 sampling); the seed fully
+    /// determines the mapping.
+    pub jitter_seed: Option<u64>,
+    /// Display label override (e.g. `"Advanced WS~rand3"`).
+    pub label: Option<String>,
+}
+
+/// One evaluation scenario: model × architecture × dataflow × sparsity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalRequest {
+    pub model: SnnModel,
+    pub arch: Architecture,
+    pub dataflow: Family,
+    pub sparsity: SparsityProfile,
+    pub options: EvalOptions,
+}
+
+impl EvalRequest {
+    /// A request with an empty sparsity profile (every layer uses the
+    /// default activity) and default options.
+    pub fn new(model: SnnModel, arch: Architecture, dataflow: Family) -> EvalRequest {
+        EvalRequest {
+            model,
+            arch,
+            dataflow,
+            sparsity: SparsityProfile { source: "default".into(), per_layer: Vec::new() },
+            options: EvalOptions::default(),
+        }
+    }
+
+    pub fn with_sparsity(mut self, sparsity: SparsityProfile) -> EvalRequest {
+        self.sparsity = sparsity;
+        self
+    }
+
+    pub fn with_options(mut self, options: EvalOptions) -> EvalRequest {
+        self.options = options;
+        self
+    }
+
+    pub fn with_activity(mut self, activity: f64) -> EvalRequest {
+        self.options.activity = Some(activity);
+        self
+    }
+
+    /// Mark this request as a jittered mapping sample.
+    pub fn jittered(mut self, seed: u64, label: String) -> EvalRequest {
+        self.options.jitter_seed = Some(seed);
+        self.options.label = Some(label);
+        self
+    }
+
+    /// The label reported in results: explicit override or family name.
+    pub fn label(&self) -> String {
+        self.options.label.clone().unwrap_or_else(|| self.dataflow.name().to_string())
+    }
+
+    /// Deterministic, injective cache key. Built as a flat string (no
+    /// JSON tree) because it runs on every `evaluate`, including warm
+    /// cache hits on the DSE hot path. User-supplied strings are
+    /// length-prefixed so separator characters cannot collide.
+    fn cache_key(&self) -> String {
+        use std::fmt::Write as _;
+        let mut key = String::with_capacity(256);
+        write_model_key(&mut key, &self.model);
+        write_arch_key(&mut key, &self.arch);
+        let _ = write!(key, "f{};", self.dataflow as u64);
+        for v in &self.sparsity.per_layer {
+            let _ = write!(key, "{:x},", v.to_bits());
+        }
+        key.push(';');
+        match self.options.activity {
+            Some(a) => {
+                let _ = write!(key, "a{:x};", a.to_bits());
+            }
+            None => key.push_str("a-;"),
+        }
+        match self.options.jitter_seed {
+            Some(s) => {
+                let _ = write!(key, "j{s:x};");
+            }
+            None => key.push_str("j-;"),
+        }
+        match &self.options.label {
+            Some(l) => {
+                let _ = write!(key, "l{}:{l};", l.len());
+            }
+            None => key.push_str("l-;"),
+        }
+        key
+    }
+}
+
+/// Append an injective encoding of `model` to `key` (length-prefixed
+/// name + numeric shape/layer fields).
+fn write_model_key(key: &mut String, m: &SnnModel) {
+    use std::fmt::Write as _;
+    let _ = write!(
+        key,
+        "m{}:{};i{},{},{};t{};b{};",
+        m.name.len(),
+        m.name,
+        m.input.0,
+        m.input.1,
+        m.input.2,
+        m.timesteps,
+        m.batch
+    );
+    for l in &m.layers {
+        match *l {
+            crate::model::LayerSpec::Conv { out_channels, kernel, stride, padding } => {
+                let _ = write!(key, "c{out_channels},{kernel},{stride},{padding};");
+            }
+            crate::model::LayerSpec::AvgPool2 => key.push_str("p;"),
+            crate::model::LayerSpec::Linear { out_features } => {
+                let _ = write!(key, "l{out_features};");
+            }
+        }
+    }
+    key.push('|');
+}
+
+/// Append an injective encoding of `arch` to `key`.
+fn write_arch_key(key: &mut String, a: &Architecture) {
+    use std::fmt::Write as _;
+    let _ = write!(key, "r{}x{};g{};", a.array.rows, a.array.cols, a.pe_reg_bits);
+    for m in &a.mem.srams {
+        let _ = write!(key, "s{},{},{};", m.id as u64, m.bytes, m.word_bits);
+    }
+    key.push('|');
+}
+
+// ---------------------------------------------------------------------------
+// Result side
+// ---------------------------------------------------------------------------
+
+/// Energy of one operand tensor, split by hierarchy level (joules).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OperandBreakdown {
+    pub tensor: String,
+    pub reg_j: f64,
+    pub sram_j: f64,
+    pub dram_j: f64,
+}
+
+impl OperandBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.reg_j + self.sram_j + self.dram_j
+    }
+}
+
+/// Energy/cycles of one convolution phase under its mapping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseEnergy {
+    pub compute_j: f64,
+    pub operands: Vec<OperandBreakdown>,
+    pub cycles: u64,
+    pub utilization: f64,
+}
+
+impl PhaseEnergy {
+    fn from_conv(ce: &ConvEnergy) -> PhaseEnergy {
+        PhaseEnergy {
+            compute_j: ce.compute_j,
+            operands: ce
+                .operands
+                .iter()
+                .map(|o| OperandBreakdown {
+                    tensor: o.tensor.to_string(),
+                    reg_j: o.reg_j,
+                    sram_j: o.sram_j,
+                    dram_j: o.dram_j,
+                })
+                .collect(),
+            cycles: ce.cycles,
+            utilization: ce.utilization,
+        }
+    }
+
+    pub fn mem_j(&self) -> f64 {
+        self.operands.iter().map(|o| o.total_j()).sum()
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.mem_j()
+    }
+}
+
+/// Full training-pass energy of one layer (mirrors
+/// [`crate::energy::LayerEnergy`] in serializable form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerBreakdown {
+    pub layer: usize,
+    pub fp: PhaseEnergy,
+    pub bp: PhaseEnergy,
+    pub wg: PhaseEnergy,
+    pub soma_compute_j: f64,
+    pub soma_mem_j: f64,
+    pub grad_compute_j: f64,
+    pub grad_mem_j: f64,
+}
+
+impl LayerBreakdown {
+    fn from_layer(le: &LayerEnergy) -> LayerBreakdown {
+        LayerBreakdown {
+            layer: le.layer,
+            fp: PhaseEnergy::from_conv(&le.fp),
+            bp: PhaseEnergy::from_conv(&le.bp),
+            wg: PhaseEnergy::from_conv(&le.wg),
+            soma_compute_j: le.units.soma_compute_j,
+            soma_mem_j: le.units.soma_mem_j,
+            grad_compute_j: le.units.grad_compute_j,
+            grad_mem_j: le.units.grad_mem_j,
+        }
+    }
+
+    pub fn soma_j(&self) -> f64 {
+        self.soma_compute_j + self.soma_mem_j
+    }
+
+    pub fn grad_j(&self) -> f64 {
+        self.grad_compute_j + self.grad_mem_j
+    }
+
+    /// FP-phase total (Table IV's "FP total" = spike conv + soma).
+    pub fn fp_total_j(&self) -> f64 {
+        self.fp.total_j() + self.soma_j()
+    }
+
+    /// BP-phase total (floating-point conv + grad unit).
+    pub fn bp_total_j(&self) -> f64 {
+        self.bp.total_j() + self.grad_j()
+    }
+
+    /// WG-phase total.
+    pub fn wg_total_j(&self) -> f64 {
+        self.wg.total_j()
+    }
+
+    /// eq. (15): overall energy of the layer's training pass.
+    pub fn overall_j(&self) -> f64 {
+        self.fp_total_j() + self.bp_total_j() + self.wg_total_j()
+    }
+
+    /// Conv-only memory energy (the quantity swept in Table III).
+    pub fn conv_mem_j(&self) -> f64 {
+        self.fp.mem_j() + self.bp.mem_j() + self.wg.mem_j()
+    }
+
+    /// Compute-only energy incl. the fixed-function units (Table V).
+    pub fn compute_j(&self) -> f64 {
+        self.fp.compute_j
+            + self.bp.compute_j
+            + self.wg.compute_j
+            + self.soma_compute_j
+            + self.grad_compute_j
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.fp.cycles + self.bp.cycles + self.wg.cycles
+    }
+}
+
+/// The complete outcome of one evaluation: per-layer energy breakdown,
+/// totals, and chip-level metrics. Serializes to the stable JSON schema
+/// (`DESIGN.md`); `eocas simulate --json` emits exactly this.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalResult {
+    /// JSON schema version ([`SCHEMA_VERSION`]).
+    pub schema: u32,
+    /// Model name.
+    pub model: String,
+    /// Architecture label (array + memory).
+    pub arch: String,
+    /// Dataflow label (family name, or the request's label override).
+    pub dataflow: String,
+    /// Resolved per-compute-layer spike activity actually evaluated.
+    pub activity: Vec<f64>,
+    pub layers: Vec<LayerBreakdown>,
+    /// eq. (15) summed over layers.
+    pub overall_j: f64,
+    pub conv_mem_j: f64,
+    pub compute_j: f64,
+    pub cycles: u64,
+    /// Derived chip metrics (power, TOPS, TOPS/W, area, utilization).
+    pub chip: ChipMetrics,
+}
+
+impl EvalResult {
+    fn from_layers(
+        req: &EvalRequest,
+        activity: Vec<f64>,
+        layers: &[LayerEnergy],
+        chip: ChipMetrics,
+    ) -> EvalResult {
+        let breakdown: Vec<LayerBreakdown> =
+            layers.iter().map(LayerBreakdown::from_layer).collect();
+        EvalResult {
+            schema: SCHEMA_VERSION,
+            model: req.model.name.clone(),
+            arch: req.arch.label(),
+            dataflow: req.label(),
+            activity,
+            overall_j: breakdown.iter().map(|l| l.overall_j()).sum(),
+            conv_mem_j: breakdown.iter().map(|l| l.conv_mem_j()).sum(),
+            compute_j: breakdown.iter().map(|l| l.compute_j()).sum(),
+            cycles: breakdown.iter().map(|l| l.cycles()).sum(),
+            layers: breakdown,
+            chip,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// Cache hit/miss counters (`Session::cache_stats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub result_hits: u64,
+    pub result_misses: u64,
+    pub workload_hits: u64,
+    pub workload_misses: u64,
+}
+
+/// Builder for [`Session`].
+pub struct SessionBuilder {
+    cfg: EnergyConfig,
+    pool: ArchPool,
+    area: AreaModel,
+    threads: usize,
+    max_cached_results: usize,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            cfg: EnergyConfig::default(),
+            pool: ArchPool::paper_pool(),
+            area: AreaModel::default(),
+            threads: 0,
+            max_cached_results: 65_536,
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Technology/energy constants used for every evaluation.
+    pub fn energy_config(mut self, cfg: EnergyConfig) -> SessionBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Architecture pool swept by `dse::explore`.
+    pub fn arch_pool(mut self, pool: ArchPool) -> SessionBuilder {
+        self.pool = pool;
+        self
+    }
+
+    /// Silicon cost table for chip metrics.
+    pub fn area_model(mut self, area: AreaModel) -> SessionBuilder {
+        self.area = area;
+        self
+    }
+
+    /// Worker threads for `evaluate_many` (0 = one per available core).
+    pub fn threads(mut self, threads: usize) -> SessionBuilder {
+        self.threads = threads;
+        self
+    }
+
+    /// Result-cache capacity; the cache is flushed when it fills
+    /// (coarse but bounded — jittered DSE sweeps generate unique keys).
+    pub fn max_cached_results(mut self, cap: usize) -> SessionBuilder {
+        self.max_cached_results = cap.max(1);
+        self
+    }
+
+    pub fn build(self) -> Session {
+        Session {
+            inner: Arc::new(Inner {
+                cfg: self.cfg,
+                pool: self.pool,
+                area: self.area,
+                max_cached_results: self.max_cached_results,
+                workloads: Mutex::new(HashMap::new()),
+                results: Mutex::new(HashMap::new()),
+                result_hits: AtomicU64::new(0),
+                result_misses: AtomicU64::new(0),
+                workload_hits: AtomicU64::new(0),
+                workload_misses: AtomicU64::new(0),
+            }),
+            threads: self.threads,
+            workers: OnceLock::new(),
+        }
+    }
+}
+
+/// Shared state reachable from worker threads.
+struct Inner {
+    cfg: EnergyConfig,
+    pool: ArchPool,
+    area: AreaModel,
+    max_cached_results: usize,
+    /// Workload memo: `(model, sparsity, activity)` → generated layers.
+    workloads: Mutex<HashMap<String, Arc<Vec<LayerWorkload>>>>,
+    /// Full-evaluation memo keyed by the canonical request encoding.
+    results: Mutex<HashMap<String, Arc<EvalResult>>>,
+    result_hits: AtomicU64,
+    result_misses: AtomicU64,
+    workload_hits: AtomicU64,
+    workload_misses: AtomicU64,
+}
+
+impl Inner {
+    fn workloads_for(
+        &self,
+        model: &SnnModel,
+        sparsity: &[f64],
+        activity: f64,
+    ) -> Result<Arc<Vec<LayerWorkload>>> {
+        use std::fmt::Write as _;
+        let mut key = String::with_capacity(128);
+        write_model_key(&mut key, model);
+        for v in sparsity {
+            let _ = write!(key, "{:x},", v.to_bits());
+        }
+        let _ = write!(key, "|{:x}", activity.to_bits());
+        if let Some(hit) = self.workloads.lock().unwrap().get(&key) {
+            self.workload_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit.clone());
+        }
+        self.workload_misses.fetch_add(1, Ordering::Relaxed);
+        let wls = Arc::new(generate(model, sparsity, activity)?);
+        self.workloads.lock().unwrap().insert(key, wls.clone());
+        Ok(wls)
+    }
+
+    fn evaluate(&self, req: &EvalRequest) -> Result<Arc<EvalResult>> {
+        let key = req.cache_key();
+        if let Some(hit) = self.results.lock().unwrap().get(&key) {
+            self.result_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit.clone());
+        }
+        self.result_misses.fetch_add(1, Ordering::Relaxed);
+        let res = Arc::new(self.compute(req)?);
+        let mut cache = self.results.lock().unwrap();
+        if cache.len() >= self.max_cached_results {
+            cache.clear();
+        }
+        cache.insert(key, res.clone());
+        Ok(res)
+    }
+
+    fn compute(&self, req: &EvalRequest) -> Result<EvalResult> {
+        let default_activity = req.options.activity.unwrap_or(self.cfg.nominal_activity);
+        let wls = self.workloads_for(&req.model, &req.sparsity.per_layer, default_activity)?;
+        let layers: Vec<LayerEnergy> = match req.options.jitter_seed {
+            None => model_energy_for_family(&wls, req.dataflow, &req.arch, &self.cfg),
+            Some(seed) => {
+                // One RNG across all layers/phases, in evaluation order —
+                // the DSE's historical deterministic sampling scheme.
+                let mut rng = SplitMix64::new(seed);
+                let mut jitter = |w: &crate::workload::ConvWorkload| {
+                    crate::dse::jittered_mapping(w, &req.arch, req.dataflow, &mut rng)
+                };
+                wls.iter()
+                    .map(|wl| LayerEnergy {
+                        layer: wl.layer,
+                        fp: conv_energy(&wl.fp, &jitter(&wl.fp), &req.arch, &self.cfg),
+                        bp: conv_energy(&wl.bp, &jitter(&wl.bp), &req.arch, &self.cfg),
+                        wg: conv_energy(&wl.wg, &jitter(&wl.wg), &req.arch, &self.cfg),
+                        units: unit_energy(&wl.units, &req.arch, &self.cfg),
+                    })
+                    .collect()
+            }
+        };
+        let chip = chip_metrics(&layers, &req.arch, &self.cfg, &self.area);
+        let activity = wls.iter().map(|wl| wl.fp.activity).collect();
+        Ok(EvalResult::from_layers(req, activity, &layers, chip))
+    }
+}
+
+/// The evaluation engine: configuration + caches + worker pool. Shareable
+/// across call sites; all methods take `&self`. The worker pool is
+/// spawned lazily on the first `evaluate_many`, so single-shot
+/// `evaluate` callers never pay thread-spawn overhead.
+pub struct Session {
+    inner: Arc<Inner>,
+    /// Configured worker-thread count (0 = one per available core).
+    threads: usize,
+    workers: OnceLock<workers::WorkerPool>,
+}
+
+impl Default for Session {
+    fn default() -> Session {
+        Session::builder().build()
+    }
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// A session with paper defaults (Table II constants, paper pool).
+    pub fn new() -> Session {
+        Session::default()
+    }
+
+    pub fn energy_config(&self) -> &EnergyConfig {
+        &self.inner.cfg
+    }
+
+    pub fn arch_pool(&self) -> &ArchPool {
+        &self.inner.pool
+    }
+
+    pub fn area_model(&self) -> &AreaModel {
+        &self.inner.area
+    }
+
+    /// Number of worker threads serving `evaluate_many`.
+    pub fn threads(&self) -> usize {
+        self.workers
+            .get()
+            .map(|w| w.size())
+            .unwrap_or_else(|| workers::resolve_threads(self.threads))
+    }
+
+    /// The lazily spawned worker pool.
+    fn pool(&self) -> &workers::WorkerPool {
+        self.workers.get_or_init(|| workers::WorkerPool::new(self.threads))
+    }
+
+    /// Memoized workload generation for `(model, sparsity, activity)`.
+    pub fn workloads(
+        &self,
+        model: &SnnModel,
+        sparsity: &SparsityProfile,
+        default_activity: f64,
+    ) -> Result<Arc<Vec<LayerWorkload>>> {
+        self.inner.workloads_for(model, &sparsity.per_layer, default_activity)
+    }
+
+    /// Evaluate one request (cached).
+    pub fn evaluate(&self, req: &EvalRequest) -> Result<Arc<EvalResult>> {
+        self.inner.evaluate(req)
+    }
+
+    /// Evaluate a batch on the worker pool. Results come back in request
+    /// order regardless of thread scheduling, so batch output is
+    /// deterministic for a deterministic request list.
+    pub fn evaluate_many(&self, reqs: &[EvalRequest]) -> Vec<Result<Arc<EvalResult>>> {
+        let (tx, rx) = mpsc::channel();
+        for (i, req) in reqs.iter().enumerate() {
+            let inner = self.inner.clone();
+            let req = req.clone();
+            let tx = tx.clone();
+            self.pool().submit(Box::new(move || {
+                // A panicking evaluation must not kill the worker or
+                // leave its result slot empty — deliver it as an error
+                // so the batch contract ("a failing request does not
+                // poison its neighbours") holds.
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    inner.evaluate(&req)
+                }))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "evaluation panicked".to_string());
+                    Err(crate::util::error::Error::new(format!(
+                        "evaluation panicked: {msg}"
+                    )))
+                });
+                let _ = tx.send((i, res));
+            }));
+        }
+        drop(tx);
+        let mut out: Vec<Option<Result<Arc<EvalResult>>>> =
+            (0..reqs.len()).map(|_| None).collect();
+        for (i, res) in rx {
+            out[i] = Some(res);
+        }
+        out.into_iter().map(|slot| slot.expect("worker delivered every result")).collect()
+    }
+
+    /// Hit/miss counters for both cache layers.
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            result_hits: self.inner.result_hits.load(Ordering::Relaxed),
+            result_misses: self.inner.result_misses.load(Ordering::Relaxed),
+            workload_hits: self.inner.workload_hits.load(Ordering::Relaxed),
+            workload_misses: self.inner.workload_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop all cached workloads and results (counters are kept).
+    pub fn clear_caches(&self) {
+        self.inner.workloads.lock().unwrap().clear();
+        self.inner.results.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_request() -> EvalRequest {
+        EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        )
+    }
+
+    #[test]
+    fn evaluate_matches_direct_energy_model() {
+        let session = Session::builder().threads(1).build();
+        let res = session.evaluate(&paper_request()).unwrap();
+        let cfg = EnergyConfig::default();
+        let wls = generate(&SnnModel::paper_layer(), &[], cfg.nominal_activity).unwrap();
+        let layers = model_energy_for_family(
+            &wls,
+            Family::AdvWs,
+            &Architecture::paper_default(),
+            &cfg,
+        );
+        let direct: f64 = layers.iter().map(|l| l.overall_j()).sum();
+        assert!((res.overall_j - direct).abs() < 1e-15);
+        assert_eq!(res.cycles, layers.iter().map(|l| l.cycles()).sum::<u64>());
+        assert_eq!(res.layers.len(), 1);
+        assert_eq!(res.dataflow, "Advanced WS");
+    }
+
+    #[test]
+    fn second_evaluate_hits_the_cache() {
+        let session = Session::builder().threads(1).build();
+        let a = session.evaluate(&paper_request()).unwrap();
+        let b = session.evaluate(&paper_request()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second call must be served from cache");
+        let stats = session.cache_stats();
+        assert_eq!(stats.result_hits, 1);
+        assert_eq!(stats.result_misses, 1);
+    }
+
+    #[test]
+    fn workload_memo_is_shared_across_dataflows() {
+        let session = Session::builder().threads(1).build();
+        for fam in Family::ALL {
+            let req = EvalRequest::new(
+                SnnModel::paper_layer(),
+                Architecture::paper_default(),
+                fam,
+            );
+            session.evaluate(&req).unwrap();
+        }
+        let stats = session.cache_stats();
+        // Five evaluations, one workload generation.
+        assert_eq!(stats.workload_misses, 1);
+        assert_eq!(stats.workload_hits, 4);
+    }
+
+    #[test]
+    fn batch_preserves_request_order() {
+        let session = Session::builder().threads(4).build();
+        let reqs: Vec<EvalRequest> = Family::ALL
+            .iter()
+            .map(|&fam| {
+                EvalRequest::new(
+                    SnnModel::paper_layer(),
+                    Architecture::paper_default(),
+                    fam,
+                )
+            })
+            .collect();
+        let out = session.evaluate_many(&reqs);
+        assert_eq!(out.len(), 5);
+        for (req, res) in reqs.iter().zip(&out) {
+            assert_eq!(res.as_ref().unwrap().dataflow, req.dataflow.name());
+        }
+    }
+
+    #[test]
+    fn invalid_model_is_an_error_not_a_panic() {
+        let session = Session::builder().threads(1).build();
+        let bad = SnnModel {
+            name: "bad".into(),
+            input: (0, 1, 1),
+            layers: vec![],
+            timesteps: 1,
+            batch: 1,
+        };
+        let req = EvalRequest::new(bad, Architecture::paper_default(), Family::AdvWs);
+        assert!(session.evaluate(&req).is_err());
+        let batch = session.evaluate_many(std::slice::from_ref(&req));
+        assert!(batch[0].is_err());
+    }
+
+    #[test]
+    fn jittered_requests_are_deterministic_per_seed() {
+        let session = Session::builder().threads(2).build();
+        let mk = |seed| {
+            paper_request().jittered(seed, format!("Advanced WS~rand{seed}"))
+        };
+        let a = session.evaluate(&mk(7)).unwrap();
+        session.clear_caches();
+        let b = session.evaluate(&mk(7)).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "caches were cleared; this is a fresh evaluation");
+        assert_eq!(*a, *b, "same seed must reproduce the same result");
+    }
+
+    #[test]
+    fn result_cache_is_bounded() {
+        let session = Session::builder().threads(1).max_cached_results(3).build();
+        for fam in Family::ALL {
+            let req = EvalRequest::new(
+                SnnModel::paper_layer(),
+                Architecture::paper_default(),
+                fam,
+            );
+            session.evaluate(&req).unwrap();
+        }
+        assert!(session.inner.results.lock().unwrap().len() <= 3);
+    }
+}

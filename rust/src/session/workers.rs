@@ -1,0 +1,121 @@
+//! Persistent worker pool backing [`Session::evaluate_many`].
+//!
+//! `std::thread::scope` (the DSE's previous engine) respawns OS threads
+//! on every sweep; a serving session evaluates many small batches, so the
+//! pool here is created once (lazily, on first use) and reused. Plain
+//! `mpsc` + `Mutex<Receiver>` work distribution — no external crates in
+//! the offline vendor set.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of work shipped to a worker thread.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool of persistent worker threads.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+/// Resolve a configured thread count (0 = one per available core).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (0 = one per available core).
+    pub fn new(threads: usize) -> WorkerPool {
+        let size = resolve_threads(threads);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|_| {
+                let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+                std::thread::spawn(move || loop {
+                    // Hold the lock only while dequeuing, not while running.
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // all senders dropped: shut down
+                    };
+                    job();
+                })
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a job; it runs on the first free worker.
+    pub fn submit(&self, job: Job) {
+        self.tx
+            .as_ref()
+            .expect("worker pool already shut down")
+            .send(job)
+            .expect("worker threads exited unexpectedly");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Close the channel so workers drain outstanding jobs and exit.
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..50 {
+            let counter = counter.clone();
+            let tx = tx.clone();
+            pool.submit(Box::new(move || {
+                counter.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(());
+            }));
+        }
+        drop(tx);
+        assert_eq!(rx.iter().count(), 50);
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let counter = counter.clone();
+            pool.submit(Box::new(move || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        drop(pool); // must drain the queue before joining
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn zero_means_available_parallelism() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.size() >= 1);
+    }
+}

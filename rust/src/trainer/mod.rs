@@ -9,7 +9,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::util::error::{Context, Result};
 
 use crate::runtime::{artifact, load_manifest, Module, Runtime, Tensor};
 use crate::util::json::Json;
@@ -45,19 +46,19 @@ pub struct ModelSpec {
 impl ModelSpec {
     pub fn from_manifest(m: &Json) -> Result<ModelSpec> {
         let get = |k: &str| -> Result<f64> {
-            m.get(k).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("manifest missing `{k}`"))
+            m.get(k).and_then(|v| v.as_f64()).ok_or_else(|| err!("manifest missing `{k}`"))
         };
         let input: Vec<usize> = m
             .get("input")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing `input`"))?
+            .ok_or_else(|| err!("manifest missing `input`"))?
             .iter()
             .map(|v| v.as_f64().unwrap_or(0.0) as usize)
             .collect();
         let params = m
             .get("params")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing `params`"))?
+            .ok_or_else(|| err!("manifest missing `params`"))?
             .iter()
             .map(|p| {
                 let name = p.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string();
@@ -214,7 +215,7 @@ impl Trainer {
             let out = self.train_mod.run(&inputs)?;
             let n_params = self.params.len();
             if out.len() != n_params + 2 {
-                return Err(anyhow!("train_step returned {} outputs", out.len()));
+                return Err(err!("train_step returned {} outputs", out.len()));
             }
             self.params = out[..n_params].to_vec();
             let loss = out[n_params].item()? as f64;
@@ -224,7 +225,7 @@ impl Trainer {
             }
             losses.push(loss);
             if !loss.is_finite() {
-                return Err(anyhow!("loss diverged at step {step}"));
+                return Err(err!("loss diverged at step {step}"));
             }
             if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
                 last_acc = self.eval_accuracy(&xt, &y)?;

@@ -1,0 +1,146 @@
+//! Minimal error type for the offline build.
+//!
+//! The vendor set has no `anyhow`; this module supplies the small subset
+//! the crate needs — a string-backed error, a `Result` alias, a
+//! `Context` extension trait, and `err!`/`bail!` macros — so every layer
+//! (CLI, coordinator, trainer, runtime, session) shares one error type
+//! without external dependencies.
+
+use std::fmt;
+
+/// A string-backed error with optional context frames.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Wrap with an outer context message (`context: inner`).
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::new(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::new(msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension for results and options.
+pub trait Context<T> {
+    /// Attach a static context message to the error path.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Attach a lazily built context message to the error path.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{ctx}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::new(ctx.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::new(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::new(format!($($arg)*)).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(err!("inner {}", 42))
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(7).context("fine").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert!(f(0).is_err());
+        assert_eq!(f(3).unwrap(), 3);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let r: Result<String> =
+            std::fs::read_to_string("/definitely/not/a/path").map_err(Error::from);
+        assert!(r.is_err());
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod check;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod stats;

@@ -1,23 +1,34 @@
 //! End-to-end integration: the PJRT runtime executing real AOT artifacts.
 //!
-//! Requires `make artifacts` (skips with a message otherwise — CI always
-//! builds artifacts first via the Makefile's `test` target).
+//! Requires `make artifacts` and a `--features pjrt` build (skips with a
+//! message otherwise — CI always builds artifacts first via the
+//! Makefile's `test` target).
 
 use eocas::runtime::{artifact, Runtime, Tensor};
 use eocas::trainer::{Trainer, TrainerConfig};
 use eocas::util::stats;
 
-fn artifacts_available() -> bool {
-    artifact("train_step.hlo.txt").is_ok()
+/// The PJRT runtime, or `None` (with a skip message) when artifacts are
+/// missing or the binary was built with the stub runtime.
+fn runtime_or_skip() -> Option<Runtime> {
+    if artifact("train_step.hlo.txt").is_err() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
 }
 
 #[test]
 fn spike_conv_artifact_matches_host_reference() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
+    let Some(rt) = runtime_or_skip() else {
         return;
-    }
-    let rt = Runtime::cpu().unwrap();
+    };
     let module = rt.load(&artifact("spike_conv.hlo.txt").unwrap()).unwrap();
     // Geometry from the manifest: [1024, 288] x [288, 32].
     let (n, k, m) = (1024usize, 288usize, 32usize);
@@ -53,11 +64,9 @@ fn spike_conv_artifact_matches_host_reference() {
 
 #[test]
 fn training_loss_trends_down_through_pjrt() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
+    let Some(rt) = runtime_or_skip() else {
         return;
-    }
-    let rt = Runtime::cpu().unwrap();
+    };
     let mut trainer = Trainer::new(&rt, 7).unwrap();
     let log = trainer
         .train(&TrainerConfig { steps: 40, lr: 0.15, seed: 7, log_every: 0 })
@@ -76,11 +85,9 @@ fn training_loss_trends_down_through_pjrt() {
 
 #[test]
 fn forward_artifact_is_deterministic() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
+    let Some(rt) = runtime_or_skip() else {
         return;
-    }
-    let rt = Runtime::cpu().unwrap();
+    };
     let trainer = Trainer::new(&rt, 3).unwrap();
     let a = trainer.measure_rates(11).unwrap();
     let b = trainer.measure_rates(11).unwrap();
@@ -91,11 +98,9 @@ fn forward_artifact_is_deterministic() {
 
 #[test]
 fn executable_cache_reuses_compilations() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
+    let Some(rt) = runtime_or_skip() else {
         return;
-    }
-    let rt = Runtime::cpu().unwrap();
+    };
     let p = artifact("forward.hlo.txt").unwrap();
     let t0 = std::time::Instant::now();
     let _m1 = rt.load(&p).unwrap();

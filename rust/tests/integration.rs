@@ -1,12 +1,13 @@
 //! Cross-module integration tests (no PJRT artifacts required).
 
-use eocas::arch::{ArchPool, Architecture, ArrayScheme};
+use eocas::arch::{Architecture, ArrayScheme};
 use eocas::config::{toml, EnergyConfig};
 use eocas::dataflow::templates::Family;
 use eocas::dse::{explore, DseConfig};
-use eocas::energy::{layer_energy_for_family, model_energy_for_family};
+use eocas::energy::layer_energy_for_family;
 use eocas::model::{LayerSpec, SnnModel};
 use eocas::report::{self, ReportCtx};
+use eocas::session::{EvalRequest, Session};
 use eocas::sparsity::SparsityProfile;
 use eocas::workload::generate;
 
@@ -34,7 +35,8 @@ fn config_overrides_flow_into_energy() {
 
 #[test]
 fn full_stack_paper_reproduction_shape() {
-    // The three headline shapes of the paper's evaluation, end to end:
+    // The three headline shapes of the paper's evaluation, end to end,
+    // all through the unified Session front door:
     let ctx = ReportCtx::paper_default();
 
     // (1) Table III: 16x16 is the optimal array scheme.
@@ -43,21 +45,24 @@ fn full_stack_paper_reproduction_shape() {
     assert!(first_row.contains("16x16"), "{first_row}");
 
     // (2) Table IV: Advanced WS wins overall.
-    let pool = ArchPool::paper_pool();
-    let res = explore(&pool, &ctx.workloads, &ctx.cfg, &DseConfig::default());
+    let res = explore(&ctx.session, &ctx.model, &ctx.sparsity, &DseConfig::default()).unwrap();
     let best = res.best().unwrap();
     assert_eq!(best.dataflow, "Advanced WS");
     assert_eq!(best.arch.array.label(), "16x16");
 
     // (3) Table V: compute energy is dataflow-invariant (< 1% spread).
-    let computes: Vec<f64> = Family::ALL
+    let reqs: Vec<EvalRequest> = Family::ALL
         .iter()
         .map(|&f| {
-            model_energy_for_family(&ctx.workloads, f, &ctx.arch, &ctx.cfg)
-                .iter()
-                .map(|l| l.compute_j())
-                .sum()
+            EvalRequest::new(ctx.model.clone(), ctx.arch.clone(), f)
+                .with_sparsity(ctx.sparsity.clone())
         })
+        .collect();
+    let computes: Vec<f64> = ctx
+        .session
+        .evaluate_many(&reqs)
+        .into_iter()
+        .map(|r| r.unwrap().compute_j)
         .collect();
     let (lo, hi) = eocas::util::stats::min_max(&computes).unwrap();
     assert!((hi - lo) / hi < 0.01, "{computes:?}");
@@ -68,8 +73,7 @@ fn paper_energy_magnitudes() {
     // Calibration contract (DESIGN.md §4): AdvWS overall on the Fig. 4
     // layer must stay within 15% of the paper's 758.6 uJ.
     let ctx = ReportCtx::paper_default();
-    let layers = model_energy_for_family(&ctx.workloads, Family::AdvWs, &ctx.arch, &ctx.cfg);
-    let overall_uj: f64 = layers.iter().map(|l| l.overall_j()).sum::<f64>() * 1e6;
+    let overall_uj = ctx.evaluate(Family::AdvWs).overall_j * 1e6;
     assert!(
         (645.0..875.0).contains(&overall_uj),
         "AdvWS overall {overall_uj} uJ vs paper 758.6"
@@ -80,21 +84,16 @@ fn paper_energy_magnitudes() {
 fn measured_sparsity_changes_the_numbers_not_the_winner() {
     let cfg = EnergyConfig::default();
     let model = SnnModel::paper_layer();
-    let lo = ReportCtx::with_model(model.clone(), SparsityProfile::nominal(1, 0.10), cfg.clone());
-    let hi = ReportCtx::with_model(model, SparsityProfile::nominal(1, 0.90), cfg.clone());
+    let lo = ReportCtx::with_model(model.clone(), SparsityProfile::nominal(1, 0.10), cfg.clone())
+        .unwrap();
+    let hi =
+        ReportCtx::with_model(model, SparsityProfile::nominal(1, 0.90), cfg.clone()).unwrap();
     for ctx in [&lo, &hi] {
-        let pool = ArchPool::paper_pool();
-        let res = explore(&pool, &ctx.workloads, &ctx.cfg, &DseConfig::default());
+        let res = explore(&ctx.session, &ctx.model, &ctx.sparsity, &DseConfig::default()).unwrap();
         assert_eq!(res.best().unwrap().dataflow, "Advanced WS");
     }
-    let e_lo: f64 = model_energy_for_family(&lo.workloads, Family::AdvWs, &lo.arch, &cfg)
-        .iter()
-        .map(|l| l.overall_j())
-        .sum();
-    let e_hi: f64 = model_energy_for_family(&hi.workloads, Family::AdvWs, &hi.arch, &cfg)
-        .iter()
-        .map(|l| l.overall_j())
-        .sum();
+    let e_lo = lo.evaluate(Family::AdvWs).overall_j;
+    let e_hi = hi.evaluate(Family::AdvWs).overall_j;
     assert!(e_hi > e_lo);
 }
 
@@ -102,14 +101,24 @@ fn measured_sparsity_changes_the_numbers_not_the_winner() {
 fn deep_network_sweep_is_consistent() {
     // Per-layer energies of the CIFAR-100 net must sum to the model total
     // and stay finite across every family and scheme.
-    let cfg = EnergyConfig::default();
-    let wls = generate(&SnnModel::cifar100_snn(), &[], 0.5).unwrap();
+    let session = Session::new();
+    let model = SnnModel::cifar100_snn();
+    let sparsity = SparsityProfile::nominal(0, 0.5);
+    let n_compute = generate(&model, &[], 0.5).unwrap().len();
     for scheme in ArrayScheme::paper_candidates() {
         let arch = Architecture::with_array(scheme);
         for fam in Family::ALL {
-            let layers = model_energy_for_family(&wls, fam, &arch, &cfg);
-            assert_eq!(layers.len(), wls.len());
-            for l in &layers {
+            let res = session
+                .evaluate(
+                    &EvalRequest::new(model.clone(), arch.clone(), fam)
+                        .with_sparsity(sparsity.clone())
+                        .with_activity(0.5),
+                )
+                .unwrap();
+            assert_eq!(res.layers.len(), n_compute);
+            let sum: f64 = res.layers.iter().map(|l| l.overall_j()).sum();
+            assert!((sum - res.overall_j).abs() < 1e-12 * res.overall_j.max(1.0));
+            for l in &res.layers {
                 assert!(l.overall_j().is_finite() && l.overall_j() > 0.0);
                 assert!(l.fp_total_j() > 0.0 && l.bp_total_j() > 0.0 && l.wg_total_j() > 0.0);
             }
@@ -132,11 +141,15 @@ fn odd_shaped_models_survive_the_whole_stack() {
         timesteps: 3,
         batch: 5,
     };
-    let cfg = EnergyConfig::default();
+    let session = Session::new();
     let sp = SparsityProfile::synthetic_decay(4, 0.4, 0.7);
-    let wls = generate(&model, &sp.per_layer, 0.5).unwrap();
-    let pool = ArchPool::paper_pool();
-    let res = explore(&pool, &wls, &cfg, &DseConfig { random_samples: 1, ..Default::default() });
+    let res = explore(
+        &session,
+        &model,
+        &sp,
+        &DseConfig { random_samples: 1, ..Default::default() },
+    )
+    .unwrap();
     assert_eq!(res.evaluations, 4 * 5 * 2);
     assert!(res.best().unwrap().overall_j > 0.0);
 }

@@ -1,0 +1,219 @@
+//! Contract tests for the unified `Session`/`EvalRequest` evaluation API:
+//! JSON schema round-trips, cache-hit equivalence, and batch
+//! ordering/determinism under worker threads.
+
+use eocas::arch::{ArchPool, Architecture, ArrayScheme};
+use eocas::dataflow::templates::Family;
+use eocas::model::SnnModel;
+use eocas::session::{EvalOptions, EvalRequest, EvalResult, Session};
+use eocas::sparsity::SparsityProfile;
+use eocas::util::json::Json;
+
+fn paper_request(fam: Family) -> EvalRequest {
+    EvalRequest::new(SnnModel::paper_layer(), Architecture::paper_default(), fam)
+        .with_sparsity(SparsityProfile::nominal(1, 0.75))
+}
+
+// ---------------------------------------------------------------------------
+// Serde round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eval_request_round_trips_through_json() {
+    let reqs = [
+        paper_request(Family::AdvWs),
+        EvalRequest::new(
+            SnnModel::cifar100_snn(),
+            Architecture::with_array(ArrayScheme::new(4, 64)),
+            Family::Rs,
+        )
+        .with_sparsity(SparsityProfile::synthetic_decay(6, 0.4, 0.8))
+        .with_activity(0.33),
+        paper_request(Family::Os).jittered(u64::MAX, "OS~rand0".into()),
+    ];
+    for req in reqs {
+        let text = req.to_json().dumps();
+        let back = EvalRequest::from_json_str(&text).unwrap();
+        assert_eq!(req, back, "request must survive a JSON round-trip");
+        // And the canonical encoding itself must be stable.
+        assert_eq!(text, back.to_json().dumps());
+    }
+}
+
+#[test]
+fn eval_result_round_trips_through_json() {
+    let session = Session::builder().threads(1).build();
+    for fam in [Family::AdvWs, Family::Rs] {
+        let res = session.evaluate(&paper_request(fam)).unwrap();
+        let text = res.to_json().dumps();
+        let back = EvalResult::from_json_str(&text).unwrap();
+        assert_eq!(*res, back, "result must survive a JSON round-trip");
+    }
+}
+
+#[test]
+fn result_json_schema_is_stable() {
+    // The documented top-level schema (DESIGN.md): these keys are the
+    // contract `eocas simulate --json` consumers rely on.
+    let session = Session::builder().threads(1).build();
+    let res = session.evaluate(&paper_request(Family::AdvWs)).unwrap();
+    let j = Json::parse(&res.to_json().dumps()).unwrap();
+    for key in ["schema", "model", "arch", "dataflow", "activity", "layers", "totals", "chip"] {
+        assert!(j.get(key).is_some(), "missing top-level key `{key}`");
+    }
+    let totals = j.get("totals").unwrap();
+    for key in ["overall_j", "conv_mem_j", "compute_j", "cycles"] {
+        assert!(totals.get(key).is_some(), "missing totals key `{key}`");
+    }
+    let layer0 = &j.get("layers").unwrap().as_arr().unwrap()[0];
+    for key in ["layer", "fp", "bp", "wg", "soma_compute_j", "grad_mem_j"] {
+        assert!(layer0.get(key).is_some(), "missing layer key `{key}`");
+    }
+    assert_eq!(j.get("schema").unwrap().as_f64(), Some(1.0));
+}
+
+#[test]
+fn tampered_schema_version_is_rejected() {
+    let session = Session::builder().threads(1).build();
+    let res = session.evaluate(&paper_request(Family::AdvWs)).unwrap();
+    let tampered = res.to_json().dumps().replacen("\"schema\":1", "\"schema\":2", 1);
+    assert!(EvalResult::from_json_str(&tampered).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Cache behaviour
+// ---------------------------------------------------------------------------
+
+#[test]
+fn evaluate_twice_equals_once() {
+    let session = Session::builder().threads(2).build();
+    let req = paper_request(Family::AdvWs);
+    let first = session.evaluate(&req).unwrap();
+    let second = session.evaluate(&req).unwrap();
+    assert_eq!(*first, *second);
+    let stats = session.cache_stats();
+    assert_eq!(stats.result_misses, 1, "exactly one real computation");
+    assert_eq!(stats.result_hits, 1, "second call served from cache");
+
+    // A cached result is also identical to a fresh computation in a
+    // brand-new session (the cache cannot change the numbers).
+    let fresh = Session::builder().threads(1).build().evaluate(&req).unwrap();
+    assert_eq!(*first, *fresh);
+}
+
+#[test]
+fn warm_batch_matches_fresh_single_evaluations() {
+    // Acceptance criterion: evaluate_many with a warm cache returns
+    // results identical to fresh single evaluate calls.
+    let reqs: Vec<EvalRequest> = Family::ALL.iter().map(|&f| paper_request(f)).collect();
+
+    let warm_session = Session::builder().threads(4).build();
+    warm_session.evaluate_many(&reqs); // prime every cache entry
+    let warm: Vec<_> = warm_session
+        .evaluate_many(&reqs)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    assert!(warm_session.cache_stats().result_hits >= reqs.len() as u64);
+
+    for (req, warm_res) in reqs.iter().zip(&warm) {
+        let fresh_session = Session::builder().threads(1).build();
+        let fresh = fresh_session.evaluate(req).unwrap();
+        assert_eq!(**warm_res, *fresh, "{}", req.dataflow.name());
+    }
+}
+
+#[test]
+fn distinct_options_do_not_collide_in_the_cache() {
+    let session = Session::builder().threads(1).build();
+    let plain = session.evaluate(&paper_request(Family::AdvWs)).unwrap();
+    let jittered = session
+        .evaluate(&paper_request(Family::AdvWs).jittered(3, "Advanced WS~rand0".into()))
+        .unwrap();
+    let low_activity = session
+        .evaluate(&paper_request(Family::AdvWs).with_options(EvalOptions {
+            activity: Some(0.1),
+            ..Default::default()
+        }))
+        .unwrap();
+    assert_eq!(session.cache_stats().result_misses, 3);
+    assert!(plain.overall_j > low_activity.overall_j, "lower activity, lower energy");
+    assert_eq!(jittered.dataflow, "Advanced WS~rand0");
+}
+
+// ---------------------------------------------------------------------------
+// Batch ordering + determinism under threads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn evaluate_many_preserves_order_and_is_deterministic_across_threads() {
+    // A mixed batch over models × architectures × families × jitter.
+    let mut reqs = Vec::new();
+    for &fam in &[Family::AdvWs, Family::Ws2, Family::Rs] {
+        for scheme in ArrayScheme::paper_candidates() {
+            reqs.push(
+                EvalRequest::new(
+                    SnnModel::paper_layer(),
+                    Architecture::with_array(scheme),
+                    fam,
+                )
+                .with_sparsity(SparsityProfile::nominal(1, 0.75)),
+            );
+            reqs.push(
+                EvalRequest::new(
+                    SnnModel::tiny_snn(16, 4, 10),
+                    Architecture::with_array(scheme),
+                    fam,
+                )
+                .jittered(fam as u64 ^ scheme.macs() as u64, format!("{}~rand", fam.name())),
+            );
+        }
+    }
+
+    let run = |threads: usize| -> Vec<(String, String, f64, u64)> {
+        let session = Session::builder()
+            .arch_pool(ArchPool::paper_pool())
+            .threads(threads)
+            .build();
+        session
+            .evaluate_many(&reqs)
+            .into_iter()
+            .map(|r| {
+                let r = r.unwrap();
+                (r.arch.clone(), r.dataflow.clone(), r.overall_j, r.cycles)
+            })
+            .collect()
+    };
+
+    let single = run(1);
+    let multi = run(8);
+    assert_eq!(single, multi, "results must not depend on thread count");
+
+    // Ordering: row i corresponds to request i.
+    for (req, row) in reqs.iter().zip(&single) {
+        assert_eq!(row.0, req.arch.label());
+        assert_eq!(row.1, req.label());
+    }
+}
+
+#[test]
+fn mixed_good_and_bad_requests_keep_positions() {
+    let bad_model = SnnModel {
+        name: "zero".into(),
+        input: (0, 0, 0),
+        layers: vec![],
+        timesteps: 1,
+        batch: 1,
+    };
+    let reqs = vec![
+        paper_request(Family::AdvWs),
+        EvalRequest::new(bad_model, Architecture::paper_default(), Family::AdvWs),
+        paper_request(Family::Rs),
+    ];
+    let session = Session::builder().threads(3).build();
+    let out = session.evaluate_many(&reqs);
+    assert!(out[0].is_ok());
+    assert!(out[1].is_err(), "invalid model must fail in place");
+    assert!(out[2].is_ok());
+    assert_eq!(out[2].as_ref().unwrap().dataflow, "RS");
+}
