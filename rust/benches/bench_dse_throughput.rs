@@ -1,82 +1,186 @@
 //! Bench: the L3 hot path — evaluation throughput of the unified
-//! `Session` API, which is the real serving path (DESIGN.md §9 target:
-//! >= 100k evaluations/s/core on prebuilt mappings).
+//! `Session` API and the allocation-free fast kernel (DESIGN.md §9
+//! targets: ≥ 500k kernel evals/s/core on prebuilt views, ≥ 5× over the
+//! pre-PR reference path).
 //!
-//! Measures (a) a single conv-energy evaluation, (b) a cold single
-//! `Session::evaluate`, (c) a warm (cached) `evaluate`, and (d) the
-//! batched DSE sweep through `evaluate_many` at 1 thread vs all cores.
+//! Measures, and emits as machine-readable `BENCH_dse.json`:
+//! * the pre-PR reference kernel (`conv_energy_reference`) vs the thin
+//!   wrapper (`conv_energy`) vs the allocation-free fast kernel
+//!   (`conv_energy_into` on a prebuilt view + reused scratch),
+//! * cold vs warm `Session::evaluate`,
+//! * mapper search, reference vs incremental fast path,
+//! * the batched DSE sweep through `evaluate_many` at 1 thread vs all
+//!   cores (chunked dispatch).
+//!
+//! Flags: `--quick` (CI smoke mode: smaller sweep, shorter timing
+//! windows), `--json PATH` (default `BENCH_dse.json`).
 
 use eocas::arch::{ArchPool, Architecture};
 use eocas::config::EnergyConfig;
 use eocas::dataflow::templates::{generate as gen_mapping, Family};
+use eocas::dse::mapper::{search, search_reference, MapperConfig};
 use eocas::dse::{explore, DseConfig};
-use eocas::energy::conv_energy;
+use eocas::energy::{conv_energy, conv_energy_into, conv_energy_reference, EvalScratch};
 use eocas::model::SnnModel;
 use eocas::session::{EvalRequest, Session};
 use eocas::sparsity::SparsityProfile;
-use eocas::util::bench::{black_box, time_it};
+use eocas::util::bench::{black_box, time_it, BenchStats};
+use eocas::util::json::Json;
 use eocas::workload::generate;
 
+/// One named measurement destined for the JSON artifact.
+struct Case {
+    key: &'static str,
+    stats: BenchStats,
+    /// Work items per timed iteration (1 for single evaluations; the
+    /// candidate count for sweeps), so `evals_per_s` is comparable.
+    items_per_iter: f64,
+}
+
+impl Case {
+    fn evals_per_s(&self) -> f64 {
+        self.items_per_iter / (self.stats.mean_ns / 1e9)
+    }
+}
+
+fn emit(cases: &[Case], speedups: &[(&str, f64)], quick: bool, path: &str) {
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0)).set("quick", Json::Bool(quick));
+    let mut jcases = Json::obj();
+    for c in cases {
+        let mut j = Json::obj();
+        j.set("mean_ns", Json::Num(c.stats.mean_ns))
+            .set("p50_ns", Json::Num(c.stats.p50_ns))
+            .set("p95_ns", Json::Num(c.stats.p95_ns))
+            .set("iters", Json::Num(c.stats.iters as f64))
+            .set("evals_per_s", Json::Num(c.evals_per_s()));
+        jcases.set(c.key, j);
+    }
+    doc.set("cases", jcases);
+    let mut jspeed = Json::obj();
+    for (k, v) in speedups {
+        jspeed.set(k, Json::Num(*v));
+    }
+    doc.set("speedup", jspeed);
+    let text = doc.dumps();
+    match std::fs::write(path, format!("{text}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+fn mean_of(cases: &[Case], key: &str) -> f64 {
+    cases.iter().find(|c| c.key == key).map(|c| c.stats.mean_ns).unwrap_or(f64::NAN)
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_dse.json".to_string());
+    // Timing windows: CI smoke mode keeps the whole run in seconds.
+    let (w_short, w_long) = if quick { (0.05, 0.2) } else { (1.5, 2.0) };
+
     let cfg = EnergyConfig::default();
     let arch = Architecture::paper_default();
     let wls = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
     let wl = &wls[0];
+    let mut cases: Vec<Case> = Vec::new();
+    let mut push = |key: &'static str, stats: BenchStats, items: f64| {
+        println!("{}", stats.report());
+        println!("  => {:.0} evals/s\n", items / (stats.mean_ns / 1e9));
+        cases.push(Case { key, stats, items_per_iter: items });
+    };
 
-    // (a) innermost unit: one conv-energy evaluation with a pre-built
-    // mapping (the quantity the 100k/s/core target is stated over).
+    // (a) innermost unit, three ways. The reference kernel is the exact
+    // pre-PR implementation; the fast kernel reuses a prebuilt view +
+    // scratch, which is how the mapper and any sweep-shaped caller hold
+    // it.
     let mapping = gen_mapping(Family::AdvWs, &wl.fp, &arch);
-    let s = time_it("conv_energy (prebuilt mapping)", 1000, 1.5, || {
+    let s = time_it("conv_energy_reference (pre-PR kernel)", 1000, w_short, || {
+        black_box(conv_energy_reference(&wl.fp, &mapping, &arch, &cfg));
+    });
+    push("kernel_reference", s, 1.0);
+    let s = time_it("conv_energy (wrapper over fast kernel)", 1000, w_short, || {
         black_box(conv_energy(&wl.fp, &mapping, &arch, &cfg));
     });
-    println!("{}", s.report());
-    println!("  => {:.0} conv evaluations/s/core\n", 1e9 / s.mean_ns);
+    push("kernel_wrapper", s, 1.0);
+    let view = mapping.view();
+    let mut scratch = EvalScratch::for_workload(&wl.fp, &cfg);
+    let s = time_it("conv_energy_into (prebuilt view + scratch)", 2000, w_short, || {
+        conv_energy_into(black_box(&view), &arch, &cfg, &mut scratch);
+        black_box(scratch.total_j());
+    });
+    push("kernel_fast", s, 1.0);
 
-    // (b/c) the serving path: Session::evaluate cold vs warm. The warm
-    // number is what repeated scenarios cost in a long-lived session.
+    // (b/c) the serving path: Session::evaluate cold vs warm.
     let session = Session::builder().threads(1).build();
     let req = EvalRequest::new(SnnModel::paper_layer(), arch.clone(), Family::AdvWs);
-    let s = time_it("Session::evaluate (cold, cleared cache)", 200, 1.5, || {
+    let s = time_it("Session::evaluate (cold, cleared cache)", 200, w_short, || {
         session.clear_caches();
         black_box(session.evaluate(&req).unwrap());
     });
-    println!("{}", s.report());
-    println!("  => {:.0} cold evaluations/s\n", 1e9 / s.mean_ns);
-
+    push("evaluate_cold", s, 1.0);
     session.evaluate(&req).unwrap(); // prime the cache
-    let s = time_it("Session::evaluate (warm cache hit)", 2000, 1.5, || {
+    let s = time_it("Session::evaluate (warm cache hit)", 2000, w_short, || {
         black_box(session.evaluate(&req).unwrap());
     });
-    println!("{}", s.report());
-    let stats = session.cache_stats();
-    println!(
-        "  => {:.0} warm evaluations/s ({} hits / {} misses)\n",
-        1e9 / s.mean_ns,
-        stats.result_hits,
-        stats.result_misses
-    );
+    push("evaluate_warm", s, 1.0);
 
-    // (d) batched pool sweeps through evaluate_many, 1 thread vs all
-    // cores — the path BENCH_*.json trajectories track.
-    let cifar = SnnModel::cifar100_snn();
+    // (d) mapper search on the paper layer's spike conv: incremental
+    // fast path vs the pre-PR reference loop (identical results —
+    // enforced by the equivalence tests — so the ratio is pure speedup).
+    let mc = MapperConfig::default();
+    let mut found_evals = 0usize;
+    let s = time_it("mapper::search (incremental fast path)", 5, w_short, || {
+        found_evals = search(&wl.fp, &arch, &cfg, &mc).evaluated;
+    });
+    push("mapper_search_fast", s, 1.0);
+    let ref_iters = if quick { 1 } else { 3 };
+    let s = time_it("mapper::search_reference (pre-PR path)", ref_iters, 0.0, || {
+        black_box(search_reference(&wl.fp, &arch, &cfg, &mc).evaluated);
+    });
+    push("mapper_search_reference", s, 1.0);
+    println!("  (mapper search prices {found_evals} candidates per run)\n");
+
+    // (e) batched pool sweeps through evaluate_many, 1 thread vs all
+    // cores — chunked dispatch. Quick mode shrinks the pool and model so
+    // the CI smoke job stays fast.
+    let (sweep_model, pool, samples) = if quick {
+        (SnnModel::paper_layer(), ArchPool::paper_pool(), 2)
+    } else {
+        (SnnModel::cifar100_snn(), ArchPool::extended(256, &[0.5, 1.0, 2.0]), 4)
+    };
     let sparsity = SparsityProfile::nominal(0, 0.75);
     for threads in [1usize, 0] {
-        let session = Session::builder()
-            .arch_pool(ArchPool::extended(256, &[0.5, 1.0, 2.0]))
-            .threads(threads)
-            .build();
-        let dse_cfg = DseConfig { random_samples: 4, ..Default::default() };
-        let label = if threads == 1 { "1 thread" } else { "all cores" };
+        let session = Session::builder().arch_pool(pool.clone()).threads(threads).build();
+        let dse_cfg = DseConfig { random_samples: samples, ..Default::default() };
+        let (key, label): (&'static str, &str) = if threads == 1 {
+            ("sweep_1_thread", "1 thread")
+        } else {
+            ("sweep_all_cores", "all cores")
+        };
         let mut evals = 0usize;
-        let s = time_it(&format!("DSE sweep cifar100 x 27 archs ({label})"), 3, 2.0, || {
+        let s = time_it(&format!("DSE sweep ({label})"), 3, w_long, || {
             session.clear_caches();
-            evals = explore(&session, &cifar, &sparsity, &dse_cfg).unwrap().evaluations;
+            evals = explore(&session, &sweep_model, &sparsity, &dse_cfg).unwrap().evaluations;
         });
-        println!("{}", s.report());
-        println!(
-            "  => {} candidate-evals, {:.0} candidate-evals/s\n",
-            evals,
-            evals as f64 / (s.mean_ns / 1e9)
-        );
+        push(key, s, evals as f64);
     }
+
+    // Headline ratios: the acceptance gate for this PR's hot-path work.
+    let kernel_speedup = mean_of(&cases, "kernel_reference") / mean_of(&cases, "kernel_fast");
+    let mapper_speedup =
+        mean_of(&cases, "mapper_search_reference") / mean_of(&cases, "mapper_search_fast");
+    println!("kernel speedup (reference / fast):        {kernel_speedup:.1}x");
+    println!("mapper search speedup (reference / fast): {mapper_speedup:.1}x");
+    emit(
+        &cases,
+        &[("kernel", kernel_speedup), ("mapper_search", mapper_speedup)],
+        quick,
+        &json_path,
+    );
 }

@@ -181,6 +181,28 @@ impl Mapping {
         errs
     }
 
+    /// Flatten into the allocation-free [`MappingView`] the fast
+    /// evaluation kernel consumes.
+    pub fn view(&self) -> MappingView {
+        let mut spatial_row = [1u64; 8];
+        for (d, f) in &self.spatial_rows {
+            spatial_row[d.idx()] *= *f;
+        }
+        let mut spatial_col = [1u64; 8];
+        for (d, f) in &self.spatial_cols {
+            spatial_col[d.idx()] *= *f;
+        }
+        MappingView::from_raw(
+            spatial_row,
+            spatial_col,
+            self.reg,
+            self.sram,
+            self.dram,
+            self.col_reduce,
+            self.halo_reuse,
+        )
+    }
+
     /// Render the loop nest as text (innermost at the bottom), for Fig. 6's
     /// "dataflow structures" panel.
     pub fn render_loop_nest(&self) -> String {
@@ -207,6 +229,83 @@ impl Mapping {
             .collect();
         out.push_str(&format!("  parallel-for [{}]   # {}x array\n", spatial.join(", "), self.used_pes()));
         out
+    }
+}
+
+/// Flattened, allocation-free view of a [`Mapping`] — the input of the
+/// fast evaluation kernel (`energy::conv_energy_into`).
+///
+/// The `(Dim, u64)` spatial vectors are collapsed into per-dim factor
+/// products (row and column axes kept separate because output operands
+/// only get column reduction when the array has per-column adder trees),
+/// the `String` label is dropped, and the three scheduled totals are
+/// derived once at construction. All factor products are exact in `f64`
+/// territory (they stay far below 2^53), so pricing a view is
+/// bit-identical to pricing the `Mapping` it came from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MappingView {
+    /// Per-dim product of the row-axis spatial factors.
+    pub spatial_row: [u64; 8],
+    /// Per-dim product of the column-axis spatial factors.
+    pub spatial_col: [u64; 8],
+    pub reg: [u64; 8],
+    pub sram: [u64; 8],
+    pub dram: [u64; 8],
+    pub col_reduce: bool,
+    pub halo_reuse: bool,
+    /// [`Mapping::scheduled_total`].
+    pub scheduled_total: u64,
+    /// [`Mapping::used_pes`].
+    pub used_pes: u64,
+    /// [`Mapping::cycles`].
+    pub cycles: u64,
+}
+
+impl MappingView {
+    /// Build a view from raw per-dim factor arrays (the mapper's inner
+    /// loop); the totals are derived here once.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_raw(
+        spatial_row: [u64; 8],
+        spatial_col: [u64; 8],
+        reg: [u64; 8],
+        sram: [u64; 8],
+        dram: [u64; 8],
+        col_reduce: bool,
+        halo_reuse: bool,
+    ) -> MappingView {
+        let mut scheduled_total = 1u64;
+        let mut cycles = 1u64;
+        let mut used_rows = 1u64;
+        let mut used_cols = 1u64;
+        for i in 0..8 {
+            scheduled_total *= spatial_row[i] * spatial_col[i] * reg[i] * sram[i] * dram[i];
+            cycles *= reg[i] * sram[i] * dram[i];
+            used_rows *= spatial_row[i];
+            used_cols *= spatial_col[i];
+        }
+        MappingView {
+            spatial_row,
+            spatial_col,
+            reg,
+            sram,
+            dram,
+            col_reduce,
+            halo_reuse,
+            scheduled_total,
+            used_pes: used_rows * used_cols,
+            cycles,
+        }
+    }
+
+    /// Total spatial unrolling of `d` across both array axes.
+    pub fn spatial_factor(&self, d: Dim) -> u64 {
+        self.spatial_row[d.idx()] * self.spatial_col[d.idx()]
+    }
+
+    /// Spatial utilization of the array in `[0, 1]`.
+    pub fn utilization(&self, array: &ArrayScheme) -> f64 {
+        self.used_pes as f64 / array.macs() as f64
     }
 }
 
@@ -288,6 +387,35 @@ mod tests {
         let m = Mapping::derive("t", &d, vec![], vec![], reg, [1; 8]);
         assert_eq!(m.scheduled_total(), 12);
         assert!(m.scheduled_total() >= d.total());
+    }
+
+    #[test]
+    fn view_mirrors_mapping_totals() {
+        let d = dims();
+        let mut reg = [1u64; 8];
+        reg[Dim::Q.idx()] = 32;
+        let mut sram = [1u64; 8];
+        sram[Dim::T.idx()] = 6;
+        // Dual-axis C unroll (AdvWS-style) so the same dim appears on
+        // both axes.
+        let m = Mapping::derive(
+            "v",
+            &d,
+            vec![(Dim::C, 16)],
+            vec![(Dim::M, 8), (Dim::C, 2)],
+            reg,
+            sram,
+        );
+        let v = m.view();
+        assert_eq!(v.scheduled_total, m.scheduled_total());
+        assert_eq!(v.cycles, m.cycles());
+        assert_eq!(v.used_pes, m.used_pes());
+        assert_eq!(v.spatial_factor(Dim::C), m.spatial_factor(Dim::C));
+        assert_eq!(v.spatial_factor(Dim::M), m.spatial_factor(Dim::M));
+        let arr = ArrayScheme::new(16, 16);
+        assert_eq!(v.utilization(&arr), m.utilization(&arr));
+        assert_eq!(v.col_reduce, m.col_reduce);
+        assert_eq!(v.halo_reuse, m.halo_reuse);
     }
 
     #[test]

@@ -213,7 +213,7 @@ pub fn sram_tile_bits(spec: &OperandSpec, m: &Mapping) -> u64 {
 /// Allocation-free tile-footprint kernel shared by [`sram_tile_bits`]
 /// and the capacity fitter's inner loop (the DSE hot path).
 #[inline]
-fn tile_bits_raw(
+pub(crate) fn tile_bits_raw(
     spec: &OperandSpec,
     spatial: &[u64; 8],
     reg: &[u64; 8],
@@ -239,44 +239,31 @@ fn tile_bits_raw(
     elems * spec.bits as u64
 }
 
-/// Shrink SRAM-level tile factors until every operand tile fits its
-/// Table-II macro. Halving proceeds from the largest shrinkable factor;
-/// `Mapping::derive` afterwards pushes the remainder to DRAM.
-fn fit_to_capacity(m: Mapping, w: &ConvWorkload, arch: &Architecture) -> Mapping {
-    let specs = operand_specs(w);
-    let mut sram = m.sram;
-    let mut reg = m.reg;
-    // Precompute per-dim spatial products once; the shrink loop below is
-    // the DSE's hottest path and must not allocate.
-    let mut spatial = [1u64; 8];
-    for (d, f) in m.spatial_rows.iter().chain(m.spatial_cols.iter()) {
-        spatial[d.idx()] *= *f;
-    }
-    let rebuild = |reg: [u64; 8], sram: [u64; 8]| {
-        let mut cur = Mapping::derive(
-            m.name.clone(),
-            &w.dims,
-            m.spatial_rows.clone(),
-            m.spatial_cols.clone(),
-            reg,
-            sram,
-        );
-        cur.col_reduce = m.col_reduce;
-        cur.halo_reuse = m.halo_reuse;
-        cur
-    };
+/// Capacity fitter over raw per-dim factor arrays — shared by
+/// [`fit_to_capacity`] (the `Mapping` path) and the mapper's
+/// allocation-free evaluator, so both paths shrink identically: halving
+/// proceeds from the largest shrinkable factor of the worst-overflowing
+/// operand until every tile fits its Table-II macro.
+pub(crate) fn fit_raw(
+    specs: &[OperandSpec; 3],
+    arch: &Architecture,
+    spatial: &[u64; 8],
+    halo_reuse: bool,
+    reg: &mut [u64; 8],
+    sram: &mut [u64; 8],
+) {
     // At most ~64 halvings per dim can ever be needed (factors are u64).
     for _ in 0..512 {
         // (is_reg_level, dim idx, tile excess)
         let mut worst: Option<(bool, usize, u64)> = None;
-        for spec in &specs {
+        for spec in specs {
             let cap_bits = arch.mem.get(spec.sram).bytes * 8;
-            let tile = tile_bits_raw(spec, &spatial, &reg, &sram, m.halo_reuse);
+            let tile = tile_bits_raw(spec, spatial, reg, sram, halo_reuse);
             if tile > cap_bits {
                 let excess = tile - cap_bits;
                 let tile_dim = |dim: &Dim| {
                     !spec.irr[dim.idx()]
-                        && !(spec.halo && m.halo_reuse && matches!(dim, Dim::R | Dim::S))
+                        && !(spec.halo && halo_reuse && matches!(dim, Dim::R | Dim::S))
                 };
                 // Prefer shrinking SRAM factors (N/T never count toward
                 // residency, so skip them); fall back to register tiles.
@@ -304,10 +291,36 @@ fn fit_to_capacity(m: Mapping, w: &ConvWorkload, arch: &Architecture) -> Mapping
         match worst {
             Some((true, idx, _)) => reg[idx] = (reg[idx] / 2).max(1),
             Some((false, idx, _)) => sram[idx] = (sram[idx] / 2).max(1),
-            None => return rebuild(reg, sram),
+            None => return,
         }
     }
-    rebuild(reg, sram)
+}
+
+/// Shrink SRAM-level tile factors until every operand tile fits its
+/// Table-II macro ([`fit_raw`]); `Mapping::derive` afterwards pushes the
+/// remainder to DRAM.
+fn fit_to_capacity(m: Mapping, w: &ConvWorkload, arch: &Architecture) -> Mapping {
+    let specs = operand_specs(w);
+    let mut sram = m.sram;
+    let mut reg = m.reg;
+    // Precompute per-dim spatial products once; the shrink loop is the
+    // DSE's hottest path and must not allocate.
+    let mut spatial = [1u64; 8];
+    for (d, f) in m.spatial_rows.iter().chain(m.spatial_cols.iter()) {
+        spatial[d.idx()] *= *f;
+    }
+    fit_raw(&specs, arch, &spatial, m.halo_reuse, &mut reg, &mut sram);
+    let mut cur = Mapping::derive(
+        m.name.clone(),
+        &w.dims,
+        m.spatial_rows.clone(),
+        m.spatial_cols.clone(),
+        reg,
+        sram,
+    );
+    cur.col_reduce = m.col_reduce;
+    cur.halo_reuse = m.halo_reuse;
+    cur
 }
 
 /// Generate the mappings of every family for one workload.

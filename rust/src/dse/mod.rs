@@ -18,7 +18,7 @@ use crate::arch::Architecture;
 use crate::dataflow::templates::{self, Family};
 use crate::dataflow::Mapping;
 use crate::model::SnnModel;
-use crate::session::{EvalRequest, EvalResult, Session};
+use crate::session::{Dataflow, EvalRequest, EvalResult, Session};
 use crate::sparsity::SparsityProfile;
 use crate::util::error::Result;
 use crate::util::prng::SplitMix64;
@@ -43,12 +43,21 @@ pub struct DseConfig {
     pub families: Vec<Family>,
     /// Extra randomized mapping samples per (architecture, family).
     pub random_samples: usize,
+    /// Also evaluate the generic mapper's unconstrained schedule optimum
+    /// per architecture ([`Dataflow::MapperOptimal`]) — the CLI's
+    /// `dse --dataflow mapper`.
+    pub include_mapper: bool,
     pub seed: u64,
 }
 
 impl Default for DseConfig {
     fn default() -> Self {
-        Self { families: Family::ALL.to_vec(), random_samples: 0, seed: 0xE0CA5 }
+        Self {
+            families: Family::ALL.to_vec(),
+            random_samples: 0,
+            include_mapper: false,
+            seed: 0xE0CA5,
+        }
     }
 }
 
@@ -61,16 +70,19 @@ pub struct DseResult {
 
 impl DseResult {
     /// Minimum-energy candidate (`None` for an empty pool/family set).
+    /// NaN energies order last under `total_cmp`, so one poisoned
+    /// candidate cannot panic the comparison or win the sweep.
     pub fn best(&self) -> Option<&Candidate> {
         self.candidates
             .iter()
-            .min_by(|a, b| a.overall_j.partial_cmp(&b.overall_j).unwrap())
+            .min_by(|a, b| a.overall_j.total_cmp(&b.overall_j))
     }
 
-    /// Pareto front over (energy, cycles), ascending by energy.
+    /// Pareto front over (energy, cycles), ascending by energy. NaN
+    /// energies sort last (`total_cmp`) instead of panicking.
     pub fn pareto(&self) -> Vec<&Candidate> {
         let mut sorted: Vec<&Candidate> = self.candidates.iter().collect();
-        sorted.sort_by(|a, b| a.overall_j.partial_cmp(&b.overall_j).unwrap());
+        sorted.sort_by(|a, b| a.overall_j.total_cmp(&b.overall_j));
         let mut front: Vec<&Candidate> = Vec::new();
         let mut best_cycles = u64::MAX;
         for c in sorted {
@@ -143,7 +155,8 @@ fn jitter_seed(base: u64, arch_idx: usize, sample: usize, fam: Family) -> u64 {
 }
 
 /// Build the request list for one exploration: every pool architecture ×
-/// every family (+ `random_samples` jittered variants each).
+/// every family (+ `random_samples` jittered variants each), plus one
+/// mapper-optimum request per architecture when `include_mapper` is set.
 pub fn requests(
     session: &Session,
     model: &SnnModel,
@@ -162,6 +175,12 @@ pub fn requests(
                 ));
             }
             reqs.push(base);
+        }
+        if dse.include_mapper {
+            reqs.push(
+                EvalRequest::new(model.clone(), arch.clone(), Dataflow::MapperOptimal)
+                    .with_sparsity(sparsity.clone()),
+            );
         }
     }
     reqs
@@ -246,6 +265,60 @@ mod tests {
                 assert!(errs.is_empty(), "{fam:?}: {errs:?}");
             }
         }
+    }
+
+    #[test]
+    fn nan_poisoned_candidate_cannot_panic_or_win() {
+        // Regression: `best`/`pareto` used `partial_cmp().unwrap()` and
+        // panicked on any NaN energy; they now order NaN last.
+        let (session, model, sparsity) = setup();
+        let mut res = explore(&session, &model, &sparsity, &DseConfig::default()).unwrap();
+        res.candidates[0].overall_j = f64::NAN;
+        let best = res.best().expect("finite candidates remain");
+        assert!(best.overall_j.is_finite(), "NaN won the sweep");
+        let front = res.pareto();
+        assert!(!front.is_empty());
+        // The poisoned candidate sorts last, so the finite front is
+        // unchanged apart from (possibly) a trailing NaN entry.
+        for c in front.iter().take(front.len() - 1) {
+            assert!(c.overall_j.is_finite());
+        }
+        // All-NaN still does not panic.
+        for c in &mut res.candidates {
+            c.overall_j = f64::NAN;
+        }
+        assert!(res.best().is_some());
+        let _ = res.pareto();
+    }
+
+    #[test]
+    fn mapper_sweep_runs_pooled_and_wins() {
+        let (session, model, sparsity) = setup();
+        let dse = DseConfig { include_mapper: true, ..Default::default() };
+        let res = explore(&session, &model, &sparsity, &dse).unwrap();
+        // 4 pool architectures × (5 families + 1 mapper optimum).
+        assert_eq!(res.evaluations, 4 * 6);
+        let mappers: Vec<&Candidate> =
+            res.candidates.iter().filter(|c| c.dataflow == "Mapper").collect();
+        assert_eq!(mappers.len(), 4);
+        assert!(mappers.iter().all(|c| c.overall_j.is_finite() && c.overall_j > 0.0));
+        // The unconstrained optimum beats (or ties within the search
+        // tolerance) the best named family anywhere in the pool.
+        let best_mapper =
+            mappers.iter().min_by(|a, b| a.overall_j.total_cmp(&b.overall_j)).unwrap();
+        let best_family = res
+            .candidates
+            .iter()
+            .filter(|c| c.dataflow != "Mapper")
+            .min_by(|a, b| a.overall_j.total_cmp(&b.overall_j))
+            .unwrap();
+        assert!(
+            best_mapper.overall_j <= best_family.overall_j * 1.0001,
+            "mapper {} uJ vs best family {} {} uJ",
+            best_mapper.overall_j * 1e6,
+            best_family.dataflow,
+            best_family.overall_j * 1e6
+        );
     }
 
     #[test]

@@ -12,12 +12,12 @@ pub mod ablation;
 use crate::arch::Architecture;
 use crate::config::EnergyConfig;
 use crate::dataflow::templates::{self, Family};
-use crate::dataflow::Mapping;
-use crate::reuse::{workload_access, Role};
+use crate::dataflow::{Mapping, MappingView};
+use crate::reuse::{operand_access_view, operand_specs, workload_access, OperandSpec, Role};
 use crate::workload::{ConvWorkload, LayerWorkload, Phase, UnitWork};
 
 /// Energy of one operand, split by hierarchy level (joules).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OperandEnergy {
     pub tensor: &'static str,
     pub role: Role,
@@ -63,8 +63,161 @@ pub fn compute_energy(w: &ConvWorkload, cfg: &EnergyConfig) -> f64 {
         * 1e-12
 }
 
-/// Full energy of one convolution workload under `mapping`.
+/// Price one operand under a mapping view (the eq. 20–22 pattern with
+/// the Table-II constants) — the allocation-free kernel shared by
+/// [`conv_energy_into`] and the mapper's incremental re-pricer.
+pub fn price_operand(
+    spec: &OperandSpec,
+    view: &MappingView,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+) -> OperandEnergy {
+    let acc = operand_access_view(spec, view);
+    let bits = spec.bits as f64;
+    let sram_r = arch.mem.read_pj(spec.sram, cfg);
+    let sram_w = arch.mem.write_pj(spec.sram, cfg);
+    let (reg_j, sram_j, dram_j) = match spec.role {
+        // eq. 20/21 pattern for read operands:
+        //   (r^w + s^r)/RU_reg  +  (s^w + m^r)/RU_sram
+        Role::Input | Role::Stationary => {
+            let mut reg_j = acc.reg_fills * bits * cfg.reg_write_pj;
+            if cfg.count_reg_reads {
+                reg_j += view.scheduled_total as f64 * bits * cfg.reg_read_pj;
+            }
+            let sram_j = acc.reg_fills * bits * sram_r + acc.sram_fills * bits * sram_w;
+            let dram_j = acc.sram_fills * bits * cfg.dram_read_pj;
+            (reg_j, sram_j, dram_j)
+        }
+        // Output pattern: (r^r + s^w)/RU_reg + (s^r + m^w)/RU_sram.
+        Role::Output => {
+            let mut reg_j = acc.reg_fills * bits * cfg.reg_read_pj;
+            if cfg.count_reg_reads {
+                reg_j += view.scheduled_total as f64 * bits * cfg.reg_write_pj;
+            }
+            let sram_j = acc.reg_fills * bits * sram_w + acc.sram_fills * bits * sram_r;
+            let dram_j = acc.sram_fills * bits * cfg.dram_write_pj;
+            (reg_j, sram_j, dram_j)
+        }
+    };
+    OperandEnergy {
+        tensor: spec.tensor,
+        role: spec.role,
+        reg_j: reg_j * 1e-12,
+        sram_j: sram_j * 1e-12,
+        dram_j: dram_j * 1e-12,
+    }
+}
+
+/// Reusable per-workload state for the allocation-free kernel: the three
+/// operand specs and the (dataflow-invariant) compute energy are derived
+/// once, and [`conv_energy_into`] writes its results into the fixed-size
+/// buffers here instead of allocating. Build one per `(workload, cfg)`
+/// pair and reuse it across every mapping evaluated for that workload.
+#[derive(Debug, Clone)]
+pub struct EvalScratch {
+    phase: Phase,
+    specs: [OperandSpec; 3],
+    compute_j: f64,
+    /// Filled by [`conv_energy_into`]: per-operand energies in
+    /// (input, stationary, output) order.
+    pub operands: [OperandEnergy; 3],
+    /// Filled by [`conv_energy_into`].
+    pub cycles: u64,
+    /// Filled by [`conv_energy_into`].
+    pub utilization: f64,
+}
+
+impl EvalScratch {
+    /// Precompute the per-workload tables (operand specs, compute
+    /// energy).
+    pub fn for_workload(w: &ConvWorkload, cfg: &EnergyConfig) -> EvalScratch {
+        let specs = operand_specs(w);
+        let zero = |s: &OperandSpec| OperandEnergy {
+            tensor: s.tensor,
+            role: s.role,
+            reg_j: 0.0,
+            sram_j: 0.0,
+            dram_j: 0.0,
+        };
+        EvalScratch {
+            phase: w.phase,
+            specs: [specs[0], specs[1], specs[2]],
+            compute_j: compute_energy(w, cfg),
+            operands: [zero(&specs[0]), zero(&specs[1]), zero(&specs[2])],
+            cycles: 0,
+            utilization: 0.0,
+        }
+    }
+
+    /// The precomputed operand specs (input, stationary, output).
+    pub fn specs(&self) -> &[OperandSpec; 3] {
+        &self.specs
+    }
+
+    /// eqs. 17–19 (dataflow-invariant, precomputed).
+    pub fn compute_j(&self) -> f64 {
+        self.compute_j
+    }
+
+    /// Conv memory energy, summed exactly like [`ConvEnergy::mem_j`].
+    pub fn mem_j(&self) -> f64 {
+        self.operands.iter().map(|o| o.total()).sum()
+    }
+
+    /// Total energy, summed exactly like [`ConvEnergy::total_j`].
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.mem_j()
+    }
+
+    /// Materialize a [`ConvEnergy`] (the only allocating step).
+    pub fn to_conv_energy(&self) -> ConvEnergy {
+        ConvEnergy {
+            phase: self.phase,
+            compute_j: self.compute_j,
+            operands: self.operands.to_vec(),
+            cycles: self.cycles,
+            utilization: self.utilization,
+        }
+    }
+}
+
+/// Allocation-free evaluation kernel: price the scratch's workload under
+/// `view`, writing into `scratch`. Bit-identical to
+/// [`conv_energy_reference`] (enforced by the property suite in
+/// `tests/kernel_equivalence.rs`) while performing zero heap allocation —
+/// this is the innermost function of the DSE hot path.
+pub fn conv_energy_into(
+    view: &MappingView,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+    scratch: &mut EvalScratch,
+) {
+    for i in 0..3 {
+        scratch.operands[i] = price_operand(&scratch.specs[i], view, arch, cfg);
+    }
+    scratch.cycles = view.cycles;
+    scratch.utilization = view.utilization(&arch.array);
+}
+
+/// Full energy of one convolution workload under `mapping`. Thin wrapper
+/// over the allocation-free kernel ([`conv_energy_into`]); the original
+/// closed form survives as [`conv_energy_reference`], the equivalence
+/// oracle.
 pub fn conv_energy(
+    w: &ConvWorkload,
+    mapping: &Mapping,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+) -> ConvEnergy {
+    let mut scratch = EvalScratch::for_workload(w, cfg);
+    conv_energy_into(&mapping.view(), arch, cfg, &mut scratch);
+    scratch.to_conv_energy()
+}
+
+/// The pre-fast-path implementation of [`conv_energy`], kept verbatim as
+/// the oracle for the kernel-equivalence property tests and as the
+/// honest "before" baseline in `bench_dse_throughput`.
+pub fn conv_energy_reference(
     w: &ConvWorkload,
     mapping: &Mapping,
     arch: &Architecture,
@@ -255,6 +408,26 @@ mod tests {
     fn paper_setup() -> (LayerWorkload, Architecture, EnergyConfig) {
         let wl = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0);
         (wl, Architecture::paper_default(), EnergyConfig::default())
+    }
+
+    #[test]
+    fn fast_kernel_matches_reference_on_templates() {
+        let (wl, arch, cfg) = paper_setup();
+        for w in wl.convs() {
+            let mut scratch = EvalScratch::for_workload(w, &cfg);
+            for fam in Family::ALL {
+                let m = templates::generate(fam, w, &arch);
+                let slow = conv_energy_reference(w, &m, &arch, &cfg);
+                conv_energy_into(&m.view(), &arch, &cfg, &mut scratch);
+                assert_eq!(slow.compute_j.to_bits(), scratch.compute_j().to_bits());
+                assert_eq!(slow.total_j().to_bits(), scratch.total_j().to_bits());
+                for (a, b) in slow.operands.iter().zip(scratch.operands.iter()) {
+                    assert_eq!(a, b, "{} {:?} {}", fam.name(), w.phase, a.tensor);
+                }
+                let wrapped = conv_energy(w, &m, &arch, &cfg);
+                assert_eq!(wrapped, slow, "{} {:?}", fam.name(), w.phase);
+            }
+        }
     }
 
     #[test]

@@ -27,7 +27,7 @@ use eocas::err;
 use eocas::model::SnnModel;
 use eocas::report::{self, ReportCtx};
 use eocas::runtime::Runtime;
-use eocas::session::{EvalRequest, Session};
+use eocas::session::{Dataflow, EvalRequest, Session};
 use eocas::sparsity::SparsityProfile;
 use eocas::trainer::{Trainer, TrainerConfig};
 use eocas::util::error::Result;
@@ -38,9 +38,13 @@ eocas — Energy-Oriented Computing Architecture Simulator for SNN training
 USAGE:
   eocas report <workload|table1|table3|table4|table5|table6|table7|fig5|fig6|all>
                [--out DIR] [--model paper|cifar100|tiny] [--sparsity PATH]
-  eocas simulate [--model paper|cifar100|tiny] [--dataflow advws|ws1|ws2|os|rs]
+  eocas simulate [--model paper|cifar100|tiny]
+                 [--dataflow advws|ws1|ws2|os|rs|mapper]
                  [--activity X] [--config PATH] [--sparsity PATH] [--json]
   eocas dse      [--samples N] [--threads N] [--model ...]
+                 [--dataflow all|mapper|advws|ws1|ws2|os|rs]
+                 (a family name sweeps that family only; `mapper` sweeps
+                  all five families PLUS the mapper optimum per arch)
   eocas train    [--steps N] [--lr X] [--seed N] [--log PATH]
   eocas pipeline [--steps N] [--out DIR] [--reuse] [--threads N]
 
@@ -143,6 +147,15 @@ fn pick_family(name: &str) -> Result<Family> {
     })
 }
 
+/// A dataflow flag value: a family name, or `mapper` for the generic
+/// mapper's unconstrained schedule optimum.
+fn pick_dataflow(name: &str) -> Result<Dataflow> {
+    if name.eq_ignore_ascii_case("mapper") {
+        return Ok(Dataflow::MapperOptimal);
+    }
+    pick_family(name).map(Dataflow::Family)
+}
+
 fn energy_config(flags: &HashMap<String, String>) -> Result<EnergyConfig> {
     match flags.get("config") {
         Some(p) => EnergyConfig::load(std::path::Path::new(p)).map_err(|e| err!("config: {e}")),
@@ -226,7 +239,7 @@ fn run(args: &[String]) -> Result<()> {
         "simulate" => {
             let cfg = energy_config(&flags)?;
             let model = pick_model(&flags)?;
-            let fam = pick_family(flags.get("dataflow").map(|s| s.as_str()).unwrap_or("advws"))?;
+            let fam = pick_dataflow(flags.get("dataflow").map(|s| s.as_str()).unwrap_or("advws"))?;
             let activity = parse_num(&flags, "activity", cfg.nominal_activity)?;
             let session = Session::builder().energy_config(cfg).build();
             // No --sparsity: leave the profile empty so --activity applies
@@ -269,10 +282,17 @@ fn run(args: &[String]) -> Result<()> {
             let cfg = energy_config(&flags)?;
             let model = pick_model(&flags)?;
             let sparsity = pick_sparsity(&flags, &model, &cfg)?;
-            let dse_cfg = DseConfig {
+            let mut dse_cfg = DseConfig {
                 random_samples: parse_num(&flags, "samples", 0usize)?,
                 ..Default::default()
             };
+            match flags.get("dataflow").map(|s| s.as_str()) {
+                None | Some("all") => {}
+                // `--dataflow mapper`: sweep the unconstrained schedule
+                // optimum across the pool alongside the named families.
+                Some("mapper") => dse_cfg.include_mapper = true,
+                Some(other) => dse_cfg.families = vec![pick_family(other)?],
+            }
             let session = Session::builder()
                 .energy_config(cfg)
                 .arch_pool(ArchPool::paper_pool())
@@ -435,6 +455,14 @@ mod tests {
     #[test]
     fn unknown_command_fails() {
         assert!(run(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn dataflow_flag_accepts_mapper() {
+        assert_eq!(pick_dataflow("mapper").unwrap(), Dataflow::MapperOptimal);
+        assert_eq!(pick_dataflow("MAPPER").unwrap(), Dataflow::MapperOptimal);
+        assert_eq!(pick_dataflow("advws").unwrap(), Dataflow::Family(Family::AdvWs));
+        assert!(pick_dataflow("bogus").is_err());
     }
 
     #[test]

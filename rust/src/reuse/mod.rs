@@ -9,7 +9,7 @@
 //! [9] and specializes to SNN training's operand set.
 
 use crate::arch::SramId;
-use crate::dataflow::Mapping;
+use crate::dataflow::{Mapping, MappingView};
 use crate::workload::{ConvWorkload, Dim, Phase};
 
 /// The three operand roles of a convolution.
@@ -27,7 +27,7 @@ pub enum Role {
 }
 
 /// Static description of one operand under one phase.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct OperandSpec {
     pub role: Role,
     pub tensor: &'static str,
@@ -220,6 +220,71 @@ pub fn operand_access(spec: &OperandSpec, m: &Mapping) -> OperandAccess {
     }
 }
 
+/// [`spatial_reuse`] over a flattened [`MappingView`]. Same value: the
+/// per-dim factor products are exact integers far below 2^53, so the
+/// reordered multiplications lose nothing.
+pub(crate) fn spatial_reuse_view(spec: &OperandSpec, v: &MappingView) -> f64 {
+    let mut f = 1.0;
+    for d in Dim::ALL {
+        let irr = spec.irr[d.idx()]
+            || (spec.halo && v.halo_reuse && matches!(d, Dim::R | Dim::S));
+        if !irr {
+            continue;
+        }
+        f *= v.spatial_row[d.idx()] as f64;
+        if spec.role != Role::Output || v.col_reduce {
+            f *= v.spatial_col[d.idx()] as f64;
+        }
+    }
+    f
+}
+
+/// [`operand_access`] over a [`MappingView`] — the allocation-free fast
+/// path. Applies the identical per-boundary classification (`irr_at`), so
+/// the resulting counts are bit-identical to the `Mapping` path
+/// (property-tested in `tests/kernel_equivalence.rs`).
+pub fn operand_access_view(spec: &OperandSpec, v: &MappingView) -> OperandAccess {
+    let total = v.scheduled_total as f64;
+    let sp = spatial_reuse_view(spec, v);
+    let mut ru_reg = sp;
+    for d in Dim::ALL {
+        if irr_at(spec, d, false, v.halo_reuse) {
+            ru_reg *= v.reg[d.idx()] as f64;
+        }
+    }
+    let mut ru_sram = ru_reg;
+    for d in Dim::ALL {
+        if irr_at(spec, d, true, v.halo_reuse) {
+            ru_sram *= v.sram[d.idx()] as f64;
+            if !irr_at(spec, d, false, v.halo_reuse) {
+                ru_sram *= v.reg[d.idx()] as f64;
+            }
+        }
+    }
+    OperandAccess {
+        ru_reg,
+        ru_sram,
+        reg_fills: total / ru_reg,
+        sram_fills: total / ru_sram,
+    }
+}
+
+/// Bitmask (by [`Dim::idx`]) of the dims whose `(reg, sram)` tile factors
+/// can change this operand's reuse factors — i.e. the dims irrelevant to
+/// it at either boundary. The mapper's incremental re-pricer recomputes
+/// an operand only when the changed dim is in this mask (a relevant dim
+/// alters neither `ru_reg` nor `ru_sram`, and the scheduled total is
+/// checked separately).
+pub fn affected_dims_mask(spec: &OperandSpec, halo_reuse: bool) -> u8 {
+    let mut mask = 0u8;
+    for d in Dim::ALL {
+        if irr_at(spec, d, false, halo_reuse) || irr_at(spec, d, true, halo_reuse) {
+            mask |= 1 << d.idx();
+        }
+    }
+    mask
+}
+
 /// All three operands' access counts for a workload under a mapping, in
 /// (input, stationary, output) order.
 pub fn workload_access(w: &ConvWorkload, m: &Mapping) -> [(OperandSpec, OperandAccess); 3] {
@@ -353,6 +418,38 @@ mod tests {
         for k in 0..9 {
             assert!(rus[2 * k + 1] >= rus[2 * k]);
         }
+    }
+
+    #[test]
+    fn view_access_is_bit_identical_to_mapping_access() {
+        let w = fp_workload();
+        let m = ws_mapping(&w.dims);
+        let v = m.view();
+        for spec in operand_specs(&w) {
+            let a = operand_access(&spec, &m);
+            let b = operand_access_view(&spec, &v);
+            assert_eq!(a, b, "{}", spec.tensor);
+        }
+    }
+
+    #[test]
+    fn affected_mask_covers_irrelevant_dims_only() {
+        let w = fp_workload();
+        let specs = operand_specs(&w);
+        // FP input: base-irrelevant M plus halo R/S at the SRAM boundary.
+        let inp = affected_dims_mask(&specs[0], true);
+        assert_ne!(inp & (1 << Dim::M.idx()), 0);
+        assert_ne!(inp & (1 << Dim::R.idx()), 0);
+        assert_eq!(inp & (1 << Dim::C.idx()), 0);
+        // Without halo reuse, R/S drop out of the input mask.
+        let inp_no_halo = affected_dims_mask(&specs[0], false);
+        assert_eq!(inp_no_halo & (1 << Dim::R.idx()), 0);
+        // FP weight: N, T, P, Q.
+        let sta = affected_dims_mask(&specs[1], true);
+        for d in [Dim::N, Dim::T, Dim::P, Dim::Q] {
+            assert_ne!(sta & (1 << d.idx()), 0);
+        }
+        assert_eq!(sta & (1 << Dim::R.idx()), 0);
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! output is canonical and byte-stable for identical values.
 
 use super::{
-    EvalOptions, EvalRequest, EvalResult, LayerBreakdown, OperandBreakdown, PhaseEnergy,
-    SCHEMA_VERSION,
+    Dataflow, EvalOptions, EvalRequest, EvalResult, LayerBreakdown, OperandBreakdown,
+    PhaseEnergy, SCHEMA_VERSION,
 };
 use crate::arch::{Architecture, ArrayScheme, MemoryPool, SramId, SramMacro};
 use crate::dataflow::templates::Family;
@@ -223,6 +223,22 @@ pub fn family_from_key(s: &str) -> Result<Family> {
         .ok_or_else(|| err!("unknown dataflow family `{s}`"))
 }
 
+/// Stable lowercase key for a request dataflow: a family key, or
+/// `"mapper"` for the generic mapper optimum.
+pub fn dataflow_key(d: Dataflow) -> &'static str {
+    match d {
+        Dataflow::Family(f) => family_key(f),
+        Dataflow::MapperOptimal => "mapper",
+    }
+}
+
+pub fn dataflow_from_key(s: &str) -> Result<Dataflow> {
+    if s == "mapper" {
+        return Ok(Dataflow::MapperOptimal);
+    }
+    family_from_key(s).map(Dataflow::Family)
+}
+
 fn sparsity_to_json(s: &SparsityProfile) -> Json {
     let mut j = Json::obj();
     j.set("source", Json::Str(s.source.clone()))
@@ -276,7 +292,7 @@ impl EvalRequest {
         j.set("schema", Json::Num(SCHEMA_VERSION as f64))
             .set("model", model_to_json(&self.model))
             .set("arch", arch_to_json(&self.arch))
-            .set("dataflow", Json::Str(family_key(self.dataflow).into()))
+            .set("dataflow", Json::Str(dataflow_key(self.dataflow).into()))
             .set("sparsity", sparsity_to_json(&self.sparsity))
             .set("options", options_to_json(&self.options));
         j
@@ -287,7 +303,7 @@ impl EvalRequest {
         Ok(EvalRequest {
             model: model_from_json(get(j, "model")?)?,
             arch: arch_from_json(get(j, "arch")?)?,
-            dataflow: family_from_key(&text(j, "dataflow")?)?,
+            dataflow: dataflow_from_key(&text(j, "dataflow")?)?,
             sparsity: sparsity_from_json(get(j, "sparsity")?)?,
             options: options_from_json(get(j, "options")?)?,
         })
@@ -488,6 +504,31 @@ mod tests {
             assert_eq!(family_from_key(family_key(f)).unwrap(), f);
         }
         assert!(family_from_key("systolic").is_err());
+    }
+
+    #[test]
+    fn dataflow_keys_cover_families_and_mapper() {
+        for f in Family::ALL {
+            assert_eq!(
+                dataflow_from_key(dataflow_key(Dataflow::Family(f))).unwrap(),
+                Dataflow::Family(f)
+            );
+        }
+        assert_eq!(dataflow_from_key("mapper").unwrap(), Dataflow::MapperOptimal);
+        assert_eq!(dataflow_key(Dataflow::MapperOptimal), "mapper");
+        assert!(dataflow_from_key("systolic").is_err());
+    }
+
+    #[test]
+    fn mapper_request_round_trips() {
+        let req = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Dataflow::MapperOptimal,
+        );
+        let back =
+            EvalRequest::from_json(&Json::parse(&req.to_json().dumps()).unwrap()).unwrap();
+        assert_eq!(req, back);
     }
 
     #[test]

@@ -30,8 +30,12 @@
 //!   structural key over the request, so repeated scenarios are
 //!   near-free.
 //! * **Batching** — [`Session::evaluate_many`] fans a batch out over a
-//!   persistent worker pool (no per-sweep thread spawning) and returns
-//!   results in request order regardless of scheduling.
+//!   persistent worker pool (no per-sweep thread spawning) in chunked
+//!   jobs (one queue push / channel send per chunk) and returns results
+//!   in request order regardless of scheduling.
+//! * **Dataflow axis** — a request evaluates a named family template
+//!   ([`Dataflow::Family`]) or the generic mapper's unconstrained
+//!   schedule optimum ([`Dataflow::MapperOptimal`]).
 //! * **Stable schema** — [`EvalRequest`] and [`EvalResult`] round-trip
 //!   through the JSON schema documented in `DESIGN.md` (`--json` on the
 //!   CLI emits exactly this encoding).
@@ -66,6 +70,38 @@ pub const SCHEMA_VERSION: u32 = 1;
 // Request side
 // ---------------------------------------------------------------------------
 
+/// The dataflow axis of a request: one of the named §IV-A family
+/// templates, or the unconstrained schedule optimum found by the generic
+/// mapper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// A named dataflow family template.
+    Family(Family),
+    /// Search the full divisor-aligned tile-placement space per
+    /// convolution (`dse::mapper::search`) and evaluate the
+    /// minimum-energy mapping found — the paper's "is Advanced WS
+    /// actually near-optimal?" question, served through the standard
+    /// evaluation API (and therefore batched, cached and pooled like any
+    /// other request).
+    MapperOptimal,
+}
+
+impl Dataflow {
+    /// Display label ("Advanced WS", …, or "Mapper").
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::Family(f) => f.name(),
+            Dataflow::MapperOptimal => "Mapper",
+        }
+    }
+}
+
+impl From<Family> for Dataflow {
+    fn from(f: Family) -> Dataflow {
+        Dataflow::Family(f)
+    }
+}
+
 /// Per-request evaluation switches.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct EvalOptions {
@@ -85,19 +121,24 @@ pub struct EvalOptions {
 pub struct EvalRequest {
     pub model: SnnModel,
     pub arch: Architecture,
-    pub dataflow: Family,
+    pub dataflow: Dataflow,
     pub sparsity: SparsityProfile,
     pub options: EvalOptions,
 }
 
 impl EvalRequest {
     /// A request with an empty sparsity profile (every layer uses the
-    /// default activity) and default options.
-    pub fn new(model: SnnModel, arch: Architecture, dataflow: Family) -> EvalRequest {
+    /// default activity) and default options. `dataflow` accepts a
+    /// [`Family`] directly or a [`Dataflow`].
+    pub fn new(
+        model: SnnModel,
+        arch: Architecture,
+        dataflow: impl Into<Dataflow>,
+    ) -> EvalRequest {
         EvalRequest {
             model,
             arch,
-            dataflow,
+            dataflow: dataflow.into(),
             sparsity: SparsityProfile { source: "default".into(), per_layer: Vec::new() },
             options: EvalOptions::default(),
         }
@@ -139,7 +180,13 @@ impl EvalRequest {
         let mut key = String::with_capacity(256);
         write_model_key(&mut key, &self.model);
         write_arch_key(&mut key, &self.arch);
-        let _ = write!(key, "f{};", self.dataflow as u64);
+        match self.dataflow {
+            Dataflow::Family(f) => {
+                let _ = write!(key, "f{};", f as u64);
+            }
+            // "M" cannot collide with a family's numeric discriminant.
+            Dataflow::MapperOptimal => key.push_str("fM;"),
+        }
         for v in &self.sparsity.per_layer {
             let _ = write!(key, "{:x},", v.to_bits());
         }
@@ -535,14 +582,16 @@ impl Inner {
     fn compute(&self, req: &EvalRequest) -> Result<EvalResult> {
         let default_activity = req.options.activity.unwrap_or(self.cfg.nominal_activity);
         let wls = self.workloads_for(&req.model, &req.sparsity.per_layer, default_activity)?;
-        let layers: Vec<LayerEnergy> = match req.options.jitter_seed {
-            None => model_energy_for_family(&wls, req.dataflow, &req.arch, &self.cfg),
-            Some(seed) => {
+        let layers: Vec<LayerEnergy> = match (req.dataflow, req.options.jitter_seed) {
+            (Dataflow::Family(fam), None) => {
+                model_energy_for_family(&wls, fam, &req.arch, &self.cfg)
+            }
+            (Dataflow::Family(fam), Some(seed)) => {
                 // One RNG across all layers/phases, in evaluation order —
                 // the DSE's historical deterministic sampling scheme.
                 let mut rng = SplitMix64::new(seed);
                 let mut jitter = |w: &crate::workload::ConvWorkload| {
-                    crate::dse::jittered_mapping(w, &req.arch, req.dataflow, &mut rng)
+                    crate::dse::jittered_mapping(w, &req.arch, fam, &mut rng)
                 };
                 wls.iter()
                     .map(|wl| LayerEnergy {
@@ -550,6 +599,28 @@ impl Inner {
                         fp: conv_energy(&wl.fp, &jitter(&wl.fp), &req.arch, &self.cfg),
                         bp: conv_energy(&wl.bp, &jitter(&wl.bp), &req.arch, &self.cfg),
                         wg: conv_energy(&wl.wg, &jitter(&wl.wg), &req.arch, &self.cfg),
+                        units: unit_energy(&wl.units, &req.arch, &self.cfg),
+                    })
+                    .collect()
+            }
+            (Dataflow::MapperOptimal, Some(_)) => {
+                return Err(crate::util::error::Error::new(
+                    "jittered sampling applies to family templates, not the mapper optimum",
+                ));
+            }
+            (Dataflow::MapperOptimal, None) => {
+                // Per-convolution schedule search through the generic
+                // mapper's allocation-free fast path.
+                let mc = crate::dse::mapper::MapperConfig::default();
+                let opt = |w: &crate::workload::ConvWorkload| {
+                    crate::dse::mapper::search(w, &req.arch, &self.cfg, &mc).mapping
+                };
+                wls.iter()
+                    .map(|wl| LayerEnergy {
+                        layer: wl.layer,
+                        fp: conv_energy(&wl.fp, &opt(&wl.fp), &req.arch, &self.cfg),
+                        bp: conv_energy(&wl.bp, &opt(&wl.bp), &req.arch, &self.cfg),
+                        wg: conv_energy(&wl.wg, &opt(&wl.wg), &req.arch, &self.cfg),
                         units: unit_energy(&wl.units, &req.arch, &self.cfg),
                     })
                     .collect()
@@ -631,38 +702,55 @@ impl Session {
     /// Evaluate a batch on the worker pool. Results come back in request
     /// order regardless of thread scheduling, so batch output is
     /// deterministic for a deterministic request list.
+    ///
+    /// Jobs are submitted in *chunks* (a few per worker) rather than one
+    /// per request: one queue push and one mpsc send per chunk, which
+    /// cuts the queue-mutex and channel contention that dominated large
+    /// cached sweeps, while still load-balancing the tail.
     pub fn evaluate_many(&self, reqs: &[EvalRequest]) -> Vec<Result<Arc<EvalResult>>> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let chunk = workers::chunk_size(reqs.len(), self.threads());
         let (tx, rx) = mpsc::channel();
-        for (i, req) in reqs.iter().enumerate() {
+        for (ci, slice) in reqs.chunks(chunk).enumerate() {
             let inner = self.inner.clone();
-            let req = req.clone();
+            let batch: Vec<EvalRequest> = slice.to_vec();
             let tx = tx.clone();
+            let start = ci * chunk;
             self.pool().submit(Box::new(move || {
-                // A panicking evaluation must not kill the worker or
-                // leave its result slot empty — deliver it as an error
-                // so the batch contract ("a failing request does not
-                // poison its neighbours") holds.
-                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    inner.evaluate(&req)
-                }))
-                .unwrap_or_else(|payload| {
-                    let msg = payload
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| payload.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "evaluation panicked".to_string());
-                    Err(crate::util::error::Error::new(format!(
-                        "evaluation panicked: {msg}"
-                    )))
-                });
-                let _ = tx.send((i, res));
+                let results: Vec<Result<Arc<EvalResult>>> = batch
+                    .iter()
+                    .map(|req| {
+                        // A panicking evaluation must not kill the worker
+                        // or leave its result slot empty — deliver it as
+                        // an error so the batch contract ("a failing
+                        // request does not poison its neighbours") holds.
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            inner.evaluate(req)
+                        }))
+                        .unwrap_or_else(|payload| {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "evaluation panicked".to_string());
+                            Err(crate::util::error::Error::new(format!(
+                                "evaluation panicked: {msg}"
+                            )))
+                        })
+                    })
+                    .collect();
+                let _ = tx.send((start, results));
             }));
         }
         drop(tx);
         let mut out: Vec<Option<Result<Arc<EvalResult>>>> =
             (0..reqs.len()).map(|_| None).collect();
-        for (i, res) in rx {
-            out[i] = Some(res);
+        for (start, results) in rx {
+            for (k, res) in results.into_iter().enumerate() {
+                out[start + k] = Some(res);
+            }
         }
         out.into_iter().map(|slot| slot.expect("worker delivered every result")).collect()
     }
@@ -777,6 +865,44 @@ mod tests {
         assert!(session.evaluate(&req).is_err());
         let batch = session.evaluate_many(std::slice::from_ref(&req));
         assert!(batch[0].is_err());
+    }
+
+    #[test]
+    fn mapper_optimal_dataflow_evaluates_and_beats_families() {
+        let session = Session::builder().threads(1).build();
+        let req = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Dataflow::MapperOptimal,
+        );
+        let res = session.evaluate(&req).unwrap();
+        assert_eq!(res.dataflow, "Mapper");
+        assert!(res.overall_j.is_finite() && res.overall_j > 0.0);
+        // The unconstrained schedule optimum cannot lose to the paper's
+        // best named family beyond the search tolerance.
+        let adv = session.evaluate(&paper_request()).unwrap();
+        assert!(
+            res.overall_j <= adv.overall_j * 1.0001,
+            "mapper {} uJ vs AdvWS {} uJ",
+            res.overall_j * 1e6,
+            adv.overall_j * 1e6
+        );
+        // Second evaluation is a cache hit (the search does not rerun).
+        let again = session.evaluate(&req).unwrap();
+        assert!(Arc::ptr_eq(&res, &again));
+    }
+
+    #[test]
+    fn mapper_plus_jitter_is_a_clean_error() {
+        let session = Session::builder().threads(1).build();
+        let req = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Dataflow::MapperOptimal,
+        )
+        .jittered(7, "Mapper~rand0".into());
+        let err = session.evaluate(&req).unwrap_err();
+        assert!(err.to_string().contains("jitter"), "{err}");
     }
 
     #[test]

@@ -20,6 +20,16 @@ pub struct WorkerPool {
     size: usize,
 }
 
+/// Chunk size for batched job submission: aim for several chunks per
+/// worker so the tail stays load-balanced while paying one queue push
+/// and one channel send per *chunk* instead of per item (the Mutex
+/// around the job receiver and the result channel were the contention
+/// points on large cached sweeps).
+pub fn chunk_size(items: usize, workers: usize) -> usize {
+    let target_chunks = workers.max(1) * 4;
+    items.div_ceil(target_chunks).max(1)
+}
+
 /// Resolve a configured thread count (0 = one per available core).
 pub fn resolve_threads(threads: usize) -> usize {
     if threads > 0 {
@@ -117,5 +127,22 @@ mod tests {
     fn zero_means_available_parallelism() {
         let pool = WorkerPool::new(0);
         assert!(pool.size() >= 1);
+    }
+
+    #[test]
+    fn chunk_sizes_cover_every_item_and_load_balance() {
+        for (items, workers) in
+            [(1usize, 1usize), (5, 4), (20, 4), (100, 8), (1000, 8), (3, 16)]
+        {
+            let c = chunk_size(items, workers);
+            assert!(c >= 1);
+            // Every item lands in some chunk...
+            assert!(c * items.div_ceil(c) >= items);
+            // ...and big batches split across every worker.
+            if items >= workers * 4 {
+                assert!(items.div_ceil(c) >= workers, "items {items} workers {workers}");
+            }
+        }
+        assert_eq!(chunk_size(0, 4), 1);
     }
 }

@@ -3,10 +3,18 @@
 //! The analytical reuse model (eqs. 20–22) computes access counts with
 //! closed forms (`scheduled_total / RU`). This module validates those
 //! forms *independently*: it walks the mapping's loop nest as an explicit
-//! odometer — every temporal iteration — and counts buffer-refill events
-//! the way tile-managed storage experiences them. For divisor-aligned
-//! mappings the two must agree exactly; property tests here and the
-//! integration suite enforce it on thousands of randomized mappings.
+//! odometer and counts buffer-refill events the way tile-managed storage
+//! experiences them. For divisor-aligned mappings the two must agree
+//! exactly; property tests here and the integration suite enforce it on
+//! thousands of randomized mappings.
+//!
+//! The production walker ([`walk_operand`]) stride-skips: runs of
+//! iterations in which no tile-membership index changes are advanced in
+//! one step, which shrinks the walked space by the product of the
+//! skipped loop extents while counting the exact same events. The
+//! original every-point odometer survives as
+//! [`walk_operand_exhaustive`], a test-only oracle the property suite
+//! cross-validates against.
 //!
 //! This is §III-B's "dataflows … shown as a long loop nest with memory
 //! access information", made executable.
@@ -70,9 +78,31 @@ fn spatial_relevant(spec: &OperandSpec, m: &Mapping) -> f64 {
 }
 
 /// Walk the loop nest and count fetch events for one operand at both
-/// boundaries. Panics if the temporal space exceeds `max_points`
-/// (callers downscale workloads for exhaustive walks).
+/// boundaries, stride-skipping runs in which no membership index changes
+/// (see [`walk_impl`]). Panics if the walked space exceeds `max_points`.
 pub fn walk_operand(spec: &OperandSpec, m: &Mapping, max_points: u64) -> EventCounts {
+    walk_impl(spec, m, max_points, false)
+}
+
+/// The original exhaustive odometer — every temporal iteration point is
+/// visited, including runs that cannot change either tile. Kept purely
+/// as a cross-validation oracle for the stride-skipping fast path (the
+/// `stride_skipping_matches_exhaustive_walk` tests); production callers
+/// use [`walk_operand`], whose walked space is orders of magnitude
+/// smaller on real workloads.
+pub fn walk_operand_exhaustive(spec: &OperandSpec, m: &Mapping, max_points: u64) -> EventCounts {
+    walk_impl(spec, m, max_points, true)
+}
+
+/// Odometer walk. With `exhaustive = false`, loops that are members of
+/// *neither* tile tuple (register nor SRAM) are dropped from the walk:
+/// within a run where only such loops advance, both collected tuples are
+/// unchanged, so no fetch event can fire — skipping the run wholesale
+/// produces identical event counts with orders-of-magnitude fewer
+/// iterations. (Non-member loops are exactly the level-0 loops
+/// irrelevant at the register classification, which sit innermost — the
+/// skipped runs are contiguous.)
+fn walk_impl(spec: &OperandSpec, m: &Mapping, max_points: u64, exhaustive: bool) -> EventCounts {
     // Loop order innermost -> outermost: [reg, sram, dram], irrelevant
     // (at the level's own classification) innermost within each level.
     let mut loops: Vec<SimLoop> = Vec::new();
@@ -90,11 +120,6 @@ pub fn walk_operand(spec: &OperandSpec, m: &Mapping, max_points: u64) -> EventCo
             }
         }
     }
-    let total: u64 = loops.iter().map(|l| l.extent).product();
-    assert!(
-        total <= max_points,
-        "odometer space {total} exceeds cap {max_points}; downscale the workload"
-    );
 
     // Even-mapping tile semantics (the convention eqs. 20-22 price):
     //
@@ -108,21 +133,44 @@ pub fn walk_operand(spec: &OperandSpec, m: &Mapping, max_points: u64) -> EventCo
     //   loop or ANY DRAM-level loop advances. Each re-fill transfers the
     //   tile's relevant elements (the product of relevant(sram-class)
     //   register-level extents).
-    let reg_member: Vec<bool> = loops
+    let mut reg_member: Vec<bool> = loops
         .iter()
         .map(|l| l.level >= 1 || relevant_at(spec, m, l.dim, false))
         .collect();
-    let sram_member: Vec<bool> = loops
+    let mut sram_member: Vec<bool> = loops
         .iter()
         .map(|l| l.level == 2 || (l.level == 1 && relevant_at(spec, m, l.dim, true)))
         .collect();
     // Elements transferred per SRAM-tile fill: the relevant(sram-class)
-    // register-level extents.
+    // register-level extents. (Computed before any stride-skip filtering
+    // — it counts loop *extents*, not walked iterations.)
     let sram_tile_elems: u64 = loops
         .iter()
         .filter(|l| l.level == 0 && relevant_at(spec, m, l.dim, true))
         .map(|l| l.extent)
         .product();
+
+    if !exhaustive {
+        // Stride-skip: drop loops belonging to neither tuple. Iterating
+        // them can only produce consecutive duplicate tuples, which the
+        // change-detection below ignores anyway.
+        let keep: Vec<bool> =
+            reg_member.iter().zip(&sram_member).map(|(&r, &s)| r || s).collect();
+        let filter = |v: Vec<SimLoop>| -> Vec<SimLoop> {
+            v.into_iter().zip(&keep).filter(|(_, &k)| k).map(|(l, _)| l).collect()
+        };
+        loops = filter(loops);
+        let filter_flags = |v: Vec<bool>| -> Vec<bool> {
+            v.into_iter().zip(&keep).filter(|(_, &k)| k).map(|(b, _)| b).collect()
+        };
+        reg_member = filter_flags(reg_member);
+        sram_member = filter_flags(sram_member);
+    }
+    let total: u64 = loops.iter().map(|l| l.extent).product();
+    assert!(
+        total <= max_points,
+        "odometer space {total} exceeds cap {max_points}; downscale the workload"
+    );
 
     let mut idx = vec![0u64; loops.len()];
     let mut reg_events = 0u64;
@@ -263,6 +311,45 @@ mod tests {
             checked += 1;
         }
         assert!(checked > 100, "only {checked} mappings validated");
+    }
+
+    #[test]
+    fn stride_skipping_matches_exhaustive_walk() {
+        // The fast walker and the every-point oracle must agree exactly —
+        // including the spatial scaling, so compare full EventCounts.
+        let wl = small_workload();
+        let arch = small_arch();
+        let mut rng = SplitMix64::new(0xFEEDF00D);
+        let mut checked = 0;
+        for _ in 0..120 {
+            let fam = *rng.choose(&Family::ALL);
+            let w = *rng.choose(&wl.convs());
+            let m = crate::dse::jittered_mapping(w, &arch, fam, &mut rng);
+            if !m.validate(&w.dims, &arch.array).is_empty() {
+                continue;
+            }
+            for spec in crate::reuse::operand_specs(w) {
+                let fast = walk_operand(&spec, &m, CAP);
+                let full = walk_operand_exhaustive(&spec, &m, CAP);
+                assert_eq!(fast, full, "{} {:?} {}", fam.name(), w.phase, spec.tensor);
+            }
+            checked += 1;
+        }
+        assert!(checked > 35, "only {checked} mappings validated");
+    }
+
+    #[test]
+    fn stride_skipping_walks_paper_scale_under_tiny_caps() {
+        // The Fig. 4 layer's WS1 temporal space has ~220k points; the
+        // stride-skipped walk of the weight operand visits < 4096 and
+        // still reproduces the exhaustive counts.
+        let wl = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0);
+        let arch = crate::arch::Architecture::paper_default();
+        let m = crate::dataflow::templates::generate(Family::Ws1, &wl.fp, &arch);
+        let spec = crate::reuse::operand_specs(&wl.fp)[1];
+        let fast = walk_operand(&spec, &m, 1 << 12);
+        let full = walk_operand_exhaustive(&spec, &m, CAP);
+        assert_eq!(fast, full);
     }
 
     #[test]

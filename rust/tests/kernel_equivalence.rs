@@ -1,0 +1,118 @@
+//! The tentpole gate: the allocation-free fast evaluation path
+//! (`MappingView` + `EvalScratch` + `conv_energy_into`) must be
+//! **bit-for-bit identical** to the original closed-form kernel
+//! (`conv_energy_reference`) — every `OperandEnergy` field compared with
+//! `==`, totals compared on raw bits — across all five dataflow
+//! families, all three training phases, multiple architectures, and
+//! hundreds of randomized jittered mappings.
+
+use eocas::arch::{ArchPool, Architecture, ArrayScheme};
+use eocas::config::EnergyConfig;
+use eocas::dataflow::templates::{generate as gen_template, Family};
+use eocas::dataflow::Mapping;
+use eocas::dse::jittered_mapping;
+use eocas::energy::{conv_energy, conv_energy_into, conv_energy_reference, EvalScratch};
+use eocas::model::SnnModel;
+use eocas::util::prng::SplitMix64;
+use eocas::workload::{generate, ConvWorkload};
+
+/// Assert fast == reference for one (workload, mapping) pair.
+fn assert_bit_identical(
+    w: &ConvWorkload,
+    m: &Mapping,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+    scratch: &mut EvalScratch,
+    label: &str,
+) {
+    let slow = conv_energy_reference(w, m, arch, cfg);
+    conv_energy_into(&m.view(), arch, cfg, scratch);
+    assert_eq!(slow.operands.len(), 3, "{label}");
+    for (a, b) in slow.operands.iter().zip(scratch.operands.iter()) {
+        // `OperandEnergy` equality is field-wise f64 `==`: any rounding
+        // divergence between the two paths fails here.
+        assert_eq!(a, b, "{label}: operand {}", a.tensor);
+        assert_eq!(a.reg_j.to_bits(), b.reg_j.to_bits(), "{label}: {} reg", a.tensor);
+        assert_eq!(a.sram_j.to_bits(), b.sram_j.to_bits(), "{label}: {} sram", a.tensor);
+        assert_eq!(a.dram_j.to_bits(), b.dram_j.to_bits(), "{label}: {} dram", a.tensor);
+    }
+    assert_eq!(slow.compute_j.to_bits(), scratch.compute_j().to_bits(), "{label}: compute");
+    assert_eq!(slow.mem_j().to_bits(), scratch.mem_j().to_bits(), "{label}: mem");
+    assert_eq!(slow.total_j().to_bits(), scratch.total_j().to_bits(), "{label}: total");
+    assert_eq!(slow.cycles, scratch.cycles, "{label}: cycles");
+    assert_eq!(
+        slow.utilization.to_bits(),
+        scratch.utilization.to_bits(),
+        "{label}: utilization"
+    );
+    // The public wrapper must be the fast path with identical output.
+    let wrapped = conv_energy(w, m, arch, cfg);
+    assert_eq!(wrapped, slow, "{label}: wrapper");
+}
+
+#[test]
+fn property_fast_kernel_bit_identical_across_families_phases_and_jitter() {
+    let cfg = EnergyConfig::default();
+    let mut rng = SplitMix64::new(0xE0CA5B17);
+    let pool = ArchPool::paper_pool();
+    // First and last pool entries plus an asymmetric off-pool array.
+    let mut archs: Vec<Architecture> = vec![
+        pool.candidates.first().unwrap().clone(),
+        pool.candidates.last().unwrap().clone(),
+        Architecture::with_array(ArrayScheme::new(8, 32)),
+    ];
+    archs.dedup();
+    let mut cases = 0usize;
+    for model in [SnnModel::paper_layer(), SnnModel::cifar100_snn()] {
+        let wls = generate(&model, &[], 0.75).unwrap();
+        // First and last layers keep the runtime modest while covering
+        // both shape extremes of the deeper model.
+        let picks = [0, wls.len() - 1];
+        for &li in &picks {
+            let wl = &wls[li];
+            for arch in &archs {
+                for w in wl.convs() {
+                    let mut scratch = EvalScratch::for_workload(w, &cfg);
+                    for fam in Family::ALL {
+                        let base = gen_template(fam, w, arch);
+                        let label =
+                            format!("{} L{li} {} {:?}", model.name, fam.name(), w.phase);
+                        assert_bit_identical(w, &base, arch, &cfg, &mut scratch, &label);
+                        cases += 1;
+                        for j in 0..4 {
+                            let m = jittered_mapping(w, arch, fam, &mut rng);
+                            assert_bit_identical(
+                                w,
+                                &m,
+                                arch,
+                                &cfg,
+                                &mut scratch,
+                                &format!("{label} jitter{j}"),
+                            );
+                            cases += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(cases >= 500, "only {cases} cases checked");
+}
+
+#[test]
+fn fast_kernel_handles_degenerate_and_unit_mappings() {
+    // Edge shapes: all-ones mapping (everything at DRAM) and a mapping
+    // with every factor pushed to one level.
+    let cfg = EnergyConfig::default();
+    let arch = Architecture::paper_default();
+    let wl = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0);
+    for w in wl.convs() {
+        let mut scratch = EvalScratch::for_workload(w, &cfg);
+        let all_dram = Mapping::derive("edge", &w.dims, vec![], vec![], [1; 8], [1; 8]);
+        assert_bit_identical(w, &all_dram, &arch, &cfg, &mut scratch, "all-dram");
+        let mut reg = [1u64; 8];
+        reg[2] = w.dims.sizes[2]; // M entirely in registers
+        let m = Mapping::derive("edge2", &w.dims, vec![], vec![], reg, [1; 8]);
+        assert_bit_identical(w, &m, &arch, &cfg, &mut scratch, "m-in-reg");
+    }
+}

@@ -197,6 +197,37 @@ fn evaluate_many_preserves_order_and_is_deterministic_across_threads() {
 }
 
 #[test]
+fn large_batch_chunked_dispatch_preserves_positions() {
+    // Many more requests than workers: the chunked submission path must
+    // land every result at its request's index (distinct per-request
+    // sparsity makes any index slip visible in the resolved activity).
+    let session = Session::builder().threads(3).build();
+    let reqs: Vec<EvalRequest> = (0..64)
+        .map(|i| {
+            let act = 0.10 + 0.01 * (i as f64);
+            EvalRequest::new(
+                SnnModel::paper_layer(),
+                Architecture::paper_default(),
+                Family::ALL[i % Family::ALL.len()],
+            )
+            .with_sparsity(SparsityProfile::nominal(1, act))
+        })
+        .collect();
+    let out = session.evaluate_many(&reqs);
+    assert_eq!(out.len(), reqs.len());
+    for (i, (req, res)) in reqs.iter().zip(&out).enumerate() {
+        let res = res.as_ref().unwrap();
+        assert_eq!(res.dataflow, req.dataflow.name(), "slot {i}");
+        let expect = 0.10 + 0.01 * (i as f64);
+        assert!(
+            (res.activity[0] - expect).abs() < 1e-12,
+            "slot {i}: activity {} != {expect}",
+            res.activity[0]
+        );
+    }
+}
+
+#[test]
 fn mixed_good_and_bad_requests_keep_positions() {
     let bad_model = SnnModel {
         name: "zero".into(),
