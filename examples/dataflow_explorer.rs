@@ -7,7 +7,7 @@
 
 use eocas::arch::Architecture;
 use eocas::config::EnergyConfig;
-use eocas::dataflow::templates::{all_families, sram_tile_bits};
+use eocas::dataflow::templates::{all_families, tile_bits};
 use eocas::energy::conv_energy;
 use eocas::model::SnnModel;
 use eocas::reuse::workload_access;
@@ -52,7 +52,7 @@ fn main() -> Result<()> {
                     acc.ru_sram,
                     acc.reg_fills,
                     acc.sram_fills,
-                    sram_tile_bits(&spec, &m),
+                    tile_bits(&spec, &m, &arch, arch.hier.main_buffer_level()),
                 );
             }
         }

@@ -60,7 +60,7 @@ fn main() -> Result<()> {
         println!(
             "  {:>7} mem x{:<4.2} {:<16} {:>12.1} uJ {:>12} cycles",
             c.arch.array.label(),
-            c.arch.mem.total_bytes() as f64 / 2_176_000.0,
+            c.arch.hier.onchip_bytes() as f64 / 2_176_000.0,
             c.dataflow,
             c.overall_j * 1e6,
             c.cycles

@@ -2,38 +2,36 @@
 //!
 //! The paper's general SNN-training near-memory architecture: an `E × F`
 //! compute array (Mux-Add units in the FP core, Mul-Add units in the BP/WG
-//! core), a pool of on-chip SRAM macros (V₁…V₈ of Table II), and DRAM
-//! behind them. The *architecture pool* enumerates candidate array
-//! arrangements and memory provisionings; each candidate is evaluated
-//! against each dataflow by the reuse/energy machinery.
+//! core) in front of a storage hierarchy. Historically the simulator
+//! hard-wired one hierarchy shape — PE registers, the eight Table-II SRAM
+//! macros, DRAM — across every layer of the evaluation stack. That shape
+//! is now *data*: an [`Architecture`] carries a [`HierarchySpec`], an
+//! ordered list of [`LevelSpec`]s (innermost PE level first, backing
+//! store last), each with an energy rule, a capacity layout (dedicated
+//! per-variable macros or one shared buffer), a per-variable residency
+//! mask and a line-buffer flag. The paper's arrangement is just the
+//! [`HierarchySpec::paper_28nm`] preset; other hierarchies are built in
+//! code ([`HierarchySpec::four_level_spike_buffer`],
+//! [`HierarchySpec::unified_sram`]) or loaded declaratively from
+//! `configs/*.toml` ([`crate::config::archfile`]).
+//!
+//! The *architecture pool* enumerates candidate array arrangements and
+//! memory provisionings; each candidate is evaluated against each
+//! dataflow by the reuse/energy machinery.
 
 use crate::config::EnergyConfig;
 use crate::util::divisors;
 
-/// The three storage levels of the paper's hierarchy (Fig. 3).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum MemLevel {
-    /// PE-local registers inside the compute array.
-    Reg,
-    /// On-chip SRAM macros (V₁…V₈).
-    Sram,
-    /// Off-chip DRAM.
-    Dram,
-}
+/// Maximum number of hierarchy levels the allocation-free evaluation
+/// kernels size their fixed arrays for. [`HierarchySpec::validate`]
+/// requires at least 3 (PE registers, one buffer level, backing store).
+pub const MAX_LEVELS: usize = 6;
 
-impl MemLevel {
-    pub const ALL: [MemLevel; 3] = [MemLevel::Reg, MemLevel::Sram, MemLevel::Dram];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            MemLevel::Reg => "Reg",
-            MemLevel::Sram => "SRAM",
-            MemLevel::Dram => "DRAM",
-        }
-    }
-}
-
-/// The SRAM macros of Table II. Each stores one training variable.
+/// The training variables of Table II (V₁…V₈). A variable names the
+/// storage partition an operand binds to at each hierarchy level — in the
+/// paper's provisioning each variable owns a dedicated SRAM macro, but a
+/// [`LevelSpec`] is free to map several variables onto one shared buffer
+/// or to bypass a level entirely.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SramId {
     /// V₁: input spikes `s^{l-1}` (1-bit).
@@ -66,6 +64,20 @@ impl SramId {
         SramId::V8DeltaW,
     ];
 
+    /// Dense index (0..8) for residency masks and fingerprints.
+    pub fn idx(self) -> usize {
+        match self {
+            SramId::V1Spike => 0,
+            SramId::V2Weight => 1,
+            SramId::V3ConvFp => 2,
+            SramId::V4DeltaU => 3,
+            SramId::V5WeightT => 4,
+            SramId::V6ConvBp => 5,
+            SramId::V7SpikeOut => 6,
+            SramId::V8DeltaW => 7,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             SramId::V1Spike => "V1(s^{l-1})",
@@ -80,7 +92,7 @@ impl SramId {
     }
 }
 
-/// One SRAM macro: capacity + the bitwidth of the variable it stores.
+/// One dedicated macro: the capacity a level grants one variable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SramMacro {
     pub id: SramId,
@@ -88,7 +100,7 @@ pub struct SramMacro {
     pub word_bits: u32,
 }
 
-/// The on-chip memory provisioning: all eight macros of Table II.
+/// A per-variable macro set (the payload of [`LevelCapacity::PerVar`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MemoryPool {
     pub srams: Vec<SramMacro>,
@@ -132,17 +144,403 @@ impl MemoryPool {
         self.srams.iter().map(|m| m.bytes).sum()
     }
 
+    /// The macro assigned to `id`, if any.
+    pub fn find(&self, id: SramId) -> Option<&SramMacro> {
+        self.srams.iter().find(|m| m.id == id)
+    }
+
     pub fn get(&self, id: SramId) -> &SramMacro {
-        self.srams.iter().find(|m| m.id == id).expect("memory pool is missing a macro")
+        self.find(id).expect("memory pool is missing a macro")
+    }
+}
+
+/// How accesses at a level are priced (pJ/bit), in terms of the
+/// technology constants of [`EnergyConfig`] so TOML energy overrides keep
+/// applying to preset hierarchies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LevelEnergy {
+    /// Register-file constants (`mem.reg.*`).
+    RegFile,
+    /// The size-scaled SRAM curve (`mem.sram.*`) evaluated at the
+    /// variable's partition size at this level.
+    SramCurve,
+    /// Off-chip DRAM constants (`mem.dram.*`).
+    Dram,
+    /// Literal per-access energies (declarative arch files).
+    Explicit { read_pj: f64, write_pj: f64 },
+}
+
+/// Capacity layout of one level.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LevelCapacity {
+    /// No capacity fitting at this level (PE registers, backing store).
+    Unbounded,
+    /// Dedicated per-variable macros (the Table-II style).
+    PerVar(MemoryPool),
+    /// One buffer shared by every resident variable; the capacity fitter
+    /// bounds the *sum* of resident tiles.
+    Shared { bytes: u64 },
+}
+
+/// One storage level of a memory hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelSpec {
+    /// Display name ("Reg", "SRAM", "SpikeBuf", …).
+    pub name: String,
+    pub energy: LevelEnergy,
+    pub capacity: LevelCapacity,
+    /// Which variables are stored at this level (by [`SramId::idx`]);
+    /// non-resident variables bypass the level — its boundary is
+    /// transparent for them.
+    pub residency: [bool; 8],
+    /// The level holds a sliding-window line buffer: halo (`R`/`S`)
+    /// input reuse is granted at transfer boundaries at or above it.
+    pub line_buffer: bool,
+    /// Nominal word width (bookkeeping/serialization; energy is per-bit).
+    pub word_bits: u32,
+}
+
+impl LevelSpec {
+    pub fn resident(&self, var: SramId) -> bool {
+        self.residency[var.idx()]
     }
 
-    /// Read energy (pJ/bit) of a macro under `cfg`'s size scaling.
-    pub fn read_pj(&self, id: SramId, cfg: &EnergyConfig) -> f64 {
-        cfg.sram_read_pj_at(self.get(id).bytes)
+    /// Bytes of storage backing `var` at this level (the macro for
+    /// per-variable layouts, the whole buffer for shared ones).
+    pub fn partition_bytes(&self, var: SramId) -> Option<u64> {
+        match &self.capacity {
+            LevelCapacity::Unbounded => None,
+            LevelCapacity::PerVar(pool) => pool.find(var).map(|m| m.bytes),
+            LevelCapacity::Shared { bytes } => Some(*bytes),
+        }
     }
 
-    pub fn write_pj(&self, id: SramId, cfg: &EnergyConfig) -> f64 {
-        cfg.sram_write_pj_at(self.get(id).bytes)
+    /// Total bytes of this level (0 for unbounded levels).
+    pub fn bytes(&self) -> u64 {
+        match &self.capacity {
+            LevelCapacity::Unbounded => 0,
+            LevelCapacity::PerVar(pool) => pool.total_bytes(),
+            LevelCapacity::Shared { bytes } => *bytes,
+        }
+    }
+}
+
+/// An ordered memory hierarchy: `levels[0]` is the innermost PE level,
+/// `levels.last()` the unbounded backing store. Everything downstream —
+/// reuse factors, tile fitting, energy pricing, the mapper's search
+/// space, session cache keys — is sized and driven by this description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierarchySpec {
+    pub name: String,
+    pub levels: Vec<LevelSpec>,
+}
+
+fn all_resident() -> [bool; 8] {
+    [true; 8]
+}
+
+impl HierarchySpec {
+    /// The paper's hierarchy: PE registers, the eight Table-II macros
+    /// (with a sliding-window line buffer), DRAM. Evaluates bit-identical
+    /// to the pre-hierarchy-refactor pipeline (pinned by
+    /// `tests/kernel_equivalence.rs`).
+    pub fn paper_28nm() -> HierarchySpec {
+        HierarchySpec {
+            name: "paper_28nm".into(),
+            levels: vec![
+                LevelSpec {
+                    name: "Reg".into(),
+                    energy: LevelEnergy::RegFile,
+                    capacity: LevelCapacity::Unbounded,
+                    residency: all_resident(),
+                    line_buffer: false,
+                    word_bits: 16,
+                },
+                LevelSpec {
+                    name: "SRAM".into(),
+                    energy: LevelEnergy::SramCurve,
+                    capacity: LevelCapacity::PerVar(MemoryPool::paper_default()),
+                    residency: all_resident(),
+                    line_buffer: true,
+                    word_bits: 16,
+                },
+                LevelSpec {
+                    name: "DRAM".into(),
+                    energy: LevelEnergy::Dram,
+                    capacity: LevelCapacity::Unbounded,
+                    residency: all_resident(),
+                    line_buffer: false,
+                    word_bits: 16,
+                },
+            ],
+        }
+    }
+
+    /// A 4-level variant: a small shared PE-cluster spike buffer between
+    /// the registers and the main SRAM. Only the spike maps (V₁, V₇)
+    /// reside there; every other variable bypasses it. The buffer doubles
+    /// as the spike line buffer, so streamed spikes earn halo reuse one
+    /// level earlier than in the paper's hierarchy.
+    pub fn four_level_spike_buffer() -> HierarchySpec {
+        let mut spikes_only = [false; 8];
+        spikes_only[SramId::V1Spike.idx()] = true;
+        spikes_only[SramId::V7SpikeOut.idx()] = true;
+        let mut levels = HierarchySpec::paper_28nm().levels;
+        levels.insert(
+            1,
+            LevelSpec {
+                name: "SpikeBuf".into(),
+                energy: LevelEnergy::Explicit { read_pj: 0.020, write_pj: 0.024 },
+                capacity: LevelCapacity::Shared { bytes: 8 * 1024 },
+                residency: spikes_only,
+                line_buffer: true,
+                word_bits: 1,
+            },
+        );
+        HierarchySpec { name: "4level_spikebuf".into(), levels }
+    }
+
+    /// A 3-level variant with one *unified* SRAM: the paper's 2.03 MB
+    /// budget as a single shared bank instead of eight dedicated macros.
+    /// Every access is priced on the size curve at the full bank size, so
+    /// the variant trades macro-partitioning pressure for a higher per-bit
+    /// cost — the trade-off the hierarchy DSE exists to expose.
+    pub fn unified_sram() -> HierarchySpec {
+        let mut h = HierarchySpec::paper_28nm();
+        h.name = "unified_sram".into();
+        h.levels[1] = LevelSpec {
+            name: "USRAM".into(),
+            energy: LevelEnergy::SramCurve,
+            capacity: LevelCapacity::Shared {
+                bytes: MemoryPool::paper_default().total_bytes(),
+            },
+            residency: all_resident(),
+            line_buffer: true,
+            word_bits: 16,
+        };
+        h
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Index of the level the dataflow templates treat as the main
+    /// on-chip buffer (the level just below the backing store).
+    pub fn main_buffer_level(&self) -> usize {
+        self.levels.len() - 2
+    }
+
+    /// Structural validation; every constructor path (presets, TOML, JSON)
+    /// funnels through this.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.levels.len();
+        if !(3..=MAX_LEVELS).contains(&n) {
+            return Err(format!(
+                "hierarchy `{}` has {n} levels; need 3..={MAX_LEVELS} \
+                 (PE registers, >=1 buffer level, backing store)",
+                self.name
+            ));
+        }
+        if self.levels[0].capacity != LevelCapacity::Unbounded {
+            return Err(format!(
+                "hierarchy `{}`: innermost level `{}` must be unbounded \
+                 (PE registers are not tile-fitted)",
+                self.name, self.levels[0].name
+            ));
+        }
+        for (boundary, level) in [(0usize, "innermost"), (n - 1, "outermost")] {
+            let l = &self.levels[boundary];
+            if l.residency != all_resident() {
+                return Err(format!(
+                    "hierarchy `{}`: {level} level `{}` must hold every variable",
+                    self.name, l.name
+                ));
+            }
+        }
+        if self.levels[n - 1].capacity != LevelCapacity::Unbounded {
+            return Err(format!(
+                "hierarchy `{}`: outermost level `{}` must be unbounded (backing store)",
+                self.name,
+                self.levels[n - 1].name
+            ));
+        }
+        for l in &self.levels {
+            match &l.capacity {
+                LevelCapacity::Unbounded => {}
+                LevelCapacity::Shared { bytes } => {
+                    if *bytes == 0 {
+                        return Err(format!(
+                            "hierarchy `{}`: level `{}` has zero shared capacity",
+                            self.name, l.name
+                        ));
+                    }
+                }
+                LevelCapacity::PerVar(pool) => {
+                    for var in SramId::ALL {
+                        if l.resident(var) && pool.find(var).is_none() {
+                            return Err(format!(
+                                "hierarchy `{}`: level `{}` holds {} but assigns it no macro",
+                                self.name,
+                                l.name,
+                                var.name()
+                            ));
+                        }
+                    }
+                    if pool.srams.iter().any(|m| m.bytes == 0) {
+                        return Err(format!(
+                            "hierarchy `{}`: level `{}` has a zero-byte macro",
+                            self.name, l.name
+                        ));
+                    }
+                }
+            }
+            if let LevelEnergy::Explicit { read_pj, write_pj } = l.energy {
+                if !(read_pj >= 0.0 && write_pj >= 0.0) {
+                    return Err(format!(
+                        "hierarchy `{}`: level `{}` has negative/NaN access energy",
+                        self.name, l.name
+                    ));
+                }
+            }
+            // The size-scaled curve needs a size to evaluate at.
+            if l.energy == LevelEnergy::SramCurve && l.capacity == LevelCapacity::Unbounded {
+                return Err(format!(
+                    "hierarchy `{}`: level `{}` uses the SRAM size curve but has \
+                     no capacity to evaluate it at",
+                    self.name, l.name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total bounded on-chip capacity (area model, report labels).
+    pub fn onchip_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.bytes()).sum()
+    }
+
+    /// A copy with every bounded capacity scaled by `factor` (Fig. 5's
+    /// memory-provisioning sweeps).
+    pub fn scaled(&self, factor: f64) -> HierarchySpec {
+        let levels = self
+            .levels
+            .iter()
+            .map(|l| LevelSpec {
+                capacity: match &l.capacity {
+                    LevelCapacity::Unbounded => LevelCapacity::Unbounded,
+                    LevelCapacity::PerVar(pool) => LevelCapacity::PerVar(pool.scaled(factor)),
+                    LevelCapacity::Shared { bytes } => LevelCapacity::Shared {
+                        bytes: ((*bytes as f64 * factor) as u64).max(1024),
+                    },
+                },
+                ..l.clone()
+            })
+            .collect();
+        HierarchySpec { name: self.name.clone(), levels }
+    }
+
+    /// Is `var` stored at `level`?
+    pub fn resident(&self, level: usize, var: SramId) -> bool {
+        self.levels[level].resident(var)
+    }
+
+    /// Read energy (pJ/bit) of `var` at `level` under `cfg`.
+    pub fn read_pj(&self, level: usize, var: SramId, cfg: &EnergyConfig) -> f64 {
+        let l = &self.levels[level];
+        match l.energy {
+            LevelEnergy::RegFile => cfg.reg_read_pj,
+            LevelEnergy::Dram => cfg.dram_read_pj,
+            LevelEnergy::SramCurve => {
+                cfg.sram_read_pj_at(l.partition_bytes(var).unwrap_or(1024))
+            }
+            LevelEnergy::Explicit { read_pj, .. } => read_pj,
+        }
+    }
+
+    /// Write energy (pJ/bit) of `var` at `level` under `cfg`.
+    pub fn write_pj(&self, level: usize, var: SramId, cfg: &EnergyConfig) -> f64 {
+        let l = &self.levels[level];
+        match l.energy {
+            LevelEnergy::RegFile => cfg.reg_write_pj,
+            LevelEnergy::Dram => cfg.dram_write_pj,
+            LevelEnergy::SramCurve => {
+                cfg.sram_write_pj_at(l.partition_bytes(var).unwrap_or(1024))
+            }
+            LevelEnergy::Explicit { write_pj, .. } => write_pj,
+        }
+    }
+
+    /// Capacity (bits) available to `var`'s tile at `level`
+    /// (`None` = unbounded). For shared levels this is the whole buffer;
+    /// the fitter additionally bounds the *sum* of resident tiles.
+    pub fn cap_bits(&self, level: usize, var: SramId) -> Option<u64> {
+        self.levels[level].partition_bytes(var).map(|b| b * 8)
+    }
+
+    /// The outermost bounded on-chip level where `var` resides (the level
+    /// whose per-bit cost prices this variable's fixed-function traffic).
+    /// A variable buffered nowhere on-chip falls back to the backing
+    /// store — its "local" traffic honestly costs DRAM accesses, never a
+    /// fictitious cheap macro.
+    pub fn onchip_level_of(&self, var: SramId) -> usize {
+        (1..self.levels.len() - 1)
+            .rev()
+            .find(|&l| {
+                self.levels[l].resident(var)
+                    && self.levels[l].capacity != LevelCapacity::Unbounded
+            })
+            .unwrap_or(self.levels.len() - 1)
+    }
+
+    /// Does a line buffer exist for `var` at some resident level `<= l`?
+    /// (Halo reuse and halo tile exclusion key off this.)
+    pub fn halo_buffered_at(&self, var: SramId, l: usize) -> bool {
+        self.levels[..=l.min(self.levels.len() - 1)]
+            .iter()
+            .any(|lv| lv.line_buffer && lv.resident(var))
+    }
+
+    /// Append an injective structural encoding to a session cache key.
+    pub fn fingerprint_into(&self, key: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(key, "h{}:{};L{};", self.name.len(), self.name, self.levels.len());
+        for l in &self.levels {
+            let _ = write!(key, "n{}:{};", l.name.len(), l.name);
+            match l.energy {
+                LevelEnergy::RegFile => key.push_str("eR;"),
+                LevelEnergy::SramCurve => key.push_str("eS;"),
+                LevelEnergy::Dram => key.push_str("eD;"),
+                LevelEnergy::Explicit { read_pj, write_pj } => {
+                    let _ = write!(key, "eX{:x},{:x};", read_pj.to_bits(), write_pj.to_bits());
+                }
+            }
+            match &l.capacity {
+                LevelCapacity::Unbounded => key.push_str("cU;"),
+                LevelCapacity::Shared { bytes } => {
+                    let _ = write!(key, "cS{bytes};");
+                }
+                LevelCapacity::PerVar(pool) => {
+                    key.push_str("cP");
+                    for m in &pool.srams {
+                        let _ = write!(key, "{},{},{};", m.id.idx(), m.bytes, m.word_bits);
+                    }
+                }
+            }
+            let mut mask = 0u8;
+            for var in SramId::ALL {
+                if l.resident(var) {
+                    mask |= 1 << var.idx();
+                }
+            }
+            let _ = write!(
+                key,
+                "r{mask:02x};b{};w{};",
+                u8::from(l.line_buffer),
+                l.word_bits
+            );
+        }
+        key.push('|');
     }
 }
 
@@ -191,11 +589,11 @@ impl ArrayScheme {
     }
 }
 
-/// A complete candidate architecture: array + memory pool.
+/// A complete candidate architecture: array + memory hierarchy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Architecture {
     pub array: ArrayScheme,
-    pub mem: MemoryPool,
+    pub hier: HierarchySpec,
     /// Per-PE register file: bits available for stationary operands +
     /// partial sums (the paper's Mux-Add unit holds a 1-bit spike reg and
     /// two 16-bit regs; we allow DSE over richer PEs).
@@ -206,7 +604,7 @@ impl Architecture {
     pub fn paper_default() -> Architecture {
         Architecture {
             array: ArrayScheme::new(16, 16),
-            mem: MemoryPool::paper_default(),
+            hier: HierarchySpec::paper_28nm(),
             pe_reg_bits: 64,
         }
     }
@@ -215,11 +613,27 @@ impl Architecture {
         Architecture { array, ..Architecture::paper_default() }
     }
 
+    /// Paper array geometry over an arbitrary hierarchy.
+    pub fn with_hierarchy(hier: HierarchySpec) -> Architecture {
+        Architecture { hier, ..Architecture::paper_default() }
+    }
+
+    /// Read pJ/bit for `var` at its pricing on-chip level — the constant
+    /// the 3-level closed forms call "the SRAM read energy".
+    pub fn onchip_read_pj(&self, var: SramId, cfg: &EnergyConfig) -> f64 {
+        self.hier.read_pj(self.hier.onchip_level_of(var), var, cfg)
+    }
+
+    pub fn onchip_write_pj(&self, var: SramId, cfg: &EnergyConfig) -> f64 {
+        self.hier.write_pj(self.hier.onchip_level_of(var), var, cfg)
+    }
+
     pub fn label(&self) -> String {
         format!(
-            "{} array, {} on-chip",
+            "{} array, {} on-chip, {}",
             self.array.label(),
-            crate::util::fmt_bytes(self.mem.total_bytes())
+            crate::util::fmt_bytes(self.hier.onchip_bytes()),
+            self.hier.name
         )
     }
 }
@@ -248,7 +662,7 @@ impl ArchPool {
     /// with memory scalings. Used for Fig. 5's "several possible
     /// architectures appear in different energy intervals".
     pub fn extended(macs: u32, mem_scales: &[f64]) -> ArchPool {
-        let base = MemoryPool::paper_default();
+        let base = HierarchySpec::paper_28nm();
         let mut candidates = Vec::new();
         for array in ArrayScheme::enumerate(macs) {
             // Degenerate 1-wide arrays are allowed in the pool; the energy
@@ -256,7 +670,7 @@ impl ArchPool {
             for &s in mem_scales {
                 candidates.push(Architecture {
                     array,
-                    mem: base.scaled(s),
+                    hier: base.scaled(s),
                     pe_reg_bits: 64,
                 });
             }
@@ -271,14 +685,19 @@ mod tests {
 
     #[test]
     fn paper_pool_totals_2mb() {
-        let mem = MemoryPool::paper_default();
-        let total = mem.total_bytes();
+        let hier = HierarchySpec::paper_28nm();
+        let total = hier.onchip_bytes();
         // paper: 2.03 MB
         assert!(
             (2_000_000..2_130_000).contains(&total),
             "total {total} bytes not ~2.03 MB"
         );
-        assert_eq!(mem.srams.len(), 8);
+        assert_eq!(hier.num_levels(), 3);
+        match &hier.levels[1].capacity {
+            LevelCapacity::PerVar(pool) => assert_eq!(pool.srams.len(), 8),
+            other => panic!("paper SRAM level is {other:?}"),
+        }
+        hier.validate().expect("paper preset validates");
     }
 
     #[test]
@@ -294,22 +713,130 @@ mod tests {
     #[test]
     fn sram_energy_reflects_macro_size() {
         let cfg = EnergyConfig::default();
-        let mem = MemoryPool::paper_default();
+        let hier = HierarchySpec::paper_28nm();
         // The 32 kB spike macro must be cheaper per bit than the 384 kB
         // conv macro.
-        assert!(mem.read_pj(SramId::V1Spike, &cfg) < mem.read_pj(SramId::V3ConvFp, &cfg));
+        assert!(
+            hier.read_pj(1, SramId::V1Spike, &cfg) < hier.read_pj(1, SramId::V3ConvFp, &cfg)
+        );
+        // Register and DRAM rules resolve to the raw constants.
+        assert_eq!(hier.read_pj(0, SramId::V2Weight, &cfg), cfg.reg_read_pj);
+        assert_eq!(hier.write_pj(2, SramId::V2Weight, &cfg), cfg.dram_write_pj);
     }
 
     #[test]
-    fn scaled_pool_keeps_structure() {
-        let mem = MemoryPool::paper_default().scaled(0.5);
-        assert_eq!(mem.srams.len(), 8);
-        assert!(mem.total_bytes() < MemoryPool::paper_default().total_bytes());
+    fn scaled_hierarchy_keeps_structure() {
+        let hier = HierarchySpec::paper_28nm().scaled(0.5);
+        assert_eq!(hier.num_levels(), 3);
+        assert!(hier.onchip_bytes() < HierarchySpec::paper_28nm().onchip_bytes());
+        hier.validate().unwrap();
     }
 
     #[test]
     fn extended_pool_size() {
         let pool = ArchPool::extended(256, &[0.5, 1.0, 2.0]);
         assert_eq!(pool.candidates.len(), 9 * 3);
+    }
+
+    #[test]
+    fn preset_hierarchies_validate_and_differ() {
+        let four = HierarchySpec::four_level_spike_buffer();
+        four.validate().unwrap();
+        assert_eq!(four.num_levels(), 4);
+        assert!(four.resident(1, SramId::V1Spike));
+        assert!(!four.resident(1, SramId::V2Weight));
+        assert_eq!(four.main_buffer_level(), 2);
+        // Spikes earn their line buffer at level 1, weights only at the
+        // main SRAM.
+        assert!(four.halo_buffered_at(SramId::V1Spike, 1));
+        assert!(!four.halo_buffered_at(SramId::V2Weight, 1));
+        assert!(four.halo_buffered_at(SramId::V2Weight, 2));
+
+        let unified = HierarchySpec::unified_sram();
+        unified.validate().unwrap();
+        assert_eq!(unified.num_levels(), 3);
+        assert_eq!(unified.onchip_bytes(), HierarchySpec::paper_28nm().onchip_bytes());
+        // One shared bank prices every variable at the full-bank point on
+        // the size curve — costlier per bit than the dedicated macros.
+        let cfg = EnergyConfig::default();
+        assert!(
+            unified.read_pj(1, SramId::V1Spike, &cfg)
+                > HierarchySpec::paper_28nm().read_pj(1, SramId::V1Spike, &cfg)
+        );
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_hierarchies() {
+        let mut h = HierarchySpec::paper_28nm();
+        h.levels.truncate(1);
+        assert!(h.validate().is_err());
+
+        let mut h = HierarchySpec::paper_28nm();
+        h.levels[2].capacity = LevelCapacity::Shared { bytes: 1024 };
+        assert!(h.validate().unwrap_err().contains("unbounded"));
+
+        let mut h = HierarchySpec::paper_28nm();
+        h.levels[0].residency[SramId::V1Spike.idx()] = false;
+        assert!(h.validate().unwrap_err().contains("every variable"));
+
+        // A resident variable without a macro at a per-var level.
+        let mut h = HierarchySpec::paper_28nm();
+        if let LevelCapacity::PerVar(pool) = &mut h.levels[1].capacity {
+            pool.srams.retain(|m| m.id != SramId::V8DeltaW);
+        }
+        assert!(h.validate().unwrap_err().contains("no macro"));
+    }
+
+    #[test]
+    fn fingerprints_distinguish_hierarchies() {
+        let mut keys: Vec<String> = Vec::new();
+        for h in [
+            HierarchySpec::paper_28nm(),
+            HierarchySpec::four_level_spike_buffer(),
+            HierarchySpec::unified_sram(),
+            HierarchySpec::paper_28nm().scaled(0.5),
+        ] {
+            let mut k = String::new();
+            h.fingerprint_into(&mut k);
+            keys.push(k);
+        }
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j], "{i} vs {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn onchip_level_prefers_outermost_resident() {
+        let four = HierarchySpec::four_level_spike_buffer();
+        assert_eq!(four.onchip_level_of(SramId::V3ConvFp), 2);
+        assert_eq!(four.onchip_level_of(SramId::V1Spike), 2);
+        assert_eq!(HierarchySpec::paper_28nm().onchip_level_of(SramId::V1Spike), 1);
+        // A variable buffered nowhere on-chip prices at the backing
+        // store, not at a fictitious cheap macro.
+        let mut h = HierarchySpec::paper_28nm();
+        h.levels[1].residency[SramId::V3ConvFp.idx()] = false;
+        assert_eq!(h.onchip_level_of(SramId::V3ConvFp), 2);
+        let cfg = EnergyConfig::default();
+        let arch = Architecture::with_hierarchy(h);
+        assert_eq!(arch.onchip_read_pj(SramId::V3ConvFp, &cfg), cfg.dram_read_pj);
+    }
+
+    #[test]
+    fn sram_curve_requires_a_bounded_level() {
+        let mut h = HierarchySpec::paper_28nm();
+        h.levels[1].capacity = LevelCapacity::Unbounded;
+        let e = h.validate().unwrap_err();
+        assert!(e.contains("size curve"), "{e}");
+    }
+
+    #[test]
+    fn architecture_label_names_the_hierarchy() {
+        let a = Architecture::paper_default();
+        assert!(a.label().contains("16x16"));
+        assert!(a.label().contains("paper_28nm"));
+        let u = Architecture::with_hierarchy(HierarchySpec::unified_sram());
+        assert!(u.label().contains("unified_sram"));
     }
 }

@@ -1,0 +1,449 @@
+//! Declarative architecture files: TOML → [`Architecture`].
+//!
+//! An arch file describes a complete candidate architecture — array
+//! geometry plus an N-level [`HierarchySpec`] — so new memory-hierarchy
+//! shapes can enter the DSE without touching code (`--arch-file` on the
+//! CLI). Shipped examples live under `configs/` (see its README):
+//!
+//! ```toml
+//! [arch]
+//! name = "unified_sram"
+//! rows = 16
+//! cols = 16
+//!
+//! [[level]]
+//! name = "Reg"
+//! energy = "regfile"
+//!
+//! [[level]]
+//! name = "USRAM"
+//! energy = "sram"
+//! line_buffer = true
+//! shared_bytes = 2031616
+//!
+//! [[level]]
+//! name = "DRAM"
+//! energy = "dram"
+//! ```
+//!
+//! Per level: `energy` is `regfile` / `sram` / `dram` / `explicit`
+//! (the latter requires `read_pj_per_bit` + `write_pj_per_bit`);
+//! capacity is unbounded when absent, one shared buffer via
+//! `shared_bytes`, or dedicated macros via a `[level.macros]` table of
+//! `variable = bytes` entries; `residency` is `"all"` (default) or a
+//! list of variable keys (`v1_spike` … `v8_delta_w`). Unknown keys and
+//! sections are rejected with the offending name, and the resulting
+//! hierarchy passes [`HierarchySpec::validate`] before it is returned.
+
+use std::collections::BTreeMap;
+
+use super::toml::{self, TomlValue};
+use crate::arch::{
+    Architecture, ArrayScheme, HierarchySpec, LevelCapacity, LevelEnergy, LevelSpec,
+    MemoryPool, SramId, SramMacro,
+};
+use crate::session::json::{var_from_key, var_key};
+
+const ARCH_KEYS: [&str; 4] = ["name", "rows", "cols", "pe_reg_bits"];
+const LEVEL_KEYS: [&str; 9] = [
+    "name",
+    "energy",
+    "read_pj_per_bit",
+    "write_pj_per_bit",
+    "shared_bytes",
+    "line_buffer",
+    "word_bits",
+    "residency",
+    "macros",
+];
+
+fn check_keys(
+    table: &BTreeMap<String, TomlValue>,
+    known: &[&str],
+    what: &str,
+) -> Result<(), String> {
+    for key in table.keys() {
+        if !known.contains(&key.as_str()) {
+            return Err(format!("unknown key `{key}` in {what} (known: {known:?})"));
+        }
+    }
+    Ok(())
+}
+
+fn req_u64(t: &TomlValue, key: &str, what: &str) -> Result<u64, String> {
+    let v = t.req_i64(key).map_err(|e| format!("{what}: {e}"))?;
+    u64::try_from(v).map_err(|_| format!("{what}: `{key}` must be non-negative, got {v}"))
+}
+
+fn req_u32(t: &TomlValue, key: &str, what: &str) -> Result<u32, String> {
+    let v = req_u64(t, key, what)?;
+    u32::try_from(v).map_err(|_| format!("{what}: `{key}` = {v} exceeds u32"))
+}
+
+/// Optional u32 with default (absent key only; present keys are
+/// range-checked, never truncated).
+fn opt_u32(t: &TomlValue, key: &str, default: u32, what: &str) -> Result<u32, String> {
+    match t.path(key) {
+        None => Ok(default),
+        Some(_) => req_u32(t, key, what),
+    }
+}
+
+/// Default word width of a variable's dedicated macro (Table II: spike
+/// maps are 1-bit, everything else FP16).
+fn default_word_bits(var: SramId) -> u32 {
+    match var {
+        SramId::V1Spike | SramId::V7SpikeOut => 1,
+        _ => 16,
+    }
+}
+
+fn parse_level(entry: &BTreeMap<String, TomlValue>, idx: usize) -> Result<LevelSpec, String> {
+    let what = format!("[[level]] #{}", idx + 1);
+    check_keys(entry, &LEVEL_KEYS, &what)?;
+    let t = TomlValue::Table(entry.clone());
+    let name = t.req_str("name").map_err(|e| format!("{what}: {e}"))?.to_string();
+
+    let rule = t.req_str("energy").map_err(|e| format!("{what}: {e}"))?;
+    let energy = match rule {
+        "regfile" => LevelEnergy::RegFile,
+        "sram" => LevelEnergy::SramCurve,
+        "dram" => LevelEnergy::Dram,
+        "explicit" => LevelEnergy::Explicit {
+            read_pj: t.req_f64("read_pj_per_bit").map_err(|e| format!("{what}: {e}"))?,
+            write_pj: t.req_f64("write_pj_per_bit").map_err(|e| format!("{what}: {e}"))?,
+        },
+        other => {
+            return Err(format!(
+                "{what}: unknown energy rule `{other}` (regfile|sram|dram|explicit)"
+            ))
+        }
+    };
+    if rule != "explicit"
+        && (entry.contains_key("read_pj_per_bit") || entry.contains_key("write_pj_per_bit"))
+    {
+        return Err(format!(
+            "{what}: explicit per-bit energies only apply with energy = \"explicit\""
+        ));
+    }
+
+    let word_bits = opt_u32(&t, "word_bits", 16, &what)?;
+
+    let has_shared = entry.contains_key("shared_bytes");
+    let has_macros = entry.contains_key("macros");
+    if has_shared && has_macros {
+        return Err(format!("{what}: `shared_bytes` and `macros` are mutually exclusive"));
+    }
+    let capacity = if has_shared {
+        LevelCapacity::Shared { bytes: req_u64(&t, "shared_bytes", &what)? }
+    } else if has_macros {
+        let macros = t
+            .path("macros")
+            .and_then(|m| m.as_table())
+            .ok_or_else(|| format!("{what}: `macros` must be a table of variable = bytes"))?;
+        let mut srams = Vec::new();
+        for (var_name, value) in macros {
+            let var = var_from_key(var_name).map_err(|e| format!("{what}: {e}"))?;
+            // `var = bytes` (Table-II default word width) or
+            // `var = [bytes, word_bits]`.
+            let (bytes, word_bits) = match value {
+                TomlValue::Int(_) => (value.as_i64(), Some(default_word_bits(var) as i64)),
+                TomlValue::Array(items) if items.len() == 2 => {
+                    (items[0].as_i64(), items[1].as_i64())
+                }
+                _ => (None, None),
+            };
+            let (Some(bytes), Some(word_bits)) = (bytes, word_bits) else {
+                return Err(format!(
+                    "{what}: macro `{var_name}` wants `bytes` or `[bytes, word_bits]` \
+                     (non-negative integers)"
+                ));
+            };
+            let bytes = u64::try_from(bytes).map_err(|_| {
+                format!("{what}: macro `{var_name}` byte count must be non-negative")
+            })?;
+            let word_bits = u32::try_from(word_bits).map_err(|_| {
+                format!("{what}: macro `{var_name}` word_bits out of range")
+            })?;
+            srams.push(SramMacro { id: var, bytes, word_bits });
+        }
+        // Canonical Table-II order regardless of TOML key order.
+        srams.sort_by_key(|m| m.id.idx());
+        LevelCapacity::PerVar(MemoryPool { srams })
+    } else {
+        LevelCapacity::Unbounded
+    };
+
+    let residency = match t.path("residency") {
+        None => [true; 8],
+        Some(TomlValue::Str(s)) if s == "all" => [true; 8],
+        Some(TomlValue::Array(vars)) => {
+            let mut r = [false; 8];
+            for v in vars {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| format!("{what}: residency entries must be strings"))?;
+                r[var_from_key(s).map_err(|e| format!("{what}: {e}"))?.idx()] = true;
+            }
+            r
+        }
+        Some(other) => {
+            return Err(format!(
+                "{what}: residency must be \"all\" or a list of variable keys, got {other:?}"
+            ))
+        }
+    };
+
+    let line_buffer = match t.path("line_buffer") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| format!("{what}: `line_buffer` must be a bool"))?,
+    };
+
+    Ok(LevelSpec { name, energy, capacity, residency, line_buffer, word_bits })
+}
+
+/// Parse an architecture from TOML text.
+pub fn parse_architecture(text: &str) -> Result<Architecture, String> {
+    let doc = toml::parse(text)?;
+    let root = doc.as_table().expect("toml::parse returns a root table");
+    for key in root.keys() {
+        if key != "arch" && key != "level" {
+            return Err(format!(
+                "unknown section `[{key}]` in arch file (known: [arch], [[level]])"
+            ));
+        }
+    }
+    let arch_tbl = doc
+        .path("arch")
+        .and_then(|v| v.as_table())
+        .ok_or("arch file needs an [arch] section")?;
+    check_keys(arch_tbl, &ARCH_KEYS, "[arch]")?;
+    let name = doc.req_str("arch.name")?.to_string();
+    let rows = req_u32(&doc, "arch.rows", "[arch]")?;
+    let cols = req_u32(&doc, "arch.cols", "[arch]")?;
+    if rows == 0 || cols == 0 {
+        return Err(format!("degenerate array {rows}x{cols}"));
+    }
+    let pe_reg_bits = opt_u32(&doc, "arch.pe_reg_bits", 64, "[arch]")?;
+
+    let levels = match doc.path("level") {
+        Some(TomlValue::TableArray(entries)) => entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| parse_level(e, i))
+            .collect::<Result<Vec<LevelSpec>, String>>()?,
+        _ => return Err("arch file needs [[level]] sections (innermost first)".into()),
+    };
+    let hier = HierarchySpec { name, levels };
+    hier.validate()?;
+    Ok(Architecture { array: ArrayScheme::new(rows, cols), hier, pe_reg_bits })
+}
+
+/// Load an architecture from a TOML file on disk.
+pub fn load_architecture(path: &std::path::Path) -> Result<Architecture, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_architecture(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Render an architecture back to arch-file TOML (useful for exporting
+/// presets; the shipped `configs/arch_*.toml` are generated this way and
+/// the round-trip is tested).
+pub fn to_toml(a: &Architecture) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "[arch]");
+    let _ = writeln!(out, "name = \"{}\"", a.hier.name);
+    let _ = writeln!(out, "rows = {}", a.array.rows);
+    let _ = writeln!(out, "cols = {}", a.array.cols);
+    let _ = writeln!(out, "pe_reg_bits = {}", a.pe_reg_bits);
+    for l in &a.hier.levels {
+        let _ = writeln!(out, "\n[[level]]");
+        let _ = writeln!(out, "name = \"{}\"", l.name);
+        match l.energy {
+            LevelEnergy::RegFile => {
+                let _ = writeln!(out, "energy = \"regfile\"");
+            }
+            LevelEnergy::SramCurve => {
+                let _ = writeln!(out, "energy = \"sram\"");
+            }
+            LevelEnergy::Dram => {
+                let _ = writeln!(out, "energy = \"dram\"");
+            }
+            LevelEnergy::Explicit { read_pj, write_pj } => {
+                let _ = writeln!(out, "energy = \"explicit\"");
+                let _ = writeln!(out, "read_pj_per_bit = {read_pj}");
+                let _ = writeln!(out, "write_pj_per_bit = {write_pj}");
+            }
+        }
+        if l.line_buffer {
+            let _ = writeln!(out, "line_buffer = true");
+        }
+        if l.word_bits != 16 {
+            let _ = writeln!(out, "word_bits = {}", l.word_bits);
+        }
+        if l.residency != [true; 8] {
+            let vars: Vec<String> = SramId::ALL
+                .into_iter()
+                .filter(|&v| l.residency[v.idx()])
+                .map(|v| format!("\"{}\"", var_key(v)))
+                .collect();
+            let _ = writeln!(out, "residency = [{}]", vars.join(", "));
+        }
+        match &l.capacity {
+            LevelCapacity::Unbounded => {}
+            LevelCapacity::Shared { bytes } => {
+                let _ = writeln!(out, "shared_bytes = {bytes}");
+            }
+            LevelCapacity::PerVar(pool) => {
+                let _ = writeln!(out, "[level.macros]");
+                for m in &pool.srams {
+                    if m.word_bits == default_word_bits(m.id) {
+                        let _ = writeln!(out, "{} = {}", var_key(m.id), m.bytes);
+                    } else {
+                        let _ = writeln!(
+                            out,
+                            "{} = [{}, {}]",
+                            var_key(m.id),
+                            m.bytes,
+                            m.word_bits
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_round_trip_through_toml() {
+        // A non-default macro word width must survive the round-trip too
+        // (serialized as `var = [bytes, word_bits]`).
+        let mut wide_spikes = Architecture::paper_default();
+        if let crate::arch::LevelCapacity::PerVar(pool) = &mut wide_spikes.hier.levels[1].capacity
+        {
+            pool.srams[0].word_bits = 16;
+        }
+        for a in [
+            Architecture::paper_default(),
+            Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+            Architecture::with_hierarchy(HierarchySpec::unified_sram()),
+            wide_spikes,
+        ] {
+            let text = to_toml(&a);
+            let back = parse_architecture(&text).unwrap_or_else(|e| {
+                panic!("{} failed to re-parse: {e}\n{text}", a.hier.name)
+            });
+            assert_eq!(a, back, "{}", a.hier.name);
+        }
+    }
+
+    #[test]
+    fn minimal_unified_file_parses() {
+        let a = parse_architecture(
+            r#"
+[arch]
+name = "mini"
+rows = 8
+cols = 8
+
+[[level]]
+name = "Reg"
+energy = "regfile"
+
+[[level]]
+name = "Buf"
+energy = "explicit"
+read_pj_per_bit = 0.1
+write_pj_per_bit = 0.2
+shared_bytes = 65536
+line_buffer = true
+
+[[level]]
+name = "DRAM"
+energy = "dram"
+"#,
+        )
+        .unwrap();
+        assert_eq!(a.array.rows, 8);
+        assert_eq!(a.pe_reg_bits, 64, "default applies");
+        assert_eq!(a.hier.num_levels(), 3);
+        assert!(a.hier.levels[1].line_buffer);
+        assert_eq!(
+            a.hier.levels[1].capacity,
+            LevelCapacity::Shared { bytes: 65536 }
+        );
+    }
+
+    #[test]
+    fn bad_arch_files_error_with_the_offending_name() {
+        let base = |body: &str| {
+            format!(
+                "[arch]\nname = \"x\"\nrows = 4\ncols = 4\n\n{body}\n[[level]]\nname = \"DRAM\"\nenergy = \"dram\"\n"
+            )
+        };
+        // Unknown section.
+        let e = parse_architecture(
+            "[arch]\nname = \"x\"\nrows = 4\ncols = 4\n[frequencies]\nmhz = 500\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("frequencies"), "{e}");
+        // Unknown key in a level.
+        let e = parse_architecture(&base(
+            "[[level]]\nname = \"Reg\"\nenergy = \"regfile\"\nbanks = 4\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("banks"), "{e}");
+        // Unknown energy rule.
+        let e = parse_architecture(&base("[[level]]\nname = \"Reg\"\nenergy = \"magic\"\n"))
+            .unwrap_err();
+        assert!(e.contains("magic"), "{e}");
+        // Explicit rule without its constants.
+        let e = parse_architecture(&base("[[level]]\nname = \"Reg\"\nenergy = \"explicit\"\n"))
+            .unwrap_err();
+        assert!(e.contains("read_pj_per_bit"), "{e}");
+        // Unknown residency variable.
+        let e = parse_architecture(&base(
+            "[[level]]\nname = \"Reg\"\nenergy = \"regfile\"\nresidency = [\"v9_bogus\"]\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("v9_bogus"), "{e}");
+        // Out-of-range geometry must error, not wrap modulo 2^32
+        // (4294967312 = 2^32 + 16 would otherwise parse as rows = 16).
+        let e = parse_architecture(
+            "[arch]\nname = \"x\"\nrows = 4294967312\ncols = 4\n\
+             [[level]]\nname = \"Reg\"\nenergy = \"regfile\"\n\
+             [[level]]\nname = \"S\"\nenergy = \"sram\"\nshared_bytes = 1024\n\
+             [[level]]\nname = \"DRAM\"\nenergy = \"dram\"\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("exceeds u32"), "{e}");
+        // Structural validation still applies (too few levels).
+        let e = parse_architecture(
+            "[arch]\nname = \"x\"\nrows = 4\ncols = 4\n[[level]]\nname = \"DRAM\"\nenergy = \"dram\"\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("levels"), "{e}");
+    }
+
+    #[test]
+    fn residency_restriction_errors_when_innermost() {
+        // Residency lists on the innermost level break the structural
+        // rule that every variable lives in the PE registers.
+        let e = parse_architecture(
+            "[arch]\nname = \"x\"\nrows = 4\ncols = 4\n\
+             [[level]]\nname = \"Reg\"\nenergy = \"regfile\"\nresidency = [\"v1_spike\"]\n\
+             [[level]]\nname = \"S\"\nenergy = \"sram\"\nshared_bytes = 1024\n\
+             [[level]]\nname = \"DRAM\"\nenergy = \"dram\"\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("every variable"), "{e}");
+    }
+}

@@ -7,6 +7,7 @@
 //! DESIGN.md §4, and every value can be overridden from a TOML file so the
 //! simulator doubles as a what-if tool for other technology nodes.
 
+pub mod archfile;
 pub mod toml;
 
 use toml::TomlValue;
@@ -109,7 +110,11 @@ impl EnergyConfig {
     }
 
     /// Load from TOML, falling back to defaults for absent keys.
+    /// Unknown sections or keys are rejected (a typoed key silently
+    /// falling back to its default is the worst failure mode a
+    /// calibration file can have).
     pub fn from_toml(v: &TomlValue) -> Result<Self, String> {
+        validate_energy_doc(v)?;
         let d = Self::default();
         Ok(Self {
             op_mux_pj: v.opt_f64("ops.mux_pj", d.op_mux_pj),
@@ -138,6 +143,46 @@ impl EnergyConfig {
     pub fn load(path: &std::path::Path) -> Result<Self, String> {
         Self::from_toml(&toml::parse_file(path)?)
     }
+}
+
+/// The known layout of an energy-config document: section → keys.
+const ENERGY_DOC_KEYS: [(&str, &[&str]); 6] = [
+    ("ops", &["mux_pj", "add_fp16_pj", "mul_fp16_pj", "cmp_pj", "ctl_pj"]),
+    ("mem.dram", &["read_pj_per_bit", "write_pj_per_bit"]),
+    (
+        "mem.sram",
+        &["read_pj_per_bit", "write_pj_per_bit", "ref_kb", "size_exp"],
+    ),
+    ("mem.reg", &["read_pj_per_bit", "write_pj_per_bit"]),
+    ("model", &["count_reg_reads", "nominal_activity", "clock_hz"]),
+    ("mem", &["dram", "sram", "reg"]),
+];
+
+/// Reject unknown sections/keys with the offending name.
+fn validate_energy_doc(v: &TomlValue) -> Result<(), String> {
+    let root = match v.as_table() {
+        Some(t) => t,
+        None => return Err("energy config root is not a table".into()),
+    };
+    for section in root.keys() {
+        if !["ops", "mem", "model"].contains(&section.as_str()) {
+            return Err(format!(
+                "unknown section `[{section}]` in energy config (known: [ops], [mem.*], [model])"
+            ));
+        }
+    }
+    for (section, known) in ENERGY_DOC_KEYS {
+        if let Some(table) = v.path(section).and_then(|s| s.as_table()) {
+            for key in table.keys() {
+                if !known.contains(&key.as_str()) {
+                    return Err(format!(
+                        "unknown key `{key}` in [{section}] (known: {known:?})"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -171,6 +216,22 @@ mod tests {
         // sqrt scaling: 64x size => 8x energy
         let ratio = c.sram_read_pj_at(64 * 64 * 1024) / c.sram_read_pj_at(64 * 1024);
         assert!((ratio - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_sections_and_keys_are_rejected() {
+        // A typoed section name must not silently fall back to defaults.
+        let doc = toml::parse("[opz]\nmux_pj = 0.5\n").unwrap();
+        let e = EnergyConfig::from_toml(&doc).unwrap_err();
+        assert!(e.contains("opz"), "{e}");
+        // A typoed key inside a known section, likewise.
+        let doc = toml::parse("[ops]\nmux_picojoules = 0.5\n").unwrap();
+        let e = EnergyConfig::from_toml(&doc).unwrap_err();
+        assert!(e.contains("mux_picojoules"), "{e}");
+        // Unknown memory subsection.
+        let doc = toml::parse("[mem.cache]\nread_pj_per_bit = 0.1\n").unwrap();
+        let e = EnergyConfig::from_toml(&doc).unwrap_err();
+        assert!(e.contains("cache"), "{e}");
     }
 
     #[test]

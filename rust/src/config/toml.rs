@@ -376,6 +376,48 @@ channels = 64
     }
 
     #[test]
+    fn shipped_energy_config_parses_and_round_trips() {
+        // The file `--config` users copy as a template must parse through
+        // this exact parser and expose every documented key.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/energy_28nm.toml");
+        let v = parse_file(&path).expect("configs/energy_28nm.toml parses");
+        assert_eq!(v.req_f64("ops.mux_pj").unwrap(), 0.20);
+        assert_eq!(v.req_f64("ops.mul_fp16_pj").unwrap(), 1.20);
+        assert_eq!(v.req_f64("mem.dram.write_pj_per_bit").unwrap(), 18.0);
+        assert_eq!(v.req_f64("mem.sram.ref_kb").unwrap(), 64.0);
+        assert_eq!(v.req_f64("mem.reg.read_pj_per_bit").unwrap(), 0.006);
+        assert_eq!(v.path("model.count_reg_reads").unwrap().as_bool(), Some(false));
+        assert_eq!(v.req_f64("model.clock_hz").unwrap(), 500e6);
+    }
+
+    #[test]
+    fn malformed_inputs_name_the_problem() {
+        // Every rejection carries the offending construct and its line.
+        let e = parse("a = 1\na = 2").unwrap_err();
+        assert!(e.contains("duplicate key `a`"), "{e}");
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse("x = 1.2.3").unwrap_err();
+        assert!(e.contains("cannot parse value `1.2.3`"), "{e}");
+        let e = parse("x = 12abc").unwrap_err();
+        assert!(e.contains("cannot parse value"), "{e}");
+        let e = parse("s = \"unterminated").unwrap_err();
+        assert!(e.contains("unterminated string"), "{e}");
+        let e = parse("a.b = 1").unwrap_err();
+        assert!(e.contains("dotted keys"), "{e}");
+        let e = parse("xs = [1, 2").unwrap_err();
+        assert!(e.contains("unterminated array"), "{e}");
+        let e = parse("[]").unwrap_err();
+        assert!(e.contains("empty table name"), "{e}");
+        // A scalar key cannot be reopened as a section.
+        let e = parse("[a]\nb = 1\n[a.b]\nc = 2").unwrap_err();
+        assert!(e.contains("not a table"), "{e}");
+        // Nor can a table become an array of tables.
+        let e = parse("[a]\nb = 1\n[[a]]\nc = 2").unwrap_err();
+        assert!(e.contains("not an array of tables"), "{e}");
+    }
+
+    #[test]
     fn hash_inside_string_is_not_comment() {
         let v = parse("s = \"a#b\"").unwrap();
         assert_eq!(v.req_str("s").unwrap(), "a#b");

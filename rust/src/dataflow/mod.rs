@@ -1,24 +1,25 @@
 //! Dataflow representation: spatial unrolling + per-level temporal tiling.
 //!
 //! A [`Mapping`] describes how one convolution's eight-dimensional loop
-//! grid is executed on an `E × F` array backed by SRAM and DRAM (Fig. 3's
-//! hierarchy). Two observations keep the representation small:
+//! grid is executed on an `E × F` array backed by an N-level memory
+//! hierarchy ([`crate::arch::HierarchySpec`]). Two observations keep the
+//! representation small:
 //!
 //! 1. For the paper's reuse-factor model (Table I, eqs. 20–22) only the
 //!    *level* at which each loop iterates matters, not the order of loops
 //!    within a level — a reuse factor is a product of irrelevant-loop
-//!    extents below a boundary. A mapping is therefore a per-dimension
-//!    factor triple (register / SRAM / DRAM) plus the spatial factors.
+//!    extents below a boundary. A mapping is therefore one per-dimension
+//!    factor array per hierarchy level plus the spatial factors.
 //! 2. Spatial unrolling contributes multicast (inputs/weights) or
 //!    adder-tree reduction (outputs) reuse exactly like an irrelevant
-//!    temporal loop at the register boundary.
+//!    temporal loop at the innermost boundary.
 //!
 //! The five named dataflow families of §IV-A (WS1, WS2, OS, RS and the
 //! paper's Advanced WS) are generated in [`templates`].
 
 pub mod templates;
 
-use crate::arch::ArrayScheme;
+use crate::arch::{ArrayScheme, MAX_LEVELS};
 use crate::workload::{ConvDims, Dim};
 
 /// How one convolution is scheduled onto the architecture.
@@ -31,14 +32,10 @@ pub struct Mapping {
     pub spatial_rows: Vec<(Dim, u64)>,
     /// Spatial unrolling across array columns (`F`).
     pub spatial_cols: Vec<(Dim, u64)>,
-    /// Temporal tile factor of each dim iterated at the register level
-    /// (innermost loops, data resident in PE registers).
-    pub reg: [u64; 8],
-    /// Temporal tile factor of each dim iterated at the SRAM level.
-    pub sram: [u64; 8],
-    /// Remaining factor of each dim iterated at the DRAM level
-    /// (outermost loops).
-    pub dram: [u64; 8],
+    /// Temporal tile factor of each dim at each hierarchy level,
+    /// innermost (PE registers) first. `levels.last()` is the derived
+    /// backing-store remainder (outermost loops).
+    pub levels: Vec<[u64; 8]>,
     /// Whether the array reduces partial sums across *columns* as well as
     /// rows. The paper's design has per-column accumulators plus a row
     /// accumulator (§III-A), so most dataflows reduce on both axes; a
@@ -53,8 +50,47 @@ pub struct Mapping {
 }
 
 impl Mapping {
-    /// Build a mapping, deriving the DRAM-level factors as the ceiling
+    /// Build an N-level mapping from the on-chip factor arrays
+    /// (`inner[0]` = PE registers, `inner.last()` = outermost on-chip
+    /// buffer), deriving the backing-store factors as the ceiling
     /// remainder so the product always covers each dimension.
+    pub fn derive_n(
+        name: impl Into<String>,
+        dims: &ConvDims,
+        spatial_rows: Vec<(Dim, u64)>,
+        spatial_cols: Vec<(Dim, u64)>,
+        inner: Vec<[u64; 8]>,
+    ) -> Mapping {
+        assert!(
+            !inner.is_empty() && inner.len() < MAX_LEVELS,
+            "on-chip level count {} out of range",
+            inner.len()
+        );
+        let mut m = Mapping {
+            name: name.into(),
+            spatial_rows,
+            spatial_cols,
+            levels: inner,
+            col_reduce: true,
+            halo_reuse: true,
+        };
+        m.levels.push([1; 8]);
+        let last = m.levels.len() - 1;
+        for d in Dim::ALL {
+            let i = d.idx();
+            let mut covered = m.spatial_factor(d);
+            for lv in 0..last {
+                m.levels[lv][i] = m.levels[lv][i].max(1);
+                covered *= m.levels[lv][i];
+            }
+            m.levels[last][i] = crate::util::ceil_div(dims.get(d), covered.max(1)).max(1);
+        }
+        m
+    }
+
+    /// 3-level convenience constructor (registers + one SRAM level +
+    /// derived DRAM remainder) — the paper-hierarchy shape used by the
+    /// reference oracles and most tests.
     pub fn derive(
         name: impl Into<String>,
         dims: &ConvDims,
@@ -63,24 +99,12 @@ impl Mapping {
         reg: [u64; 8],
         sram: [u64; 8],
     ) -> Mapping {
-        let mut m = Mapping {
-            name: name.into(),
-            spatial_rows,
-            spatial_cols,
-            reg,
-            sram,
-            dram: [1; 8],
-            col_reduce: true,
-            halo_reuse: true,
-        };
-        for d in Dim::ALL {
-            let i = d.idx();
-            let covered = m.spatial_factor(d) * m.reg[i].max(1) * m.sram[i].max(1);
-            m.reg[i] = m.reg[i].max(1);
-            m.sram[i] = m.sram[i].max(1);
-            m.dram[i] = crate::util::ceil_div(dims.get(d), covered.max(1)).max(1);
-        }
-        m
+        Mapping::derive_n(name, dims, spatial_rows, spatial_cols, vec![reg, sram])
+    }
+
+    /// Number of hierarchy levels this mapping tiles over.
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
     }
 
     /// Total spatial unrolling of `d` across both array axes.
@@ -100,14 +124,10 @@ impl Mapping {
         row * col
     }
 
-    /// Temporal factor of `d` at a level (register=0, sram=1, dram=2).
+    /// Temporal factor of `d` at a level (0 = registers, rising outward;
+    /// out-of-range levels contribute factor 1).
     pub fn temporal(&self, d: Dim, level: usize) -> u64 {
-        match level {
-            0 => self.reg[d.idx()],
-            1 => self.sram[d.idx()],
-            2 => self.dram[d.idx()],
-            _ => 1,
-        }
+        self.levels.get(level).map(|f| f[d.idx()]).unwrap_or(1)
     }
 
     /// Number of array PEs actually used.
@@ -123,13 +143,17 @@ impl Mapping {
     }
 
     /// The *scheduled* grid size: product over dims of
-    /// spatial × reg × sram × dram. With non-dividing tile factors this can
-    /// exceed `dims.total()` (padding overcount); the ratio is the mapping
-    /// inefficiency.
+    /// spatial × all temporal levels. With non-dividing tile factors this
+    /// can exceed `dims.total()` (padding overcount); the ratio is the
+    /// mapping inefficiency.
     pub fn scheduled_total(&self) -> u64 {
         Dim::ALL
             .iter()
-            .map(|&d| self.spatial_factor(d) * self.reg[d.idx()] * self.sram[d.idx()] * self.dram[d.idx()])
+            .map(|&d| {
+                let i = d.idx();
+                self.spatial_factor(d)
+                    * self.levels.iter().map(|f| f[i]).product::<u64>()
+            })
             .product()
     }
 
@@ -137,7 +161,10 @@ impl Mapping {
     pub fn cycles(&self) -> u64 {
         Dim::ALL
             .iter()
-            .map(|&d| self.reg[d.idx()] * self.sram[d.idx()] * self.dram[d.idx()])
+            .map(|&d| {
+                let i = d.idx();
+                self.levels.iter().map(|f| f[i]).product::<u64>()
+            })
             .product()
     }
 
@@ -154,10 +181,9 @@ impl Mapping {
             errs.push(format!("col unroll {cols} exceeds F={}", array.cols));
         }
         for d in Dim::ALL {
+            let i = d.idx();
             let covered = self.spatial_factor(d)
-                * self.reg[d.idx()]
-                * self.sram[d.idx()]
-                * self.dram[d.idx()];
+                * self.levels.iter().map(|f| f[i]).product::<u64>();
             if covered < dims.get(d) {
                 errs.push(format!(
                     "dim {} covered {covered} < extent {}",
@@ -195,12 +221,24 @@ impl Mapping {
         MappingView::from_raw(
             spatial_row,
             spatial_col,
-            self.reg,
-            self.sram,
-            self.dram,
+            &self.levels,
             self.col_reduce,
             self.halo_reuse,
         )
+    }
+
+    /// Display label of temporal level `k` of `n` ("Reg"/"SRAM"/"DRAM"
+    /// for the classic 3-level shape, positional otherwise).
+    pub fn level_label(k: usize, n: usize) -> String {
+        if k == 0 {
+            "Reg".into()
+        } else if k + 1 == n {
+            "DRAM".into()
+        } else if n == 3 {
+            "SRAM".into()
+        } else {
+            format!("L{k}")
+        }
     }
 
     /// Render the loop nest as text (innermost at the bottom), for Fig. 6's
@@ -208,26 +246,35 @@ impl Mapping {
     pub fn render_loop_nest(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!("dataflow {}\n", self.name));
+        let n = self.levels.len();
         let fmt_level = |label: &str, factors: &[u64; 8]| -> String {
             let mut s = String::new();
             for d in Dim::ALL.iter().rev() {
                 let f = factors[d.idx()];
                 if f > 1 {
-                    s.push_str(&format!("  for {} in 0..{}   # {label}\n", d.name().to_lowercase(), f));
+                    s.push_str(&format!(
+                        "  for {} in 0..{}   # {label}\n",
+                        d.name().to_lowercase(),
+                        f
+                    ));
                 }
             }
             s
         };
-        out.push_str(&fmt_level("DRAM", &self.dram));
-        out.push_str(&fmt_level("SRAM", &self.sram));
-        out.push_str(&fmt_level("Reg", &self.reg));
+        for (k, factors) in self.levels.iter().enumerate().rev() {
+            out.push_str(&fmt_level(&Mapping::level_label(k, n), factors));
+        }
         let spatial: Vec<String> = self
             .spatial_rows
             .iter()
             .map(|(d, f)| format!("{}:{f}|rows", d.name()))
             .chain(self.spatial_cols.iter().map(|(d, f)| format!("{}:{f}|cols", d.name())))
             .collect();
-        out.push_str(&format!("  parallel-for [{}]   # {}x array\n", spatial.join(", "), self.used_pes()));
+        out.push_str(&format!(
+            "  parallel-for [{}]   # {}x array\n",
+            spatial.join(", "),
+            self.used_pes()
+        ));
         out
     }
 }
@@ -238,19 +285,21 @@ impl Mapping {
 /// The `(Dim, u64)` spatial vectors are collapsed into per-dim factor
 /// products (row and column axes kept separate because output operands
 /// only get column reduction when the array has per-column adder trees),
-/// the `String` label is dropped, and the three scheduled totals are
-/// derived once at construction. All factor products are exact in `f64`
-/// territory (they stay far below 2^53), so pricing a view is
-/// bit-identical to pricing the `Mapping` it came from.
+/// the `String` label is dropped, the per-level factor vectors land in a
+/// fixed `[[u64; 8]; MAX_LEVELS]` (unused rows all-ones), and the
+/// scheduled totals are derived once at construction. All factor products
+/// are exact in `f64` territory (they stay far below 2^53), so pricing a
+/// view is bit-identical to pricing the `Mapping` it came from.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MappingView {
     /// Per-dim product of the row-axis spatial factors.
     pub spatial_row: [u64; 8],
     /// Per-dim product of the column-axis spatial factors.
     pub spatial_col: [u64; 8],
-    pub reg: [u64; 8],
-    pub sram: [u64; 8],
-    pub dram: [u64; 8],
+    /// Temporal factors per hierarchy level (rows `>= num_levels` are
+    /// all-ones so loops over `MAX_LEVELS` are harmless).
+    pub levels: [[u64; 8]; MAX_LEVELS],
+    pub num_levels: u8,
     pub col_reduce: bool,
     pub halo_reuse: bool,
     /// [`Mapping::scheduled_total`].
@@ -264,32 +313,39 @@ pub struct MappingView {
 impl MappingView {
     /// Build a view from raw per-dim factor arrays (the mapper's inner
     /// loop); the totals are derived here once.
-    #[allow(clippy::too_many_arguments)]
     pub fn from_raw(
         spatial_row: [u64; 8],
         spatial_col: [u64; 8],
-        reg: [u64; 8],
-        sram: [u64; 8],
-        dram: [u64; 8],
+        level_factors: &[[u64; 8]],
         col_reduce: bool,
         halo_reuse: bool,
     ) -> MappingView {
+        assert!(
+            (2..=MAX_LEVELS).contains(&level_factors.len()),
+            "level count {} out of range",
+            level_factors.len()
+        );
+        let mut levels = [[1u64; 8]; MAX_LEVELS];
+        levels[..level_factors.len()].copy_from_slice(level_factors);
         let mut scheduled_total = 1u64;
         let mut cycles = 1u64;
         let mut used_rows = 1u64;
         let mut used_cols = 1u64;
         for i in 0..8 {
-            scheduled_total *= spatial_row[i] * spatial_col[i] * reg[i] * sram[i] * dram[i];
-            cycles *= reg[i] * sram[i] * dram[i];
+            let mut temporal = 1u64;
+            for lv in levels.iter().take(level_factors.len()) {
+                temporal *= lv[i];
+            }
+            scheduled_total *= spatial_row[i] * spatial_col[i] * temporal;
+            cycles *= temporal;
             used_rows *= spatial_row[i];
             used_cols *= spatial_col[i];
         }
         MappingView {
             spatial_row,
             spatial_col,
-            reg,
-            sram,
-            dram,
+            levels,
+            num_levels: level_factors.len() as u8,
             col_reduce,
             halo_reuse,
             scheduled_total,
@@ -338,10 +394,42 @@ mod tests {
         );
         assert!(m.validate(&d, &ArrayScheme::new(16, 16)).is_empty());
         // C: spatial 16, needs dram factor 2; M: spatial 16 -> dram 2.
-        assert_eq!(m.dram[Dim::C.idx()], 2);
-        assert_eq!(m.dram[Dim::M.idx()], 2);
-        assert_eq!(m.dram[Dim::P.idx()], 32);
+        assert_eq!(m.levels[2][Dim::C.idx()], 2);
+        assert_eq!(m.levels[2][Dim::M.idx()], 2);
+        assert_eq!(m.levels[2][Dim::P.idx()], 32);
         assert_eq!(m.spatial_factor(Dim::C), 16);
+        assert_eq!(m.num_levels(), 3);
+    }
+
+    #[test]
+    fn derive_n_supports_four_levels() {
+        let d = dims();
+        let mut reg = [1u64; 8];
+        reg[Dim::Q.idx()] = 32;
+        let mut buf = [1u64; 8];
+        buf[Dim::P.idx()] = 4;
+        let mut sram = [1u64; 8];
+        sram[Dim::T.idx()] = 6;
+        sram[Dim::R.idx()] = 3;
+        sram[Dim::S.idx()] = 3;
+        let m = Mapping::derive_n(
+            "t4",
+            &d,
+            vec![(Dim::C, 16)],
+            vec![(Dim::M, 16)],
+            vec![reg, buf, sram],
+        );
+        assert_eq!(m.num_levels(), 4);
+        assert!(m.validate(&d, &ArrayScheme::new(16, 16)).is_empty());
+        // P: spatial 1, reg 1, buf 4, sram 1 -> remainder 8 at the store.
+        assert_eq!(m.levels[3][Dim::P.idx()], 8);
+        assert_eq!(m.temporal(Dim::P, 1), 4);
+        assert_eq!(m.temporal(Dim::P, 9), 1, "out-of-range level is 1");
+        // The view mirrors every total.
+        let v = m.view();
+        assert_eq!(v.num_levels, 4);
+        assert_eq!(v.scheduled_total, m.scheduled_total());
+        assert_eq!(v.cycles, m.cycles());
     }
 
     #[test]
@@ -368,9 +456,7 @@ mod tests {
             name: "bad".into(),
             spatial_rows: vec![(Dim::C, 32)],
             spatial_cols: vec![(Dim::M, 8)],
-            reg: [1; 8],
-            sram: [1; 8],
-            dram: [1; 8],
+            levels: vec![[1; 8], [1; 8], [1; 8]],
             col_reduce: true,
             halo_reuse: true,
         };
@@ -416,6 +502,8 @@ mod tests {
         assert_eq!(v.utilization(&arr), m.utilization(&arr));
         assert_eq!(v.col_reduce, m.col_reduce);
         assert_eq!(v.halo_reuse, m.halo_reuse);
+        // Unused view levels are all-ones.
+        assert_eq!(v.levels[3], [1u64; 8]);
     }
 
     #[test]
@@ -427,5 +515,14 @@ mod tests {
         let txt = m.render_loop_nest();
         assert!(txt.contains("# SRAM"));
         assert!(txt.contains("parallel-for"));
+    }
+
+    #[test]
+    fn level_labels() {
+        assert_eq!(Mapping::level_label(0, 3), "Reg");
+        assert_eq!(Mapping::level_label(1, 3), "SRAM");
+        assert_eq!(Mapping::level_label(2, 3), "DRAM");
+        assert_eq!(Mapping::level_label(1, 4), "L1");
+        assert_eq!(Mapping::level_label(3, 4), "DRAM");
     }
 }

@@ -4,14 +4,19 @@
 //!
 //! Each template turns a convolution workload + architecture into a
 //! concrete [`Mapping`]: a spatial unroll plus per-level tile factors,
-//! then shrinks SRAM tiles until every operand's tile fits its Table-II
-//! macro. Templates are *mechanical* over the loop grid, so applying the
-//! FP-oriented schedule to the BP or WG grid yields the (different) reuse
-//! the paper reports for those phases.
+//! then shrinks on-chip tiles until every operand's tile fits its storage
+//! at every bounded hierarchy level. Templates are *mechanical* over the
+//! loop grid, so applying the FP-oriented schedule to the BP or WG grid
+//! yields the (different) reuse the paper reports for those phases.
+//!
+//! On hierarchies deeper than the paper's three levels, a template
+//! places its register factors at level 0 and its buffer factors at the
+//! *main buffer level* (the level just below the backing store);
+//! intermediate levels start untiled and are the mapper's to explore.
 
-use crate::arch::Architecture;
+use crate::arch::{Architecture, HierarchySpec, LevelCapacity, MAX_LEVELS};
 use crate::reuse::{operand_specs, OperandSpec};
-use crate::util::{ceil_div, divisors};
+use crate::util::ceil_div;
 use crate::workload::{ConvWorkload, Dim};
 
 use super::Mapping;
@@ -181,7 +186,14 @@ pub fn generate(family: Family, w: &ConvWorkload, arch: &Architecture) -> Mappin
         }
     };
 
-    let mut m = Mapping::derive(family.name(), d, spatial_rows, spatial_cols, reg, sram);
+    // Register factors land at level 0, the buffer factors at the main
+    // buffer level; any intermediate levels of a deeper hierarchy start
+    // untiled (the mapper's search explores them).
+    let n_onchip = arch.hier.num_levels() - 1;
+    let mut inner = vec![[1u64; 8]; n_onchip];
+    inner[0] = reg;
+    inner[n_onchip - 1] = sram;
+    let mut m = Mapping::derive_n(family.name(), d, spatial_rows, spatial_cols, inner);
     // RS arrays accumulate along rows only (no per-column adder trees):
     // partial sums produced by different columns spill individually.
     if family == Family::Rs {
@@ -194,32 +206,40 @@ pub fn generate(family: Family, w: &ConvWorkload, arch: &Architecture) -> Mappin
     fit_to_capacity(m, w, arch)
 }
 
-/// SRAM tile footprint (bits) of one operand under `m`: the product of the
-/// operand-relevant extents resident below the DRAM boundary.
+/// Tile footprint (bits) of one operand resident at hierarchy level
+/// `level` under `m`: the product of the operand-relevant extents
+/// iterating at or below that level.
 ///
-/// Residency model: within one SRAM pass, the batch/timestep loops stream
-/// outermost (only one `n, t` slice is ever buffered), and halo operands
-/// keep an `R`-row line buffer rather than replicating the tile per kernel
-/// offset — so `N`/`T` SRAM factors and halo `R`/`S` factors do not
+/// Residency model: within one buffer pass, the batch/timestep loops
+/// stream outermost (only one `n, t` slice is ever buffered), and halo
+/// operands with a line buffer at or below `level` keep an `R`-row line
+/// buffer rather than replicating the tile per kernel offset — so `N`/`T`
+/// buffer-level factors and line-buffered halo `R`/`S` factors do not
 /// multiply the resident tile.
-pub fn sram_tile_bits(spec: &OperandSpec, m: &Mapping) -> u64 {
+pub fn tile_bits(spec: &OperandSpec, m: &Mapping, arch: &Architecture, level: usize) -> u64 {
     let mut spatial = [1u64; 8];
     for (d, f) in m.spatial_rows.iter().chain(m.spatial_cols.iter()) {
         spatial[d.idx()] *= *f;
     }
-    tile_bits_raw(spec, &spatial, &m.reg, &m.sram, m.halo_reuse)
+    let mut levels = [[1u64; 8]; MAX_LEVELS];
+    let n = m.levels.len().min(MAX_LEVELS);
+    levels[..n].copy_from_slice(&m.levels[..n]);
+    tile_bits_raw(spec, &arch.hier, &spatial, &levels, level, m.halo_reuse)
 }
 
-/// Allocation-free tile-footprint kernel shared by [`sram_tile_bits`]
-/// and the capacity fitter's inner loop (the DSE hot path).
+/// Allocation-free tile-footprint kernel shared by [`tile_bits`] and the
+/// capacity fitter's inner loop (the DSE hot path).
 #[inline]
 pub(crate) fn tile_bits_raw(
     spec: &OperandSpec,
+    hier: &HierarchySpec,
     spatial: &[u64; 8],
-    reg: &[u64; 8],
-    sram: &[u64; 8],
+    levels: &[[u64; 8]; MAX_LEVELS],
+    level: usize,
     halo_reuse: bool,
 ) -> u64 {
+    let halo_buffered =
+        spec.halo && halo_reuse && hier.halo_buffered_at(spec.sram, level);
     let mut elems: u64 = 1;
     for dim in Dim::ALL {
         // Dims irrelevant to the operand don't index it. (The +R-1 halo
@@ -227,96 +247,221 @@ pub(crate) fn tile_bits_raw(
         if spec.irr[dim.idx()] {
             continue;
         }
-        if spec.halo && halo_reuse && matches!(dim, Dim::R | Dim::S) {
+        if halo_buffered && matches!(dim, Dim::R | Dim::S) {
             continue;
         }
-        let mut f = spatial[dim.idx()] * reg[dim.idx()];
+        let i = dim.idx();
+        let mut f = spatial[i] * levels[0][i];
         if !matches!(dim, Dim::N | Dim::T) {
-            f *= sram[dim.idx()];
+            for lv in levels.iter().take(level + 1).skip(1) {
+                f *= lv[i];
+            }
         }
         elems *= f;
     }
     elems * spec.bits as u64
 }
 
+/// Mark the dims whose factors contribute to `spec`'s tile at `level`
+/// (the shrink candidates of the capacity fitter).
+fn eligible_dims_into(
+    spec: &OperandSpec,
+    hier: &HierarchySpec,
+    level: usize,
+    halo_reuse: bool,
+    out: &mut [bool; 8],
+) {
+    let halo_buffered =
+        spec.halo && halo_reuse && hier.halo_buffered_at(spec.sram, level);
+    for dim in Dim::ALL {
+        if spec.irr[dim.idx()] {
+            continue;
+        }
+        if halo_buffered && matches!(dim, Dim::R | Dim::S) {
+            continue;
+        }
+        out[dim.idx()] = true;
+    }
+}
+
+/// Pick the factor to halve for an overflow at `level`: the largest
+/// shrinkable buffer-level factor scanning from `level` down (skipping
+/// `N`/`T`, which never count toward residency), falling back to the
+/// register tiles. Ties resolve to the later dim, matching
+/// `Iterator::max_by_key`.
+fn shrink_candidate(
+    eligible: &[bool; 8],
+    levels: &[[u64; 8]; MAX_LEVELS],
+    level: usize,
+) -> Option<(usize, usize)> {
+    for lv in (1..=level).rev() {
+        let mut best: Option<usize> = None;
+        for d in Dim::ALL {
+            let i = d.idx();
+            if eligible[i]
+                && !matches!(d, Dim::N | Dim::T)
+                && levels[lv][i] > 1
+                && best.map(|b| levels[lv][i] >= levels[lv][b]).unwrap_or(true)
+            {
+                best = Some(i);
+            }
+        }
+        if let Some(i) = best {
+            return Some((lv, i));
+        }
+    }
+    let mut best: Option<usize> = None;
+    for d in Dim::ALL {
+        let i = d.idx();
+        if eligible[i]
+            && levels[0][i] > 1
+            && best.map(|b| levels[0][i] >= levels[0][b]).unwrap_or(true)
+        {
+            best = Some(i);
+        }
+    }
+    best.map(|i| (0, i))
+}
+
+/// Do the raw factor arrays fit every bounded hierarchy level? (The
+/// mapper's cheap pre-check before invoking the fitter.)
+pub(crate) fn fits_raw(
+    specs: &[OperandSpec; 3],
+    arch: &Architecture,
+    spatial: &[u64; 8],
+    levels: &[[u64; 8]; MAX_LEVELS],
+    n_onchip: usize,
+    halo_reuse: bool,
+) -> bool {
+    let hier = &arch.hier;
+    for l in 1..n_onchip {
+        match &hier.levels[l].capacity {
+            LevelCapacity::Unbounded => {}
+            LevelCapacity::PerVar(_) => {
+                for spec in specs {
+                    if !hier.resident(l, spec.sram) {
+                        continue;
+                    }
+                    let cap = hier.cap_bits(l, spec.sram).unwrap_or(u64::MAX);
+                    if tile_bits_raw(spec, hier, spatial, levels, l, halo_reuse) > cap {
+                        return false;
+                    }
+                }
+            }
+            LevelCapacity::Shared { bytes } => {
+                let mut sum = 0u64;
+                for spec in specs {
+                    if hier.resident(l, spec.sram) {
+                        sum += tile_bits_raw(spec, hier, spatial, levels, l, halo_reuse);
+                    }
+                }
+                if sum > bytes * 8 {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
 /// Capacity fitter over raw per-dim factor arrays — shared by
 /// [`fit_to_capacity`] (the `Mapping` path) and the mapper's
 /// allocation-free evaluator, so both paths shrink identically: halving
 /// proceeds from the largest shrinkable factor of the worst-overflowing
-/// operand until every tile fits its Table-II macro.
+/// capacity check (per-variable macro or shared-buffer sum) until every
+/// tile fits at every bounded level. `levels[0..n_onchip]` are the
+/// on-chip factor arrays; the backing-store remainder is derived later.
 pub(crate) fn fit_raw(
     specs: &[OperandSpec; 3],
     arch: &Architecture,
     spatial: &[u64; 8],
     halo_reuse: bool,
-    reg: &mut [u64; 8],
-    sram: &mut [u64; 8],
+    levels: &mut [[u64; 8]; MAX_LEVELS],
+    n_onchip: usize,
 ) {
-    // At most ~64 halvings per dim can ever be needed (factors are u64).
-    for _ in 0..512 {
-        // (is_reg_level, dim idx, tile excess)
-        let mut worst: Option<(bool, usize, u64)> = None;
-        for spec in specs {
-            let cap_bits = arch.mem.get(spec.sram).bytes * 8;
-            let tile = tile_bits_raw(spec, spatial, reg, sram, halo_reuse);
-            if tile > cap_bits {
-                let excess = tile - cap_bits;
-                let tile_dim = |dim: &Dim| {
-                    !spec.irr[dim.idx()]
-                        && !(spec.halo && halo_reuse && matches!(dim, Dim::R | Dim::S))
-                };
-                // Prefer shrinking SRAM factors (N/T never count toward
-                // residency, so skip them); fall back to register tiles.
-                let cand = Dim::ALL
-                    .iter()
-                    .filter(|dim| {
-                        tile_dim(dim) && !matches!(dim, Dim::N | Dim::T) && sram[dim.idx()] > 1
-                    })
-                    .max_by_key(|dim| sram[dim.idx()])
-                    .map(|dim| (false, dim.idx()))
-                    .or_else(|| {
-                        Dim::ALL
-                            .iter()
-                            .filter(|dim| tile_dim(dim) && reg[dim.idx()] > 1)
-                            .max_by_key(|dim| reg[dim.idx()])
-                            .map(|dim| (true, dim.idx()))
-                    });
-                if let Some((is_reg, idx)) = cand {
-                    if worst.map(|(_, _, e)| excess > e).unwrap_or(true) {
-                        worst = Some((is_reg, idx, excess));
+    let hier = &arch.hier;
+    // At most ~64 halvings per dim per level can ever be needed.
+    for _ in 0..512 * n_onchip.max(1) {
+        // (level to shrink at, dim idx, capacity excess)
+        let mut worst: Option<(usize, usize, u64)> = None;
+        for l in 1..n_onchip {
+            match &hier.levels[l].capacity {
+                LevelCapacity::Unbounded => {}
+                LevelCapacity::PerVar(_) => {
+                    for spec in specs {
+                        if !hier.resident(l, spec.sram) {
+                            continue;
+                        }
+                        let cap = hier.cap_bits(l, spec.sram).unwrap_or(u64::MAX);
+                        let tile =
+                            tile_bits_raw(spec, hier, spatial, levels, l, halo_reuse);
+                        if tile > cap {
+                            let excess = tile - cap;
+                            let mut elig = [false; 8];
+                            eligible_dims_into(spec, hier, l, halo_reuse, &mut elig);
+                            if let Some((lv, i)) = shrink_candidate(&elig, levels, l) {
+                                if worst.map(|(_, _, e)| excess > e).unwrap_or(true) {
+                                    worst = Some((lv, i, excess));
+                                }
+                            }
+                        }
+                    }
+                }
+                LevelCapacity::Shared { bytes } => {
+                    let cap = bytes * 8;
+                    let mut sum = 0u64;
+                    for spec in specs {
+                        if hier.resident(l, spec.sram) {
+                            sum +=
+                                tile_bits_raw(spec, hier, spatial, levels, l, halo_reuse);
+                        }
+                    }
+                    if sum > cap {
+                        let excess = sum - cap;
+                        let mut elig = [false; 8];
+                        for spec in specs {
+                            if hier.resident(l, spec.sram) {
+                                eligible_dims_into(spec, hier, l, halo_reuse, &mut elig);
+                            }
+                        }
+                        if let Some((lv, i)) = shrink_candidate(&elig, levels, l) {
+                            if worst.map(|(_, _, e)| excess > e).unwrap_or(true) {
+                                worst = Some((lv, i, excess));
+                            }
+                        }
                     }
                 }
             }
         }
         match worst {
-            Some((true, idx, _)) => reg[idx] = (reg[idx] / 2).max(1),
-            Some((false, idx, _)) => sram[idx] = (sram[idx] / 2).max(1),
+            Some((lv, i, _)) => levels[lv][i] = (levels[lv][i] / 2).max(1),
             None => return,
         }
     }
 }
 
-/// Shrink SRAM-level tile factors until every operand tile fits its
-/// Table-II macro ([`fit_raw`]); `Mapping::derive` afterwards pushes the
-/// remainder to DRAM.
+/// Shrink on-chip tile factors until every operand tile fits its storage
+/// at every bounded level ([`fit_raw`]); `Mapping::derive_n` afterwards
+/// pushes the remainder to the backing store.
 fn fit_to_capacity(m: Mapping, w: &ConvWorkload, arch: &Architecture) -> Mapping {
     let specs = operand_specs(w);
-    let mut sram = m.sram;
-    let mut reg = m.reg;
+    let n_onchip = m.levels.len() - 1;
+    debug_assert_eq!(m.levels.len(), arch.hier.num_levels());
+    let mut levels = [[1u64; 8]; MAX_LEVELS];
+    levels[..n_onchip].copy_from_slice(&m.levels[..n_onchip]);
     // Precompute per-dim spatial products once; the shrink loop is the
     // DSE's hottest path and must not allocate.
     let mut spatial = [1u64; 8];
     for (d, f) in m.spatial_rows.iter().chain(m.spatial_cols.iter()) {
         spatial[d.idx()] *= *f;
     }
-    fit_raw(&specs, arch, &spatial, m.halo_reuse, &mut reg, &mut sram);
-    let mut cur = Mapping::derive(
+    fit_raw(&specs, arch, &spatial, m.halo_reuse, &mut levels, n_onchip);
+    let mut cur = Mapping::derive_n(
         m.name.clone(),
         &w.dims,
         m.spatial_rows.clone(),
         m.spatial_cols.clone(),
-        reg,
-        sram,
+        levels[..n_onchip].to_vec(),
     );
     cur.col_reduce = m.col_reduce;
     cur.halo_reuse = m.halo_reuse;
@@ -337,7 +482,7 @@ pub fn refit(m: Mapping, w: &ConvWorkload, arch: &Architecture) -> Mapping {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::{Architecture, ArrayScheme};
+    use crate::arch::{Architecture, ArrayScheme, HierarchySpec};
     use crate::model::SnnModel;
     use crate::workload::generate as gen_workload;
 
@@ -368,7 +513,8 @@ mod tests {
         let m = generate(Family::AdvWs, &wl.fp, &arch);
         // Only the batch dim (N=1 here) remains at DRAM level: all DRAM
         // factors must be 1 for the Fig. 4 layer.
-        assert!(m.dram.iter().all(|&f| f == 1), "dram factors {:?}", m.dram);
+        let dram = m.levels.last().unwrap();
+        assert!(dram.iter().all(|&f| f == 1), "dram factors {dram:?}");
     }
 
     #[test]
@@ -382,7 +528,7 @@ mod tests {
     fn ws2_restreams_per_timestep() {
         let (wl, arch) = setup();
         let m = generate(Family::Ws2, &wl.fp, &arch);
-        assert_eq!(m.dram[crate::workload::Dim::T.idx()], 6);
+        assert_eq!(m.levels.last().unwrap()[crate::workload::Dim::T.idx()], 6);
     }
 
     #[test]
@@ -398,20 +544,66 @@ mod tests {
         let (wl, arch) = setup();
         // Shrink memory brutally: 1/64 of the paper pool.
         let tiny = Architecture {
-            mem: arch.mem.scaled(1.0 / 64.0),
+            hier: arch.hier.scaled(1.0 / 64.0),
             ..arch.clone()
         };
         for w in wl.convs() {
             for (fam, m) in all_families(w, &tiny) {
                 for spec in crate::reuse::operand_specs(w) {
-                    let cap = tiny.mem.get(spec.sram).bytes * 8;
-                    let tile = sram_tile_bits(&spec, &m);
+                    let cap = tiny.hier.cap_bits(1, spec.sram).unwrap();
+                    let tile = tile_bits(&spec, &m, &tiny, 1);
                     assert!(
                         tile <= cap,
                         "{} {} tile {tile} > cap {cap}",
                         fam.name(),
                         spec.tensor
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_capacity_bounds_the_sum_of_tiles() {
+        let (wl, _) = setup();
+        // A unified SRAM squeezed to 1/64: the *sum* of the three operand
+        // tiles must fit the shared bank.
+        let tiny = Architecture::with_hierarchy(HierarchySpec::unified_sram().scaled(1.0 / 64.0));
+        let cap = match &tiny.hier.levels[1].capacity {
+            crate::arch::LevelCapacity::Shared { bytes } => bytes * 8,
+            other => panic!("unified level is {other:?}"),
+        };
+        for w in wl.convs() {
+            for (fam, m) in all_families(w, &tiny) {
+                let sum: u64 = crate::reuse::operand_specs(w)
+                    .iter()
+                    .map(|spec| tile_bits(spec, &m, &tiny, 1))
+                    .sum();
+                assert!(sum <= cap, "{}: sum {sum} > cap {cap}", fam.name());
+            }
+        }
+    }
+
+    #[test]
+    fn four_level_templates_fit_every_bounded_level() {
+        let (wl, _) = setup();
+        let arch = Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer());
+        for w in wl.convs() {
+            for (fam, m) in all_families(w, &arch) {
+                assert_eq!(m.num_levels(), 4, "{}", fam.name());
+                let errs = m.validate(&w.dims, &arch.array);
+                assert!(errs.is_empty(), "{}: {errs:?}", fam.name());
+                // Shared spike buffer at level 1.
+                let sum: u64 = crate::reuse::operand_specs(w)
+                    .iter()
+                    .filter(|s| arch.hier.resident(1, s.sram))
+                    .map(|spec| tile_bits(spec, &m, &arch, 1))
+                    .sum();
+                assert!(sum <= 8 * 1024 * 8, "{}: spike buffer overflows", fam.name());
+                // Per-var macros at level 2.
+                for spec in crate::reuse::operand_specs(w) {
+                    let cap = arch.hier.cap_bits(2, spec.sram).unwrap();
+                    assert!(tile_bits(&spec, &m, &arch, 2) <= cap, "{}", fam.name());
                 }
             }
         }

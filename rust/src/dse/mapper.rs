@@ -3,26 +3,29 @@
 //!
 //! The named templates (§IV-A) are points in a much larger schedule
 //! space. This mapper searches, per convolution, over divisor-aligned
-//! placements of each dimension across the three levels plus the spatial
-//! unroll choice, pruning with the capacity fitter, and returns the
-//! minimum-energy mapping. It answers the question EOCAS exists to ask —
-//! "is the paper's Advanced WS actually near-optimal?" — and the tests
-//! pin the answer (it is: the mapper's optimum beats it by at most a few
-//! percent on the Fig. 4 layer).
+//! placements of each dimension across every on-chip hierarchy level
+//! plus the spatial unroll choice, pruning with the capacity fitter, and
+//! returns the minimum-energy mapping. It answers the question EOCAS
+//! exists to ask — "is the paper's Advanced WS actually near-optimal?" —
+//! and the tests pin the answer (it is: the mapper's optimum beats it by
+//! at most a few percent on the Fig. 4 layer). On deeper hierarchies the
+//! same search explores the extra levels (e.g. what to stage in a
+//! PE-cluster spike buffer).
 //!
 //! Hot-path implementation: the coordinate descent prices candidates
 //! through an allocation-free [`IncrementalEval`] — raw `[u64; 8]`
-//! factor arrays, the shared raw capacity fitter, and incremental
-//! re-pricing that recomputes only the operands whose reuse factors the
-//! changed dim can touch. [`search_reference`] keeps the pre-fast-path
-//! implementation (heap-backed `Mapping::derive` + `refit` +
-//! `conv_energy_reference` per candidate) as an equivalence oracle and
-//! benchmark baseline; the `fast_search_matches_reference` test pins the
-//! two paths to bit-identical results.
+//! factor arrays per level, the shared raw capacity fitter, and
+//! incremental re-pricing that recomputes only the operands whose reuse
+//! factors the changed dim can touch. [`search_reference`] keeps the
+//! pre-fast-path implementation (heap-backed `Mapping::derive` + `refit`
+//! + `conv_energy_reference` per candidate, 3-level only) as an
+//! equivalence oracle and benchmark baseline; the
+//! `fast_search_matches_reference` test pins the two paths to
+//! bit-identical results on the paper hierarchy.
 
-use crate::arch::Architecture;
+use crate::arch::{Architecture, MAX_LEVELS};
 use crate::config::EnergyConfig;
-use crate::dataflow::templates::{fit_raw, refit, tile_bits_raw};
+use crate::dataflow::templates::{fit_raw, fits_raw, refit};
 use crate::dataflow::{Mapping, MappingView};
 use crate::energy::{
     compute_energy, conv_energy_reference, price_operand, OperandEnergy,
@@ -52,16 +55,34 @@ pub struct MapperResult {
     pub evaluated: usize,
 }
 
-/// Divisor-aligned split candidates of `extent` into (reg, sram) factors;
-/// the DRAM remainder is derived. Bounded: extents here are dim sizes
+/// Divisor-aligned split candidates of `extent` across `n` on-chip
+/// levels (innermost first, entries past `n` stay 1); the backing-store
+/// remainder is derived. Enumeration order is lexicographic in the
+/// ascending divisor lists, which for `n = 2` reproduces the original
+/// `(reg, sram)` pair order — the evaluation-count parity the
+/// reference-equivalence test pins. Bounded: extents here are dim sizes
 /// (≤ a few hundred), so divisor lists are tiny.
-fn splits(extent: u64) -> Vec<(u64, u64)> {
-    let mut out = Vec::new();
-    for &reg in &divisors(extent) {
-        for &sram in &divisors(extent / reg) {
-            out.push((reg, sram));
+fn splits_n(extent: u64, n: usize) -> Vec<[u64; MAX_LEVELS]> {
+    fn rec(
+        extent: u64,
+        level: usize,
+        n: usize,
+        cur: &mut [u64; MAX_LEVELS],
+        out: &mut Vec<[u64; MAX_LEVELS]>,
+    ) {
+        if level == n {
+            out.push(*cur);
+            return;
         }
+        for &f in &divisors(extent) {
+            cur[level] = f;
+            rec(extent / f, level + 1, n, cur, out);
+        }
+        cur[level] = 1;
     }
+    let mut out = Vec::new();
+    let mut cur = [1u64; MAX_LEVELS];
+    rec(extent, 0, n, &mut cur, &mut out);
     out
 }
 
@@ -95,7 +116,7 @@ fn spatial_candidates(w: &ConvWorkload, arch: &Architecture) -> Vec<(Dim, u64, D
 #[derive(Clone, Copy)]
 struct CandState {
     ops: [OperandEnergy; 3],
-    /// Scheduled total after DRAM derivation (and fitting, if any).
+    /// Scheduled total after remainder derivation (and fitting, if any).
     total: u64,
     /// Whether the capacity fitter had to shrink the raw factors.
     fitted: bool,
@@ -105,26 +126,28 @@ struct CandState {
 /// `(workload, spatial unroll)` pair.
 ///
 /// `price` reproduces exactly what the reference path does per candidate
-/// — `Mapping::derive` (DRAM remainder), `refit` (capacity shrink) and
-/// `conv_energy` — but on raw `[u64; 8]` arrays, and with incremental
-/// re-pricing: when the candidate differs from the committed baseline in
-/// a single dim, operands whose reuse factors that dim cannot touch
-/// (see [`affected_dims_mask`]) reuse their baseline energies verbatim.
-/// The reuse is sound only when neither state was capacity-shrunk and
-/// the scheduled totals agree, which the guard checks explicitly.
+/// — `Mapping::derive_n` (backing-store remainder), `refit` (capacity
+/// shrink) and `conv_energy` — but on raw per-level `[u64; 8]` arrays,
+/// and with incremental re-pricing: when the candidate differs from the
+/// committed baseline in a single dim, operands whose reuse factors that
+/// dim cannot touch (see [`affected_dims_mask`]) reuse their baseline
+/// energies verbatim. The reuse is sound only when neither state was
+/// capacity-shrunk and the scheduled totals agree, which the guard
+/// checks explicitly.
 struct IncrementalEval<'a> {
     arch: &'a Architecture,
     cfg: &'a EnergyConfig,
     extents: [u64; 8],
     specs: [OperandSpec; 3],
-    caps_bits: [u64; 3],
     affected: [u8; 3],
     compute_j: f64,
     spatial_row: [u64; 8],
     spatial_col: [u64; 8],
     /// Per-dim product of both spatial axes.
     spatial: [u64; 8],
-    base: Option<([u64; 8], [u64; 8], CandState)>,
+    /// On-chip level count (hierarchy levels minus the backing store).
+    n_onchip: usize,
+    base: Option<CandState>,
 }
 
 impl<'a> IncrementalEval<'a> {
@@ -152,13 +175,8 @@ impl<'a> IncrementalEval<'a> {
             arch,
             cfg,
             extents,
-            caps_bits: [
-                arch.mem.get(specs[0].sram).bytes * 8,
-                arch.mem.get(specs[1].sram).bytes * 8,
-                arch.mem.get(specs[2].sram).bytes * 8,
-            ],
-            // Mapper mappings always carry `Mapping::derive`'s defaults:
-            // col_reduce = true, halo_reuse = true.
+            // Mapper mappings always carry `Mapping::derive_n`'s
+            // defaults: col_reduce = true, halo_reuse = true.
             affected: [
                 affected_dims_mask(&specs[0], true),
                 affected_dims_mask(&specs[1], true),
@@ -169,55 +187,63 @@ impl<'a> IncrementalEval<'a> {
             spatial_row,
             spatial_col,
             spatial,
+            n_onchip: arch.hier.num_levels() - 1,
             base: None,
         }
     }
 
-    /// Price the candidate `(reg, sram)`. `hint` is the single dim index
-    /// the candidate differs from the baseline in (`None` = full
-    /// recompute).
-    fn price(&self, reg: &[u64; 8], sram: &[u64; 8], hint: Option<usize>) -> (f64, CandState) {
+    /// Price the candidate on-chip factor arrays. `hint` is the single
+    /// dim index the candidate differs from the baseline in (`None` =
+    /// full recompute).
+    fn price(
+        &self,
+        levels: &[[u64; 8]; MAX_LEVELS],
+        hint: Option<usize>,
+    ) -> (f64, CandState) {
         // 1. Capacity check on the raw tiles; shrink through the shared
-        //    fitter only when an operand overflows its macro.
-        let mut freg = *reg;
-        let mut fsram = *sram;
-        let mut fitted = false;
-        for i in 0..3 {
-            if tile_bits_raw(&self.specs[i], &self.spatial, &freg, &fsram, true)
-                > self.caps_bits[i]
-            {
-                fitted = true;
-                break;
-            }
-        }
+        //    fitter only when a bounded level overflows.
+        let mut fac = *levels;
+        let fitted =
+            !fits_raw(&self.specs, self.arch, &self.spatial, &fac, self.n_onchip, true);
         if fitted {
-            fit_raw(&self.specs, self.arch, &self.spatial, true, &mut freg, &mut fsram);
+            fit_raw(
+                &self.specs,
+                self.arch,
+                &self.spatial,
+                true,
+                &mut fac,
+                self.n_onchip,
+            );
         }
-        // 2. DRAM remainders (`Mapping::derive` semantics).
-        let mut dram = [1u64; 8];
+        // 2. Backing-store remainders (`Mapping::derive_n` semantics).
         for i in 0..8 {
-            let covered = (self.spatial[i] * freg[i] * fsram[i]).max(1);
-            dram[i] = ceil_div(self.extents[i], covered).max(1);
+            let mut covered = self.spatial[i];
+            for lv in fac.iter().take(self.n_onchip) {
+                covered *= lv[i];
+            }
+            fac[self.n_onchip][i] = ceil_div(self.extents[i], covered.max(1)).max(1);
         }
         let view = MappingView::from_raw(
             self.spatial_row,
             self.spatial_col,
-            freg,
-            fsram,
-            dram,
+            &fac[..=self.n_onchip],
             true,
             true,
         );
         // 3. Incremental re-pricing against the committed baseline.
         let reuse = match (&self.base, hint) {
-            (Some((_, _, b)), Some(d))
+            (Some(b), Some(d))
                 if !fitted && !b.fitted && b.total == view.scheduled_total =>
             {
                 Some((b, d))
             }
             _ => None,
         };
-        let mut ops = [self.zero_energy(0), self.zero_energy(1), self.zero_energy(2)];
+        let mut ops = [
+            OperandEnergy::zeroed(&self.specs[0], self.n_onchip + 1),
+            OperandEnergy::zeroed(&self.specs[1], self.n_onchip + 1),
+            OperandEnergy::zeroed(&self.specs[2], self.n_onchip + 1),
+        ];
         for i in 0..3 {
             ops[i] = match reuse {
                 Some((b, d)) if self.affected[i] & (1u8 << d) == 0 => b.ops[i],
@@ -229,49 +255,38 @@ impl<'a> IncrementalEval<'a> {
         (self.compute_j + mem, CandState { ops, total: view.scheduled_total, fitted })
     }
 
-    fn zero_energy(&self, i: usize) -> OperandEnergy {
-        OperandEnergy {
-            tensor: self.specs[i].tensor,
-            role: self.specs[i].role,
-            reg_j: 0.0,
-            sram_j: 0.0,
-            dram_j: 0.0,
-        }
-    }
-
-    /// Commit `(reg, sram, state)` as the new baseline for incremental
-    /// pricing.
-    fn set_baseline(&mut self, reg: &[u64; 8], sram: &[u64; 8], state: CandState) {
-        self.base = Some((*reg, *sram, state));
+    /// Commit `state` as the new baseline for incremental pricing.
+    fn set_baseline(&mut self, state: CandState) {
+        self.base = Some(state);
     }
 }
 
 /// Search the schedule space for the minimum-energy mapping of `w`.
 ///
 /// Strategy: per spatial candidate, greedy coordinate descent over the
-/// per-dim (reg, sram) splits — start from everything at DRAM, then
-/// repeatedly apply the single split change that reduces energy most,
-/// until no improvement. Greedy is exact enough here because operand
-/// energies are monotone in each reuse factor; the tests cross-check
-/// against the best named template and pin bit-identity to
-/// [`search_reference`].
+/// per-dim level splits — start from everything at the backing store,
+/// then repeatedly apply the single split change that reduces energy
+/// most, until no improvement. Greedy is exact enough here because
+/// operand energies are monotone in each reuse factor; the tests
+/// cross-check against the best named template and pin bit-identity to
+/// [`search_reference`] on the paper hierarchy.
 pub fn search(
     w: &ConvWorkload,
     arch: &Architecture,
     cfg: &EnergyConfig,
     mc: &MapperConfig,
 ) -> MapperResult {
-    let mut best: Option<(f64, [u64; 8], [u64; 8], (Dim, u64, Dim, u64))> = None;
+    let n_onchip = arch.hier.num_levels() - 1;
+    let mut best: Option<(f64, [[u64; 8]; MAX_LEVELS], (Dim, u64, Dim, u64))> = None;
     let mut evaluated = 0usize;
 
     for (rd, rf, cd, cf) in spatial_candidates(w, arch) {
         let mut ev = IncrementalEval::new(w, arch, cfg, (rd, rf), (cd, cf));
-        // Start: everything at DRAM (reg = sram = 1).
-        let mut reg = [1u64; 8];
-        let mut sram = [1u64; 8];
-        let (mut cur_e, state) = ev.price(&reg, &sram, None);
+        // Start: everything at the backing store (all factors 1).
+        let mut levels = [[1u64; 8]; MAX_LEVELS];
+        let (mut cur_e, state) = ev.price(&levels, None);
         evaluated += 1;
-        ev.set_baseline(&reg, &sram, state);
+        ev.set_baseline(state);
         loop {
             let mut improved = false;
             for d in Dim::ALL {
@@ -280,25 +295,31 @@ pub fn search(
                 }
                 let i = d.idx();
                 let remaining = ceil_div(w.dims.get(d), ev.spatial[i].max(1));
-                let mut best_local: Option<(f64, (u64, u64), CandState)> = None;
-                for (r, s) in splits(remaining) {
-                    let (old_r, old_s) = (reg[i], sram[i]);
-                    reg[i] = r;
-                    sram[i] = s;
-                    let (e, st) = ev.price(&reg, &sram, Some(i));
+                let mut best_local: Option<(f64, [u64; MAX_LEVELS], CandState)> = None;
+                let mut old = [1u64; MAX_LEVELS];
+                for lv in 0..n_onchip {
+                    old[lv] = levels[lv][i];
+                }
+                for split in splits_n(remaining, n_onchip) {
+                    for lv in 0..n_onchip {
+                        levels[lv][i] = split[lv];
+                    }
+                    let (e, st) = ev.price(&levels, Some(i));
                     evaluated += 1;
                     if best_local.as_ref().map(|(be, _, _)| e < *be).unwrap_or(true) {
-                        best_local = Some((e, (r, s), st));
+                        best_local = Some((e, split, st));
                     }
-                    reg[i] = old_r;
-                    sram[i] = old_s;
+                    for lv in 0..n_onchip {
+                        levels[lv][i] = old[lv];
+                    }
                 }
-                if let Some((e, (r, s), st)) = best_local {
+                if let Some((e, split, st)) = best_local {
                     if e < cur_e - 1e-18 {
-                        reg[i] = r;
-                        sram[i] = s;
+                        for lv in 0..n_onchip {
+                            levels[lv][i] = split[lv];
+                        }
                         cur_e = e;
-                        ev.set_baseline(&reg, &sram, st);
+                        ev.set_baseline(st);
                         improved = true;
                     }
                 }
@@ -308,15 +329,21 @@ pub fn search(
             }
         }
         if best.as_ref().map(|(be, ..)| cur_e < *be).unwrap_or(true) {
-            best = Some((cur_e, reg, sram, (rd, rf, cd, cf)));
+            best = Some((cur_e, levels, (rd, rf, cd, cf)));
         }
     }
-    let (energy_j, reg, sram, (rd, rf, cd, cf)) =
+    let (energy_j, levels, (rd, rf, cd, cf)) =
         best.expect("non-empty spatial candidate set");
     // Materialize the winning mapping through the same derive + refit
     // path the candidates were priced with (deterministic, so the
     // mapping's energy equals `energy_j` bit-for-bit).
-    let m = Mapping::derive("mapper", &w.dims, vec![(rd, rf)], vec![(cd, cf)], reg, sram);
+    let m = Mapping::derive_n(
+        "mapper",
+        &w.dims,
+        vec![(rd, rf)],
+        vec![(cd, cf)],
+        levels[..n_onchip].to_vec(),
+    );
     let mapping = refit(m, w, arch);
     MapperResult { mapping, energy_j, evaluated }
 }
@@ -324,7 +351,8 @@ pub fn search(
 /// The pre-fast-path search, kept verbatim: heap-backed
 /// `Mapping::derive` + `refit` + [`conv_energy_reference`] per
 /// candidate. Oracle for the `fast_search_matches_reference` equivalence
-/// test and the "before" baseline in `bench_dse_throughput`.
+/// test and the "before" baseline in `bench_dse_throughput`. Valid only
+/// on 3-level (paper-shaped) hierarchies.
 pub fn search_reference(
     w: &ConvWorkload,
     arch: &Architecture,
@@ -365,7 +393,8 @@ pub fn search_reference(
                 let remaining =
                     crate::util::ceil_div(w.dims.get(d), cur_m.spatial_factor(d).max(1));
                 let mut best_local: Option<(f64, (u64, u64), Mapping)> = None;
-                for (r, s) in splits(remaining) {
+                for split in splits_n(remaining, 2) {
+                    let (r, s) = (split[0], split[1]);
                     let (old_r, old_s) = (reg[i], sram[i]);
                     reg[i] = r;
                     sram[i] = s;
@@ -401,6 +430,7 @@ pub fn search_reference(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::HierarchySpec;
     use crate::dataflow::templates::{generate as gen_template, Family};
     use crate::energy::conv_energy;
     use crate::model::SnnModel;
@@ -438,8 +468,8 @@ mod tests {
     #[test]
     fn fast_search_matches_reference() {
         // The incremental fast path and the pre-fast-path oracle must
-        // agree bit-for-bit: same winning mapping, same energy, same
-        // evaluation count.
+        // agree bit-for-bit on the paper hierarchy: same winning mapping,
+        // same energy, same evaluation count.
         let (wl, arch, cfg) = setup();
         let mc = MapperConfig::default();
         for w in wl.convs() {
@@ -464,6 +494,28 @@ mod tests {
         let found = search(&wl.fp, &arch, &cfg, &MapperConfig::default());
         let e = conv_energy(&wl.fp, &found.mapping, &arch, &cfg).total_j();
         assert_eq!(e.to_bits(), found.energy_j.to_bits());
+    }
+
+    #[test]
+    fn mapper_searches_four_level_hierarchies_end_to_end() {
+        let (wl, _, cfg) = setup();
+        let arch = Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer());
+        for w in wl.convs() {
+            let found = search(w, &arch, &cfg, &MapperConfig::default());
+            assert_eq!(found.mapping.num_levels(), 4, "{:?}", w.phase);
+            assert!(found.mapping.validate(&w.dims, &arch.array).is_empty());
+            assert!(found.energy_j.is_finite() && found.energy_j > 0.0);
+            // The reported optimum reproduces through the public kernel.
+            let e = conv_energy(w, &found.mapping, &arch, &cfg).total_j();
+            assert_eq!(e.to_bits(), found.energy_j.to_bits(), "{:?}", w.phase);
+            // And it can only beat (or tie) the templates, which leave
+            // the extra level untiled.
+            for fam in Family::ALL {
+                let m = gen_template(fam, w, &arch);
+                let te = conv_energy(w, &m, &arch, &cfg).total_j();
+                assert!(found.energy_j <= te * 1.0001, "{:?} vs {}", w.phase, fam.name());
+            }
+        }
     }
 
     #[test]
@@ -505,5 +557,24 @@ mod tests {
         // by at most one sweep per spatial candidate.
         assert!(small.evaluated < full.evaluated);
         assert!(small.energy_j.is_finite() && small.energy_j >= full.energy_j);
+    }
+
+    #[test]
+    fn splits_match_reference_pair_order() {
+        // splits_n(x, 2) must reproduce the historical (reg, sram)
+        // nested-divisor enumeration exactly (evaluation-count parity).
+        let mut expect = Vec::new();
+        for &r in &divisors(12) {
+            for &s in &divisors(12 / r) {
+                expect.push((r, s));
+            }
+        }
+        let got: Vec<(u64, u64)> =
+            splits_n(12, 2).into_iter().map(|s| (s[0], s[1])).collect();
+        assert_eq!(got, expect);
+        // Three levels: every split's product divides the extent.
+        for s in splits_n(12, 3) {
+            assert_eq!(12 % (s[0] * s[1] * s[2]), 0);
+        }
     }
 }

@@ -103,9 +103,10 @@ impl DseResult {
 }
 
 /// Randomly perturb a family template's tile factors (×2 / ÷2 jitters on
-/// register and SRAM factors), keeping the mapping valid and capacity-fit.
-/// The session's jittered-evaluation path (`EvalOptions::jitter_seed`)
-/// calls this per phase with one RNG stream.
+/// the register and main-buffer factors), keeping the mapping valid and
+/// capacity-fit. Intermediate levels of deeper hierarchies are carried
+/// through untouched. The session's jittered-evaluation path
+/// (`EvalOptions::jitter_seed`) calls this per phase with one RNG stream.
 pub fn jittered_mapping(
     w: &ConvWorkload,
     arch: &Architecture,
@@ -113,8 +114,9 @@ pub fn jittered_mapping(
     rng: &mut SplitMix64,
 ) -> Mapping {
     let base = templates::generate(family, w, arch);
-    let mut reg = base.reg;
-    let mut sram = base.sram;
+    let main = base.num_levels() - 2;
+    let mut reg = base.levels[0];
+    let mut sram = base.levels[main];
     for d in Dim::ALL {
         let i = d.idx();
         match rng.next_below(4) {
@@ -135,13 +137,15 @@ pub fn jittered_mapping(
             _ => {}
         }
     }
-    let mut m = Mapping::derive(
+    let mut inner: Vec<[u64; 8]> = base.levels[..base.num_levels() - 1].to_vec();
+    inner[0] = reg;
+    inner[main] = sram;
+    let mut m = Mapping::derive_n(
         format!("{}~jitter", base.name),
         &w.dims,
         base.spatial_rows.clone(),
         base.spatial_cols.clone(),
-        reg,
-        sram,
+        inner,
     );
     m.col_reduce = base.col_reduce;
     m.halo_reuse = base.halo_reuse;
@@ -208,12 +212,13 @@ pub fn explore(
             result,
         });
     }
-    // Deterministic output order regardless of request construction.
+    // Deterministic output order regardless of request construction. The
+    // full architecture label includes the hierarchy name, so mixed
+    // multi-hierarchy pools order unambiguously.
     candidates.sort_by(|a, b| {
         a.arch
-            .array
             .label()
-            .cmp(&b.arch.array.label())
+            .cmp(&b.arch.label())
             .then(a.dataflow.cmp(&b.dataflow))
     });
     let evaluations = candidates.len();

@@ -2,18 +2,22 @@
 //!
 //! `E = E^c + E^m`: compute energy from the Mux/Add/Mul operation counts
 //! (eqs. 17–19) and memory energy from per-operand access counts divided
-//! by reuse factors (eqs. 20–22), priced with the Table-II per-bit
-//! energies. The fixed-function soma and grad units contribute
-//! architecture-independent compute plus SRAM/DRAM traffic for the BPTT
-//! state they save and restore.
+//! by reuse factors (eqs. 20–22), priced with the hierarchy's per-level
+//! energy rules. The production kernel ([`price_operand`]) walks each
+//! operand's residency chain through the N-level
+//! [`crate::arch::HierarchySpec`]; the paper's closed 3-level form
+//! survives verbatim as [`conv_energy_reference`], the bit-identity
+//! oracle for the `paper_28nm` preset. The fixed-function soma and grad
+//! units contribute architecture-independent compute plus on-chip/DRAM
+//! traffic for the BPTT state they save and restore.
 
 pub mod ablation;
 
-use crate::arch::Architecture;
+use crate::arch::{Architecture, MAX_LEVELS};
 use crate::config::EnergyConfig;
 use crate::dataflow::templates::{self, Family};
 use crate::dataflow::{Mapping, MappingView};
-use crate::reuse::{operand_access_view, operand_specs, workload_access, OperandSpec, Role};
+use crate::reuse::{operand_fills, operand_specs, workload_access, OperandSpec, Role};
 use crate::workload::{ConvWorkload, LayerWorkload, Phase, UnitWork};
 
 /// Energy of one operand, split by hierarchy level (joules).
@@ -21,14 +25,65 @@ use crate::workload::{ConvWorkload, LayerWorkload, Phase, UnitWork};
 pub struct OperandEnergy {
     pub tensor: &'static str,
     pub role: Role,
-    pub reg_j: f64,
-    pub sram_j: f64,
-    pub dram_j: f64,
+    /// Joules spent at each hierarchy level (index = level; levels the
+    /// operand bypasses stay 0).
+    pub level_j: [f64; MAX_LEVELS],
+    pub num_levels: u8,
 }
 
 impl OperandEnergy {
+    /// All-zero energies for `spec` under an `n`-level hierarchy.
+    pub fn zeroed(spec: &OperandSpec, n: usize) -> OperandEnergy {
+        OperandEnergy {
+            tensor: spec.tensor,
+            role: spec.role,
+            level_j: [0.0; MAX_LEVELS],
+            num_levels: n as u8,
+        }
+    }
+
+    /// The classic 3-level split (oracle constructor).
+    pub fn three_level(
+        tensor: &'static str,
+        role: Role,
+        reg_j: f64,
+        sram_j: f64,
+        dram_j: f64,
+    ) -> OperandEnergy {
+        let mut level_j = [0.0; MAX_LEVELS];
+        level_j[0] = reg_j;
+        level_j[1] = sram_j;
+        level_j[2] = dram_j;
+        OperandEnergy { tensor, role, level_j, num_levels: 3 }
+    }
+
+    /// Innermost (register) level energy.
+    pub fn reg_j(&self) -> f64 {
+        self.level_j[0]
+    }
+
+    /// Sum over the intermediate on-chip levels (the single SRAM level of
+    /// the paper hierarchy, or every buffer between registers and the
+    /// backing store otherwise).
+    pub fn sram_j(&self) -> f64 {
+        let mut t = 0.0;
+        for l in 1..self.num_levels as usize - 1 {
+            t += self.level_j[l];
+        }
+        t
+    }
+
+    /// Outermost (backing store) level energy.
+    pub fn dram_j(&self) -> f64 {
+        self.level_j[self.num_levels as usize - 1]
+    }
+
     pub fn total(&self) -> f64 {
-        self.reg_j + self.sram_j + self.dram_j
+        let mut t = 0.0;
+        for l in 0..self.num_levels as usize {
+            t += self.level_j[l];
+        }
+        t
     }
 }
 
@@ -63,49 +118,65 @@ pub fn compute_energy(w: &ConvWorkload, cfg: &EnergyConfig) -> f64 {
         * 1e-12
 }
 
-/// Price one operand under a mapping view (the eq. 20–22 pattern with
-/// the Table-II constants) — the allocation-free kernel shared by
-/// [`conv_energy_into`] and the mapper's incremental re-pricer.
+/// Price one operand under a mapping view (the eq. 20–22 pattern walked
+/// over the operand's N-level residency chain) — the allocation-free
+/// kernel shared by [`conv_energy_into`] and the mapper's incremental
+/// re-pricer.
+///
+/// Per chain position the access pattern mirrors the paper's:
+///
+/// * read operands (input/stationary): the innermost level takes a write
+///   per fill (`(r^w + s^r)/RU` pattern), every intermediate level takes
+///   a read per inner fill plus a write per own fill, and the backing
+///   store takes a read per outermost fill;
+/// * the accumulated output swaps reads and writes.
 pub fn price_operand(
     spec: &OperandSpec,
     view: &MappingView,
     arch: &Architecture,
     cfg: &EnergyConfig,
 ) -> OperandEnergy {
-    let acc = operand_access_view(spec, view);
+    let hier = &arch.hier;
+    let f = operand_fills(spec, view, hier);
     let bits = spec.bits as f64;
-    let sram_r = arch.mem.read_pj(spec.sram, cfg);
-    let sram_w = arch.mem.write_pj(spec.sram, cfg);
-    let (reg_j, sram_j, dram_j) = match spec.role {
-        // eq. 20/21 pattern for read operands:
-        //   (r^w + s^r)/RU_reg  +  (s^w + m^r)/RU_sram
-        Role::Input | Role::Stationary => {
-            let mut reg_j = acc.reg_fills * bits * cfg.reg_write_pj;
-            if cfg.count_reg_reads {
-                reg_j += view.scheduled_total as f64 * bits * cfg.reg_read_pj;
+    let total = view.scheduled_total as f64;
+    let cl = f.chain_len as usize;
+    let mut out = OperandEnergy::zeroed(spec, hier.num_levels());
+    for i in 0..cl {
+        let l = f.chain[i] as usize;
+        let e = match spec.role {
+            Role::Input | Role::Stationary => {
+                if i == 0 {
+                    let mut e = f.fills[0] * bits * hier.write_pj(l, spec.sram, cfg);
+                    if cfg.count_reg_reads {
+                        e += total * bits * hier.read_pj(l, spec.sram, cfg);
+                    }
+                    e
+                } else if i < cl - 1 {
+                    f.fills[i - 1] * bits * hier.read_pj(l, spec.sram, cfg)
+                        + f.fills[i] * bits * hier.write_pj(l, spec.sram, cfg)
+                } else {
+                    f.fills[i - 1] * bits * hier.read_pj(l, spec.sram, cfg)
+                }
             }
-            let sram_j = acc.reg_fills * bits * sram_r + acc.sram_fills * bits * sram_w;
-            let dram_j = acc.sram_fills * bits * cfg.dram_read_pj;
-            (reg_j, sram_j, dram_j)
-        }
-        // Output pattern: (r^r + s^w)/RU_reg + (s^r + m^w)/RU_sram.
-        Role::Output => {
-            let mut reg_j = acc.reg_fills * bits * cfg.reg_read_pj;
-            if cfg.count_reg_reads {
-                reg_j += view.scheduled_total as f64 * bits * cfg.reg_write_pj;
+            Role::Output => {
+                if i == 0 {
+                    let mut e = f.fills[0] * bits * hier.read_pj(l, spec.sram, cfg);
+                    if cfg.count_reg_reads {
+                        e += total * bits * hier.write_pj(l, spec.sram, cfg);
+                    }
+                    e
+                } else if i < cl - 1 {
+                    f.fills[i - 1] * bits * hier.write_pj(l, spec.sram, cfg)
+                        + f.fills[i] * bits * hier.read_pj(l, spec.sram, cfg)
+                } else {
+                    f.fills[i - 1] * bits * hier.write_pj(l, spec.sram, cfg)
+                }
             }
-            let sram_j = acc.reg_fills * bits * sram_w + acc.sram_fills * bits * sram_r;
-            let dram_j = acc.sram_fills * bits * cfg.dram_write_pj;
-            (reg_j, sram_j, dram_j)
-        }
-    };
-    OperandEnergy {
-        tensor: spec.tensor,
-        role: spec.role,
-        reg_j: reg_j * 1e-12,
-        sram_j: sram_j * 1e-12,
-        dram_j: dram_j * 1e-12,
+        };
+        out.level_j[l] = e * 1e-12;
     }
+    out
 }
 
 /// Reusable per-workload state for the allocation-free kernel: the three
@@ -132,18 +203,15 @@ impl EvalScratch {
     /// energy).
     pub fn for_workload(w: &ConvWorkload, cfg: &EnergyConfig) -> EvalScratch {
         let specs = operand_specs(w);
-        let zero = |s: &OperandSpec| OperandEnergy {
-            tensor: s.tensor,
-            role: s.role,
-            reg_j: 0.0,
-            sram_j: 0.0,
-            dram_j: 0.0,
-        };
         EvalScratch {
             phase: w.phase,
             specs: [specs[0], specs[1], specs[2]],
             compute_j: compute_energy(w, cfg),
-            operands: [zero(&specs[0]), zero(&specs[1]), zero(&specs[2])],
+            operands: [
+                OperandEnergy::zeroed(&specs[0], 3),
+                OperandEnergy::zeroed(&specs[1], 3),
+                OperandEnergy::zeroed(&specs[2], 3),
+            ],
             cycles: 0,
             utilization: 0.0,
         }
@@ -182,10 +250,10 @@ impl EvalScratch {
 }
 
 /// Allocation-free evaluation kernel: price the scratch's workload under
-/// `view`, writing into `scratch`. Bit-identical to
-/// [`conv_energy_reference`] (enforced by the property suite in
-/// `tests/kernel_equivalence.rs`) while performing zero heap allocation —
-/// this is the innermost function of the DSE hot path.
+/// `view` on `arch`'s hierarchy, writing into `scratch`. Bit-identical to
+/// [`conv_energy_reference`] on the paper hierarchy (enforced by the
+/// property suite in `tests/kernel_equivalence.rs`) while performing zero
+/// heap allocation — this is the innermost function of the DSE hot path.
 pub fn conv_energy_into(
     view: &MappingView,
     arch: &Architecture,
@@ -214,9 +282,10 @@ pub fn conv_energy(
     scratch.to_conv_energy()
 }
 
-/// The pre-fast-path implementation of [`conv_energy`], kept verbatim as
-/// the oracle for the kernel-equivalence property tests and as the
-/// honest "before" baseline in `bench_dse_throughput`.
+/// The pre-refactor 3-level implementation of [`conv_energy`], kept
+/// verbatim as the oracle for the kernel-equivalence property tests and
+/// as the honest "before" baseline in `bench_dse_throughput`. Valid only
+/// for 3-level (paper-shaped) hierarchies and mappings.
 pub fn conv_energy_reference(
     w: &ConvWorkload,
     mapping: &Mapping,
@@ -226,8 +295,8 @@ pub fn conv_energy_reference(
     let mut operands = Vec::with_capacity(3);
     for (spec, acc) in workload_access(w, mapping) {
         let bits = spec.bits as f64;
-        let sram_r = arch.mem.read_pj(spec.sram, cfg);
-        let sram_w = arch.mem.write_pj(spec.sram, cfg);
+        let sram_r = arch.onchip_read_pj(spec.sram, cfg);
+        let sram_w = arch.onchip_write_pj(spec.sram, cfg);
         let (reg_j, sram_j, dram_j) = match spec.role {
             // eq. 20/21 pattern for read operands:
             //   (r^w + s^r)/RU_reg  +  (s^w + m^r)/RU_sram
@@ -251,13 +320,13 @@ pub fn conv_energy_reference(
                 (reg_j, sram_j, dram_j)
             }
         };
-        operands.push(OperandEnergy {
-            tensor: spec.tensor,
-            role: spec.role,
-            reg_j: reg_j * 1e-12,
-            sram_j: sram_j * 1e-12,
-            dram_j: dram_j * 1e-12,
-        });
+        operands.push(OperandEnergy::three_level(
+            spec.tensor,
+            spec.role,
+            reg_j * 1e-12,
+            sram_j * 1e-12,
+            dram_j * 1e-12,
+        ));
     }
     ConvEnergy {
         phase: w.phase,
@@ -292,11 +361,10 @@ impl UnitEnergy {
 /// and identifiable"), so this depends only on the workload and the
 /// technology constants — not on the dataflow.
 pub fn unit_energy(units: &UnitWork, arch: &Architecture, cfg: &EnergyConfig) -> UnitEnergy {
-    // Soma/grad state streams through the conv-output macros; price SRAM
-    // traffic at the V3-sized macro's energy.
-    let sram_rw =
-        0.5 * (arch.mem.read_pj(crate::arch::SramId::V3ConvFp, cfg)
-            + arch.mem.write_pj(crate::arch::SramId::V3ConvFp, cfg));
+    // Soma/grad state streams through the conv-output storage; price the
+    // on-chip traffic at the level that holds ConvFP in this hierarchy.
+    let v3 = crate::arch::SramId::V3ConvFp;
+    let sram_rw = 0.5 * (arch.onchip_read_pj(v3, cfg) + arch.onchip_write_pj(v3, cfg));
     UnitEnergy {
         soma_compute_j: units.soma_ops as f64 * cfg.soma_op_pj() * 1e-12,
         // Local traffic + the BPTT spill of (u_t, s_t, step mask) to DRAM.
@@ -401,7 +469,7 @@ pub fn total_overall_j(layers: &[LayerEnergy]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::{Architecture, ArrayScheme};
+    use crate::arch::{Architecture, ArrayScheme, HierarchySpec};
     use crate::model::SnnModel;
     use crate::workload::generate;
 
@@ -428,6 +496,54 @@ mod tests {
                 assert_eq!(wrapped, slow, "{} {:?}", fam.name(), w.phase);
             }
         }
+    }
+
+    #[test]
+    fn n_level_hierarchies_evaluate_and_split_by_level() {
+        let (wl, _, cfg) = paper_setup();
+        let four = Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer());
+        let unified = Architecture::with_hierarchy(HierarchySpec::unified_sram());
+        for arch in [&four, &unified] {
+            for fam in Family::ALL {
+                let le = layer_energy_for_family(&wl, fam, arch, &cfg);
+                assert!(le.overall_j().is_finite() && le.overall_j() > 0.0);
+                for ce in [&le.fp, &le.bp, &le.wg] {
+                    for o in &ce.operands {
+                        assert_eq!(
+                            o.num_levels as usize,
+                            arch.hier.num_levels(),
+                            "{} {}",
+                            arch.hier.name,
+                            o.tensor
+                        );
+                        // Per-level split sums to the total.
+                        let direct: f64 =
+                            o.level_j[..o.num_levels as usize].iter().sum();
+                        assert!((direct - o.total()).abs() <= 1e-18);
+                    }
+                }
+            }
+        }
+        // The spike-buffer level only ever charges energy to spike
+        // operands; FP's weight bypasses it.
+        let le = layer_energy_for_family(&wl, Family::AdvWs, &four, &cfg);
+        let spike = &le.fp.operands[0];
+        let weight = &le.fp.operands[1];
+        assert!(spike.level_j[1] > 0.0, "spike buffer unused by spikes");
+        assert_eq!(weight.level_j[1], 0.0, "weights must bypass the spike buffer");
+    }
+
+    #[test]
+    fn unified_sram_prices_above_dedicated_macros() {
+        // One big shared bank is pricier per access (size curve at the
+        // full 2.03 MB) than the paper's dedicated macros, so conv memory
+        // energy must rise while compute stays identical.
+        let (wl, paper, cfg) = paper_setup();
+        let unified = Architecture::with_hierarchy(HierarchySpec::unified_sram());
+        let a = layer_energy_for_family(&wl, Family::AdvWs, &paper, &cfg);
+        let b = layer_energy_for_family(&wl, Family::AdvWs, &unified, &cfg);
+        assert!(b.conv_mem_j() > a.conv_mem_j(), "{} !> {}", b.conv_mem_j(), a.conv_mem_j());
+        assert_eq!(a.compute_j(), b.compute_j());
     }
 
     #[test]

@@ -20,8 +20,18 @@
 //! coordinator, report generation and the benches — goes through one
 //! front door: [`session::Session`] with typed [`session::EvalRequest`] /
 //! [`session::EvalResult`] pairs (batched, cached, executed on a
-//! persistent worker pool). See `DESIGN.md` (repo root) for the Session
+//! persistent worker pool). Memory systems are data, not code: an
+//! [`arch::Architecture`] carries an N-level [`arch::HierarchySpec`]
+//! (the paper's Reg/SRAM/DRAM arrangement is the `paper_28nm` preset;
+//! custom hierarchies load from `configs/*.toml` via
+//! [`config::archfile`]). See `DESIGN.md` (repo root) for the Session
 //! API, its JSON schema, and the experiment index.
+
+// Index-parallel array math over fixed `[u64; 8]`/per-level arrays is
+// the style of the hot kernels here; iterator rewrites of those loops
+// obscure the dim/level indexing the comments reference. Builder-style
+// constructors legitimately take many scalar knobs.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod arch;
 pub mod compare;

@@ -19,7 +19,7 @@ use std::process::ExitCode;
 
 use eocas::arch::{ArchPool, Architecture};
 use eocas::bail;
-use eocas::config::EnergyConfig;
+use eocas::config::{archfile, EnergyConfig};
 use eocas::coordinator::{self, PipelineConfig};
 use eocas::dataflow::templates::Family;
 use eocas::dse::{self, DseConfig};
@@ -40,11 +40,15 @@ USAGE:
                [--out DIR] [--model paper|cifar100|tiny] [--sparsity PATH]
   eocas simulate [--model paper|cifar100|tiny]
                  [--dataflow advws|ws1|ws2|os|rs|mapper]
-                 [--activity X] [--config PATH] [--sparsity PATH] [--json]
+                 [--arch-file PATH] [--activity X] [--config PATH]
+                 [--sparsity PATH] [--json]
   eocas dse      [--samples N] [--threads N] [--model ...]
                  [--dataflow all|mapper|advws|ws1|ws2|os|rs]
+                 [--arch-file A.toml,B.toml,...]
                  (a family name sweeps that family only; `mapper` sweeps
-                  all five families PLUS the mapper optimum per arch)
+                  all five families PLUS the mapper optimum per arch;
+                  --arch-file replaces the paper pool with the listed
+                  declarative architectures — see configs/README.md)
   eocas train    [--steps N] [--lr X] [--seed N] [--log PATH]
   eocas pipeline [--steps N] [--out DIR] [--reuse] [--threads N]
 
@@ -163,6 +167,24 @@ fn energy_config(flags: &HashMap<String, String>) -> Result<EnergyConfig> {
     }
 }
 
+/// `--arch-file A.toml[,B.toml,...]`: load declarative architectures.
+fn arch_file_flag(flags: &HashMap<String, String>) -> Result<Option<Vec<Architecture>>> {
+    let Some(paths) = flags.get("arch-file") else {
+        return Ok(None);
+    };
+    let mut archs = Vec::new();
+    for p in paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        archs.push(
+            archfile::load_architecture(std::path::Path::new(p))
+                .map_err(|e| err!("arch file: {e}"))?,
+        );
+    }
+    if archs.is_empty() {
+        bail!("--arch-file lists no files");
+    }
+    Ok(Some(archs))
+}
+
 /// `--sparsity PATH` (a trainer run log), if given.
 fn sparsity_flag(flags: &HashMap<String, String>) -> Result<Option<SparsityProfile>> {
     flags
@@ -241,11 +263,15 @@ fn run(args: &[String]) -> Result<()> {
             let model = pick_model(&flags)?;
             let fam = pick_dataflow(flags.get("dataflow").map(|s| s.as_str()).unwrap_or("advws"))?;
             let activity = parse_num(&flags, "activity", cfg.nominal_activity)?;
+            let arch = match arch_file_flag(&flags)? {
+                None => Architecture::paper_default(),
+                Some(mut v) if v.len() == 1 => v.remove(0),
+                Some(v) => bail!("simulate takes one --arch-file, got {}", v.len()),
+            };
             let session = Session::builder().energy_config(cfg).build();
             // No --sparsity: leave the profile empty so --activity applies
             // to every layer (the request's default-activity path).
-            let mut req = EvalRequest::new(model.clone(), Architecture::paper_default(), fam)
-                .with_activity(activity);
+            let mut req = EvalRequest::new(model.clone(), arch, fam).with_activity(activity);
             if let Some(sp) = sparsity_flag(&flags)? {
                 req = req.with_sparsity(sp);
             }
@@ -293,9 +319,13 @@ fn run(args: &[String]) -> Result<()> {
                 Some("mapper") => dse_cfg.include_mapper = true,
                 Some(other) => dse_cfg.families = vec![pick_family(other)?],
             }
+            let pool = match arch_file_flag(&flags)? {
+                Some(candidates) => ArchPool { candidates },
+                None => ArchPool::paper_pool(),
+            };
             let session = Session::builder()
                 .energy_config(cfg)
-                .arch_pool(ArchPool::paper_pool())
+                .arch_pool(pool)
                 .threads(parse_num(&flags, "threads", 0usize)?)
                 .build();
             let start = std::time::Instant::now();
@@ -312,15 +342,16 @@ fn run(args: &[String]) -> Result<()> {
             })?;
             println!(
                 "optimum: {} + {} @ {:.3} uJ",
-                best.arch.array.label(),
+                best.arch.label(),
                 best.dataflow,
                 best.overall_j * 1e6
             );
             println!("pareto front (energy vs cycles):");
             for c in res.pareto() {
                 println!(
-                    "  {:>7} {:<12} {:>12.3} uJ {:>12} cycles",
+                    "  {:>7} [{}] {:<12} {:>12.3} uJ {:>12} cycles",
                     c.arch.array.label(),
+                    c.arch.hier.name,
                     c.dataflow,
                     c.overall_j * 1e6,
                     c.cycles

@@ -97,7 +97,7 @@ pub fn area_mm2(arch: &Architecture, am: &AreaModel) -> f64 {
     let macs = arch.array.macs() as f64;
     macs * am.mux_add_mm2
         + macs * am.mul_add_mm2
-        + (arch.mem.total_bytes() as f64 / 1e6) * am.sram_mm2_per_mb
+        + (arch.hier.onchip_bytes() as f64 / 1e6) * am.sram_mm2_per_mb
         + am.overhead_mm2
 }
 
@@ -107,7 +107,7 @@ pub fn fpga_resources(arch: &Architecture, fm: &FpgaModel) -> (u64, u64, u64, f6
     let luts = macs * fm.mux_add_luts + macs * fm.mul_add_luts + fm.overhead_luts;
     let ffs = macs * fm.mux_add_ffs + macs * fm.mul_add_ffs + fm.overhead_ffs;
     let dsps = macs * fm.dsp_per_mul + fm.overhead_dsps;
-    let mem_mb = arch.mem.total_bytes() as f64 / 1e6;
+    let mem_mb = arch.hier.onchip_bytes() as f64 / 1e6;
     (luts, ffs, dsps, mem_mb)
 }
 
@@ -144,7 +144,7 @@ pub fn chip_metrics(
         achieved_tops,
         tops_per_w: if power_w > 0.0 { peak_tops / power_w } else { 0.0 },
         area_mm2: area_mm2(arch, am),
-        memory_mb: arch.mem.total_bytes() as f64 / 1e6,
+        memory_mb: arch.hier.onchip_bytes() as f64 / 1e6,
         utilization: util_sum / n_convs,
     }
 }

@@ -177,7 +177,7 @@ pub fn table3_array_schemes(ctx: &ReportCtx) -> Table {
     for (i, (label, conv, overall)) in rows.iter().enumerate() {
         t.add_row(vec![
             (i + 1).to_string(),
-            crate::util::fmt_bytes(ctx.arch.mem.total_bytes()),
+            crate::util::fmt_bytes(ctx.arch.hier.onchip_bytes()),
             "256".into(),
             label.clone(),
             fmt_uj(*conv),
@@ -412,17 +412,18 @@ pub fn fig6_dataflow_breakdown(ctx: &ReportCtx) -> String {
             &items,
             40,
         ));
-        // Per-operand detail (reg/sram/dram split).
+        // Per-operand detail (one column per hierarchy level).
         for (phase, pe) in [("FP", &le.fp), ("BP", &le.bp), ("WG", &le.wg)] {
             for o in &pe.operands {
-                out.push_str(&format!(
-                    "    {:>3} {:<9} reg {:>9} sram {:>9} dram {:>9} (uJ)\n",
-                    phase,
-                    o.tensor,
-                    fmt_uj(o.reg_j),
-                    fmt_uj(o.sram_j),
-                    fmt_uj(o.dram_j),
-                ));
+                out.push_str(&format!("    {:>3} {:<9}", phase, o.tensor));
+                for (name, j) in &o.levels {
+                    out.push_str(&format!(
+                        " {} {:>9}",
+                        name.to_lowercase(),
+                        fmt_uj(*j)
+                    ));
+                }
+                out.push_str(" (uJ)\n");
             }
         }
         out.push('\n');

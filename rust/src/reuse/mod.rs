@@ -7,8 +7,21 @@
 //! spatial multicast / adder-tree-reduction factors of irrelevant array
 //! dimensions. This is the analytical model the paper credits to ZigZag
 //! [9] and specializes to SNN training's operand set.
+//!
+//! Two implementations live here:
+//!
+//! * [`operand_fills`] — the production N-level form. An operand's
+//!   storage *chain* is the subsequence of hierarchy levels it resides at
+//!   ([`crate::arch::LevelSpec::residency`]; bypassed levels are
+//!   transparent), and a fill count is computed at each boundary between
+//!   consecutive chain levels. Halo (`R`/`S`) irrelevance switches on at
+//!   the first boundary above a resident line-buffer level.
+//! * [`operand_access`] — the original closed 3-level form
+//!   (reg/SRAM/DRAM), kept verbatim as the equivalence oracle for the
+//!   paper hierarchy (`conv_energy_reference`, the odometer cross-check
+//!   in [`crate::sim`], and the bit-identity suites).
 
-use crate::arch::SramId;
+use crate::arch::{HierarchySpec, SramId, MAX_LEVELS};
 use crate::dataflow::{Mapping, MappingView};
 use crate::workload::{ConvWorkload, Dim, Phase};
 
@@ -17,7 +30,8 @@ use crate::workload::{ConvWorkload, Dim, Phase};
 pub enum Role {
     /// The streamed, activation-like operand (spikes in FP/WG, `∇u^{l+1}`
     /// in BP). Enjoys sliding-window (halo) reuse once rows are buffered
-    /// in SRAM, and spatial multicast across output-channel columns.
+    /// in a line buffer, and spatial multicast across output-channel
+    /// columns.
     Input,
     /// The stationary, weight-like operand (`w`, `w′`, or `∇u^l` in WG —
     /// the operand indexed by the dims that are *not* accumulated).
@@ -32,11 +46,13 @@ pub struct OperandSpec {
     pub role: Role,
     pub tensor: &'static str,
     pub bits: u32,
+    /// The Table-II variable this operand binds to (drives per-level
+    /// residency, capacity and energy lookups in the hierarchy).
     pub sram: SramId,
     /// Base irrelevant-dimension mask (indexed by [`Dim::idx`]).
     pub irr: [bool; 8],
-    /// Sliding-window halo reuse: adds `R`,`S` irrelevance at the SRAM
-    /// boundary and spatially.
+    /// Sliding-window halo reuse: adds `R`,`S` irrelevance above the
+    /// line-buffer level and spatially.
     pub halo: bool,
 }
 
@@ -137,7 +153,8 @@ pub fn operand_specs(w: &ConvWorkload) -> [OperandSpec; 3] {
     }
 }
 
-/// Reuse factors and access counts of one operand under one mapping.
+/// Reuse factors and access counts of one operand under one mapping —
+/// the closed 3-level (reg/SRAM/DRAM) form.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OperandAccess {
     /// Reuse factor at the register boundary (Table I "Registers" column;
@@ -152,7 +169,8 @@ pub struct OperandAccess {
     pub sram_fills: f64,
 }
 
-/// Whether `d` is irrelevant to `spec` at the given boundary.
+/// Whether `d` is irrelevant to `spec` at the given boundary (3-level
+/// classification: halo dims turn irrelevant at the SRAM boundary).
 fn irr_at(spec: &OperandSpec, d: Dim, sram_boundary: bool, halo_reuse: bool) -> bool {
     if spec.irr[d.idx()] {
         return true;
@@ -191,24 +209,27 @@ pub(crate) fn spatial_reuse(spec: &OperandSpec, m: &Mapping) -> f64 {
     f
 }
 
-/// Compute access counts for one operand.
+/// Compute access counts for one operand — the closed 3-level oracle
+/// (`levels[0]` = registers, `levels[1]` = SRAM). N-level mappings go
+/// through [`operand_fills`].
 pub fn operand_access(spec: &OperandSpec, m: &Mapping) -> OperandAccess {
+    debug_assert_eq!(m.num_levels(), 3, "operand_access is the 3-level closed form");
     let total = m.scheduled_total() as f64;
     let sp = spatial_reuse(spec, m);
     let mut ru_reg = sp;
     for d in Dim::ALL {
         if irr_at(spec, d, false, m.halo_reuse) {
-            ru_reg *= m.reg[d.idx()] as f64;
+            ru_reg *= m.levels[0][d.idx()] as f64;
         }
     }
     let mut ru_sram = ru_reg;
     for d in Dim::ALL {
         if irr_at(spec, d, true, m.halo_reuse) {
-            ru_sram *= m.sram[d.idx()] as f64;
+            ru_sram *= m.levels[1][d.idx()] as f64;
             if !irr_at(spec, d, false, m.halo_reuse) {
                 // Halo dims start contributing at the SRAM boundary; their
                 // register-level factor also counts there.
-                ru_sram *= m.reg[d.idx()] as f64;
+                ru_sram *= m.levels[0][d.idx()] as f64;
             }
         }
     }
@@ -239,42 +260,88 @@ pub(crate) fn spatial_reuse_view(spec: &OperandSpec, v: &MappingView) -> f64 {
     f
 }
 
-/// [`operand_access`] over a [`MappingView`] — the allocation-free fast
-/// path. Applies the identical per-boundary classification (`irr_at`), so
-/// the resulting counts are bit-identical to the `Mapping` path
-/// (property-tested in `tests/kernel_equivalence.rs`).
-pub fn operand_access_view(spec: &OperandSpec, v: &MappingView) -> OperandAccess {
-    let total = v.scheduled_total as f64;
-    let sp = spatial_reuse_view(spec, v);
-    let mut ru_reg = sp;
-    for d in Dim::ALL {
-        if irr_at(spec, d, false, v.halo_reuse) {
-            ru_reg *= v.reg[d.idx()] as f64;
-        }
-    }
-    let mut ru_sram = ru_reg;
-    for d in Dim::ALL {
-        if irr_at(spec, d, true, v.halo_reuse) {
-            ru_sram *= v.sram[d.idx()] as f64;
-            if !irr_at(spec, d, false, v.halo_reuse) {
-                ru_sram *= v.reg[d.idx()] as f64;
-            }
-        }
-    }
-    OperandAccess {
-        ru_reg,
-        ru_sram,
-        reg_fills: total / ru_reg,
-        sram_fills: total / ru_sram,
+/// Per-boundary reuse factors and fill counts of one operand under an
+/// N-level hierarchy — the production form the allocation-free energy
+/// kernel prices. Entry `i` describes the transfer boundary between the
+/// operand's chain levels `chain[i]` and `chain[i+1]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperandFills {
+    /// Hierarchy level index of each chain entry (resident levels only,
+    /// innermost first).
+    pub chain: [u8; MAX_LEVELS],
+    pub chain_len: u8,
+    /// Reuse factor at boundary `i` (valid for `i < chain_len - 1`).
+    pub ru: [f64; MAX_LEVELS],
+    /// `scheduled_total / ru[i]`: elements crossing boundary `i`.
+    pub fills: [f64; MAX_LEVELS],
+}
+
+impl OperandFills {
+    /// Number of transfer boundaries (`chain_len - 1`).
+    pub fn boundaries(&self) -> usize {
+        self.chain_len as usize - 1
     }
 }
 
-/// Bitmask (by [`Dim::idx`]) of the dims whose `(reg, sram)` tile factors
-/// can change this operand's reuse factors — i.e. the dims irrelevant to
-/// it at either boundary. The mapper's incremental re-pricer recomputes
-/// an operand only when the changed dim is in this mask (a relevant dim
-/// alters neither `ru_reg` nor `ru_sram`, and the scheduled total is
-/// checked separately).
+/// Access counts of one operand under `hier` — generalizes
+/// [`operand_access`] to N levels with per-level residency/bypass. For
+/// the paper's 3-level hierarchy the two agree bit-for-bit (all factor
+/// products are exact integers in `f64`; pinned by the test suite).
+pub fn operand_fills(
+    spec: &OperandSpec,
+    v: &MappingView,
+    hier: &HierarchySpec,
+) -> OperandFills {
+    let nl = v.num_levels as usize;
+    debug_assert_eq!(nl, hier.num_levels(), "mapping/hierarchy level mismatch");
+    let total = v.scheduled_total as f64;
+    let sp = spatial_reuse_view(spec, v);
+    let mut out = OperandFills {
+        chain: [0; MAX_LEVELS],
+        chain_len: 0,
+        ru: [1.0; MAX_LEVELS],
+        fills: [0.0; MAX_LEVELS],
+    };
+    for l in 0..nl {
+        if hier.resident(l, spec.sram) {
+            out.chain[out.chain_len as usize] = l as u8;
+            out.chain_len += 1;
+        }
+    }
+    for b in 0..out.boundaries() {
+        let below = out.chain[b] as usize;
+        let upper = out.chain[b + 1] as usize;
+        // Halo turns irrelevant once the operand has a line buffer at a
+        // resident level at or below this boundary.
+        let halo_here =
+            spec.halo && v.halo_reuse && hier.halo_buffered_at(spec.sram, below);
+        let mut ru = sp;
+        for d in Dim::ALL {
+            let i = d.idx();
+            let irr = spec.irr[i] || (halo_here && matches!(d, Dim::R | Dim::S));
+            if !irr {
+                continue;
+            }
+            // Every temporal loop strictly below the upper level counts,
+            // including loops at levels the operand bypasses.
+            for lv in v.levels.iter().take(upper) {
+                ru *= lv[i] as f64;
+            }
+        }
+        out.ru[b] = ru;
+        out.fills[b] = total / ru;
+    }
+    out
+}
+
+/// Bitmask (by [`Dim::idx`]) of the dims whose tile factors can change
+/// this operand's reuse factors — i.e. the dims irrelevant to it at some
+/// boundary. The mapper's incremental re-pricer recomputes an operand
+/// only when the changed dim is in this mask (a relevant dim alters no
+/// `ru`, and the scheduled total is checked separately). The mask is
+/// hierarchy-independent and conservative: halo dims are included
+/// whenever the schedule has halo reuse, which covers every boundary any
+/// hierarchy can expose.
 pub fn affected_dims_mask(spec: &OperandSpec, halo_reuse: bool) -> u8 {
     let mut mask = 0u8;
     for d in Dim::ALL {
@@ -285,8 +352,8 @@ pub fn affected_dims_mask(spec: &OperandSpec, halo_reuse: bool) -> u8 {
     mask
 }
 
-/// All three operands' access counts for a workload under a mapping, in
-/// (input, stationary, output) order.
+/// All three operands' access counts for a workload under a 3-level
+/// mapping, in (input, stationary, output) order.
 pub fn workload_access(w: &ConvWorkload, m: &Mapping) -> [(OperandSpec, OperandAccess); 3] {
     let specs = operand_specs(w);
     specs.map(|s| {
@@ -321,7 +388,7 @@ pub fn ru_table(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::ArrayScheme;
+    use crate::arch::{ArrayScheme, HierarchySpec};
     use crate::model::SnnModel;
     use crate::workload::{generate, ConvDims};
 
@@ -421,15 +488,57 @@ mod tests {
     }
 
     #[test]
-    fn view_access_is_bit_identical_to_mapping_access() {
+    fn n_level_fills_are_bit_identical_to_closed_form_on_paper_hierarchy() {
         let w = fp_workload();
         let m = ws_mapping(&w.dims);
         let v = m.view();
+        let hier = HierarchySpec::paper_28nm();
         for spec in operand_specs(&w) {
             let a = operand_access(&spec, &m);
-            let b = operand_access_view(&spec, &v);
-            assert_eq!(a, b, "{}", spec.tensor);
+            let f = operand_fills(&spec, &v, &hier);
+            assert_eq!(f.chain_len, 3, "{}", spec.tensor);
+            assert_eq!(f.ru[0].to_bits(), a.ru_reg.to_bits(), "{}", spec.tensor);
+            assert_eq!(f.ru[1].to_bits(), a.ru_sram.to_bits(), "{}", spec.tensor);
+            assert_eq!(f.fills[0].to_bits(), a.reg_fills.to_bits(), "{}", spec.tensor);
+            assert_eq!(f.fills[1].to_bits(), a.sram_fills.to_bits(), "{}", spec.tensor);
         }
+    }
+
+    #[test]
+    fn bypassed_level_is_transparent() {
+        // In the 4-level spike-buffer hierarchy, the weight operand
+        // bypasses level 1: its chain is Reg -> SRAM -> DRAM and its
+        // boundary RUs include every temporal loop below the upper level,
+        // so they match the paper hierarchy whenever level 1 has no
+        // temporal factors.
+        let w = fp_workload();
+        let m3 = ws_mapping(&w.dims);
+        let four = HierarchySpec::four_level_spike_buffer();
+        // Lift the 3-level mapping: [reg, ones, sram] + derived store.
+        let m4 = Mapping::derive_n(
+            "lifted",
+            &w.dims,
+            m3.spatial_rows.clone(),
+            m3.spatial_cols.clone(),
+            vec![m3.levels[0], [1u64; 8], m3.levels[1]],
+        );
+        let specs = operand_specs(&w);
+        let weight = &specs[1];
+        let spike = &specs[0];
+        let f3 = operand_access(weight, &m3);
+        let f4 = operand_fills(weight, &m4.view(), &four);
+        assert_eq!(f4.chain_len, 3, "weight bypasses the spike buffer");
+        assert_eq!(f4.ru[0], f3.ru_reg);
+        assert_eq!(f4.ru[1], f3.ru_sram);
+        // The spike operand is resident at all four levels.
+        let fs = operand_fills(spike, &m4.view(), &four);
+        assert_eq!(fs.chain_len, 4);
+        // The empty spike-buffer level adds a boundary but no reuse
+        // (its temporal factors are all 1) ...
+        assert_eq!(fs.ru[1], fs.ru[0]);
+        // ... while the R/S factors at the main SRAM level surface as
+        // halo reuse at the outermost boundary (×9 for a 3x3 kernel).
+        assert!((fs.ru[2] / fs.ru[1] - 9.0).abs() < 1e-9, "{:?}", fs);
     }
 
     #[test]

@@ -1,15 +1,24 @@
 //! JSON encoding of [`EvalRequest`]/[`EvalResult`] — the stable wire
 //! schema (`DESIGN.md` documents it; `SCHEMA_VERSION` gates evolution).
 //!
+//! Schema v2 carries the full N-level hierarchy on architectures and a
+//! per-level energy list on operand breakdowns. v1 documents (the fixed
+//! Reg/SRAM/DRAM shape: an eight-macro `mem` list, `reg_j`/`sram_j`/
+//! `dram_j` operand fields) are still parsed and mapped onto the
+//! equivalent 3-level hierarchy; output is always v2.
+//!
 //! No `serde` offline; encodings are hand-rolled over
 //! [`crate::util::json::Json`], whose object keys are sorted so `dumps`
 //! output is canonical and byte-stable for identical values.
 
 use super::{
     Dataflow, EvalOptions, EvalRequest, EvalResult, LayerBreakdown, OperandBreakdown,
-    PhaseEnergy, SCHEMA_VERSION,
+    PhaseEnergy, MIN_SCHEMA_VERSION, SCHEMA_VERSION,
 };
-use crate::arch::{Architecture, ArrayScheme, MemoryPool, SramId, SramMacro};
+use crate::arch::{
+    Architecture, ArrayScheme, HierarchySpec, LevelCapacity, LevelEnergy, LevelSpec,
+    MemoryPool, SramId, SramMacro,
+};
 use crate::dataflow::templates::Family;
 use crate::err;
 use crate::model::{LayerSpec, SnnModel};
@@ -38,6 +47,13 @@ fn uint(j: &Json, k: &str) -> Result<u64> {
         return Err(err!("key `{k}` is not an exact unsigned integer ({v})"));
     }
     Ok(v as u64)
+}
+
+/// [`uint`] restricted to u32 range — geometry and width fields must
+/// error on overflow, never wrap modulo 2^32.
+fn uint32(j: &Json, k: &str) -> Result<u32> {
+    let v = uint(j, k)?;
+    u32::try_from(v).map_err(|_| err!("key `{k}` = {v} exceeds u32"))
 }
 
 fn text(j: &Json, k: &str) -> Result<String> {
@@ -111,26 +127,28 @@ pub fn model_from_json(j: &Json) -> Result<SnnModel> {
         name: text(j, "name")?,
         input: (input[0] as u32, input[1] as u32, input[2] as u32),
         layers,
-        timesteps: uint(j, "timesteps")? as u32,
-        batch: uint(j, "batch")? as u32,
+        timesteps: uint32(j, "timesteps")?,
+        batch: uint32(j, "batch")?,
     })
 }
 
 fn layer_from_json(j: &Json) -> Result<LayerSpec> {
     match text(j, "type")?.as_str() {
         "conv" => Ok(LayerSpec::Conv {
-            out_channels: uint(j, "out_channels")? as u32,
-            kernel: uint(j, "kernel")? as u32,
-            stride: uint(j, "stride")? as u32,
-            padding: uint(j, "padding")? as u32,
+            out_channels: uint32(j, "out_channels")?,
+            kernel: uint32(j, "kernel")?,
+            stride: uint32(j, "stride")?,
+            padding: uint32(j, "padding")?,
         }),
         "avgpool2" => Ok(LayerSpec::AvgPool2),
-        "linear" => Ok(LayerSpec::Linear { out_features: uint(j, "out_features")? as u32 }),
+        "linear" => Ok(LayerSpec::Linear { out_features: uint32(j, "out_features")? }),
         other => Err(err!("unknown layer type `{other}`")),
     }
 }
 
-fn sram_key(id: SramId) -> &'static str {
+/// Stable lowercase key of a Table-II variable (arch files, JSON,
+/// residency lists).
+pub fn var_key(id: SramId) -> &'static str {
     match id {
         SramId::V1Spike => "v1_spike",
         SramId::V2Weight => "v2_weight",
@@ -143,11 +161,150 @@ fn sram_key(id: SramId) -> &'static str {
     }
 }
 
-fn sram_from_key(s: &str) -> Result<SramId> {
+pub fn var_from_key(s: &str) -> Result<SramId> {
     SramId::ALL
         .into_iter()
-        .find(|&id| sram_key(id) == s)
-        .ok_or_else(|| err!("unknown SRAM macro id `{s}`"))
+        .find(|&id| var_key(id) == s)
+        .ok_or_else(|| err!("unknown variable id `{s}`"))
+}
+
+fn level_to_json(l: &LevelSpec) -> Json {
+    let mut j = Json::obj();
+    j.set("name", Json::Str(l.name.clone()))
+        .set("line_buffer", Json::Bool(l.line_buffer))
+        .set("word_bits", Json::Num(l.word_bits as f64));
+    match l.energy {
+        LevelEnergy::RegFile => {
+            j.set("energy", Json::Str("regfile".into()));
+        }
+        LevelEnergy::SramCurve => {
+            j.set("energy", Json::Str("sram".into()));
+        }
+        LevelEnergy::Dram => {
+            j.set("energy", Json::Str("dram".into()));
+        }
+        LevelEnergy::Explicit { read_pj, write_pj } => {
+            let mut e = Json::obj();
+            e.set("read_pj_per_bit", Json::Num(read_pj))
+                .set("write_pj_per_bit", Json::Num(write_pj));
+            j.set("energy", e);
+        }
+    }
+    match &l.capacity {
+        LevelCapacity::Unbounded => {
+            j.set("capacity", Json::Null);
+        }
+        LevelCapacity::Shared { bytes } => {
+            let mut c = Json::obj();
+            c.set("shared_bytes", Json::Num(*bytes as f64));
+            j.set("capacity", c);
+        }
+        LevelCapacity::PerVar(pool) => {
+            let macros = pool
+                .srams
+                .iter()
+                .map(|m| {
+                    let mut mj = Json::obj();
+                    mj.set("id", Json::Str(var_key(m.id).into()))
+                        .set("bytes", Json::Num(m.bytes as f64))
+                        .set("word_bits", Json::Num(m.word_bits as f64));
+                    mj
+                })
+                .collect();
+            let mut c = Json::obj();
+            c.set("macros", Json::Arr(macros));
+            j.set("capacity", c);
+        }
+    }
+    if l.residency == [true; 8] {
+        j.set("residency", Json::Str("all".into()));
+    } else {
+        let vars = SramId::ALL
+            .into_iter()
+            .filter(|&v| l.residency[v.idx()])
+            .map(|v| Json::Str(var_key(v).into()))
+            .collect();
+        j.set("residency", Json::Arr(vars));
+    }
+    j
+}
+
+fn level_from_json(j: &Json) -> Result<LevelSpec> {
+    let energy = match get(j, "energy")? {
+        Json::Str(s) => match s.as_str() {
+            "regfile" => LevelEnergy::RegFile,
+            "sram" => LevelEnergy::SramCurve,
+            "dram" => LevelEnergy::Dram,
+            other => return Err(err!("unknown level energy rule `{other}`")),
+        },
+        obj => LevelEnergy::Explicit {
+            read_pj: num(obj, "read_pj_per_bit")?,
+            write_pj: num(obj, "write_pj_per_bit")?,
+        },
+    };
+    let capacity = match get(j, "capacity")? {
+        Json::Null => LevelCapacity::Unbounded,
+        c => {
+            if c.get("shared_bytes").is_some() {
+                LevelCapacity::Shared { bytes: uint(c, "shared_bytes")? }
+            } else {
+                let mut srams = arr(c, "macros")?
+                    .iter()
+                    .map(|m| {
+                        Ok(SramMacro {
+                            id: var_from_key(&text(m, "id")?)?,
+                            bytes: uint(m, "bytes")?,
+                            word_bits: uint32(m, "word_bits")?,
+                        })
+                    })
+                    .collect::<Result<Vec<SramMacro>>>()?;
+                // Canonical Table-II order regardless of document order,
+                // so logically identical architectures compare equal and
+                // share one cache fingerprint.
+                srams.sort_by_key(|m| m.id.idx());
+                LevelCapacity::PerVar(MemoryPool { srams })
+            }
+        }
+    };
+    let residency = match get(j, "residency")? {
+        Json::Str(s) if s == "all" => [true; 8],
+        Json::Arr(vars) => {
+            let mut r = [false; 8];
+            for v in vars {
+                let s = v.as_str().ok_or_else(|| err!("residency entry is not a string"))?;
+                r[var_from_key(s)?.idx()] = true;
+            }
+            r
+        }
+        other => return Err(err!("bad residency value {other:?}")),
+    };
+    Ok(LevelSpec {
+        name: text(j, "name")?,
+        energy,
+        capacity,
+        residency,
+        line_buffer: get(j, "line_buffer")?
+            .as_bool()
+            .ok_or_else(|| err!("`line_buffer` is not a bool"))?,
+        word_bits: uint32(j, "word_bits")?,
+    })
+}
+
+pub fn hierarchy_to_json(h: &HierarchySpec) -> Json {
+    let mut j = Json::obj();
+    j.set("name", Json::Str(h.name.clone()))
+        .set("levels", Json::Arr(h.levels.iter().map(level_to_json).collect()));
+    j
+}
+
+pub fn hierarchy_from_json(j: &Json) -> Result<HierarchySpec> {
+    let levels = arr(j, "levels")?
+        .iter()
+        .map(level_from_json)
+        .collect::<Result<Vec<LevelSpec>>>()?;
+    let h = HierarchySpec { name: text(j, "name")?, levels };
+    h.validate().map_err(|e| err!("{e}"))?;
+    Ok(h)
 }
 
 pub fn arch_to_json(a: &Architecture) -> Json {
@@ -155,53 +312,53 @@ pub fn arch_to_json(a: &Architecture) -> Json {
     array
         .set("rows", Json::Num(a.array.rows as f64))
         .set("cols", Json::Num(a.array.cols as f64));
-    let mem = a
-        .mem
-        .srams
-        .iter()
-        .map(|m| {
-            let mut j = Json::obj();
-            j.set("id", Json::Str(sram_key(m.id).into()))
-                .set("bytes", Json::Num(m.bytes as f64))
-                .set("word_bits", Json::Num(m.word_bits as f64));
-            j
-        })
-        .collect();
     let mut j = Json::obj();
     j.set("array", array)
-        .set("mem", Json::Arr(mem))
+        .set("hierarchy", hierarchy_to_json(&a.hier))
         .set("pe_reg_bits", Json::Num(a.pe_reg_bits as f64));
     j
 }
 
 pub fn arch_from_json(j: &Json) -> Result<Architecture> {
     let array = get(j, "array")?;
-    let srams = arr(j, "mem")?
-        .iter()
-        .map(|m| {
-            Ok(SramMacro {
-                id: sram_from_key(&text(m, "id")?)?,
-                bytes: uint(m, "bytes")?,
-                word_bits: uint(m, "word_bits")? as u32,
-            })
-        })
-        .collect::<Result<Vec<SramMacro>>>()?;
     // Semantic validation: downstream template/energy code assumes a
-    // non-degenerate array and a complete Table-II macro set (missing
-    // macros would panic in `MemoryPool::get`).
-    let (rows, cols) = (uint(array, "rows")? as u32, uint(array, "cols")? as u32);
+    // non-degenerate array.
+    let (rows, cols) = (uint32(array, "rows")?, uint32(array, "cols")?);
     if rows == 0 || cols == 0 {
         return Err(err!("degenerate array {rows}x{cols}"));
     }
-    for id in SramId::ALL {
-        if !srams.iter().any(|m| m.id == id) {
-            return Err(err!("memory pool is missing macro `{}`", sram_key(id)));
+    let hier = if let Some(h) = j.get("hierarchy") {
+        hierarchy_from_json(h)?
+    } else {
+        // v1 compatibility: a flat `mem` macro list means the paper's
+        // 3-level Reg/SRAM/DRAM arrangement with these macros.
+        let mut srams = arr(j, "mem")?
+            .iter()
+            .map(|m| {
+                Ok(SramMacro {
+                    id: var_from_key(&text(m, "id")?)?,
+                    bytes: uint(m, "bytes")?,
+                    word_bits: uint32(m, "word_bits")?,
+                })
+            })
+            .collect::<Result<Vec<SramMacro>>>()?;
+        // Canonical order (see level_from_json): document order must not
+        // leak into equality or cache fingerprints.
+        srams.sort_by_key(|m| m.id.idx());
+        for id in SramId::ALL {
+            if !srams.iter().any(|m| m.id == id) {
+                return Err(err!("memory pool is missing macro `{}`", var_key(id)));
+            }
         }
-    }
+        let mut h = HierarchySpec::paper_28nm();
+        h.levels[1].capacity = LevelCapacity::PerVar(MemoryPool { srams });
+        h.validate().map_err(|e| err!("{e}"))?;
+        h
+    };
     Ok(Architecture {
         array: ArrayScheme::new(rows, cols),
-        mem: MemoryPool { srams },
-        pe_reg_bits: uint(j, "pe_reg_bits")? as u32,
+        hier,
+        pe_reg_bits: uint32(j, "pe_reg_bits")?,
     })
 }
 
@@ -316,12 +473,15 @@ impl EvalRequest {
     }
 }
 
-fn check_schema(j: &Json) -> Result<()> {
+fn check_schema(j: &Json) -> Result<u32> {
     let schema = uint(j, "schema")? as u32;
-    if schema != SCHEMA_VERSION {
-        return Err(err!("schema version {schema} unsupported (expected {SCHEMA_VERSION})"));
+    if !(MIN_SCHEMA_VERSION..=SCHEMA_VERSION).contains(&schema) {
+        return Err(err!(
+            "schema version {schema} unsupported (accepted: \
+             {MIN_SCHEMA_VERSION}..={SCHEMA_VERSION})"
+        ));
     }
-    Ok(())
+    Ok(schema)
 }
 
 // ---------------------------------------------------------------------------
@@ -329,21 +489,36 @@ fn check_schema(j: &Json) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn operand_to_json(o: &OperandBreakdown) -> Json {
+    let levels = o
+        .levels
+        .iter()
+        .map(|(name, j)| {
+            let mut l = Json::obj();
+            l.set("level", Json::Str(name.clone())).set("j", Json::Num(*j));
+            l
+        })
+        .collect();
     let mut j = Json::obj();
     j.set("tensor", Json::Str(o.tensor.clone()))
-        .set("reg_j", Json::Num(o.reg_j))
-        .set("sram_j", Json::Num(o.sram_j))
-        .set("dram_j", Json::Num(o.dram_j));
+        .set("levels", Json::Arr(levels));
     j
 }
 
 fn operand_from_json(j: &Json) -> Result<OperandBreakdown> {
-    Ok(OperandBreakdown {
-        tensor: text(j, "tensor")?,
-        reg_j: num(j, "reg_j")?,
-        sram_j: num(j, "sram_j")?,
-        dram_j: num(j, "dram_j")?,
-    })
+    let levels = if j.get("levels").is_some() {
+        arr(j, "levels")?
+            .iter()
+            .map(|l| Ok((text(l, "level")?, num(l, "j")?)))
+            .collect::<Result<Vec<(String, f64)>>>()?
+    } else {
+        // v1 compatibility: the fixed 3-level split.
+        vec![
+            ("Reg".to_string(), num(j, "reg_j")?),
+            ("SRAM".to_string(), num(j, "sram_j")?),
+            ("DRAM".to_string(), num(j, "dram_j")?),
+        ]
+    };
+    Ok(OperandBreakdown { tensor: text(j, "tensor")?, levels })
 }
 
 fn phase_to_json(p: &PhaseEnergy) -> Json {
@@ -432,7 +607,7 @@ impl EvalResult {
             .set("compute_j", Json::Num(self.compute_j))
             .set("cycles", Json::Num(self.cycles as f64));
         let mut j = Json::obj();
-        j.set("schema", Json::Num(self.schema as f64))
+        j.set("schema", Json::Num(SCHEMA_VERSION as f64))
             .set("model", Json::Str(self.model.clone()))
             .set("arch", Json::Str(self.arch.clone()))
             .set("dataflow", Json::Str(self.dataflow.clone()))
@@ -450,7 +625,8 @@ impl EvalResult {
         check_schema(j)?;
         let totals = get(j, "totals")?;
         Ok(EvalResult {
-            schema: uint(j, "schema")? as u32,
+            // Results always re-serialize at the current schema.
+            schema: SCHEMA_VERSION,
             model: text(j, "model")?,
             arch: text(j, "arch")?,
             dataflow: text(j, "dataflow")?,
@@ -493,9 +669,59 @@ mod tests {
 
     #[test]
     fn arch_round_trips() {
-        let a = Architecture::paper_default();
-        let back = arch_from_json(&Json::parse(&arch_to_json(&a).dumps()).unwrap()).unwrap();
-        assert_eq!(a, back);
+        for a in [
+            Architecture::paper_default(),
+            Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+            Architecture::with_hierarchy(HierarchySpec::unified_sram()),
+        ] {
+            let back =
+                arch_from_json(&Json::parse(&arch_to_json(&a).dumps()).unwrap()).unwrap();
+            assert_eq!(a, back);
+        }
+    }
+
+    #[test]
+    fn v1_arch_documents_still_parse() {
+        // A schema-1 architecture: flat `mem` macro list, no hierarchy.
+        let v1 = r#"{
+            "array": {"cols": 16, "rows": 16},
+            "mem": [
+                {"bytes": 32768, "id": "v1_spike", "word_bits": 1},
+                {"bytes": 229376, "id": "v2_weight", "word_bits": 16},
+                {"bytes": 393216, "id": "v3_conv_fp", "word_bits": 16},
+                {"bytes": 393216, "id": "v4_delta_u", "word_bits": 16},
+                {"bytes": 262144, "id": "v5_weight_t", "word_bits": 16},
+                {"bytes": 393216, "id": "v6_conv_bp", "word_bits": 16},
+                {"bytes": 32768, "id": "v7_spike_out", "word_bits": 1},
+                {"bytes": 294912, "id": "v8_delta_w", "word_bits": 16}
+            ],
+            "pe_reg_bits": 64
+        }"#;
+        let a = arch_from_json(&Json::parse(v1).unwrap()).unwrap();
+        assert_eq!(a, Architecture::paper_default());
+        // Document order is not semantic: a shuffled macro list parses
+        // into the same canonical architecture (and thus the same cache
+        // fingerprint).
+        let shuffled = v1.replacen(
+            r#"{"bytes": 32768, "id": "v1_spike", "word_bits": 1},
+                {"bytes": 229376, "id": "v2_weight", "word_bits": 16},"#,
+            r#"{"bytes": 229376, "id": "v2_weight", "word_bits": 16},
+                {"bytes": 32768, "id": "v1_spike", "word_bits": 1},"#,
+            1,
+        );
+        assert_ne!(shuffled, v1, "the replacement must have applied");
+        let b = arch_from_json(&Json::parse(&shuffled).unwrap()).unwrap();
+        assert_eq!(b, Architecture::paper_default());
+        // Missing macro still rejected, with the same message as before.
+        let truncated = v1
+            .replacen(r#"{"bytes": 294912, "id": "v8_delta_w", "word_bits": 16}"#, "", 1)
+            .replacen(
+                r#"{"bytes": 32768, "id": "v7_spike_out", "word_bits": 1},"#,
+                r#"{"bytes": 32768, "id": "v7_spike_out", "word_bits": 1}"#,
+                1,
+            );
+        let e = arch_from_json(&Json::parse(&truncated).unwrap()).unwrap_err();
+        assert!(e.to_string().contains("missing macro"), "{e}");
     }
 
     #[test]
@@ -560,10 +786,31 @@ mod tests {
         zero.set("rows", Json::Num(0.0)).set("cols", Json::Num(16.0));
         j.set("array", zero);
         assert!(arch_from_json(&j).is_err());
-        // Missing macro.
-        let mut small = a.clone();
-        small.mem.srams.pop();
-        let e = arch_from_json(&arch_to_json(&small)).unwrap_err();
-        assert!(e.to_string().contains("missing macro"), "{e}");
+        // A hierarchy that fails structural validation (store level
+        // dropped -> too few levels, bounded outermost).
+        let mut bad = a.clone();
+        bad.hier.levels.pop();
+        let e = arch_from_json(&arch_to_json(&bad)).unwrap_err();
+        assert!(e.to_string().contains("levels"), "{e}");
+    }
+
+    #[test]
+    fn out_of_range_geometry_errors_instead_of_wrapping() {
+        // 4294967312 = 2^32 + 16 must not silently parse as 16.
+        let mut j = arch_to_json(&Architecture::paper_default());
+        let mut wide = Json::obj();
+        wide.set("rows", Json::Num(4294967312.0)).set("cols", Json::Num(16.0));
+        j.set("array", wide);
+        let e = arch_from_json(&j).unwrap_err();
+        assert!(e.to_string().contains("exceeds u32"), "{e}");
+    }
+
+    #[test]
+    fn v1_operand_breakdowns_still_parse() {
+        let v1 = r#"{"tensor": "ConvFP", "reg_j": 1e-6, "sram_j": 2e-6, "dram_j": 3e-6}"#;
+        let o = operand_from_json(&Json::parse(v1).unwrap()).unwrap();
+        assert_eq!(o.levels.len(), 3);
+        assert_eq!(o.level_j("SRAM"), 2e-6);
+        assert!((o.total_j() - 6e-6).abs() < 1e-18);
     }
 }

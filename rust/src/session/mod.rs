@@ -43,7 +43,7 @@
 //! The DSE (`dse::explore`), the pipeline coordinator, the report
 //! generator and the benches all build on this API.
 
-mod json;
+pub mod json;
 pub mod workers;
 
 use std::collections::HashMap;
@@ -64,7 +64,18 @@ use crate::util::prng::SplitMix64;
 use crate::workload::{generate, LayerWorkload};
 
 /// Version of the `EvalRequest`/`EvalResult` JSON schema.
-pub const SCHEMA_VERSION: u32 = 1;
+///
+/// * **v2** (current): architectures carry a full `hierarchy` object
+///   (N levels, per-level energy rule / capacity / residency), and
+///   operand breakdowns report one energy entry per hierarchy level.
+/// * **v1** (accepted on input): the fixed Reg/SRAM/DRAM shape — an
+///   eight-macro `mem` list on architectures and `reg_j`/`sram_j`/
+///   `dram_j` fields on operands. Parsed into the equivalent 3-level
+///   hierarchy; see DESIGN.md for the compatibility rules.
+pub const SCHEMA_VERSION: u32 = 2;
+
+/// Oldest input schema still parsed.
+pub const MIN_SCHEMA_VERSION: u32 = 1;
 
 // ---------------------------------------------------------------------------
 // Request side
@@ -242,14 +253,13 @@ fn write_model_key(key: &mut String, m: &SnnModel) {
     key.push('|');
 }
 
-/// Append an injective encoding of `arch` to `key`.
+/// Append an injective encoding of `arch` to `key`: array geometry plus
+/// the full hierarchy fingerprint, so two requests differing only in
+/// hierarchy structure can never collide in the result cache.
 fn write_arch_key(key: &mut String, a: &Architecture) {
     use std::fmt::Write as _;
     let _ = write!(key, "r{}x{};g{};", a.array.rows, a.array.cols, a.pe_reg_bits);
-    for m in &a.mem.srams {
-        let _ = write!(key, "s{},{},{};", m.id as u64, m.bytes, m.word_bits);
-    }
-    key.push('|');
+    a.hier.fingerprint_into(key);
 }
 
 // ---------------------------------------------------------------------------
@@ -257,17 +267,26 @@ fn write_arch_key(key: &mut String, a: &Architecture) {
 // ---------------------------------------------------------------------------
 
 /// Energy of one operand tensor, split by hierarchy level (joules).
+/// One `(level name, joules)` entry per hierarchy level, innermost
+/// first — levels the operand bypasses report 0.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OperandBreakdown {
     pub tensor: String,
-    pub reg_j: f64,
-    pub sram_j: f64,
-    pub dram_j: f64,
+    pub levels: Vec<(String, f64)>,
 }
 
 impl OperandBreakdown {
     pub fn total_j(&self) -> f64 {
-        self.reg_j + self.sram_j + self.dram_j
+        self.levels.iter().map(|(_, j)| j).sum()
+    }
+
+    /// Energy at the level named `name` (0 if absent).
+    pub fn level_j(&self, name: &str) -> f64 {
+        self.levels
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, j)| *j)
+            .unwrap_or(0.0)
     }
 }
 
@@ -281,7 +300,7 @@ pub struct PhaseEnergy {
 }
 
 impl PhaseEnergy {
-    fn from_conv(ce: &ConvEnergy) -> PhaseEnergy {
+    fn from_conv(ce: &ConvEnergy, level_names: &[String]) -> PhaseEnergy {
         PhaseEnergy {
             compute_j: ce.compute_j,
             operands: ce
@@ -289,9 +308,11 @@ impl PhaseEnergy {
                 .iter()
                 .map(|o| OperandBreakdown {
                     tensor: o.tensor.to_string(),
-                    reg_j: o.reg_j,
-                    sram_j: o.sram_j,
-                    dram_j: o.dram_j,
+                    levels: level_names
+                        .iter()
+                        .enumerate()
+                        .map(|(l, n)| (n.clone(), o.level_j[l]))
+                        .collect(),
                 })
                 .collect(),
             cycles: ce.cycles,
@@ -323,12 +344,12 @@ pub struct LayerBreakdown {
 }
 
 impl LayerBreakdown {
-    fn from_layer(le: &LayerEnergy) -> LayerBreakdown {
+    fn from_layer(le: &LayerEnergy, level_names: &[String]) -> LayerBreakdown {
         LayerBreakdown {
             layer: le.layer,
-            fp: PhaseEnergy::from_conv(&le.fp),
-            bp: PhaseEnergy::from_conv(&le.bp),
-            wg: PhaseEnergy::from_conv(&le.wg),
+            fp: PhaseEnergy::from_conv(&le.fp, level_names),
+            bp: PhaseEnergy::from_conv(&le.bp, level_names),
+            wg: PhaseEnergy::from_conv(&le.wg, level_names),
             soma_compute_j: le.units.soma_compute_j,
             soma_mem_j: le.units.soma_mem_j,
             grad_compute_j: le.units.grad_compute_j,
@@ -415,8 +436,10 @@ impl EvalResult {
         layers: &[LayerEnergy],
         chip: ChipMetrics,
     ) -> EvalResult {
+        let level_names: Vec<String> =
+            req.arch.hier.levels.iter().map(|l| l.name.clone()).collect();
         let breakdown: Vec<LayerBreakdown> =
-            layers.iter().map(LayerBreakdown::from_layer).collect();
+            layers.iter().map(|le| LayerBreakdown::from_layer(le, &level_names)).collect();
         EvalResult {
             schema: SCHEMA_VERSION,
             model: req.model.name.clone(),

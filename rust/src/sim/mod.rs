@@ -244,7 +244,7 @@ pub fn max_mismatch(w: &ConvWorkload, m: &Mapping, max_points: u64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::{Architecture, ArrayScheme, MemoryPool};
+    use crate::arch::{Architecture, ArrayScheme, HierarchySpec};
     use crate::dataflow::templates::{all_families, Family};
     use crate::model::{LayerSpec, SnnModel};
     use crate::util::prng::SplitMix64;
@@ -265,7 +265,7 @@ mod tests {
     fn small_arch() -> Architecture {
         Architecture {
             array: ArrayScheme::new(4, 4),
-            mem: MemoryPool::paper_default(),
+            hier: HierarchySpec::paper_28nm(),
             pe_reg_bits: 64,
         }
     }

@@ -62,11 +62,13 @@ impl SparsityProfile {
         if per_layer.iter().any(|r| !(0.0..=1.0).contains(r)) {
             return Err("firing rate outside [0,1]".into());
         }
-        let step = json.get("step").and_then(|v| v.as_f64()).unwrap_or(-1.0);
-        Ok(SparsityProfile {
-            source: format!("measured(step={step})"),
-            per_layer,
-        })
+        // A run log without a `step` field is still usable — but label it
+        // honestly instead of the old phantom `measured(step=-1)`.
+        let source = match json.get("step").and_then(|v| v.as_f64()) {
+            Some(step) => format!("measured(step={step})"),
+            None => "measured(step=unknown)".to_string(),
+        };
+        Ok(SparsityProfile { source, per_layer })
     }
 
     /// Load from a run-log file on disk.
@@ -116,6 +118,16 @@ mod tests {
         assert_eq!(p.per_layer.len(), 3);
         assert!(p.source.contains("300"));
         assert_eq!(p.sparsity_view()[0], 1.0 - 0.21);
+    }
+
+    #[test]
+    fn missing_step_is_reported_as_unknown() {
+        // Regression: a log without `step` used to claim
+        // `measured(step=-1)`, a step number that never existed.
+        let j = Json::parse(r#"{"firing_rates": [0.2, 0.1]}"#).unwrap();
+        let p = SparsityProfile::from_run_log(&j).unwrap();
+        assert_eq!(p.source, "measured(step=unknown)");
+        assert!(!p.source.contains("-1"), "{}", p.source);
     }
 
     #[test]

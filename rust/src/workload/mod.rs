@@ -78,10 +78,50 @@ impl ConvDims {
         self.sizes[d.idx()]
     }
 
-    /// Total MAC-grid size: the product of all eight extents. This is the
-    /// common prefactor of eqs. (4), (9) and (11).
+    /// Total MAC-grid size: the product of all eight extents, or `None`
+    /// on `u64` overflow. This is the common prefactor of eqs. (4), (9)
+    /// and (11).
+    pub fn checked_total(&self) -> Option<u64> {
+        self.sizes.iter().try_fold(1u64, |acc, &s| acc.checked_mul(s))
+    }
+
+    /// [`Self::checked_total`] for dims that passed [`generate`]'s
+    /// validation. Panics with a descriptive message on overflow rather
+    /// than silently wrapping (the old `iter().product()` behaviour).
     pub fn total(&self) -> u64 {
-        self.sizes.iter().product()
+        self.checked_total().unwrap_or_else(|| {
+            panic!(
+                "ConvDims::total overflows u64 for {:?}; such workloads are \
+                 rejected by workload::generate",
+                self.sizes
+            )
+        })
+    }
+}
+
+/// Largest loop-grid size the analytical model evaluates exactly: every
+/// scheduled total, reuse factor and fill count must stay an exact
+/// integer in `f64` (< 2^53). A mapping's scheduled total can exceed
+/// `dims.total()` through padding overcount — non-dividing tiles round
+/// the backing-store remainder up, at worst doubling each of the eight
+/// per-dim products — so grids (and their eq. 4/9/11 op-count
+/// prefactors) are capped at 2^53 / 2^8 = 2^45.
+pub const MAX_GRID: u64 = 1 << 45;
+
+/// Reject grids whose products overflow `u64` or exceed [`MAX_GRID`].
+fn check_grid(layer: usize, phase: &str, dims: &ConvDims) -> Result<(), String> {
+    match dims.checked_total() {
+        Some(t) if t <= MAX_GRID => Ok(()),
+        Some(t) => Err(format!(
+            "layer {layer} {phase}: loop grid {:?} has {t} MACs, exceeding the \
+             2^45 exact-arithmetic bound of the energy model",
+            dims.sizes
+        )),
+        None => Err(format!(
+            "layer {layer} {phase}: loop grid {:?} overflows u64 (eq. 4/9/11 \
+             operation counts are meaningless at this size)",
+            dims.sizes
+        )),
     }
 }
 
@@ -256,12 +296,17 @@ pub fn generate(
             .copied()
             .unwrap_or(default_activity);
         compute_idx += 1;
-        out.push(layer_workload(l, n, t, act));
+        out.push(layer_workload(l, n, t, act)?);
     }
     Ok(out)
 }
 
-fn layer_workload(l: &ShapedLayer, n: u64, t: u64, activity: f64) -> LayerWorkload {
+fn layer_workload(
+    l: &ShapedLayer,
+    n: u64,
+    t: u64,
+    activity: f64,
+) -> Result<LayerWorkload, String> {
     let (m, c) = (l.out_c as u64, l.in_c as u64);
     let (p, q) = (l.out_h as u64, l.out_w as u64);
     let k = l.kernel() as u64;
@@ -303,8 +348,17 @@ fn layer_workload(l: &ShapedLayer, n: u64, t: u64, activity: f64) -> LayerWorklo
         activity,
     };
 
+    // Overflow hardening: every downstream op count, footprint and
+    // reuse factor is bounded by these grid products, so validating them
+    // here makes the plain arithmetic below (and `ConvDims::total`)
+    // safe.
+    for (phase, dims) in [("FP", &fp.dims), ("BP", &bp.dims), ("WG", &wg.dims)] {
+        check_grid(l.index, phase, dims)?;
+    }
+
     // §III-D fixed-function units. Counts per layer pass over all
-    // timesteps and batch elements.
+    // timesteps and batch elements. `somas` divides the validated FP
+    // grid, so the products below stay far inside u64.
     let somas = n * t * m * p * q;
     // Soma SRAM traffic per evaluation: read ConvFP (16b) + u_{t-1} (16b)
     // + s_{t-1} (1b); write u_t (16b) + s_t (1b) + step mask (1b).
@@ -318,7 +372,7 @@ fn layer_workload(l: &ShapedLayer, n: u64, t: u64, activity: f64) -> LayerWorklo
     // Restores the spilled forward state (u_t, s_t, mask) from DRAM.
     let grad_dram_bits = somas * (16 + 1 + 1);
 
-    LayerWorkload {
+    Ok(LayerWorkload {
         layer: l.index,
         fp,
         bp,
@@ -331,7 +385,7 @@ fn layer_workload(l: &ShapedLayer, n: u64, t: u64, activity: f64) -> LayerWorklo
             grad_sram_bits,
             grad_dram_bits,
         },
-    }
+    })
 }
 
 #[cfg(test)]
@@ -412,6 +466,36 @@ mod tests {
         assert_eq!(i, 6 * 32 * 32 * 32); // 1-bit spikes
         assert_eq!(w, 32 * 32 * 9 * 16);
         assert_eq!(o, 6 * 32 * 32 * 32 * 16);
+    }
+
+    #[test]
+    fn absurd_dims_error_instead_of_overflowing() {
+        // Raw dims: u64 overflow is reported, not wrapped.
+        assert_eq!(ConvDims::new(u64::MAX, 2, 1, 1, 1, 1, 1, 1).checked_total(), None);
+        assert_eq!(
+            ConvDims::new(1, 6, 32, 32, 32, 32, 3, 3).checked_total(),
+            Some(56_623_104)
+        );
+        // A grid above the exact-arithmetic bound is rejected with a
+        // descriptive error...
+        let big = SnnModel {
+            name: "big".into(),
+            input: (512, 1024, 1024),
+            layers: vec![crate::model::LayerSpec::Conv {
+                out_channels: 512,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+            }],
+            timesteps: 64,
+            batch: 4096,
+        };
+        let e = generate(&big, &[], 0.5).unwrap_err();
+        assert!(e.contains("exact-arithmetic"), "{e}");
+        // ...and a grid that overflows u64 outright names the overflow.
+        let huge = SnnModel { timesteps: u32::MAX, batch: u32::MAX, ..big };
+        let e = generate(&huge, &[], 0.5).unwrap_err();
+        assert!(e.contains("overflow"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! End-to-end coverage of the generalized N-level memory hierarchy: the
+//! declarative arch files load, genuinely non-paper hierarchies (a
+//! 4-level PE-cluster spike buffer and a unified shared SRAM) evaluate
+//! through the full DSE + session stack, show up in sweep output, and
+//! survive the v2 JSON schema (with v1 documents still parsing).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use eocas::arch::{ArchPool, Architecture, HierarchySpec};
+use eocas::config::archfile;
+use eocas::dataflow::templates::Family;
+use eocas::dse::{explore, DseConfig};
+use eocas::model::SnnModel;
+use eocas::session::{Dataflow, EvalRequest, EvalResult, Session};
+use eocas::sparsity::SparsityProfile;
+
+fn config_path(name: &str) -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("configs").join(name)
+}
+
+#[test]
+fn shipped_arch_files_match_the_presets() {
+    let paper = archfile::load_architecture(&config_path("arch_paper_28nm.toml")).unwrap();
+    assert_eq!(paper, Architecture::paper_default());
+    let four = archfile::load_architecture(&config_path("arch_4level_spikebuf.toml")).unwrap();
+    assert_eq!(four.hier, HierarchySpec::four_level_spike_buffer());
+    let unified = archfile::load_architecture(&config_path("arch_unified_sram.toml")).unwrap();
+    assert_eq!(unified.hier, HierarchySpec::unified_sram());
+}
+
+/// The acceptance sweep: two non-paper hierarchies, end to end through
+/// `dse::explore` (the same call the CLI's `dse --arch-file A,B` makes),
+/// both visible in the sweep output.
+#[test]
+fn dse_sweeps_custom_hierarchies_end_to_end() {
+    let four = archfile::load_architecture(&config_path("arch_4level_spikebuf.toml")).unwrap();
+    let unified = archfile::load_architecture(&config_path("arch_unified_sram.toml")).unwrap();
+    let session = Session::builder()
+        .arch_pool(ArchPool { candidates: vec![four, unified] })
+        .threads(2)
+        .build();
+    let model = SnnModel::paper_layer();
+    let sparsity = SparsityProfile::nominal(1, 0.75);
+    let res = explore(&session, &model, &sparsity, &DseConfig::default()).unwrap();
+    // 2 architectures x 5 families.
+    assert_eq!(res.evaluations, 2 * 5);
+    for c in &res.candidates {
+        assert!(
+            c.overall_j.is_finite() && c.overall_j > 0.0,
+            "{} {}",
+            c.arch.label(),
+            c.dataflow
+        );
+        assert!(c.cycles > 0);
+    }
+    // Both hierarchies appear in the sweep output by name.
+    for name in ["4level_spikebuf", "unified_sram"] {
+        assert!(
+            res.candidates.iter().any(|c| c.arch.label().contains(name)),
+            "{name} missing from sweep output"
+        );
+    }
+    let best = res.best().unwrap();
+    assert!(best.overall_j > 0.0);
+    // The per-level breakdown of a 4-level candidate names all four
+    // levels, and the spike buffer only ever charges spike operands.
+    let c4 = res
+        .candidates
+        .iter()
+        .find(|c| c.arch.label().contains("4level") && c.dataflow == "Advanced WS")
+        .unwrap();
+    let fp = &c4.result.layers[0].fp;
+    let level_names: Vec<&str> = fp.operands[0]
+        .levels
+        .iter()
+        .map(|(n, _)| n.as_str())
+        .collect();
+    assert_eq!(level_names, ["Reg", "SpikeBuf", "SRAM", "DRAM"]);
+    assert!(fp.operands[0].level_j("SpikeBuf") > 0.0, "spikes use the buffer");
+    assert_eq!(fp.operands[1].level_j("SpikeBuf"), 0.0, "weights bypass it");
+}
+
+#[test]
+fn mapper_optimum_serves_custom_hierarchies_through_the_session() {
+    let four = Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer());
+    let session = Session::builder().threads(1).build();
+    let req = EvalRequest::new(SnnModel::paper_layer(), four, Dataflow::MapperOptimal);
+    let res = session.evaluate(&req).unwrap();
+    assert_eq!(res.dataflow, "Mapper");
+    assert!(res.overall_j.is_finite() && res.overall_j > 0.0);
+    // The mapper may exploit the extra level; it can never lose to the
+    // best named family on the same hierarchy.
+    let best_family = Family::ALL
+        .iter()
+        .map(|&f| {
+            let r = EvalRequest::new(
+                SnnModel::paper_layer(),
+                Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+                f,
+            );
+            session.evaluate(&r).unwrap().overall_j
+        })
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        res.overall_j <= best_family * 1.0001,
+        "mapper {} uJ vs best family {} uJ",
+        res.overall_j * 1e6,
+        best_family * 1e6
+    );
+}
+
+#[test]
+fn hierarchies_never_collide_in_the_result_cache() {
+    let session = Session::builder().threads(1).build();
+    let mk = |hier: HierarchySpec| {
+        EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::with_hierarchy(hier),
+            Family::AdvWs,
+        )
+    };
+    let paper = session.evaluate(&mk(HierarchySpec::paper_28nm())).unwrap();
+    let unified = session.evaluate(&mk(HierarchySpec::unified_sram())).unwrap();
+    let scaled = session.evaluate(&mk(HierarchySpec::paper_28nm().scaled(0.5))).unwrap();
+    assert_eq!(session.cache_stats().result_misses, 3, "three distinct cache keys");
+    assert_ne!(paper.overall_j, unified.overall_j);
+    assert_ne!(paper.overall_j, scaled.overall_j);
+}
+
+#[test]
+fn v2_results_round_trip_and_v1_requests_still_parse() {
+    let session = Session::builder().threads(1).build();
+    let req = EvalRequest::new(
+        SnnModel::paper_layer(),
+        Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+        Family::AdvWs,
+    );
+    let res: Arc<EvalResult> = session.evaluate(&req).unwrap();
+    let text = res.to_json().dumps();
+    assert!(text.contains("\"schema\":2"));
+    assert!(text.contains("SpikeBuf"));
+    let back = EvalResult::from_json_str(&text).unwrap();
+    assert_eq!(*res, back);
+    // And the request itself round-trips with its hierarchy.
+    let back_req = EvalRequest::from_json_str(&req.to_json().dumps()).unwrap();
+    assert_eq!(req, back_req);
+
+    // A v1 request document (schema 1, flat `mem` macro list, 3-level
+    // operand fields) parses into the paper hierarchy.
+    let v1 = r#"{
+        "schema": 1,
+        "model": {"batch": 1, "input": [32, 32, 32], "layers": [
+            {"kernel": 3, "out_channels": 32, "padding": 1, "stride": 1, "type": "conv"}],
+            "name": "paper-layer", "timesteps": 6},
+        "arch": {
+            "array": {"cols": 16, "rows": 16},
+            "mem": [
+                {"bytes": 32768, "id": "v1_spike", "word_bits": 1},
+                {"bytes": 229376, "id": "v2_weight", "word_bits": 16},
+                {"bytes": 393216, "id": "v3_conv_fp", "word_bits": 16},
+                {"bytes": 393216, "id": "v4_delta_u", "word_bits": 16},
+                {"bytes": 262144, "id": "v5_weight_t", "word_bits": 16},
+                {"bytes": 393216, "id": "v6_conv_bp", "word_bits": 16},
+                {"bytes": 32768, "id": "v7_spike_out", "word_bits": 1},
+                {"bytes": 294912, "id": "v8_delta_w", "word_bits": 16}
+            ],
+            "pe_reg_bits": 64
+        },
+        "dataflow": "advws",
+        "sparsity": {"per_layer": [0.75], "source": "nominal(0.75)"},
+        "options": {"activity": null, "jitter_seed": null, "label": null}
+    }"#;
+    let req_v1 = EvalRequest::from_json_str(v1).unwrap();
+    assert_eq!(req_v1.arch, Architecture::paper_default());
+    // Evaluating the parsed v1 request reproduces the native evaluation.
+    let native = session
+        .evaluate(&EvalRequest::new(
+            req_v1.model.clone(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        ))
+        .unwrap();
+    let via_v1 = session.evaluate(&req_v1).unwrap();
+    assert_eq!(via_v1.overall_j, native.overall_j);
+}
+
+#[test]
+fn unified_sram_orders_behind_dedicated_macros() {
+    // Physics sanity on the new design point: one shared 2.03 MB bank
+    // prices every access at the full-bank size curve, so the paper's
+    // partitioned layout must win at equal capacity.
+    let session = Session::builder().threads(1).build();
+    let eval = |hier: HierarchySpec| {
+        session
+            .evaluate(&EvalRequest::new(
+                SnnModel::paper_layer(),
+                Architecture::with_hierarchy(hier),
+                Family::AdvWs,
+            ))
+            .unwrap()
+            .overall_j
+    };
+    let paper = eval(HierarchySpec::paper_28nm());
+    let unified = eval(HierarchySpec::unified_sram());
+    assert!(unified > paper, "unified {unified} !> paper {paper}");
+}

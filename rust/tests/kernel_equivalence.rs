@@ -1,12 +1,15 @@
-//! The tentpole gate: the allocation-free fast evaluation path
-//! (`MappingView` + `EvalScratch` + `conv_energy_into`) must be
-//! **bit-for-bit identical** to the original closed-form kernel
-//! (`conv_energy_reference`) — every `OperandEnergy` field compared with
-//! `==`, totals compared on raw bits — across all five dataflow
-//! families, all three training phases, multiple architectures, and
-//! hundreds of randomized jittered mappings.
+//! The refactor gate: the N-level hierarchy engine (`MappingView` +
+//! `EvalScratch` + `conv_energy_into` walking `HierarchySpec` residency
+//! chains) must be **bit-for-bit identical** on the `paper_28nm` preset
+//! to the original closed 3-level kernel (`conv_energy_reference`) —
+//! every `OperandEnergy` field compared with `==`, totals compared on
+//! raw bits — across all five dataflow families, all three training
+//! phases, multiple architectures, and hundreds of randomized jittered
+//! mappings. The same pin covers the declarative TOML route: loading
+//! `configs/arch_paper_28nm.toml` yields the same architecture, so
+//! `--arch-file` evaluations inherit the equivalence.
 
-use eocas::arch::{ArchPool, Architecture, ArrayScheme};
+use eocas::arch::{ArchPool, Architecture, ArrayScheme, HierarchySpec};
 use eocas::config::EnergyConfig;
 use eocas::dataflow::templates::{generate as gen_template, Family};
 use eocas::dataflow::Mapping;
@@ -29,12 +32,13 @@ fn assert_bit_identical(
     conv_energy_into(&m.view(), arch, cfg, scratch);
     assert_eq!(slow.operands.len(), 3, "{label}");
     for (a, b) in slow.operands.iter().zip(scratch.operands.iter()) {
-        // `OperandEnergy` equality is field-wise f64 `==`: any rounding
-        // divergence between the two paths fails here.
+        // `OperandEnergy` equality is field-wise f64 `==` over the
+        // per-level arrays: any rounding divergence between the two
+        // paths fails here.
         assert_eq!(a, b, "{label}: operand {}", a.tensor);
-        assert_eq!(a.reg_j.to_bits(), b.reg_j.to_bits(), "{label}: {} reg", a.tensor);
-        assert_eq!(a.sram_j.to_bits(), b.sram_j.to_bits(), "{label}: {} sram", a.tensor);
-        assert_eq!(a.dram_j.to_bits(), b.dram_j.to_bits(), "{label}: {} dram", a.tensor);
+        assert_eq!(a.reg_j().to_bits(), b.reg_j().to_bits(), "{label}: {} reg", a.tensor);
+        assert_eq!(a.sram_j().to_bits(), b.sram_j().to_bits(), "{label}: {} sram", a.tensor);
+        assert_eq!(a.dram_j().to_bits(), b.dram_j().to_bits(), "{label}: {} dram", a.tensor);
     }
     assert_eq!(slow.compute_j.to_bits(), scratch.compute_j().to_bits(), "{label}: compute");
     assert_eq!(slow.mem_j().to_bits(), scratch.mem_j().to_bits(), "{label}: mem");
@@ -62,6 +66,12 @@ fn property_fast_kernel_bit_identical_across_families_phases_and_jitter() {
         Architecture::with_array(ArrayScheme::new(8, 32)),
     ];
     archs.dedup();
+    // The refactor's gate rests on these architectures all carrying the
+    // paper preset.
+    for arch in &archs {
+        assert_eq!(arch.hier.name, "paper_28nm");
+        assert_eq!(arch.hier.num_levels(), 3);
+    }
     let mut cases = 0usize;
     for model in [SnnModel::paper_layer(), SnnModel::cifar100_snn()] {
         let wls = generate(&model, &[], 0.75).unwrap();
@@ -114,5 +124,64 @@ fn fast_kernel_handles_degenerate_and_unit_mappings() {
         reg[2] = w.dims.sizes[2]; // M entirely in registers
         let m = Mapping::derive("edge2", &w.dims, vec![], vec![], reg, [1; 8]);
         assert_bit_identical(w, &m, &arch, &cfg, &mut scratch, "m-in-reg");
+    }
+}
+
+#[test]
+fn toml_loaded_paper_arch_is_bit_identical_too() {
+    // The declarative route (`--arch-file configs/arch_paper_28nm.toml`)
+    // must inherit the equivalence pin: the loaded architecture equals
+    // the preset, and pricing through it reproduces the reference
+    // kernel bit-for-bit.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/arch_paper_28nm.toml");
+    let arch = eocas::config::archfile::load_architecture(&path).unwrap();
+    assert_eq!(arch, Architecture::paper_default());
+    let cfg = EnergyConfig::default();
+    let wl = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0);
+    for w in wl.convs() {
+        let mut scratch = EvalScratch::for_workload(w, &cfg);
+        for fam in Family::ALL {
+            let m = gen_template(fam, w, &arch);
+            assert_bit_identical(
+                w,
+                &m,
+                &arch,
+                &cfg,
+                &mut scratch,
+                &format!("toml {} {:?}", fam.name(), w.phase),
+            );
+        }
+    }
+}
+
+#[test]
+fn n_level_engine_is_self_consistent_on_custom_hierarchies() {
+    // The reference oracle is 3-level-only; for deeper/shared
+    // hierarchies pin the wrapper to the scratch kernel (same engine,
+    // allocating vs allocation-free paths) across families and phases.
+    let cfg = EnergyConfig::default();
+    let wl = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap().remove(0);
+    for hier in [HierarchySpec::four_level_spike_buffer(), HierarchySpec::unified_sram()] {
+        let arch = Architecture::with_hierarchy(hier);
+        for w in wl.convs() {
+            let mut scratch = EvalScratch::for_workload(w, &cfg);
+            for fam in Family::ALL {
+                let m = gen_template(fam, w, &arch);
+                let wrapped = conv_energy(w, &m, &arch, &cfg);
+                conv_energy_into(&m.view(), &arch, &cfg, &mut scratch);
+                assert_eq!(
+                    wrapped.total_j().to_bits(),
+                    scratch.total_j().to_bits(),
+                    "{} {} {:?}",
+                    arch.hier.name,
+                    fam.name(),
+                    w.phase
+                );
+                for (a, b) in wrapped.operands.iter().zip(scratch.operands.iter()) {
+                    assert_eq!(a, b, "{} {}", arch.hier.name, a.tensor);
+                }
+            }
+        }
     }
 }

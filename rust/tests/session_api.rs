@@ -69,14 +69,16 @@ fn result_json_schema_is_stable() {
     for key in ["layer", "fp", "bp", "wg", "soma_compute_j", "grad_mem_j"] {
         assert!(layer0.get(key).is_some(), "missing layer key `{key}`");
     }
-    assert_eq!(j.get("schema").unwrap().as_f64(), Some(1.0));
+    assert_eq!(j.get("schema").unwrap().as_f64(), Some(2.0));
 }
 
 #[test]
 fn tampered_schema_version_is_rejected() {
     let session = Session::builder().threads(1).build();
     let res = session.evaluate(&paper_request(Family::AdvWs)).unwrap();
-    let tampered = res.to_json().dumps().replacen("\"schema\":1", "\"schema\":2", 1);
+    // Future versions are rejected; v1 (the pre-hierarchy shape) is the
+    // oldest accepted input.
+    let tampered = res.to_json().dumps().replacen("\"schema\":2", "\"schema\":3", 1);
     assert!(EvalResult::from_json_str(&tampered).is_err());
 }
 

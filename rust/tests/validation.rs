@@ -2,7 +2,7 @@
 //! against the event-level odometer, over randomly generated SNN layers
 //! and mappings (not just the paper's fixed workload).
 
-use eocas::arch::{Architecture, ArrayScheme, MemoryPool};
+use eocas::arch::{Architecture, ArrayScheme, HierarchySpec};
 use eocas::config::EnergyConfig;
 use eocas::dataflow::templates::{all_families, Family};
 use eocas::energy::layer_energy_for_family;
@@ -37,7 +37,7 @@ fn random_small_arch(rng: &mut SplitMix64) -> Architecture {
     let cols = 1u32 << rng.next_below(3);
     Architecture {
         array: ArrayScheme::new(rows, cols),
-        mem: MemoryPool::paper_default(),
+        hier: HierarchySpec::paper_28nm(),
         pe_reg_bits: 64,
     }
 }
