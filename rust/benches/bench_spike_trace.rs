@@ -1,0 +1,176 @@
+//! Bench: the spike-trace subsystem — LIF forward simulation throughput,
+//! temporal-statistics extraction, and the cost of temporal/event-stream
+//! evaluation relative to the scalar energy path.
+//!
+//! Measures, and emits as machine-readable `BENCH_spike.json`:
+//! * `simulate` on the Fig. 4 layer and (full mode) the CIFAR-100 SNN,
+//!   reported as neuron-timesteps/s,
+//! * `TemporalSparsity::from_trace` statistics extraction,
+//! * scalar vs temporal-raw vs temporal-compressed layer evaluation
+//!   (the raw path must stay within noise of scalar; `overhead` records
+//!   the compressed/scalar ratio),
+//! * a batched session sweep with a temporal source (warm cache).
+//!
+//! Flags: `--quick` (CI smoke mode: paper layer only, short windows),
+//! `--json PATH` (default `BENCH_spike.json`).
+
+use eocas::arch::Architecture;
+use eocas::config::EnergyConfig;
+use eocas::dataflow::templates::Family;
+use eocas::energy::{layer_energy_for_family, layer_energy_for_family_temporal};
+use eocas::model::SnnModel;
+use eocas::session::{EvalRequest, Session};
+use eocas::spike::{simulate, LifConfig, SpikeEncoding, TemporalSparsity};
+use eocas::util::bench::{black_box, time_it, BenchStats};
+use eocas::util::json::Json;
+use eocas::workload::generate;
+
+struct Case {
+    key: &'static str,
+    stats: BenchStats,
+    /// Work items per timed iteration (neuron-timesteps for simulation
+    /// cases, evaluations for energy cases).
+    items_per_iter: f64,
+}
+
+impl Case {
+    fn per_s(&self) -> f64 {
+        self.items_per_iter / (self.stats.mean_ns / 1e9)
+    }
+}
+
+fn emit(cases: &[Case], ratios: &[(&str, f64)], quick: bool, path: &str) {
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0)).set("quick", Json::Bool(quick));
+    let mut jcases = Json::obj();
+    for c in cases {
+        let mut j = Json::obj();
+        j.set("mean_ns", Json::Num(c.stats.mean_ns))
+            .set("p50_ns", Json::Num(c.stats.p50_ns))
+            .set("p95_ns", Json::Num(c.stats.p95_ns))
+            .set("iters", Json::Num(c.stats.iters as f64))
+            .set("items_per_s", Json::Num(c.per_s()));
+        jcases.set(c.key, j);
+    }
+    doc.set("cases", jcases);
+    let mut jr = Json::obj();
+    for (k, v) in ratios {
+        jr.set(k, Json::Num(*v));
+    }
+    doc.set("overhead", jr);
+    match std::fs::write(path, format!("{}\n", doc.dumps())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+fn mean_of(cases: &[Case], key: &str) -> f64 {
+    cases.iter().find(|c| c.key == key).map(|c| c.stats.mean_ns).unwrap_or(f64::NAN)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_spike.json".to_string());
+    let w = if quick { 0.05 } else { 1.0 };
+
+    let lif = LifConfig::default();
+    let mut cases: Vec<Case> = Vec::new();
+    let mut push = |key: &'static str, stats: BenchStats, items: f64, unit: &str| {
+        println!("{}", stats.report());
+        println!("  => {:.0} {unit}/s\n", items / (stats.mean_ns / 1e9));
+        cases.push(Case { key, stats, items_per_iter: items });
+    };
+
+    // (a) LIF forward simulation throughput.
+    let mut sims: Vec<(&'static str, SnnModel)> =
+        vec![("sim_paper_layer", SnnModel::paper_layer())];
+    if !quick {
+        sims.push(("sim_cifar100", SnnModel::cifar100_snn()));
+    }
+    for (key, model) in sims.into_iter() {
+        let neuron_steps = (model.neuron_count() * model.timesteps as u64) as f64;
+        let iters = if quick { 2 } else { 5 };
+        let s = time_it(key, iters, w, || {
+            black_box(simulate(&model, &lif).unwrap());
+        });
+        push(key, s, neuron_steps, "neuron-steps");
+    }
+
+    // (b) temporal-statistics extraction.
+    let model = SnnModel::paper_layer();
+    let trace = simulate(&model, &lif).unwrap();
+    let neuron_steps = (model.neuron_count() * model.timesteps as u64) as f64;
+    let s = time_it("temporal_from_trace", if quick { 5 } else { 20 }, w, || {
+        black_box(TemporalSparsity::from_trace(&trace));
+    });
+    push("temporal_from_trace", s, neuron_steps, "raster-bits");
+
+    // (c) scalar vs temporal vs compressed layer evaluation.
+    let temporal = TemporalSparsity::from_trace(&trace);
+    let rates = temporal.mean_rates();
+    let cfg = EnergyConfig::default();
+    let arch = Architecture::paper_default();
+    let wl = generate(&model, &rates, cfg.nominal_activity).unwrap().remove(0);
+    let lt = temporal.layer_for(0).unwrap();
+    let s = time_it("eval_scalar", 1000, w, || {
+        black_box(layer_energy_for_family(&wl, Family::AdvWs, &arch, &cfg));
+    });
+    push("eval_scalar", s, 1.0, "evals");
+    let s = time_it("eval_temporal_raw", 1000, w, || {
+        black_box(layer_energy_for_family_temporal(
+            &wl,
+            Family::AdvWs,
+            &arch,
+            &cfg,
+            Some(lt),
+            SpikeEncoding::Raw,
+        ));
+    });
+    push("eval_temporal_raw", s, 1.0, "evals");
+    let s = time_it("eval_temporal_auto", 1000, w, || {
+        black_box(layer_energy_for_family_temporal(
+            &wl,
+            Family::AdvWs,
+            &arch,
+            &cfg,
+            Some(lt),
+            SpikeEncoding::Auto,
+        ));
+    });
+    push("eval_temporal_auto", s, 1.0, "evals");
+
+    // (d) batched session sweep with a temporal source (warm cache).
+    let session = Session::builder().threads(0).build();
+    let reqs: Vec<EvalRequest> = Family::ALL
+        .iter()
+        .map(|&fam| {
+            EvalRequest::new(model.clone(), arch.clone(), fam)
+                .with_temporal(temporal.clone())
+                .with_spike_encoding(SpikeEncoding::Auto)
+        })
+        .collect();
+    session.evaluate_many(&reqs); // prime
+    let s = time_it("session_temporal_warm", if quick { 20 } else { 200 }, w, || {
+        for r in session.evaluate_many(&reqs) {
+            black_box(r.unwrap());
+        }
+    });
+    push("session_temporal_warm", s, reqs.len() as f64, "evals");
+
+    // Headline ratios: temporal evaluation overhead vs the scalar path.
+    let raw_overhead = mean_of(&cases, "eval_temporal_raw") / mean_of(&cases, "eval_scalar");
+    let auto_overhead = mean_of(&cases, "eval_temporal_auto") / mean_of(&cases, "eval_scalar");
+    println!("temporal-raw overhead vs scalar:  {raw_overhead:.2}x");
+    println!("temporal-auto overhead vs scalar: {auto_overhead:.2}x");
+    emit(
+        &cases,
+        &[("temporal_raw", raw_overhead), ("temporal_auto", auto_overhead)],
+        quick,
+        &json_path,
+    );
+}

@@ -118,6 +118,23 @@ pub fn compute_energy(w: &ConvWorkload, cfg: &EnergyConfig) -> f64 {
         * 1e-12
 }
 
+/// Per-boundary bit-cost multipliers for one operand's transfer chain
+/// (index = boundary between chain levels `i` and `i+1`). `1.0` means
+/// raw bits; the event-stream traffic model
+/// ([`crate::spike::traffic::TrafficModel::boundary_costs`]) produces
+/// sub-unit factors for compressible spike maps. [`BoundaryCosts::RAW`]
+/// is the identity — multiplying an energy term by `1.0` is bit-exact,
+/// so the raw path stays pinned to the reference kernels.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundaryCosts {
+    pub factor: [f64; MAX_LEVELS],
+}
+
+impl BoundaryCosts {
+    /// Raw bitmaps at every boundary (the identity pricing).
+    pub const RAW: BoundaryCosts = BoundaryCosts { factor: [1.0; MAX_LEVELS] };
+}
+
 /// Price one operand under a mapping view (the eq. 20–22 pattern walked
 /// over the operand's N-level residency chain) — the allocation-free
 /// kernel shared by [`conv_energy_into`] and the mapper's incremental
@@ -136,41 +153,56 @@ pub fn price_operand(
     arch: &Architecture,
     cfg: &EnergyConfig,
 ) -> OperandEnergy {
+    price_operand_encoded(spec, view, arch, cfg, &BoundaryCosts::RAW)
+}
+
+/// [`price_operand`] with per-boundary bit-cost multipliers: every fill
+/// term (bits crossing boundary `b`) is scaled by `costs.factor[b]`.
+/// Register-internal accesses (the `count_reg_reads` ablation term) are
+/// never compressed — the PEs consume decoded bitmaps.
+pub fn price_operand_encoded(
+    spec: &OperandSpec,
+    view: &MappingView,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+    costs: &BoundaryCosts,
+) -> OperandEnergy {
     let hier = &arch.hier;
     let f = operand_fills(spec, view, hier);
     let bits = spec.bits as f64;
     let total = view.scheduled_total as f64;
     let cl = f.chain_len as usize;
+    let bf = &costs.factor;
     let mut out = OperandEnergy::zeroed(spec, hier.num_levels());
     for i in 0..cl {
         let l = f.chain[i] as usize;
         let e = match spec.role {
             Role::Input | Role::Stationary => {
                 if i == 0 {
-                    let mut e = f.fills[0] * bits * hier.write_pj(l, spec.sram, cfg);
+                    let mut e = f.fills[0] * bits * hier.write_pj(l, spec.sram, cfg) * bf[0];
                     if cfg.count_reg_reads {
                         e += total * bits * hier.read_pj(l, spec.sram, cfg);
                     }
                     e
                 } else if i < cl - 1 {
-                    f.fills[i - 1] * bits * hier.read_pj(l, spec.sram, cfg)
-                        + f.fills[i] * bits * hier.write_pj(l, spec.sram, cfg)
+                    f.fills[i - 1] * bits * hier.read_pj(l, spec.sram, cfg) * bf[i - 1]
+                        + f.fills[i] * bits * hier.write_pj(l, spec.sram, cfg) * bf[i]
                 } else {
-                    f.fills[i - 1] * bits * hier.read_pj(l, spec.sram, cfg)
+                    f.fills[i - 1] * bits * hier.read_pj(l, spec.sram, cfg) * bf[i - 1]
                 }
             }
             Role::Output => {
                 if i == 0 {
-                    let mut e = f.fills[0] * bits * hier.read_pj(l, spec.sram, cfg);
+                    let mut e = f.fills[0] * bits * hier.read_pj(l, spec.sram, cfg) * bf[0];
                     if cfg.count_reg_reads {
                         e += total * bits * hier.write_pj(l, spec.sram, cfg);
                     }
                     e
                 } else if i < cl - 1 {
-                    f.fills[i - 1] * bits * hier.write_pj(l, spec.sram, cfg)
-                        + f.fills[i] * bits * hier.read_pj(l, spec.sram, cfg)
+                    f.fills[i - 1] * bits * hier.write_pj(l, spec.sram, cfg) * bf[i - 1]
+                        + f.fills[i] * bits * hier.read_pj(l, spec.sram, cfg) * bf[i]
                 } else {
-                    f.fills[i - 1] * bits * hier.write_pj(l, spec.sram, cfg)
+                    f.fills[i - 1] * bits * hier.write_pj(l, spec.sram, cfg) * bf[i - 1]
                 }
             }
         };
@@ -451,6 +483,72 @@ pub fn layer_energy_for_family(
     }
 }
 
+/// [`conv_energy`] with event-stream spike traffic: 1-bit (spike)
+/// operands are priced with the traffic model's per-boundary encoding
+/// choice; 16-bit operands stay raw. Used by the FP and WG phases of the
+/// temporal evaluation path.
+pub fn conv_energy_encoded(
+    w: &ConvWorkload,
+    mapping: &Mapping,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+    tm: &crate::spike::traffic::TrafficModel,
+) -> ConvEnergy {
+    let mut scratch = EvalScratch::for_workload(w, cfg);
+    let view = mapping.view();
+    let (_, factor) = tm.boundary_costs();
+    let spike_costs = BoundaryCosts { factor };
+    for i in 0..3 {
+        let costs = if scratch.specs[i].bits == 1 {
+            &spike_costs
+        } else {
+            &BoundaryCosts::RAW
+        };
+        scratch.operands[i] = price_operand_encoded(&scratch.specs[i], &view, arch, cfg, costs);
+    }
+    scratch.cycles = view.cycles;
+    scratch.utilization = view.utilization(&arch.array);
+    scratch.to_conv_energy()
+}
+
+/// [`layer_energy_for_family`] with a per-timestep activity source.
+///
+/// The per-layer mean of `temporal`'s rates is assumed to be folded into
+/// the workload's `activity` already (the session does this when a
+/// request carries a [`crate::spike::TemporalSparsity`]); what this
+/// function adds is the *traffic* axis: with
+/// [`SpikeEncoding::Auto`](crate::spike::traffic::SpikeEncoding) the
+/// spike-map operands of the FP and WG convolutions are priced through
+/// the event-stream model derived from the temporal statistics. With no
+/// temporal source, or with `Raw` encoding, this is exactly
+/// [`layer_energy_for_family`] (bit-identical — the scalar degenerate
+/// case the oracle tests pin).
+pub fn layer_energy_for_family_temporal(
+    wl: &LayerWorkload,
+    family: Family,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+    temporal: Option<&crate::spike::temporal::LayerTemporal>,
+    encoding: crate::spike::traffic::SpikeEncoding,
+) -> LayerEnergy {
+    use crate::spike::traffic::{SpikeEncoding, TrafficModel};
+    let (Some(lt), SpikeEncoding::Auto) = (temporal, encoding) else {
+        return layer_energy_for_family(wl, family, arch, cfg);
+    };
+    let tm = TrafficModel::from_layer(lt);
+    let m_fp = templates::generate(family, &wl.fp, arch);
+    let m_bp = templates::generate(family, &wl.bp, arch);
+    let m_wg = templates::generate(family, &wl.wg, arch);
+    LayerEnergy {
+        layer: wl.layer,
+        fp: conv_energy_encoded(&wl.fp, &m_fp, arch, cfg, &tm),
+        // BP streams 16-bit gradients — no spike operand to compress.
+        bp: conv_energy(&wl.bp, &m_bp, arch, cfg),
+        wg: conv_energy_encoded(&wl.wg, &m_wg, arch, cfg, &tm),
+        units: unit_energy(&wl.units, arch, cfg),
+    }
+}
+
 /// Evaluate a whole model (sum of per-layer energies) under one family.
 pub fn model_energy_for_family(
     wls: &[LayerWorkload],
@@ -672,5 +770,86 @@ mod tests {
         let total = total_overall_j(&layers);
         assert!(total > layers[0].overall_j());
         assert!(total.is_finite() && total > 0.0);
+    }
+
+    fn sparse_layer_temporal(rate: f64) -> crate::spike::temporal::LayerTemporal {
+        crate::spike::temporal::LayerTemporal {
+            layer: 0,
+            neurons: 32 * 32 * 32,
+            rate_per_step: vec![rate; 6],
+            events_per_step: vec![(rate * 32768.0) as u64; 6],
+            mean_spike_run: 1.0,
+            run_density: 2.0 * rate * (1.0 - rate),
+            burst_fraction: 0.0,
+        }
+    }
+
+    #[test]
+    fn raw_encoding_is_bit_identical_to_scalar_path() {
+        use crate::spike::traffic::SpikeEncoding;
+        let (wl, arch, cfg) = paper_setup();
+        for fam in Family::ALL {
+            let scalar = layer_energy_for_family(&wl, fam, &arch, &cfg);
+            let none =
+                layer_energy_for_family_temporal(&wl, fam, &arch, &cfg, None, SpikeEncoding::Auto);
+            assert_eq!(scalar, none, "{}: missing temporal must fall back", fam.name());
+            let lt = sparse_layer_temporal(0.75);
+            let raw = layer_energy_for_family_temporal(
+                &wl,
+                fam,
+                &arch,
+                &cfg,
+                Some(&lt),
+                SpikeEncoding::Raw,
+            );
+            assert_eq!(scalar, raw, "{}: raw encoding must be the identity", fam.name());
+        }
+    }
+
+    #[test]
+    fn sparse_traces_compress_spike_traffic_only() {
+        use crate::spike::traffic::SpikeEncoding;
+        let (_, arch, cfg) = paper_setup();
+        // A genuinely sparse workload (2% firing) where AER/RLE win.
+        let wl = generate(&SnnModel::paper_layer(), &[0.02], 0.02).unwrap().remove(0);
+        let lt = sparse_layer_temporal(0.02);
+        let raw = layer_energy_for_family(&wl, Family::AdvWs, &arch, &cfg);
+        let enc = layer_energy_for_family_temporal(
+            &wl,
+            Family::AdvWs,
+            &arch,
+            &cfg,
+            Some(&lt),
+            SpikeEncoding::Auto,
+        );
+        // Spike-map traffic shrinks...
+        assert!(
+            enc.fp.operands[0].total() < raw.fp.operands[0].total(),
+            "spike operand did not compress: {} !< {}",
+            enc.fp.operands[0].total(),
+            raw.fp.operands[0].total()
+        );
+        assert!(enc.fp.mem_j() < raw.fp.mem_j());
+        assert!(enc.wg.mem_j() <= raw.wg.mem_j());
+        // ...while the 16-bit operands, the BP conv, compute energy and
+        // the fixed-function units are untouched.
+        assert_eq!(enc.fp.operands[1], raw.fp.operands[1], "weights must stay raw");
+        assert_eq!(enc.fp.operands[2], raw.fp.operands[2], "ConvFP must stay raw");
+        assert_eq!(enc.bp, raw.bp);
+        assert_eq!(enc.fp.compute_j, raw.fp.compute_j);
+        assert_eq!(enc.units, raw.units);
+        // Dense maps choose raw and reproduce the baseline bit-for-bit.
+        let dense_wl = generate(&SnnModel::paper_layer(), &[0.75], 0.75).unwrap().remove(0);
+        let dense_lt = sparse_layer_temporal(0.75);
+        let dense = layer_energy_for_family_temporal(
+            &dense_wl,
+            Family::AdvWs,
+            &arch,
+            &cfg,
+            Some(&dense_lt),
+            SpikeEncoding::Auto,
+        );
+        let dense_raw = layer_energy_for_family(&dense_wl, Family::AdvWs, &arch, &cfg);
+        assert_eq!(dense, dense_raw, "dense maps must fall back to raw bitmaps");
     }
 }

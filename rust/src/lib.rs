@@ -48,6 +48,7 @@ pub mod runtime;
 pub mod session;
 pub mod sim;
 pub mod sparsity;
+pub mod spike;
 pub mod trainer;
 pub mod util;
 pub mod workload;

@@ -5,6 +5,9 @@
 //! * `report <name>`   regenerate a paper table/figure (or `all`)
 //! * `simulate`        evaluate one model × architecture × dataflow
 //!                     (`--json` emits the stable `EvalResult` schema)
+//! * `spike-sim`       run the offline LIF spike-trace simulator, print
+//!                     per-layer temporal stats, write a run log that
+//!                     both `--sparsity` and `--temporal` consume
 //! * `dse`             explore the design space, print optimum + Pareto
 //! * `train`           run SNN BPTT through PJRT, write the run log
 //! * `pipeline`        end-to-end: train → measured sparsity → DSE → reports
@@ -29,6 +32,7 @@ use eocas::report::{self, ReportCtx};
 use eocas::runtime::Runtime;
 use eocas::session::{Dataflow, EvalRequest, Session};
 use eocas::sparsity::SparsityProfile;
+use eocas::spike::{self, LifConfig, SpikeEncoding, TemporalSparsity};
 use eocas::trainer::{Trainer, TrainerConfig};
 use eocas::util::error::Result;
 
@@ -36,12 +40,18 @@ const USAGE: &str = "\
 eocas — Energy-Oriented Computing Architecture Simulator for SNN training
 
 USAGE:
-  eocas report <workload|table1|table3|table4|table5|table6|table7|fig5|fig6|all>
+  eocas report <workload|table1|table3|table4|table5|table6|table7|spike|fig5|fig6|all>
                [--out DIR] [--model paper|cifar100|tiny] [--sparsity PATH]
   eocas simulate [--model paper|cifar100|tiny]
                  [--dataflow advws|ws1|ws2|os|rs|mapper]
                  [--arch-file PATH] [--activity X] [--config PATH]
-                 [--sparsity PATH] [--json]
+                 [--sparsity PATH] [--temporal PATH] [--encoding raw|auto]
+                 [--json]
+  eocas spike-sim [--model paper|cifar100|tiny] [--timesteps N] [--seed N]
+                  [--threshold X] [--decay X] [--input-rate X] [--soft-reset]
+                  [--log PATH] [--json]
+                  (writes a run log consumable by --sparsity AND --temporal;
+                   --json prints the temporal-sparsity document instead)
   eocas dse      [--samples N] [--threads N] [--model ...]
                  [--dataflow all|mapper|advws|ws1|ws2|os|rs]
                  [--arch-file A.toml,B.toml,...]
@@ -241,6 +251,10 @@ fn run(args: &[String]) -> Result<()> {
                 "table5" => print!("{}", report::table5_compute_energy(&ctx).render()),
                 "table6" | "table7-fpga" => print!("{}", report::table6_fpga(&ctx).render()),
                 "table7" | "table7-asic" => print!("{}", report::table7_asic(&ctx).render()),
+                "spike" => {
+                    let temporal = report::spike_temporal(&ctx)?;
+                    print!("{}", report::table_spike_modes(&ctx, &temporal).render());
+                }
                 "fig5" => {
                     let (t, txt) = report::fig5_energy_intervals(&ctx, 4);
                     println!("{txt}");
@@ -274,6 +288,19 @@ fn run(args: &[String]) -> Result<()> {
             let mut req = EvalRequest::new(model.clone(), arch, fam).with_activity(activity);
             if let Some(sp) = sparsity_flag(&flags)? {
                 req = req.with_sparsity(sp);
+            }
+            if let Some(p) = flags.get("temporal") {
+                if flags.contains_key("sparsity") {
+                    bail!("--sparsity and --temporal are mutually exclusive");
+                }
+                let t = TemporalSparsity::load(std::path::Path::new(p))
+                    .map_err(|e| err!("temporal: {e}"))?;
+                req = req.with_temporal(t);
+            }
+            if let Some(enc) = flags.get("encoding") {
+                let e = SpikeEncoding::from_key(enc)
+                    .ok_or_else(|| err!("unknown --encoding `{enc}` (raw|auto)"))?;
+                req = req.with_spike_encoding(e);
             }
             let res = session.evaluate(&req)?;
             if flags.contains_key("json") {
@@ -357,6 +384,69 @@ fn run(args: &[String]) -> Result<()> {
                     c.cycles
                 );
             }
+            Ok(())
+        }
+        "spike-sim" => {
+            let mut model = pick_model(&flags)?;
+            model.timesteps = parse_num(&flags, "timesteps", model.timesteps)?;
+            let d = LifConfig::default();
+            let lif = LifConfig {
+                threshold: parse_num(&flags, "threshold", d.threshold)?,
+                decay: parse_num(&flags, "decay", d.decay)?,
+                input_rate: parse_num(&flags, "input-rate", d.input_rate)?,
+                soft_reset: flags.contains_key("soft-reset"),
+                seed: parse_num(&flags, "seed", d.seed)?,
+            };
+            let start = std::time::Instant::now();
+            let trace = spike::simulate(&model, &lif)?;
+            let temporal = TemporalSparsity::from_trace(&trace);
+            let log_path = PathBuf::from(
+                flags.get("log").cloned().unwrap_or("reports/spike_run.json".into()),
+            );
+            temporal.save(&log_path)?;
+            if flags.contains_key("json") {
+                println!("{}", temporal.run_log_json().dumps());
+                return Ok(());
+            }
+            println!(
+                "spike-sim {}: T={} seed={} threshold={} decay={} input_rate={}",
+                model.name, model.timesteps, lif.seed, lif.threshold, lif.decay, lif.input_rate
+            );
+            println!(
+                "{:>5} {:>9} {:>9} {:>7} {:>7} {:>7} {:>8} {:>8} {:>7}",
+                "layer", "neurons", "events", "mean", "min", "max", "runlen", "rundens", "burst"
+            );
+            for lt in &temporal.layers {
+                let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+                for &r in &lt.rate_per_step {
+                    lo = lo.min(r);
+                    hi = hi.max(r);
+                }
+                println!(
+                    "{:>5} {:>9} {:>9} {:>7.4} {:>7.4} {:>7.4} {:>8.2} {:>8.4} {:>7.4}",
+                    lt.layer,
+                    lt.neurons,
+                    lt.total_events(),
+                    lt.mean_rate(),
+                    lo,
+                    hi,
+                    lt.mean_spike_run,
+                    lt.run_density,
+                    lt.burst_fraction
+                );
+            }
+            println!(
+                "simulated {} timesteps x {} layers in {:.1} ms; run log -> {}",
+                trace.timesteps,
+                temporal.layers.len(),
+                start.elapsed().as_secs_f64() * 1e3,
+                log_path.display()
+            );
+            println!(
+                "(use `eocas simulate --sparsity {p}` for scalar rates or \
+                 `--temporal {p} --encoding auto` for event-stream pricing)",
+                p = log_path.display()
+            );
             Ok(())
         }
         "train" => {

@@ -9,6 +9,9 @@
 
 use std::fmt;
 
+use crate::err;
+use crate::util::error::Result;
+
 /// One layer of a deep SNN. Only shapes matter to the simulator; weights
 /// live in the JAX artifacts.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -92,10 +95,10 @@ impl SnnModel {
     ///
     /// Panics are avoided: malformed models (zero dims, pooling below 2×2)
     /// return an error naming the offending layer.
-    pub fn shaped_layers(&self) -> Result<Vec<ShapedLayer>, String> {
+    pub fn shaped_layers(&self) -> Result<Vec<ShapedLayer>> {
         let (mut c, mut h, mut w) = self.input;
         if c == 0 || h == 0 || w == 0 {
-            return Err(format!("model {}: zero input dims", self.name));
+            return Err(err!("model {}: zero input dims", self.name));
         }
         let mut out = Vec::with_capacity(self.layers.len());
         for (index, spec) in self.layers.iter().enumerate() {
@@ -103,12 +106,12 @@ impl SnnModel {
             let (out_c, out_h, out_w) = match *spec {
                 LayerSpec::Conv { out_channels, kernel, stride, padding } => {
                     if kernel == 0 || stride == 0 || out_channels == 0 {
-                        return Err(format!("layer {index}: zero conv parameter"));
+                        return Err(err!("layer {index}: zero conv parameter"));
                     }
                     let eff_h = in_h + 2 * padding;
                     let eff_w = in_w + 2 * padding;
                     if eff_h < kernel || eff_w < kernel {
-                        return Err(format!(
+                        return Err(err!(
                             "layer {index}: kernel {kernel} larger than padded input {eff_h}x{eff_w}"
                         ));
                     }
@@ -120,13 +123,13 @@ impl SnnModel {
                 }
                 LayerSpec::AvgPool2 => {
                     if in_h < 2 || in_w < 2 {
-                        return Err(format!("layer {index}: pooling below 2x2 input"));
+                        return Err(err!("layer {index}: pooling below 2x2 input"));
                     }
                     (in_c, in_h / 2, in_w / 2)
                 }
                 LayerSpec::Linear { out_features } => {
                     if out_features == 0 {
-                        return Err(format!("layer {index}: zero linear width"));
+                        return Err(err!("layer {index}: zero linear width"));
                     }
                     // Flatten: treat the whole incoming fm as channels of a
                     // 1x1 map so the conv-workload machinery applies.

@@ -20,6 +20,7 @@ use crate::model::SnnModel;
 use crate::perfmodel::FpgaModel;
 use crate::session::{EvalRequest, EvalResult, Session};
 use crate::sparsity::SparsityProfile;
+use crate::spike::{self, LifConfig, SpikeEncoding, TemporalSparsity, TrafficModel};
 use crate::util::error::Result;
 use crate::util::table::{bar_chart, fmt_f, fmt_uj, Align, Table};
 use crate::workload::LayerWorkload;
@@ -346,6 +347,79 @@ pub fn table7_asic(ctx: &ReportCtx) -> Table {
     t
 }
 
+/// Simulate the context's model with the default LIF configuration and
+/// measure its temporal sparsity — the trace behind the spike report
+/// table when no external trace is supplied.
+pub fn spike_temporal(ctx: &ReportCtx) -> Result<TemporalSparsity> {
+    let trace = spike::simulate(&ctx.model, &LifConfig::default())?;
+    Ok(TemporalSparsity::from_trace(&trace))
+}
+
+/// Spike-trace energy table: scalar (nominal `Spar^l`) vs trace-driven
+/// temporal rates vs temporal + event-stream compression, across the
+/// five dataflow families on the reference architecture. The comparison
+/// the spike subsystem exists for: how much the constant-rate assumption
+/// and raw-bitmap traffic over- or under-state training energy.
+pub fn table_spike_modes(ctx: &ReportCtx, temporal: &TemporalSparsity) -> Table {
+    let mut reqs = Vec::with_capacity(Family::ALL.len() * 3);
+    for &fam in Family::ALL.iter() {
+        reqs.push(ctx.request(&ctx.arch, fam));
+        reqs.push(
+            EvalRequest::new(ctx.model.clone(), ctx.arch.clone(), fam)
+                .with_temporal(temporal.clone()),
+        );
+        reqs.push(
+            EvalRequest::new(ctx.model.clone(), ctx.arch.clone(), fam)
+                .with_temporal(temporal.clone())
+                .with_spike_encoding(SpikeEncoding::Auto),
+        );
+    }
+    let results: Vec<Arc<EvalResult>> = ctx
+        .session
+        .evaluate_many(&reqs)
+        .into_iter()
+        .collect::<Result<Vec<_>, _>>()
+        .expect("spike report evaluation");
+    // The per-layer encoding choices (deduplicated, in layer order).
+    let mut encodings: Vec<&'static str> = Vec::new();
+    for lt in &temporal.layers {
+        let name = TrafficModel::from_layer(lt).best().0.name();
+        if !encodings.contains(&name) {
+            encodings.push(name);
+        }
+    }
+    let mut t = Table::new(
+        format!(
+            "Spike-trace energy: scalar vs temporal vs event-compressed [{}]",
+            temporal.source
+        ),
+        &["dataflow", "scalar (uJ)", "temporal (uJ)", "compressed (uJ)", "vs scalar", "encoding"],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+    ]);
+    for (k, &fam) in Family::ALL.iter().enumerate() {
+        let scalar = &results[3 * k];
+        let temp = &results[3 * k + 1];
+        let comp = &results[3 * k + 2];
+        let delta = (comp.overall_j / scalar.overall_j - 1.0) * 100.0;
+        t.add_row(vec![
+            fam.name().into(),
+            fmt_uj(scalar.overall_j),
+            fmt_uj(temp.overall_j),
+            fmt_uj(comp.overall_j),
+            format!("{delta:+.1}%"),
+            encodings.join("/"),
+        ]);
+    }
+    t
+}
+
 /// Fig. 5: candidate architectures spread over energy intervals.
 /// Returns (table of all candidates, histogram text).
 pub fn fig5_energy_intervals(ctx: &ReportCtx, samples: usize) -> (Table, String) {
@@ -460,6 +534,10 @@ pub fn write_all(ctx: &ReportCtx, dir: &Path) -> std::io::Result<Vec<std::path::
     dump("table6_fpga", t.render(), Some(t.to_csv()))?;
     let t = table7_asic(ctx);
     dump("table7_asic", t.render(), Some(t.to_csv()))?;
+    let temporal = spike_temporal(ctx)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))?;
+    let t = table_spike_modes(ctx, &temporal);
+    dump("table8_spike_modes", t.render(), Some(t.to_csv()))?;
     let (t, txt) = fig5_energy_intervals(ctx, 4);
     dump("fig5_energy_intervals", format!("{txt}\n{}", t.render()), Some(t.to_csv()))?;
     dump("fig6_dataflow_breakdown", fig6_dataflow_breakdown(ctx), None)?;
@@ -502,6 +580,25 @@ mod tests {
         let (t, txt) = fig5_energy_intervals(&ctx, 2);
         assert!(t.n_rows() >= 4 * 5);
         assert!(txt.contains("optimum = 16x16 + Advanced WS"));
+    }
+
+    #[test]
+    fn spike_modes_table_compares_three_pricings() {
+        let ctx = ReportCtx::paper_default();
+        // A synthetic sparse trace keeps this test independent of the
+        // LIF simulator's firing levels.
+        let temporal = TemporalSparsity::constant(1, 6, 0.05);
+        let t = table_spike_modes(&ctx, &temporal);
+        assert_eq!(t.n_rows(), 5);
+        let txt = t.render();
+        for fam in Family::ALL {
+            assert!(txt.contains(fam.name()), "{}", fam.name());
+        }
+        assert!(txt.contains("compressed"));
+        // And the default simulated trace renders too.
+        let measured = spike_temporal(&ctx).unwrap();
+        assert_eq!(measured.layers.len(), 1);
+        assert!(table_spike_modes(&ctx, &measured).n_rows() == 5);
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! JSON encoding of [`EvalRequest`]/[`EvalResult`] — the stable wire
 //! schema (`DESIGN.md` documents it; `SCHEMA_VERSION` gates evolution).
 //!
-//! Schema v2 carries the full N-level hierarchy on architectures and a
-//! per-level energy list on operand breakdowns. v1 documents (the fixed
-//! Reg/SRAM/DRAM shape: an eight-macro `mem` list, `reg_j`/`sram_j`/
-//! `dram_j` operand fields) are still parsed and mapped onto the
-//! equivalent 3-level hierarchy; output is always v2.
+//! Schema v3 adds an optional `temporal` sparsity object and a
+//! `spike_encoding` option to requests; both default when absent, so v2
+//! documents parse unchanged. Schema v2 carries the full N-level
+//! hierarchy on architectures and a per-level energy list on operand
+//! breakdowns. v1 documents (the fixed Reg/SRAM/DRAM shape: an
+//! eight-macro `mem` list, `reg_j`/`sram_j`/`dram_j` operand fields) are
+//! still parsed and mapped onto the equivalent 3-level hierarchy; output
+//! is always v3.
 //!
 //! No `serde` offline; encodings are hand-rolled over
 //! [`crate::util::json::Json`], whose object keys are sorted so `dumps`
@@ -24,6 +27,8 @@ use crate::err;
 use crate::model::{LayerSpec, SnnModel};
 use crate::perfmodel::ChipMetrics;
 use crate::sparsity::SparsityProfile;
+use crate::spike::temporal::TemporalSparsity;
+use crate::spike::traffic::SpikeEncoding;
 use crate::util::error::Result;
 use crate::util::json::Json;
 
@@ -416,7 +421,8 @@ fn options_to_json(o: &EvalOptions) -> Json {
             "jitter_seed",
             o.jitter_seed.map(|s| Json::Str(s.to_string())).unwrap_or(Json::Null),
         )
-        .set("label", o.label.clone().map(Json::Str).unwrap_or(Json::Null));
+        .set("label", o.label.clone().map(Json::Str).unwrap_or(Json::Null))
+        .set("spike_encoding", Json::Str(o.spike_encoding.key().into()));
     j
 }
 
@@ -436,7 +442,15 @@ fn options_from_json(j: &Json) -> Result<EvalOptions> {
         Json::Null => None,
         v => Some(v.as_str().ok_or_else(|| err!("`label` is not a string"))?.to_string()),
     };
-    Ok(EvalOptions { activity, jitter_seed, label })
+    // Absent (v1/v2 documents) or null means raw bitmaps.
+    let spike_encoding = match j.get("spike_encoding") {
+        None | Some(Json::Null) => SpikeEncoding::Raw,
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| err!("`spike_encoding` is not a string"))?;
+            SpikeEncoding::from_key(s).ok_or_else(|| err!("unknown spike encoding `{s}`"))?
+        }
+    };
+    Ok(EvalOptions { activity, jitter_seed, label, spike_encoding })
 }
 
 // ---------------------------------------------------------------------------
@@ -451,17 +465,27 @@ impl EvalRequest {
             .set("arch", arch_to_json(&self.arch))
             .set("dataflow", Json::Str(dataflow_key(self.dataflow).into()))
             .set("sparsity", sparsity_to_json(&self.sparsity))
+            .set(
+                "temporal",
+                self.temporal.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
+            )
             .set("options", options_to_json(&self.options));
         j
     }
 
     pub fn from_json(j: &Json) -> Result<EvalRequest> {
         check_schema(j)?;
+        // Optional since v3; absent in v1/v2 documents.
+        let temporal = match j.get("temporal") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(TemporalSparsity::from_json(t)?),
+        };
         Ok(EvalRequest {
             model: model_from_json(get(j, "model")?)?,
             arch: arch_from_json(get(j, "arch")?)?,
             dataflow: dataflow_from_key(&text(j, "dataflow")?)?,
             sparsity: sparsity_from_json(get(j, "sparsity")?)?,
+            temporal,
             options: options_from_json(get(j, "options")?)?,
         })
     }
@@ -743,6 +767,46 @@ mod tests {
         assert_eq!(dataflow_from_key("mapper").unwrap(), Dataflow::MapperOptimal);
         assert_eq!(dataflow_key(Dataflow::MapperOptimal), "mapper");
         assert!(dataflow_from_key("systolic").is_err());
+    }
+
+    #[test]
+    fn temporal_requests_round_trip_and_v2_documents_still_parse() {
+        let req = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        )
+        .with_temporal(TemporalSparsity::constant(1, 6, 0.25))
+        .with_spike_encoding(SpikeEncoding::Auto);
+        let text = req.to_json().dumps();
+        let back = EvalRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(req, back);
+        assert_eq!(back.options.spike_encoding, SpikeEncoding::Auto);
+
+        // A v2-shaped document: no `temporal`, no `spike_encoding`, and
+        // an explicit schema 2 — must parse with the v3 defaults.
+        let plain = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        );
+        let mut v2 = plain.to_json();
+        if let Json::Obj(m) = &mut v2 {
+            m.remove("temporal");
+            m.insert("schema".into(), Json::Num(2.0));
+            if let Some(Json::Obj(o)) = m.get_mut("options") {
+                o.remove("spike_encoding");
+            }
+        }
+        let back = EvalRequest::from_json(&v2).unwrap();
+        assert_eq!(back.temporal, None);
+        assert_eq!(back.options.spike_encoding, SpikeEncoding::Raw);
+        assert_eq!(back.model, plain.model);
+
+        // Unknown encodings are rejected by name.
+        let bad = text.replacen("\"spike_encoding\":\"auto\"", "\"spike_encoding\":\"zip\"", 1);
+        let e = EvalRequest::from_json_str(&bad).unwrap_err();
+        assert!(e.to_string().contains("zip"), "{e}");
     }
 
     #[test]

@@ -54,25 +54,32 @@ use crate::arch::{ArchPool, Architecture};
 use crate::config::EnergyConfig;
 use crate::dataflow::templates::Family;
 use crate::energy::{
-    conv_energy, model_energy_for_family, unit_energy, ConvEnergy, LayerEnergy,
+    conv_energy, layer_energy_for_family_temporal, model_energy_for_family, unit_energy,
+    ConvEnergy, LayerEnergy,
 };
 use crate::model::SnnModel;
 use crate::perfmodel::{chip_metrics, AreaModel, ChipMetrics};
 use crate::sparsity::SparsityProfile;
+use crate::spike::temporal::TemporalSparsity;
+use crate::spike::traffic::SpikeEncoding;
 use crate::util::error::Result;
 use crate::util::prng::SplitMix64;
 use crate::workload::{generate, LayerWorkload};
 
 /// Version of the `EvalRequest`/`EvalResult` JSON schema.
 ///
-/// * **v2** (current): architectures carry a full `hierarchy` object
-///   (N levels, per-level energy rule / capacity / residency), and
-///   operand breakdowns report one energy entry per hierarchy level.
+/// * **v3** (current): requests may carry an optional `temporal`
+///   sparsity object (per-layer × per-timestep firing statistics) and a
+///   `spike_encoding` option (`"raw"`/`"auto"`). Both are optional on
+///   input, so v2 documents parse unchanged.
+/// * **v2** (accepted on input): architectures carry a full `hierarchy`
+///   object (N levels, per-level energy rule / capacity / residency),
+///   and operand breakdowns report one energy entry per hierarchy level.
 /// * **v1** (accepted on input): the fixed Reg/SRAM/DRAM shape — an
 ///   eight-macro `mem` list on architectures and `reg_j`/`sram_j`/
 ///   `dram_j` fields on operands. Parsed into the equivalent 3-level
 ///   hierarchy; see DESIGN.md for the compatibility rules.
-pub const SCHEMA_VERSION: u32 = 2;
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// Oldest input schema still parsed.
 pub const MIN_SCHEMA_VERSION: u32 = 1;
@@ -125,6 +132,10 @@ pub struct EvalOptions {
     pub jitter_seed: Option<u64>,
     /// Display label override (e.g. `"Advanced WS~rand3"`).
     pub label: Option<String>,
+    /// How spike-map traffic is priced: raw bitmaps (default) or the
+    /// per-boundary cheapest of raw/RLE/AER (`Auto`, which requires the
+    /// request to carry a temporal-sparsity source).
+    pub spike_encoding: SpikeEncoding,
 }
 
 /// One evaluation scenario: model × architecture × dataflow × sparsity.
@@ -134,6 +145,12 @@ pub struct EvalRequest {
     pub arch: Architecture,
     pub dataflow: Dataflow,
     pub sparsity: SparsityProfile,
+    /// Optional per-layer × per-timestep activity source. When set, the
+    /// per-layer activity evaluated is the trace's (exact) time-averaged
+    /// rates — `sparsity` is ignored — and `options.spike_encoding ==
+    /// Auto` additionally prices spike-map traffic through the
+    /// event-stream model.
+    pub temporal: Option<TemporalSparsity>,
     pub options: EvalOptions,
 }
 
@@ -151,12 +168,26 @@ impl EvalRequest {
             arch,
             dataflow: dataflow.into(),
             sparsity: SparsityProfile { source: "default".into(), per_layer: Vec::new() },
+            temporal: None,
             options: EvalOptions::default(),
         }
     }
 
     pub fn with_sparsity(mut self, sparsity: SparsityProfile) -> EvalRequest {
         self.sparsity = sparsity;
+        self
+    }
+
+    /// Attach a temporal-sparsity source (takes precedence over the
+    /// scalar profile).
+    pub fn with_temporal(mut self, temporal: TemporalSparsity) -> EvalRequest {
+        self.temporal = Some(temporal);
+        self
+    }
+
+    /// Select the spike-map traffic encoding.
+    pub fn with_spike_encoding(mut self, encoding: SpikeEncoding) -> EvalRequest {
+        self.options.spike_encoding = encoding;
         self
     }
 
@@ -219,6 +250,14 @@ impl EvalRequest {
                 let _ = write!(key, "l{}:{l};", l.len());
             }
             None => key.push_str("l-;"),
+        }
+        match &self.temporal {
+            Some(t) => t.fingerprint_into(&mut key),
+            None => key.push_str("t-;"),
+        }
+        match self.options.spike_encoding {
+            SpikeEncoding::Raw => key.push_str("kR;"),
+            SpikeEncoding::Auto => key.push_str("kA;"),
         }
         key
     }
@@ -604,7 +643,45 @@ impl Inner {
 
     fn compute(&self, req: &EvalRequest) -> Result<EvalResult> {
         let default_activity = req.options.activity.unwrap_or(self.cfg.nominal_activity);
-        let wls = self.workloads_for(&req.model, &req.sparsity.per_layer, default_activity)?;
+        // A temporal source supplies the per-layer activity (its exact
+        // time-averaged rates); otherwise the scalar profile does.
+        let temporal_rates = req.temporal.as_ref().map(|t| t.mean_rates());
+        let rates: &[f64] = match &temporal_rates {
+            Some(r) => r,
+            None => &req.sparsity.per_layer,
+        };
+        let wls = self.workloads_for(&req.model, rates, default_activity)?;
+        if req.options.spike_encoding == SpikeEncoding::Auto {
+            let Some(temporal) = &req.temporal else {
+                return Err(crate::util::error::Error::new(
+                    "spike_encoding=auto requires a temporal sparsity source",
+                ));
+            };
+            temporal.validate()?;
+            let (Dataflow::Family(fam), None) = (req.dataflow, req.options.jitter_seed) else {
+                return Err(crate::util::error::Error::new(
+                    "event-stream spike pricing applies to family templates \
+                     (no jitter, no mapper optimum)",
+                ));
+            };
+            let layers: Vec<LayerEnergy> = wls
+                .iter()
+                .enumerate()
+                .map(|(i, wl)| {
+                    layer_energy_for_family_temporal(
+                        wl,
+                        fam,
+                        &req.arch,
+                        &self.cfg,
+                        temporal.layer_for(i),
+                        SpikeEncoding::Auto,
+                    )
+                })
+                .collect();
+            let chip = chip_metrics(&layers, &req.arch, &self.cfg, &self.area);
+            let activity = wls.iter().map(|wl| wl.fp.activity).collect();
+            return Ok(EvalResult::from_layers(req, activity, &layers, chip));
+        }
         let layers: Vec<LayerEnergy> = match (req.dataflow, req.options.jitter_seed) {
             (Dataflow::Family(fam), None) => {
                 model_energy_for_family(&wls, fam, &req.arch, &self.cfg)
@@ -953,5 +1030,91 @@ mod tests {
             session.evaluate(&req).unwrap();
         }
         assert!(session.inner.results.lock().unwrap().len() <= 3);
+    }
+
+    #[test]
+    fn constant_temporal_source_matches_scalar_profile_bitwise() {
+        // The scalar profile is the degenerate case of the temporal one:
+        // a constant-rate source must evaluate bit-identically.
+        let session = Session::builder().threads(1).build();
+        let rate = 0.1 + 0.2; // deliberately not exactly representable
+        for fam in Family::ALL {
+            let scalar = session
+                .evaluate(
+                    &EvalRequest::new(
+                        SnnModel::paper_layer(),
+                        Architecture::paper_default(),
+                        fam,
+                    )
+                    .with_sparsity(SparsityProfile::nominal(1, rate)),
+                )
+                .unwrap();
+            let temporal = session
+                .evaluate(
+                    &EvalRequest::new(
+                        SnnModel::paper_layer(),
+                        Architecture::paper_default(),
+                        fam,
+                    )
+                    .with_temporal(crate::spike::TemporalSparsity::constant(1, 6, rate)),
+                )
+                .unwrap();
+            assert!(!Arc::ptr_eq(&scalar, &temporal), "distinct cache entries");
+            assert_eq!(*scalar, *temporal, "{}", fam.name());
+            assert_eq!(scalar.overall_j.to_bits(), temporal.overall_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn auto_encoding_requires_a_temporal_source() {
+        let session = Session::builder().threads(1).build();
+        let err = session
+            .evaluate(
+                &paper_request().with_spike_encoding(crate::spike::SpikeEncoding::Auto),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("temporal"), "{err}");
+    }
+
+    #[test]
+    fn auto_encoding_rejects_mapper_and_jitter() {
+        let session = Session::builder().threads(1).build();
+        let t = crate::spike::TemporalSparsity::constant(1, 6, 0.02);
+        let mapper = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Dataflow::MapperOptimal,
+        )
+        .with_temporal(t.clone())
+        .with_spike_encoding(crate::spike::SpikeEncoding::Auto);
+        assert!(session.evaluate(&mapper).is_err());
+        let jittered = paper_request()
+            .with_temporal(t)
+            .with_spike_encoding(crate::spike::SpikeEncoding::Auto)
+            .jittered(3, "Advanced WS~rand0".into());
+        assert!(session.evaluate(&jittered).is_err());
+    }
+
+    #[test]
+    fn auto_encoding_saves_energy_on_sparse_traces() {
+        let session = Session::builder().threads(1).build();
+        let t = crate::spike::TemporalSparsity::constant(1, 6, 0.02);
+        let raw = session
+            .evaluate(&paper_request().with_temporal(t.clone()))
+            .unwrap();
+        let auto = session
+            .evaluate(
+                &paper_request()
+                    .with_temporal(t)
+                    .with_spike_encoding(crate::spike::SpikeEncoding::Auto),
+            )
+            .unwrap();
+        assert!(
+            auto.overall_j < raw.overall_j,
+            "auto {} !< raw {}",
+            auto.overall_j,
+            raw.overall_j
+        );
+        assert_eq!(auto.compute_j, raw.compute_j, "compression is a traffic effect");
     }
 }

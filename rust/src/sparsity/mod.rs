@@ -11,6 +11,8 @@
 //!    (`trainer::RunLog`) from an actual BPTT run through the PJRT
 //!    runtime — the closed loop the reproduction demonstrates end to end.
 
+use crate::err;
+use crate::util::error::Result;
 use crate::util::json::Json;
 
 /// Per-layer spike-activity multipliers (`Spar^l` in the paper's
@@ -47,20 +49,21 @@ impl SparsityProfile {
         }
     }
 
-    /// Parse from a trainer run-log JSON (`{"firing_rates": [..]}` plus
-    /// metadata), as written by `trainer::RunLog::save`.
-    pub fn from_run_log(json: &Json) -> Result<SparsityProfile, String> {
+    /// Parse from a run-log JSON (`{"firing_rates": [..]}` plus
+    /// metadata), as written by `trainer::RunLog::save` and by
+    /// `eocas spike-sim`.
+    pub fn from_run_log(json: &Json) -> Result<SparsityProfile> {
         let rates = json
             .get("firing_rates")
             .and_then(|v| v.as_arr())
-            .ok_or("run log missing `firing_rates`")?;
+            .ok_or_else(|| err!("run log missing `firing_rates`"))?;
         let per_layer: Option<Vec<f64>> = rates.iter().map(|v| v.as_f64()).collect();
-        let per_layer = per_layer.ok_or("non-numeric firing rate")?;
+        let per_layer = per_layer.ok_or_else(|| err!("non-numeric firing rate"))?;
         if per_layer.is_empty() {
-            return Err("empty firing_rates".into());
+            return Err(err!("empty firing_rates"));
         }
         if per_layer.iter().any(|r| !(0.0..=1.0).contains(r)) {
-            return Err("firing rate outside [0,1]".into());
+            return Err(err!("firing rate outside [0,1]"));
         }
         // A run log without a `step` field is still usable — but label it
         // honestly instead of the old phantom `measured(step=-1)`.
@@ -72,9 +75,9 @@ impl SparsityProfile {
     }
 
     /// Load from a run-log file on disk.
-    pub fn load(path: &std::path::Path) -> Result<SparsityProfile, String> {
+    pub fn load(path: &std::path::Path) -> Result<SparsityProfile> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+            .map_err(|e| err!("cannot read {}: {e}", path.display()))?;
         Self::from_run_log(&Json::parse(&text)?)
     }
 
@@ -147,5 +150,69 @@ mod tests {
     fn firing_rates_clamp() {
         let p = SparsityProfile::from_firing_rates(&[-0.1, 0.5, 1.2], "t");
         assert_eq!(p.per_layer, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn run_log_round_trips_rates_bit_exactly() {
+        // Emit a run log from a profile's rates, parse it back, and the
+        // rates must survive to the bit (no clamp or format round-off).
+        let rates = [0.1 + 0.2, 0.0, 1.0, 0.123456789];
+        let mut log = Json::obj();
+        log.set("firing_rates", Json::from_f64s(&rates))
+            .set("step", Json::Num(42.0));
+        let p = SparsityProfile::from_run_log(&log).unwrap();
+        assert_eq!(p.per_layer.len(), rates.len());
+        for (a, b) in p.per_layer.iter().zip(rates.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(p.source, "measured(step=42)");
+        // And a second trip through serialized text.
+        let text = log.dumps();
+        let p2 = SparsityProfile::from_run_log(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn non_numeric_rates_are_named_errors() {
+        let j = Json::parse(r#"{"firing_rates": [0.2, "high", 0.1]}"#).unwrap();
+        let e = SparsityProfile::from_run_log(&j).unwrap_err();
+        assert!(e.to_string().contains("non-numeric"), "{e}");
+        // A scalar where the array should be is "missing", not a panic.
+        let j = Json::parse(r#"{"firing_rates": 0.5}"#).unwrap();
+        let e = SparsityProfile::from_run_log(&j).unwrap_err();
+        assert!(e.to_string().contains("firing_rates"), "{e}");
+    }
+
+    #[test]
+    fn empty_and_out_of_range_rates_are_named_errors() {
+        let e = SparsityProfile::from_run_log(
+            &Json::parse(r#"{"firing_rates": []}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("empty"), "{e}");
+        for bad in [r#"{"firing_rates": [-0.01]}"#, r#"{"firing_rates": [1.01]}"#] {
+            let e = SparsityProfile::from_run_log(&Json::parse(bad).unwrap()).unwrap_err();
+            assert!(e.to_string().contains("outside"), "{e}");
+        }
+    }
+
+    #[test]
+    fn boundary_rates_pass_unclamped() {
+        // Exactly 0.0 and 1.0 are legal firing rates: the run-log parser
+        // accepts them and the clamp in `from_firing_rates` is an exact
+        // no-op at the boundaries.
+        let j = Json::parse(r#"{"firing_rates": [0.0, 1.0]}"#).unwrap();
+        let p = SparsityProfile::from_run_log(&j).unwrap();
+        assert_eq!(p.per_layer, vec![0.0, 1.0]);
+        let q = SparsityProfile::from_firing_rates(&[0.0, 1.0], "t");
+        assert_eq!(q.per_layer, vec![0.0, 1.0]);
+        assert_eq!(q.sparsity_view(), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn load_reports_missing_files_with_path() {
+        let e = SparsityProfile::load(std::path::Path::new("/no/such/run_log.json"))
+            .unwrap_err();
+        assert!(e.to_string().contains("run_log.json"), "{e}");
     }
 }

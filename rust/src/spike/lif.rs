@@ -1,0 +1,446 @@
+//! Deterministic, dependency-free LIF forward simulator.
+//!
+//! Runs an [`SnnModel`] forward for `T` timesteps without PJRT: inputs are
+//! rate-encoded into Poisson (Bernoulli-per-step) spike trains, each
+//! convolution is evaluated *event-driven* (only non-zero inputs scatter
+//! weight patches into the membrane currents — the evaluation style an
+//! energy simulator for SNNs must capture), and every compute layer's LIF
+//! somata integrate, fire and reset. The output is a bit-packed
+//! [`SpikeRaster`] per compute layer, the raw material for
+//! [`crate::spike::TemporalSparsity`].
+//!
+//! Weights and input intensities are synthesized from a single
+//! [`SplitMix64`] seed (He-style init), so the whole trace is reproducible
+//! from `(model, LifConfig)` on every platform. The simulator models one
+//! batch element; firing statistics are per-sample estimates.
+
+use crate::err;
+use crate::model::{LayerSpec, ShapedLayer, SnnModel};
+use crate::util::error::Result;
+use crate::util::prng::SplitMix64;
+
+/// LIF neuron + input-encoding parameters for a trace run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifConfig {
+    /// Firing threshold `V_th` (eq. 1's comparator).
+    pub threshold: f64,
+    /// Membrane leak `λ` in `[0, 1]`: `u_t = λ·u_{t-1} + I_t`.
+    pub decay: f64,
+    /// Peak Bernoulli rate of the Poisson input encoding: an input
+    /// element with intensity `x ∈ [0,1)` spikes with probability
+    /// `x · input_rate` each timestep.
+    pub input_rate: f64,
+    /// `true`: subtract `V_th` on spike (soft reset); `false`: reset the
+    /// membrane to zero (the paper's hard reset).
+    pub soft_reset: bool,
+    /// Seed for input intensities, input spike trains and weights.
+    pub seed: u64,
+}
+
+impl Default for LifConfig {
+    fn default() -> Self {
+        LifConfig {
+            threshold: 1.0,
+            decay: 0.5,
+            input_rate: 0.5,
+            soft_reset: false,
+            seed: 0xE0CA5,
+        }
+    }
+}
+
+impl LifConfig {
+    fn validate(&self) -> Result<()> {
+        if !(self.threshold.is_finite() && self.threshold > 0.0) {
+            return Err(err!("lif: threshold {} must be finite and > 0", self.threshold));
+        }
+        if !(0.0..=1.0).contains(&self.decay) {
+            return Err(err!("lif: decay {} outside [0, 1]", self.decay));
+        }
+        if !(0.0..=1.0).contains(&self.input_rate) {
+            return Err(err!("lif: input_rate {} outside [0, 1]", self.input_rate));
+        }
+        Ok(())
+    }
+}
+
+/// Bit-packed spike record of one compute layer: `timesteps` slices of
+/// `neurons` bits each.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpikeRaster {
+    /// Model layer index this raster belongs to.
+    pub layer: usize,
+    /// Neurons per timestep slice (`M × P × Q` of the layer).
+    pub neurons: usize,
+    pub timesteps: usize,
+    words_per_step: usize,
+    bits: Vec<u64>,
+}
+
+impl SpikeRaster {
+    pub fn new(layer: usize, neurons: usize, timesteps: usize) -> SpikeRaster {
+        let words_per_step = neurons.div_ceil(64).max(1);
+        SpikeRaster {
+            layer,
+            neurons,
+            timesteps,
+            words_per_step,
+            bits: vec![0u64; words_per_step * timesteps],
+        }
+    }
+
+    #[inline]
+    fn word(&self, t: usize, i: usize) -> (usize, u64) {
+        debug_assert!(t < self.timesteps && i < self.neurons);
+        (t * self.words_per_step + i / 64, 1u64 << (i % 64))
+    }
+
+    /// Record a spike of neuron `i` at timestep `t`.
+    pub fn set(&mut self, t: usize, i: usize) {
+        let (w, m) = self.word(t, i);
+        self.bits[w] |= m;
+    }
+
+    /// Did neuron `i` spike at timestep `t`?
+    pub fn get(&self, t: usize, i: usize) -> bool {
+        let (w, m) = self.word(t, i);
+        self.bits[w] & m != 0
+    }
+
+    /// Spike count of timestep `t` (popcount over the slice).
+    pub fn events_at(&self, t: usize) -> u64 {
+        let base = t * self.words_per_step;
+        self.bits[base..base + self.words_per_step]
+            .iter()
+            .map(|w| w.count_ones() as u64)
+            .sum()
+    }
+
+    /// Firing rate of timestep `t` in `[0, 1]`.
+    pub fn rate_at(&self, t: usize) -> f64 {
+        if self.neurons == 0 {
+            return 0.0;
+        }
+        self.events_at(t) as f64 / self.neurons as f64
+    }
+
+    /// Total spikes across all timesteps.
+    pub fn total_events(&self) -> u64 {
+        (0..self.timesteps).map(|t| self.events_at(t)).sum()
+    }
+}
+
+/// The result of one forward trace: one raster per compute layer, in
+/// model (compute-ordinal) order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpikeTrace {
+    pub model: String,
+    pub timesteps: usize,
+    pub config: LifConfig,
+    pub rasters: Vec<SpikeRaster>,
+}
+
+/// Per-layer simulation state: weights + persistent membrane.
+struct LayerState {
+    shaped: ShapedLayer,
+    /// He-initialized weights, `[m][c][r][s]` (conv) or `[m][i]`
+    /// (linear) flattened. Empty for pooling layers.
+    weights: Vec<f32>,
+    /// Membrane potential per output neuron (compute layers only).
+    membrane: Vec<f32>,
+}
+
+fn he_weights(rng: &mut SplitMix64, n: usize, fan_in: usize) -> Vec<f32> {
+    let scale = (2.0 / fan_in.max(1) as f64).sqrt();
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+/// Run the LIF forward trace. Returns one [`SpikeRaster`] per compute
+/// layer (Conv/Linear), indexed in the same compute order the workload
+/// generator and [`crate::sparsity::SparsityProfile`] use.
+pub fn simulate(model: &SnnModel, cfg: &LifConfig) -> Result<SpikeTrace> {
+    cfg.validate()?;
+    let shaped = model.shaped_layers()?;
+    let timesteps = model.timesteps as usize;
+    if timesteps == 0 {
+        return Err(err!("lif: model `{}` has zero timesteps", model.name));
+    }
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut rng_intensity = rng.split();
+    let mut rng_input = rng.split();
+    let mut rng_weights = rng.split();
+
+    // Input pixel intensities in [0, 1): the synthetic "image" the rate
+    // encoder samples each timestep.
+    let (in_c, in_h, in_w) = model.input;
+    let n_input = in_c as usize * in_h as usize * in_w as usize;
+    let intensity: Vec<f64> =
+        (0..n_input).map(|_| rng_intensity.next_f64()).collect();
+
+    // Per-layer weights + membranes.
+    let mut layers: Vec<LayerState> = Vec::with_capacity(shaped.len());
+    for l in &shaped {
+        let (weights, membrane) = match l.spec {
+            LayerSpec::Conv { .. } | LayerSpec::Linear { .. } => {
+                let k = l.kernel() as usize;
+                let fan_in = l.in_c as usize * k * k;
+                let n_out = l.out_c as usize * l.out_h as usize * l.out_w as usize;
+                let mut wrng = rng_weights.split();
+                (
+                    he_weights(&mut wrng, l.in_c as usize * l.out_c as usize * k * k, fan_in),
+                    vec![0.0f32; n_out],
+                )
+            }
+            LayerSpec::AvgPool2 => (Vec::new(), Vec::new()),
+        };
+        layers.push(LayerState { shaped: l.clone(), weights, membrane });
+    }
+    let mut rasters: Vec<SpikeRaster> = shaped
+        .iter()
+        .filter(|l| l.is_compute())
+        .map(|l| {
+            SpikeRaster::new(
+                l.index,
+                l.out_c as usize * l.out_h as usize * l.out_w as usize,
+                timesteps,
+            )
+        })
+        .collect();
+
+    for t in 0..timesteps {
+        // Rate-encode the input: Bernoulli(intensity · input_rate).
+        let mut act: Vec<f32> = intensity
+            .iter()
+            .map(|&x| {
+                if rng_input.bernoulli(x * cfg.input_rate) {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let mut compute_idx = 0usize;
+        for state in layers.iter_mut() {
+            match state.shaped.spec {
+                LayerSpec::AvgPool2 => {
+                    act = avg_pool2(&act, &state.shaped);
+                }
+                LayerSpec::Conv { .. } | LayerSpec::Linear { .. } => {
+                    let current = forward_layer(&act, state);
+                    act = lif_step(state, &current, cfg, t, &mut rasters[compute_idx]);
+                    compute_idx += 1;
+                }
+            }
+        }
+    }
+
+    Ok(SpikeTrace {
+        model: model.name.clone(),
+        timesteps,
+        config: cfg.clone(),
+        rasters,
+    })
+}
+
+/// Event-driven convolution / linear forward: only non-zero inputs
+/// scatter weight contributions into the output currents.
+fn forward_layer(act: &[f32], state: &LayerState) -> Vec<f32> {
+    let l = &state.shaped;
+    let n_out = l.out_c as usize * l.out_h as usize * l.out_w as usize;
+    let mut current = vec![0.0f32; n_out];
+    match l.spec {
+        LayerSpec::Linear { .. } => {
+            // current[m] += v · w[m][i] for each non-zero input i.
+            let cin = l.in_c as usize;
+            debug_assert_eq!(act.len(), cin);
+            for (i, &v) in act.iter().enumerate() {
+                if v == 0.0 {
+                    continue;
+                }
+                for (m, cur) in current.iter_mut().enumerate() {
+                    *cur += v * state.weights[m * cin + i];
+                }
+            }
+        }
+        LayerSpec::Conv { kernel, stride, padding, .. } => {
+            let (k, st, pad) = (kernel as usize, stride as usize, padding as usize);
+            let (cin, ih, iw) = (l.in_c as usize, l.in_h as usize, l.in_w as usize);
+            let (m_out, oh, ow) = (l.out_c as usize, l.out_h as usize, l.out_w as usize);
+            debug_assert_eq!(act.len(), cin * ih * iw);
+            for c in 0..cin {
+                for y in 0..ih {
+                    for x in 0..iw {
+                        let v = act[(c * ih + y) * iw + x];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        // Scatter: every (r, s) this input feeds.
+                        for r in 0..k {
+                            let py = y + pad;
+                            if py < r || (py - r) % st != 0 {
+                                continue;
+                            }
+                            let p = (py - r) / st;
+                            if p >= oh {
+                                continue;
+                            }
+                            for s in 0..k {
+                                let qx = x + pad;
+                                if qx < s || (qx - s) % st != 0 {
+                                    continue;
+                                }
+                                let q = (qx - s) / st;
+                                if q >= ow {
+                                    continue;
+                                }
+                                let wbase = (c * k + r) * k + s;
+                                let wstride = cin * k * k;
+                                for m in 0..m_out {
+                                    current[(m * oh + p) * ow + q] +=
+                                        v * state.weights[m * wstride + wbase];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        LayerSpec::AvgPool2 => unreachable!("pooling handled by the caller"),
+    }
+    current
+}
+
+/// One LIF integrate-fire-reset step; returns the layer's output spike
+/// map (1.0 / 0.0) and records it into the raster.
+fn lif_step(
+    state: &mut LayerState,
+    current: &[f32],
+    cfg: &LifConfig,
+    t: usize,
+    raster: &mut SpikeRaster,
+) -> Vec<f32> {
+    let decay = cfg.decay as f32;
+    let th = cfg.threshold as f32;
+    let mut out = vec![0.0f32; current.len()];
+    for (i, (&inp, u)) in current.iter().zip(state.membrane.iter_mut()).enumerate() {
+        let mut v = decay * *u + inp;
+        if v >= th {
+            raster.set(t, i);
+            out[i] = 1.0;
+            v = if cfg.soft_reset { v - th } else { 0.0 };
+        }
+        *u = v;
+    }
+    out
+}
+
+/// 2×2 average pooling over an activation map (matches
+/// [`SnnModel::shaped_layers`]' floor semantics: only full blocks).
+fn avg_pool2(act: &[f32], l: &ShapedLayer) -> Vec<f32> {
+    let (c_n, ih, iw) = (l.in_c as usize, l.in_h as usize, l.in_w as usize);
+    let (oh, ow) = (l.out_h as usize, l.out_w as usize);
+    debug_assert_eq!(act.len(), c_n * ih * iw);
+    let mut out = vec![0.0f32; c_n * oh * ow];
+    for c in 0..c_n {
+        for p in 0..oh {
+            for q in 0..ow {
+                let (y, x) = (2 * p, 2 * q);
+                let s = act[(c * ih + y) * iw + x]
+                    + act[(c * ih + y) * iw + x + 1]
+                    + act[(c * ih + y + 1) * iw + x]
+                    + act[(c * ih + y + 1) * iw + x + 1];
+                out[(c * oh + p) * ow + q] = 0.25 * s;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A config that fires readily (low threshold, dense input) so tests
+    /// don't depend on He-init tail probabilities.
+    fn eager() -> LifConfig {
+        LifConfig { threshold: 0.05, input_rate: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn raster_bit_accounting() {
+        let mut r = SpikeRaster::new(0, 70, 2);
+        r.set(0, 0);
+        r.set(0, 69);
+        r.set(1, 63);
+        assert!(r.get(0, 0) && r.get(0, 69) && r.get(1, 63));
+        assert!(!r.get(1, 0));
+        assert_eq!(r.events_at(0), 2);
+        assert_eq!(r.events_at(1), 1);
+        assert_eq!(r.total_events(), 3);
+        assert!((r.rate_at(0) - 2.0 / 70.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_seed() {
+        let m = SnnModel::paper_layer();
+        let a = simulate(&m, &eager()).unwrap();
+        let b = simulate(&m, &eager()).unwrap();
+        assert_eq!(a, b, "same seed must reproduce the same trace");
+        let c = simulate(&m, &LifConfig { seed: 7, ..eager() }).unwrap();
+        assert_ne!(a.rasters, c.rasters, "different seed, different spikes");
+    }
+
+    #[test]
+    fn trace_covers_compute_layers_and_fires() {
+        let m = SnnModel::tiny_snn(1, 4, 10);
+        let trace = simulate(&m, &eager()).unwrap();
+        // tiny_snn: conv, pool, conv, pool, linear -> 3 compute layers.
+        assert_eq!(trace.rasters.len(), 3);
+        assert_eq!(trace.timesteps, 4);
+        for r in &trace.rasters {
+            assert!(r.neurons > 0);
+            for t in 0..r.timesteps {
+                let rate = r.rate_at(t);
+                assert!((0.0..=1.0).contains(&rate), "rate {rate}");
+            }
+        }
+        // With a 0.05 threshold and saturated input the first layer must
+        // produce spikes somewhere in the trace.
+        assert!(trace.rasters[0].total_events() > 0, "first layer never fired");
+    }
+
+    #[test]
+    fn higher_threshold_fires_less() {
+        let m = SnnModel::tiny_snn(1, 4, 10);
+        let low = simulate(&m, &eager()).unwrap();
+        let high =
+            simulate(&m, &LifConfig { threshold: 3.0, input_rate: 1.0, ..Default::default() })
+                .unwrap();
+        let total = |t: &SpikeTrace| -> u64 { t.rasters.iter().map(|r| r.total_events()).sum() };
+        assert!(total(&high) < total(&low), "{} !< {}", total(&high), total(&low));
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let m = SnnModel::paper_layer();
+        assert!(simulate(&m, &LifConfig { threshold: 0.0, ..Default::default() }).is_err());
+        assert!(simulate(&m, &LifConfig { decay: 1.5, ..Default::default() }).is_err());
+        assert!(simulate(&m, &LifConfig { input_rate: -0.1, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn avg_pool_averages() {
+        let l = ShapedLayer {
+            index: 1,
+            spec: LayerSpec::AvgPool2,
+            in_c: 1,
+            in_h: 2,
+            in_w: 2,
+            out_c: 1,
+            out_h: 1,
+            out_w: 1,
+        };
+        let out = avg_pool2(&[1.0, 0.0, 1.0, 0.0], &l);
+        assert_eq!(out, vec![0.5]);
+    }
+}

@@ -1,0 +1,34 @@
+//! Event-driven spike-trace simulation + temporal sparsity (the
+//! subsystem behind `eocas spike-sim`).
+//!
+//! The paper's Contribution 1 is the high sparsity of spike signals, yet
+//! a scalar `Spar^l` per layer flattens *when* and *where* spikes happen.
+//! This subsystem recovers the temporal axis without PJRT:
+//!
+//! 1. [`lif`] — a deterministic, dependency-free LIF forward simulator
+//!    over [`crate::model::SnnModel`] (membrane decay, threshold, reset;
+//!    SplitMix64-seeded Poisson/rate input encoding, He-init weights)
+//!    that runs `timesteps × layers` event-driven and emits bit-packed
+//!    [`SpikeRaster`]s.
+//! 2. [`temporal`] — [`TemporalSparsity`]: per-layer × per-timestep
+//!    firing rates, event counts and run-length/burst statistics. Scalar
+//!    [`crate::sparsity::SparsityProfile`]s are the time-averaged
+//!    degenerate case (bit-exactly, pinned by the oracle tests).
+//! 3. [`traffic`] — the event-stream traffic model: spike-map movement
+//!    through the N-level hierarchy priced as raw bitmaps vs RLE/AER
+//!    event streams, choosing per transfer boundary the cheaper
+//!    encoding.
+//!
+//! Sessions consume all three: an [`crate::session::EvalRequest`] can
+//! carry a [`TemporalSparsity`] source and a
+//! [`traffic::SpikeEncoding`] switch, and `eocas spike-sim` writes run
+//! logs that both [`crate::sparsity::SparsityProfile::from_run_log`] and
+//! [`TemporalSparsity::load`] parse.
+
+pub mod lif;
+pub mod temporal;
+pub mod traffic;
+
+pub use lif::{simulate, LifConfig, SpikeRaster, SpikeTrace};
+pub use temporal::{LayerTemporal, TemporalSparsity};
+pub use traffic::{Encoding, SpikeEncoding, TrafficModel};

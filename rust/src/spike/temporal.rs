@@ -1,0 +1,501 @@
+//! Temporal sparsity profiles: per-layer × per-timestep firing activity.
+//!
+//! A [`TemporalSparsity`] generalizes the scalar
+//! [`SparsityProfile`](crate::sparsity::SparsityProfile): instead of one
+//! `Spar^l` per layer it carries one firing rate per `(layer, timestep)`
+//! plus the event counts and run-length/burst statistics the
+//! event-stream traffic model ([`crate::spike::traffic`]) prices
+//! compression from. Scalar profiles are the time-averaged degenerate
+//! case — for a constant-rate raster [`LayerTemporal::mean_rate`] returns
+//! the rate *exactly* (no float re-summation), which is what pins the
+//! temporal evaluation path bit-identical to the scalar one.
+
+use crate::err;
+use crate::sparsity::SparsityProfile;
+use crate::spike::lif::{SpikeRaster, SpikeTrace};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Temporal firing statistics of one compute layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerTemporal {
+    /// Model layer index.
+    pub layer: usize,
+    /// Neurons per timestep slice.
+    pub neurons: u64,
+    /// Firing rate per timestep, each in `[0, 1]`.
+    pub rate_per_step: Vec<f64>,
+    /// Spike count per timestep.
+    pub events_per_step: Vec<u64>,
+    /// Mean length of runs of consecutive spikes along the neuron axis
+    /// within a timestep slice (burstiness in space; RLE-friendliness).
+    pub mean_spike_run: f64,
+    /// RLE token density: total runs (spike runs + silent runs) per
+    /// raster bit. `RLE bits/raw bit = run_density × token width`.
+    pub run_density: f64,
+    /// Fraction of spikes whose neuron also fired at the previous
+    /// timestep (temporal burstiness).
+    pub burst_fraction: f64,
+}
+
+impl LayerTemporal {
+    /// Measure a raster slice-by-slice.
+    pub fn from_raster(r: &SpikeRaster) -> LayerTemporal {
+        let mut rate_per_step = Vec::with_capacity(r.timesteps);
+        let mut events_per_step = Vec::with_capacity(r.timesteps);
+        let mut runs_total = 0u64;
+        let mut spike_runs = 0u64;
+        let mut spike_run_len = 0u64;
+        let mut repeat_events = 0u64;
+        let mut events_after_t0 = 0u64;
+        for t in 0..r.timesteps {
+            events_per_step.push(r.events_at(t));
+            rate_per_step.push(r.rate_at(t));
+            // Run-length walk over the slice.
+            let mut prev = false;
+            let mut first = true;
+            for i in 0..r.neurons {
+                let s = r.get(t, i);
+                if first || s != prev {
+                    runs_total += 1;
+                    if s {
+                        spike_runs += 1;
+                    }
+                }
+                if s {
+                    spike_run_len += 1;
+                    if t > 0 {
+                        events_after_t0 += 1;
+                        if r.get(t - 1, i) {
+                            repeat_events += 1;
+                        }
+                    }
+                }
+                prev = s;
+                first = false;
+            }
+        }
+        let total_bits = (r.neurons * r.timesteps) as u64;
+        LayerTemporal {
+            layer: r.layer,
+            neurons: r.neurons as u64,
+            rate_per_step,
+            events_per_step,
+            mean_spike_run: if spike_runs > 0 {
+                spike_run_len as f64 / spike_runs as f64
+            } else {
+                0.0
+            },
+            run_density: if total_bits > 0 {
+                runs_total as f64 / total_bits as f64
+            } else {
+                0.0
+            },
+            burst_fraction: if events_after_t0 > 0 {
+                repeat_events as f64 / events_after_t0 as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// The degenerate constant-rate layer (the scalar profile lifted to
+    /// the temporal form). Run statistics are the Bernoulli-bitmap
+    /// expectations at rate `r`: `2r(1-r)` boundary density and geometric
+    /// spike runs of mean `1/(1-r)`.
+    pub fn constant(layer: usize, neurons: u64, timesteps: usize, rate: f64) -> LayerTemporal {
+        let r = rate.clamp(0.0, 1.0);
+        let events = (r * neurons as f64).round() as u64;
+        LayerTemporal {
+            layer,
+            neurons,
+            rate_per_step: vec![r; timesteps],
+            events_per_step: vec![events; timesteps],
+            mean_spike_run: if r < 1.0 {
+                1.0 / (1.0 - r)
+            } else {
+                neurons as f64
+            },
+            run_density: (2.0 * r * (1.0 - r)).max(1.0 / neurons.max(1) as f64),
+            burst_fraction: r,
+        }
+    }
+
+    pub fn timesteps(&self) -> usize {
+        self.rate_per_step.len()
+    }
+
+    /// Time-averaged firing rate. For a constant-rate layer this returns
+    /// the rate *bit-exactly* (no summation round-off), making scalar
+    /// profiles the exact degenerate case of temporal ones — the
+    /// equivalence the oracle tests pin.
+    pub fn mean_rate(&self) -> f64 {
+        let Some(&first) = self.rate_per_step.first() else {
+            return 0.0;
+        };
+        if self.rate_per_step.iter().all(|r| r.to_bits() == first.to_bits()) {
+            return first;
+        }
+        crate::util::stats::mean(&self.rate_per_step)
+    }
+
+    /// Total events across all timesteps.
+    pub fn total_events(&self) -> u64 {
+        self.events_per_step.iter().sum()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.rate_per_step.is_empty() {
+            return Err(err!("temporal layer {}: empty rate_per_step", self.layer));
+        }
+        if self.rate_per_step.len() != self.events_per_step.len() {
+            return Err(err!(
+                "temporal layer {}: {} rates vs {} event counts",
+                self.layer,
+                self.rate_per_step.len(),
+                self.events_per_step.len()
+            ));
+        }
+        if self.rate_per_step.iter().any(|r| !(0.0..=1.0).contains(r)) {
+            return Err(err!("temporal layer {}: rate outside [0, 1]", self.layer));
+        }
+        // The run statistics feed the traffic model's bit-cost factors;
+        // a negative or non-finite value would price negative energy.
+        for (name, v) in [
+            ("run_density", self.run_density),
+            ("mean_spike_run", self.mean_spike_run),
+            ("burst_fraction", self.burst_fraction),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(err!(
+                    "temporal layer {}: {name} {v} must be finite and >= 0",
+                    self.layer
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-layer × per-timestep firing activity of one trace (or one
+/// synthetic scenario): the temporal-sparsity source an
+/// [`crate::session::EvalRequest`] can carry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TemporalSparsity {
+    /// Provenance ("spike-sim(seed=..)", "constant(r)", …).
+    pub source: String,
+    /// One entry per compute layer, in compute order.
+    pub layers: Vec<LayerTemporal>,
+}
+
+impl TemporalSparsity {
+    /// Measure a simulated trace.
+    pub fn from_trace(trace: &SpikeTrace) -> TemporalSparsity {
+        TemporalSparsity {
+            source: format!(
+                "spike-sim({}, seed={}, T={})",
+                trace.model, trace.config.seed, trace.timesteps
+            ),
+            layers: trace.rasters.iter().map(LayerTemporal::from_raster).collect(),
+        }
+    }
+
+    /// The degenerate constant-rate profile (scalar lifted to temporal).
+    /// `neurons` is a nominal per-layer population for the statistics.
+    pub fn constant(layers: usize, timesteps: usize, rate: f64) -> TemporalSparsity {
+        TemporalSparsity {
+            source: format!("constant({rate})"),
+            layers: (0..layers)
+                .map(|l| LayerTemporal::constant(l, 1024, timesteps, rate))
+                .collect(),
+        }
+    }
+
+    /// Time-averaged per-layer rates — the scalar `Spar^l` vector the
+    /// workload generator consumes (exact for constant-rate layers).
+    pub fn mean_rates(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.mean_rate()).collect()
+    }
+
+    /// Collapse to the scalar [`SparsityProfile`] (the time-averaged
+    /// degenerate view used by reports and run logs).
+    pub fn to_profile(&self) -> SparsityProfile {
+        SparsityProfile::from_firing_rates(&self.mean_rates(), format!("temporal:{}", self.source))
+    }
+
+    /// The temporal layer pricing compute layer `i` (layers beyond the
+    /// list reuse the last entry, mirroring scalar-profile semantics).
+    pub fn layer_for(&self, i: usize) -> Option<&LayerTemporal> {
+        self.layers.get(i).or_else(|| self.layers.last())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(err!("temporal sparsity `{}` has no layers", self.source));
+        }
+        for l in &self.layers {
+            l.validate()?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // JSON (the request-schema extension + the spike-sim run log)
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut j = Json::obj();
+                j.set("layer", Json::Num(l.layer as f64))
+                    .set("neurons", Json::Num(l.neurons as f64))
+                    .set("rate_per_step", Json::from_f64s(&l.rate_per_step))
+                    .set(
+                        "events_per_step",
+                        Json::Arr(
+                            l.events_per_step.iter().map(|&e| Json::Num(e as f64)).collect(),
+                        ),
+                    )
+                    .set("mean_spike_run", Json::Num(l.mean_spike_run))
+                    .set("run_density", Json::Num(l.run_density))
+                    .set("burst_fraction", Json::Num(l.burst_fraction));
+                j
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("source", Json::Str(self.source.clone()))
+            .set("layers", Json::Arr(layers));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<TemporalSparsity> {
+        let get = |o: &Json, k: &str| -> Result<Json> {
+            o.get(k).cloned().ok_or_else(|| err!("temporal: missing key `{k}`"))
+        };
+        let num = |o: &Json, k: &str| -> Result<f64> {
+            get(o, k)?.as_f64().ok_or_else(|| err!("temporal: `{k}` is not a number"))
+        };
+        let source = get(j, "source")?
+            .as_str()
+            .ok_or_else(|| err!("temporal: `source` is not a string"))?
+            .to_string();
+        let layers_json = get(j, "layers")?;
+        let arr = layers_json
+            .as_arr()
+            .ok_or_else(|| err!("temporal: `layers` is not an array"))?
+            .to_vec();
+        let mut layers = Vec::with_capacity(arr.len());
+        for lj in &arr {
+            let rates = get(lj, "rate_per_step")?;
+            let rate_per_step: Vec<f64> = rates
+                .as_arr()
+                .ok_or_else(|| err!("temporal: `rate_per_step` is not an array"))?
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| err!("temporal: non-numeric rate")))
+                .collect::<Result<Vec<f64>>>()?;
+            let events = get(lj, "events_per_step")?;
+            let events_per_step: Vec<u64> = events
+                .as_arr()
+                .ok_or_else(|| err!("temporal: `events_per_step` is not an array"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .filter(|e| *e >= 0.0 && e.fract() == 0.0)
+                        .map(|e| e as u64)
+                        .ok_or_else(|| err!("temporal: bad event count"))
+                })
+                .collect::<Result<Vec<u64>>>()?;
+            layers.push(LayerTemporal {
+                layer: num(lj, "layer")? as usize,
+                neurons: num(lj, "neurons")? as u64,
+                rate_per_step,
+                events_per_step,
+                mean_spike_run: num(lj, "mean_spike_run")?,
+                run_density: num(lj, "run_density")?,
+                burst_fraction: num(lj, "burst_fraction")?,
+            });
+        }
+        let t = TemporalSparsity { source, layers };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// The spike-sim run log: a superset of the trainer run-log schema,
+    /// so [`SparsityProfile::from_run_log`] consumes it directly (it
+    /// reads `firing_rates` and ignores the `temporal` extension).
+    pub fn run_log_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("firing_rates", Json::from_f64s(&self.mean_rates()))
+            .set("source", Json::Str(self.source.clone()))
+            .set("temporal", self.to_json());
+        j
+    }
+
+    /// Parse back from a spike-sim run log (requires the `temporal`
+    /// extension object).
+    pub fn from_run_log_json(j: &Json) -> Result<TemporalSparsity> {
+        let t = j
+            .get("temporal")
+            .ok_or_else(|| err!("run log has no `temporal` object (not a spike-sim log?)"))?;
+        TemporalSparsity::from_json(t)
+    }
+
+    /// Load from a spike-sim run-log file.
+    pub fn load(path: &std::path::Path) -> Result<TemporalSparsity> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err!("cannot read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| err!("{}: {e}", path.display()))?;
+        TemporalSparsity::from_run_log_json(&j)
+    }
+
+    /// Write the run log (creating parent directories).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| err!("cannot create {}: {e}", dir.display()))?;
+        }
+        std::fs::write(path, self.run_log_json().dumps())
+            .map_err(|e| err!("cannot write {}: {e}", path.display()))
+    }
+
+    /// Append an injective structural encoding to a session cache key.
+    pub fn fingerprint_into(&self, key: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(key, "t{}:", self.layers.len());
+        for l in &self.layers {
+            let _ = write!(key, "n{},", l.neurons);
+            for r in &l.rate_per_step {
+                let _ = write!(key, "{:x},", r.to_bits());
+            }
+            let _ = write!(
+                key,
+                "d{:x},m{:x},b{:x};",
+                l.run_density.to_bits(),
+                l.mean_spike_run.to_bits(),
+                l.burst_fraction.to_bits()
+            );
+        }
+        key.push('|');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SnnModel;
+    use crate::spike::lif::{simulate, LifConfig};
+
+    fn eager() -> LifConfig {
+        LifConfig { threshold: 0.05, input_rate: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn constant_mean_rate_is_bit_exact() {
+        // The degenerate-case guarantee: an awkward rate that would not
+        // survive sum/len round-tripping must pass through unchanged.
+        let r = 0.1 + 0.2; // 0.30000000000000004
+        let lt = LayerTemporal::constant(0, 4096, 6, r);
+        assert_eq!(lt.mean_rate().to_bits(), r.to_bits());
+        let t = TemporalSparsity::constant(3, 6, r);
+        for m in t.mean_rates() {
+            assert_eq!(m.to_bits(), r.to_bits());
+        }
+        // And the scalar collapse carries the same exact values.
+        assert_eq!(t.to_profile().per_layer, vec![r; 3]);
+    }
+
+    #[test]
+    fn raster_stats_match_hand_counts() {
+        use crate::spike::lif::SpikeRaster;
+        // 6 neurons, 2 steps. t0: 110010 -> 3 events, runs: 11|00|1|0 = 4,
+        // spike runs 2 (len 2 + 1). t1: 010000 -> 1 event, runs 0|1|0000 = 3.
+        let mut r = SpikeRaster::new(0, 6, 2);
+        for i in [0usize, 1, 4] {
+            r.set(0, i);
+        }
+        r.set(1, 1);
+        let lt = LayerTemporal::from_raster(&r);
+        assert_eq!(lt.events_per_step, vec![3, 1]);
+        assert_eq!(lt.rate_per_step[0], 0.5);
+        assert_eq!(lt.timesteps(), 2);
+        // 3 spike runs total (two at t0, one at t1), 4 spikes.
+        assert!((lt.mean_spike_run - 4.0 / 3.0).abs() < 1e-12);
+        // 7 runs over 12 bits.
+        assert!((lt.run_density - 7.0 / 12.0).abs() < 1e-12);
+        // t1's single spike (neuron 1) repeated from t0 -> burst 1.0.
+        assert_eq!(lt.burst_fraction, 1.0);
+    }
+
+    #[test]
+    fn from_trace_aligns_with_rasters() {
+        let m = SnnModel::tiny_snn(1, 4, 10);
+        let trace = simulate(&m, &eager()).unwrap();
+        let t = TemporalSparsity::from_trace(&trace);
+        assert_eq!(t.layers.len(), trace.rasters.len());
+        for (lt, r) in t.layers.iter().zip(&trace.rasters) {
+            assert_eq!(lt.layer, r.layer);
+            assert_eq!(lt.total_events(), r.total_events());
+            assert_eq!(lt.timesteps(), trace.timesteps);
+        }
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let m = SnnModel::tiny_snn(1, 3, 10);
+        let t = TemporalSparsity::from_trace(&simulate(&m, &eager()).unwrap());
+        let back =
+            TemporalSparsity::from_json(&Json::parse(&t.to_json().dumps()).unwrap()).unwrap();
+        assert_eq!(t, back);
+        // Run-log superset round-trips too, and the scalar loader reads it.
+        let log = t.run_log_json();
+        let back2 =
+            TemporalSparsity::from_run_log_json(&Json::parse(&log.dumps()).unwrap()).unwrap();
+        assert_eq!(t, back2);
+        let sp = crate::sparsity::SparsityProfile::from_run_log(&log).unwrap();
+        assert_eq!(sp.per_layer, t.mean_rates());
+    }
+
+    #[test]
+    fn bad_temporal_documents_error() {
+        assert!(TemporalSparsity::from_json(&Json::parse("{}").unwrap()).is_err());
+        let no_layers = r#"{"source": "x", "layers": []}"#;
+        assert!(TemporalSparsity::from_json(&Json::parse(no_layers).unwrap()).is_err());
+        let bad_rate = r#"{"source": "x", "layers": [{"layer": 0, "neurons": 4,
+            "rate_per_step": [1.5], "events_per_step": [6],
+            "mean_spike_run": 1.0, "run_density": 0.5, "burst_fraction": 0.0}]}"#;
+        assert!(TemporalSparsity::from_json(&Json::parse(bad_rate).unwrap()).is_err());
+        // Negative run statistics would price negative traffic energy;
+        // they are rejected at parse time, not discovered as nonsense
+        // joules downstream.
+        let bad_density = r#"{"source": "x", "layers": [{"layer": 0, "neurons": 4,
+            "rate_per_step": [0.5], "events_per_step": [2],
+            "mean_spike_run": 1.0, "run_density": -0.5, "burst_fraction": 0.0}]}"#;
+        let e = TemporalSparsity::from_json(&Json::parse(bad_density).unwrap()).unwrap_err();
+        assert!(e.to_string().contains("run_density"), "{e}");
+    }
+
+    #[test]
+    fn fingerprints_distinguish_profiles() {
+        let a = TemporalSparsity::constant(2, 4, 0.25);
+        let b = TemporalSparsity::constant(2, 4, 0.5);
+        let c = TemporalSparsity::constant(3, 4, 0.25);
+        let fp = |t: &TemporalSparsity| {
+            let mut k = String::new();
+            t.fingerprint_into(&mut k);
+            k
+        };
+        assert_ne!(fp(&a), fp(&b));
+        assert_ne!(fp(&a), fp(&c));
+        assert_eq!(fp(&a), fp(&TemporalSparsity::constant(2, 4, 0.25)));
+    }
+
+    #[test]
+    fn layer_for_reuses_last_entry() {
+        let t = TemporalSparsity::constant(2, 4, 0.3);
+        assert_eq!(t.layer_for(0).unwrap().layer, 0);
+        assert_eq!(t.layer_for(5).unwrap().layer, 1);
+    }
+}

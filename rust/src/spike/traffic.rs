@@ -1,0 +1,210 @@
+//! Event-stream traffic pricing for spike maps.
+//!
+//! Spike tensors are 1-bit/element, but an event-driven memory system
+//! does not have to move them as raw bitmaps: at high sparsity the map
+//! compresses into run-length (RLE) tokens or address-event (AER)
+//! records, shrinking the bits that cross each hierarchy transfer
+//! boundary. This module turns a layer's [`LayerTemporal`] statistics
+//! into per-boundary bit-cost multipliers for the energy kernel
+//! ([`crate::energy::price_operand_encoded`]):
+//!
+//! * **Raw** — 1 bit moved per raster bit (the baseline the scalar model
+//!   always charges).
+//! * **RLE** — one token per run (spike or silent); the measured run
+//!   density `ρ` gives `ρ × (1 + len_bits)` bits per raster bit.
+//! * **AER** — one address record per spike: `rate × addr_bits` bits per
+//!   raster bit, with the address sized to the layer's population.
+//!
+//! Per boundary the *cheaper* of the three is chosen. The innermost
+//! boundary (PE register fills) is always raw: the compute array consumes
+//! bitmaps, so events are decoded before they enter the PEs.
+
+use crate::arch::MAX_LEVELS;
+use crate::spike::temporal::LayerTemporal;
+
+/// Request-level switch: how spike-map traffic is encoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SpikeEncoding {
+    /// Raw bitmaps everywhere (the paper's implicit model; default).
+    #[default]
+    Raw,
+    /// Choose the cheaper of raw / RLE / AER per transfer boundary.
+    Auto,
+}
+
+impl SpikeEncoding {
+    /// Stable lowercase key ("raw"/"auto") for JSON and CLI flags.
+    pub fn key(self) -> &'static str {
+        match self {
+            SpikeEncoding::Raw => "raw",
+            SpikeEncoding::Auto => "auto",
+        }
+    }
+
+    pub fn from_key(s: &str) -> Option<SpikeEncoding> {
+        match s {
+            "raw" => Some(SpikeEncoding::Raw),
+            "auto" => Some(SpikeEncoding::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Which encoding won a boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    Raw,
+    Rle,
+    Aer,
+}
+
+impl Encoding {
+    pub fn name(self) -> &'static str {
+        match self {
+            Encoding::Raw => "raw",
+            Encoding::Rle => "RLE",
+            Encoding::Aer => "AER",
+        }
+    }
+}
+
+/// Run-length token width: 1 polarity bit + an 8-bit length field
+/// (longer runs emit multiple tokens; the density statistic already
+/// reflects measured run boundaries).
+pub const RLE_LEN_BITS: u32 = 8;
+
+/// The per-layer compression model derived from measured temporal
+/// statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficModel {
+    /// Mean firing rate of the layer's spike map.
+    pub rate: f64,
+    /// Measured RLE token density (runs per raster bit).
+    pub run_density: f64,
+    /// AER address width: `ceil(log2(neurons))`.
+    pub addr_bits: u32,
+}
+
+impl TrafficModel {
+    pub fn from_layer(lt: &LayerTemporal) -> TrafficModel {
+        TrafficModel {
+            rate: lt.mean_rate(),
+            run_density: lt.run_density,
+            addr_bits: ceil_log2(lt.neurons.max(2)),
+        }
+    }
+
+    /// Bits moved per raster bit under each encoding.
+    pub fn raw_cost(&self) -> f64 {
+        1.0
+    }
+
+    pub fn rle_cost(&self) -> f64 {
+        self.run_density * (1 + RLE_LEN_BITS) as f64
+    }
+
+    pub fn aer_cost(&self) -> f64 {
+        self.rate * self.addr_bits as f64
+    }
+
+    /// The cheapest encoding and its bits-per-raster-bit cost.
+    pub fn best(&self) -> (Encoding, f64) {
+        let mut enc = Encoding::Raw;
+        let mut cost = self.raw_cost();
+        let rle = self.rle_cost();
+        if rle < cost {
+            enc = Encoding::Rle;
+            cost = rle;
+        }
+        let aer = self.aer_cost();
+        if aer < cost {
+            enc = Encoding::Aer;
+            cost = aer;
+        }
+        (enc, cost)
+    }
+
+    /// Per-boundary multipliers for an operand chain: boundary 0 (PE
+    /// register fills) stays raw, every outer boundary takes the best
+    /// encoding's cost. Also returns the chosen encoding label.
+    pub fn boundary_costs(&self) -> (Encoding, [f64; MAX_LEVELS]) {
+        let (enc, cost) = self.best();
+        let mut f = [cost; MAX_LEVELS];
+        f[0] = 1.0;
+        (enc, f)
+    }
+}
+
+fn ceil_log2(n: u64) -> u32 {
+    debug_assert!(n >= 1);
+    64 - (n - 1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(rate: f64, run_density: f64, neurons: u64) -> LayerTemporal {
+        LayerTemporal {
+            layer: 0,
+            neurons,
+            rate_per_step: vec![rate; 4],
+            events_per_step: vec![(rate * neurons as f64) as u64; 4],
+            mean_spike_run: 1.0,
+            run_density,
+            burst_fraction: 0.0,
+        }
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+        assert_eq!(ceil_log2(32768), 15);
+    }
+
+    #[test]
+    fn dense_maps_stay_raw() {
+        // rate 0.75 on 32k neurons: AER = 0.75*15 >> 1, RLE dense too.
+        let tm = TrafficModel::from_layer(&layer(0.75, 0.375, 32768));
+        let (enc, cost) = tm.best();
+        assert_eq!(enc, Encoding::Raw);
+        assert_eq!(cost, 1.0);
+        let (_, f) = tm.boundary_costs();
+        assert!(f.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn sparse_maps_compress() {
+        // rate 0.01 on 32k neurons: AER = 0.01*15 = 0.15; RLE with run
+        // density ~0.02 = 0.18 -> AER wins, both beat raw.
+        let tm = TrafficModel::from_layer(&layer(0.01, 0.02, 32768));
+        let (enc, cost) = tm.best();
+        assert_eq!(enc, Encoding::Aer);
+        assert!(cost < 0.2, "{cost}");
+        let (_, f) = tm.boundary_costs();
+        assert_eq!(f[0], 1.0, "register boundary is always raw");
+        assert!(f[1] < 1.0);
+    }
+
+    #[test]
+    fn bursty_runs_favour_rle() {
+        // Long spike runs: few run boundaries, so RLE beats AER at
+        // moderate rates. rate 0.2, run density 0.01 -> RLE 0.09 vs
+        // AER 0.2*15 = 3.
+        let tm = TrafficModel::from_layer(&layer(0.2, 0.01, 32768));
+        let (enc, cost) = tm.best();
+        assert_eq!(enc, Encoding::Rle);
+        assert!((cost - 0.09).abs() < 1e-12);
+    }
+
+    #[test]
+    fn encoding_keys_round_trip() {
+        for e in [SpikeEncoding::Raw, SpikeEncoding::Auto] {
+            assert_eq!(SpikeEncoding::from_key(e.key()), Some(e));
+        }
+        assert_eq!(SpikeEncoding::from_key("zip"), None);
+        assert_eq!(SpikeEncoding::default(), SpikeEncoding::Raw);
+    }
+}

@@ -8,7 +8,9 @@
 //! (§III-D). Operation counts implement the paper's eqs. (4), (5), (9),
 //! (11) and (12).
 
+use crate::err;
 use crate::model::{ShapedLayer, SnnModel};
+use crate::util::error::Result;
 
 /// The eight convolution loop dimensions used throughout the simulator
 /// (Fig. 4's parameter set).
@@ -109,15 +111,15 @@ impl ConvDims {
 pub const MAX_GRID: u64 = 1 << 45;
 
 /// Reject grids whose products overflow `u64` or exceed [`MAX_GRID`].
-fn check_grid(layer: usize, phase: &str, dims: &ConvDims) -> Result<(), String> {
+fn check_grid(layer: usize, phase: &str, dims: &ConvDims) -> Result<()> {
     match dims.checked_total() {
         Some(t) if t <= MAX_GRID => Ok(()),
-        Some(t) => Err(format!(
+        Some(t) => Err(err!(
             "layer {layer} {phase}: loop grid {:?} has {t} MACs, exceeding the \
              2^45 exact-arithmetic bound of the energy model",
             dims.sizes
         )),
-        None => Err(format!(
+        None => Err(err!(
             "layer {layer} {phase}: loop grid {:?} overflows u64 (eq. 4/9/11 \
              operation counts are meaningless at this size)",
             dims.sizes
@@ -283,7 +285,7 @@ pub fn generate(
     model: &SnnModel,
     activity: &[f64],
     default_activity: f64,
-) -> Result<Vec<LayerWorkload>, String> {
+) -> Result<Vec<LayerWorkload>> {
     let shaped = model.shaped_layers()?;
     let n = model.batch as u64;
     let t = model.timesteps as u64;
@@ -306,7 +308,7 @@ fn layer_workload(
     n: u64,
     t: u64,
     activity: f64,
-) -> Result<LayerWorkload, String> {
+) -> Result<LayerWorkload> {
     let (m, c) = (l.out_c as u64, l.in_c as u64);
     let (p, q) = (l.out_h as u64, l.out_w as u64);
     let k = l.kernel() as u64;
@@ -491,11 +493,11 @@ mod tests {
             batch: 4096,
         };
         let e = generate(&big, &[], 0.5).unwrap_err();
-        assert!(e.contains("exact-arithmetic"), "{e}");
+        assert!(e.to_string().contains("exact-arithmetic"), "{e}");
         // ...and a grid that overflows u64 outright names the overflow.
         let huge = SnnModel { timesteps: u32::MAX, batch: u32::MAX, ..big };
         let e = generate(&huge, &[], 0.5).unwrap_err();
-        assert!(e.contains("overflow"), "{e}");
+        assert!(e.to_string().contains("overflow"), "{e}");
     }
 
     #[test]

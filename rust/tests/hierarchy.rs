@@ -2,7 +2,7 @@
 //! declarative arch files load, genuinely non-paper hierarchies (a
 //! 4-level PE-cluster spike buffer and a unified shared SRAM) evaluate
 //! through the full DSE + session stack, show up in sweep output, and
-//! survive the v2 JSON schema (with v1 documents still parsing).
+//! survive the current JSON schema (with v1 documents still parsing).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -129,7 +129,7 @@ fn hierarchies_never_collide_in_the_result_cache() {
 }
 
 #[test]
-fn v2_results_round_trip_and_v1_requests_still_parse() {
+fn current_results_round_trip_and_v1_requests_still_parse() {
     let session = Session::builder().threads(1).build();
     let req = EvalRequest::new(
         SnnModel::paper_layer(),
@@ -138,7 +138,7 @@ fn v2_results_round_trip_and_v1_requests_still_parse() {
     );
     let res: Arc<EvalResult> = session.evaluate(&req).unwrap();
     let text = res.to_json().dumps();
-    assert!(text.contains("\"schema\":2"));
+    assert!(text.contains("\"schema\":3"));
     assert!(text.contains("SpikeBuf"));
     let back = EvalResult::from_json_str(&text).unwrap();
     assert_eq!(*res, back);

@@ -69,7 +69,7 @@ fn result_json_schema_is_stable() {
     for key in ["layer", "fp", "bp", "wg", "soma_compute_j", "grad_mem_j"] {
         assert!(layer0.get(key).is_some(), "missing layer key `{key}`");
     }
-    assert_eq!(j.get("schema").unwrap().as_f64(), Some(2.0));
+    assert_eq!(j.get("schema").unwrap().as_f64(), Some(3.0));
 }
 
 #[test]
@@ -78,7 +78,7 @@ fn tampered_schema_version_is_rejected() {
     let res = session.evaluate(&paper_request(Family::AdvWs)).unwrap();
     // Future versions are rejected; v1 (the pre-hierarchy shape) is the
     // oldest accepted input.
-    let tampered = res.to_json().dumps().replacen("\"schema\":2", "\"schema\":3", 1);
+    let tampered = res.to_json().dumps().replacen("\"schema\":3", "\"schema\":4", 1);
     assert!(EvalResult::from_json_str(&tampered).is_err());
 }
 

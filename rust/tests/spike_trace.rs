@@ -1,0 +1,184 @@
+//! Acceptance tests for the spike-trace subsystem:
+//!
+//! * **Scalar-profile equivalence oracle** — for a constant-rate raster,
+//!   temporal-sparsity evaluation is bit-identical to the scalar
+//!   `SparsityProfile` path, across families and architectures.
+//! * **Round trip** — `eocas spike-sim`'s run log (written by
+//!   `TemporalSparsity::save`) parses through
+//!   `SparsityProfile::from_run_log` into a `simulate`-equivalent session
+//!   evaluation, with no PJRT feature enabled.
+//! * **Event-stream pricing** — compression only ever removes spike-map
+//!   traffic, never touches compute/BP/unit energy.
+
+use eocas::arch::{Architecture, HierarchySpec};
+use eocas::dataflow::templates::Family;
+use eocas::model::SnnModel;
+use eocas::session::{EvalRequest, Session};
+use eocas::sparsity::SparsityProfile;
+use eocas::spike::{simulate, LifConfig, SpikeEncoding, TemporalSparsity};
+use eocas::util::json::Json;
+
+/// A LIF configuration that fires readily regardless of He-init tails.
+fn eager() -> LifConfig {
+    LifConfig { threshold: 0.05, input_rate: 1.0, ..Default::default() }
+}
+
+#[test]
+fn constant_rate_temporal_is_bit_identical_to_scalar_oracle() {
+    // The acceptance oracle: a constant-rate raster measured into a
+    // TemporalSparsity must evaluate bit-identically to the scalar
+    // profile carrying that constant — per layer, per phase, per level.
+    let session = Session::builder().threads(1).build();
+    let rate = 0.1 + 0.2; // not exactly representable: catches re-summation
+    let model = SnnModel::cifar100_snn();
+    let n_layers = 6;
+    for arch in [
+        Architecture::paper_default(),
+        Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+    ] {
+        for fam in Family::ALL {
+            let scalar = session
+                .evaluate(
+                    &EvalRequest::new(model.clone(), arch.clone(), fam)
+                        .with_sparsity(SparsityProfile::nominal(n_layers, rate)),
+                )
+                .unwrap();
+            let temporal = session
+                .evaluate(
+                    &EvalRequest::new(model.clone(), arch.clone(), fam).with_temporal(
+                        TemporalSparsity::constant(n_layers, model.timesteps as usize, rate),
+                    ),
+                )
+                .unwrap();
+            assert_eq!(*scalar, *temporal, "{} {}", arch.label(), fam.name());
+            assert_eq!(scalar.overall_j.to_bits(), temporal.overall_j.to_bits());
+            for (a, b) in scalar.layers.iter().zip(&temporal.layers) {
+                assert_eq!(a, b);
+            }
+        }
+    }
+}
+
+#[test]
+fn constant_raster_measures_back_to_its_rate() {
+    // A raster that fires a fixed subset of neurons every step measures
+    // as a constant-rate temporal profile whose mean is bit-exact.
+    use eocas::spike::SpikeRaster;
+    let mut r = SpikeRaster::new(0, 1000, 6);
+    for t in 0..6 {
+        for i in 0..250 {
+            r.set(t, i * 4);
+        }
+    }
+    let lt = eocas::spike::LayerTemporal::from_raster(&r);
+    assert_eq!(lt.mean_rate().to_bits(), 0.25f64.to_bits());
+    assert_eq!(lt.events_per_step, vec![250; 6]);
+}
+
+#[test]
+fn spike_sim_run_log_round_trips_into_offline_simulate() {
+    // The CLI contract: spike-sim writes a run log; `simulate
+    // --sparsity` (scalar) and `--temporal` (event-stream) both consume
+    // it; none of this needs the PJRT feature.
+    let model = SnnModel::tiny_snn(1, 4, 10);
+    let trace = simulate(&model, &eager()).unwrap();
+    let temporal = TemporalSparsity::from_trace(&trace);
+    let path = std::env::temp_dir()
+        .join(format!("eocas_spike_run_{}.json", std::process::id()));
+    temporal.save(&path).unwrap();
+
+    // Scalar consumption: the same loader the trainer's run logs use.
+    let profile = SparsityProfile::load(&path).unwrap();
+    assert_eq!(profile.per_layer, temporal.mean_rates());
+    let session = Session::builder().threads(1).build();
+    let scalar = session
+        .evaluate(
+            &EvalRequest::new(model.clone(), Architecture::paper_default(), Family::AdvWs)
+                .with_sparsity(profile),
+        )
+        .unwrap();
+    assert!(scalar.overall_j.is_finite() && scalar.overall_j > 0.0);
+
+    // Temporal consumption: same file, full statistics.
+    let loaded = TemporalSparsity::load(&path).unwrap();
+    assert_eq!(loaded, temporal);
+    let temporal_res = session
+        .evaluate(
+            &EvalRequest::new(model.clone(), Architecture::paper_default(), Family::AdvWs)
+                .with_temporal(loaded.clone()),
+        )
+        .unwrap();
+    // Same mean rates -> same activity vector resolved.
+    assert_eq!(scalar.activity, temporal_res.activity);
+    assert_eq!(*scalar, *temporal_res, "raw temporal equals its scalar collapse");
+
+    // Event-stream pricing is at most the raw price.
+    let compressed = session
+        .evaluate(
+            &EvalRequest::new(model, Architecture::paper_default(), Family::AdvWs)
+                .with_temporal(loaded)
+                .with_spike_encoding(SpikeEncoding::Auto),
+        )
+        .unwrap();
+    assert!(compressed.overall_j <= temporal_res.overall_j);
+    assert_eq!(compressed.compute_j, temporal_res.compute_j);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn run_log_is_a_superset_of_the_trainer_schema() {
+    let model = SnnModel::tiny_snn(1, 3, 10);
+    let temporal = TemporalSparsity::from_trace(&simulate(&model, &eager()).unwrap());
+    let log = temporal.run_log_json();
+    let text = log.dumps();
+    // `firing_rates` is what the trainer writes and the DSE reads...
+    let parsed = Json::parse(&text).unwrap();
+    let sp = SparsityProfile::from_run_log(&parsed).unwrap();
+    assert_eq!(sp.per_layer.len(), 3);
+    assert!(sp.per_layer.iter().all(|r| (0.0..=1.0).contains(r)));
+    // ...and the temporal extension round-trips alongside it.
+    let back = TemporalSparsity::from_run_log_json(&parsed).unwrap();
+    assert_eq!(back, temporal);
+}
+
+#[test]
+fn temporal_requests_round_trip_through_the_session_json_schema() {
+    let model = SnnModel::tiny_snn(1, 3, 10);
+    let temporal = TemporalSparsity::from_trace(&simulate(&model, &eager()).unwrap());
+    let req = EvalRequest::new(model, Architecture::paper_default(), Family::Ws1)
+        .with_temporal(temporal)
+        .with_spike_encoding(SpikeEncoding::Auto);
+    let text = req.to_json().dumps();
+    let back = EvalRequest::from_json_str(&text).unwrap();
+    assert_eq!(req, back);
+    // And evaluating the parsed request matches evaluating the original.
+    let session = Session::builder().threads(1).build();
+    let a = session.evaluate(&req).unwrap();
+    let b = session.evaluate(&back).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "identical requests share a cache entry");
+}
+
+#[test]
+fn compression_monotone_in_sparsity() {
+    // The sparser the trace, the larger the event-stream saving.
+    let session = Session::builder().threads(1).build();
+    let model = SnnModel::paper_layer();
+    let overall = |rate: f64, auto: bool| -> f64 {
+        let mut req = EvalRequest::new(model.clone(), Architecture::paper_default(), Family::AdvWs)
+            .with_temporal(TemporalSparsity::constant(1, 6, rate));
+        if auto {
+            req = req.with_spike_encoding(SpikeEncoding::Auto);
+        }
+        session.evaluate(&req).unwrap().overall_j
+    };
+    let saving = |rate: f64| 1.0 - overall(rate, true) / overall(rate, false);
+    let s_sparse = saving(0.01);
+    let s_mid = saving(0.10);
+    let s_dense = saving(0.75);
+    assert!(s_sparse > 0.0, "1% firing must compress ({s_sparse})");
+    assert!(s_sparse >= s_mid, "{s_sparse} !>= {s_mid}");
+    assert!(
+        s_dense.abs() < 1e-12,
+        "dense maps must fall back to raw bitmaps (saving {s_dense})"
+    );
+}
