@@ -1,0 +1,174 @@
+//! Bench: the architecture-space search — exhaustive vs guided over the
+//! reference space (`configs/space_reference.toml`).
+//!
+//! Measures, and emits as machine-readable `BENCH_archsearch.json`:
+//! * exhaustive search throughput over the 162 feasible points of the
+//!   reference space (candidates/s, cold caches),
+//! * the guided (annealing) strategy on the same space with a fraction
+//!   of the evaluation budget,
+//! * headline ratios for the CI regression gate: `speedup.evals_saved`
+//!   (exhaustive candidates ÷ guided proposal budget — deterministic by
+//!   construction) and `quality.guided_vs_exhaustive` (exhaustive best
+//!   energy ÷ guided best energy; 1.0 = the guided run found the
+//!   optimum), plus the frontier size and the wall-clock ratio as
+//!   untracked info fields.
+//!
+//! Flags: `--quick` (CI smoke mode: paper layer, short windows),
+//! `--json PATH` (default `BENCH_archsearch.json`).
+
+use eocas::arch::space::ArchSpace;
+use eocas::dse::archsearch::{search, ArchSearchConfig, ArchSearchResult, Strategy};
+use eocas::model::SnnModel;
+use eocas::session::Session;
+use eocas::sparsity::SparsityProfile;
+use eocas::util::bench::{black_box, time_it, BenchStats};
+use eocas::util::json::Json;
+
+struct Case {
+    key: &'static str,
+    stats: BenchStats,
+    /// Candidates priced per timed iteration.
+    items_per_iter: f64,
+}
+
+impl Case {
+    fn per_s(&self) -> f64 {
+        self.items_per_iter / (self.stats.mean_ns / 1e9)
+    }
+}
+
+fn emit(
+    cases: &[Case],
+    speedups: &[(&str, f64)],
+    quality: &[(&str, f64)],
+    info: &[(&str, f64)],
+    quick: bool,
+    path: &str,
+) {
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0)).set("quick", Json::Bool(quick));
+    let mut jcases = Json::obj();
+    for c in cases {
+        let mut j = Json::obj();
+        j.set("mean_ns", Json::Num(c.stats.mean_ns))
+            .set("p50_ns", Json::Num(c.stats.p50_ns))
+            .set("p95_ns", Json::Num(c.stats.p95_ns))
+            .set("iters", Json::Num(c.stats.iters as f64))
+            .set("candidates_per_s", Json::Num(c.per_s()));
+        jcases.set(c.key, j);
+    }
+    doc.set("cases", jcases);
+    let mut js = Json::obj();
+    for (k, v) in speedups {
+        js.set(k, Json::Num(*v));
+    }
+    doc.set("speedup", js);
+    let mut jq = Json::obj();
+    for (k, v) in quality {
+        jq.set(k, Json::Num(*v));
+    }
+    doc.set("quality", jq);
+    for (k, v) in info {
+        doc.set(k, Json::Num(*v));
+    }
+    match std::fs::write(path, format!("{}\n", doc.dumps())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_archsearch.json".to_string());
+    let w = if quick { 0.05 } else { 1.0 };
+
+    let model = if quick { SnnModel::paper_layer() } else { SnnModel::cifar100_snn() };
+    let sparsity = SparsityProfile::nominal(0, 0.75);
+    let space = ArchSpace::reference();
+    // Guided budget: restarts × (1 start + iters proposals). Quick mode
+    // spends at most 54 evaluations against the space's 162 feasible
+    // points — a 3× saving, by construction.
+    let (g_iters, g_restarts) = if quick { (17usize, 3usize) } else { (40, 3) };
+    let budget = g_restarts * (g_iters + 1);
+
+    let mut cases: Vec<Case> = Vec::new();
+    let mut push = |key: &'static str, stats: BenchStats, items: f64| {
+        println!("{}", stats.report());
+        println!("  => {:.0} candidates/s\n", items / (stats.mean_ns / 1e9));
+        cases.push(Case { key, stats, items_per_iter: items });
+    };
+
+    // (a) exhaustive over the reference space, cold caches per run.
+    let session = Session::builder().threads(0).build();
+    let ex_cfg = ArchSearchConfig {
+        strategy: Strategy::Exhaustive,
+        ..ArchSearchConfig::default()
+    };
+    let mut exhaustive: Option<ArchSearchResult> = None;
+    let s = time_it("arch-search exhaustive (reference space)", 2, w, || {
+        session.clear_caches();
+        exhaustive =
+            Some(black_box(search(&session, &model, &sparsity, &space, &ex_cfg).unwrap()));
+    });
+    let exhaustive = exhaustive.expect("timed at least once");
+    push("exhaustive_reference", s, exhaustive.evaluated as f64);
+
+    // (b) guided annealing on the same space, same dataflows, a fraction
+    // of the budget. The seeded run is deterministic, so the quality
+    // ratio below is a stable, machine-independent number.
+    let g_session = Session::builder().threads(0).build();
+    let g_cfg = ArchSearchConfig {
+        strategy: Strategy::Annealing {
+            iters: g_iters,
+            restarts: g_restarts,
+            t0: 0.08,
+            cooling: 0.92,
+        },
+        ..ArchSearchConfig::default()
+    };
+    let mut guided: Option<ArchSearchResult> = None;
+    let s = time_it("arch-search guided (annealing)", 2, w, || {
+        g_session.clear_caches();
+        guided = Some(black_box(
+            search(&g_session, &model, &sparsity, &space, &g_cfg).unwrap(),
+        ));
+    });
+    let guided = guided.expect("timed at least once");
+    push("guided_reference", s, guided.evaluated as f64);
+
+    // Headline ratios for the CI gate.
+    let evals_saved = exhaustive.evaluated as f64 / budget as f64;
+    let ex_best = exhaustive.best.as_ref().expect("feasible space").energy_j;
+    let g_best = guided.best.as_ref().expect("guided found a point").energy_j;
+    let quality = ex_best / g_best;
+    let wall_speedup =
+        cases[0].stats.mean_ns / cases[1].stats.mean_ns.max(f64::MIN_POSITIVE);
+    println!(
+        "exhaustive: {} candidates, frontier {} points, best {:.3} uJ",
+        exhaustive.evaluated,
+        exhaustive.frontier.len(),
+        ex_best * 1e6
+    );
+    println!(
+        "guided:     budget {budget} ({} scored), best {:.3} uJ  => quality {quality:.3}",
+        guided.evaluated,
+        g_best * 1e6
+    );
+    println!("evals saved (exhaustive / guided budget): {evals_saved:.2}x");
+    emit(
+        &cases,
+        &[("evals_saved", evals_saved)],
+        &[("guided_vs_exhaustive", quality)],
+        &[
+            ("frontier_size", exhaustive.frontier.len() as f64),
+            ("wall_speedup", wall_speedup),
+        ],
+        quick,
+        &json_path,
+    );
+}

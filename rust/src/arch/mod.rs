@@ -17,7 +17,12 @@
 //!
 //! The *architecture pool* enumerates candidate array arrangements and
 //! memory provisionings; each candidate is evaluated against each
-//! dataflow by the reuse/energy machinery.
+//! dataflow by the reuse/energy machinery. [`space::ArchSpace`]
+//! generalizes the hand-listed pool to a parameterized space of
+//! *generated* candidates for the architecture search
+//! (`dse::archsearch`).
+
+pub mod space;
 
 use crate::config::EnergyConfig;
 use crate::util::divisors;

@@ -1,0 +1,676 @@
+//! Parameterized architecture spaces: *generated* candidate pools.
+//!
+//! `dse::explore` sweeps a hand-listed [`crate::arch::ArchPool`]. This
+//! module describes the space those candidates come from, so the search
+//! can generate them instead: an [`ArchSpace`] is a cross product of
+//! independent axes — PE-array shape, memory provisioning scale, main
+//! on-chip buffer layout (dedicated per-variable macros vs one unified
+//! bank), an optional PE-cluster spike buffer (size, energy rule,
+//! residency mask) and line-buffer placement — bounded by a total
+//! on-chip SRAM budget (the search's area proxy).
+//!
+//! A point of the space is a [`Coords`] tuple, one coordinate per axis;
+//! [`ArchSpace::candidate`] turns a point into a validated
+//! [`Architecture`] (or an [`Infeasible`] verdict: an over-budget
+//! hierarchy, or a spike-buffer axis set while the buffer is absent).
+//! Points enumerate densely ([`ArchSpace::coords_of`]) for exhaustive
+//! search and mutate one axis at a time ([`ArchSpace::mutate`]) for the
+//! guided strategies in `dse::archsearch`. Spaces are built in code
+//! ([`ArchSpace::paper`], [`ArchSpace::reference`]) or loaded from
+//! `configs/space_*.toml` ([`crate::config::spacefile`]).
+
+use std::fmt;
+
+use crate::arch::{
+    Architecture, ArrayScheme, HierarchySpec, LevelCapacity, LevelEnergy, LevelSpec, SramId,
+    MAX_LEVELS,
+};
+use crate::util::prng::SplitMix64;
+
+/// Number of independent axes of an [`ArchSpace`].
+pub const NUM_AXES: usize = 7;
+
+/// One point of the space: a coordinate into each axis, in the order
+/// array, memory scale, main buffer, spike-buffer size, spike-buffer
+/// energy, spike-buffer residency, line-buffer placement.
+pub type Coords = [usize; NUM_AXES];
+
+/// Layout of the main on-chip buffer level (the level just below the
+/// backing store).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MainBuffer {
+    /// Keep the base hierarchy's layout (the paper's dedicated
+    /// per-variable macros).
+    PerVar,
+    /// Merge the level's capacity into one shared bank of the same total
+    /// size (the `unified_sram` trade-off: partitioning pressure for a
+    /// higher per-bit cost on the size curve).
+    Unified,
+}
+
+/// Energy rule of the optional spike-buffer level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpikeBufEnergy {
+    /// Literal per-bit access energies.
+    Explicit { read_pj: f64, write_pj: f64 },
+    /// The `EnergyConfig` SRAM size curve evaluated at the buffer size.
+    SramCurve,
+}
+
+/// Residency mask of the optional spike-buffer level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpikeBufResidency {
+    /// Only the spike maps (V₁, V₇) reside; everything else bypasses.
+    Spikes,
+    /// Every variable resides (and competes for the shared capacity).
+    AllVars,
+}
+
+/// Which level holds the sliding-window line buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LineBufferAt {
+    /// Keep the base hierarchy's placement (the paper's main SRAM).
+    Main,
+    /// Move it to the spike buffer: streamed spikes earn halo reuse one
+    /// level earlier, everything else loses it at the main buffer.
+    SpikeBuf,
+}
+
+/// Why a point of the space produces no candidate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Infeasible {
+    /// A spike-buffer dependent axis is set to a non-default coordinate
+    /// while the spike buffer itself is absent (size 0).
+    UnusedAxis(&'static str),
+    /// The hierarchy exceeds the space's on-chip budget.
+    OverBudget { onchip_bytes: u64, budget_bytes: u64 },
+    /// The generated hierarchy fails structural validation.
+    Invalid(String),
+}
+
+impl fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Infeasible::UnusedAxis(axis) => {
+                write!(f, "axis `{axis}` is set but the spike buffer is absent")
+            }
+            Infeasible::OverBudget { onchip_bytes, budget_bytes } => write!(
+                f,
+                "on-chip capacity {onchip_bytes} B exceeds the {budget_bytes} B budget"
+            ),
+            Infeasible::Invalid(e) => write!(f, "invalid hierarchy: {e}"),
+        }
+    }
+}
+
+/// A parameterized architecture space (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchSpace {
+    pub name: String,
+    /// Base hierarchy the candidates are derived from.
+    pub base: HierarchySpec,
+    pub pe_reg_bits: u32,
+    /// Axis 0: PE-array shapes.
+    pub arrays: Vec<ArrayScheme>,
+    /// Axis 1: uniform scale factors on every bounded base capacity.
+    pub mem_scales: Vec<f64>,
+    /// Axis 2: main-buffer layout.
+    pub main_buffers: Vec<MainBuffer>,
+    /// Axis 3: spike-buffer sizes in bytes (0 = no spike buffer).
+    pub spike_buf_bytes: Vec<u64>,
+    /// Axis 4: spike-buffer energy rules.
+    pub spike_buf_energies: Vec<SpikeBufEnergy>,
+    /// Axis 5: spike-buffer residency masks.
+    pub spike_buf_residencies: Vec<SpikeBufResidency>,
+    /// Axis 6: line-buffer placement.
+    pub line_buffers: Vec<LineBufferAt>,
+    /// Total on-chip budget in bytes (`None` = unbounded). This is the
+    /// search's area proxy: candidates above it are infeasible.
+    pub max_onchip_bytes: Option<u64>,
+}
+
+impl ArchSpace {
+    /// The default spike-buffer access energies (the
+    /// [`HierarchySpec::four_level_spike_buffer`] preset's constants).
+    pub const DEFAULT_SPIKE_BUF_ENERGY: SpikeBufEnergy =
+        SpikeBufEnergy::Explicit { read_pj: 0.020, write_pj: 0.024 };
+
+    /// A space exactly equivalent to the paper pool
+    /// ([`crate::arch::ArchPool::paper_pool`]): the four Table-III array
+    /// arrangements over the unmodified paper hierarchy. Exhaustive
+    /// search over this space is pinned bit-identical to `dse::explore`.
+    pub fn paper() -> ArchSpace {
+        ArchSpace {
+            name: "paper_pool".into(),
+            base: HierarchySpec::paper_28nm(),
+            pe_reg_bits: 64,
+            arrays: ArrayScheme::paper_candidates(),
+            mem_scales: vec![1.0],
+            main_buffers: vec![MainBuffer::PerVar],
+            spike_buf_bytes: vec![0],
+            spike_buf_energies: vec![ArchSpace::DEFAULT_SPIKE_BUF_ENERGY],
+            spike_buf_residencies: vec![SpikeBufResidency::Spikes],
+            line_buffers: vec![LineBufferAt::Main],
+            max_onchip_bytes: None,
+        }
+    }
+
+    /// The reference benchmark space (`configs/space_reference.toml`):
+    /// every 256-MAC array arrangement × three memory scales × both
+    /// main-buffer layouts × an optional 8 kB spike buffer × both
+    /// line-buffer placements, under an 8 MB budget. 216 points, 162
+    /// feasible.
+    pub fn reference() -> ArchSpace {
+        ArchSpace {
+            name: "reference".into(),
+            base: HierarchySpec::paper_28nm(),
+            pe_reg_bits: 64,
+            arrays: ArrayScheme::enumerate(256),
+            mem_scales: vec![0.5, 1.0, 2.0],
+            main_buffers: vec![MainBuffer::PerVar, MainBuffer::Unified],
+            spike_buf_bytes: vec![0, 8 * 1024],
+            spike_buf_energies: vec![ArchSpace::DEFAULT_SPIKE_BUF_ENERGY],
+            spike_buf_residencies: vec![SpikeBufResidency::Spikes],
+            line_buffers: vec![LineBufferAt::Main, LineBufferAt::SpikeBuf],
+            max_onchip_bytes: Some(8 * 1024 * 1024),
+        }
+    }
+
+    /// Structural validation; every constructor path (presets, TOML)
+    /// funnels through this.
+    pub fn validate(&self) -> Result<(), String> {
+        self.base.validate()?;
+        for (axis, len) in self.axis_names().iter().zip(self.axis_sizes()) {
+            if len == 0 {
+                return Err(format!("space `{}`: axis `{axis}` is empty", self.name));
+            }
+        }
+        if self.arrays.iter().any(|a| a.rows == 0 || a.cols == 0) {
+            return Err(format!("space `{}`: degenerate 0-wide array", self.name));
+        }
+        if self.mem_scales.iter().any(|&s| !(s.is_finite() && s > 0.0)) {
+            return Err(format!(
+                "space `{}`: memory scales must be finite and positive",
+                self.name
+            ));
+        }
+        for e in &self.spike_buf_energies {
+            if let SpikeBufEnergy::Explicit { read_pj, write_pj } = *e {
+                if !(read_pj >= 0.0 && write_pj >= 0.0) {
+                    return Err(format!(
+                        "space `{}`: negative/NaN spike-buffer access energy",
+                        self.name
+                    ));
+                }
+            }
+        }
+        if self.spike_buf_bytes.iter().any(|&b| b > 0)
+            && self.base.num_levels() + 1 > MAX_LEVELS
+        {
+            return Err(format!(
+                "space `{}`: base hierarchy `{}` already has {} levels; \
+                 a spike buffer would exceed MAX_LEVELS = {MAX_LEVELS}",
+                self.name,
+                self.base.name,
+                self.base.num_levels()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Axis display names, in [`Coords`] order.
+    pub fn axis_names(&self) -> [&'static str; NUM_AXES] {
+        [
+            "arrays",
+            "mem_scales",
+            "main_buffer",
+            "spike_buf_bytes",
+            "spike_buf_energy",
+            "spike_buf_residency",
+            "line_buffer",
+        ]
+    }
+
+    /// Axis sizes, in [`Coords`] order.
+    pub fn axis_sizes(&self) -> [usize; NUM_AXES] {
+        [
+            self.arrays.len(),
+            self.mem_scales.len(),
+            self.main_buffers.len(),
+            self.spike_buf_bytes.len(),
+            self.spike_buf_energies.len(),
+            self.spike_buf_residencies.len(),
+            self.line_buffers.len(),
+        ]
+    }
+
+    /// Total number of points (feasible or not).
+    pub fn num_points(&self) -> u128 {
+        self.axis_sizes().iter().map(|&s| s as u128).product()
+    }
+
+    /// Decode a dense index (`0..num_points()`) into coordinates; axis 0
+    /// varies slowest.
+    pub fn coords_of(&self, flat: u64) -> Coords {
+        let sizes = self.axis_sizes();
+        let mut rem = flat;
+        let mut coords = [0usize; NUM_AXES];
+        for i in (0..NUM_AXES).rev() {
+            coords[i] = (rem % sizes[i] as u64) as usize;
+            rem /= sizes[i] as u64;
+        }
+        coords
+    }
+
+    /// A uniformly random point (not necessarily feasible).
+    pub fn random_point(&self, rng: &mut SplitMix64) -> Coords {
+        let sizes = self.axis_sizes();
+        let mut coords = [0usize; NUM_AXES];
+        for i in 0..NUM_AXES {
+            coords[i] = rng.next_below(sizes[i] as u64) as usize;
+        }
+        coords
+    }
+
+    /// Mutate one randomly chosen axis to a different coordinate (the
+    /// guided strategies' neighbourhood move). Degenerate spaces with
+    /// every axis of size 1 return the point unchanged.
+    pub fn mutate(&self, coords: Coords, rng: &mut SplitMix64) -> Coords {
+        let sizes = self.axis_sizes();
+        if sizes.iter().all(|&s| s <= 1) {
+            return coords;
+        }
+        let mut out = coords;
+        loop {
+            let axis = rng.next_below(NUM_AXES as u64) as usize;
+            if sizes[axis] <= 1 {
+                continue;
+            }
+            let step = 1 + rng.next_below(sizes[axis] as u64 - 1) as usize;
+            out[axis] = (coords[axis] + step) % sizes[axis];
+            return out;
+        }
+    }
+
+    /// Build the candidate at `coords`, or explain why the point is
+    /// infeasible. Feasible candidates always pass
+    /// [`HierarchySpec::validate`].
+    pub fn candidate(&self, coords: Coords) -> Result<Architecture, Infeasible> {
+        let array = self.arrays[coords[0]];
+        let scale = self.mem_scales[coords[1]];
+        let main = self.main_buffers[coords[2]];
+        let sb_bytes = self.spike_buf_bytes[coords[3]];
+        let sb_energy = self.spike_buf_energies[coords[4]];
+        let sb_residency = self.spike_buf_residencies[coords[5]];
+        let line = self.line_buffers[coords[6]];
+
+        // A point without a spike buffer must sit at the default
+        // coordinate of every spike-buffer dependent axis, so the
+        // no-buffer candidate has exactly one representation.
+        if sb_bytes == 0 {
+            if coords[4] != 0 {
+                return Err(Infeasible::UnusedAxis("spike_buf_energy"));
+            }
+            if coords[5] != 0 {
+                return Err(Infeasible::UnusedAxis("spike_buf_residency"));
+            }
+            if line == LineBufferAt::SpikeBuf {
+                return Err(Infeasible::UnusedAxis("line_buffer"));
+            }
+        }
+
+        let mut parts: Vec<String> = Vec::new();
+        let mut hier = if scale == 1.0 {
+            self.base.clone()
+        } else {
+            parts.push(format!("s{scale}"));
+            self.base.scaled(scale)
+        };
+
+        if main == MainBuffer::Unified {
+            parts.push("usram".into());
+            let lvl = hier.main_buffer_level();
+            let bytes = hier.levels[lvl].bytes().max(1024);
+            hier.levels[lvl].capacity = LevelCapacity::Shared { bytes };
+        }
+
+        if sb_bytes > 0 {
+            parts.push(format!("sb{sb_bytes}"));
+            let energy = match sb_energy {
+                SpikeBufEnergy::Explicit { read_pj, write_pj } => {
+                    LevelEnergy::Explicit { read_pj, write_pj }
+                }
+                SpikeBufEnergy::SramCurve => {
+                    parts.push("sbsram".into());
+                    LevelEnergy::SramCurve
+                }
+            };
+            let residency = match sb_residency {
+                SpikeBufResidency::Spikes => {
+                    let mut r = [false; 8];
+                    r[SramId::V1Spike.idx()] = true;
+                    r[SramId::V7SpikeOut.idx()] = true;
+                    r
+                }
+                SpikeBufResidency::AllVars => {
+                    parts.push("sball".into());
+                    [true; 8]
+                }
+            };
+            hier.levels.insert(
+                1,
+                LevelSpec {
+                    name: "SpikeBuf".into(),
+                    energy,
+                    capacity: LevelCapacity::Shared { bytes: sb_bytes },
+                    residency,
+                    line_buffer: false,
+                    word_bits: 1,
+                },
+            );
+        }
+
+        if line == LineBufferAt::SpikeBuf {
+            parts.push("lbsb".into());
+            for l in &mut hier.levels {
+                l.line_buffer = false;
+            }
+            hier.levels[1].line_buffer = true;
+        }
+
+        if !parts.is_empty() {
+            hier.name = format!("{}+{}", self.base.name, parts.join("+"));
+        }
+
+        if let Some(budget) = self.max_onchip_bytes {
+            let onchip = hier.onchip_bytes();
+            if onchip > budget {
+                return Err(Infeasible::OverBudget {
+                    onchip_bytes: onchip,
+                    budget_bytes: budget,
+                });
+            }
+        }
+        hier.validate().map_err(Infeasible::Invalid)?;
+        Ok(Architecture { array, hier, pe_reg_bits: self.pe_reg_bits })
+    }
+
+    /// Short display label for a point ("16x16 s0.5 usram sb8192 lbsb").
+    pub fn label(&self, coords: Coords) -> String {
+        use std::fmt::Write as _;
+        let mut s = self.arrays[coords[0]].label();
+        let scale = self.mem_scales[coords[1]];
+        if scale != 1.0 {
+            let _ = write!(s, " s{scale}");
+        }
+        if self.main_buffers[coords[2]] == MainBuffer::Unified {
+            s.push_str(" usram");
+        }
+        let sb = self.spike_buf_bytes[coords[3]];
+        if sb > 0 {
+            let _ = write!(s, " sb{sb}");
+            if self.spike_buf_energies[coords[4]] == SpikeBufEnergy::SramCurve {
+                s.push_str(" sbsram");
+            }
+            if self.spike_buf_residencies[coords[5]] == SpikeBufResidency::AllVars {
+                s.push_str(" sball");
+            }
+        }
+        if self.line_buffers[coords[6]] == LineBufferAt::SpikeBuf {
+            s.push_str(" lbsb");
+        }
+        s
+    }
+
+    /// Append an injective structural encoding of the space to `key`
+    /// (checkpoint compatibility checks).
+    pub fn fingerprint_into(&self, key: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(key, "S{}:{};", self.name.len(), self.name);
+        self.base.fingerprint_into(key);
+        let _ = write!(key, "g{};", self.pe_reg_bits);
+        for a in &self.arrays {
+            let _ = write!(key, "A{}x{};", a.rows, a.cols);
+        }
+        key.push(';');
+        for s in &self.mem_scales {
+            let _ = write!(key, "{:x},", s.to_bits());
+        }
+        key.push(';');
+        for m in &self.main_buffers {
+            key.push_str(match m {
+                MainBuffer::PerVar => "p",
+                MainBuffer::Unified => "u",
+            });
+        }
+        key.push(';');
+        for b in &self.spike_buf_bytes {
+            let _ = write!(key, "{b},");
+        }
+        key.push(';');
+        for e in &self.spike_buf_energies {
+            match e {
+                SpikeBufEnergy::SramCurve => key.push('s'),
+                SpikeBufEnergy::Explicit { read_pj, write_pj } => {
+                    let _ = write!(key, "x{:x},{:x}", read_pj.to_bits(), write_pj.to_bits());
+                }
+            }
+            key.push(',');
+        }
+        key.push(';');
+        for r in &self.spike_buf_residencies {
+            key.push_str(match r {
+                SpikeBufResidency::Spikes => "s",
+                SpikeBufResidency::AllVars => "a",
+            });
+        }
+        key.push(';');
+        for l in &self.line_buffers {
+            key.push_str(match l {
+                LineBufferAt::Main => "m",
+                LineBufferAt::SpikeBuf => "b",
+            });
+        }
+        key.push(';');
+        match self.max_onchip_bytes {
+            Some(b) => {
+                let _ = write!(key, "B{b};");
+            }
+            None => key.push_str("B-;"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchPool;
+
+    #[test]
+    fn paper_space_reproduces_the_paper_pool() {
+        let space = ArchSpace::paper();
+        space.validate().unwrap();
+        assert_eq!(space.num_points(), 4);
+        let pool = ArchPool::paper_pool();
+        for flat in 0..4u64 {
+            let cand = space.candidate(space.coords_of(flat)).unwrap();
+            assert_eq!(cand, pool.candidates[flat as usize], "candidate {flat}");
+        }
+    }
+
+    #[test]
+    fn reference_space_counts() {
+        let space = ArchSpace::reference();
+        space.validate().unwrap();
+        assert_eq!(space.num_points(), 216);
+        let mut feasible = 0;
+        let mut infeasible = 0;
+        for flat in 0..216u64 {
+            match space.candidate(space.coords_of(flat)) {
+                Ok(a) => {
+                    a.hier.validate().unwrap();
+                    feasible += 1;
+                }
+                Err(Infeasible::UnusedAxis(_)) => infeasible += 1,
+                Err(other) => panic!("unexpected verdict: {other}"),
+            }
+        }
+        assert_eq!(feasible, 162);
+        assert_eq!(infeasible, 54);
+    }
+
+    #[test]
+    fn coords_round_trip_densely() {
+        let space = ArchSpace::reference();
+        let sizes = space.axis_sizes();
+        let mut seen = std::collections::HashSet::new();
+        for flat in 0..space.num_points() as u64 {
+            let c = space.coords_of(flat);
+            for i in 0..NUM_AXES {
+                assert!(c[i] < sizes[i]);
+            }
+            assert!(seen.insert(c), "duplicate coords for flat {flat}");
+        }
+    }
+
+    #[test]
+    fn budget_rejects_oversized_candidates() {
+        let mut space = ArchSpace::paper();
+        space.max_onchip_bytes = Some(1024);
+        match space.candidate(space.coords_of(0)) {
+            Err(Infeasible::OverBudget { onchip_bytes, budget_bytes }) => {
+                assert!(onchip_bytes > budget_bytes);
+            }
+            other => panic!("expected OverBudget, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spike_buffer_candidates_have_four_levels() {
+        let space = ArchSpace::reference();
+        // coords: arrays[0], scale 1.0, pervar, sb 8k, defaults, line at sb.
+        let coords = [0, 1, 0, 1, 0, 0, 1];
+        let a = space.candidate(coords).unwrap();
+        assert_eq!(a.hier.num_levels(), 4);
+        assert_eq!(a.hier.levels[1].name, "SpikeBuf");
+        assert!(a.hier.levels[1].line_buffer);
+        assert!(!a.hier.levels[2].line_buffer);
+        assert!(a.hier.name.contains("sb8192"));
+        assert!(a.hier.name.contains("lbsb"));
+        // Line buffer at main keeps the base placement.
+        let a = space.candidate([0, 1, 0, 1, 0, 0, 0]).unwrap();
+        assert!(!a.hier.levels[1].line_buffer);
+        assert!(a.hier.levels[2].line_buffer);
+    }
+
+    #[test]
+    fn unified_axis_merges_the_main_buffer() {
+        let space = ArchSpace::reference();
+        let a = space.candidate([0, 1, 1, 0, 0, 0, 0]).unwrap();
+        match &a.hier.levels[1].capacity {
+            LevelCapacity::Shared { bytes } => {
+                assert_eq!(*bytes, HierarchySpec::paper_28nm().onchip_bytes());
+            }
+            other => panic!("expected a shared bank, got {other:?}"),
+        }
+        assert!(a.hier.name.contains("usram"));
+    }
+
+    #[test]
+    fn identity_coords_keep_the_base_name() {
+        let space = ArchSpace::reference();
+        let a = space.candidate([0, 1, 0, 0, 0, 0, 0]).unwrap();
+        assert_eq!(a.hier.name, "paper_28nm");
+        assert_eq!(a.hier, HierarchySpec::paper_28nm());
+    }
+
+    #[test]
+    fn mutate_changes_exactly_one_axis_deterministically() {
+        let space = ArchSpace::reference();
+        let start = space.coords_of(17);
+        let mut a = SplitMix64::new(9);
+        let mut b = SplitMix64::new(9);
+        for _ in 0..200 {
+            let ma = space.mutate(start, &mut a);
+            let mb = space.mutate(start, &mut b);
+            assert_eq!(ma, mb, "same seed, same proposal");
+            let changed: Vec<usize> =
+                (0..NUM_AXES).filter(|&i| ma[i] != start[i]).collect();
+            assert_eq!(changed.len(), 1, "{ma:?} vs {start:?}");
+        }
+        // A degenerate space cannot move.
+        let fixed = ArchSpace {
+            arrays: vec![ArrayScheme::new(16, 16)],
+            mem_scales: vec![1.0],
+            main_buffers: vec![MainBuffer::PerVar],
+            spike_buf_bytes: vec![0],
+            line_buffers: vec![LineBufferAt::Main],
+            ..ArchSpace::reference()
+        };
+        let c = fixed.coords_of(0);
+        assert_eq!(fixed.mutate(c, &mut a), c);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_spaces() {
+        let mut s = ArchSpace::paper();
+        s.mem_scales.clear();
+        assert!(s.validate().unwrap_err().contains("mem_scales"));
+
+        let mut s = ArchSpace::paper();
+        s.mem_scales = vec![-1.0];
+        assert!(s.validate().is_err());
+
+        let mut s = ArchSpace::paper();
+        s.arrays = vec![ArrayScheme::new(0, 16)];
+        assert!(s.validate().unwrap_err().contains("array"));
+
+        // A 6-level base cannot also grow a spike buffer.
+        let mut base = HierarchySpec::paper_28nm();
+        while base.num_levels() < MAX_LEVELS {
+            base.levels.insert(
+                1,
+                LevelSpec {
+                    name: format!("L{}", base.num_levels()),
+                    energy: LevelEnergy::Explicit { read_pj: 0.1, write_pj: 0.1 },
+                    capacity: LevelCapacity::Shared { bytes: 4096 },
+                    residency: [true; 8],
+                    line_buffer: false,
+                    word_bits: 16,
+                },
+            );
+        }
+        let mut s = ArchSpace::paper();
+        s.base = base;
+        s.spike_buf_bytes = vec![0, 4096];
+        assert!(s.validate().unwrap_err().contains("MAX_LEVELS"));
+    }
+
+    #[test]
+    fn fingerprints_distinguish_spaces() {
+        let mut keys = Vec::new();
+        let mut scaled = ArchSpace::paper();
+        scaled.mem_scales = vec![1.0, 2.0];
+        let mut budgeted = ArchSpace::paper();
+        budgeted.max_onchip_bytes = Some(1 << 22);
+        for s in [ArchSpace::paper(), ArchSpace::reference(), scaled, budgeted] {
+            let mut k = String::new();
+            s.fingerprint_into(&mut k);
+            keys.push(k);
+        }
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j], "{i} vs {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_name_the_active_axes() {
+        let space = ArchSpace::reference();
+        assert_eq!(space.label([0, 1, 0, 0, 0, 0, 0]), "1x256");
+        let l = space.label([0, 0, 1, 1, 0, 0, 1]);
+        assert!(l.contains("s0.5") && l.contains("usram"));
+        assert!(l.contains("sb8192") && l.contains("lbsb"));
+    }
+}

@@ -1,0 +1,263 @@
+//! `bench_check` — CI bench-regression gate.
+//!
+//! Compares the headline ratios of freshly produced `BENCH_*.json`
+//! documents against the committed baselines under `bench_baselines/`
+//! and exits non-zero on a regression. Three kinds of gated objects,
+//! matched by key inside each document:
+//!
+//! * `"speedup"` — higher is better; fail when
+//!   `current < baseline / (1 + tol)`.
+//! * `"overhead"` — lower is better; fail when
+//!   `current > baseline * (1 + tol)`.
+//! * `"quality"` — an absolute score; fail when
+//!   `current < baseline - quality_tol`.
+//!
+//! Only keys present in the *baseline* object are gated, so a bench can
+//! grow new metrics without breaking CI; a gated key missing from the
+//! current document fails (schema regression). Every other field
+//! (per-case timings, info numbers) is informational and never gated —
+//! absolute nanoseconds are machine-dependent, ratios are not.
+//!
+//! Usage (CI runs this from `rust/` after the quick-mode benches):
+//!
+//! ```text
+//! cargo run --release --bin bench_check -- \
+//!     [--baseline-dir bench_baselines] [--tol 1.0] [--quality-tol 0.1] \
+//!     BENCH_dse.json BENCH_spike.json BENCH_archsearch.json
+//! ```
+//!
+//! The default tolerance is deliberately loose (a gate at half/double
+//! the committed ratio): CI runners are noisy, and the gate exists to
+//! catch real regressions — a lost fast path, a broken search — not
+//! scheduling jitter. Refresh a baseline by copying a quick-mode bench
+//! output over the committed file (see `bench_baselines/README.md`).
+
+use std::process::ExitCode;
+
+use eocas::util::json::Json;
+
+/// One gated comparison.
+struct Gate {
+    file: String,
+    metric: String,
+    baseline: f64,
+    current: Option<f64>,
+    ok: bool,
+    rule: String,
+}
+
+/// Direction of a gated object.
+#[derive(Clone, Copy)]
+enum Direction {
+    /// `speedup`: higher is better.
+    Higher,
+    /// `overhead`: lower is better.
+    Lower,
+    /// `quality`: absolute score with additive tolerance.
+    Absolute,
+}
+
+const GATED_OBJECTS: [(&str, Direction); 3] = [
+    ("speedup", Direction::Higher),
+    ("overhead", Direction::Lower),
+    ("quality", Direction::Absolute),
+];
+
+/// Compare one bench document against its baseline; append gate rows.
+fn check_doc(file: &str, current: &Json, baseline: &Json, tol: f64, qtol: f64, out: &mut Vec<Gate>) {
+    for (obj, dir) in GATED_OBJECTS {
+        let Some(Json::Obj(base_map)) = baseline.get(obj) else {
+            continue;
+        };
+        for (key, bval) in base_map {
+            let Some(baseline_v) = bval.as_f64() else {
+                continue;
+            };
+            let current_v = current.get(obj).and_then(|o| o.get(key)).and_then(Json::as_f64);
+            let (ok, rule) = match (dir, current_v) {
+                (_, None) => (false, "present".to_string()),
+                (Direction::Higher, Some(c)) => {
+                    let gate = baseline_v / (1.0 + tol);
+                    (c >= gate, format!(">= {gate:.3}"))
+                }
+                (Direction::Lower, Some(c)) => {
+                    let gate = baseline_v * (1.0 + tol);
+                    (c <= gate, format!("<= {gate:.3}"))
+                }
+                (Direction::Absolute, Some(c)) => {
+                    let gate = baseline_v - qtol;
+                    (c >= gate, format!(">= {gate:.3}"))
+                }
+            };
+            out.push(Gate {
+                file: file.to_string(),
+                metric: format!("{obj}.{key}"),
+                baseline: baseline_v,
+                current: current_v,
+                ok,
+                rule,
+            });
+        }
+    }
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+fn run(args: &[String]) -> Result<bool, String> {
+    let mut baseline_dir = "bench_baselines".to_string();
+    let mut tol = 1.0f64;
+    let mut qtol = 0.1f64;
+    let mut files: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--baseline-dir" | "--tol" | "--quality-tol" => {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| format!("{} needs a value", args[i]))?;
+                match args[i].as_str() {
+                    "--baseline-dir" => baseline_dir = val.clone(),
+                    "--tol" => {
+                        tol = val.parse().map_err(|e| format!("--tol {val}: {e}"))?
+                    }
+                    _ => {
+                        qtol = val.parse().map_err(|e| format!("--quality-tol {val}: {e}"))?
+                    }
+                }
+                i += 2;
+            }
+            other if other.starts_with("--") => {
+                return Err(format!("unknown flag `{other}`"));
+            }
+            _ => {
+                files.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    if files.is_empty() {
+        return Err("no bench files given (e.g. BENCH_dse.json)".into());
+    }
+    let mut gates: Vec<Gate> = Vec::new();
+    for file in &files {
+        let current = load(file)?;
+        let base_path = format!("{baseline_dir}/{file}");
+        let baseline = load(&base_path)?;
+        check_doc(file, &current, &baseline, tol, qtol, &mut gates);
+    }
+    let mut all_ok = true;
+    println!(
+        "{:<24} {:<28} {:>10} {:>10}  {:<12} {}",
+        "file", "metric", "baseline", "current", "gate", "status"
+    );
+    for g in &gates {
+        all_ok &= g.ok;
+        let current = g
+            .current
+            .map(|c| format!("{c:.3}"))
+            .unwrap_or_else(|| "missing".to_string());
+        println!(
+            "{:<24} {:<28} {:>10.3} {:>10}  {:<12} {}",
+            g.file,
+            g.metric,
+            g.baseline,
+            current,
+            g.rule,
+            if g.ok { "OK" } else { "REGRESSED" }
+        );
+    }
+    if gates.is_empty() {
+        return Err("baselines gate no metrics — refusing to vacuously pass".into());
+    }
+    Ok(all_ok)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(true) => {
+            println!("bench gate: all headline metrics within tolerance");
+            ExitCode::SUCCESS
+        }
+        Ok(false) => {
+            eprintln!(
+                "bench gate: headline regression vs committed baselines \
+                 (see table above; refresh bench_baselines/ only for intentional changes)"
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(obj: &str, key: &str, v: f64) -> Json {
+        let mut inner = Json::obj();
+        inner.set(key, Json::Num(v));
+        let mut d = Json::obj();
+        d.set("schema", Json::Num(1.0)).set(obj, inner);
+        d
+    }
+
+    fn gate_of(current: &Json, baseline: &Json) -> Vec<Gate> {
+        let mut out = Vec::new();
+        check_doc("t.json", current, baseline, 1.0, 0.1, &mut out);
+        out
+    }
+
+    #[test]
+    fn speedup_gates_at_half_the_baseline() {
+        let baseline = doc("speedup", "kernel", 6.0);
+        assert!(gate_of(&doc("speedup", "kernel", 6.5), &baseline)[0].ok);
+        assert!(gate_of(&doc("speedup", "kernel", 3.01), &baseline)[0].ok);
+        assert!(!gate_of(&doc("speedup", "kernel", 2.9), &baseline)[0].ok);
+        // NaN never passes a gate.
+        assert!(!gate_of(&doc("speedup", "kernel", f64::NAN), &baseline)[0].ok);
+    }
+
+    #[test]
+    fn overhead_gates_at_double_the_baseline() {
+        let baseline = doc("overhead", "temporal_raw", 1.2);
+        assert!(gate_of(&doc("overhead", "temporal_raw", 1.1), &baseline)[0].ok);
+        assert!(gate_of(&doc("overhead", "temporal_raw", 2.3), &baseline)[0].ok);
+        assert!(!gate_of(&doc("overhead", "temporal_raw", 2.5), &baseline)[0].ok);
+    }
+
+    #[test]
+    fn quality_gates_additively() {
+        let baseline = doc("quality", "guided_vs_exhaustive", 1.0);
+        assert!(gate_of(&doc("quality", "guided_vs_exhaustive", 0.95), &baseline)[0].ok);
+        assert!(!gate_of(&doc("quality", "guided_vs_exhaustive", 0.85), &baseline)[0].ok);
+    }
+
+    #[test]
+    fn missing_current_metric_fails_extra_metrics_pass() {
+        let baseline = doc("speedup", "kernel", 6.0);
+        // Gated key absent from the current doc: schema regression.
+        let current = doc("speedup", "other", 9.0);
+        let gates = gate_of(&current, &baseline);
+        assert_eq!(gates.len(), 1, "only baseline keys are gated");
+        assert!(!gates[0].ok);
+        // Keys only in the current doc are ignored.
+        let gates = gate_of(&doc("speedup", "kernel", 6.0), &baseline);
+        assert!(gates.iter().all(|g| g.ok));
+    }
+
+    #[test]
+    fn ungated_objects_are_ignored() {
+        let mut baseline = doc("speedup", "kernel", 6.0);
+        baseline.set("cases", Json::obj()).set("frontier_size", Json::Num(9.0));
+        let gates = gate_of(&doc("speedup", "kernel", 6.0), &baseline);
+        assert_eq!(gates.len(), 1);
+    }
+}

@@ -8,6 +8,7 @@
 //! simulator doubles as a what-if tool for other technology nodes.
 
 pub mod archfile;
+pub mod spacefile;
 pub mod toml;
 
 use toml::TomlValue;

@@ -1,0 +1,381 @@
+//! Declarative architecture-space files: TOML → [`ArchSpace`].
+//!
+//! A space file describes a *generated* candidate pool for the
+//! architecture search (`eocas arch-search --space PATH`): one axis list
+//! per [`ArchSpace`] axis, a base hierarchy preset, and an optional
+//! total-SRAM budget. Shipped examples live under `configs/` (see its
+//! README):
+//!
+//! ```toml
+//! [space]
+//! name = "reference"
+//! base = "paper_28nm"
+//! max_onchip_bytes = 8388608
+//!
+//! [axes]
+//! macs = 256                     # or arrays = ["16x16", "2x128", ...]
+//! mem_scales = [0.5, 1.0, 2.0]
+//! main_buffer = ["pervar", "unified"]
+//! spike_buf_bytes = [0, 8192]
+//! line_buffer = ["main", "spike_buf"]
+//! ```
+//!
+//! Axes omitted from `[axes]` default to the single identity coordinate
+//! (scale 1.0, per-variable main buffer, no spike buffer, line buffer at
+//! the base placement), so a file listing only `arrays` describes a
+//! plain array sweep. Unknown sections and keys are rejected with the
+//! offending name, and the resulting space passes
+//! [`ArchSpace::validate`] before it is returned.
+
+use std::collections::BTreeMap;
+
+use super::toml::{self, TomlValue};
+use crate::arch::space::{
+    ArchSpace, LineBufferAt, MainBuffer, SpikeBufEnergy, SpikeBufResidency,
+};
+use crate::arch::{ArrayScheme, HierarchySpec};
+
+const SPACE_KEYS: [&str; 4] = ["name", "base", "pe_reg_bits", "max_onchip_bytes"];
+const AXES_KEYS: [&str; 8] = [
+    "arrays",
+    "macs",
+    "mem_scales",
+    "main_buffer",
+    "spike_buf_bytes",
+    "spike_buf_energy",
+    "spike_buf_residency",
+    "line_buffer",
+];
+
+fn check_keys(
+    table: &BTreeMap<String, TomlValue>,
+    known: &[&str],
+    what: &str,
+) -> Result<(), String> {
+    for key in table.keys() {
+        if !known.contains(&key.as_str()) {
+            return Err(format!("unknown key `{key}` in {what} (known: {known:?})"));
+        }
+    }
+    Ok(())
+}
+
+fn str_list<'a>(doc: &'a TomlValue, key: &str) -> Result<Option<Vec<&'a str>>, String> {
+    let Some(v) = doc.path(key) else {
+        return Ok(None);
+    };
+    let items = v
+        .as_array()
+        .ok_or_else(|| format!("`{key}` must be a list of strings"))?;
+    items
+        .iter()
+        .map(|it| {
+            it.as_str()
+                .ok_or_else(|| format!("`{key}` entries must be strings, got {it:?}"))
+        })
+        .collect::<Result<Vec<&str>, String>>()
+        .map(Some)
+}
+
+fn parse_array_scheme(s: &str) -> Result<ArrayScheme, String> {
+    let (r, c) = s
+        .split_once('x')
+        .ok_or_else(|| format!("array `{s}` wants the form `ROWSxCOLS` (e.g. `16x16`)"))?;
+    let rows: u32 = r.trim().parse().map_err(|_| format!("array `{s}`: bad rows"))?;
+    let cols: u32 = c.trim().parse().map_err(|_| format!("array `{s}`: bad cols"))?;
+    Ok(ArrayScheme::new(rows, cols))
+}
+
+fn parse_energy(s: &str) -> Result<SpikeBufEnergy, String> {
+    if s == "sram" {
+        return Ok(SpikeBufEnergy::SramCurve);
+    }
+    if let Some(rest) = s.strip_prefix("explicit:") {
+        let (r, w) = rest.split_once(':').ok_or_else(|| {
+            format!("energy `{s}` wants `explicit:READ_PJ:WRITE_PJ` or `sram`")
+        })?;
+        let read_pj: f64 =
+            r.trim().parse().map_err(|_| format!("energy `{s}`: bad read pJ"))?;
+        let write_pj: f64 =
+            w.trim().parse().map_err(|_| format!("energy `{s}`: bad write pJ"))?;
+        return Ok(SpikeBufEnergy::Explicit { read_pj, write_pj });
+    }
+    Err(format!("unknown spike-buffer energy `{s}` (sram|explicit:READ:WRITE)"))
+}
+
+fn base_hierarchy(name: &str) -> Result<HierarchySpec, String> {
+    match name {
+        "paper_28nm" => Ok(HierarchySpec::paper_28nm()),
+        "4level_spikebuf" => Ok(HierarchySpec::four_level_spike_buffer()),
+        "unified_sram" => Ok(HierarchySpec::unified_sram()),
+        other => Err(format!(
+            "unknown base hierarchy `{other}` (paper_28nm|4level_spikebuf|unified_sram)"
+        )),
+    }
+}
+
+/// Parse an architecture space from TOML text.
+pub fn parse_space(text: &str) -> Result<ArchSpace, String> {
+    let doc = toml::parse(text)?;
+    let root = doc.as_table().expect("toml::parse returns a root table");
+    for key in root.keys() {
+        if key != "space" && key != "axes" {
+            return Err(format!(
+                "unknown section `[{key}]` in space file (known: [space], [axes])"
+            ));
+        }
+    }
+    let space_tbl = doc
+        .path("space")
+        .and_then(|v| v.as_table())
+        .ok_or("space file needs a [space] section")?;
+    check_keys(space_tbl, &SPACE_KEYS, "[space]")?;
+    let axes_tbl = doc
+        .path("axes")
+        .and_then(|v| v.as_table())
+        .ok_or("space file needs an [axes] section")?;
+    check_keys(axes_tbl, &AXES_KEYS, "[axes]")?;
+
+    let name = doc.req_str("space.name")?.to_string();
+    let base = base_hierarchy(doc.req_str("space.base")?)?;
+    let pe_reg_bits = match doc.path("space.pe_reg_bits") {
+        None => 64,
+        Some(v) => {
+            let i = v.as_i64().ok_or("`pe_reg_bits` must be an integer")?;
+            u32::try_from(i).map_err(|_| format!("`pe_reg_bits` = {i} out of range"))?
+        }
+    };
+    let max_onchip_bytes = match doc.path("space.max_onchip_bytes") {
+        None => None,
+        Some(v) => {
+            let i = v.as_i64().ok_or("`max_onchip_bytes` must be an integer")?;
+            Some(
+                u64::try_from(i)
+                    .map_err(|_| format!("`max_onchip_bytes` = {i} must be non-negative"))?,
+            )
+        }
+    };
+
+    let explicit_arrays = str_list(&doc, "axes.arrays")?;
+    let macs = doc.path("axes.macs");
+    let arrays = match (explicit_arrays, macs) {
+        (Some(_), Some(_)) => {
+            return Err("`arrays` and `macs` are mutually exclusive".into());
+        }
+        (Some(list), None) => list
+            .into_iter()
+            .map(parse_array_scheme)
+            .collect::<Result<Vec<ArrayScheme>, String>>()?,
+        (None, Some(v)) => {
+            let m = v.as_i64().ok_or("`macs` must be an integer")?;
+            let m = u32::try_from(m).map_err(|_| format!("`macs` = {m} out of range"))?;
+            if m == 0 {
+                return Err("`macs` must be positive".into());
+            }
+            ArrayScheme::enumerate(m)
+        }
+        (None, None) => {
+            return Err("[axes] needs `arrays = [\"RxC\", ...]` or `macs = N`".into());
+        }
+    };
+
+    let mem_scales = match doc.path("axes.mem_scales") {
+        None => vec![1.0],
+        Some(v) => {
+            let items = v.as_array().ok_or("`mem_scales` must be a list of numbers")?;
+            items
+                .iter()
+                .map(|it| {
+                    it.as_f64()
+                        .ok_or_else(|| "`mem_scales` entries must be numbers".to_string())
+                })
+                .collect::<Result<Vec<f64>, String>>()?
+        }
+    };
+
+    let main_buffers = match str_list(&doc, "axes.main_buffer")? {
+        None => vec![MainBuffer::PerVar],
+        Some(list) => list
+            .into_iter()
+            .map(|s| match s {
+                "pervar" => Ok(MainBuffer::PerVar),
+                "unified" => Ok(MainBuffer::Unified),
+                other => Err(format!("unknown main_buffer `{other}` (pervar|unified)")),
+            })
+            .collect::<Result<Vec<MainBuffer>, String>>()?,
+    };
+
+    let spike_buf_bytes = match doc.path("axes.spike_buf_bytes") {
+        None => vec![0],
+        Some(v) => {
+            let items = v.as_array().ok_or("`spike_buf_bytes` must be a list of integers")?;
+            items
+                .iter()
+                .map(|it| {
+                    let i = it
+                        .as_i64()
+                        .ok_or_else(|| "`spike_buf_bytes` entries must be integers".to_string())?;
+                    u64::try_from(i)
+                        .map_err(|_| format!("`spike_buf_bytes` entry {i} must be non-negative"))
+                })
+                .collect::<Result<Vec<u64>, String>>()?
+        }
+    };
+
+    let spike_buf_energies = match str_list(&doc, "axes.spike_buf_energy")? {
+        None => vec![ArchSpace::DEFAULT_SPIKE_BUF_ENERGY],
+        Some(list) => list
+            .into_iter()
+            .map(parse_energy)
+            .collect::<Result<Vec<SpikeBufEnergy>, String>>()?,
+    };
+
+    let spike_buf_residencies = match str_list(&doc, "axes.spike_buf_residency")? {
+        None => vec![SpikeBufResidency::Spikes],
+        Some(list) => list
+            .into_iter()
+            .map(|s| match s {
+                "spikes" => Ok(SpikeBufResidency::Spikes),
+                "all" => Ok(SpikeBufResidency::AllVars),
+                other => Err(format!("unknown spike_buf_residency `{other}` (spikes|all)")),
+            })
+            .collect::<Result<Vec<SpikeBufResidency>, String>>()?,
+    };
+
+    let line_buffers = match str_list(&doc, "axes.line_buffer")? {
+        None => vec![LineBufferAt::Main],
+        Some(list) => list
+            .into_iter()
+            .map(|s| match s {
+                "main" => Ok(LineBufferAt::Main),
+                "spike_buf" => Ok(LineBufferAt::SpikeBuf),
+                other => Err(format!("unknown line_buffer `{other}` (main|spike_buf)")),
+            })
+            .collect::<Result<Vec<LineBufferAt>, String>>()?,
+    };
+
+    let space = ArchSpace {
+        name,
+        base,
+        pe_reg_bits,
+        arrays,
+        mem_scales,
+        main_buffers,
+        spike_buf_bytes,
+        spike_buf_energies,
+        spike_buf_residencies,
+        line_buffers,
+        max_onchip_bytes,
+    };
+    space.validate()?;
+    Ok(space)
+}
+
+/// Load an architecture space from a TOML file on disk.
+pub fn load_space(path: &std::path::Path) -> Result<ArchSpace, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_space(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_array_sweep_parses_with_defaults() {
+        let s = parse_space(
+            "[space]\nname = \"mini\"\nbase = \"paper_28nm\"\n\
+             [axes]\narrays = [\"16x16\", \"8x32\"]\n",
+        )
+        .unwrap();
+        assert_eq!(s.arrays, vec![ArrayScheme::new(16, 16), ArrayScheme::new(8, 32)]);
+        assert_eq!(s.mem_scales, vec![1.0]);
+        assert_eq!(s.main_buffers, vec![MainBuffer::PerVar]);
+        assert_eq!(s.spike_buf_bytes, vec![0]);
+        assert_eq!(s.line_buffers, vec![LineBufferAt::Main]);
+        assert_eq!(s.pe_reg_bits, 64);
+        assert_eq!(s.max_onchip_bytes, None);
+        assert_eq!(s.num_points(), 2);
+    }
+
+    #[test]
+    fn macs_axis_enumerates_divisor_arrays() {
+        let s = parse_space(
+            "[space]\nname = \"m\"\nbase = \"paper_28nm\"\n[axes]\nmacs = 256\n",
+        )
+        .unwrap();
+        assert_eq!(s.arrays, ArrayScheme::enumerate(256));
+    }
+
+    #[test]
+    fn full_axes_parse() {
+        let s = parse_space(
+            "[space]\nname = \"full\"\nbase = \"paper_28nm\"\nmax_onchip_bytes = 8388608\n\
+             [axes]\nmacs = 256\nmem_scales = [0.5, 1.0, 2.0]\n\
+             main_buffer = [\"pervar\", \"unified\"]\nspike_buf_bytes = [0, 8192]\n\
+             spike_buf_energy = [\"explicit:0.02:0.024\", \"sram\"]\n\
+             spike_buf_residency = [\"spikes\", \"all\"]\n\
+             line_buffer = [\"main\", \"spike_buf\"]\n",
+        )
+        .unwrap();
+        assert_eq!(s.mem_scales.len(), 3);
+        assert_eq!(s.main_buffers, vec![MainBuffer::PerVar, MainBuffer::Unified]);
+        assert_eq!(
+            s.spike_buf_energies,
+            vec![
+                SpikeBufEnergy::Explicit { read_pj: 0.02, write_pj: 0.024 },
+                SpikeBufEnergy::SramCurve,
+            ]
+        );
+        assert_eq!(
+            s.spike_buf_residencies,
+            vec![SpikeBufResidency::Spikes, SpikeBufResidency::AllVars]
+        );
+        assert_eq!(s.max_onchip_bytes, Some(8388608));
+        assert_eq!(s.num_points(), 9 * 3 * 2 * 2 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn bad_space_files_error_with_the_offending_name() {
+        let base = "[space]\nname = \"x\"\nbase = \"paper_28nm\"\n";
+        // Unknown section.
+        let e = parse_space(&format!("{base}[mystery]\nv = 1\n")).unwrap_err();
+        assert!(e.contains("mystery"), "{e}");
+        // Unknown key.
+        let e =
+            parse_space(&format!("{base}[axes]\nmacs = 256\nwormholes = 3\n")).unwrap_err();
+        assert!(e.contains("wormholes"), "{e}");
+        // Missing array axis.
+        let e = parse_space(&format!("{base}[axes]\nmem_scales = [1.0]\n")).unwrap_err();
+        assert!(e.contains("arrays"), "{e}");
+        // Both array forms.
+        let e = parse_space(&format!(
+            "{base}[axes]\nmacs = 256\narrays = [\"16x16\"]\n"
+        ))
+        .unwrap_err();
+        assert!(e.contains("mutually exclusive"), "{e}");
+        // Malformed array shape.
+        let e =
+            parse_space(&format!("{base}[axes]\narrays = [\"16by16\"]\n")).unwrap_err();
+        assert!(e.contains("16by16"), "{e}");
+        // Unknown base preset.
+        let e = parse_space(
+            "[space]\nname = \"x\"\nbase = \"sci_fi\"\n[axes]\nmacs = 256\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("sci_fi"), "{e}");
+        // Unknown energy rule.
+        let e = parse_space(&format!(
+            "{base}[axes]\nmacs = 256\nspike_buf_energy = [\"magic\"]\n"
+        ))
+        .unwrap_err();
+        assert!(e.contains("magic"), "{e}");
+        // Negative scale fails space validation.
+        let e = parse_space(&format!(
+            "{base}[axes]\nmacs = 256\nmem_scales = [-1.0]\n"
+        ))
+        .unwrap_err();
+        assert!(e.contains("positive"), "{e}");
+    }
+}

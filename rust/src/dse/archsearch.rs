@@ -1,0 +1,1157 @@
+//! Architecture-space search: guided multi-objective DSE over *generated*
+//! candidates.
+//!
+//! `dse::explore` sweeps a fixed [`crate::arch::ArchPool`]; this module
+//! searches an [`ArchSpace`] — the parameterized space the pool comes
+//! from (array shapes × memory provisionings × hierarchy variants under
+//! an on-chip budget). Each visited point is priced across the
+//! configured dataflows (family templates and optionally the mapper
+//! optimum) through one batched [`Session::evaluate_many`] call, scored
+//! by its best dataflow's overall training energy, and folded into a
+//! two-objective Pareto frontier over *(energy, on-chip capacity)* — the
+//! capacity being the search's area proxy.
+//!
+//! Two strategies:
+//!
+//! * **Exhaustive** — every point of the space, batched. The default for
+//!   small spaces; over a space equivalent to the paper pool it
+//!   reproduces the `dse::explore` winner bit-identically (pinned by
+//!   `tests/archsearch.rs`).
+//! * **Annealing** — seeded simulated annealing with restarts: mutate
+//!   one axis at a time, accept downhill moves always and uphill moves
+//!   with Metropolis probability on the *relative* energy increase.
+//!   Every evaluated point still folds into the frontier, so the guided
+//!   run's frontier is a genuine (partial) Pareto set.
+//!
+//! Runs are deterministic for a `(space, config)` pair — including
+//! across session thread counts — and checkpoint to JSON
+//! ([`ArchSearchConfig::checkpoint`]): a run resumed from its checkpoint
+//! produces bit-identical results to an uninterrupted one. The CLI front
+//! end is `eocas arch-search`; `report::table_archsearch` renders the
+//! frontier.
+
+use std::cmp::Ordering;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::arch::space::{ArchSpace, Coords, NUM_AXES};
+use crate::arch::Architecture;
+use crate::dataflow::templates::Family;
+use crate::err;
+use crate::model::SnnModel;
+use crate::session::{Dataflow, EvalRequest, EvalResult, Session};
+use crate::sparsity::SparsityProfile;
+use crate::spike::temporal::TemporalSparsity;
+use crate::spike::traffic::SpikeEncoding;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::prng::SplitMix64;
+
+/// Largest space the exhaustive strategy will walk.
+pub const EXHAUSTIVE_LIMIT: u128 = 1 << 22;
+
+/// `Strategy::Auto` picks exhaustive up to this many points.
+pub const AUTO_EXHAUSTIVE_POINTS: u128 = 4096;
+
+/// Feasible-start draws before the annealer gives up on a space.
+const MAX_START_DRAWS: usize = 64;
+
+/// Checkpoint JSON schema version.
+pub const CHECKPOINT_SCHEMA: u32 = 1;
+
+/// Search strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// Exhaustive below [`AUTO_EXHAUSTIVE_POINTS`] points, annealing
+    /// (default parameters) above.
+    Auto,
+    /// Walk every point of the space.
+    Exhaustive,
+    /// Seeded simulated annealing with restarts.
+    Annealing {
+        /// Proposals per restart.
+        iters: usize,
+        /// Independent restarts (fresh random feasible start each).
+        restarts: usize,
+        /// Initial temperature, in units of relative energy increase.
+        t0: f64,
+        /// Geometric cooling factor per proposal, in `(0, 1]`.
+        cooling: f64,
+    },
+}
+
+impl Strategy {
+    /// The default annealing parameters (`Auto`'s large-space choice).
+    pub fn annealing_default() -> Strategy {
+        Strategy::Annealing { iters: 64, restarts: 4, t0: 0.08, cooling: 0.92 }
+    }
+
+    fn resolve(self, space: &ArchSpace) -> Strategy {
+        match self {
+            Strategy::Auto => {
+                if space.num_points() <= AUTO_EXHAUSTIVE_POINTS {
+                    Strategy::Exhaustive
+                } else {
+                    Strategy::annealing_default()
+                }
+            }
+            s => s,
+        }
+    }
+
+    /// Display/fingerprint label ("exhaustive", "annealing(i=64,r=4)").
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::Auto => "auto".into(),
+            Strategy::Exhaustive => "exhaustive".into(),
+            Strategy::Annealing { iters, restarts, .. } => {
+                format!("annealing(i={iters},r={restarts})")
+            }
+        }
+    }
+}
+
+/// Knobs of one architecture search.
+#[derive(Debug, Clone)]
+pub struct ArchSearchConfig {
+    pub strategy: Strategy,
+    /// Dataflow families each candidate is priced across.
+    pub families: Vec<Family>,
+    /// Also price the generic mapper's schedule optimum per candidate.
+    pub include_mapper: bool,
+    /// Seed for the guided strategies (and the run fingerprint).
+    pub seed: u64,
+    /// Optional temporal spike profile applied to every request.
+    pub temporal: Option<TemporalSparsity>,
+    /// Spike-map traffic pricing; `Auto` (requires `temporal`) applies
+    /// to family requests — a mapper request keeps raw pricing.
+    pub spike_encoding: SpikeEncoding,
+    /// Candidates per `evaluate_many` batch in the exhaustive walk.
+    pub batch: usize,
+    /// Stop after scoring this many candidates in this call (batch
+    /// granularity). The partial result is returned either way, but only
+    /// a configured `checkpoint` persists the progress for a resumed
+    /// call (the CLI therefore refuses `--limit` without `--checkpoint`).
+    pub limit: Option<usize>,
+    /// Checkpoint file: written during/after the run, resumed from when
+    /// present (unless `resume` is false).
+    pub checkpoint: Option<PathBuf>,
+    /// Scored candidates between periodic checkpoint writes.
+    pub checkpoint_every: usize,
+    /// Set false to ignore an existing checkpoint file (`--fresh`).
+    pub resume: bool,
+}
+
+impl Default for ArchSearchConfig {
+    fn default() -> Self {
+        ArchSearchConfig {
+            strategy: Strategy::Auto,
+            families: Family::ALL.to_vec(),
+            include_mapper: false,
+            seed: 0xA2C5_EA2C,
+            temporal: None,
+            spike_encoding: SpikeEncoding::Raw,
+            batch: 64,
+            limit: None,
+            checkpoint: None,
+            checkpoint_every: 256,
+            resume: true,
+        }
+    }
+}
+
+impl ArchSearchConfig {
+    fn validate(&self) -> Result<()> {
+        if self.families.is_empty() && !self.include_mapper {
+            return Err(err!(
+                "arch-search needs at least one dataflow family (or the mapper optimum)"
+            ));
+        }
+        if self.spike_encoding == SpikeEncoding::Auto && self.temporal.is_none() {
+            return Err(err!("spike_encoding=auto requires a temporal sparsity source"));
+        }
+        if self.batch == 0 {
+            return Err(err!("batch size must be >= 1"));
+        }
+        if let Strategy::Annealing { iters, restarts, t0, cooling } = self.strategy {
+            if iters == 0 || restarts == 0 {
+                return Err(err!("annealing needs iters >= 1 and restarts >= 1"));
+            }
+            if !(t0 > 0.0 && t0.is_finite()) {
+                return Err(err!("annealing t0 must be finite and positive"));
+            }
+            if !(cooling > 0.0 && cooling <= 1.0) {
+                return Err(err!("annealing cooling must be in (0, 1]"));
+            }
+        }
+        Ok(())
+    }
+
+    fn dataflows(&self) -> Vec<Dataflow> {
+        let mut d: Vec<Dataflow> =
+            self.families.iter().map(|&f| Dataflow::Family(f)).collect();
+        if self.include_mapper {
+            d.push(Dataflow::MapperOptimal);
+        }
+        d
+    }
+}
+
+/// One scored point of the space: the candidate plus its best dataflow's
+/// evaluation headline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoredPoint {
+    pub coords: Coords,
+    pub arch: Architecture,
+    /// The winning dataflow's label.
+    pub dataflow: String,
+    /// Overall training energy under the winning dataflow (objective 1).
+    pub energy_j: f64,
+    /// Total bounded on-chip capacity — the area proxy (objective 2).
+    pub onchip_bytes: u64,
+    pub cycles: u64,
+}
+
+/// Outcome of a search run (possibly partial, see `complete`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchSearchResult {
+    /// Space name.
+    pub space: String,
+    /// Resolved strategy label.
+    pub strategy: String,
+    pub total_points: u128,
+    /// Candidates scored (annealing counts repeated visits).
+    pub evaluated: usize,
+    /// Points skipped as infeasible.
+    pub infeasible: usize,
+    /// `EvalRequest`s issued (evaluated × dataflows).
+    pub evaluations: usize,
+    /// False when `limit` stopped the run early (resume via checkpoint).
+    pub complete: bool,
+    /// Minimum-energy point seen.
+    pub best: Option<ScoredPoint>,
+    /// Pareto frontier over (energy, on-chip bytes), energy-ascending.
+    pub frontier: Vec<ScoredPoint>,
+}
+
+/// `a` dominates `b` on (energy, on-chip bytes) — no objective worse.
+/// Exact ties count as dominated, so the first-seen point of a duplicate
+/// wins deterministically.
+fn dominates(a: &ScoredPoint, b: &ScoredPoint) -> bool {
+    a.energy_j.total_cmp(&b.energy_j) != Ordering::Greater
+        && a.onchip_bytes.cmp(&b.onchip_bytes) != Ordering::Greater
+}
+
+// ---------------------------------------------------------------------------
+// Cursor / checkpoint state
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct AnnealState {
+    restart: usize,
+    /// Proposals made in the current restart.
+    iter: usize,
+    /// Current point and its score (`None` = restart needs a start).
+    cur: Option<(Coords, f64)>,
+    temp: f64,
+    rng: SplitMix64,
+}
+
+#[derive(Clone)]
+enum Cursor {
+    Exhaustive { next_flat: u64 },
+    Annealing(AnnealState),
+}
+
+struct Restored {
+    done: bool,
+    evaluated: usize,
+    infeasible: usize,
+    evaluations: usize,
+    best: Option<ScoredPoint>,
+    frontier: Vec<ScoredPoint>,
+    cursor: Cursor,
+}
+
+// ---------------------------------------------------------------------------
+// The run
+// ---------------------------------------------------------------------------
+
+struct Run<'a> {
+    session: &'a Session,
+    model: &'a SnnModel,
+    sparsity: &'a SparsityProfile,
+    space: &'a ArchSpace,
+    cfg: &'a ArchSearchConfig,
+    dataflows: Vec<Dataflow>,
+    fingerprint: String,
+    strategy: String,
+    evaluated: usize,
+    infeasible: usize,
+    evaluations: usize,
+    best: Option<ScoredPoint>,
+    frontier: Vec<ScoredPoint>,
+    scored_this_call: usize,
+    last_checkpoint: usize,
+}
+
+impl<'a> Run<'a> {
+    fn limit_reached(&self) -> bool {
+        self.cfg.limit.is_some_and(|l| self.scored_this_call >= l)
+    }
+
+    fn request(&self, arch: &Architecture, dataflow: Dataflow) -> EvalRequest {
+        let mut r = EvalRequest::new(self.model.clone(), arch.clone(), dataflow)
+            .with_sparsity(self.sparsity.clone());
+        if let Some(t) = &self.cfg.temporal {
+            r = r.with_temporal(t.clone());
+            if self.cfg.spike_encoding == SpikeEncoding::Auto
+                && dataflow != Dataflow::MapperOptimal
+            {
+                r = r.with_spike_encoding(SpikeEncoding::Auto);
+            }
+        }
+        r
+    }
+
+    /// Price a batch of candidates (one `evaluate_many` across candidates
+    /// × dataflows), score each by its best dataflow, fold into the
+    /// frontier.
+    fn score_batch(&mut self, batch: &[(Coords, Architecture)]) -> Result<Vec<ScoredPoint>> {
+        let nd = self.dataflows.len();
+        let mut reqs = Vec::with_capacity(batch.len() * nd);
+        for (_, arch) in batch {
+            for &df in &self.dataflows {
+                reqs.push(self.request(arch, df));
+            }
+        }
+        let results = self.session.evaluate_many(&reqs);
+        let mut out = Vec::with_capacity(batch.len());
+        for (i, (coords, arch)) in batch.iter().enumerate() {
+            let mut win: Option<Arc<EvalResult>> = None;
+            for res in &results[i * nd..(i + 1) * nd] {
+                let r = match res {
+                    Ok(r) => r.clone(),
+                    Err(e) => {
+                        return Err(err!(
+                            "candidate `{}`: {e}",
+                            self.space.label(*coords)
+                        ))
+                    }
+                };
+                let better = match &win {
+                    None => true,
+                    Some(w) => r.overall_j.total_cmp(&w.overall_j) == Ordering::Less,
+                };
+                if better {
+                    win = Some(r);
+                }
+            }
+            let r = win.expect("config guarantees at least one dataflow");
+            let p = ScoredPoint {
+                coords: *coords,
+                arch: arch.clone(),
+                dataflow: r.dataflow.clone(),
+                energy_j: r.overall_j,
+                onchip_bytes: arch.hier.onchip_bytes(),
+                cycles: r.cycles,
+            };
+            self.evaluated += 1;
+            self.scored_this_call += 1;
+            self.evaluations += nd;
+            self.fold(p.clone());
+            out.push(p);
+        }
+        Ok(out)
+    }
+
+    fn score_one(&mut self, coords: Coords, arch: Architecture) -> Result<ScoredPoint> {
+        let mut v = self.score_batch(&[(coords, arch)])?;
+        Ok(v.remove(0))
+    }
+
+    fn fold(&mut self, p: ScoredPoint) {
+        let improves = match &self.best {
+            None => true,
+            Some(b) => p.energy_j.total_cmp(&b.energy_j) == Ordering::Less,
+        };
+        if improves {
+            self.best = Some(p.clone());
+        }
+        if self.frontier.iter().any(|q| dominates(q, &p)) {
+            return;
+        }
+        self.frontier.retain(|q| !dominates(&p, q));
+        let pos = self
+            .frontier
+            .partition_point(|q| q.energy_j.total_cmp(&p.energy_j) == Ordering::Less);
+        self.frontier.insert(pos, p);
+    }
+
+    fn maybe_checkpoint(&mut self, cursor: &Cursor) -> Result<()> {
+        if self.cfg.checkpoint.is_none() || self.cfg.checkpoint_every == 0 {
+            return Ok(());
+        }
+        if self.evaluated - self.last_checkpoint >= self.cfg.checkpoint_every {
+            self.save_checkpoint(cursor, false)?;
+            self.last_checkpoint = self.evaluated;
+        }
+        Ok(())
+    }
+
+    fn exhaustive(&mut self, start_flat: u64) -> Result<bool> {
+        let total = self.space.num_points();
+        if total > EXHAUSTIVE_LIMIT {
+            return Err(err!(
+                "space `{}` has {total} points; the exhaustive strategy caps at \
+                 {EXHAUSTIVE_LIMIT} — use the annealing strategy",
+                self.space.name
+            ));
+        }
+        let total = total as u64;
+        let mut flat = start_flat;
+        while flat < total {
+            if self.limit_reached() {
+                self.save_checkpoint(&Cursor::Exhaustive { next_flat: flat }, false)?;
+                return Ok(false);
+            }
+            let mut batch: Vec<(Coords, Architecture)> =
+                Vec::with_capacity(self.cfg.batch);
+            while flat < total && batch.len() < self.cfg.batch {
+                let coords = self.space.coords_of(flat);
+                flat += 1;
+                match self.space.candidate(coords) {
+                    Ok(a) => batch.push((coords, a)),
+                    Err(_) => self.infeasible += 1,
+                }
+            }
+            if batch.is_empty() {
+                continue;
+            }
+            self.score_batch(&batch)?;
+            self.maybe_checkpoint(&Cursor::Exhaustive { next_flat: flat })?;
+        }
+        self.save_checkpoint(&Cursor::Exhaustive { next_flat: total }, true)?;
+        Ok(true)
+    }
+
+    fn anneal(
+        &mut self,
+        iters: usize,
+        restarts: usize,
+        t0: f64,
+        cooling: f64,
+        mut st: AnnealState,
+    ) -> Result<bool> {
+        while st.restart < restarts {
+            if self.limit_reached() {
+                self.save_checkpoint(&Cursor::Annealing(st), false)?;
+                return Ok(false);
+            }
+            let Some((cur_coords, cur_energy)) = st.cur else {
+                // Fresh restart: draw a feasible start point.
+                let mut found = None;
+                for _ in 0..MAX_START_DRAWS {
+                    let c = self.space.random_point(&mut st.rng);
+                    match self.space.candidate(c) {
+                        Ok(a) => {
+                            found = Some((c, a));
+                            break;
+                        }
+                        Err(_) => self.infeasible += 1,
+                    }
+                }
+                let Some((c, a)) = found else {
+                    return Err(err!(
+                        "space `{}`: no feasible start point in {MAX_START_DRAWS} draws \
+                         (budget too tight?)",
+                        self.space.name
+                    ));
+                };
+                let p = self.score_one(c, a)?;
+                st.cur = Some((c, p.energy_j));
+                st.temp = t0;
+                self.maybe_checkpoint(&Cursor::Annealing(st.clone()))?;
+                continue;
+            };
+            if st.iter >= iters {
+                st.restart += 1;
+                st.iter = 0;
+                st.cur = None;
+                continue;
+            }
+            st.iter += 1;
+            let prop = self.space.mutate(cur_coords, &mut st.rng);
+            match self.space.candidate(prop) {
+                Err(_) => {
+                    self.infeasible += 1;
+                    st.temp *= cooling;
+                }
+                Ok(arch) => {
+                    let p = self.score_one(prop, arch)?;
+                    let accept = if p.energy_j <= cur_energy {
+                        true
+                    } else {
+                        // Metropolis on the relative increase, so the
+                        // schedule is workload-scale free.
+                        let rel = (p.energy_j - cur_energy)
+                            / cur_energy.abs().max(f64::MIN_POSITIVE);
+                        st.rng.next_f64() < (-rel / st.temp.max(1e-12)).exp()
+                    };
+                    if accept {
+                        st.cur = Some((prop, p.energy_j));
+                    }
+                    st.temp *= cooling;
+                    self.maybe_checkpoint(&Cursor::Annealing(st.clone()))?;
+                }
+            }
+        }
+        self.save_checkpoint(&Cursor::Annealing(st), true)?;
+        Ok(true)
+    }
+
+    fn into_result(self, complete: bool) -> ArchSearchResult {
+        ArchSearchResult {
+            space: self.space.name.clone(),
+            strategy: self.strategy,
+            total_points: self.space.num_points(),
+            evaluated: self.evaluated,
+            infeasible: self.infeasible,
+            evaluations: self.evaluations,
+            complete,
+            best: self.best,
+            frontier: self.frontier,
+        }
+    }
+
+    // -- checkpoint I/O ----------------------------------------------------
+
+    fn save_checkpoint(&self, cursor: &Cursor, done: bool) -> Result<()> {
+        let Some(path) = &self.cfg.checkpoint else {
+            return Ok(());
+        };
+        let mut doc = Json::obj();
+        doc.set("schema", Json::Num(CHECKPOINT_SCHEMA as f64))
+            .set("fingerprint", Json::Str(self.fingerprint.clone()))
+            .set("done", Json::Bool(done))
+            .set("evaluated", Json::Num(self.evaluated as f64))
+            .set("infeasible", Json::Num(self.infeasible as f64))
+            .set("evaluations", Json::Num(self.evaluations as f64))
+            .set("cursor", cursor_json(cursor))
+            .set(
+                "best",
+                match &self.best {
+                    Some(p) => point_json(p),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "frontier",
+                Json::Arr(self.frontier.iter().map(point_json).collect()),
+            );
+        // Write-then-rename so a crash mid-write can never truncate the
+        // checkpoint the next run needs to resume from.
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, format!("{}\n", doc.dumps()))
+            .map_err(|e| err!("write checkpoint {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| err!("commit checkpoint {}: {e}", path.display()))
+    }
+}
+
+fn cursor_json(cursor: &Cursor) -> Json {
+    let mut j = Json::obj();
+    match cursor {
+        Cursor::Exhaustive { next_flat } => {
+            j.set("kind", Json::Str("exhaustive".into()))
+                .set("next_flat", Json::Num(*next_flat as f64));
+        }
+        Cursor::Annealing(st) => {
+            j.set("kind", Json::Str("annealing".into()))
+                .set("restart", Json::Num(st.restart as f64))
+                .set("iter", Json::Num(st.iter as f64))
+                .set(
+                    "cur",
+                    match &st.cur {
+                        Some((c, _)) => coords_json(c),
+                        None => Json::Null,
+                    },
+                )
+                .set(
+                    "cur_energy",
+                    match &st.cur {
+                        Some((_, e)) => Json::Num(*e),
+                        None => Json::Null,
+                    },
+                )
+                .set("temp", Json::Num(st.temp))
+                .set("rng", Json::Str(format!("{:x}", st.rng.state())));
+        }
+    }
+    j
+}
+
+fn coords_json(c: &Coords) -> Json {
+    Json::Arr(c.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn point_json(p: &ScoredPoint) -> Json {
+    let mut j = Json::obj();
+    j.set("coords", coords_json(&p.coords))
+        .set("arch", Json::Str(p.arch.label()))
+        .set("dataflow", Json::Str(p.dataflow.clone()))
+        .set("energy_j", Json::Num(p.energy_j))
+        .set("onchip_bytes", Json::Num(p.onchip_bytes as f64))
+        .set("cycles", Json::Num(p.cycles as f64));
+    j
+}
+
+/// Render a result as JSON (`eocas arch-search --json`). `total_points`
+/// is a string because spaces can exceed 2^53 points.
+pub fn result_json(res: &ArchSearchResult) -> Json {
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(CHECKPOINT_SCHEMA as f64))
+        .set("space", Json::Str(res.space.clone()))
+        .set("strategy", Json::Str(res.strategy.clone()))
+        .set("total_points", Json::Str(res.total_points.to_string()))
+        .set("evaluated", Json::Num(res.evaluated as f64))
+        .set("infeasible", Json::Num(res.infeasible as f64))
+        .set("evaluations", Json::Num(res.evaluations as f64))
+        .set("complete", Json::Bool(res.complete))
+        .set(
+            "best",
+            match &res.best {
+                Some(p) => point_json(p),
+                None => Json::Null,
+            },
+        )
+        .set("frontier", Json::Arr(res.frontier.iter().map(point_json).collect()));
+    doc
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint loading
+// ---------------------------------------------------------------------------
+
+fn jnum(j: &Json, k: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| err!("checkpoint: missing number `{k}`"))
+}
+
+fn jcount(j: &Json, k: &str) -> Result<usize> {
+    let v = jnum(j, k)?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(err!("checkpoint: `{k}` is not a count ({v})"));
+    }
+    Ok(v as usize)
+}
+
+fn coords_from_json(space: &ArchSpace, j: &Json) -> Result<Coords> {
+    let arr = j.as_arr().ok_or_else(|| err!("checkpoint: coords must be an array"))?;
+    if arr.len() != NUM_AXES {
+        return Err(err!("checkpoint: coords want {NUM_AXES} axes, got {}", arr.len()));
+    }
+    let sizes = space.axis_sizes();
+    let mut c = [0usize; NUM_AXES];
+    for i in 0..NUM_AXES {
+        let v = arr[i]
+            .as_f64()
+            .ok_or_else(|| err!("checkpoint: coords entries must be numbers"))?;
+        if v < 0.0 || v.fract() != 0.0 || v as usize >= sizes[i] {
+            return Err(err!("checkpoint: coordinate {v} out of range for axis {i}"));
+        }
+        c[i] = v as usize;
+    }
+    Ok(c)
+}
+
+fn point_from_json(space: &ArchSpace, j: &Json) -> Result<ScoredPoint> {
+    let coords = coords_from_json(
+        space,
+        j.get("coords").ok_or_else(|| err!("checkpoint: point missing coords"))?,
+    )?;
+    let arch = space
+        .candidate(coords)
+        .map_err(|e| err!("checkpoint: stored point is infeasible here: {e}"))?;
+    let dataflow = j
+        .get("dataflow")
+        .and_then(Json::as_str)
+        .ok_or_else(|| err!("checkpoint: point missing dataflow"))?
+        .to_string();
+    let energy_j = jnum(j, "energy_j")?;
+    let cycles = jnum(j, "cycles")? as u64;
+    let onchip_bytes = arch.hier.onchip_bytes();
+    Ok(ScoredPoint { coords, arch, dataflow, energy_j, onchip_bytes, cycles })
+}
+
+fn load_checkpoint(path: &Path, fingerprint: &str, space: &ArchSpace) -> Result<Option<Restored>> {
+    if !path.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| err!("read checkpoint {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| err!("checkpoint {}: {e}", path.display()))?;
+    let schema = jnum(&doc, "schema")? as u32;
+    if schema != CHECKPOINT_SCHEMA {
+        return Err(err!(
+            "checkpoint {}: schema {schema} (this build reads {CHECKPOINT_SCHEMA})",
+            path.display()
+        ));
+    }
+    let stored_fp = doc
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| err!("checkpoint {}: missing fingerprint", path.display()))?;
+    if stored_fp != fingerprint {
+        return Err(err!(
+            "checkpoint {} belongs to a different search (space, model, dataflows, \
+             strategy or seed changed) — rerun with --fresh to discard it",
+            path.display()
+        ));
+    }
+    let done = doc
+        .get("done")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| err!("checkpoint: missing `done`"))?;
+    let best = match doc.get("best") {
+        None | Some(Json::Null) => None,
+        Some(j) => Some(point_from_json(space, j)?),
+    };
+    let frontier = doc
+        .get("frontier")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err!("checkpoint: missing frontier"))?
+        .iter()
+        .map(|j| point_from_json(space, j))
+        .collect::<Result<Vec<ScoredPoint>>>()?;
+    let cursor_doc = doc.get("cursor").ok_or_else(|| err!("checkpoint: missing cursor"))?;
+    let kind = cursor_doc
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| err!("checkpoint: cursor missing kind"))?;
+    let cursor = match kind {
+        "exhaustive" => Cursor::Exhaustive { next_flat: jnum(cursor_doc, "next_flat")? as u64 },
+        "annealing" => {
+            let cur = match cursor_doc.get("cur") {
+                None | Some(Json::Null) => None,
+                Some(j) => {
+                    let c = coords_from_json(space, j)?;
+                    let e = jnum(cursor_doc, "cur_energy")?;
+                    Some((c, e))
+                }
+            };
+            let rng_hex = cursor_doc
+                .get("rng")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err!("checkpoint: cursor missing rng state"))?;
+            let state = u64::from_str_radix(rng_hex, 16)
+                .map_err(|e| err!("checkpoint: bad rng state `{rng_hex}`: {e}"))?;
+            Cursor::Annealing(AnnealState {
+                restart: jcount(cursor_doc, "restart")?,
+                iter: jcount(cursor_doc, "iter")?,
+                cur,
+                temp: jnum(cursor_doc, "temp")?,
+                rng: SplitMix64::from_state(state),
+            })
+        }
+        other => return Err(err!("checkpoint: unknown cursor kind `{other}`")),
+    };
+    Ok(Some(Restored {
+        done,
+        evaluated: jcount(&doc, "evaluated")?,
+        infeasible: jcount(&doc, "infeasible")?,
+        evaluations: jcount(&doc, "evaluations")?,
+        best,
+        frontier,
+        cursor,
+    }))
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprint
+// ---------------------------------------------------------------------------
+
+/// Injective-enough encoding of everything that determines a run's
+/// trajectory — including the session's energy constants, so a
+/// checkpoint priced under one `--config` can never silently mix with
+/// evaluations under another; a checkpoint only resumes when it matches.
+fn search_fingerprint(
+    session: &Session,
+    space: &ArchSpace,
+    cfg: &ArchSearchConfig,
+    strategy: &Strategy,
+    model: &SnnModel,
+    sparsity: &SparsityProfile,
+) -> String {
+    use std::fmt::Write as _;
+    let mut key = String::with_capacity(256);
+    // The derived Debug encoding covers every constant (floats print in
+    // shortest round-trip form, so this is deterministic and injective)
+    // and tracks future fields automatically.
+    let _ = write!(key, "E{:?};", session.energy_config());
+    space.fingerprint_into(&mut key);
+    let _ = write!(key, "st{};sd{:x};", strategy.label(), cfg.seed);
+    if let Strategy::Annealing { t0, cooling, .. } = *strategy {
+        let _ = write!(key, "t{:x},{:x};", t0.to_bits(), cooling.to_bits());
+    }
+    for f in &cfg.families {
+        let _ = write!(key, "f{},", *f as u64);
+    }
+    let _ = write!(key, ";M{};", u8::from(cfg.include_mapper));
+    let _ = write!(
+        key,
+        "m{}:{};i{},{},{};T{};b{};L{};",
+        model.name.len(),
+        model.name,
+        model.input.0,
+        model.input.1,
+        model.input.2,
+        model.timesteps,
+        model.batch,
+        model.layers.len()
+    );
+    for v in &sparsity.per_layer {
+        let _ = write!(key, "{:x},", v.to_bits());
+    }
+    key.push(';');
+    match &cfg.temporal {
+        Some(t) => t.fingerprint_into(&mut key),
+        None => key.push_str("t-;"),
+    }
+    key.push_str(match cfg.spike_encoding {
+        SpikeEncoding::Raw => "kR",
+        SpikeEncoding::Auto => "kA",
+    });
+    key
+}
+
+// ---------------------------------------------------------------------------
+// Entry point
+// ---------------------------------------------------------------------------
+
+/// Run an architecture search over `space` (see the module docs).
+pub fn search(
+    session: &Session,
+    model: &SnnModel,
+    sparsity: &SparsityProfile,
+    space: &ArchSpace,
+    cfg: &ArchSearchConfig,
+) -> Result<ArchSearchResult> {
+    space.validate().map_err(Error::new)?;
+    cfg.validate()?;
+    let strategy = cfg.strategy.resolve(space);
+    let fingerprint = search_fingerprint(session, space, cfg, &strategy, model, sparsity);
+    let mut run = Run {
+        session,
+        model,
+        sparsity,
+        space,
+        cfg,
+        dataflows: cfg.dataflows(),
+        fingerprint: fingerprint.clone(),
+        strategy: strategy.label(),
+        evaluated: 0,
+        infeasible: 0,
+        evaluations: 0,
+        best: None,
+        frontier: Vec::new(),
+        scored_this_call: 0,
+        last_checkpoint: 0,
+    };
+    let restored = match &cfg.checkpoint {
+        Some(path) if cfg.resume => load_checkpoint(path, &fingerprint, space)?,
+        _ => None,
+    };
+    let cursor = match restored {
+        Some(r) => {
+            run.evaluated = r.evaluated;
+            run.infeasible = r.infeasible;
+            run.evaluations = r.evaluations;
+            run.best = r.best;
+            run.frontier = r.frontier;
+            run.last_checkpoint = r.evaluated;
+            if r.done {
+                return Ok(run.into_result(true));
+            }
+            r.cursor
+        }
+        None => match strategy {
+            Strategy::Exhaustive => Cursor::Exhaustive { next_flat: 0 },
+            Strategy::Annealing { t0, .. } => Cursor::Annealing(AnnealState {
+                restart: 0,
+                iter: 0,
+                cur: None,
+                temp: t0,
+                rng: SplitMix64::new(cfg.seed),
+            }),
+            Strategy::Auto => unreachable!("resolved above"),
+        },
+    };
+    let complete = match (strategy, cursor) {
+        (Strategy::Exhaustive, Cursor::Exhaustive { next_flat }) => {
+            run.exhaustive(next_flat)?
+        }
+        (Strategy::Annealing { iters, restarts, t0, cooling }, Cursor::Annealing(st)) => {
+            run.anneal(iters, restarts, t0, cooling, st)?
+        }
+        _ => {
+            return Err(err!(
+                "checkpoint cursor does not match the `{}` strategy",
+                strategy.label()
+            ))
+        }
+    };
+    Ok(run.into_result(complete))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::space::ArchSpace;
+
+    fn setup() -> (Session, SnnModel, SparsityProfile) {
+        let session = Session::builder().threads(2).build();
+        (session, SnnModel::paper_layer(), SparsityProfile::nominal(1, 0.75))
+    }
+
+    #[test]
+    fn exhaustive_paper_space_counts_and_orders() {
+        let (session, model, sparsity) = setup();
+        let cfg = ArchSearchConfig::default();
+        let res = search(&session, &model, &sparsity, &ArchSpace::paper(), &cfg).unwrap();
+        assert!(res.complete);
+        assert_eq!(res.strategy, "exhaustive");
+        assert_eq!(res.total_points, 4);
+        assert_eq!(res.evaluated, 4);
+        assert_eq!(res.infeasible, 0);
+        assert_eq!(res.evaluations, 4 * 5);
+        let best = res.best.as_ref().unwrap();
+        assert_eq!(best.arch.array.label(), "16x16");
+        assert_eq!(best.dataflow, "Advanced WS");
+        // All four paper candidates share one hierarchy, so exactly one
+        // point survives on the (energy, capacity) frontier.
+        assert_eq!(res.frontier.len(), 1);
+        assert_eq!(res.frontier[0], *best);
+    }
+
+    #[test]
+    fn frontier_is_monotone_on_the_reference_space() {
+        let (session, model, sparsity) = setup();
+        let cfg = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            ..ArchSearchConfig::default()
+        };
+        let res =
+            search(&session, &model, &sparsity, &ArchSpace::reference(), &cfg).unwrap();
+        assert!(res.complete);
+        assert_eq!(res.evaluated, 162);
+        assert_eq!(res.infeasible, 54);
+        assert!(!res.frontier.is_empty());
+        for pair in res.frontier.windows(2) {
+            assert!(pair[1].energy_j > pair[0].energy_j);
+            assert!(pair[1].onchip_bytes < pair[0].onchip_bytes);
+        }
+        // The min-energy point sits at the head of the frontier.
+        assert_eq!(res.frontier[0].energy_j, res.best.as_ref().unwrap().energy_j);
+    }
+
+    #[test]
+    fn annealing_is_deterministic_across_thread_counts() {
+        let (_, model, sparsity) = setup();
+        let mk = |threads: usize| {
+            let session = Session::builder().threads(threads).build();
+            let cfg = ArchSearchConfig {
+                strategy: Strategy::Annealing {
+                    iters: 10,
+                    restarts: 2,
+                    t0: 0.08,
+                    cooling: 0.9,
+                },
+                families: vec![Family::AdvWs, Family::Os],
+                seed: 42,
+                ..ArchSearchConfig::default()
+            };
+            search(&session, &model, &sparsity, &ArchSpace::reference(), &cfg).unwrap()
+        };
+        let a = mk(1);
+        let b = mk(4);
+        assert_eq!(a, b);
+        assert!(a.complete);
+        assert!(a.evaluated > 0 && a.evaluated <= 2 * 11);
+        assert!(a.best.is_some());
+    }
+
+    #[test]
+    fn mapper_rides_along_and_cannot_lose() {
+        let (session, model, sparsity) = setup();
+        let cfg = ArchSearchConfig { include_mapper: true, ..ArchSearchConfig::default() };
+        let res = search(&session, &model, &sparsity, &ArchSpace::paper(), &cfg).unwrap();
+        assert_eq!(res.evaluations, 4 * 6);
+        // The winning dataflow per candidate is the mapper or ties it, so
+        // the best point's energy cannot exceed the family-only best.
+        let fam_cfg = ArchSearchConfig::default();
+        let fam =
+            search(&session, &model, &sparsity, &ArchSpace::paper(), &fam_cfg).unwrap();
+        assert!(
+            res.best.as_ref().unwrap().energy_j
+                <= fam.best.as_ref().unwrap().energy_j * 1.0001
+        );
+    }
+
+    #[test]
+    fn empty_dataflow_config_is_an_error() {
+        let (session, model, sparsity) = setup();
+        let cfg = ArchSearchConfig { families: Vec::new(), ..ArchSearchConfig::default() };
+        let e = search(&session, &model, &sparsity, &ArchSpace::paper(), &cfg).unwrap_err();
+        assert!(e.to_string().contains("dataflow"), "{e}");
+    }
+
+    #[test]
+    fn auto_encoding_without_temporal_is_an_error() {
+        let (session, model, sparsity) = setup();
+        let cfg = ArchSearchConfig {
+            spike_encoding: SpikeEncoding::Auto,
+            ..ArchSearchConfig::default()
+        };
+        let e = search(&session, &model, &sparsity, &ArchSpace::paper(), &cfg).unwrap_err();
+        assert!(e.to_string().contains("temporal"), "{e}");
+    }
+
+    #[test]
+    fn temporal_profile_flows_into_the_search() {
+        let (session, model, sparsity) = setup();
+        let cfg = ArchSearchConfig {
+            temporal: Some(TemporalSparsity::constant(1, 6, 0.02)),
+            spike_encoding: SpikeEncoding::Auto,
+            include_mapper: true,
+            ..ArchSearchConfig::default()
+        };
+        // Auto pricing applies to the family requests; the mapper request
+        // keeps raw pricing instead of erroring.
+        let res = search(&session, &model, &sparsity, &ArchSpace::paper(), &cfg).unwrap();
+        let raw_cfg = ArchSearchConfig {
+            temporal: Some(TemporalSparsity::constant(1, 6, 0.02)),
+            ..ArchSearchConfig::default()
+        };
+        let raw = search(&session, &model, &sparsity, &ArchSpace::paper(), &raw_cfg).unwrap();
+        assert!(
+            res.best.as_ref().unwrap().energy_j < raw.best.as_ref().unwrap().energy_j,
+            "event-stream pricing must save energy on a sparse trace"
+        );
+    }
+
+    #[test]
+    fn exhaustive_checkpoint_resume_is_bit_identical() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_ck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("exhaustive.json");
+        let space = ArchSpace::reference();
+        let base = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            batch: 1,
+            checkpoint_every: 1,
+            ..ArchSearchConfig::default()
+        };
+        // Uninterrupted reference run (no checkpoint file involved).
+        let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+        // Partial run: stop after 5 candidates, then resume to the end.
+        let partial_cfg = ArchSearchConfig {
+            limit: Some(5),
+            checkpoint: Some(ck.clone()),
+            ..base.clone()
+        };
+        let partial = search(&session, &model, &sparsity, &space, &partial_cfg).unwrap();
+        assert!(!partial.complete);
+        assert_eq!(partial.evaluated, 5);
+        let resume_cfg =
+            ArchSearchConfig { checkpoint: Some(ck.clone()), ..base.clone() };
+        let resumed = search(&session, &model, &sparsity, &space, &resume_cfg).unwrap();
+        assert!(resumed.complete);
+        assert_eq!(resumed, full, "resumed run must be bit-identical");
+        // A second call on the finished checkpoint returns instantly with
+        // the same result.
+        let again = search(&session, &model, &sparsity, &space, &resume_cfg).unwrap();
+        assert_eq!(again, full);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn annealing_checkpoint_resume_is_bit_identical() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_ann_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("anneal.json");
+        let space = ArchSpace::reference();
+        let base = ArchSearchConfig {
+            strategy: Strategy::Annealing { iters: 8, restarts: 2, t0: 0.08, cooling: 0.9 },
+            families: vec![Family::AdvWs],
+            seed: 7,
+            checkpoint_every: 1,
+            ..ArchSearchConfig::default()
+        };
+        let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+        let partial_cfg = ArchSearchConfig {
+            limit: Some(4),
+            checkpoint: Some(ck.clone()),
+            ..base.clone()
+        };
+        let partial = search(&session, &model, &sparsity, &space, &partial_cfg).unwrap();
+        assert!(!partial.complete);
+        let resume_cfg =
+            ArchSearchConfig { checkpoint: Some(ck.clone()), ..base.clone() };
+        let resumed = search(&session, &model, &sparsity, &space, &resume_cfg).unwrap();
+        assert!(resumed.complete);
+        assert_eq!(resumed, full, "resumed annealing must replay the same trajectory");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_checkpoint_is_refused() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_mm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("ck.json");
+        let cfg = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            checkpoint: Some(ck.clone()),
+            ..ArchSearchConfig::default()
+        };
+        search(&session, &model, &sparsity, &ArchSpace::paper(), &cfg).unwrap();
+        // Same checkpoint, different seed: refused with a clear message.
+        let other = ArchSearchConfig { seed: 999, ..cfg.clone() };
+        let e = search(&session, &model, &sparsity, &ArchSpace::paper(), &other)
+            .unwrap_err();
+        assert!(e.to_string().contains("--fresh"), "{e}");
+        // resume = false ignores (and overwrites) the stale file.
+        let fresh = ArchSearchConfig { resume: false, ..other };
+        let res = search(&session, &model, &sparsity, &ArchSpace::paper(), &fresh).unwrap();
+        assert!(res.complete);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn result_json_renders_the_frontier() {
+        let (session, model, sparsity) = setup();
+        let res = search(
+            &session,
+            &model,
+            &sparsity,
+            &ArchSpace::paper(),
+            &ArchSearchConfig::default(),
+        )
+        .unwrap();
+        let text = result_json(&res).dumps();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("space").and_then(Json::as_str), Some("paper_pool"));
+        assert_eq!(back.get("complete").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            back.get("frontier").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(res.frontier.len())
+        );
+    }
+}

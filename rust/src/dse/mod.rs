@@ -8,8 +8,11 @@
 //! perturbations) and is now a thin sweep over the unified evaluation
 //! API: it builds one [`EvalRequest`] per candidate and submits the whole
 //! batch through [`Session::evaluate_many`], which supplies the worker
-//! pool and the workload/result caches.
+//! pool and the workload/result caches. [`archsearch`] lifts the sweep
+//! from the fixed pool to *generated* candidates: a guided
+//! multi-objective search over an [`crate::arch::space::ArchSpace`].
 
+pub mod archsearch;
 pub mod mapper;
 
 use std::sync::Arc;
@@ -80,9 +83,14 @@ impl DseResult {
 
     /// Pareto front over (energy, cycles), ascending by energy. NaN
     /// energies sort last (`total_cmp`) instead of panicking.
+    /// Duplicate-energy candidates tie-break on cycles, so of an
+    /// equal-energy group only the fewest-cycles member can reach the
+    /// front (the others are dominated).
     pub fn pareto(&self) -> Vec<&Candidate> {
         let mut sorted: Vec<&Candidate> = self.candidates.iter().collect();
-        sorted.sort_by(|a, b| a.overall_j.total_cmp(&b.overall_j));
+        sorted.sort_by(|a, b| {
+            a.overall_j.total_cmp(&b.overall_j).then(a.cycles.cmp(&b.cycles))
+        });
         let mut front: Vec<&Candidate> = Vec::new();
         let mut best_cycles = u64::MAX;
         for c in sorted {
@@ -363,6 +371,88 @@ mod tests {
         assert_eq!(res.evaluations, 0);
         assert!(res.best().is_none());
         assert!(res.energy_interval().is_none());
+    }
+
+    #[test]
+    fn pareto_and_interval_of_degenerate_result_sets() {
+        // Empty result set: no front, no interval, no best.
+        let empty = DseResult { candidates: Vec::new(), evaluations: 0 };
+        assert!(empty.pareto().is_empty());
+        assert!(empty.energy_interval().is_none());
+        assert!(empty.best().is_none());
+
+        // Single candidate: it is the whole front and a zero-width
+        // interval.
+        let (session, model, sparsity) = setup();
+        let full = explore(&session, &model, &sparsity, &DseConfig::default()).unwrap();
+        let single = DseResult {
+            candidates: vec![full.candidates[0].clone()],
+            evaluations: 1,
+        };
+        let front = single.pareto();
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].overall_j, single.candidates[0].overall_j);
+        let (lo, hi) = single.energy_interval().unwrap();
+        assert_eq!(lo, hi);
+        assert_eq!(lo, single.candidates[0].overall_j);
+    }
+
+    #[test]
+    fn pareto_duplicate_energy_keeps_only_the_dominant_candidate() {
+        // Regression: the front sorted by energy alone, so of two
+        // equal-energy candidates the slower one could slip in ahead of
+        // the faster one and survive despite being dominated.
+        let (session, model, sparsity) = setup();
+        let full = explore(&session, &model, &sparsity, &DseConfig::default()).unwrap();
+        let mut slow = full.candidates[0].clone();
+        slow.overall_j = 1.0;
+        slow.cycles = 100;
+        let mut fast = full.candidates[1].clone();
+        fast.overall_j = 1.0;
+        fast.cycles = 50;
+        // The dominated (slower) duplicate listed first.
+        let res = DseResult { candidates: vec![slow, fast], evaluations: 2 };
+        let front = res.pareto();
+        assert_eq!(front.len(), 1, "equal-energy group keeps one member");
+        assert_eq!(front[0].cycles, 50);
+        // An exact tie on both objectives keeps a single entry too.
+        let mut twin = res.candidates[1].clone();
+        twin.overall_j = 1.0;
+        twin.cycles = 50;
+        let res = DseResult {
+            candidates: vec![res.candidates[0].clone(), res.candidates[1].clone(), twin],
+            evaluations: 3,
+        };
+        assert_eq!(res.pareto().len(), 1);
+        let (lo, hi) = res.energy_interval().unwrap();
+        assert_eq!((lo, hi), (1.0, 1.0));
+    }
+
+    #[test]
+    fn jitter_seeds_are_stable_and_collision_free() {
+        use std::collections::HashSet;
+        let base = DseConfig::default().seed;
+        let mut seen = HashSet::new();
+        for ai in 0..8usize {
+            for s in 0..16usize {
+                for fam in Family::ALL {
+                    let seed = jitter_seed(base, ai, s, fam);
+                    // Deterministic: the same indices always produce the
+                    // same seed.
+                    assert_eq!(seed, jitter_seed(base, ai, s, fam));
+                    assert!(
+                        seen.insert(seed),
+                        "collision at arch {ai}, sample {s}, {fam:?}"
+                    );
+                }
+            }
+        }
+        assert_eq!(seen.len(), 8 * 16 * Family::ALL.len());
+        // Different base seeds shift the whole family of streams.
+        assert_ne!(
+            jitter_seed(base, 1, 2, Family::Os),
+            jitter_seed(base ^ 1, 1, 2, Family::Os)
+        );
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //!                     per-layer temporal stats, write a run log that
 //!                     both `--sparsity` and `--temporal` consume
 //! * `dse`             explore the design space, print optimum + Pareto
+//! * `arch-search`     guided multi-objective search over a *generated*
+//!                     architecture space (`--space configs/space_*.toml`),
+//!                     with JSON checkpoint/resume
 //! * `train`           run SNN BPTT through PJRT, write the run log
 //! * `pipeline`        end-to-end: train → measured sparsity → DSE → reports
 //!
@@ -22,9 +25,10 @@ use std::process::ExitCode;
 
 use eocas::arch::{ArchPool, Architecture};
 use eocas::bail;
-use eocas::config::{archfile, EnergyConfig};
+use eocas::config::{archfile, spacefile, EnergyConfig};
 use eocas::coordinator::{self, PipelineConfig};
 use eocas::dataflow::templates::Family;
+use eocas::dse::archsearch::{self, ArchSearchConfig, Strategy};
 use eocas::dse::{self, DseConfig};
 use eocas::err;
 use eocas::model::SnnModel;
@@ -59,6 +63,17 @@ USAGE:
                   all five families PLUS the mapper optimum per arch;
                   --arch-file replaces the paper pool with the listed
                   declarative architectures — see configs/README.md)
+  eocas arch-search --space PATH.toml
+                 [--strategy auto|exhaustive|anneal] [--iters N] [--restarts N]
+                 [--dataflow all|mapper|advws|ws1|ws2|os|rs]
+                 [--model paper|cifar100|tiny] [--sparsity PATH]
+                 [--temporal PATH] [--encoding raw|auto] [--seed N]
+                 [--threads N] [--limit N] [--checkpoint PATH] [--fresh]
+                 [--config PATH] [--json]
+                 (searches the generated architecture space described by
+                  the space file — see configs/README.md; `--checkpoint`
+                  makes long runs resumable, `--limit` time-boxes one call
+                  and therefore requires `--checkpoint`)
   eocas train    [--steps N] [--lr X] [--seed N] [--log PATH]
   eocas pipeline [--steps N] [--out DIR] [--reuse] [--threads N]
 
@@ -386,6 +401,129 @@ fn run(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "arch-search" => {
+            let cfg = energy_config(&flags)?;
+            let model = pick_model(&flags)?;
+            let sparsity = pick_sparsity(&flags, &model, &cfg)?;
+            let space_path = flags.get("space").ok_or_else(|| {
+                err!("arch-search needs --space PATH (see configs/README.md)")
+            })?;
+            let space = spacefile::load_space(std::path::Path::new(space_path))
+                .map_err(|e| err!("space file: {e}"))?;
+            let mut scfg = ArchSearchConfig {
+                seed: parse_num(&flags, "seed", ArchSearchConfig::default().seed)?,
+                limit: flags
+                    .get("limit")
+                    .map(|_| parse_num(&flags, "limit", 0usize))
+                    .transpose()?,
+                checkpoint: flags.get("checkpoint").map(PathBuf::from),
+                resume: !flags.contains_key("fresh"),
+                ..Default::default()
+            };
+            if scfg.limit.is_some() && scfg.checkpoint.is_none() {
+                bail!(
+                    "--limit without --checkpoint would discard the partial progress; \
+                     add --checkpoint PATH to make the run resumable"
+                );
+            }
+            let iters = flags
+                .get("iters")
+                .map(|_| parse_num(&flags, "iters", 0usize))
+                .transpose()?;
+            let restarts = flags
+                .get("restarts")
+                .map(|_| parse_num(&flags, "restarts", 0usize))
+                .transpose()?;
+            let anneal_with = |iters: Option<usize>, restarts: Option<usize>| {
+                let Strategy::Annealing { iters: di, restarts: dr, t0, cooling } =
+                    Strategy::annealing_default()
+                else {
+                    unreachable!()
+                };
+                Strategy::Annealing {
+                    iters: iters.unwrap_or(di),
+                    restarts: restarts.unwrap_or(dr),
+                    t0,
+                    cooling,
+                }
+            };
+            match flags.get("strategy").map(|s| s.as_str()) {
+                None | Some("auto") => {
+                    // An explicit evaluation budget implies the guided
+                    // strategy — never silently ignore --iters/--restarts.
+                    if iters.is_some() || restarts.is_some() {
+                        scfg.strategy = anneal_with(iters, restarts);
+                    }
+                }
+                Some("exhaustive") => {
+                    if iters.is_some() || restarts.is_some() {
+                        bail!("--iters/--restarts apply to the annealing strategy");
+                    }
+                    scfg.strategy = Strategy::Exhaustive;
+                }
+                Some("anneal") | Some("annealing") => {
+                    scfg.strategy = anneal_with(iters, restarts);
+                }
+                Some(other) => bail!("unknown --strategy `{other}` (auto|exhaustive|anneal)"),
+            }
+            match flags.get("dataflow").map(|s| s.as_str()) {
+                None | Some("all") => {}
+                Some("mapper") => scfg.include_mapper = true,
+                Some(other) => scfg.families = vec![pick_family(other)?],
+            }
+            if let Some(p) = flags.get("temporal") {
+                if flags.contains_key("sparsity") {
+                    bail!("--sparsity and --temporal are mutually exclusive");
+                }
+                let t = TemporalSparsity::load(std::path::Path::new(p))
+                    .map_err(|e| err!("temporal: {e}"))?;
+                scfg.temporal = Some(t);
+            }
+            if let Some(enc) = flags.get("encoding") {
+                scfg.spike_encoding = SpikeEncoding::from_key(enc)
+                    .ok_or_else(|| err!("unknown --encoding `{enc}` (raw|auto)"))?;
+            }
+            let session = Session::builder()
+                .energy_config(cfg)
+                .threads(parse_num(&flags, "threads", 0usize)?)
+                .build();
+            let start = std::time::Instant::now();
+            let res = archsearch::search(&session, &model, &sparsity, &space, &scfg)?;
+            if flags.contains_key("json") {
+                println!("{}", archsearch::result_json(&res).dumps());
+                return Ok(());
+            }
+            let dt = start.elapsed();
+            println!(
+                "searched `{}` [{}]: {} of {} points priced ({} infeasible, \
+                 {} evaluations) in {:.1} ms ({:.0} candidates/s)",
+                res.space,
+                res.strategy,
+                res.evaluated,
+                res.total_points,
+                res.infeasible,
+                res.evaluations,
+                dt.as_secs_f64() * 1e3,
+                res.evaluated as f64 / dt.as_secs_f64().max(1e-9)
+            );
+            if !res.complete {
+                println!(
+                    "(stopped at --limit; rerun with the same --checkpoint to resume)"
+                );
+            }
+            let best = res
+                .best
+                .as_ref()
+                .ok_or_else(|| err!("search priced no feasible candidate"))?;
+            println!(
+                "optimum: {} + {} @ {:.3} uJ",
+                best.arch.label(),
+                best.dataflow,
+                best.energy_j * 1e6
+            );
+            print!("{}", report::table_archsearch(&res).render());
+            Ok(())
+        }
         "spike-sim" => {
             let mut model = pick_model(&flags)?;
             model.timesteps = parse_num(&flags, "timesteps", model.timesteps)?;
@@ -584,6 +722,16 @@ mod tests {
         assert_eq!(pick_dataflow("MAPPER").unwrap(), Dataflow::MapperOptimal);
         assert_eq!(pick_dataflow("advws").unwrap(), Dataflow::Family(Family::AdvWs));
         assert!(pick_dataflow("bogus").is_err());
+    }
+
+    #[test]
+    fn arch_search_flag_errors_are_clean() {
+        // Missing --space names the flag.
+        let e = run(&args(&["arch-search"])).unwrap_err();
+        assert!(e.to_string().contains("--space"), "{e}");
+        // A missing space file reports the path.
+        let e = run(&args(&["arch-search", "--space", "/no/such/space.toml"])).unwrap_err();
+        assert!(e.to_string().contains("space.toml"), "{e}");
     }
 
     #[test]

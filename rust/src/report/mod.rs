@@ -420,6 +420,42 @@ pub fn table_spike_modes(ctx: &ReportCtx, temporal: &TemporalSparsity) -> Table 
     t
 }
 
+/// Architecture-search frontier table (`eocas arch-search`): the Pareto
+/// points of a `dse::archsearch` run over (energy, on-chip capacity),
+/// energy-ascending — the trade-off curve the generative DSE exists to
+/// expose.
+pub fn table_archsearch(res: &crate::dse::archsearch::ArchSearchResult) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Architecture search `{}` [{}]: Pareto frontier ({} of {} points priced, \
+             {} infeasible)",
+            res.space, res.strategy, res.evaluated, res.total_points, res.infeasible
+        ),
+        &["rank", "array", "hierarchy", "dataflow", "overall (uJ)", "on-chip", "cycles"],
+    )
+    .aligns(&[
+        Align::Right,
+        Align::Left,
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for (i, p) in res.frontier.iter().enumerate() {
+        t.add_row(vec![
+            (i + 1).to_string(),
+            p.arch.array.label(),
+            p.arch.hier.name.clone(),
+            p.dataflow.clone(),
+            fmt_uj(p.energy_j),
+            crate::util::fmt_bytes(p.onchip_bytes),
+            p.cycles.to_string(),
+        ]);
+    }
+    t
+}
+
 /// Fig. 5: candidate architectures spread over energy intervals.
 /// Returns (table of all candidates, histogram text).
 pub fn fig5_energy_intervals(ctx: &ReportCtx, samples: usize) -> (Table, String) {
@@ -599,6 +635,27 @@ mod tests {
         let measured = spike_temporal(&ctx).unwrap();
         assert_eq!(measured.layers.len(), 1);
         assert!(table_spike_modes(&ctx, &measured).n_rows() == 5);
+    }
+
+    #[test]
+    fn archsearch_table_renders_the_frontier() {
+        use crate::arch::space::ArchSpace;
+        use crate::dse::archsearch::{search, ArchSearchConfig};
+        let ctx = ReportCtx::paper_default();
+        let res = search(
+            &ctx.session,
+            &ctx.model,
+            &ctx.sparsity,
+            &ArchSpace::paper(),
+            &ArchSearchConfig::default(),
+        )
+        .unwrap();
+        let t = table_archsearch(&res);
+        assert_eq!(t.n_rows(), res.frontier.len());
+        let txt = t.render();
+        assert!(txt.contains("paper_pool"));
+        assert!(txt.contains("16x16"));
+        assert!(txt.contains("Advanced WS"));
     }
 
     #[test]

@@ -33,6 +33,17 @@ impl SplitMix64 {
         SplitMix64::new(self.next_u64())
     }
 
+    /// The raw generator state (checkpoint/resume: a generator rebuilt
+    /// with [`SplitMix64::from_state`] continues the exact stream).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator from a state captured by [`SplitMix64::state`].
+    pub fn from_state(state: u64) -> SplitMix64 {
+        SplitMix64 { state }
+    }
+
     /// Uniform in `[0, 1)` with 53 bits of precision.
     pub fn next_f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)

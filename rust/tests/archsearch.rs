@@ -1,0 +1,155 @@
+//! Architecture-search pins.
+//!
+//! The generative DSE must be a strict superset of the fixed-pool sweep:
+//! exhaustive search over the space equivalent to the paper pool
+//! (`configs/space_paper.toml`) reproduces today's `dse::explore` winner
+//! *bit-identically*, and the guided (annealing) strategy finds the same
+//! optimum on that space. The shipped space files are pinned to their
+//! in-code constructors so docs, benches and tests all describe one
+//! space.
+
+use eocas::arch::space::ArchSpace;
+use eocas::config::spacefile;
+use eocas::dataflow::templates::Family;
+use eocas::dse::archsearch::{search, ArchSearchConfig, Strategy};
+use eocas::dse::{explore, DseConfig};
+use eocas::model::SnnModel;
+use eocas::session::Session;
+use eocas::sparsity::SparsityProfile;
+
+fn config_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs").join(name)
+}
+
+fn scenario() -> (SnnModel, SparsityProfile) {
+    (SnnModel::paper_layer(), SparsityProfile::nominal(1, 0.75))
+}
+
+#[test]
+fn shipped_space_files_match_the_builtin_spaces() {
+    let paper = spacefile::load_space(&config_path("space_paper.toml")).unwrap();
+    assert_eq!(paper, ArchSpace::paper());
+    let reference = spacefile::load_space(&config_path("space_reference.toml")).unwrap();
+    assert_eq!(reference, ArchSpace::reference());
+    assert_eq!(reference.num_points(), 216);
+}
+
+#[test]
+fn exhaustive_paper_space_reproduces_the_explore_winner_bitwise() {
+    let (model, sparsity) = scenario();
+    // The historical fixed-pool sweep...
+    let explore_session = Session::builder().threads(2).build();
+    let dse_res = explore(&explore_session, &model, &sparsity, &DseConfig::default()).unwrap();
+    let pool_best = dse_res.best().unwrap();
+    // ...versus exhaustive generative search over the equivalent space,
+    // on a *fresh* session so nothing is served from a shared cache.
+    let space = spacefile::load_space(&config_path("space_paper.toml")).unwrap();
+    let search_session = Session::builder().threads(2).build();
+    let cfg = ArchSearchConfig {
+        strategy: Strategy::Exhaustive,
+        ..ArchSearchConfig::default()
+    };
+    let res = search(&search_session, &model, &sparsity, &space, &cfg).unwrap();
+    assert!(res.complete);
+    assert_eq!(res.evaluated, 4);
+    assert_eq!(res.evaluations, dse_res.evaluations);
+    let best = res.best.as_ref().unwrap();
+    assert_eq!(best.arch, pool_best.arch, "same winning architecture");
+    assert_eq!(best.dataflow, pool_best.dataflow, "same winning dataflow");
+    assert_eq!(
+        best.energy_j.to_bits(),
+        pool_best.overall_j.to_bits(),
+        "bit-identical winning energy: {} vs {}",
+        best.energy_j,
+        pool_best.overall_j
+    );
+    assert_eq!(best.cycles, pool_best.cycles);
+}
+
+#[test]
+fn guided_search_finds_the_paper_optimum() {
+    let (model, sparsity) = scenario();
+    let session = Session::builder().threads(2).build();
+    let space = ArchSpace::paper();
+    let exhaustive = search(
+        &session,
+        &model,
+        &sparsity,
+        &space,
+        &ArchSearchConfig { strategy: Strategy::Exhaustive, ..ArchSearchConfig::default() },
+    )
+    .unwrap();
+    let guided = search(
+        &session,
+        &model,
+        &sparsity,
+        &space,
+        &ArchSearchConfig {
+            strategy: Strategy::Annealing { iters: 12, restarts: 3, t0: 0.08, cooling: 0.9 },
+            ..ArchSearchConfig::default()
+        },
+    )
+    .unwrap();
+    let eb = exhaustive.best.as_ref().unwrap();
+    let gb = guided.best.as_ref().unwrap();
+    assert_eq!(gb.arch, eb.arch);
+    assert_eq!(gb.dataflow, eb.dataflow);
+    assert_eq!(gb.energy_j.to_bits(), eb.energy_j.to_bits());
+    // All paper candidates share one hierarchy, so both frontiers are
+    // that single optimum.
+    assert_eq!(guided.frontier, exhaustive.frontier);
+}
+
+#[test]
+fn guided_search_is_competitive_on_the_reference_space() {
+    let (model, sparsity) = scenario();
+    let session = Session::builder().threads(0).build();
+    let space = ArchSpace::reference();
+    let families = vec![Family::AdvWs];
+    let exhaustive = search(
+        &session,
+        &model,
+        &sparsity,
+        &space,
+        &ArchSearchConfig {
+            strategy: Strategy::Exhaustive,
+            families: families.clone(),
+            ..ArchSearchConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(exhaustive.evaluated, 162);
+    let guided = search(
+        &session,
+        &model,
+        &sparsity,
+        &space,
+        &ArchSearchConfig {
+            strategy: Strategy::Annealing { iters: 30, restarts: 3, t0: 0.08, cooling: 0.92 },
+            families,
+            ..ArchSearchConfig::default()
+        },
+    )
+    .unwrap();
+    let eb = exhaustive.best.as_ref().unwrap().energy_j;
+    let gb = guided.best.as_ref().unwrap().energy_j;
+    assert!(
+        gb <= eb * 1.10,
+        "guided best {} uJ strays >10% from exhaustive best {} uJ",
+        gb * 1e6,
+        eb * 1e6
+    );
+    // Every guided frontier point is a real point of the space, so the
+    // true (exhaustive) frontier weakly dominates each of them.
+    for g in &guided.frontier {
+        assert!(
+            exhaustive
+                .frontier
+                .iter()
+                .any(|e| e.energy_j <= g.energy_j && e.onchip_bytes <= g.onchip_bytes),
+            "guided frontier point outside the true frontier's dominance: {} J / {} bytes",
+            g.energy_j,
+            g.onchip_bytes
+        );
+    }
+}
