@@ -1,0 +1,166 @@
+//! Bench: chip-level pricing — one model swept across core counts on a
+//! mesh NoC (`chip::evaluate_chip`).
+//!
+//! Measures, and emits as machine-readable `BENCH_chip.json`:
+//! * chip pricing throughput (layers priced/s) at 1, 4 and 16 cores,
+//!   layer-wise and channel-wise,
+//! * headline ratios for the CI regression gate:
+//!   `speedup.cores_scaling` — the sum of per-core cycle loads divided
+//!   by the parallel makespan on the 4-core mesh (how much parallel
+//!   slack layer partitioning exposes; >= 1.0 by construction, 1.0
+//!   would mean one core holds all the work) — and
+//!   `overhead.noc_fraction` — the NoC traffic's share of the 4-core
+//!   chip's total energy (< 1.0 by construction; a regression here
+//!   means inter-core spike traffic suddenly dominates).
+//!
+//! Flags: `--quick` (CI smoke mode: short timing windows),
+//! `--json PATH` (default `BENCH_chip.json`).
+
+use eocas::arch::Architecture;
+use eocas::chip::{evaluate_chip, mesh_for, ChipConfig, ChipEvaluation, NocSpec, Partitioning};
+use eocas::config::EnergyConfig;
+use eocas::dataflow::templates::Family;
+use eocas::model::SnnModel;
+use eocas::spike::SpikeEncoding;
+use eocas::util::bench::{black_box, time_it, BenchStats};
+use eocas::util::json::Json;
+use eocas::workload::{generate, LayerWorkload};
+
+struct Case {
+    key: &'static str,
+    stats: BenchStats,
+    /// Layers priced per timed iteration.
+    items_per_iter: f64,
+}
+
+impl Case {
+    fn per_s(&self) -> f64 {
+        self.items_per_iter / (self.stats.mean_ns / 1e9)
+    }
+}
+
+fn emit(
+    cases: &[Case],
+    speedups: &[(&str, f64)],
+    overheads: &[(&str, f64)],
+    info: &[(&str, f64)],
+    quick: bool,
+    path: &str,
+) {
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0)).set("quick", Json::Bool(quick));
+    let mut jcases = Json::obj();
+    for c in cases {
+        let mut j = Json::obj();
+        j.set("mean_ns", Json::Num(c.stats.mean_ns))
+            .set("p50_ns", Json::Num(c.stats.p50_ns))
+            .set("p95_ns", Json::Num(c.stats.p95_ns))
+            .set("iters", Json::Num(c.stats.iters as f64))
+            .set("layers_per_s", Json::Num(c.per_s()));
+        jcases.set(c.key, j);
+    }
+    doc.set("cases", jcases);
+    let mut js = Json::obj();
+    for (k, v) in speedups {
+        js.set(k, Json::Num(*v));
+    }
+    doc.set("speedup", js);
+    let mut jo = Json::obj();
+    for (k, v) in overheads {
+        jo.set(k, Json::Num(*v));
+    }
+    doc.set("overhead", jo);
+    for (k, v) in info {
+        doc.set(k, Json::Num(*v));
+    }
+    match std::fs::write(path, format!("{}\n", doc.dumps())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+fn chip_for(cores: u32, partitioning: Partitioning) -> ChipConfig {
+    let (mesh_rows, mesh_cols) = mesh_for(cores);
+    ChipConfig {
+        mesh_rows,
+        mesh_cols,
+        noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+        partitioning,
+    }
+}
+
+fn price(
+    wls: &[LayerWorkload],
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+    chip: &ChipConfig,
+) -> ChipEvaluation {
+    evaluate_chip(wls, Family::AdvWs, arch, cfg, chip, None, SpikeEncoding::Raw)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_chip.json".to_string());
+    let w = if quick { 0.05 } else { 1.0 };
+
+    // The CIFAR-100 SNN in both modes: the scaling headline needs a
+    // multi-layer model, and chip pricing is cheap (no search loop).
+    let model = SnnModel::cifar100_snn();
+    let wls = generate(&model, &[], 0.75).expect("cifar100 workloads");
+    let arch = Architecture::paper_default();
+    let cfg = EnergyConfig::default();
+    let n_layers = wls.len() as f64;
+
+    let mut cases: Vec<Case> = Vec::new();
+    let mut push = |key: &'static str, stats: BenchStats, items: f64| {
+        println!("{}", stats.report());
+        println!("  => {:.0} layers/s\n", items / (stats.mean_ns / 1e9));
+        cases.push(Case { key, stats, items_per_iter: items });
+    };
+
+    for (key, cores, part) in [
+        ("layerwise_1core", 1u32, Partitioning::LayerWise),
+        ("layerwise_4core", 4, Partitioning::LayerWise),
+        ("channelwise_4core", 4, Partitioning::ChannelWise),
+        ("layerwise_16core", 16, Partitioning::LayerWise),
+    ] {
+        let chip = chip_for(cores, part);
+        let label = format!("chip pricing {key} (cifar100)");
+        let s = time_it(&label, 2, w, || {
+            black_box(price(&wls, &arch, &cfg, &chip));
+        });
+        push(key, s, n_layers);
+    }
+
+    // Headline ratios for the CI gate, both from the 4-core layer-wise
+    // chip (deterministic pricing: machine-independent numbers).
+    let ev = price(&wls, &arch, &cfg, &chip_for(4, Partitioning::LayerWise));
+    let total_cycles: u64 = ev.core_cycles.iter().sum();
+    let makespan = ev.makespan_cycles().max(1);
+    let cores_scaling = total_cycles as f64 / makespan as f64;
+    let compute_j: f64 = ev.layers.iter().map(|l| l.overall_j()).sum();
+    let overall_j = compute_j + ev.noc_j;
+    let noc_fraction = if overall_j > 0.0 { ev.noc_j / overall_j } else { 0.0 };
+    println!(
+        "4-core layer-wise: {total_cycles} summed cycles / {makespan} makespan \
+         => cores_scaling {cores_scaling:.3}"
+    );
+    println!(
+        "4-core layer-wise: NoC {:.3} uJ of {:.3} uJ total => noc_fraction {noc_fraction:.5}",
+        ev.noc_j * 1e6,
+        overall_j * 1e6
+    );
+    emit(
+        &cases,
+        &[("cores_scaling", cores_scaling)],
+        &[("noc_fraction", noc_fraction)],
+        &[("makespan_cycles", makespan as f64), ("noc_uj", ev.noc_j * 1e6)],
+        quick,
+        &json_path,
+    );
+}

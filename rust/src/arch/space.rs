@@ -9,6 +9,14 @@
 //! residency mask) and line-buffer placement — bounded by a total
 //! on-chip SRAM budget (the search's area proxy).
 //!
+//! Two chip-level axes extend the space above the single hierarchy:
+//! a core count (each candidate replicated as a homogeneous NoC-tiled
+//! mesh, see [`crate::chip`]) and the partitioning scheme that splits
+//! the model across those cores. Both default to singletons (`[1]`,
+//! `[LayerWise]`), so single-core spaces are untouched;
+//! [`ArchSpace::chip_config`] derives the [`crate::chip::ChipConfig`]
+//! of a multi-core point (and `None` for single-core ones).
+//!
 //! A point of the space is a [`Coords`] tuple, one coordinate per axis;
 //! [`ArchSpace::candidate`] turns a point into a validated
 //! [`Architecture`] (or an [`Infeasible`] verdict: an over-budget
@@ -25,14 +33,16 @@ use crate::arch::{
     Architecture, ArrayScheme, HierarchySpec, LevelCapacity, LevelEnergy, LevelSpec, SramId,
     MAX_LEVELS,
 };
+use crate::chip::{mesh_for, ChipConfig, NocSpec, Partitioning};
 use crate::util::prng::SplitMix64;
 
 /// Number of independent axes of an [`ArchSpace`].
-pub const NUM_AXES: usize = 7;
+pub const NUM_AXES: usize = 9;
 
 /// One point of the space: a coordinate into each axis, in the order
 /// array, memory scale, main buffer, spike-buffer size, spike-buffer
-/// energy, spike-buffer residency, line-buffer placement.
+/// energy, spike-buffer residency, line-buffer placement, core count,
+/// partitioning.
 pub type Coords = [usize; NUM_AXES];
 
 /// Layout of the main on-chip buffer level (the level just below the
@@ -124,8 +134,19 @@ pub struct ArchSpace {
     pub spike_buf_residencies: Vec<SpikeBufResidency>,
     /// Axis 6: line-buffer placement.
     pub line_buffers: Vec<LineBufferAt>,
+    /// Axis 7: core counts — homogeneous copies of the candidate on a
+    /// 2D-mesh NoC ([`mesh_for`] picks the geometry). `[1]` keeps the
+    /// space single-core.
+    pub cores: Vec<u32>,
+    /// Axis 8: model-partitioning schemes for multi-core points. Must
+    /// sit at coordinate 0 when the point is single-core.
+    pub partitionings: Vec<Partitioning>,
+    /// NoC energy rule applied to every multi-core point (not an axis).
+    pub noc: NocSpec,
     /// Total on-chip budget in bytes (`None` = unbounded). This is the
-    /// search's area proxy: candidates above it are infeasible.
+    /// search's area proxy: candidates above it are infeasible. For a
+    /// multi-core point the whole chip — per-core capacity × cores —
+    /// counts against it.
     pub max_onchip_bytes: Option<u64>,
 }
 
@@ -151,6 +172,9 @@ impl ArchSpace {
             spike_buf_energies: vec![ArchSpace::DEFAULT_SPIKE_BUF_ENERGY],
             spike_buf_residencies: vec![SpikeBufResidency::Spikes],
             line_buffers: vec![LineBufferAt::Main],
+            cores: vec![1],
+            partitionings: vec![Partitioning::LayerWise],
+            noc: NocSpec::zero(),
             max_onchip_bytes: None,
         }
     }
@@ -172,6 +196,9 @@ impl ArchSpace {
             spike_buf_energies: vec![ArchSpace::DEFAULT_SPIKE_BUF_ENERGY],
             spike_buf_residencies: vec![SpikeBufResidency::Spikes],
             line_buffers: vec![LineBufferAt::Main, LineBufferAt::SpikeBuf],
+            cores: vec![1],
+            partitionings: vec![Partitioning::LayerWise],
+            noc: NocSpec::zero(),
             max_onchip_bytes: Some(8 * 1024 * 1024),
         }
     }
@@ -204,6 +231,18 @@ impl ArchSpace {
                 }
             }
         }
+        if self.cores.iter().any(|&c| c == 0) {
+            return Err(format!("space `{}`: a core count of 0 is degenerate", self.name));
+        }
+        if self.cores.iter().any(|&c| c > 4096) {
+            return Err(format!(
+                "space `{}`: core counts above 4096 are unsupported",
+                self.name
+            ));
+        }
+        self.noc
+            .validate()
+            .map_err(|e| format!("space `{}`: {e}", self.name))?;
         if self.spike_buf_bytes.iter().any(|&b| b > 0)
             && self.base.num_levels() + 1 > MAX_LEVELS
         {
@@ -228,6 +267,8 @@ impl ArchSpace {
             "spike_buf_energy",
             "spike_buf_residency",
             "line_buffer",
+            "cores",
+            "partitioning",
         ]
     }
 
@@ -241,6 +282,8 @@ impl ArchSpace {
             self.spike_buf_energies.len(),
             self.spike_buf_residencies.len(),
             self.line_buffers.len(),
+            self.cores.len(),
+            self.partitionings.len(),
         ]
     }
 
@@ -262,11 +305,23 @@ impl ArchSpace {
         coords
     }
 
+    /// Number of axes random draws range over: the chip axes join only
+    /// when one of them is non-trivial, so single-core spaces replay
+    /// the exact RNG stream (and therefore the exact search
+    /// trajectories) of the pre-chip 7-axis encoding.
+    fn drawn_axes(&self) -> usize {
+        if self.cores.len() <= 1 && self.partitionings.len() <= 1 {
+            NUM_AXES - 2
+        } else {
+            NUM_AXES
+        }
+    }
+
     /// A uniformly random point (not necessarily feasible).
     pub fn random_point(&self, rng: &mut SplitMix64) -> Coords {
         let sizes = self.axis_sizes();
         let mut coords = [0usize; NUM_AXES];
-        for i in 0..NUM_AXES {
+        for i in 0..self.drawn_axes() {
             coords[i] = rng.next_below(sizes[i] as u64) as usize;
         }
         coords
@@ -280,9 +335,10 @@ impl ArchSpace {
         if sizes.iter().all(|&s| s <= 1) {
             return coords;
         }
+        let drawn = self.drawn_axes() as u64;
         let mut out = coords;
         loop {
-            let axis = rng.next_below(NUM_AXES as u64) as usize;
+            let axis = rng.next_below(drawn) as usize;
             if sizes[axis] <= 1 {
                 continue;
             }
@@ -303,6 +359,15 @@ impl ArchSpace {
         let sb_energy = self.spike_buf_energies[coords[4]];
         let sb_residency = self.spike_buf_residencies[coords[5]];
         let line = self.line_buffers[coords[6]];
+        let n_cores = self.cores[coords[7]];
+
+        // A single-core point must sit at the default partitioning
+        // coordinate: there is nothing to partition, so the point has
+        // exactly one representation (mirroring the spike-buffer rule
+        // below).
+        if n_cores == 1 && coords[8] != 0 {
+            return Err(Infeasible::UnusedAxis("partitioning"));
+        }
 
         // A point without a spike buffer must sit at the default
         // coordinate of every spike-buffer dependent axis, so the
@@ -383,7 +448,7 @@ impl ArchSpace {
         }
 
         if let Some(budget) = self.max_onchip_bytes {
-            let onchip = hier.onchip_bytes();
+            let onchip = hier.onchip_bytes() * n_cores as u64;
             if onchip > budget {
                 return Err(Infeasible::OverBudget {
                     onchip_bytes: onchip,
@@ -393,6 +458,25 @@ impl ArchSpace {
         }
         hier.validate().map_err(Infeasible::Invalid)?;
         Ok(Architecture { array, hier, pe_reg_bits: self.pe_reg_bits })
+    }
+
+    /// The chip organization of a point: `None` for single-core points
+    /// (which evaluate through the plain single-hierarchy path),
+    /// `Some` for multi-core ones — a [`mesh_for`]-factored 2D mesh of
+    /// the point's core count under the space's NoC energy rule and the
+    /// point's partitioning scheme.
+    pub fn chip_config(&self, coords: Coords) -> Option<ChipConfig> {
+        let n_cores = self.cores[coords[7]];
+        if n_cores == 1 {
+            return None;
+        }
+        let (mesh_rows, mesh_cols) = mesh_for(n_cores);
+        Some(ChipConfig {
+            mesh_rows,
+            mesh_cols,
+            noc: self.noc,
+            partitioning: self.partitionings[coords[8]],
+        })
     }
 
     /// Short display label for a point ("16x16 s0.5 usram sb8192 lbsb").
@@ -418,6 +502,12 @@ impl ArchSpace {
         }
         if self.line_buffers[coords[6]] == LineBufferAt::SpikeBuf {
             s.push_str(" lbsb");
+        }
+        let cores = self.cores[coords[7]];
+        if cores > 1 {
+            let (r, c) = mesh_for(cores);
+            let _ = write!(s, " mesh{r}x{c}");
+            let _ = write!(s, " {}", self.partitionings[coords[8]].key());
         }
         s
     }
@@ -472,6 +562,18 @@ impl ArchSpace {
             });
         }
         key.push(';');
+        for c in &self.cores {
+            let _ = write!(key, "{c},");
+        }
+        key.push(';');
+        for p in &self.partitionings {
+            key.push_str(match p {
+                Partitioning::LayerWise => "l",
+                Partitioning::ChannelWise => "c",
+            });
+        }
+        key.push(';');
+        self.noc.fingerprint_into(key);
         match self.max_onchip_bytes {
             Some(b) => {
                 let _ = write!(key, "B{b};");
@@ -549,7 +651,7 @@ mod tests {
     fn spike_buffer_candidates_have_four_levels() {
         let space = ArchSpace::reference();
         // coords: arrays[0], scale 1.0, pervar, sb 8k, defaults, line at sb.
-        let coords = [0, 1, 0, 1, 0, 0, 1];
+        let coords = [0, 1, 0, 1, 0, 0, 1, 0, 0];
         let a = space.candidate(coords).unwrap();
         assert_eq!(a.hier.num_levels(), 4);
         assert_eq!(a.hier.levels[1].name, "SpikeBuf");
@@ -558,7 +660,7 @@ mod tests {
         assert!(a.hier.name.contains("sb8192"));
         assert!(a.hier.name.contains("lbsb"));
         // Line buffer at main keeps the base placement.
-        let a = space.candidate([0, 1, 0, 1, 0, 0, 0]).unwrap();
+        let a = space.candidate([0, 1, 0, 1, 0, 0, 0, 0, 0]).unwrap();
         assert!(!a.hier.levels[1].line_buffer);
         assert!(a.hier.levels[2].line_buffer);
     }
@@ -566,7 +668,7 @@ mod tests {
     #[test]
     fn unified_axis_merges_the_main_buffer() {
         let space = ArchSpace::reference();
-        let a = space.candidate([0, 1, 1, 0, 0, 0, 0]).unwrap();
+        let a = space.candidate([0, 1, 1, 0, 0, 0, 0, 0, 0]).unwrap();
         match &a.hier.levels[1].capacity {
             LevelCapacity::Shared { bytes } => {
                 assert_eq!(*bytes, HierarchySpec::paper_28nm().onchip_bytes());
@@ -579,7 +681,7 @@ mod tests {
     #[test]
     fn identity_coords_keep_the_base_name() {
         let space = ArchSpace::reference();
-        let a = space.candidate([0, 1, 0, 0, 0, 0, 0]).unwrap();
+        let a = space.candidate([0, 1, 0, 0, 0, 0, 0, 0, 0]).unwrap();
         assert_eq!(a.hier.name, "paper_28nm");
         assert_eq!(a.hier, HierarchySpec::paper_28nm());
     }
@@ -668,9 +770,133 @@ mod tests {
     #[test]
     fn labels_name_the_active_axes() {
         let space = ArchSpace::reference();
-        assert_eq!(space.label([0, 1, 0, 0, 0, 0, 0]), "1x256");
-        let l = space.label([0, 0, 1, 1, 0, 0, 1]);
+        assert_eq!(space.label([0, 1, 0, 0, 0, 0, 0, 0, 0]), "1x256");
+        let l = space.label([0, 0, 1, 1, 0, 0, 1, 0, 0]);
         assert!(l.contains("s0.5") && l.contains("usram"));
         assert!(l.contains("sb8192") && l.contains("lbsb"));
+    }
+
+    fn multicore_space() -> ArchSpace {
+        ArchSpace {
+            cores: vec![1, 4],
+            partitionings: vec![Partitioning::LayerWise, Partitioning::ChannelWise],
+            noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+            ..ArchSpace::paper()
+        }
+    }
+
+    #[test]
+    fn chip_axes_expand_the_space_and_derive_chip_configs() {
+        let space = multicore_space();
+        space.validate().unwrap();
+        assert_eq!(space.num_points(), 16);
+
+        // Single-core points carry no chip config and must sit at the
+        // default partitioning coordinate.
+        assert_eq!(space.chip_config([0, 0, 0, 0, 0, 0, 0, 0, 0]), None);
+        assert!(space.candidate([0, 0, 0, 0, 0, 0, 0, 0, 0]).is_ok());
+        match space.candidate([0, 0, 0, 0, 0, 0, 0, 0, 1]) {
+            Err(Infeasible::UnusedAxis("partitioning")) => {}
+            other => panic!("expected UnusedAxis(partitioning), got {other:?}"),
+        }
+
+        // Multi-core points factor the count into a near-square mesh
+        // and keep the space's NoC rule.
+        let chip = space.chip_config([0, 0, 0, 0, 0, 0, 0, 1, 1]).unwrap();
+        assert_eq!((chip.mesh_rows, chip.mesh_cols), (2, 2));
+        assert_eq!(chip.partitioning, Partitioning::ChannelWise);
+        assert_eq!(chip.noc, space.noc);
+        chip.validate().unwrap();
+        let l = space.label([0, 0, 0, 0, 0, 0, 0, 1, 1]);
+        assert!(l.contains("mesh2x2") && l.contains("channel"), "{l}");
+    }
+
+    #[test]
+    fn budget_counts_the_whole_chip() {
+        // The paper core fits an 8 MB budget alone but not four times.
+        let mut space = multicore_space();
+        space.max_onchip_bytes = Some(8 * 1024 * 1024);
+        assert!(space.candidate([0, 0, 0, 0, 0, 0, 0, 0, 0]).is_ok());
+        match space.candidate([0, 0, 0, 0, 0, 0, 0, 1, 0]) {
+            Err(Infeasible::OverBudget { onchip_bytes, .. }) => {
+                let one = HierarchySpec::paper_28nm().onchip_bytes();
+                assert_eq!(onchip_bytes, 4 * one);
+            }
+            other => panic!("expected OverBudget, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn singleton_chip_axes_preserve_the_rng_stream() {
+        // A space with trivial chip axes must replay the exact random
+        // trajectories of the 7-axis encoding: the chip axes join the
+        // draw only when one of them is non-trivial.
+        let space = ArchSpace::reference();
+        let mut rng = SplitMix64::new(42);
+        let p = space.random_point(&mut rng);
+        assert_eq!(p[7], 0);
+        assert_eq!(p[8], 0);
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        let mut manual = [0usize; NUM_AXES];
+        let sizes = space.axis_sizes();
+        for i in 0..7 {
+            manual[i] = b.next_below(sizes[i] as u64) as usize;
+        }
+        assert_eq!(space.random_point(&mut a), manual);
+        assert_eq!(a.next_below(1000), b.next_below(1000), "streams stay in step");
+
+        // With a live chip axis, mutate reaches the new coordinates.
+        let space = multicore_space();
+        let mut rng = SplitMix64::new(3);
+        let start = [0usize; NUM_AXES];
+        let mut touched = [false; NUM_AXES];
+        for _ in 0..200 {
+            let m = space.mutate(start, &mut rng);
+            for i in 0..NUM_AXES {
+                if m[i] != start[i] {
+                    touched[i] = true;
+                }
+            }
+        }
+        assert!(touched[7], "cores axis never mutated");
+        assert!(touched[8], "partitioning axis never mutated");
+    }
+
+    #[test]
+    fn validation_rejects_bad_chip_axes() {
+        let mut s = multicore_space();
+        s.cores = vec![0, 2];
+        assert!(s.validate().unwrap_err().contains("core count"));
+        let mut s = multicore_space();
+        s.cores = vec![8192];
+        assert!(s.validate().unwrap_err().contains("4096"));
+        let mut s = multicore_space();
+        s.noc = NocSpec { hop_pj_per_bit: -0.1, router_pj_per_bit: 0.0 };
+        assert!(s.validate().is_err());
+        let mut s = multicore_space();
+        s.partitionings.clear();
+        assert!(s.validate().unwrap_err().contains("partitioning"));
+    }
+
+    #[test]
+    fn fingerprints_distinguish_chip_axes() {
+        let mut keys = Vec::new();
+        let mut cored = ArchSpace::paper();
+        cored.cores = vec![1, 4];
+        let mut parted = cored.clone();
+        parted.partitionings = vec![Partitioning::LayerWise, Partitioning::ChannelWise];
+        let mut priced = cored.clone();
+        priced.noc = NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 };
+        for s in [ArchSpace::paper(), cored, parted, priced] {
+            let mut k = String::new();
+            s.fingerprint_into(&mut k);
+            keys.push(k);
+        }
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j], "{i} vs {j}");
+            }
+        }
     }
 }

@@ -1,0 +1,443 @@
+//! Chip-level modeling: N homogeneous cores on a 2D mesh NoC.
+//!
+//! One level above [`crate::arch`]: a chip is `mesh_rows × mesh_cols`
+//! copies of one core (an [`Architecture`], i.e. a PE array plus a
+//! declarative memory hierarchy) connected by a mesh NoC with per-hop
+//! and per-router energy rules ([`noc::NocSpec`]). The model's compute
+//! layers are split across the cores by a [`partition::Partitioning`]
+//! scheme; each core's sub-workload is priced through the existing
+//! allocation-free kernel, and the spike maps that cross core boundaries
+//! are priced as encoded packets (raw/RLE/AER, shared cost functions
+//! with the intra-core boundary model) over Manhattan hop distances.
+//!
+//! A 1-core chip with a zero-cost NoC is the degenerate case pinned
+//! bit-identical to the single-hierarchy evaluation path: the per-layer
+//! kernel calls are literally the same calls, and the NoC contributes an
+//! exact `0.0` J.
+
+pub mod noc;
+pub mod partition;
+
+pub use noc::NocSpec;
+pub use partition::Partitioning;
+
+use crate::arch::Architecture;
+use crate::config::EnergyConfig;
+use crate::dataflow::templates::Family;
+use crate::energy::{layer_energy_for_family_temporal, ConvEnergy, LayerEnergy};
+use crate::spike::temporal::TemporalSparsity;
+use crate::spike::traffic::{Encoding, SpikeEncoding, TrafficModel};
+use crate::workload::LayerWorkload;
+
+/// A chip organization: mesh geometry, NoC energy rules and the layer
+/// partitioning scheme. The core architecture itself travels separately
+/// (on the request / in the [`ChipSpec`]) — every core is a copy of it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipConfig {
+    pub mesh_rows: u32,
+    pub mesh_cols: u32,
+    pub noc: NocSpec,
+    pub partitioning: Partitioning,
+}
+
+impl ChipConfig {
+    /// The degenerate 1×1 chip with a free NoC.
+    pub fn single() -> ChipConfig {
+        ChipConfig {
+            mesh_rows: 1,
+            mesh_cols: 1,
+            noc: NocSpec::zero(),
+            partitioning: Partitioning::LayerWise,
+        }
+    }
+
+    pub fn cores(&self) -> u32 {
+        self.mesh_rows * self.mesh_cols
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mesh_rows == 0 || self.mesh_cols == 0 {
+            return Err(format!(
+                "degenerate mesh {}x{} (rows and cols must be >= 1)",
+                self.mesh_rows, self.mesh_cols
+            ));
+        }
+        if self.cores() > 4096 {
+            return Err(format!("mesh {}x{} exceeds 4096 cores", self.mesh_rows, self.mesh_cols));
+        }
+        self.noc.validate()
+    }
+
+    /// Injective fingerprint segment for session cache keys.
+    pub fn fingerprint_into(&self, key: &mut String) {
+        key.push_str(&format!("c{}x{};", self.mesh_rows, self.mesh_cols));
+        self.noc.fingerprint_into(key);
+        key.push('p');
+        key.push_str(self.partitioning.key());
+        key.push(';');
+    }
+
+    /// Short human label, e.g. `2x2 mesh, channel-wise`.
+    pub fn label(&self) -> String {
+        format!("{}x{} mesh, {}", self.mesh_rows, self.mesh_cols, self.partitioning.name())
+    }
+}
+
+/// A full chip description as loaded from `configs/chip_*.toml`: the
+/// organization plus the homogeneous core architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipSpec {
+    pub name: String,
+    pub chip: ChipConfig,
+    pub core: Architecture,
+}
+
+/// Near-square mesh for `cores` cores: the largest divisor pair
+/// `(rows, cols)` with `rows <= cols` (e.g. 4 → 2×2, 6 → 2×3, 7 → 1×7).
+pub fn mesh_for(cores: u32) -> (u32, u32) {
+    let n = cores.max(1);
+    let mut rows = 1;
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            rows = d;
+        }
+        d += 1;
+    }
+    (rows, n / rows)
+}
+
+/// The result of pricing one model on one chip.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipEvaluation {
+    /// Per compute layer, the chip-wide energy (channel-wise slices of a
+    /// layer are merged: energies sum, cycles take the parallel max).
+    pub layers: Vec<LayerEnergy>,
+    /// Inter-core NoC transfer energy (J). Exactly `0.0` when no spike
+    /// map crosses a core boundary (1 core, or a zero-cost NoC moves
+    /// bits for free).
+    pub noc_j: f64,
+    /// Convolution cycles charged to each core (index = core id) — the
+    /// per-core load whose max is the chip's makespan.
+    pub core_cycles: Vec<u64>,
+}
+
+impl ChipEvaluation {
+    /// Makespan: the busiest core's cycle count.
+    pub fn makespan_cycles(&self) -> u64 {
+        self.core_cycles.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// 1-bit input spike-map footprint of a layer (the raster that crosses
+/// core boundaries when the producing layer lives elsewhere).
+fn input_raster_bits(wl: &LayerWorkload) -> f64 {
+    wl.fp.footprints_bits().0 as f64
+}
+
+/// Payload bits for moving `raster_bits` of layer `producer`'s spike map
+/// between cores, under the request's encoding semantics: with a
+/// temporal profile and `Auto` encoding the cheapest of raw/RLE/AER
+/// (the same chooser as intra-core boundaries); otherwise a raw bitmap.
+fn packet_bits(
+    temporal: Option<&TemporalSparsity>,
+    encoding: SpikeEncoding,
+    producer: usize,
+    raster_bits: f64,
+) -> f64 {
+    match (temporal.and_then(|t| t.layer_for(producer)), encoding) {
+        (Some(lt), SpikeEncoding::Auto) => {
+            let tm = TrafficModel::from_layer(lt);
+            let (enc, _) = tm.best();
+            noc::payload_bits(&tm, enc, raster_bits)
+        }
+        _ => {
+            // Raw bitmaps move every raster bit, like the scalar model.
+            let tm = TrafficModel { rate: 1.0, run_density: 1.0, addr_bits: 1 };
+            noc::payload_bits(&tm, Encoding::Raw, raster_bits)
+        }
+    }
+}
+
+/// Price `wls` on a chip: per-core sub-workloads through the existing
+/// kernel, plus hop-priced inter-core spike traffic.
+///
+/// The kernel calls are per layer exactly the calls the single-core
+/// session path makes, so a 1-core chip reproduces it bit-identically
+/// (and `noc_j` is then an exact `0.0`).
+pub fn evaluate_chip(
+    wls: &[LayerWorkload],
+    family: Family,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+    chip: &ChipConfig,
+    temporal: Option<&TemporalSparsity>,
+    encoding: SpikeEncoding,
+) -> ChipEvaluation {
+    let cores = chip.cores();
+    let layer_energy = |wl: &LayerWorkload, i: usize| {
+        layer_energy_for_family_temporal(
+            wl,
+            family,
+            arch,
+            cfg,
+            temporal.and_then(|t| t.layer_for(i)),
+            encoding,
+        )
+    };
+    let mut core_cycles = vec![0u64; cores as usize];
+    let mut noc_j = 0.0f64;
+    let mut layers = Vec::with_capacity(wls.len());
+    match chip.partitioning {
+        Partitioning::LayerWise => {
+            let owner = partition::layer_owners(wls.len(), cores);
+            for (i, wl) in wls.iter().enumerate() {
+                let le = layer_energy(wl, i);
+                core_cycles[owner[i] as usize] += le.cycles();
+                layers.push(le);
+            }
+            // Spike maps crossing an ownership boundary ride the NoC.
+            for i in 1..wls.len() {
+                let (src, dst) = (owner[i - 1], owner[i]);
+                if src == dst {
+                    continue;
+                }
+                let bits = packet_bits(temporal, encoding, i - 1, input_raster_bits(&wls[i]));
+                let hops = noc::manhattan_hops(src, dst, chip.mesh_cols);
+                noc_j += chip.noc.transfer_j(bits, hops);
+            }
+        }
+        Partitioning::ChannelWise => {
+            let mut prev_chunks: Vec<u64> = Vec::new();
+            for (i, wl) in wls.iter().enumerate() {
+                let m = wl.out_channels();
+                let chunks = partition::channel_chunks(m, cores);
+                // Evaluate each distinct slice width once.
+                let mut cache: Vec<(u64, LayerEnergy)> = Vec::new();
+                let mut merged: Option<LayerEnergy> = None;
+                for (core, &chunk) in chunks.iter().enumerate() {
+                    if chunk == 0 {
+                        continue;
+                    }
+                    let le = match cache.iter().find(|(c, _)| *c == chunk) {
+                        Some((_, le)) => le.clone(),
+                        None => {
+                            let le = if chunk == m {
+                                layer_energy(wl, i)
+                            } else {
+                                layer_energy(&wl.with_out_channels(chunk), i)
+                            };
+                            cache.push((chunk, le.clone()));
+                            le
+                        }
+                    };
+                    core_cycles[core] += le.cycles();
+                    match merged.as_mut() {
+                        None => merged = Some(le),
+                        Some(acc) => merge_layer(acc, &le),
+                    }
+                }
+                // Gather the input map slices held by the other cores.
+                if i > 0 {
+                    let raster = input_raster_bits(wl);
+                    let m_prev: u64 = prev_chunks.iter().sum();
+                    for (dst, &chunk) in chunks.iter().enumerate() {
+                        if chunk == 0 {
+                            continue;
+                        }
+                        for (src, &held) in prev_chunks.iter().enumerate() {
+                            if src == dst || held == 0 {
+                                continue;
+                            }
+                            let frac = held as f64 / m_prev as f64;
+                            let bits =
+                                packet_bits(temporal, encoding, i - 1, raster * frac);
+                            let hops =
+                                noc::manhattan_hops(src as u32, dst as u32, chip.mesh_cols);
+                            noc_j += chip.noc.transfer_j(bits, hops);
+                        }
+                    }
+                }
+                prev_chunks = chunks;
+                layers.push(merged.expect("layer has at least one channel slice"));
+            }
+        }
+    }
+    ChipEvaluation { layers, noc_j, core_cycles }
+}
+
+/// Fold slice `b` of a layer into `a`: energies add; cycles take the max
+/// (slices run in parallel on distinct cores), as does utilization.
+fn merge_conv(a: &mut ConvEnergy, b: &ConvEnergy) {
+    a.compute_j += b.compute_j;
+    a.cycles = a.cycles.max(b.cycles);
+    a.utilization = a.utilization.max(b.utilization);
+    for (oa, ob) in a.operands.iter_mut().zip(&b.operands) {
+        for l in 0..oa.level_j.len() {
+            oa.level_j[l] += ob.level_j[l];
+        }
+    }
+}
+
+fn merge_layer(a: &mut LayerEnergy, b: &LayerEnergy) {
+    merge_conv(&mut a.fp, &b.fp);
+    merge_conv(&mut a.bp, &b.bp);
+    merge_conv(&mut a.wg, &b.wg);
+    a.units.soma_compute_j += b.units.soma_compute_j;
+    a.units.soma_mem_j += b.units.soma_mem_j;
+    a.units.grad_compute_j += b.units.grad_compute_j;
+    a.units.grad_mem_j += b.units.grad_mem_j;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::model_energy_for_family;
+    use crate::model::SnnModel;
+    use crate::workload::generate;
+
+    fn setup() -> (Vec<LayerWorkload>, Architecture, EnergyConfig) {
+        let wls = generate(&SnnModel::cifar100_snn(), &[], 0.75).unwrap();
+        (wls, Architecture::paper_default(), EnergyConfig::default())
+    }
+
+    #[test]
+    fn mesh_for_prefers_near_square() {
+        assert_eq!(mesh_for(1), (1, 1));
+        assert_eq!(mesh_for(2), (1, 2));
+        assert_eq!(mesh_for(4), (2, 2));
+        assert_eq!(mesh_for(6), (2, 3));
+        assert_eq!(mesh_for(7), (1, 7));
+        assert_eq!(mesh_for(16), (4, 4));
+        assert_eq!(mesh_for(0), (1, 1));
+    }
+
+    #[test]
+    fn chip_config_validates() {
+        assert!(ChipConfig::single().validate().is_ok());
+        let bad = ChipConfig { mesh_rows: 0, ..ChipConfig::single() };
+        assert!(bad.validate().unwrap_err().contains("degenerate"));
+        let bad = ChipConfig {
+            noc: NocSpec { hop_pj_per_bit: -1.0, router_pj_per_bit: 0.0 },
+            ..ChipConfig::single()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprints_are_injective_over_the_fields() {
+        let a = ChipConfig::single();
+        let mut b = a.clone();
+        b.mesh_cols = 2;
+        let mut c = a.clone();
+        c.partitioning = Partitioning::ChannelWise;
+        let mut d = a.clone();
+        d.noc.hop_pj_per_bit = 0.05;
+        let fp = |cfg: &ChipConfig| {
+            let mut k = String::new();
+            cfg.fingerprint_into(&mut k);
+            k
+        };
+        let keys = [fp(&a), fp(&b), fp(&c), fp(&d)];
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j]);
+            }
+        }
+    }
+
+    /// The module-level oracle: a 1-core chip with a zero NoC matches
+    /// the plain single-hierarchy kernel bit-for-bit, both schemes.
+    #[test]
+    fn one_core_chip_is_bit_identical_to_the_plain_kernel() {
+        let (wls, arch, cfg) = setup();
+        for fam in Family::ALL {
+            let plain = model_energy_for_family(&wls, fam, &arch, &cfg);
+            for p in Partitioning::ALL {
+                let chip = ChipConfig { partitioning: p, ..ChipConfig::single() };
+                let ev = evaluate_chip(
+                    &wls,
+                    fam,
+                    &arch,
+                    &cfg,
+                    &chip,
+                    None,
+                    SpikeEncoding::Raw,
+                );
+                assert_eq!(ev.noc_j, 0.0);
+                assert_eq!(ev.layers, plain, "{} {:?}", fam.name(), p);
+                assert_eq!(
+                    ev.core_cycles,
+                    vec![plain.iter().map(|l| l.cycles()).sum::<u64>()]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_core_splits_work_and_prices_traffic() {
+        let (wls, arch, cfg) = setup();
+        let chip = ChipConfig {
+            mesh_rows: 2,
+            mesh_cols: 2,
+            noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+            partitioning: Partitioning::LayerWise,
+        };
+        let ev = evaluate_chip(&wls, Family::AdvWs, &arch, &cfg, &chip, None, SpikeEncoding::Raw);
+        assert!(ev.noc_j > 0.0, "layer boundaries between cores must be priced");
+        assert_eq!(ev.core_cycles.len(), 4);
+        assert!(ev.core_cycles.iter().all(|&c| c > 0), "{:?}", ev.core_cycles);
+        // The parallel makespan beats the sequential sum.
+        let total: u64 = ev.core_cycles.iter().sum();
+        assert!(ev.makespan_cycles() < total);
+
+        let chw = ChipConfig { partitioning: Partitioning::ChannelWise, ..chip.clone() };
+        let ev2 = evaluate_chip(&wls, Family::AdvWs, &arch, &cfg, &chw, None, SpikeEncoding::Raw);
+        assert!(ev2.noc_j > 0.0, "channel-wise gathers must be priced");
+        // Channel-wise moves (cores-1)/cores of every map both ways, so
+        // it carries more NoC traffic than one boundary crossing.
+        assert!(ev2.noc_j > ev.noc_j);
+        // Energy conservation sanity: compute energy is preserved by the
+        // merge up to slicing effects on the grids (exact for compute:
+        // op counts are linear in M).
+        let e1: f64 = ev.layers.iter().map(|l| l.overall_j()).sum();
+        let e2: f64 = ev2.layers.iter().map(|l| l.overall_j()).sum();
+        assert!(e2 > 0.0 && e1 > 0.0);
+    }
+
+    #[test]
+    fn temporal_auto_compresses_noc_traffic() {
+        let (wls, arch, cfg) = setup();
+        let temporal = TemporalSparsity::constant(wls.len(), 6, 0.02);
+        let chip = ChipConfig {
+            mesh_rows: 2,
+            mesh_cols: 2,
+            noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+            partitioning: Partitioning::LayerWise,
+        };
+        let raw = evaluate_chip(
+            &wls,
+            Family::AdvWs,
+            &arch,
+            &cfg,
+            &chip,
+            Some(&temporal),
+            SpikeEncoding::Raw,
+        );
+        let auto = evaluate_chip(
+            &wls,
+            Family::AdvWs,
+            &arch,
+            &cfg,
+            &chip,
+            Some(&temporal),
+            SpikeEncoding::Auto,
+        );
+        assert!(
+            auto.noc_j < raw.noc_j,
+            "AER/RLE packets at 2% rate must beat raw bitmaps: {} vs {}",
+            auto.noc_j,
+            raw.noc_j
+        );
+    }
+}

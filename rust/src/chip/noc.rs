@@ -1,0 +1,170 @@
+//! NoC energy rules: hop-priced AER/RLE/raw spike transfers on a 2D mesh.
+//!
+//! Inter-core spike maps travel the mesh as encoded packets. The payload
+//! bits of a transfer are priced through the *same* [`TrafficModel`] cost
+//! accessor the intra-core boundary pricing uses, so a zero-hop transfer
+//! is bit-identical to an on-chip boundary crossing by construction; the
+//! NoC adds a distance term on top: every traversed link charges
+//! `hop_pj_per_bit` and every router on the path (hops + 1 of them,
+//! counting the injection router) charges `router_pj_per_bit`.
+
+use crate::spike::traffic::{Encoding, TrafficModel};
+
+/// Per-bit energy constants of the chip's 2D mesh NoC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NocSpec {
+    /// pJ per payload bit per traversed mesh link.
+    pub hop_pj_per_bit: f64,
+    /// pJ per payload bit per traversed router (hops + 1 per transfer).
+    pub router_pj_per_bit: f64,
+}
+
+impl NocSpec {
+    /// A free NoC — the degenerate spec under which a 1-core chip is
+    /// pinned bit-identical to the single-hierarchy path.
+    pub fn zero() -> NocSpec {
+        NocSpec { hop_pj_per_bit: 0.0, router_pj_per_bit: 0.0 }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.hop_pj_per_bit == 0.0 && self.router_pj_per_bit == 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("hop_pj_per_bit", self.hop_pj_per_bit),
+            ("router_pj_per_bit", self.router_pj_per_bit),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("noc {name} must be finite and >= 0, got {v}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Energy (J) of moving `payload_bits` over `hops` mesh links.
+    pub fn transfer_j(&self, payload_bits: f64, hops: u32) -> f64 {
+        payload_bits
+            * (hops as f64 * self.hop_pj_per_bit
+                + (hops as f64 + 1.0) * self.router_pj_per_bit)
+            * 1e-12
+    }
+
+    /// Injective fingerprint segment for cache keys.
+    pub fn fingerprint_into(&self, key: &mut String) {
+        key.push_str(&format!(
+            "h{:x};r{:x};",
+            self.hop_pj_per_bit.to_bits(),
+            self.router_pj_per_bit.to_bits()
+        ));
+    }
+}
+
+/// Manhattan hop distance between cores `a` and `b` on a mesh with
+/// `cols` columns (core `i` sits at row `i / cols`, column `i % cols`).
+pub fn manhattan_hops(a: u32, b: u32, cols: u32) -> u32 {
+    debug_assert!(cols > 0);
+    let (ar, ac) = (a / cols, a % cols);
+    let (br, bc) = (b / cols, b % cols);
+    ar.abs_diff(br) + ac.abs_diff(bc)
+}
+
+/// Payload bits of a spike-map transfer of `raster_bits` map bits under
+/// `enc` — `raster_bits ×` the boundary cost of the encoding, computed
+/// through [`TrafficModel::cost`] (shared with intra-core pricing).
+pub fn payload_bits(tm: &TrafficModel, enc: Encoding, raster_bits: f64) -> f64 {
+    raster_bits * tm.cost(enc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spike::temporal::LayerTemporal;
+
+    fn tm(rate: f64, run_density: f64, neurons: u64) -> TrafficModel {
+        TrafficModel::from_layer(&LayerTemporal {
+            layer: 0,
+            neurons,
+            rate_per_step: vec![rate; 4],
+            events_per_step: vec![(rate * neurons as f64) as u64; 4],
+            mean_spike_run: 1.0,
+            run_density,
+            burst_fraction: 0.0,
+        })
+    }
+
+    #[test]
+    fn manhattan_on_a_2x2_mesh() {
+        // Mesh:  0 1
+        //        2 3
+        assert_eq!(manhattan_hops(0, 0, 2), 0);
+        assert_eq!(manhattan_hops(0, 1, 2), 1);
+        assert_eq!(manhattan_hops(0, 2, 2), 1);
+        assert_eq!(manhattan_hops(0, 3, 2), 2);
+        assert_eq!(manhattan_hops(3, 0, 2), 2);
+        // 1xN degenerates to a line.
+        assert_eq!(manhattan_hops(0, 3, 4), 3);
+    }
+
+    #[test]
+    fn zero_noc_prices_nothing() {
+        let noc = NocSpec::zero();
+        assert!(noc.is_zero());
+        assert_eq!(noc.transfer_j(1e9, 7), 0.0);
+    }
+
+    #[test]
+    fn transfer_scales_with_hops_and_bits() {
+        let noc = NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 };
+        // 0 hops still pays one (injection) router.
+        assert!((noc.transfer_j(100.0, 0) - 100.0 * 0.02 * 1e-12).abs() < 1e-24);
+        let one = noc.transfer_j(100.0, 1);
+        let two = noc.transfer_j(100.0, 2);
+        assert!(two > one && one > noc.transfer_j(100.0, 0));
+        assert!((two - 100.0 * (2.0 * 0.05 + 3.0 * 0.02) * 1e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn negative_or_nan_rules_are_rejected() {
+        assert!(NocSpec { hop_pj_per_bit: -0.1, router_pj_per_bit: 0.0 }.validate().is_err());
+        assert!(NocSpec { hop_pj_per_bit: 0.0, router_pj_per_bit: f64::NAN }
+            .validate()
+            .is_err());
+        assert!(NocSpec::zero().validate().is_ok());
+    }
+
+    /// Satellite property: a hop-count-0 inter-core transfer moves
+    /// exactly the bits the intra-core boundary pricing charges — the
+    /// same cost function, bit-exactly, across encodings and rasters.
+    #[test]
+    fn zero_hop_payload_matches_intra_core_boundary_pricing_bitwise() {
+        let rasters: [(f64, f64, u64); 5] = [
+            (0.75, 0.375, 32_768),
+            (0.01, 0.02, 32_768),
+            (0.2, 0.01, 1_024),
+            (0.0, 0.0, 2),
+            (1.0, 0.5, 1 << 20),
+        ];
+        for &(rate, rd, neurons) in &rasters {
+            let t = tm(rate, rd, neurons);
+            for raster_bits in [1.0f64, 4096.0, 56_623_104.0] {
+                for enc in [Encoding::Raw, Encoding::Rle, Encoding::Aer] {
+                    let intra = raster_bits
+                        * match enc {
+                            Encoding::Raw => t.raw_cost(),
+                            Encoding::Rle => t.rle_cost(),
+                            Encoding::Aer => t.aer_cost(),
+                        };
+                    let inter = payload_bits(&t, enc, raster_bits);
+                    assert_eq!(inter.to_bits(), intra.to_bits(), "{enc:?} {rate} {rd}");
+                }
+                // And the per-boundary chooser agrees with the best cost.
+                let (best, cost) = t.best();
+                assert_eq!(
+                    payload_bits(&t, best, raster_bits).to_bits(),
+                    (raster_bits * cost).to_bits()
+                );
+            }
+        }
+    }
+}

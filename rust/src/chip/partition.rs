@@ -1,0 +1,121 @@
+//! Partitioning an `SnnModel`'s compute layers across the chip's cores.
+//!
+//! Two schemes, the staples of the multi-core SNN-training literature:
+//!
+//! * **Layer-wise** — each core owns a contiguous run of layers (a
+//!   pipeline split). Inter-core traffic is the spike map crossing each
+//!   ownership boundary.
+//! * **Channel-wise** — every core computes a near-even slice of every
+//!   layer's output channels (a data-parallel split). Each core needs
+//!   the *full* input map, so the fraction held by the other cores is
+//!   gathered over the NoC before each layer.
+//!
+//! With one core both schemes degenerate to the whole model on core 0
+//! with zero inter-core traffic — the pinned oracle case.
+
+/// How the model's layers are split across cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Partitioning {
+    /// Contiguous balanced layer ranges per core (default).
+    #[default]
+    LayerWise,
+    /// Near-even output-channel slices of every layer per core.
+    ChannelWise,
+}
+
+impl Partitioning {
+    pub const ALL: [Partitioning; 2] = [Partitioning::LayerWise, Partitioning::ChannelWise];
+
+    /// Stable lowercase key ("layer"/"channel") for JSON, TOML and CLI.
+    pub fn key(self) -> &'static str {
+        match self {
+            Partitioning::LayerWise => "layer",
+            Partitioning::ChannelWise => "channel",
+        }
+    }
+
+    pub fn from_key(s: &str) -> Option<Partitioning> {
+        match s {
+            "layer" => Some(Partitioning::LayerWise),
+            "channel" => Some(Partitioning::ChannelWise),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Partitioning::LayerWise => "layer-wise",
+            Partitioning::ChannelWise => "channel-wise",
+        }
+    }
+}
+
+/// Layer-wise owner assignment: core of each compute layer, contiguous
+/// and balanced (`core i` owns layers `[i·L/C, (i+1)·L/C)`).
+pub fn layer_owners(n_layers: usize, cores: u32) -> Vec<u32> {
+    let c = cores.max(1) as u64;
+    let l = n_layers as u64;
+    let mut owner = vec![0u32; n_layers];
+    for core in 0..c {
+        let lo = (core * l / c) as usize;
+        let hi = ((core + 1) * l / c) as usize;
+        for o in owner.iter_mut().take(hi).skip(lo) {
+            *o = core as u32;
+        }
+    }
+    owner
+}
+
+/// Channel-wise chunk sizes: `channels` split into `cores` near-even
+/// slices (the first `channels % cores` cores take one extra). Cores
+/// beyond the channel count get zero-width slices.
+pub fn channel_chunks(channels: u64, cores: u32) -> Vec<u64> {
+    let c = cores.max(1) as u64;
+    let base = channels / c;
+    let rem = channels % c;
+    (0..c).map(|i| base + u64::from(i < rem)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitioning_keys_round_trip() {
+        for p in Partitioning::ALL {
+            assert_eq!(Partitioning::from_key(p.key()), Some(p));
+        }
+        assert_eq!(Partitioning::from_key("row"), None);
+        assert_eq!(Partitioning::default(), Partitioning::LayerWise);
+    }
+
+    #[test]
+    fn layer_owners_are_contiguous_and_balanced() {
+        assert_eq!(layer_owners(4, 1), vec![0, 0, 0, 0]);
+        assert_eq!(layer_owners(4, 2), vec![0, 0, 1, 1]);
+        assert_eq!(layer_owners(5, 2), vec![0, 0, 1, 1, 1]);
+        assert_eq!(layer_owners(7, 4), vec![0, 1, 2, 2, 3, 3, 3]);
+        // More cores than layers: later cores idle, every layer owned.
+        assert_eq!(layer_owners(2, 4), vec![1, 3]);
+        // Ownership never decreases (contiguity).
+        for (l, c) in [(9usize, 4u32), (13, 5), (1, 8)] {
+            let o = layer_owners(l, c);
+            assert!(o.windows(2).all(|w| w[0] <= w[1]), "{o:?}");
+            assert!(o.iter().all(|&x| x < c));
+        }
+    }
+
+    #[test]
+    fn channel_chunks_cover_exactly() {
+        assert_eq!(channel_chunks(32, 1), vec![32]);
+        assert_eq!(channel_chunks(32, 4), vec![8, 8, 8, 8]);
+        assert_eq!(channel_chunks(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(channel_chunks(2, 4), vec![1, 1, 0, 0]);
+        for (m, c) in [(100u64, 7u32), (1, 16), (64, 64), (3, 2)] {
+            let chunks = channel_chunks(m, c);
+            assert_eq!(chunks.iter().sum::<u64>(), m);
+            let (lo, hi) = (chunks.iter().min().unwrap(), chunks.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{chunks:?}");
+        }
+    }
+}

@@ -57,7 +57,7 @@ const LEVEL_KEYS: [&str; 9] = [
     "macros",
 ];
 
-fn check_keys(
+pub(crate) fn check_keys(
     table: &BTreeMap<String, TomlValue>,
     known: &[&str],
     what: &str,
@@ -75,7 +75,7 @@ fn req_u64(t: &TomlValue, key: &str, what: &str) -> Result<u64, String> {
     u64::try_from(v).map_err(|_| format!("{what}: `{key}` must be non-negative, got {v}"))
 }
 
-fn req_u32(t: &TomlValue, key: &str, what: &str) -> Result<u32, String> {
+pub(crate) fn req_u32(t: &TomlValue, key: &str, what: &str) -> Result<u32, String> {
     let v = req_u64(t, key, what)?;
     u32::try_from(v).map_err(|_| format!("{what}: `{key}` = {v} exceeds u32"))
 }
@@ -215,6 +215,14 @@ pub fn parse_architecture(text: &str) -> Result<Architecture, String> {
             ));
         }
     }
+    architecture_from_doc(&doc)
+}
+
+/// Parse the `[arch]` + `[[level]]` portions of a parsed document into
+/// an [`Architecture`]. Shared with [`super::chipfile`], which embeds
+/// the same two sections next to its `[chip]`/`[noc]` tables — the root
+/// section check is the caller's job.
+pub(crate) fn architecture_from_doc(doc: &TomlValue) -> Result<Architecture, String> {
     let arch_tbl = doc
         .path("arch")
         .and_then(|v| v.as_table())
@@ -431,6 +439,18 @@ energy = "dram"
         )
         .unwrap_err();
         assert!(e.contains("levels"), "{e}");
+    }
+
+    #[test]
+    fn load_errors_name_the_file() {
+        let dir = std::env::temp_dir().join(format!("eocas_archfile_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_arch.toml");
+        std::fs::write(&path, "[arch]\nname = \"x\"\nrows = 4\ncols = 4\nbanks = 2\n").unwrap();
+        let e = load_architecture(&path).unwrap_err();
+        assert!(e.contains("bad_arch.toml"), "{e}");
+        assert!(e.contains("banks"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Declarative chip files: TOML → [`ChipSpec`].
+//!
+//! A chip file describes a multi-core chip — mesh geometry, NoC energy
+//! rules, layer partitioning and the homogeneous core architecture —
+//! so whole-chip organizations enter the simulator without touching
+//! code (`--chip-file` on the CLI). Shipped examples live under
+//! `configs/` (see its README):
+//!
+//! ```toml
+//! [chip]
+//! name = "mesh2x2"
+//! mesh_rows = 2
+//! mesh_cols = 2
+//! partitioning = "layer"      # "layer" (default) | "channel"
+//!
+//! [noc]                       # optional; absent means a free NoC
+//! hop_pj_per_bit = 0.05
+//! router_pj_per_bit = 0.02
+//!
+//! [arch]                      # the per-core architecture, exactly the
+//! name = "paper_28nm"         # [arch] + [[level]] grammar of arch files
+//! rows = 16
+//! cols = 16
+//!
+//! [[level]]
+//! name = "Reg"
+//! energy = "regfile"
+//! # ...
+//! ```
+//!
+//! The `[arch]`/`[[level]]` grammar is literally
+//! [`super::archfile`]'s — the same parser runs on the embedded
+//! sections, so anything a valid arch file accepts is a valid core.
+//! Unknown sections and keys are rejected with the offending name, and
+//! load errors carry the file path.
+
+use super::archfile::{architecture_from_doc, check_keys, req_u32};
+use super::toml::{self, TomlValue};
+use crate::chip::{ChipConfig, ChipSpec, NocSpec, Partitioning};
+
+const CHIP_KEYS: [&str; 4] = ["name", "mesh_rows", "mesh_cols", "partitioning"];
+const NOC_KEYS: [&str; 2] = ["hop_pj_per_bit", "router_pj_per_bit"];
+
+/// Parse a chip from TOML text.
+pub fn parse_chip(text: &str) -> Result<ChipSpec, String> {
+    let doc = toml::parse(text)?;
+    let root = doc.as_table().expect("toml::parse returns a root table");
+    for key in root.keys() {
+        if !["chip", "noc", "arch", "level"].contains(&key.as_str()) {
+            return Err(format!(
+                "unknown section `[{key}]` in chip file (known: [chip], [noc], [arch], [[level]])"
+            ));
+        }
+    }
+
+    let chip_tbl = doc
+        .path("chip")
+        .and_then(|v| v.as_table())
+        .ok_or("chip file needs a [chip] section")?;
+    check_keys(chip_tbl, &CHIP_KEYS, "[chip]")?;
+    let name = doc.req_str("chip.name")?.to_string();
+    let mesh_rows = req_u32(&doc, "chip.mesh_rows", "[chip]")?;
+    let mesh_cols = req_u32(&doc, "chip.mesh_cols", "[chip]")?;
+    let partitioning = match doc.path("chip.partitioning") {
+        None => Partitioning::LayerWise,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or("[chip]: `partitioning` must be a string")?;
+            Partitioning::from_key(s).ok_or_else(|| {
+                format!("[chip]: unknown partitioning `{s}` (layer|channel)")
+            })?
+        }
+    };
+
+    let noc = match doc.path("noc") {
+        None => NocSpec::zero(),
+        Some(v) => {
+            let tbl = v.as_table().ok_or("[noc] must be a table")?;
+            check_keys(tbl, &NOC_KEYS, "[noc]")?;
+            // Absent keys default to 0; present keys must be numeric.
+            let rule = |key: &str| -> Result<f64, String> {
+                match v.path(key) {
+                    None => Ok(0.0),
+                    Some(_) => v.req_f64(key).map_err(|e| format!("[noc]: {e}")),
+                }
+            };
+            NocSpec { hop_pj_per_bit: rule("hop_pj_per_bit")?, router_pj_per_bit: rule("router_pj_per_bit")? }
+        }
+    };
+
+    let chip = ChipConfig { mesh_rows, mesh_cols, noc, partitioning };
+    chip.validate().map_err(|e| format!("[chip]: {e}"))?;
+    let core = architecture_from_doc(&doc)?;
+    Ok(ChipSpec { name, chip, core })
+}
+
+/// Load a chip from a TOML file on disk. Errors carry the file path.
+pub fn load_chip(path: &std::path::Path) -> Result<ChipSpec, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_chip(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Architecture;
+
+    const CORE: &str = r#"
+[arch]
+name = "mini"
+rows = 8
+cols = 8
+
+[[level]]
+name = "Reg"
+energy = "regfile"
+
+[[level]]
+name = "Buf"
+energy = "sram"
+shared_bytes = 65536
+
+[[level]]
+name = "DRAM"
+energy = "dram"
+"#;
+
+    fn with_core(head: &str) -> String {
+        format!("{head}\n{CORE}")
+    }
+
+    #[test]
+    fn minimal_chip_file_parses_with_defaults() {
+        let spec = parse_chip(&with_core(
+            "[chip]\nname = \"uni\"\nmesh_rows = 1\nmesh_cols = 1\n",
+        ))
+        .unwrap();
+        assert_eq!(spec.name, "uni");
+        assert_eq!(spec.chip.cores(), 1);
+        assert!(spec.chip.noc.is_zero(), "absent [noc] means a free NoC");
+        assert_eq!(spec.chip.partitioning, Partitioning::LayerWise);
+        assert_eq!(spec.core.array.rows, 8);
+        assert_eq!(spec.core.hier.num_levels(), 3);
+    }
+
+    #[test]
+    fn full_chip_file_parses() {
+        let spec = parse_chip(&with_core(
+            "[chip]\nname = \"quad\"\nmesh_rows = 2\nmesh_cols = 2\npartitioning = \"channel\"\n\
+             \n[noc]\nhop_pj_per_bit = 0.05\nrouter_pj_per_bit = 0.02\n",
+        ))
+        .unwrap();
+        assert_eq!(spec.chip.cores(), 4);
+        assert_eq!(spec.chip.partitioning, Partitioning::ChannelWise);
+        assert_eq!(spec.chip.noc.hop_pj_per_bit, 0.05);
+        assert_eq!(spec.chip.noc.router_pj_per_bit, 0.02);
+    }
+
+    #[test]
+    fn bad_chip_files_error_with_the_offending_name() {
+        // Unknown root section.
+        let e = parse_chip(&with_core(
+            "[chip]\nname = \"x\"\nmesh_rows = 1\nmesh_cols = 1\n[ring]\nlinks = 4\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("ring"), "{e}");
+        // Unknown key in [chip].
+        let e = parse_chip(&with_core(
+            "[chip]\nname = \"x\"\nmesh_rows = 1\nmesh_cols = 1\ntopology = \"torus\"\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("topology"), "{e}");
+        // Unknown key in [noc].
+        let e = parse_chip(&with_core(
+            "[chip]\nname = \"x\"\nmesh_rows = 1\nmesh_cols = 1\n[noc]\nlink_pj = 0.1\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("link_pj"), "{e}");
+        // Unknown partitioning.
+        let e = parse_chip(&with_core(
+            "[chip]\nname = \"x\"\nmesh_rows = 1\nmesh_cols = 1\npartitioning = \"pipeline\"\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("pipeline"), "{e}");
+        // Degenerate mesh.
+        let e = parse_chip(&with_core(
+            "[chip]\nname = \"x\"\nmesh_rows = 0\nmesh_cols = 2\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("degenerate"), "{e}");
+        // Negative NoC energy.
+        let e = parse_chip(&with_core(
+            "[chip]\nname = \"x\"\nmesh_rows = 1\nmesh_cols = 1\n[noc]\nhop_pj_per_bit = -1.0\n",
+        ))
+        .unwrap_err();
+        assert!(e.contains("hop_pj_per_bit"), "{e}");
+        // Missing [chip] entirely.
+        let e = parse_chip(CORE).unwrap_err();
+        assert!(e.contains("[chip]"), "{e}");
+        // Errors in the embedded arch surface exactly like arch-file ones.
+        let e = parse_chip(
+            "[chip]\nname = \"x\"\nmesh_rows = 1\nmesh_cols = 1\n\
+             [arch]\nname = \"m\"\nrows = 4\ncols = 4\nbanks = 2\n\
+             [[level]]\nname = \"DRAM\"\nenergy = \"dram\"\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("banks"), "{e}");
+    }
+
+    #[test]
+    fn load_errors_name_the_file() {
+        let dir = std::env::temp_dir().join(format!("eocas_chipfile_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_chip.toml");
+        std::fs::write(&path, with_core("[chip]\nname = \"x\"\nmesh_rows = 1\nmesh_cols = 1\ntopology = \"torus\"\n")).unwrap();
+        let e = load_chip(&path).unwrap_err();
+        assert!(e.contains("bad_chip.toml"), "{e}");
+        assert!(e.contains("topology"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shipped_presets_load_and_pin_the_paper_core() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        let single = load_chip(&dir.join("chip_single.toml")).unwrap();
+        assert_eq!(single.chip, crate::chip::ChipConfig::single());
+        assert_eq!(single.core, Architecture::paper_default());
+        let quad = load_chip(&dir.join("chip_mesh2x2.toml")).unwrap();
+        assert_eq!(quad.chip.cores(), 4);
+        assert!(!quad.chip.noc.is_zero());
+        assert_eq!(quad.core, Architecture::paper_default());
+    }
+}

@@ -8,6 +8,7 @@
 //! simulator doubles as a what-if tool for other technology nodes.
 
 pub mod archfile;
+pub mod chipfile;
 pub mod spacefile;
 pub mod toml;
 
@@ -140,9 +141,11 @@ impl EnergyConfig {
         })
     }
 
-    /// Load from a file path.
+    /// Load from a file path. Validation errors carry the file path so
+    /// a typoed key in one of several `--config` files is attributable.
     pub fn load(path: &std::path::Path) -> Result<Self, String> {
-        Self::from_toml(&toml::parse_file(path)?)
+        let doc = toml::parse_file(path)?;
+        Self::from_toml(&doc).map_err(|e| format!("{}: {e}", path.display()))
     }
 }
 
@@ -233,6 +236,23 @@ mod tests {
         let doc = toml::parse("[mem.cache]\nread_pj_per_bit = 0.1\n").unwrap();
         let e = EnergyConfig::from_toml(&doc).unwrap_err();
         assert!(e.contains("cache"), "{e}");
+    }
+
+    #[test]
+    fn load_errors_name_the_file_and_the_offending_key() {
+        let dir = std::env::temp_dir().join(format!("eocas_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_energy.toml");
+        std::fs::write(&path, "[ops]\nmux_picojoules = 0.5\n").unwrap();
+        let e = EnergyConfig::load(&path).unwrap_err();
+        assert!(e.contains("bad_energy.toml"), "{e}");
+        assert!(e.contains("mux_picojoules"), "{e}");
+        // Parse errors (not just validation errors) carry the path too.
+        let broken = dir.join("broken_energy.toml");
+        std::fs::write(&broken, "[ops\nmux_pj = 0.5\n").unwrap();
+        let e = EnergyConfig::load(&broken).unwrap_err();
+        assert!(e.contains("broken_energy.toml"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

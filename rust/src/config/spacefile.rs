@@ -18,14 +18,21 @@
 //! main_buffer = ["pervar", "unified"]
 //! spike_buf_bytes = [0, 8192]
 //! line_buffer = ["main", "spike_buf"]
+//! cores = [1, 2, 4]              # chip axis: NoC-tiled core counts
+//! partitioning = ["layer", "channel"]
+//!
+//! [noc]                          # optional; prices multi-core points
+//! hop_pj_per_bit = 0.05
+//! router_pj_per_bit = 0.02
 //! ```
 //!
 //! Axes omitted from `[axes]` default to the single identity coordinate
 //! (scale 1.0, per-variable main buffer, no spike buffer, line buffer at
-//! the base placement), so a file listing only `arrays` describes a
-//! plain array sweep. Unknown sections and keys are rejected with the
-//! offending name, and the resulting space passes
-//! [`ArchSpace::validate`] before it is returned.
+//! the base placement, one core, layer-wise partitioning), so a file
+//! listing only `arrays` describes a plain array sweep. Unknown
+//! sections and keys are rejected with the offending name, and the
+//! resulting space passes [`ArchSpace::validate`] before it is
+//! returned.
 
 use std::collections::BTreeMap;
 
@@ -34,9 +41,10 @@ use crate::arch::space::{
     ArchSpace, LineBufferAt, MainBuffer, SpikeBufEnergy, SpikeBufResidency,
 };
 use crate::arch::{ArrayScheme, HierarchySpec};
+use crate::chip::{NocSpec, Partitioning};
 
 const SPACE_KEYS: [&str; 4] = ["name", "base", "pe_reg_bits", "max_onchip_bytes"];
-const AXES_KEYS: [&str; 8] = [
+const AXES_KEYS: [&str; 10] = [
     "arrays",
     "macs",
     "mem_scales",
@@ -45,7 +53,10 @@ const AXES_KEYS: [&str; 8] = [
     "spike_buf_energy",
     "spike_buf_residency",
     "line_buffer",
+    "cores",
+    "partitioning",
 ];
+const NOC_KEYS: [&str; 2] = ["hop_pj_per_bit", "router_pj_per_bit"];
 
 fn check_keys(
     table: &BTreeMap<String, TomlValue>,
@@ -119,9 +130,9 @@ pub fn parse_space(text: &str) -> Result<ArchSpace, String> {
     let doc = toml::parse(text)?;
     let root = doc.as_table().expect("toml::parse returns a root table");
     for key in root.keys() {
-        if key != "space" && key != "axes" {
+        if key != "space" && key != "axes" && key != "noc" {
             return Err(format!(
-                "unknown section `[{key}]` in space file (known: [space], [axes])"
+                "unknown section `[{key}]` in space file (known: [space], [axes], [noc])"
             ));
         }
     }
@@ -254,6 +265,57 @@ pub fn parse_space(text: &str) -> Result<ArchSpace, String> {
             .collect::<Result<Vec<LineBufferAt>, String>>()?,
     };
 
+    let cores = match doc.path("axes.cores") {
+        None => vec![1],
+        Some(v) => {
+            let items = v.as_array().ok_or("`cores` must be a list of integers")?;
+            items
+                .iter()
+                .map(|it| {
+                    let i = it
+                        .as_i64()
+                        .ok_or_else(|| "`cores` entries must be integers".to_string())?;
+                    u32::try_from(i)
+                        .ok()
+                        .filter(|&c| c > 0)
+                        .ok_or_else(|| format!("`cores` entry {i} must be positive"))
+                })
+                .collect::<Result<Vec<u32>, String>>()?
+        }
+    };
+
+    let partitionings = match str_list(&doc, "axes.partitioning")? {
+        None => vec![Partitioning::LayerWise],
+        Some(list) => list
+            .into_iter()
+            .map(|s| {
+                Partitioning::from_key(s)
+                    .ok_or_else(|| format!("unknown partitioning `{s}` (layer|channel)"))
+            })
+            .collect::<Result<Vec<Partitioning>, String>>()?,
+    };
+
+    let noc = match doc.path("noc") {
+        None => NocSpec::zero(),
+        Some(v) => {
+            let tbl = v.as_table().ok_or("[noc] must be a table")?;
+            check_keys(tbl, &NOC_KEYS, "[noc]")?;
+            // Absent keys default to 0; present keys must be numeric.
+            let rule = |key: &str| -> Result<f64, String> {
+                match v.path(key) {
+                    None => Ok(0.0),
+                    Some(it) => it
+                        .as_f64()
+                        .ok_or_else(|| format!("[noc]: `{key}` must be a number")),
+                }
+            };
+            NocSpec {
+                hop_pj_per_bit: rule("hop_pj_per_bit")?,
+                router_pj_per_bit: rule("router_pj_per_bit")?,
+            }
+        }
+    };
+
     let space = ArchSpace {
         name,
         base,
@@ -265,6 +327,9 @@ pub fn parse_space(text: &str) -> Result<ArchSpace, String> {
         spike_buf_energies,
         spike_buf_residencies,
         line_buffers,
+        cores,
+        partitionings,
+        noc,
         max_onchip_bytes,
     };
     space.validate()?;
@@ -377,5 +442,75 @@ mod tests {
         ))
         .unwrap_err();
         assert!(e.contains("positive"), "{e}");
+        // Unknown partitioning scheme.
+        let e = parse_space(&format!(
+            "{base}[axes]\nmacs = 256\npartitioning = [\"pipeline\"]\n"
+        ))
+        .unwrap_err();
+        assert!(e.contains("pipeline"), "{e}");
+        // Non-positive core count.
+        let e = parse_space(&format!("{base}[axes]\nmacs = 256\ncores = [0]\n"))
+            .unwrap_err();
+        assert!(e.contains("cores"), "{e}");
+        // Unknown [noc] key.
+        let e = parse_space(&format!(
+            "{base}[axes]\nmacs = 256\n[noc]\nlink_pj = 0.1\n"
+        ))
+        .unwrap_err();
+        assert!(e.contains("link_pj"), "{e}");
+        // Negative NoC energy fails space validation.
+        let e = parse_space(&format!(
+            "{base}[axes]\nmacs = 256\n[noc]\nhop_pj_per_bit = -1.0\n"
+        ))
+        .unwrap_err();
+        assert!(e.contains("hop_pj_per_bit"), "{e}");
+    }
+
+    #[test]
+    fn chip_axes_parse_with_defaults_and_noc() {
+        // Omitted chip axes stay singleton with a free NoC.
+        let s = parse_space(
+            "[space]\nname = \"m\"\nbase = \"paper_28nm\"\n[axes]\nmacs = 256\n",
+        )
+        .unwrap();
+        assert_eq!(s.cores, vec![1]);
+        assert_eq!(s.partitionings, vec![Partitioning::LayerWise]);
+        assert!(s.noc.is_zero());
+
+        let s = parse_space(
+            "[space]\nname = \"multi\"\nbase = \"paper_28nm\"\n\
+             [axes]\narrays = [\"16x16\"]\ncores = [1, 2, 4]\n\
+             partitioning = [\"layer\", \"channel\"]\n\
+             [noc]\nhop_pj_per_bit = 0.05\nrouter_pj_per_bit = 0.02\n",
+        )
+        .unwrap();
+        assert_eq!(s.cores, vec![1, 2, 4]);
+        assert_eq!(
+            s.partitionings,
+            vec![Partitioning::LayerWise, Partitioning::ChannelWise]
+        );
+        assert_eq!(s.noc, NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 });
+        assert_eq!(s.num_points(), 6);
+        // A 4-core point factors into a 2x2 mesh.
+        let chip = s.chip_config([0, 0, 0, 0, 0, 0, 0, 2, 1]).unwrap();
+        assert_eq!((chip.mesh_rows, chip.mesh_cols), (2, 2));
+        assert_eq!(chip.partitioning, Partitioning::ChannelWise);
+    }
+
+    #[test]
+    fn load_errors_name_the_file() {
+        let dir =
+            std::env::temp_dir().join(format!("eocas_spacefile_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_space.toml");
+        std::fs::write(
+            &path,
+            "[space]\nname = \"x\"\nbase = \"paper_28nm\"\n[axes]\nmacs = 256\nwormholes = 3\n",
+        )
+        .unwrap();
+        let e = load_space(&path).unwrap_err();
+        assert!(e.contains("bad_space.toml"), "{e}");
+        assert!(e.contains("wormholes"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

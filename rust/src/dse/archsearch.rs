@@ -4,12 +4,16 @@
 //! `dse::explore` sweeps a fixed [`crate::arch::ArchPool`]; this module
 //! searches an [`ArchSpace`] — the parameterized space the pool comes
 //! from (array shapes × memory provisionings × hierarchy variants under
-//! an on-chip budget). Each visited point is priced across the
-//! configured dataflows (family templates and optionally the mapper
-//! optimum) through one batched [`Session::evaluate_many`] call, scored
-//! by its best dataflow's overall training energy, and folded into a
-//! two-objective Pareto frontier over *(energy, on-chip capacity)* — the
-//! capacity being the search's area proxy.
+//! an on-chip budget, optionally × NoC-tiled core counts and model
+//! partitionings, see [`crate::chip`]). Each visited point is priced
+//! across the configured dataflows (family templates and optionally the
+//! mapper optimum) through one batched [`Session::evaluate_many`] call
+//! — multi-core points carry their [`crate::chip::ChipConfig`] so the
+//! chip path prices partitioned compute plus inter-core spike traffic —
+//! scored by its best dataflow's overall training energy, and folded
+//! into a two-objective Pareto frontier over *(energy, on-chip
+//! capacity)* — the capacity (whole-chip: per-core bytes × cores) being
+//! the search's area proxy.
 //!
 //! Two strategies:
 //!
@@ -300,9 +304,12 @@ impl<'a> Run<'a> {
         self.cfg.limit.is_some_and(|l| self.scored_this_call >= l)
     }
 
-    fn request(&self, arch: &Architecture, dataflow: Dataflow) -> EvalRequest {
+    fn request(&self, coords: Coords, arch: &Architecture, dataflow: Dataflow) -> EvalRequest {
         let mut r = EvalRequest::new(self.model.clone(), arch.clone(), dataflow)
             .with_sparsity(self.sparsity.clone());
+        if let Some(chip) = self.space.chip_config(coords) {
+            r = r.with_chip(chip);
+        }
         if let Some(t) = &self.cfg.temporal {
             r = r.with_temporal(t.clone());
             if self.cfg.spike_encoding == SpikeEncoding::Auto
@@ -314,15 +321,21 @@ impl<'a> Run<'a> {
         r
     }
 
+    /// The area proxy of a point: the whole chip's bounded on-chip
+    /// capacity — per-core bytes times the point's core count.
+    fn onchip_bytes(space: &ArchSpace, coords: Coords, arch: &Architecture) -> u64 {
+        arch.hier.onchip_bytes() * space.cores[coords[7]] as u64
+    }
+
     /// Price a batch of candidates (one `evaluate_many` across candidates
     /// × dataflows), score each by its best dataflow, fold into the
     /// frontier.
     fn score_batch(&mut self, batch: &[(Coords, Architecture)]) -> Result<Vec<ScoredPoint>> {
         let nd = self.dataflows.len();
         let mut reqs = Vec::with_capacity(batch.len() * nd);
-        for (_, arch) in batch {
+        for (coords, arch) in batch {
             for &df in &self.dataflows {
-                reqs.push(self.request(arch, df));
+                reqs.push(self.request(*coords, arch, df));
             }
         }
         let results = self.session.evaluate_many(&reqs);
@@ -353,7 +366,7 @@ impl<'a> Run<'a> {
                 arch: arch.clone(),
                 dataflow: r.dataflow.clone(),
                 energy_j: r.overall_j,
-                onchip_bytes: arch.hier.onchip_bytes(),
+                onchip_bytes: Run::onchip_bytes(self.space, *coords, arch),
                 cycles: r.cycles,
             };
             self.evaluated += 1;
@@ -681,7 +694,7 @@ fn point_from_json(space: &ArchSpace, j: &Json) -> Result<ScoredPoint> {
         .to_string();
     let energy_j = jnum(j, "energy_j")?;
     let cycles = jnum(j, "cycles")? as u64;
-    let onchip_bytes = arch.hier.onchip_bytes();
+    let onchip_bytes = Run::onchip_bytes(space, coords, &arch);
     Ok(ScoredPoint { coords, arch, dataflow, energy_j, onchip_bytes, cycles })
 }
 
@@ -840,6 +853,13 @@ pub fn search(
 ) -> Result<ArchSearchResult> {
     space.validate().map_err(Error::new)?;
     cfg.validate()?;
+    if cfg.include_mapper && space.cores.iter().any(|&c| c > 1) {
+        return Err(err!(
+            "space `{}` has a multi-core axis; chip evaluation applies to family \
+             templates only — drop the mapper optimum or the `cores` axis",
+            space.name
+        ));
+    }
     let strategy = cfg.strategy.resolve(space);
     let fingerprint = search_fingerprint(session, space, cfg, &strategy, model, sparsity);
     let mut run = Run {
@@ -1107,6 +1127,123 @@ mod tests {
         assert!(resumed.complete);
         assert_eq!(resumed, full, "resumed annealing must replay the same trajectory");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_progress_checkpoints_still_resume_bit_identically() {
+        // `--limit` can expire before the first batch completes; the
+        // checkpoint written then must still be a resumable cursor, not
+        // a corrupt or absent file.
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_zp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = ArchSpace::reference();
+        let anneal =
+            Strategy::Annealing { iters: 6, restarts: 2, t0: 0.08, cooling: 0.9 };
+        for (name, strategy) in [("ex", Strategy::Exhaustive), ("an", anneal)] {
+            let ck = dir.join(format!("{name}.json"));
+            let base = ArchSearchConfig {
+                strategy,
+                families: vec![Family::AdvWs],
+                seed: 11,
+                ..ArchSearchConfig::default()
+            };
+            let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+            let stalled_cfg = ArchSearchConfig {
+                limit: Some(0),
+                checkpoint: Some(ck.clone()),
+                ..base.clone()
+            };
+            let stalled =
+                search(&session, &model, &sparsity, &space, &stalled_cfg).unwrap();
+            assert!(!stalled.complete, "{name}");
+            assert_eq!(stalled.evaluated, 0, "{name}");
+            assert!(ck.exists(), "{name}: no cursor written at zero progress");
+            let resume_cfg =
+                ArchSearchConfig { checkpoint: Some(ck.clone()), ..base.clone() };
+            let resumed = search(&session, &model, &sparsity, &space, &resume_cfg).unwrap();
+            assert!(resumed.complete, "{name}");
+            assert_eq!(resumed, full, "{name}: zero-progress resume diverged");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn multicore_space() -> ArchSpace {
+        use crate::chip::{NocSpec, Partitioning};
+        ArchSpace {
+            name: "paper_multicore".into(),
+            cores: vec![1, 4],
+            partitionings: vec![Partitioning::LayerWise, Partitioning::ChannelWise],
+            noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+            ..ArchSpace::paper()
+        }
+    }
+
+    #[test]
+    fn multicore_axes_search_exhaustively_and_price_the_noc() {
+        let (session, model, sparsity) = setup();
+        let cfg = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            ..ArchSearchConfig::default()
+        };
+        let space = multicore_space();
+        let res = search(&session, &model, &sparsity, &space, &cfg).unwrap();
+        assert!(res.complete);
+        assert_eq!(res.total_points, 16);
+        // Single-core points reject the non-default partitioning coord.
+        assert_eq!(res.infeasible, 4);
+        assert_eq!(res.evaluated, 12);
+        // Multi-core points pay the whole-chip area proxy.
+        let single = ArchSpace::paper();
+        let sres = search(&session, &model, &sparsity, &single, &cfg).unwrap();
+        let one_core = sres.best.as_ref().unwrap();
+        for p in &res.frontier {
+            if p.coords[7] == 1 {
+                assert_eq!(p.onchip_bytes, 4 * one_core.onchip_bytes);
+            }
+        }
+        // The single-core points are a subspace, so the headline can
+        // never be worse than the plain search's.
+        assert!(res.best.as_ref().unwrap().energy_j <= one_core.energy_j);
+    }
+
+    #[test]
+    fn multicore_annealing_is_deterministic_and_resumable() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_mc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("mc.json");
+        let space = multicore_space();
+        let base = ArchSearchConfig {
+            strategy: Strategy::Annealing { iters: 8, restarts: 2, t0: 0.08, cooling: 0.9 },
+            families: vec![Family::AdvWs],
+            seed: 23,
+            checkpoint_every: 1,
+            ..ArchSearchConfig::default()
+        };
+        let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+        assert!(full.complete);
+        let partial_cfg = ArchSearchConfig {
+            limit: Some(3),
+            checkpoint: Some(ck.clone()),
+            ..base.clone()
+        };
+        let partial = search(&session, &model, &sparsity, &space, &partial_cfg).unwrap();
+        assert!(!partial.complete);
+        let resume_cfg = ArchSearchConfig { checkpoint: Some(ck.clone()), ..base.clone() };
+        let resumed = search(&session, &model, &sparsity, &space, &resume_cfg).unwrap();
+        assert_eq!(resumed, full, "multi-core resume must replay the trajectory");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multicore_space_refuses_the_mapper() {
+        let (session, model, sparsity) = setup();
+        let cfg = ArchSearchConfig { include_mapper: true, ..ArchSearchConfig::default() };
+        let e = search(&session, &model, &sparsity, &multicore_space(), &cfg).unwrap_err();
+        assert!(e.to_string().contains("multi-core"), "{e}");
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the simulator: workload generation from deep-SNN
-//!   models ([`workload`]), the architecture pool ([`arch`]), dataflow
+//!   models ([`workload`]), the architecture pool ([`arch`]), multi-core
+//!   NoC-tiled chip organizations ([`chip`]), dataflow
 //!   loop-nest templates ([`dataflow`]), reuse-factor analysis ([`reuse`]),
 //!   the energy model ([`energy`]), performance/resource models
 //!   ([`perfmodel`]), design-space exploration ([`dse`]), and the training
@@ -34,6 +35,7 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod arch;
+pub mod chip;
 pub mod compare;
 pub mod config;
 pub mod coordinator;

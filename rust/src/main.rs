@@ -12,6 +12,10 @@
 //! * `arch-search`     guided multi-objective search over a *generated*
 //!                     architecture space (`--space configs/space_*.toml`),
 //!                     with JSON checkpoint/resume
+//! * `chip-sim`        sweep a multi-core NoC-tiled chip
+//!                     (`--chip-file configs/chip_*.toml`) across core
+//!                     counts, splitting energy into per-core compute,
+//!                     conv memory and inter-core NoC spike traffic
 //! * `train`           run SNN BPTT through PJRT, write the run log
 //! * `pipeline`        end-to-end: train → measured sparsity → DSE → reports
 //!
@@ -25,7 +29,8 @@ use std::process::ExitCode;
 
 use eocas::arch::{ArchPool, Architecture};
 use eocas::bail;
-use eocas::config::{archfile, spacefile, EnergyConfig};
+use eocas::chip::{self, ChipConfig, Partitioning};
+use eocas::config::{archfile, chipfile, spacefile, EnergyConfig};
 use eocas::coordinator::{self, PipelineConfig};
 use eocas::dataflow::templates::Family;
 use eocas::dse::archsearch::{self, ArchSearchConfig, Strategy};
@@ -39,6 +44,7 @@ use eocas::sparsity::SparsityProfile;
 use eocas::spike::{self, LifConfig, SpikeEncoding, TemporalSparsity};
 use eocas::trainer::{Trainer, TrainerConfig};
 use eocas::util::error::Result;
+use eocas::util::json::Json;
 
 const USAGE: &str = "\
 eocas — Energy-Oriented Computing Architecture Simulator for SNN training
@@ -51,6 +57,17 @@ USAGE:
                  [--arch-file PATH] [--activity X] [--config PATH]
                  [--sparsity PATH] [--temporal PATH] [--encoding raw|auto]
                  [--json]
+  eocas chip-sim --chip-file PATH.toml
+                 [--model paper|cifar100|tiny]
+                 [--dataflow advws|ws1|ws2|os|rs]
+                 [--partition layer|channel] [--sparsity PATH]
+                 [--temporal PATH] [--encoding raw|auto]
+                 [--config PATH] [--threads N] [--json]
+                 (sweeps core counts 1, 2, 4, ... up to the chip file's
+                  mesh, pricing partitioned per-core compute plus
+                  hop-priced inter-core spike traffic; the 1-core row is
+                  the plain single-hierarchy oracle — see
+                  configs/README.md)
   eocas spike-sim [--model paper|cifar100|tiny] [--timesteps N] [--seed N]
                   [--threshold X] [--decay X] [--input-rate X] [--soft-reset]
                   [--log PATH] [--json]
@@ -522,6 +539,140 @@ fn run(args: &[String]) -> Result<()> {
                 best.energy_j * 1e6
             );
             print!("{}", report::table_archsearch(&res).render());
+            Ok(())
+        }
+        "chip-sim" => {
+            let cfg = energy_config(&flags)?;
+            let model = pick_model(&flags)?;
+            let chip_path = flags.get("chip-file").ok_or_else(|| {
+                err!("chip-sim needs --chip-file PATH (see configs/README.md)")
+            })?;
+            let spec = chipfile::load_chip(std::path::Path::new(chip_path))
+                .map_err(|e| err!("chip file: {e}"))?;
+            let fam = match pick_dataflow(
+                flags.get("dataflow").map(|s| s.as_str()).unwrap_or("advws"),
+            )? {
+                Dataflow::Family(f) => f,
+                Dataflow::MapperOptimal => {
+                    bail!("chip-sim prices family templates (the mapper optimum is single-core)")
+                }
+            };
+            let mut base_chip = spec.chip.clone();
+            if let Some(p) = flags.get("partition") {
+                base_chip.partitioning = Partitioning::from_key(p)
+                    .ok_or_else(|| err!("unknown --partition `{p}` (layer|channel)"))?;
+            }
+            let sparsity = sparsity_flag(&flags)?;
+            let temporal = match flags.get("temporal") {
+                None => None,
+                Some(p) => {
+                    if flags.contains_key("sparsity") {
+                        bail!("--sparsity and --temporal are mutually exclusive");
+                    }
+                    Some(
+                        TemporalSparsity::load(std::path::Path::new(p))
+                            .map_err(|e| err!("temporal: {e}"))?,
+                    )
+                }
+            };
+            let encoding = flags
+                .get("encoding")
+                .map(|enc| {
+                    SpikeEncoding::from_key(enc)
+                        .ok_or_else(|| err!("unknown --encoding `{enc}` (raw|auto)"))
+                })
+                .transpose()?;
+            let session = Session::builder()
+                .energy_config(cfg)
+                .threads(parse_num(&flags, "threads", 0usize)?)
+                .build();
+            // Core-count sweep: 1, 2, 4, ... capped at the file's mesh.
+            // The 1-core row goes through the plain single-hierarchy
+            // path — the pinned oracle the multi-core rows compare to.
+            let full = base_chip.cores();
+            let mut counts = vec![1u32];
+            let mut n = 2u32;
+            while n < full {
+                counts.push(n);
+                n *= 2;
+            }
+            if full > 1 {
+                counts.push(full);
+            }
+            let mut reqs = Vec::with_capacity(counts.len());
+            for &n in &counts {
+                let mut req =
+                    EvalRequest::new(model.clone(), spec.core.clone(), Dataflow::Family(fam));
+                if n > 1 {
+                    // Intermediate counts get the near-square mesh; the
+                    // full count keeps the file's declared geometry.
+                    let (mesh_rows, mesh_cols) = if n == full {
+                        (base_chip.mesh_rows, base_chip.mesh_cols)
+                    } else {
+                        chip::mesh_for(n)
+                    };
+                    req = req.with_chip(ChipConfig {
+                        mesh_rows,
+                        mesh_cols,
+                        noc: base_chip.noc,
+                        partitioning: base_chip.partitioning,
+                    });
+                }
+                if let Some(sp) = &sparsity {
+                    req = req.with_sparsity(sp.clone());
+                }
+                if let Some(t) = &temporal {
+                    req = req.with_temporal(t.clone());
+                }
+                if let Some(e) = encoding {
+                    req = req.with_spike_encoding(e);
+                }
+                reqs.push(req);
+            }
+            let results = session
+                .evaluate_many(&reqs)
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?;
+            let rows: Vec<(u32, std::sync::Arc<eocas::session::EvalResult>)> =
+                counts.iter().copied().zip(results).collect();
+            if flags.contains_key("json") {
+                let mut doc = Json::obj();
+                doc.set("schema", Json::Num(1.0))
+                    .set("chip", Json::Str(spec.name.clone()))
+                    .set("partitioning", Json::Str(base_chip.partitioning.key().into()))
+                    .set("dataflow", Json::Str(fam.name().into()))
+                    .set(
+                        "sweep",
+                        Json::Arr(
+                            rows.iter()
+                                .map(|(cores, r)| {
+                                    let (mr, mc) = chip::mesh_for(*cores);
+                                    let mut o = Json::obj();
+                                    o.set("cores", Json::Num(*cores as f64))
+                                        .set("mesh", Json::Str(format!("{mr}x{mc}")))
+                                        .set("compute_j", Json::Num(r.compute_j))
+                                        .set("conv_mem_j", Json::Num(r.conv_mem_j))
+                                        .set("noc_j", Json::Num(r.noc_j))
+                                        .set("overall_j", Json::Num(r.overall_j))
+                                        .set("cycles", Json::Num(r.cycles as f64));
+                                    o
+                                })
+                                .collect(),
+                        ),
+                    );
+                println!("{}", doc.dumps());
+                return Ok(());
+            }
+            println!(
+                "chip `{}`: up to {} cores ({}x{} mesh), {} partitioning, dataflow {}",
+                spec.name,
+                full,
+                base_chip.mesh_rows,
+                base_chip.mesh_cols,
+                base_chip.partitioning.key(),
+                fam.name()
+            );
+            print!("{}", report::table_chip(&spec.name, &rows).render());
             Ok(())
         }
         "spike-sim" => {

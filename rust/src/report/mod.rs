@@ -456,6 +456,49 @@ pub fn table_archsearch(res: &crate::dse::archsearch::ArchSearchResult) -> Table
     t
 }
 
+/// Chip-sweep table (`eocas chip-sim`): the whole-chip energy split per
+/// core count — core compute vs conv-memory (boundary) traffic vs NoC
+/// transfers — with the total and its ratio to the 1-core row (the
+/// pinned single-hierarchy oracle, always the first row).
+pub fn table_chip(chip_name: &str, rows: &[(u32, Arc<EvalResult>)]) -> Table {
+    let base = rows.first().map(|(_, r)| r.overall_j);
+    let mut t = Table::new(
+        format!("Chip `{chip_name}`: energy split per core count"),
+        &[
+            "cores", "mesh", "compute (uJ)", "conv mem (uJ)", "NoC (uJ)", "total (uJ)",
+            "vs 1-core", "cycles",
+        ],
+    )
+    .aligns(&[
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for (cores, res) in rows {
+        let (r, c) = crate::chip::mesh_for(*cores);
+        let ratio = match base {
+            Some(b) if b > 0.0 => format!("{:+.2}%", (res.overall_j / b - 1.0) * 100.0),
+            _ => "-".into(),
+        };
+        t.add_row(vec![
+            cores.to_string(),
+            format!("{r}x{c}"),
+            fmt_uj(res.compute_j),
+            fmt_uj(res.conv_mem_j),
+            fmt_uj(res.noc_j),
+            fmt_uj(res.overall_j),
+            ratio,
+            res.cycles.to_string(),
+        ]);
+    }
+    t
+}
+
 /// Fig. 5: candidate architectures spread over energy intervals.
 /// Returns (table of all candidates, histogram text).
 pub fn fig5_energy_intervals(ctx: &ReportCtx, samples: usize) -> (Table, String) {
@@ -656,6 +699,29 @@ mod tests {
         assert!(txt.contains("paper_pool"));
         assert!(txt.contains("16x16"));
         assert!(txt.contains("Advanced WS"));
+    }
+
+    #[test]
+    fn chip_table_renders_the_sweep() {
+        use crate::chip::{ChipConfig, NocSpec, Partitioning};
+        let ctx = ReportCtx::paper_default();
+        let plain = ctx.evaluate(Family::AdvWs);
+        let req = ctx
+            .request(&ctx.arch, Family::AdvWs)
+            .with_chip(ChipConfig {
+                mesh_rows: 2,
+                mesh_cols: 2,
+                noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+                partitioning: Partitioning::ChannelWise,
+            });
+        let quad = ctx.session.evaluate(&req).unwrap();
+        let t = table_chip("mesh2x2", &[(1, plain), (4, quad)]);
+        assert_eq!(t.n_rows(), 2);
+        let txt = t.render();
+        assert!(txt.contains("mesh2x2"), "{txt}");
+        assert!(txt.contains("2x2"), "{txt}");
+        assert!(txt.contains("NoC"), "{txt}");
+        assert!(txt.contains('%'), "{txt}");
     }
 
     #[test]

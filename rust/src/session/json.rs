@@ -1,14 +1,16 @@
 //! JSON encoding of [`EvalRequest`]/[`EvalResult`] — the stable wire
 //! schema (`DESIGN.md` documents it; `SCHEMA_VERSION` gates evolution).
 //!
-//! Schema v3 adds an optional `temporal` sparsity object and a
-//! `spike_encoding` option to requests; both default when absent, so v2
-//! documents parse unchanged. Schema v2 carries the full N-level
-//! hierarchy on architectures and a per-level energy list on operand
-//! breakdowns. v1 documents (the fixed Reg/SRAM/DRAM shape: an
-//! eight-macro `mem` list, `reg_j`/`sram_j`/`dram_j` operand fields) are
-//! still parsed and mapped onto the equivalent 3-level hierarchy; output
-//! is always v3.
+//! Schema v4 adds an optional `chip` object to requests (mesh geometry,
+//! NoC energy rules, partitioning) and a `noc_j` total to results; both
+//! default when absent, so v3 documents parse unchanged. Schema v3 adds
+//! an optional `temporal` sparsity object and a `spike_encoding` option
+//! to requests; both default when absent, so v2 documents parse
+//! unchanged. Schema v2 carries the full N-level hierarchy on
+//! architectures and a per-level energy list on operand breakdowns. v1
+//! documents (the fixed Reg/SRAM/DRAM shape: an eight-macro `mem` list,
+//! `reg_j`/`sram_j`/`dram_j` operand fields) are still parsed and mapped
+//! onto the equivalent 3-level hierarchy; output is always v4.
 //!
 //! No `serde` offline; encodings are hand-rolled over
 //! [`crate::util::json::Json`], whose object keys are sorted so `dumps`
@@ -401,6 +403,36 @@ pub fn dataflow_from_key(s: &str) -> Result<Dataflow> {
     family_from_key(s).map(Dataflow::Family)
 }
 
+/// Canonical encoding of a chip organization (schema v4 `chip` key).
+pub fn chip_config_to_json(c: &crate::chip::ChipConfig) -> Json {
+    let mut noc = Json::obj();
+    noc.set("hop_pj_per_bit", Json::Num(c.noc.hop_pj_per_bit))
+        .set("router_pj_per_bit", Json::Num(c.noc.router_pj_per_bit));
+    let mut j = Json::obj();
+    j.set("mesh_rows", Json::Num(c.mesh_rows as f64))
+        .set("mesh_cols", Json::Num(c.mesh_cols as f64))
+        .set("noc", noc)
+        .set("partitioning", Json::Str(c.partitioning.key().into()));
+    j
+}
+
+pub fn chip_config_from_json(j: &Json) -> Result<crate::chip::ChipConfig> {
+    let noc_j = get(j, "noc")?;
+    let p = text(j, "partitioning")?;
+    let chip = crate::chip::ChipConfig {
+        mesh_rows: uint32(j, "mesh_rows")?,
+        mesh_cols: uint32(j, "mesh_cols")?,
+        noc: crate::chip::NocSpec {
+            hop_pj_per_bit: num(noc_j, "hop_pj_per_bit")?,
+            router_pj_per_bit: num(noc_j, "router_pj_per_bit")?,
+        },
+        partitioning: crate::chip::Partitioning::from_key(&p)
+            .ok_or_else(|| err!("unknown partitioning `{p}`"))?,
+    };
+    chip.validate().map_err(|e| err!("{e}"))?;
+    Ok(chip)
+}
+
 fn sparsity_to_json(s: &SparsityProfile) -> Json {
     let mut j = Json::obj();
     j.set("source", Json::Str(s.source.clone()))
@@ -469,6 +501,10 @@ impl EvalRequest {
                 "temporal",
                 self.temporal.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
             )
+            .set(
+                "chip",
+                self.chip.as_ref().map(chip_config_to_json).unwrap_or(Json::Null),
+            )
             .set("options", options_to_json(&self.options));
         j
     }
@@ -480,12 +516,18 @@ impl EvalRequest {
             None | Some(Json::Null) => None,
             Some(t) => Some(TemporalSparsity::from_json(t)?),
         };
+        // Optional since v4; absent in v1–v3 documents.
+        let chip = match j.get("chip") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(chip_config_from_json(c)?),
+        };
         Ok(EvalRequest {
             model: model_from_json(get(j, "model")?)?,
             arch: arch_from_json(get(j, "arch")?)?,
             dataflow: dataflow_from_key(&text(j, "dataflow")?)?,
             sparsity: sparsity_from_json(get(j, "sparsity")?)?,
             temporal,
+            chip,
             options: options_from_json(get(j, "options")?)?,
         })
     }
@@ -629,7 +671,8 @@ impl EvalResult {
             .set("overall_j", Json::Num(self.overall_j))
             .set("conv_mem_j", Json::Num(self.conv_mem_j))
             .set("compute_j", Json::Num(self.compute_j))
-            .set("cycles", Json::Num(self.cycles as f64));
+            .set("cycles", Json::Num(self.cycles as f64))
+            .set("noc_j", Json::Num(self.noc_j));
         let mut j = Json::obj();
         j.set("schema", Json::Num(SCHEMA_VERSION as f64))
             .set("model", Json::Str(self.model.clone()))
@@ -663,6 +706,11 @@ impl EvalResult {
             conv_mem_j: num(totals, "conv_mem_j")?,
             compute_j: num(totals, "compute_j")?,
             cycles: uint(totals, "cycles")?,
+            // Absent in v1–v3 result documents: no NoC, no NoC energy.
+            noc_j: match totals.get("noc_j") {
+                None | Some(Json::Null) => 0.0,
+                Some(v) => v.as_f64().ok_or_else(|| err!("`noc_j` is not a number"))?,
+            },
             chip: chip_from_json(get(j, "chip")?)?,
         })
     }
@@ -807,6 +855,88 @@ mod tests {
         let bad = text.replacen("\"spike_encoding\":\"auto\"", "\"spike_encoding\":\"zip\"", 1);
         let e = EvalRequest::from_json_str(&bad).unwrap_err();
         assert!(e.to_string().contains("zip"), "{e}");
+    }
+
+    #[test]
+    fn chip_requests_round_trip_and_v3_documents_still_parse() {
+        let chip = crate::chip::ChipConfig {
+            mesh_rows: 2,
+            mesh_cols: 2,
+            noc: crate::chip::NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+            partitioning: crate::chip::Partitioning::ChannelWise,
+        };
+        let req = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        )
+        .with_chip(chip.clone());
+        let text = req.to_json().dumps();
+        let back = EvalRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(req, back);
+        assert_eq!(back.chip, Some(chip));
+
+        // A v3-shaped document: no `chip` key, explicit schema 3 — must
+        // parse as a single-core request.
+        let plain = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        );
+        let mut v3 = plain.to_json();
+        if let Json::Obj(m) = &mut v3 {
+            m.remove("chip");
+            m.insert("schema".into(), Json::Num(3.0));
+        }
+        let back = EvalRequest::from_json(&v3).unwrap();
+        assert_eq!(back.chip, None);
+        assert_eq!(back.model, plain.model);
+
+        // Bad partitioning keys and degenerate meshes are rejected.
+        let bad = text.replacen("\"partitioning\":\"channel\"", "\"partitioning\":\"ring\"", 1);
+        let e = EvalRequest::from_json_str(&bad).unwrap_err();
+        assert!(e.to_string().contains("ring"), "{e}");
+        let bad = text.replacen("\"mesh_rows\":2", "\"mesh_rows\":0", 1);
+        let e = EvalRequest::from_json_str(&bad).unwrap_err();
+        assert!(e.to_string().contains("degenerate"), "{e}");
+    }
+
+    #[test]
+    fn v3_result_totals_without_noc_parse_as_zero() {
+        // A result document whose `totals` predates `noc_j` must load
+        // with zero NoC energy rather than erroring.
+        let res = EvalResult {
+            schema: SCHEMA_VERSION,
+            model: "m".into(),
+            arch: "a".into(),
+            dataflow: "Advanced WS".into(),
+            activity: vec![0.75],
+            layers: Vec::new(),
+            overall_j: 1.0,
+            conv_mem_j: 0.5,
+            compute_j: 0.25,
+            cycles: 10,
+            noc_j: 0.125,
+            chip: ChipMetrics {
+                energy_j: 1.0,
+                cycles: 10,
+                time_s: 0.0,
+                power_w: 0.0,
+                peak_tops: 0.0,
+                achieved_tops: 0.0,
+                tops_per_w: 0.0,
+                area_mm2: 0.0,
+                memory_mb: 0.0,
+                utilization: 0.0,
+            },
+        };
+        let text = res.to_json().dumps();
+        let back = EvalResult::from_json_str(&text).unwrap();
+        assert_eq!(back.noc_j, 0.125);
+        let v3 = text.replacen("\"noc_j\":0.125,", "", 1);
+        assert_ne!(v3, text, "the replacement must have applied");
+        let back = EvalResult::from_json_str(&v3).unwrap();
+        assert_eq!(back.noc_j, 0.0);
     }
 
     #[test]

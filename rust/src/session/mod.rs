@@ -68,10 +68,16 @@ use crate::workload::{generate, LayerWorkload};
 
 /// Version of the `EvalRequest`/`EvalResult` JSON schema.
 ///
-/// * **v3** (current): requests may carry an optional `temporal`
-///   sparsity object (per-layer × per-timestep firing statistics) and a
-///   `spike_encoding` option (`"raw"`/`"auto"`). Both are optional on
-///   input, so v2 documents parse unchanged.
+/// * **v4** (current): requests may carry an optional `chip` object
+///   (mesh geometry, NoC energy rules, partitioning scheme) that
+///   evaluates the model on a multi-core chip of identical cores;
+///   results gain a `noc_j` total (inter-core NoC energy, `0` for
+///   single-core requests). Both are optional, so v3 documents parse
+///   unchanged.
+/// * **v3** (accepted on input): requests may carry an optional
+///   `temporal` sparsity object (per-layer × per-timestep firing
+///   statistics) and a `spike_encoding` option (`"raw"`/`"auto"`). Both
+///   are optional on input, so v2 documents parse unchanged.
 /// * **v2** (accepted on input): architectures carry a full `hierarchy`
 ///   object (N levels, per-level energy rule / capacity / residency),
 ///   and operand breakdowns report one energy entry per hierarchy level.
@@ -79,7 +85,7 @@ use crate::workload::{generate, LayerWorkload};
 ///   eight-macro `mem` list on architectures and `reg_j`/`sram_j`/
 ///   `dram_j` fields on operands. Parsed into the equivalent 3-level
 ///   hierarchy; see DESIGN.md for the compatibility rules.
-pub const SCHEMA_VERSION: u32 = 3;
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// Oldest input schema still parsed.
 pub const MIN_SCHEMA_VERSION: u32 = 1;
@@ -151,6 +157,12 @@ pub struct EvalRequest {
     /// Auto` additionally prices spike-map traffic through the
     /// event-stream model.
     pub temporal: Option<TemporalSparsity>,
+    /// Optional multi-core chip organization. When set, `arch` is the
+    /// per-core architecture: the model is partitioned across the
+    /// chip's cores ([`crate::chip::evaluate_chip`]) and inter-core
+    /// spike traffic is priced over the NoC (`noc_j` on the result).
+    /// `None` is the plain single-hierarchy evaluation.
+    pub chip: Option<crate::chip::ChipConfig>,
     pub options: EvalOptions,
 }
 
@@ -169,6 +181,7 @@ impl EvalRequest {
             dataflow: dataflow.into(),
             sparsity: SparsityProfile { source: "default".into(), per_layer: Vec::new() },
             temporal: None,
+            chip: None,
             options: EvalOptions::default(),
         }
     }
@@ -182,6 +195,13 @@ impl EvalRequest {
     /// scalar profile).
     pub fn with_temporal(mut self, temporal: TemporalSparsity) -> EvalRequest {
         self.temporal = Some(temporal);
+        self
+    }
+
+    /// Evaluate on a multi-core chip (`arch` becomes the per-core
+    /// architecture).
+    pub fn with_chip(mut self, chip: crate::chip::ChipConfig) -> EvalRequest {
+        self.chip = Some(chip);
         self
     }
 
@@ -258,6 +278,11 @@ impl EvalRequest {
         match self.options.spike_encoding {
             SpikeEncoding::Raw => key.push_str("kR;"),
             SpikeEncoding::Auto => key.push_str("kA;"),
+        }
+        match &self.chip {
+            // `c{rows}x{cols};…` cannot collide with the absent marker.
+            Some(c) => c.fingerprint_into(&mut key),
+            None => key.push_str("c-;"),
         }
         key
     }
@@ -459,11 +484,14 @@ pub struct EvalResult {
     /// Resolved per-compute-layer spike activity actually evaluated.
     pub activity: Vec<f64>,
     pub layers: Vec<LayerBreakdown>,
-    /// eq. (15) summed over layers.
+    /// eq. (15) summed over layers, plus `noc_j` for chip requests.
     pub overall_j: f64,
     pub conv_mem_j: f64,
     pub compute_j: f64,
     pub cycles: u64,
+    /// Inter-core NoC transfer energy (exactly `0` unless the request
+    /// carried a multi-core `chip`).
+    pub noc_j: f64,
     /// Derived chip metrics (power, TOPS, TOPS/W, area, utilization).
     pub chip: ChipMetrics,
 }
@@ -474,6 +502,7 @@ impl EvalResult {
         activity: Vec<f64>,
         layers: &[LayerEnergy],
         chip: ChipMetrics,
+        noc_j: f64,
     ) -> EvalResult {
         let level_names: Vec<String> =
             req.arch.hier.levels.iter().map(|l| l.name.clone()).collect();
@@ -485,11 +514,14 @@ impl EvalResult {
             arch: req.arch.label(),
             dataflow: req.label(),
             activity,
-            overall_j: breakdown.iter().map(|l| l.overall_j()).sum(),
+            // `sum + 0.0` is bit-exact for the non-negative layer sums,
+            // so single-core results stay pinned to the pre-chip path.
+            overall_j: breakdown.iter().map(|l| l.overall_j()).sum::<f64>() + noc_j,
             conv_mem_j: breakdown.iter().map(|l| l.conv_mem_j()).sum(),
             compute_j: breakdown.iter().map(|l| l.compute_j()).sum(),
             cycles: breakdown.iter().map(|l| l.cycles()).sum(),
             layers: breakdown,
+            noc_j,
             chip,
         }
     }
@@ -651,6 +683,35 @@ impl Inner {
             None => &req.sparsity.per_layer,
         };
         let wls = self.workloads_for(&req.model, rates, default_activity)?;
+        if let Some(chip) = &req.chip {
+            chip.validate().map_err(crate::util::error::Error::new)?;
+            let (Dataflow::Family(fam), None) = (req.dataflow, req.options.jitter_seed) else {
+                return Err(crate::util::error::Error::new(
+                    "chip evaluation applies to family templates \
+                     (no jitter, no mapper optimum)",
+                ));
+            };
+            if req.options.spike_encoding == SpikeEncoding::Auto {
+                let Some(temporal) = &req.temporal else {
+                    return Err(crate::util::error::Error::new(
+                        "spike_encoding=auto requires a temporal sparsity source",
+                    ));
+                };
+                temporal.validate()?;
+            }
+            let ev = crate::chip::evaluate_chip(
+                &wls,
+                fam,
+                &req.arch,
+                &self.cfg,
+                chip,
+                req.temporal.as_ref(),
+                req.options.spike_encoding,
+            );
+            let metrics = chip_metrics(&ev.layers, &req.arch, &self.cfg, &self.area);
+            let activity = wls.iter().map(|wl| wl.fp.activity).collect();
+            return Ok(EvalResult::from_layers(req, activity, &ev.layers, metrics, ev.noc_j));
+        }
         if req.options.spike_encoding == SpikeEncoding::Auto {
             let Some(temporal) = &req.temporal else {
                 return Err(crate::util::error::Error::new(
@@ -680,7 +741,7 @@ impl Inner {
                 .collect();
             let chip = chip_metrics(&layers, &req.arch, &self.cfg, &self.area);
             let activity = wls.iter().map(|wl| wl.fp.activity).collect();
-            return Ok(EvalResult::from_layers(req, activity, &layers, chip));
+            return Ok(EvalResult::from_layers(req, activity, &layers, chip, 0.0));
         }
         let layers: Vec<LayerEnergy> = match (req.dataflow, req.options.jitter_seed) {
             (Dataflow::Family(fam), None) => {
@@ -728,7 +789,7 @@ impl Inner {
         };
         let chip = chip_metrics(&layers, &req.arch, &self.cfg, &self.area);
         let activity = wls.iter().map(|wl| wl.fp.activity).collect();
-        Ok(EvalResult::from_layers(req, activity, &layers, chip))
+        Ok(EvalResult::from_layers(req, activity, &layers, chip, 0.0))
     }
 }
 
@@ -1062,6 +1123,115 @@ mod tests {
             assert!(!Arc::ptr_eq(&scalar, &temporal), "distinct cache entries");
             assert_eq!(*scalar, *temporal, "{}", fam.name());
             assert_eq!(scalar.overall_j.to_bits(), temporal.overall_j.to_bits());
+        }
+    }
+
+    /// The chip oracle: a 1-core chip with a zero-cost NoC must be
+    /// bit-identical to the plain single-hierarchy path — across
+    /// families, both partitioning schemes, and scalar / temporal /
+    /// auto-encoded activity sources.
+    #[test]
+    fn one_core_zero_noc_chip_is_bit_identical_to_the_plain_path() {
+        let session = Session::builder().threads(1).build();
+        let rate = 0.1 + 0.2;
+        let profiles: [(Option<crate::spike::TemporalSparsity>, crate::spike::SpikeEncoding); 3] = [
+            (None, crate::spike::SpikeEncoding::Raw),
+            (
+                Some(crate::spike::TemporalSparsity::constant(1, 6, rate)),
+                crate::spike::SpikeEncoding::Raw,
+            ),
+            (
+                Some(crate::spike::TemporalSparsity::constant(1, 6, rate)),
+                crate::spike::SpikeEncoding::Auto,
+            ),
+        ];
+        for fam in Family::ALL {
+            for (temporal, encoding) in &profiles {
+                let mut base = paper_request()
+                    .with_sparsity(SparsityProfile::nominal(1, rate))
+                    .with_spike_encoding(*encoding);
+                base.dataflow = Dataflow::Family(fam);
+                if let Some(t) = temporal {
+                    base = base.with_temporal(t.clone());
+                }
+                let plain = session.evaluate(&base).unwrap();
+                for p in crate::chip::Partitioning::ALL {
+                    let chip = crate::chip::ChipConfig {
+                        partitioning: p,
+                        ..crate::chip::ChipConfig::single()
+                    };
+                    let on_chip =
+                        session.evaluate(&base.clone().with_chip(chip)).unwrap();
+                    assert!(
+                        !Arc::ptr_eq(&plain, &on_chip),
+                        "chip requests must occupy their own cache entries"
+                    );
+                    assert_eq!(on_chip.noc_j, 0.0);
+                    assert_eq!(on_chip.layers, plain.layers, "{} {:?}", fam.name(), p);
+                    assert_eq!(
+                        on_chip.overall_j.to_bits(),
+                        plain.overall_j.to_bits(),
+                        "{} {:?} {:?}",
+                        fam.name(),
+                        p,
+                        encoding
+                    );
+                    assert_eq!(on_chip.cycles, plain.cycles);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_core_chip_adds_noc_energy() {
+        let session = Session::builder().threads(1).build();
+        let chip = crate::chip::ChipConfig {
+            mesh_rows: 2,
+            mesh_cols: 2,
+            noc: crate::chip::NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+            partitioning: crate::chip::Partitioning::ChannelWise,
+        };
+        let req = EvalRequest::new(
+            SnnModel::cifar100_snn(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        )
+        .with_chip(chip);
+        let res = session.evaluate(&req).unwrap();
+        assert!(res.noc_j > 0.0);
+        let layer_sum: f64 = res.layers.iter().map(|l| l.overall_j()).sum();
+        assert!((res.overall_j - layer_sum - res.noc_j).abs() < 1e-18);
+    }
+
+    #[test]
+    fn chip_rejects_mapper_and_jitter() {
+        let session = Session::builder().threads(1).build();
+        let chip = crate::chip::ChipConfig::single();
+        let mapper = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Dataflow::MapperOptimal,
+        )
+        .with_chip(chip.clone());
+        let err = session.evaluate(&mapper).unwrap_err();
+        assert!(err.to_string().contains("chip"), "{err}");
+        let jittered = paper_request()
+            .with_chip(chip)
+            .jittered(3, "Advanced WS~rand0".into());
+        assert!(session.evaluate(&jittered).is_err());
+    }
+
+    #[test]
+    fn cache_keys_fingerprint_the_chip() {
+        let a = paper_request();
+        let b = paper_request().with_chip(crate::chip::ChipConfig::single());
+        let mut c = paper_request().with_chip(crate::chip::ChipConfig::single());
+        c.chip.as_mut().unwrap().mesh_cols = 2;
+        let keys = [a.cache_key(), b.cache_key(), c.cache_key()];
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j]);
+            }
         }
     }
 

@@ -107,6 +107,18 @@ impl TrafficModel {
         self.rate * self.addr_bits as f64
     }
 
+    /// Bits moved per raster bit under `enc` — the same numbers the
+    /// per-boundary chooser compares. Inter-core NoC pricing
+    /// ([`crate::chip::noc`]) goes through this exact accessor so a
+    /// zero-hop NoC transfer is bit-identical to an intra-core boundary.
+    pub fn cost(&self, enc: Encoding) -> f64 {
+        match enc {
+            Encoding::Raw => self.raw_cost(),
+            Encoding::Rle => self.rle_cost(),
+            Encoding::Aer => self.aer_cost(),
+        }
+    }
+
     /// The cheapest encoding and its bits-per-raster-bit cost.
     pub fn best(&self) -> (Encoding, f64) {
         let mut enc = Encoding::Raw;

@@ -274,6 +274,36 @@ impl LayerWorkload {
     pub fn convs(&self) -> [&ConvWorkload; 3] {
         [&self.fp, &self.bp, &self.wg]
     }
+
+    /// The layer's output-channel count (`M` of the FP grid).
+    pub fn out_channels(&self) -> u64 {
+        self.fp.dims.get(Dim::M)
+    }
+
+    /// The same layer restricted to `m` of its output channels — the
+    /// per-core slice a channel-wise chip partition evaluates. The FP and
+    /// WG grids shrink along `M`, the BP grid along `C` (BP transposes
+    /// the channel dims, eq. 9), and the soma/grad unit work is
+    /// re-derived for the reduced output population with the same §III-D
+    /// bit accounting as [`generate`]. `m` equal to the full channel
+    /// count returns a workload identical to `self`.
+    pub fn with_out_channels(&self, m: u64) -> LayerWorkload {
+        let mut out = self.clone();
+        out.fp.dims.sizes[Dim::M.idx()] = m;
+        out.wg.dims.sizes[Dim::M.idx()] = m;
+        out.bp.dims.sizes[Dim::C.idx()] = m;
+        let d = &out.fp.dims;
+        let somas = d.get(Dim::N) * d.get(Dim::T) * m * d.get(Dim::P) * d.get(Dim::Q);
+        out.units = UnitWork {
+            soma_ops: somas,
+            grad_ops: somas,
+            soma_sram_bits: somas * (16 + 16 + 1 + 16 + 1 + 1),
+            soma_dram_bits: somas * (16 + 1 + 1),
+            grad_sram_bits: somas * (16 + 16 + 16 + 1 + 16 + 16),
+            grad_dram_bits: somas * (16 + 1 + 1),
+        };
+        out
+    }
 }
 
 /// Generate the training workload for every compute layer of `model`.
@@ -498,6 +528,30 @@ mod tests {
         let huge = SnnModel { timesteps: u32::MAX, batch: u32::MAX, ..big };
         let e = generate(&huge, &[], 0.5).unwrap_err();
         assert!(e.to_string().contains("overflow"), "{e}");
+    }
+
+    #[test]
+    fn channel_slice_full_width_is_identity() {
+        let wl = paper_wl();
+        let full = wl.with_out_channels(wl.out_channels());
+        assert_eq!(full.fp, wl.fp);
+        assert_eq!(full.bp, wl.bp);
+        assert_eq!(full.wg, wl.wg);
+        assert_eq!(full.units, wl.units);
+    }
+
+    #[test]
+    fn channel_slice_shrinks_the_right_dims() {
+        let wl = paper_wl();
+        let half = wl.with_out_channels(16);
+        assert_eq!(half.fp.dims.get(Dim::M), 16);
+        assert_eq!(half.wg.dims.get(Dim::M), 16);
+        // BP transposes M and C, so the slice lands on BP's C slot.
+        assert_eq!(half.bp.dims.get(Dim::C), 16);
+        assert_eq!(half.bp.dims.get(Dim::M), wl.bp.dims.get(Dim::M));
+        assert_eq!(half.fp.dims.get(Dim::C), wl.fp.dims.get(Dim::C));
+        assert_eq!(half.units.soma_ops, wl.units.soma_ops / 2);
+        assert_eq!(half.units.soma_sram_bits, wl.units.soma_sram_bits / 2);
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Chip-level integration pins.
+//!
+//! The chip subsystem's contract with the rest of the simulator, from
+//! the outside: the degenerate 1-core/zero-NoC chip is bit-identical to
+//! the plain single-hierarchy session path across every dataflow family
+//! and both scalar and temporal activity profiles; the shipped
+//! `configs/chip_*.toml` presets stay pinned to their documented
+//! organizations; and the architecture search runs a core-count axis
+//! through both strategies with deterministic checkpoint/resume.
+
+use eocas::arch::space::ArchSpace;
+use eocas::arch::Architecture;
+use eocas::chip::{ChipConfig, NocSpec, Partitioning};
+use eocas::config::chipfile;
+use eocas::dataflow::templates::Family;
+use eocas::dse::archsearch::{search, ArchSearchConfig, Strategy};
+use eocas::model::SnnModel;
+use eocas::session::{Dataflow, EvalRequest, Session};
+use eocas::sparsity::SparsityProfile;
+use eocas::spike::TemporalSparsity;
+use eocas::workload;
+
+fn config_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs").join(name)
+}
+
+/// The PR's oracle, end to end through the session: a 1-core chip with
+/// a free NoC must reproduce the plain (chip-less) evaluation
+/// bit-for-bit — families × partitionings × scalar/temporal profiles.
+#[test]
+fn one_core_zero_noc_chip_matches_the_plain_path_bitwise() {
+    let session = Session::builder().threads(2).build();
+    let model = SnnModel::cifar100_snn();
+    let arch = Architecture::paper_default();
+    let n_layers = workload::generate(&model, &[], 0.75).unwrap().len();
+    let temporal = TemporalSparsity::constant(n_layers, 6, 0.05);
+    for fam in Family::ALL {
+        for partitioning in Partitioning::ALL {
+            for use_temporal in [false, true] {
+                let base =
+                    EvalRequest::new(model.clone(), arch.clone(), Dataflow::Family(fam));
+                let base = if use_temporal {
+                    base.with_temporal(temporal.clone())
+                } else {
+                    base.with_sparsity(SparsityProfile::nominal(n_layers, 0.75))
+                };
+                let chip = ChipConfig { partitioning, ..ChipConfig::single() };
+                let plain = session.evaluate(&base.clone()).unwrap();
+                let chipped = session.evaluate(&base.with_chip(chip)).unwrap();
+                let tag = format!("{} {:?} temporal={use_temporal}", fam.name(), partitioning);
+                assert_eq!(chipped.noc_j, 0.0, "{tag}");
+                assert_eq!(
+                    chipped.overall_j.to_bits(),
+                    plain.overall_j.to_bits(),
+                    "{tag}: {} vs {}",
+                    chipped.overall_j,
+                    plain.overall_j
+                );
+                assert_eq!(chipped.compute_j.to_bits(), plain.compute_j.to_bits(), "{tag}");
+                assert_eq!(chipped.conv_mem_j.to_bits(), plain.conv_mem_j.to_bits(), "{tag}");
+                assert_eq!(chipped.cycles, plain.cycles, "{tag}");
+                assert_eq!(chipped.layers, plain.layers, "{tag}");
+            }
+        }
+    }
+}
+
+/// A multi-core chip with a priced NoC must differ from the oracle:
+/// strictly positive NoC energy folded into the total.
+#[test]
+fn multi_core_chips_price_their_noc_traffic_through_the_session() {
+    let session = Session::builder().threads(2).build();
+    let model = SnnModel::cifar100_snn();
+    let arch = Architecture::paper_default();
+    let base = EvalRequest::new(model, arch, Dataflow::Family(Family::AdvWs));
+    let plain = session.evaluate(&base.clone()).unwrap();
+    let chip = ChipConfig {
+        mesh_rows: 2,
+        mesh_cols: 2,
+        noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+        partitioning: Partitioning::LayerWise,
+    };
+    let chipped = session.evaluate(&base.with_chip(chip)).unwrap();
+    assert!(chipped.noc_j > 0.0);
+    assert!(
+        chipped.overall_j > plain.overall_j,
+        "a layer-wise split leaves per-layer compute intact, so the NoC is pure overhead"
+    );
+}
+
+#[test]
+fn shipped_chip_files_stay_pinned_to_their_organizations() {
+    let single = chipfile::load_chip(&config_path("chip_single.toml")).unwrap();
+    assert_eq!(single.chip, ChipConfig::single());
+    let mesh = chipfile::load_chip(&config_path("chip_mesh2x2.toml")).unwrap();
+    assert_eq!((mesh.chip.mesh_rows, mesh.chip.mesh_cols), (2, 2));
+    assert_eq!(mesh.chip.cores(), 4);
+    assert!(mesh.chip.noc.hop_pj_per_bit > 0.0);
+    assert!(mesh.chip.noc.router_pj_per_bit > 0.0);
+    // Both presets ship the same paper 28 nm core, so sweeps over them
+    // differ only in the chip organization.
+    assert_eq!(single.core, mesh.core);
+}
+
+fn multicore_space() -> ArchSpace {
+    let mut space = ArchSpace::paper();
+    space.name = "paper-multicore".into();
+    space.cores = vec![1, 4];
+    space.partitionings = vec![Partitioning::LayerWise, Partitioning::ChannelWise];
+    space.noc = NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 };
+    space
+}
+
+/// Acceptance: a space with a core-count axis runs exhaustive *and*
+/// annealing, and an interrupted annealing run resumes from its
+/// checkpoint to the bit-identical final result.
+#[test]
+fn core_count_spaces_search_and_resume_deterministically() {
+    let model = SnnModel::paper_layer();
+    let sparsity = SparsityProfile::nominal(1, 0.75);
+    let space = multicore_space();
+    let families = vec![Family::AdvWs];
+
+    let session = Session::builder().threads(2).build();
+    let exhaustive = search(
+        &session,
+        &model,
+        &sparsity,
+        &space,
+        &ArchSearchConfig {
+            strategy: Strategy::Exhaustive,
+            families: families.clone(),
+            ..ArchSearchConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(exhaustive.complete);
+    // 4 single-core points + 4 points × (4 cores × 2 partitionings),
+    // minus the 4 single-core/channel-wise coordinates (unused axis).
+    assert_eq!(exhaustive.evaluated, 12);
+    let eb = exhaustive.best.as_ref().unwrap();
+    assert!(eb.energy_j > 0.0);
+
+    let anneal = Strategy::Annealing { iters: 10, restarts: 2, t0: 0.08, cooling: 0.9 };
+    let full = search(
+        &session,
+        &model,
+        &sparsity,
+        &space,
+        &ArchSearchConfig {
+            strategy: anneal.clone(),
+            families: families.clone(),
+            ..ArchSearchConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(full.complete);
+
+    // Interrupt after 4 scored candidates, then resume to completion.
+    let dir = std::env::temp_dir().join(format!("eocas_chip_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("anneal.ckpt.json");
+    let _ = std::fs::remove_file(&ck);
+    let partial_cfg = ArchSearchConfig {
+        strategy: anneal.clone(),
+        families: families.clone(),
+        limit: Some(4),
+        checkpoint: Some(ck.clone()),
+        ..ArchSearchConfig::default()
+    };
+    let partial = search(&session, &model, &sparsity, &space, &partial_cfg).unwrap();
+    assert!(!partial.complete);
+    assert!(ck.exists());
+    let resumed_cfg = ArchSearchConfig {
+        strategy: anneal,
+        families,
+        checkpoint: Some(ck.clone()),
+        ..ArchSearchConfig::default()
+    };
+    let resumed = search(&session, &model, &sparsity, &space, &resumed_cfg).unwrap();
+    assert!(resumed.complete);
+    assert_eq!(resumed.evaluated, full.evaluated);
+    let rb = resumed.best.as_ref().unwrap();
+    let fb = full.best.as_ref().unwrap();
+    assert_eq!(rb.coords, fb.coords);
+    assert_eq!(rb.dataflow, fb.dataflow);
+    assert_eq!(rb.energy_j.to_bits(), fb.energy_j.to_bits());
+    assert_eq!(resumed.frontier, full.frontier);
+    let _ = std::fs::remove_file(&ck);
+    let _ = std::fs::remove_dir(&dir);
+}
