@@ -1,0 +1,257 @@
+//! Bench: the `eocas serve` daemon — request throughput over the NDJSON
+//! line protocol, cold (cache-miss) vs warm (cache-hit), plus a
+//! survival drill that feeds the running daemon hostile input and
+//! checks it still answers bit-identically to a direct `Session`.
+//!
+//! Measures, and emits as machine-readable `BENCH_serve.json`:
+//! * `cases.cold_rps` / `cases.warm_rps` — single-client round-trip
+//!   throughput against a live daemon on the loopback interface,
+//! * headline ratios for the CI regression gate:
+//!   `speedup.warm_vs_cold` — warm throughput over cold throughput
+//!   (the serving stack's result cache at work; a regression here means
+//!   served requests stopped hitting the cache) — and
+//!   `quality.survival` — 1.0 iff, after absorbing malformed frames, an
+//!   oversized frame, a panicking evaluation and a shedding burst, the
+//!   daemon's answer to a fresh request is bit-identical to a fresh
+//!   in-process `Session` (0.0 otherwise),
+//! * info numbers (never gated): observed shed count, served p50/p99
+//!   latency from `/stats`, and the result-cache hit counters.
+//!
+//! Flags: `--quick` (CI smoke mode: short timing windows),
+//! `--json PATH` (default `BENCH_serve.json`).
+
+use std::time::Duration;
+
+use eocas::arch::Architecture;
+use eocas::dataflow::templates::Family;
+use eocas::model::SnnModel;
+use eocas::serve::client::Client;
+use eocas::serve::{ServeConfig, Server, FAULT_INJECTION_LABEL};
+use eocas::session::{Dataflow, EvalRequest, Session};
+use eocas::util::bench::{black_box, time_it, BenchStats};
+use eocas::util::json::Json;
+
+struct Case {
+    key: &'static str,
+    stats: BenchStats,
+}
+
+impl Case {
+    fn per_s(&self) -> f64 {
+        1e9 / self.stats.mean_ns
+    }
+}
+
+fn emit(
+    cases: &[Case],
+    speedups: &[(&str, f64)],
+    qualities: &[(&str, f64)],
+    info: &[(&str, f64)],
+    quick: bool,
+    path: &str,
+) {
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0)).set("quick", Json::Bool(quick));
+    let mut jcases = Json::obj();
+    for c in cases {
+        let mut j = Json::obj();
+        j.set("mean_ns", Json::Num(c.stats.mean_ns))
+            .set("p50_ns", Json::Num(c.stats.p50_ns))
+            .set("p95_ns", Json::Num(c.stats.p95_ns))
+            .set("iters", Json::Num(c.stats.iters as f64))
+            .set("requests_per_s", Json::Num(c.per_s()));
+        jcases.set(c.key, j);
+    }
+    doc.set("cases", jcases);
+    let mut js = Json::obj();
+    for (k, v) in speedups {
+        js.set(k, Json::Num(*v));
+    }
+    doc.set("speedup", js);
+    let mut jq = Json::obj();
+    for (k, v) in qualities {
+        jq.set(k, Json::Num(*v));
+    }
+    doc.set("quality", jq);
+    for (k, v) in info {
+        doc.set(k, Json::Num(*v));
+    }
+    match std::fs::write(path, format!("{}\n", doc.dumps())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+fn req_with_activity(act: f64) -> EvalRequest {
+    EvalRequest::new(SnnModel::paper_layer(), Architecture::paper_default(), Family::AdvWs)
+        .with_activity(act)
+}
+
+/// The timing workload: a mapper-optimal request — expensive when cold
+/// (a full schedule search), so the cold/warm ratio isolates the result
+/// cache rather than protocol noise.
+fn mapper_req(act: f64) -> EvalRequest {
+    EvalRequest::new(
+        SnnModel::paper_layer(),
+        Architecture::paper_default(),
+        Dataflow::MapperOptimal,
+    )
+    .with_activity(act)
+}
+
+/// Hit the daemon with every failure class the serve layer isolates;
+/// return the observed shed count (info only — timing-dependent).
+fn survival_drill(addr: &str) -> f64 {
+    // Broken clients: garbage frames on their own connections.
+    for line in ["not json", "{]", "{\"schema\":999}"] {
+        if let Ok(mut c) = Client::connect(addr, Duration::from_secs(10)) {
+            let _ = c.roundtrip(line);
+        }
+    }
+    // An oversized frame (the server refuses and hangs up mid-flood).
+    if let Ok(mut c) = Client::connect(addr, Duration::from_secs(10)) {
+        let _ = c.roundtrip(&"z".repeat(8 << 20));
+    }
+    // A panicking evaluation, contained by the session's catch_unwind.
+    if let Ok(mut c) = Client::connect(addr, Duration::from_secs(30)) {
+        let mut req = req_with_activity(0.515);
+        req.options.label = Some(FAULT_INJECTION_LABEL.into());
+        let _ = c.evaluate(&req);
+    }
+    // A shedding burst: concurrent cold mapper searches racing into the
+    // admission queue; count in-protocol `overloaded` refusals.
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let req = EvalRequest::new(
+                    SnnModel::paper_layer(),
+                    Architecture::paper_default(),
+                    Dataflow::MapperOptimal,
+                )
+                .with_activity(0.41 + 0.001 * i as f64);
+                let mut c = Client::connect(&addr, Duration::from_secs(120)).ok()?;
+                c.evaluate(&req).ok()
+            })
+        })
+        .collect();
+    let mut shed = 0.0;
+    for h in handles {
+        if let Ok(Some(resp)) = h.join() {
+            if resp.get("kind").and_then(Json::as_str) == Some("overloaded") {
+                shed += 1.0;
+            }
+        }
+    }
+    shed
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_serve.json".to_string());
+    let w = if quick { 0.05 } else { 1.0 };
+
+    // A daemon on an ephemeral loopback port, sized so the shedding
+    // burst in the survival drill can actually observe backpressure.
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_cap: 2,
+        batch_max: 1,
+        fault_injection: true,
+        ..ServeConfig::default()
+    };
+    let server = Server::start(cfg).expect("start serve daemon");
+    let addr = server.addr().to_string();
+    println!("daemon on {addr}");
+    let mut client = Client::connect(&addr, Duration::from_secs(120)).expect("connect");
+
+    let mut cases: Vec<Case> = Vec::new();
+    let mut push = |key: &'static str, stats: BenchStats| {
+        println!("{}", stats.report());
+        println!("  => {:.0} requests/s\n", 1e9 / stats.mean_ns);
+        cases.push(Case { key, stats });
+    };
+
+    // Cold: every request is new to the daemon (fresh activity value),
+    // so each round-trip pays a full mapper schedule search.
+    let mut next = 0u64;
+    let cold = time_it("serve cold round-trip (mapper search, NDJSON)", 2, w, || {
+        next += 1;
+        let req = mapper_req(0.25 + next as f64 * 1e-9);
+        black_box(client.evaluate(&req).expect("cold evaluate"));
+    });
+    push("cold", cold);
+
+    // Warm: the same request over and over — the daemon answers from
+    // its result cache, so this times the protocol + cache path.
+    let warm_req = mapper_req(0.75);
+    client.evaluate(&warm_req).expect("prime the cache");
+    let warm = time_it("serve warm round-trip (cache hit, NDJSON)", 2, w, || {
+        black_box(client.evaluate(&warm_req).expect("warm evaluate"));
+    });
+    push("warm", warm);
+
+    let warm_vs_cold = cases[0].stats.mean_ns / cases[1].stats.mean_ns;
+    println!("warm_vs_cold: {warm_vs_cold:.2}x\n");
+
+    // The survival drill, then the verdict: does the abused daemon still
+    // answer bit-identically to a fresh in-process session?
+    let shed = survival_drill(&addr);
+    println!("survival drill: {shed:.0} requests shed under burst");
+    let probe = req_with_activity(0.625);
+    let oracle = Session::builder().threads(1).build().evaluate(&probe).expect("oracle");
+    let mut fresh = Client::connect(&addr, Duration::from_secs(120)).expect("reconnect");
+    let survival = match fresh.evaluate(&probe).ok().as_ref().and_then(|r| Client::decode(r).ok())
+    {
+        Some(served) if served == *oracle => 1.0,
+        Some(_) => {
+            eprintln!("survival FAILED: served result diverged from the oracle");
+            0.0
+        }
+        None => {
+            eprintln!("survival FAILED: daemon did not answer after the drill");
+            0.0
+        }
+    };
+    println!("survival: {survival:.0}");
+
+    // Served latency + cache counters from the daemon's own ledger.
+    let stats = fresh.stats().ok().unwrap_or_else(Json::obj);
+    let num = |path: &[&str]| -> f64 {
+        let mut at = &stats;
+        for k in path {
+            match at.get(k) {
+                Some(v) => at = v,
+                None => return -1.0,
+            }
+        }
+        at.as_f64().unwrap_or(-1.0)
+    };
+    println!(
+        "served p50 {:.0} us, p99 {:.0} us; result cache {} hits / {} misses",
+        num(&["latency", "p50_us"]),
+        num(&["latency", "p99_us"]),
+        num(&["cache", "result_hits"]),
+        num(&["cache", "result_misses"]),
+    );
+    emit(
+        &cases,
+        &[("warm_vs_cold", warm_vs_cold)],
+        &[("survival", survival)],
+        &[
+            ("shed_observed", shed),
+            ("served_p50_us", num(&["latency", "p50_us"])),
+            ("served_p99_us", num(&["latency", "p99_us"])),
+            ("result_cache_hits", num(&["cache", "result_hits"])),
+            ("result_cache_misses", num(&["cache", "result_misses"])),
+        ],
+        quick,
+        &json_path,
+    );
+    server.stop();
+}

@@ -563,8 +563,11 @@ impl<'a> Run<'a> {
                 Json::Arr(self.frontier.iter().map(point_json).collect()),
             );
         // Write-then-rename so a crash mid-write can never truncate the
-        // checkpoint the next run needs to resume from.
-        let tmp = path.with_extension("tmp");
+        // checkpoint the next run needs to resume from. The tmp name is
+        // per-process: a stale artifact left by a killed run (or a
+        // concurrent search on the same path) can never be picked up by
+        // this run's rename.
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
         std::fs::write(&tmp, format!("{}\n", doc.dumps()))
             .map_err(|e| err!("write checkpoint {}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, path)
@@ -1095,6 +1098,81 @@ mod tests {
         // the same result.
         let again = search(&session, &model, &sparsity, &space, &resume_cfg).unwrap();
         assert_eq!(again, full);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn interrupted_write_artifacts_never_corrupt_resume() {
+        // Model a run killed mid-checkpoint: a stale, truncated tmp file
+        // sits next to the (intact) checkpoint. The write-then-rename
+        // protocol with per-process tmp names must ignore it — resume
+        // stays bit-identical and never reads the artifact.
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_tmp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("search.json");
+        let space = ArchSpace::reference();
+        let base = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            batch: 1,
+            checkpoint_every: 1,
+            ..ArchSearchConfig::default()
+        };
+        let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+        let partial_cfg = ArchSearchConfig {
+            limit: Some(5),
+            checkpoint: Some(ck.clone()),
+            ..base.clone()
+        };
+        assert!(!search(&session, &model, &sparsity, &space, &partial_cfg)
+            .unwrap()
+            .complete);
+        // Plant crash artifacts: the legacy shared tmp name and an
+        // alien process's tmp, both truncated garbage.
+        let stale = ck.with_extension("tmp");
+        std::fs::write(&stale, "{\"schema\":3,\"trunc").unwrap();
+        let alien = ck.with_extension("tmp.99999999");
+        std::fs::write(&alien, "{").unwrap();
+        let resume_cfg = ArchSearchConfig { checkpoint: Some(ck.clone()), ..base };
+        let resumed = search(&session, &model, &sparsity, &space, &resume_cfg).unwrap();
+        assert!(resumed.complete);
+        assert_eq!(resumed, full, "stale tmp artifacts must not affect resume");
+        // The artifacts are inert — still exactly the garbage we wrote.
+        assert_eq!(std::fs::read_to_string(&stale).unwrap(), "{\"schema\":3,\"trunc");
+        assert_eq!(std::fs::read_to_string(&alien).unwrap(), "{");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_checkpoints_error_cleanly_and_fresh_recovers() {
+        // A checkpoint truncated by the filesystem (power loss, full
+        // disk) must produce a clean error naming the file — never a
+        // panic, never a silently wrong resume — and `--fresh`
+        // (resume=false) must recover by ignoring it.
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("broken.json");
+        std::fs::write(&ck, "{\"schema\":3,\"fingerprint\":\"x\",\"eval").unwrap();
+        let space = ArchSpace::reference();
+        let cfg = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            checkpoint: Some(ck.clone()),
+            ..ArchSearchConfig::default()
+        };
+        let err = search(&session, &model, &sparsity, &space, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checkpoint"), "{err}");
+        // --fresh ignores the corpse and completes (rewriting it).
+        let fresh = ArchSearchConfig { resume: false, ..cfg.clone() };
+        let res = search(&session, &model, &sparsity, &space, &fresh).unwrap();
+        assert!(res.complete);
+        // The recovered run replaced the corpse with a valid checkpoint.
+        let reread = search(&session, &model, &sparsity, &space, &cfg).unwrap();
+        assert_eq!(reread, res);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -47,6 +47,7 @@ pub mod perfmodel;
 pub mod report;
 pub mod reuse;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sim;
 pub mod sparsity;

@@ -39,6 +39,7 @@ use eocas::err;
 use eocas::model::SnnModel;
 use eocas::report::{self, ReportCtx};
 use eocas::runtime::Runtime;
+use eocas::serve::{self, ServeConfig};
 use eocas::session::{Dataflow, EvalRequest, Session};
 use eocas::sparsity::SparsityProfile;
 use eocas::spike::{self, LifConfig, SpikeEncoding, TemporalSparsity};
@@ -93,6 +94,17 @@ USAGE:
                   and therefore requires `--checkpoint`)
   eocas train    [--steps N] [--lr X] [--seed N] [--log PATH]
   eocas pipeline [--steps N] [--out DIR] [--reuse] [--threads N]
+  eocas serve    [--addr HOST:PORT] [--threads N] [--queue-cap N]
+                 [--batch-max N] [--deadline-ms N] [--io-timeout-ms N]
+                 [--max-body-bytes N] [--max-connections N]
+                 [--max-cached-results N] [--max-result-mb N]
+                 [--stats-every SECS] [--fault-injection] [--config PATH]
+                 (long-lived evaluation daemon: NDJSON request-per-line
+                  and single-shot HTTP — POST /evaluate, GET /stats,
+                  GET /healthz — on one port, multiplexing all clients
+                  onto one bounded-cache session; see DESIGN.md §14)
+  eocas serve-stats --addr HOST:PORT [--json]
+                 (fetch and render a running daemon's /stats)
 
 Flags take values as `--key value` or `--key=value`; a flag with no value
 is boolean true. Repeating a flag is an error.
@@ -789,6 +801,76 @@ fn run(args: &[String]) -> Result<()> {
                 outcome.best_energy_j * 1e6,
                 outcome.report_files.len()
             );
+            Ok(())
+        }
+        "serve" => {
+            let d = ServeConfig::default();
+            let cfg = ServeConfig {
+                addr: flags.get("addr").cloned().unwrap_or(d.addr),
+                threads: parse_num(&flags, "threads", 0usize)?,
+                queue_cap: parse_num(&flags, "queue-cap", d.queue_cap)?,
+                batch_max: parse_num(&flags, "batch-max", d.batch_max)?,
+                deadline: std::time::Duration::from_millis(parse_num(
+                    &flags,
+                    "deadline-ms",
+                    d.deadline.as_millis() as u64,
+                )?),
+                io_timeout: std::time::Duration::from_millis(parse_num(
+                    &flags,
+                    "io-timeout-ms",
+                    d.io_timeout.as_millis() as u64,
+                )?),
+                max_body_bytes: parse_num(&flags, "max-body-bytes", d.max_body_bytes)?,
+                max_connections: parse_num(&flags, "max-connections", d.max_connections)?,
+                max_cached_results: parse_num(
+                    &flags,
+                    "max-cached-results",
+                    d.max_cached_results,
+                )?,
+                max_result_bytes: parse_num(
+                    &flags,
+                    "max-result-mb",
+                    d.max_result_bytes >> 20,
+                )? << 20,
+                fault_injection: flags.contains_key("fault-injection"),
+            };
+            let stats_every = parse_num(&flags, "stats-every", 0u64)?;
+            // Built here (not via Server::start) so --config applies.
+            let mut builder = Session::builder()
+                .energy_config(energy_config(&flags)?)
+                .threads(cfg.threads)
+                .max_cached_results(cfg.max_cached_results)
+                .max_result_bytes(cfg.max_result_bytes);
+            if cfg.fault_injection {
+                builder = builder.fault_injection_label(serve::FAULT_INJECTION_LABEL);
+            }
+            let server = serve::Server::start_with_session(cfg, builder.build())?;
+            println!(
+                "eocas serve listening on {} (NDJSON lines or HTTP: \
+                 POST /evaluate, GET /stats, GET /healthz)",
+                server.addr()
+            );
+            if stats_every > 0 {
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(stats_every));
+                    print!("{}", report::table_serve_stats(&server.stats_json()).render());
+                }
+            }
+            server.run();
+            Ok(())
+        }
+        "serve-stats" => {
+            let addr = flags
+                .get("addr")
+                .ok_or_else(|| err!("serve-stats needs --addr HOST:PORT"))?;
+            let mut client =
+                serve::client::Client::connect(addr, std::time::Duration::from_secs(5))?;
+            let doc = client.stats()?;
+            if flags.contains_key("json") {
+                println!("{}", doc.dumps());
+                return Ok(());
+            }
+            print!("{}", report::table_serve_stats(&doc).render());
             Ok(())
         }
         other => {

@@ -499,7 +499,60 @@ pub fn table_chip(chip_name: &str, rows: &[(u32, Arc<EvalResult>)]) -> Table {
     t
 }
 
-/// Fig. 5: candidate architectures spread over energy intervals.
+/// Render a serve daemon's `/stats` document (`eocas serve-stats`, the
+/// `--stats-every` ticker). Tolerates missing keys — a newer daemon's
+/// document renders whatever rows it has — so the CLI and the server
+/// can be upgraded independently.
+pub fn table_serve_stats(doc: &crate::util::json::Json) -> Table {
+    let num = |path: &[&str]| -> Option<f64> {
+        let mut at = doc;
+        for k in path {
+            at = at.get(k)?;
+        }
+        at.as_f64()
+    };
+    let fmt_count = |v: Option<f64>| v.map(|x| format!("{x:.0}")).unwrap_or("-".into());
+    let uptime = num(&["uptime_s"]).unwrap_or(0.0);
+    let mut t = Table::new(
+        format!("eocas serve: stats after {uptime:.0} s"),
+        &["metric", "value"],
+    )
+    .aligns(&[Align::Left, Align::Right]);
+    for (label, path) in [
+        ("requests received", &["requests", "received"] as &[&str]),
+        ("ok", &["requests", "ok"]),
+        ("eval errors", &["requests", "eval_errors"]),
+        ("eval panics (caught)", &["requests", "panics"]),
+        ("malformed", &["requests", "malformed"]),
+        ("too large", &["requests", "too_large"]),
+        ("shed (overloaded)", &["requests", "shed"]),
+        ("deadline exceeded", &["requests", "deadline_exceeded"]),
+        ("client disconnects", &["requests", "disconnects"]),
+        ("connections refused", &["requests", "rejected_conns"]),
+        ("queue depth", &["queue", "depth"]),
+        ("queue capacity", &["queue", "capacity"]),
+        ("batches dispatched", &["queue", "batches"]),
+        ("latency samples", &["latency", "count"]),
+        ("result cache entries", &["cache", "result_entries"]),
+        ("result cache evictions", &["cache", "result_evictions"]),
+    ] {
+        t.add_row(vec![label.to_string(), fmt_count(num(path))]);
+    }
+    for (label, path, scale, unit) in [
+        ("p50 latency", &["latency", "p50_us"] as &[&str], 1e-3, "ms"),
+        ("p99 latency", &["latency", "p99_us"], 1e-3, "ms"),
+        ("result cache bytes", &["cache", "result_bytes"], 1.0 / (1 << 20) as f64, "MiB"),
+    ] {
+        let v = num(path).map(|x| format!("{:.2} {unit}", x * scale)).unwrap_or("-".into());
+        t.add_row(vec![label.to_string(), v]);
+    }
+    if let Some(rate) = num(&["cache", "result_hit_rate"]) {
+        t.add_row(vec!["result cache hit rate".into(), format!("{:.1}%", rate * 100.0)]);
+    }
+    t
+}
+
+///// Fig. 5: candidate architectures spread over energy intervals.
 /// Returns (table of all candidates, histogram text).
 pub fn fig5_energy_intervals(ctx: &ReportCtx, samples: usize) -> (Table, String) {
     let dse_cfg = DseConfig { random_samples: samples, ..Default::default() };

@@ -1,0 +1,89 @@
+//! Minimal NDJSON client for `eocas serve`.
+//!
+//! Shared by the integration tests, the serving benchmark and the CLI
+//! (`eocas serve-probe`); it speaks the persistent line protocol only —
+//! single-shot HTTP is for curl and load balancers, not for this crate.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::session::{EvalRequest, EvalResult};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// One persistent NDJSON connection to a serve daemon.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect with a socket read/write timeout (also the cap on how
+    /// long any single [`Client::roundtrip`] blocks).
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| crate::err!("connect {addr}: {e}"))?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Send one line, read one line, parse it. `line` must not contain
+    /// a newline ([`Json::dumps`] never emits one).
+    pub fn roundtrip(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf)?;
+        if n == 0 {
+            return Err(crate::err!("server closed the connection"));
+        }
+        Json::parse(buf.trim_end())
+            .map_err(|e| crate::err!("response JSON: {e}"))
+    }
+
+    /// Evaluate with the server's default deadline.
+    pub fn evaluate(&mut self, req: &EvalRequest) -> Result<Json> {
+        self.roundtrip(&req.to_json().dumps())
+    }
+
+    /// Evaluate with an explicit per-request deadline.
+    pub fn evaluate_with_deadline(&mut self, req: &EvalRequest, deadline_ms: u64) -> Result<Json> {
+        let mut env = Json::obj();
+        env.set("request", req.to_json())
+            .set("deadline_ms", Json::Num(deadline_ms as f64));
+        self.roundtrip(&env.dumps())
+    }
+
+    /// Fetch the `/stats` document over the line protocol.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip("{\"op\":\"stats\"}")
+    }
+
+    pub fn ping(&mut self) -> Result<Json> {
+        self.roundtrip("{\"op\":\"ping\"}")
+    }
+
+    /// Decode an evaluation response line: the result on `"ok"`, the
+    /// server's `kind: message` as an error otherwise.
+    pub fn decode(resp: &Json) -> Result<EvalResult> {
+        match resp.get("status").and_then(Json::as_str) {
+            Some("ok") => {
+                let result = resp
+                    .get("result")
+                    .ok_or_else(|| crate::err!("ok response without a result"))?;
+                EvalResult::from_json(result)
+            }
+            Some("error") => {
+                let kind = resp.get("kind").and_then(Json::as_str).unwrap_or("unknown");
+                let msg = resp.get("error").and_then(Json::as_str).unwrap_or("");
+                Err(crate::err!("{kind}: {msg}"))
+            }
+            _ => Err(crate::err!("unrecognized response: {}", resp.dumps())),
+        }
+    }
+}

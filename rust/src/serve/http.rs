@@ -1,0 +1,335 @@
+//! Wire framing for `eocas serve`: newline-delimited JSON with a
+//! hand-rolled HTTP/1.1 subset on the same port.
+//!
+//! No external HTTP crate exists in the offline vendor set, and the
+//! daemon needs only a sliver of the protocol: `POST /evaluate`,
+//! `GET /stats`, `GET /healthz`, one response per request,
+//! `connection: close`. Everything here is defensive — every read is
+//! byte-capped, header counts are bounded, and content lengths are
+//! checked against the cap *before* the body is read, so a hostile or
+//! broken client can cost at most `max_bytes` of memory and one
+//! connection slot, never the process.
+//!
+//! Protocol auto-detection: the first line of a connection decides. A
+//! line starting with an HTTP method verb (`GET `, `POST `, …) is
+//! parsed as an HTTP request (and the connection closes after one
+//! response); anything else is treated as one NDJSON request per line
+//! on a persistent connection. JSON documents cannot begin with an
+//! ASCII verb-plus-space, so the detection is unambiguous.
+
+use std::io::{BufRead, Read, Write};
+
+/// One parsed inbound frame.
+#[derive(Debug)]
+pub enum Frame {
+    /// A parsed HTTP request (connection closes after the response).
+    Http {
+        method: String,
+        path: String,
+        /// Per-request deadline override from an `x-deadline-ms` header.
+        deadline_ms: Option<u64>,
+        body: Vec<u8>,
+    },
+    /// One newline-delimited JSON line (newline stripped, bytes as-is —
+    /// UTF-8 validation happens at the JSON layer so the error can be
+    /// answered in-protocol).
+    Line(Vec<u8>),
+    /// Clean end of stream.
+    Eof,
+}
+
+/// Framing-level failures, each mapped to a protocol response (or a
+/// disconnect) by the connection loop.
+#[derive(Debug)]
+pub enum FrameError {
+    /// A line or declared body larger than the configured cap.
+    TooLarge,
+    /// Structurally invalid HTTP (bad request line, header flood, …).
+    Bad(String),
+    /// Socket error. `mid_frame` is true when bytes of the frame had
+    /// already been consumed — a stalled or vanished client — and false
+    /// for an idle-timeout tick between frames.
+    Io { error: std::io::Error, mid_frame: bool },
+}
+
+impl FrameError {
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            FrameError::Io { error, .. }
+                if matches!(
+                    error.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                )
+        )
+    }
+}
+
+/// Headers beyond this are a client bug or an attack; either way the
+/// request is refused.
+pub const MAX_HEADERS: usize = 64;
+
+/// Cap for any single header/request line, independent of the body cap.
+const MAX_LINE: usize = 8 * 1024;
+
+const HTTP_VERBS: [&str; 7] = ["GET ", "POST ", "HEAD ", "PUT ", "DELETE ", "OPTIONS ", "PATCH "];
+
+fn looks_like_http(line: &[u8]) -> bool {
+    HTTP_VERBS.iter().any(|v| line.starts_with(v.as_bytes()))
+}
+
+/// Read one `\n`-terminated line, refusing lines longer than `cap`
+/// bytes. `Ok(None)` is clean EOF before any byte of a new line.
+fn read_line_capped(
+    r: &mut impl BufRead,
+    cap: usize,
+) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut buf = Vec::new();
+    // `cap + 1`: one extra byte so "exactly cap bytes then newline" is
+    // distinguishable from "still no newline at the cap".
+    match r.take(cap as u64 + 1).read_until(b'\n', &mut buf) {
+        Ok(0) => Ok(None),
+        Ok(_) => {
+            if buf.last() == Some(&b'\n') {
+                buf.pop();
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                Ok(Some(buf))
+            } else if buf.len() > cap {
+                Err(FrameError::TooLarge)
+            } else {
+                // EOF-terminated final line without a newline.
+                Ok(Some(buf))
+            }
+        }
+        Err(error) => Err(FrameError::Io { error, mid_frame: !buf.is_empty() }),
+    }
+}
+
+/// Read the next frame off a connection. `max_bytes` caps both NDJSON
+/// lines and HTTP bodies.
+pub fn read_frame(r: &mut impl BufRead, max_bytes: usize) -> Result<Frame, FrameError> {
+    let first = match read_line_capped(r, max_bytes.max(MAX_LINE))? {
+        None => return Ok(Frame::Eof),
+        Some(line) => line,
+    };
+    if !looks_like_http(&first) {
+        return Ok(Frame::Line(first));
+    }
+    let start = String::from_utf8(first)
+        .map_err(|_| FrameError::Bad("request line is not UTF-8".into()))?;
+    let mut parts = start.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| FrameError::Bad("request line has no path".into()))?
+        .to_string();
+    match parts.next() {
+        Some(v) if v.starts_with("HTTP/1.") => {}
+        other => return Err(FrameError::Bad(format!("bad HTTP version {other:?}"))),
+    }
+
+    let mut content_length = 0usize;
+    let mut deadline_ms = None;
+    for n in 0.. {
+        if n >= MAX_HEADERS {
+            return Err(FrameError::Bad(format!("more than {MAX_HEADERS} headers")));
+        }
+        let line = match read_line_capped(r, MAX_LINE) {
+            Ok(Some(line)) => line,
+            Ok(None) => {
+                return Err(FrameError::Io {
+                    error: std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed inside headers",
+                    ),
+                    mid_frame: true,
+                })
+            }
+            Err(FrameError::Io { error, .. }) => {
+                return Err(FrameError::Io { error, mid_frame: true })
+            }
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            break; // blank line: end of headers
+        }
+        let line = String::from_utf8(line)
+            .map_err(|_| FrameError::Bad("header is not UTF-8".into()))?;
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(FrameError::Bad(format!("malformed header {line:?}")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse::<usize>()
+                    .map_err(|_| FrameError::Bad(format!("bad content-length {value:?}")))?;
+                if content_length > max_bytes {
+                    // Refuse by the *declared* length: never buffer first.
+                    return Err(FrameError::TooLarge);
+                }
+            }
+            "x-deadline-ms" => {
+                deadline_ms = Some(value.parse::<u64>().map_err(|_| {
+                    FrameError::Bad(format!("bad x-deadline-ms {value:?}"))
+                })?);
+            }
+            _ => {} // ignore everything else (host, user-agent, …)
+        }
+    }
+
+    let mut body = Vec::with_capacity(content_length.min(64 * 1024));
+    if content_length > 0 {
+        match r.take(content_length as u64).read_to_end(&mut body) {
+            Ok(n) if n == content_length => {}
+            Ok(_) => {
+                return Err(FrameError::Io {
+                    error: std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed inside body",
+                    ),
+                    mid_frame: true,
+                })
+            }
+            Err(error) => return Err(FrameError::Io { error, mid_frame: true }),
+        }
+    }
+    Ok(Frame::Http { method, path, deadline_ms, body })
+}
+
+/// Write a complete `connection: close` HTTP response.
+pub fn write_http_response(
+    w: &mut impl Write,
+    code: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {code} {reason}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame(input: &[u8]) -> Result<Frame, FrameError> {
+        read_frame(&mut Cursor::new(input.to_vec()), 1024)
+    }
+
+    #[test]
+    fn ndjson_lines_pass_through() {
+        let mut r = Cursor::new(b"{\"a\":1}\n{\"b\":2}\n".to_vec());
+        match read_frame(&mut r, 1024).unwrap() {
+            Frame::Line(l) => assert_eq!(l, b"{\"a\":1}"),
+            other => panic!("expected line, got {other:?}"),
+        }
+        match read_frame(&mut r, 1024).unwrap() {
+            Frame::Line(l) => assert_eq!(l, b"{\"b\":2}"),
+            other => panic!("expected line, got {other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r, 1024).unwrap(), Frame::Eof));
+    }
+
+    #[test]
+    fn crlf_and_missing_final_newline_are_tolerated() {
+        match frame(b"{\"a\":1}\r\n").unwrap() {
+            Frame::Line(l) => assert_eq!(l, b"{\"a\":1}"),
+            other => panic!("{other:?}"),
+        }
+        match frame(b"{\"a\":1}").unwrap() {
+            Frame::Line(l) => assert_eq!(l, b"{\"a\":1}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn http_request_with_body_parses() {
+        let req = b"POST /evaluate HTTP/1.1\r\nHost: x\r\nX-Deadline-Ms: 250\r\n\
+                    Content-Length: 7\r\n\r\n{\"a\":1}";
+        match frame(req).unwrap() {
+            Frame::Http { method, path, deadline_ms, body } => {
+                assert_eq!(method, "POST");
+                assert_eq!(path, "/evaluate");
+                assert_eq!(deadline_ms, Some(250));
+                assert_eq!(body, b"{\"a\":1}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn get_without_body_parses() {
+        match frame(b"GET /stats HTTP/1.1\r\n\r\n").unwrap() {
+            Frame::Http { method, path, body, .. } => {
+                assert_eq!(method, "GET");
+                assert_eq!(path, "/stats");
+                assert!(body.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_declared_body_is_refused_without_buffering() {
+        let req = b"POST /evaluate HTTP/1.1\r\ncontent-length: 99999\r\n\r\n";
+        assert!(matches!(frame(req), Err(FrameError::TooLarge)));
+    }
+
+    #[test]
+    fn oversized_line_is_refused() {
+        let mut long = vec![b'x'; 5000];
+        long.push(b'\n');
+        assert!(matches!(frame(&long), Err(FrameError::TooLarge)));
+    }
+
+    #[test]
+    fn truncated_body_is_a_mid_frame_disconnect() {
+        let req = b"POST /evaluate HTTP/1.1\r\ncontent-length: 10\r\n\r\n{\"a\"";
+        match frame(req) {
+            Err(FrameError::Io { mid_frame, .. }) => assert!(mid_frame),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_flood_is_refused() {
+        let mut req = b"GET /stats HTTP/1.1\r\n".to_vec();
+        for i in 0..100 {
+            req.extend_from_slice(format!("h{i}: v\r\n").as_bytes());
+        }
+        req.extend_from_slice(b"\r\n");
+        assert!(matches!(frame(&req), Err(FrameError::Bad(_))));
+    }
+
+    #[test]
+    fn bad_version_and_bad_header_are_bad_requests() {
+        assert!(matches!(frame(b"GET /stats\r\n\r\n"), Err(FrameError::Bad(_))));
+        assert!(matches!(
+            frame(b"GET /stats HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(FrameError::Bad(_))
+        ));
+        assert!(matches!(
+            frame(b"POST /e HTTP/1.1\r\ncontent-length: -4\r\n\r\n"),
+            Err(FrameError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn responses_carry_content_length() {
+        let mut out = Vec::new();
+        write_http_response(&mut out, 200, "OK", "{\"status\":\"ok\"}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-length: 15\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"status\":\"ok\"}"));
+    }
+}

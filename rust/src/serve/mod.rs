@@ -1,0 +1,627 @@
+//! `eocas serve` — a hardened, long-lived evaluation daemon.
+//!
+//! The DSE, CI and the training pipeline all want the same thing from
+//! EOCAS: hand over an [`EvalRequest`], get an [`EvalResult`] back,
+//! fast, without paying session warm-up per process. This module turns
+//! one shared [`Session`] into a network service with the properties a
+//! resident process actually needs (ROADMAP item 4):
+//!
+//! * **Bounded everything.** The session's caches are capped LRU
+//!   ([`crate::session::cache`]), the admission queue is a bounded
+//!   `sync_channel`, connection count is capped, and every wire read is
+//!   byte-limited ([`http`]). Steady-state memory is O(caps), not
+//!   O(uptime).
+//! * **Deadlines.** Every request has one (server default, overridable
+//!   per request); a request that misses it gets an explicit
+//!   `deadline_exceeded` error instead of holding its connection
+//!   hostage. Slow *readers* are bounded by socket write timeouts.
+//! * **Backpressure, not collapse.** When the admission queue is full
+//!   the daemon sheds the request immediately with an `overloaded`
+//!   error (HTTP 503) — admission control at the front door instead of
+//!   unbounded queueing behind it.
+//! * **Fault isolation.** Malformed frames, non-UTF-8 bytes, hostile
+//!   nesting, panicking evaluations, dead workers and mid-request
+//!   disconnects each degrade exactly one request/connection. The
+//!   session survives because its locks recover from poisoning and
+//!   `evaluate_many` converts panics and worker death into per-slot
+//!   errors.
+//! * **Observability.** `/stats` (or NDJSON `{"op":"stats"}`) reports
+//!   counters, queue depth, cache hit rates and p50/p99 latency from a
+//!   fixed-size histogram ([`stats`]).
+//!
+//! Wire protocol (see DESIGN.md §14): NDJSON request-per-line on a
+//! persistent connection, or single-shot HTTP/1.1 (`POST /evaluate`,
+//! `GET /stats`, `GET /healthz`) on the same port, auto-detected from
+//! the first bytes. Batching: one batcher thread drains the admission
+//! queue into [`Session::evaluate_many`] so concurrent clients share
+//! worker-pool chunking and the evaluation caches.
+
+pub mod client;
+pub mod http;
+pub mod stats;
+
+use std::io::BufReader;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::session::{EvalRequest, EvalResult, Session};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use stats::ServeStats;
+
+/// The `options.label` that triggers a deliberate evaluation panic when
+/// the server runs with `fault_injection` on (chaos testing: proves a
+/// panicking evaluation degrades one request, not the daemon).
+pub const FAULT_INJECTION_LABEL: &str = "__serve_fault_injection__";
+
+/// Server tuning. Defaults are sized for a workstation-resident daemon;
+/// DESIGN.md §14 has the ops notes on sizing the caps.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (see [`Server::addr`]).
+    pub addr: String,
+    /// Session worker threads (0 = one per core).
+    pub threads: usize,
+    /// Admission-queue slots; requests beyond this are shed.
+    pub queue_cap: usize,
+    /// Max requests folded into one `evaluate_many` batch.
+    pub batch_max: usize,
+    /// Default per-request deadline (override per request with
+    /// `deadline_ms` / `x-deadline-ms`).
+    pub deadline: Duration,
+    /// Socket read/write timeout: bounds slow writers *and* slow
+    /// readers; also the shutdown-poll cadence for idle connections.
+    pub io_timeout: Duration,
+    /// Cap on any request frame (NDJSON line or HTTP body).
+    pub max_body_bytes: usize,
+    /// Concurrent connection cap; excess connects are refused.
+    pub max_connections: usize,
+    /// Session result-cache caps (entries / approximate bytes).
+    pub max_cached_results: usize,
+    pub max_result_bytes: usize,
+    /// Enable the [`FAULT_INJECTION_LABEL`] chaos hook.
+    pub fault_injection: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8080".into(),
+            threads: 0,
+            queue_cap: 256,
+            batch_max: 64,
+            deadline: Duration::from_secs(10),
+            io_timeout: Duration::from_secs(10),
+            max_body_bytes: 4 << 20,
+            max_connections: 256,
+            max_cached_results: 65_536,
+            max_result_bytes: 256 << 20,
+            fault_injection: false,
+        }
+    }
+}
+
+/// What the batcher sends back for one admitted request.
+enum Reply {
+    Done(Result<Arc<EvalResult>>),
+    /// Deadline passed while the request sat in the queue; it was never
+    /// evaluated (the waiter counts this, the batcher does not — each
+    /// missed deadline is counted exactly once).
+    Expired,
+}
+
+/// One admitted request in flight between a connection thread and the
+/// batcher.
+struct Pending {
+    req: EvalRequest,
+    reply: mpsc::Sender<Reply>,
+    deadline_at: Instant,
+}
+
+/// State shared by the accept loop, connection threads, the batcher and
+/// the [`Server`] handle.
+struct Shared {
+    cfg: ServeConfig,
+    session: Session,
+    stats: ServeStats,
+    shutdown: AtomicBool,
+    conns: AtomicUsize,
+}
+
+/// Decrements the live-connection gauge however the handler exits.
+struct ConnGuard<'a>(&'a Shared);
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A running daemon. Dropping (or [`Server::stop`]) shuts it down:
+/// accept and batcher threads are joined; connection threads notice the
+/// flag within one `io_timeout` tick and exit on their own.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Build a session from the config and start serving.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let mut b = Session::builder()
+            .threads(cfg.threads)
+            .max_cached_results(cfg.max_cached_results)
+            .max_result_bytes(cfg.max_result_bytes);
+        if cfg.fault_injection {
+            b = b.fault_injection_label(FAULT_INJECTION_LABEL);
+        }
+        Server::start_with_session(cfg, b.build())
+    }
+
+    /// Start serving an existing session (tests and benches configure
+    /// their own cache caps / fault hooks).
+    pub fn start_with_session(cfg: ServeConfig, session: Session) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| crate::err!("bind {}: {e}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let queue_cap = cfg.queue_cap.max(1);
+        let (jobs_tx, jobs_rx) = mpsc::sync_channel::<Pending>(queue_cap);
+        let shared = Arc::new(Shared {
+            cfg,
+            session,
+            stats: ServeStats::new(),
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+        });
+        let batcher = {
+            let shared = shared.clone();
+            std::thread::spawn(move || batcher_loop(jobs_rx, &shared))
+        };
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, jobs_tx, &shared))
+        };
+        Ok(Server { shared, addr, accept: Some(accept), batcher: Some(batcher) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.shared.session
+    }
+
+    /// Live `/stats` snapshot.
+    pub fn stats_json(&self) -> Json {
+        stats_doc(&self.shared)
+    }
+
+    /// Shut down and return the final stats snapshot.
+    pub fn stop(mut self) -> Json {
+        self.shutdown_now();
+        stats_doc(&self.shared)
+    }
+
+    /// Block until the accept loop exits (the daemon's main thread).
+    pub fn run(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn shutdown_now(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        // Wake the accept loop with a throwaway connection so it
+        // observes the flag without waiting for real traffic.
+        let _ = TcpStream::connect_timeout(&wake_addr(self.addr), Duration::from_millis(500));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_now();
+    }
+}
+
+/// Loopback-reachable equivalent of the bound address (a daemon bound
+/// to 0.0.0.0 cannot be connected to *at* 0.0.0.0).
+fn wake_addr(addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        let ip = match addr.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        };
+        SocketAddr::new(ip, addr.port())
+    } else {
+        addr
+    }
+}
+
+fn stats_doc(shared: &Shared) -> Json {
+    shared
+        .stats
+        .snapshot_json(&shared.session.cache_stats(), shared.cfg.queue_cap.max(1))
+}
+
+fn err_doc(kind: &str, msg: &str) -> String {
+    let mut j = Json::obj();
+    j.set("status", Json::Str("error".into()))
+        .set("kind", Json::Str(kind.into()))
+        .set("error", Json::Str(msg.into()));
+    j.dumps()
+}
+
+fn ok_doc(result: &EvalResult) -> String {
+    let mut j = Json::obj();
+    j.set("status", Json::Str("ok".into())).set("result", result.to_json());
+    j.dumps()
+}
+
+// ---------------------------------------------------------------------------
+// Accept loop and connection handling
+// ---------------------------------------------------------------------------
+
+fn accept_loop(listener: TcpListener, jobs_tx: SyncSender<Pending>, shared: &Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if shared.conns.load(Ordering::Relaxed) >= shared.cfg.max_connections.max(1) {
+            shared.stats.rejected_conns.fetch_add(1, Ordering::Relaxed);
+            // Best-effort refusal notice; never block the accept loop.
+            let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+            let _ = write_line(&mut stream, &err_doc("overloaded", "connection limit reached"));
+            continue;
+        }
+        shared.conns.fetch_add(1, Ordering::Relaxed);
+        let shared = shared.clone();
+        let jobs_tx = jobs_tx.clone();
+        std::thread::spawn(move || {
+            let _guard = ConnGuard(&shared);
+            connection_loop(stream, &jobs_tx, &shared);
+        });
+    }
+}
+
+fn connection_loop(stream: TcpStream, jobs_tx: &SyncSender<Pending>, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.io_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.io_timeout));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match http::read_frame(&mut reader, shared.cfg.max_body_bytes) {
+            Ok(http::Frame::Eof) => break,
+            Ok(http::Frame::Line(bytes)) => {
+                if !handle_line(&mut writer, &bytes, jobs_tx, shared) {
+                    break;
+                }
+            }
+            Ok(http::Frame::Http { method, path, deadline_ms, body }) => {
+                handle_http(&mut writer, &method, &path, deadline_ms, &body, jobs_tx, shared);
+                break; // single-shot: connection: close
+            }
+            Err(e) if e.is_timeout() => {
+                if let http::FrameError::Io { mid_frame: false, .. } = e {
+                    continue; // idle between frames: poll shutdown, keep waiting
+                }
+                // Stalled mid-frame: the slow client loses its slot.
+                shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Err(http::FrameError::TooLarge) => {
+                shared.stats.too_large.fetch_add(1, Ordering::Relaxed);
+                let _ = write_line(
+                    &mut writer,
+                    &err_doc("too_large", "frame exceeds the configured byte cap"),
+                );
+                break;
+            }
+            Err(http::FrameError::Bad(msg)) => {
+                shared.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_http_response(
+                    &mut writer,
+                    400,
+                    "Bad Request",
+                    &err_doc("malformed", &msg),
+                );
+                break;
+            }
+            Err(http::FrameError::Io { mid_frame, .. }) => {
+                if mid_frame {
+                    shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn write_line(w: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// Answer on the NDJSON path; false when the connection is done (write
+/// failure = slow or vanished reader).
+fn reply_line(w: &mut TcpStream, line: &str, shared: &Shared) -> bool {
+    if write_line(w, line).is_err() {
+        shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+        return false;
+    }
+    true
+}
+
+fn handle_line(
+    w: &mut TcpStream,
+    bytes: &[u8],
+    jobs_tx: &SyncSender<Pending>,
+    shared: &Shared,
+) -> bool {
+    let stats = &shared.stats;
+    let Ok(text) = std::str::from_utf8(bytes) else {
+        stats.malformed.fetch_add(1, Ordering::Relaxed);
+        return reply_line(w, &err_doc("malformed", "request is not UTF-8"), shared);
+    };
+    if text.trim().is_empty() {
+        return true; // tolerate blank keep-alive lines
+    }
+    let doc = match Json::parse(text) {
+        Ok(d) => d,
+        Err(e) => {
+            stats.malformed.fetch_add(1, Ordering::Relaxed);
+            return reply_line(w, &err_doc("malformed", &format!("request JSON: {e}")), shared);
+        }
+    };
+    // Control ops ride the same line protocol: {"op":"stats"} etc.
+    if let Some(op) = doc.get("op").and_then(Json::as_str) {
+        let line = match op {
+            "stats" => stats_doc(shared).dumps(),
+            "ping" => {
+                let mut j = Json::obj();
+                j.set("status", Json::Str("ok".into())).set("pong", Json::Bool(true));
+                j.dumps()
+            }
+            other => {
+                stats.malformed.fetch_add(1, Ordering::Relaxed);
+                err_doc("malformed", &format!("unknown op {other:?}"))
+            }
+        };
+        return reply_line(w, &line, shared);
+    }
+    // Either a bare EvalRequest document, or an envelope
+    // {"request": <EvalRequest>, "deadline_ms": <n>}.
+    let (req_doc, deadline_ms) = match doc.get("request") {
+        Some(r) => {
+            let dl = doc.get("deadline_ms").and_then(Json::as_f64).map(|x| x.max(0.0) as u64);
+            (r, dl)
+        }
+        None => (&doc, None),
+    };
+    let req = match EvalRequest::from_json(req_doc) {
+        Ok(r) => r,
+        Err(e) => {
+            stats.malformed.fetch_add(1, Ordering::Relaxed);
+            return reply_line(w, &err_doc("malformed", &e.to_string()), shared);
+        }
+    };
+    let line = submit_and_wait(req, deadline_ms, jobs_tx, shared).into_line();
+    reply_line(w, &line, shared)
+}
+
+fn handle_http(
+    w: &mut TcpStream,
+    method: &str,
+    path: &str,
+    deadline_ms: Option<u64>,
+    body: &[u8],
+    jobs_tx: &SyncSender<Pending>,
+    shared: &Shared,
+) {
+    let stats = &shared.stats;
+    let (code, reason, doc) = match (method, path) {
+        ("GET", "/stats") => (200, "OK", stats_doc(shared).dumps()),
+        ("GET", "/healthz") => {
+            let mut j = Json::obj();
+            j.set("status", Json::Str("ok".into()));
+            (200, "OK", j.dumps())
+        }
+        ("POST", "/evaluate") => match std::str::from_utf8(body) {
+            Err(_) => {
+                stats.malformed.fetch_add(1, Ordering::Relaxed);
+                (400, "Bad Request", err_doc("malformed", "body is not UTF-8"))
+            }
+            Ok(text) => match EvalRequest::from_json_str(text) {
+                Err(e) => {
+                    stats.malformed.fetch_add(1, Ordering::Relaxed);
+                    (400, "Bad Request", err_doc("malformed", &e.to_string()))
+                }
+                Ok(req) => submit_and_wait(req, deadline_ms, jobs_tx, shared).into_http(),
+            },
+        },
+        ("POST", _) | ("GET", _) | ("HEAD", _) => {
+            (404, "Not Found", err_doc("not_found", &format!("no route {method} {path}")))
+        }
+        _ => (405, "Method Not Allowed", err_doc("bad_method", &format!("method {method}"))),
+    };
+    let _ = http::write_http_response(w, code, reason, &doc);
+}
+
+// ---------------------------------------------------------------------------
+// Admission, deadlines, batching
+// ---------------------------------------------------------------------------
+
+/// Terminal state of one admitted (or refused) request.
+enum Outcome {
+    Ok(Arc<EvalResult>),
+    EvalError(String),
+    Panicked(String),
+    Overloaded,
+    DeadlineExceeded,
+    Unavailable,
+}
+
+impl Outcome {
+    fn into_line(self) -> String {
+        match self {
+            Outcome::Ok(res) => ok_doc(&res),
+            Outcome::EvalError(msg) => err_doc("eval_error", &msg),
+            Outcome::Panicked(msg) => err_doc("eval_panic", &msg),
+            Outcome::Overloaded => {
+                err_doc("overloaded", "admission queue full; retry with backoff")
+            }
+            Outcome::DeadlineExceeded => err_doc("deadline_exceeded", "request missed its deadline"),
+            Outcome::Unavailable => err_doc("unavailable", "server is shutting down"),
+        }
+    }
+
+    fn into_http(self) -> (u16, &'static str, String) {
+        let (code, reason) = match &self {
+            Outcome::Ok(_) => (200, "OK"),
+            Outcome::EvalError(_) => (422, "Unprocessable Entity"),
+            Outcome::Panicked(_) => (500, "Internal Server Error"),
+            Outcome::Overloaded => (503, "Service Unavailable"),
+            Outcome::DeadlineExceeded => (504, "Gateway Timeout"),
+            Outcome::Unavailable => (503, "Service Unavailable"),
+        };
+        (code, reason, self.into_line())
+    }
+}
+
+/// Admit one request (or shed it), wait for its reply or deadline, and
+/// account the outcome. This is the only place request outcomes are
+/// counted, so NDJSON and HTTP paths can't drift apart.
+fn submit_and_wait(
+    req: EvalRequest,
+    deadline_ms: Option<u64>,
+    jobs_tx: &SyncSender<Pending>,
+    shared: &Shared,
+) -> Outcome {
+    let stats = &shared.stats;
+    stats.received.fetch_add(1, Ordering::Relaxed);
+    // Clamp hostile deadlines (u64::MAX ms would overflow Instant math).
+    const MAX_DEADLINE: Duration = Duration::from_secs(86_400);
+    let deadline = deadline_ms
+        .map(Duration::from_millis)
+        .unwrap_or(shared.cfg.deadline)
+        .min(MAX_DEADLINE);
+    let start = Instant::now();
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let pending = Pending {
+        req,
+        reply: reply_tx,
+        deadline_at: start + deadline,
+    };
+    // Raise the gauge before the send so the batcher's decrement (which
+    // can race ahead of this thread) can never observe depth 0.
+    stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+    match jobs_tx.try_send(pending) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            stats.shed.fetch_add(1, Ordering::Relaxed);
+            return Outcome::Overloaded;
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            return Outcome::Unavailable;
+        }
+    }
+    match reply_rx.recv_timeout(deadline) {
+        Ok(Reply::Done(Ok(res))) => {
+            stats.latency.record_us(start.elapsed().as_micros() as u64);
+            stats.ok.fetch_add(1, Ordering::Relaxed);
+            Outcome::Ok(res)
+        }
+        Ok(Reply::Done(Err(e))) => {
+            stats.latency.record_us(start.elapsed().as_micros() as u64);
+            let msg = e.to_string();
+            if msg.contains("panicked") {
+                stats.panics.fetch_add(1, Ordering::Relaxed);
+                Outcome::Panicked(msg)
+            } else {
+                stats.eval_errors.fetch_add(1, Ordering::Relaxed);
+                Outcome::EvalError(msg)
+            }
+        }
+        Ok(Reply::Expired) | Err(mpsc::RecvTimeoutError::Timeout) => {
+            stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            Outcome::DeadlineExceeded
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => Outcome::Unavailable,
+    }
+}
+
+/// The single batcher thread: drain the admission queue into
+/// [`Session::evaluate_many`] batches. One thread is enough — the
+/// session fans each batch out across its worker pool; what matters
+/// here is coalescing concurrent clients into shared batches.
+fn batcher_loop(jobs_rx: Receiver<Pending>, shared: &Shared) {
+    let stats = &shared.stats;
+    loop {
+        let first = match jobs_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(p) => p,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        let mut batch = vec![first];
+        while batch.len() < shared.cfg.batch_max.max(1) {
+            match jobs_rx.try_recv() {
+                Ok(p) => batch.push(p),
+                Err(_) => break,
+            }
+        }
+        stats.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        // Requests whose deadline passed while queued are never
+        // evaluated — shedding compute, not just the reply.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        for p in batch {
+            if p.deadline_at <= now {
+                let _ = p.reply.send(Reply::Expired);
+            } else {
+                live.push(p);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let reqs: Vec<EvalRequest> = live.iter().map(|p| p.req.clone()).collect();
+        let results = shared.session.evaluate_many(&reqs);
+        for (p, r) in live.into_iter().zip(results) {
+            // A waiter that already timed out dropped its receiver;
+            // that's its business, not an error here.
+            let _ = p.reply.send(Reply::Done(r));
+        }
+    }
+}

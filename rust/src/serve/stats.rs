@@ -1,0 +1,233 @@
+//! Serving-side observability: lock-free counters and a fixed-size
+//! latency histogram behind the `/stats` endpoint.
+//!
+//! Everything here is updated from connection threads and the batcher on
+//! the hot path, so the whole structure is plain relaxed atomics — no
+//! locks, no allocation, O(1) memory regardless of uptime. The histogram
+//! trades resolution for that boundedness: power-of-two microsecond
+//! buckets, which pins any quantile to within 2× — plenty for "did p99
+//! blow up", useless for microbenchmarking (that is `util::bench`'s
+//! job).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::session::CacheStats;
+use crate::util::json::Json;
+
+/// Log₂-bucketed latency histogram over microseconds.
+///
+/// Bucket `i` counts samples in `[2^i, 2^(i+1))` µs (bucket 0 also takes
+/// sub-microsecond samples, the last bucket takes everything above
+/// ~2^31 µs ≈ 36 min). Fixed size: recording never allocates, so an
+/// arbitrarily long-lived daemon cannot grow it.
+#[derive(Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; Self::BUCKETS],
+}
+
+impl LatencyHistogram {
+    pub const BUCKETS: usize = 32;
+
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        (63 - us.max(1).leading_zeros() as usize).min(Self::BUCKETS - 1)
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Upper bound (µs) of the bucket holding the `q`-quantile sample
+    /// (`q` in `[0, 1]`); 0 when empty. Overestimates by at most 2×.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i as u32 + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Counters for everything a resident daemon must be able to answer
+/// about itself. All monotonic except `queue_depth` (a gauge).
+pub struct ServeStats {
+    started: Instant,
+    /// Requests admitted to parsing (any protocol, before validation).
+    pub received: AtomicU64,
+    /// Successful evaluations answered.
+    pub ok: AtomicU64,
+    /// Requests that parsed but failed evaluation (bad scenario).
+    pub eval_errors: AtomicU64,
+    /// Evaluations that panicked (caught and degraded to errors).
+    pub panics: AtomicU64,
+    /// Frames/documents that failed parsing or validation.
+    pub malformed: AtomicU64,
+    /// Frames refused for exceeding the byte cap.
+    pub too_large: AtomicU64,
+    /// Requests shed by admission control (bounded queue full).
+    pub shed: AtomicU64,
+    /// Requests that missed their deadline (in queue or mid-evaluation).
+    pub deadline_exceeded: AtomicU64,
+    /// Clients that vanished or stalled mid-frame.
+    pub disconnects: AtomicU64,
+    /// Connections refused at accept (connection cap).
+    pub rejected_conns: AtomicU64,
+    /// Current admission-queue occupancy (gauge).
+    pub queue_depth: AtomicU64,
+    /// `evaluate_many` batches dispatched.
+    pub batches: AtomicU64,
+    /// End-to-end service latency of answered evaluations (admission to
+    /// reply handoff), including queue wait.
+    pub latency: LatencyHistogram,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            started: Instant::now(),
+            received: AtomicU64::new(0),
+            ok: AtomicU64::new(0),
+            eval_errors: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            malformed: AtomicU64::new(0),
+            too_large: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+            rejected_conns: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+        }
+    }
+
+    /// The `/stats` document (see DESIGN.md §14 for the schema).
+    pub fn snapshot_json(&self, cache: &CacheStats, queue_capacity: usize) -> Json {
+        let load = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        let mut requests = Json::obj();
+        requests
+            .set("received", load(&self.received))
+            .set("ok", load(&self.ok))
+            .set("eval_errors", load(&self.eval_errors))
+            .set("panics", load(&self.panics))
+            .set("malformed", load(&self.malformed))
+            .set("too_large", load(&self.too_large))
+            .set("shed", load(&self.shed))
+            .set("deadline_exceeded", load(&self.deadline_exceeded))
+            .set("disconnects", load(&self.disconnects))
+            .set("rejected_conns", load(&self.rejected_conns));
+        let mut queue = Json::obj();
+        queue
+            .set("depth", load(&self.queue_depth))
+            .set("capacity", Json::Num(queue_capacity as f64))
+            .set("batches", load(&self.batches));
+        let mut latency = Json::obj();
+        latency
+            .set("count", Json::Num(self.latency.count() as f64))
+            .set("p50_us", Json::Num(self.latency.quantile_us(0.50) as f64))
+            .set("p99_us", Json::Num(self.latency.quantile_us(0.99) as f64));
+        let hit_rate = |hits: u64, misses: u64| {
+            let total = hits + misses;
+            Json::Num(if total == 0 { 0.0 } else { hits as f64 / total as f64 })
+        };
+        let mut jc = Json::obj();
+        jc.set("result_hits", Json::Num(cache.result_hits as f64))
+            .set("result_misses", Json::Num(cache.result_misses as f64))
+            .set("result_hit_rate", hit_rate(cache.result_hits, cache.result_misses))
+            .set("result_evictions", Json::Num(cache.result_evictions as f64))
+            .set("result_entries", Json::Num(cache.result_entries as f64))
+            .set("result_bytes", Json::Num(cache.result_bytes as f64))
+            .set("workload_hits", Json::Num(cache.workload_hits as f64))
+            .set("workload_misses", Json::Num(cache.workload_misses as f64))
+            .set(
+                "workload_hit_rate",
+                hit_rate(cache.workload_hits, cache.workload_misses),
+            )
+            .set("workload_evictions", Json::Num(cache.workload_evictions as f64))
+            .set("workload_entries", Json::Num(cache.workload_entries as f64))
+            .set("workload_bytes", Json::Num(cache.workload_bytes as f64));
+        let mut doc = Json::obj();
+        doc.set("schema", Json::Num(1.0))
+            .set("uptime_s", Json::Num(self.started.elapsed().as_secs_f64()))
+            .set("requests", requests)
+            .set("queue", queue)
+            .set("latency", latency)
+            .set("cache", jc);
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_powers_of_two() {
+        let h = LatencyHistogram::new();
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1), 0);
+        assert_eq!(LatencyHistogram::bucket_of(2), 1);
+        assert_eq!(LatencyHistogram::bucket_of(3), 1);
+        assert_eq!(LatencyHistogram::bucket_of(1024), 10);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), 31);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0);
+    }
+
+    #[test]
+    fn quantiles_bound_the_samples_within_2x() {
+        let h = LatencyHistogram::new();
+        for us in [3u64, 5, 9, 17, 33, 65, 129, 1025] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 8);
+        let p50 = h.quantile_us(0.50);
+        // The 4th sample (17 µs) lands in [16,32): upper bound 32.
+        assert_eq!(p50, 32);
+        let p99 = h.quantile_us(0.99);
+        assert_eq!(p99, 2048, "largest sample 1025 µs sits in [1024,2048)");
+        assert!(h.quantile_us(0.0) >= 4);
+    }
+
+    #[test]
+    fn snapshot_has_the_headline_keys() {
+        let s = ServeStats::new();
+        s.received.fetch_add(3, Ordering::Relaxed);
+        s.ok.fetch_add(2, Ordering::Relaxed);
+        s.shed.fetch_add(1, Ordering::Relaxed);
+        s.latency.record_us(100);
+        let cache = CacheStats { result_hits: 3, result_misses: 1, ..Default::default() };
+        let doc = s.snapshot_json(&cache, 128);
+        assert_eq!(doc.get("requests").unwrap().get("shed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("queue").unwrap().get("capacity").unwrap().as_f64(), Some(128.0));
+        assert_eq!(
+            doc.get("cache").unwrap().get("result_hit_rate").unwrap().as_f64(),
+            Some(0.75)
+        );
+        assert!(doc.get("latency").unwrap().get("p99_us").unwrap().as_f64().unwrap() >= 128.0);
+        // The document is wire-stable: it must round-trip through dumps.
+        assert!(Json::parse(&doc.dumps()).is_ok());
+    }
+}

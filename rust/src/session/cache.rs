@@ -1,0 +1,315 @@
+//! Bounded LRU cache backing the session's workload and result memos.
+//!
+//! A resident `eocas serve` process lives for days: the unbounded
+//! `HashMap` memos of the early session (and the "clear everything when
+//! full" stopgap that followed) are not production-safe — a steady
+//! stream of distinct requests either grows memory without limit or
+//! periodically throws away the entire working set. This is an exact
+//! least-recently-used cache with *two* caps:
+//!
+//! * **entries** — a hard count limit, and
+//! * **bytes** — an approximate retained-heap limit (callers pass a
+//!   per-value size estimate at insert).
+//!
+//! Eviction drops strictly least-recently-*touched* entries (a `get`
+//! refreshes recency) until both caps hold. Evicting never changes what
+//! an evaluation returns — recomputing an evicted key is bit-identical
+//! by the simulator's determinism — it only costs a recompute, so the
+//! caps trade memory for hit rate and nothing else.
+//!
+//! Implementation: an intrusive doubly-linked list threaded through a
+//! slab (`Vec<Node>`) with a `HashMap` key index — O(1) get / insert /
+//! evict, no allocation churn on recency updates, no dependencies.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Slab index sentinel (no neighbour / no list head).
+const NIL: usize = usize::MAX;
+
+struct Node<V> {
+    key: String,
+    val: Arc<V>,
+    bytes: usize,
+    prev: usize,
+    next: usize,
+}
+
+/// An exact LRU cache with entry-count and approximate byte caps.
+pub struct LruCache<V> {
+    index: HashMap<String, usize>,
+    slab: Vec<Option<Node<V>>>,
+    free: Vec<usize>,
+    /// Most recently used.
+    head: usize,
+    /// Least recently used (next eviction victim).
+    tail: usize,
+    bytes: usize,
+    max_entries: usize,
+    max_bytes: usize,
+    evictions: u64,
+    /// Values whose own size estimate exceeds `max_bytes` are never
+    /// cached at all (they would evict the whole working set for one
+    /// entry); counted here.
+    oversize: u64,
+}
+
+impl<V> LruCache<V> {
+    /// `max_entries` and `max_bytes` are clamped to at least 1 — a cache
+    /// that cannot hold anything would silently disable memoization.
+    pub fn new(max_entries: usize, max_bytes: usize) -> LruCache<V> {
+        LruCache {
+            index: HashMap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            bytes: 0,
+            max_entries: max_entries.max(1),
+            max_bytes: max_bytes.max(1),
+            evictions: 0,
+            oversize: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Approximate retained bytes (sum of the callers' estimates).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Entries dropped to satisfy the caps (monotonic).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Values refused because they alone exceed the byte cap (monotonic).
+    pub fn oversize(&self) -> u64 {
+        self.oversize
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &str) -> Option<Arc<V>> {
+        let idx = *self.index.get(key)?;
+        self.unlink(idx);
+        self.push_front(idx);
+        Some(self.slab[idx].as_ref().expect("indexed node is live").val.clone())
+    }
+
+    /// Insert (or replace) `key`, then evict LRU entries until both caps
+    /// hold. The freshly inserted entry itself is never evicted; a value
+    /// whose own estimate exceeds the byte cap is refused instead.
+    pub fn insert(&mut self, key: String, val: Arc<V>, bytes: usize) {
+        if bytes > self.max_bytes {
+            self.oversize += 1;
+            return;
+        }
+        if let Some(&idx) = self.index.get(&key) {
+            // Replace in place and refresh recency.
+            let node = self.slab[idx].as_mut().expect("indexed node is live");
+            self.bytes = self.bytes - node.bytes + bytes;
+            node.val = val;
+            node.bytes = bytes;
+            self.unlink(idx);
+            self.push_front(idx);
+        } else {
+            let node = Node { key: key.clone(), val, bytes, prev: NIL, next: NIL };
+            let idx = match self.free.pop() {
+                Some(i) => {
+                    self.slab[i] = Some(node);
+                    i
+                }
+                None => {
+                    self.slab.push(Some(node));
+                    self.slab.len() - 1
+                }
+            };
+            self.index.insert(key, idx);
+            self.bytes += bytes;
+            self.push_front(idx);
+        }
+        while self.index.len() > self.max_entries || self.bytes > self.max_bytes {
+            if !self.evict_tail() {
+                break; // only the fresh entry is left
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.index.clear();
+        self.slab.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.bytes = 0;
+        // `evictions`/`oversize` are lifetime counters and survive.
+    }
+
+    /// Drop the least-recently-used entry; false if that would remove
+    /// the most recent (i.e. only one entry remains).
+    fn evict_tail(&mut self) -> bool {
+        let idx = self.tail;
+        if idx == NIL || idx == self.head {
+            return false;
+        }
+        self.unlink(idx);
+        let node = self.slab[idx].take().expect("tail node is live");
+        self.index.remove(&node.key);
+        self.bytes -= node.bytes;
+        self.free.push(idx);
+        self.evictions += 1;
+        true
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = {
+            let n = self.slab[idx].as_ref().expect("unlink of live node");
+            (n.prev, n.next)
+        };
+        match prev {
+            NIL => {
+                if self.head == idx {
+                    self.head = next;
+                }
+            }
+            p => self.slab[p].as_mut().expect("prev is live").next = next,
+        }
+        match next {
+            NIL => {
+                if self.tail == idx {
+                    self.tail = prev;
+                }
+            }
+            n => self.slab[n].as_mut().expect("next is live").prev = prev,
+        }
+        let n = self.slab[idx].as_mut().expect("unlink of live node");
+        n.prev = NIL;
+        n.next = NIL;
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        let old_head = self.head;
+        {
+            let n = self.slab[idx].as_mut().expect("push of live node");
+            n.prev = NIL;
+            n.next = old_head;
+        }
+        if old_head != NIL {
+            self.slab[old_head].as_mut().expect("head is live").prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys_lru_to_mru(c: &LruCache<u32>) -> Vec<String> {
+        // Walk tail → head.
+        let mut out = Vec::new();
+        let mut at = c.tail;
+        while at != NIL {
+            let n = c.slab[at].as_ref().unwrap();
+            out.push(n.key.clone());
+            at = n.prev;
+        }
+        out
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        let mut c = LruCache::new(3, usize::MAX);
+        for (k, v) in [("a", 1u32), ("b", 2), ("c", 3)] {
+            c.insert(k.into(), Arc::new(v), 8);
+        }
+        // Touch "a" so "b" is now the LRU.
+        assert_eq!(*c.get("a").unwrap(), 1);
+        c.insert("d".into(), Arc::new(4), 8);
+        assert_eq!(c.len(), 3);
+        assert!(c.get("b").is_none(), "b was least recently used");
+        assert!(c.get("a").is_some() && c.get("c").is_some() && c.get("d").is_some());
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn byte_cap_evicts_independently_of_entry_cap() {
+        let mut c = LruCache::new(1000, 100);
+        c.insert("a".into(), Arc::new(1u32), 40);
+        c.insert("b".into(), Arc::new(2), 40);
+        c.insert("c".into(), Arc::new(3), 40); // 120 > 100: "a" goes
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes(), 80);
+        assert!(c.get("a").is_none());
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn oversize_values_are_refused_not_cached() {
+        let mut c = LruCache::new(10, 100);
+        c.insert("small".into(), Arc::new(1u32), 10);
+        c.insert("huge".into(), Arc::new(2), 101);
+        assert!(c.get("huge").is_none());
+        assert!(c.get("small").is_some(), "the working set survives");
+        assert_eq!(c.oversize(), 1);
+        assert_eq!(c.evictions(), 0);
+    }
+
+    #[test]
+    fn replacing_a_key_updates_bytes_and_recency() {
+        let mut c = LruCache::new(10, 100);
+        c.insert("a".into(), Arc::new(1u32), 30);
+        c.insert("b".into(), Arc::new(2), 30);
+        c.insert("a".into(), Arc::new(9), 50);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes(), 80);
+        assert_eq!(*c.get("a").unwrap(), 9);
+        assert_eq!(keys_lru_to_mru(&c), vec!["b".to_string(), "a".to_string()]);
+    }
+
+    #[test]
+    fn the_fresh_entry_is_never_evicted() {
+        let mut c = LruCache::new(1, 100);
+        c.insert("a".into(), Arc::new(1u32), 60);
+        c.insert("b".into(), Arc::new(2), 60);
+        assert_eq!(c.len(), 1);
+        assert!(c.get("b").is_some());
+    }
+
+    #[test]
+    fn clear_keeps_lifetime_counters() {
+        let mut c = LruCache::new(2, usize::MAX);
+        for k in ["a", "b", "c"] {
+            c.insert(k.into(), Arc::new(0u32), 1);
+        }
+        assert_eq!(c.evictions(), 1);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.evictions(), 1);
+        c.insert("d".into(), Arc::new(0), 1);
+        assert!(c.get("d").is_some());
+    }
+
+    #[test]
+    fn heavy_mixed_traffic_respects_both_caps() {
+        let mut c = LruCache::new(64, 4096);
+        for i in 0..10_000u32 {
+            c.insert(format!("k{}", i % 200), Arc::new(i), 64 + (i as usize % 17));
+            let _ = c.get(&format!("k{}", (i / 3) % 200));
+            assert!(c.len() <= 64);
+            assert!(c.bytes() <= 4096);
+        }
+        assert!(c.evictions() > 0);
+    }
+}

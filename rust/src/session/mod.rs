@@ -43,12 +43,14 @@
 //! The DSE (`dse::explore`), the pipeline coordinator, the report
 //! generator and the benches all build on this API.
 
+pub mod cache;
 pub mod json;
 pub mod workers;
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
+
+use cache::LruCache;
 
 use crate::arch::{ArchPool, Architecture};
 use crate::config::EnergyConfig;
@@ -64,6 +66,7 @@ use crate::spike::temporal::TemporalSparsity;
 use crate::spike::traffic::SpikeEncoding;
 use crate::util::error::Result;
 use crate::util::prng::SplitMix64;
+use crate::util::sync::lock_recover;
 use crate::workload::{generate, LayerWorkload};
 
 /// Version of the `EvalRequest`/`EvalResult` JSON schema.
@@ -531,13 +534,23 @@ impl EvalResult {
 // Session
 // ---------------------------------------------------------------------------
 
-/// Cache hit/miss counters (`Session::cache_stats`).
+/// Cache hit/miss/eviction counters and current occupancy
+/// (`Session::cache_stats`). Hits/misses/evictions are lifetime
+/// counters; entries/bytes are the current occupancy of each bounded
+/// cache (bytes are the approximate retained-heap estimates the caps
+/// act on).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CacheStats {
     pub result_hits: u64,
     pub result_misses: u64,
+    pub result_evictions: u64,
+    pub result_entries: usize,
+    pub result_bytes: usize,
     pub workload_hits: u64,
     pub workload_misses: u64,
+    pub workload_evictions: u64,
+    pub workload_entries: usize,
+    pub workload_bytes: usize,
 }
 
 /// Builder for [`Session`].
@@ -547,6 +560,10 @@ pub struct SessionBuilder {
     area: AreaModel,
     threads: usize,
     max_cached_results: usize,
+    max_result_bytes: usize,
+    max_cached_workloads: usize,
+    max_workload_bytes: usize,
+    panic_label: Option<String>,
 }
 
 impl Default for SessionBuilder {
@@ -557,6 +574,10 @@ impl Default for SessionBuilder {
             area: AreaModel::default(),
             threads: 0,
             max_cached_results: 65_536,
+            max_result_bytes: 256 << 20,
+            max_cached_workloads: 4_096,
+            max_workload_bytes: 256 << 20,
+            panic_label: None,
         }
     }
 }
@@ -590,10 +611,42 @@ impl SessionBuilder {
         self
     }
 
-    /// Result-cache capacity; the cache is flushed when it fills
-    /// (coarse but bounded — jittered DSE sweeps generate unique keys).
+    /// Result-cache entry cap. Least-recently-used entries are evicted
+    /// once the cap is reached (jittered DSE sweeps generate unique
+    /// keys, so a resident session would otherwise grow without bound).
     pub fn max_cached_results(mut self, cap: usize) -> SessionBuilder {
         self.max_cached_results = cap.max(1);
+        self
+    }
+
+    /// Result-cache byte cap (approximate retained heap). Evicts LRU
+    /// entries like the entry cap; a single result larger than the cap
+    /// is served uncached rather than evicting the working set.
+    pub fn max_result_bytes(mut self, cap: usize) -> SessionBuilder {
+        self.max_result_bytes = cap.max(1);
+        self
+    }
+
+    /// Workload-memo entry cap (LRU eviction, like the result cache).
+    pub fn max_cached_workloads(mut self, cap: usize) -> SessionBuilder {
+        self.max_cached_workloads = cap.max(1);
+        self
+    }
+
+    /// Workload-memo byte cap (approximate retained heap).
+    pub fn max_workload_bytes(mut self, cap: usize) -> SessionBuilder {
+        self.max_workload_bytes = cap.max(1);
+        self
+    }
+
+    /// Fault injection for robustness testing: a request whose
+    /// `options.label` equals `label` panics inside evaluation instead
+    /// of computing. This is how the serve survival tests and the load
+    /// generator prove that a panicking evaluation degrades one request
+    /// without poisoning the session or the process — it is off unless
+    /// explicitly armed and has zero effect on any other request.
+    pub fn fault_injection_label(mut self, label: impl Into<String>) -> SessionBuilder {
+        self.panic_label = Some(label.into());
         self
     }
 
@@ -603,13 +656,19 @@ impl SessionBuilder {
                 cfg: self.cfg,
                 pool: self.pool,
                 area: self.area,
-                max_cached_results: self.max_cached_results,
-                workloads: Mutex::new(HashMap::new()),
-                results: Mutex::new(HashMap::new()),
+                workloads: Mutex::new(LruCache::new(
+                    self.max_cached_workloads,
+                    self.max_workload_bytes,
+                )),
+                results: Mutex::new(LruCache::new(
+                    self.max_cached_results,
+                    self.max_result_bytes,
+                )),
                 result_hits: AtomicU64::new(0),
                 result_misses: AtomicU64::new(0),
                 workload_hits: AtomicU64::new(0),
                 workload_misses: AtomicU64::new(0),
+                panic_label: self.panic_label,
             }),
             threads: self.threads,
             workers: OnceLock::new(),
@@ -622,15 +681,47 @@ struct Inner {
     cfg: EnergyConfig,
     pool: ArchPool,
     area: AreaModel,
-    max_cached_results: usize,
     /// Workload memo: `(model, sparsity, activity)` → generated layers.
-    workloads: Mutex<HashMap<String, Arc<Vec<LayerWorkload>>>>,
-    /// Full-evaluation memo keyed by the canonical request encoding.
-    results: Mutex<HashMap<String, Arc<EvalResult>>>,
+    /// Bounded LRU; lock accessed only through [`lock_recover`] so a
+    /// panicked evaluation can never poison later cache traffic.
+    workloads: Mutex<LruCache<Vec<LayerWorkload>>>,
+    /// Full-evaluation memo keyed by the canonical request encoding
+    /// (bounded LRU, poison-recovering like `workloads`).
+    results: Mutex<LruCache<EvalResult>>,
     result_hits: AtomicU64,
     result_misses: AtomicU64,
     workload_hits: AtomicU64,
     workload_misses: AtomicU64,
+    /// Fault injection (`SessionBuilder::fault_injection_label`).
+    panic_label: Option<String>,
+}
+
+/// Approximate retained heap bytes of a cached result, for the result
+/// cache's byte cap. Counts the owned strings and per-layer breakdown
+/// vectors; exactness does not matter (the cap is a memory budget, not
+/// an accounting invariant), staying within a small factor does.
+fn approx_result_bytes(r: &EvalResult) -> usize {
+    let mut b = std::mem::size_of::<EvalResult>();
+    b += r.model.len() + r.arch.len() + r.dataflow.len();
+    b += r.activity.len() * std::mem::size_of::<f64>();
+    for l in &r.layers {
+        b += std::mem::size_of::<LayerBreakdown>();
+        for ph in [&l.fp, &l.bp, &l.wg] {
+            for o in &ph.operands {
+                b += std::mem::size_of::<OperandBreakdown>() + o.tensor.len();
+                for (name, _) in &o.levels {
+                    b += std::mem::size_of::<(String, f64)>() + name.len();
+                }
+            }
+        }
+    }
+    b
+}
+
+/// Approximate retained heap bytes of a memoized workload list.
+fn approx_workload_bytes(w: &[LayerWorkload]) -> usize {
+    std::mem::size_of::<Vec<LayerWorkload>>()
+        + w.len() * std::mem::size_of::<LayerWorkload>()
 }
 
 impl Inner {
@@ -647,33 +738,36 @@ impl Inner {
             let _ = write!(key, "{:x},", v.to_bits());
         }
         let _ = write!(key, "|{:x}", activity.to_bits());
-        if let Some(hit) = self.workloads.lock().unwrap().get(&key) {
+        if let Some(hit) = lock_recover(&self.workloads).get(&key) {
             self.workload_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(hit.clone());
+            return Ok(hit);
         }
         self.workload_misses.fetch_add(1, Ordering::Relaxed);
         let wls = Arc::new(generate(model, sparsity, activity)?);
-        self.workloads.lock().unwrap().insert(key, wls.clone());
+        let bytes = key.len() + approx_workload_bytes(&wls);
+        lock_recover(&self.workloads).insert(key, wls.clone(), bytes);
         Ok(wls)
     }
 
     fn evaluate(&self, req: &EvalRequest) -> Result<Arc<EvalResult>> {
         let key = req.cache_key();
-        if let Some(hit) = self.results.lock().unwrap().get(&key) {
+        if let Some(hit) = lock_recover(&self.results).get(&key) {
             self.result_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(hit.clone());
+            return Ok(hit);
         }
         self.result_misses.fetch_add(1, Ordering::Relaxed);
         let res = Arc::new(self.compute(req)?);
-        let mut cache = self.results.lock().unwrap();
-        if cache.len() >= self.max_cached_results {
-            cache.clear();
-        }
-        cache.insert(key, res.clone());
+        let bytes = key.len() + approx_result_bytes(&res);
+        lock_recover(&self.results).insert(key, res.clone(), bytes);
         Ok(res)
     }
 
     fn compute(&self, req: &EvalRequest) -> Result<EvalResult> {
+        if let (Some(inject), Some(label)) = (&self.panic_label, &req.options.label) {
+            if inject == label {
+                panic!("fault injection: evaluation panicked on label {label:?}");
+            }
+        }
         let default_activity = req.options.activity.unwrap_or(self.cfg.nominal_activity);
         // A temporal source supplies the per-layer activity (its exact
         // time-averaged rates); otherwise the scalar profile does.
@@ -879,7 +973,7 @@ impl Session {
             let batch: Vec<EvalRequest> = slice.to_vec();
             let tx = tx.clone();
             let start = ci * chunk;
-            self.pool().submit(Box::new(move || {
+            let submitted = self.pool().submit(Box::new(move || {
                 let results: Vec<Result<Arc<EvalResult>>> = batch
                     .iter()
                     .map(|req| {
@@ -904,6 +998,12 @@ impl Session {
                     .collect();
                 let _ = tx.send((start, results));
             }));
+            if submitted.is_err() {
+                // Every worker is dead: stop submitting; the slots of
+                // this and all later chunks are filled with per-slot
+                // errors below instead of panicking the caller.
+                break;
+            }
         }
         drop(tx);
         let mut out: Vec<Option<Result<Arc<EvalResult>>>> =
@@ -913,23 +1013,51 @@ impl Session {
                 out[start + k] = Some(res);
             }
         }
-        out.into_iter().map(|slot| slot.expect("worker delivered every result")).collect()
+        // A slot is still empty when its worker died mid-chunk (the job's
+        // result channel closed without a send) or the pool refused the
+        // chunk outright. Either way the caller gets an error for exactly
+        // the affected requests — never a panic, never a hang.
+        out.into_iter()
+            .map(|slot| {
+                slot.unwrap_or_else(|| {
+                    Err(crate::util::error::Error::new(
+                        "worker died before delivering this result; \
+                         the request was not evaluated",
+                    ))
+                })
+            })
+            .collect()
     }
 
-    /// Hit/miss counters for both cache layers.
+    /// Hit/miss/eviction counters and current occupancy for both cache
+    /// layers.
     pub fn cache_stats(&self) -> CacheStats {
+        let (result_evictions, result_entries, result_bytes) = {
+            let c = lock_recover(&self.inner.results);
+            (c.evictions(), c.len(), c.bytes())
+        };
+        let (workload_evictions, workload_entries, workload_bytes) = {
+            let c = lock_recover(&self.inner.workloads);
+            (c.evictions(), c.len(), c.bytes())
+        };
         CacheStats {
             result_hits: self.inner.result_hits.load(Ordering::Relaxed),
             result_misses: self.inner.result_misses.load(Ordering::Relaxed),
+            result_evictions,
+            result_entries,
+            result_bytes,
             workload_hits: self.inner.workload_hits.load(Ordering::Relaxed),
             workload_misses: self.inner.workload_misses.load(Ordering::Relaxed),
+            workload_evictions,
+            workload_entries,
+            workload_bytes,
         }
     }
 
     /// Drop all cached workloads and results (counters are kept).
     pub fn clear_caches(&self) {
-        self.inner.workloads.lock().unwrap().clear();
-        self.inner.results.lock().unwrap().clear();
+        lock_recover(&self.inner.workloads).clear();
+        lock_recover(&self.inner.results).clear();
     }
 }
 
@@ -1090,7 +1218,148 @@ mod tests {
             );
             session.evaluate(&req).unwrap();
         }
-        assert!(session.inner.results.lock().unwrap().len() <= 3);
+        let stats = session.cache_stats();
+        assert!(stats.result_entries <= 3);
+        assert_eq!(stats.result_evictions, 2, "five families, three slots");
+    }
+
+    /// Sessions are shared across serve connection threads: the type
+    /// must stay `Send + Sync` (this fails to compile otherwise).
+    #[test]
+    fn session_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Session>();
+        assert_send_sync::<Arc<Session>>();
+    }
+
+    #[test]
+    fn evicted_results_recompute_bit_identically() {
+        // Eviction must never change what an evaluation returns.
+        let session = Session::builder().threads(1).max_cached_results(2).build();
+        let first = session.evaluate(&paper_request()).unwrap();
+        for fam in [Family::Ws1, Family::Ws2, Family::Os, Family::Rs] {
+            let req = EvalRequest::new(
+                SnnModel::paper_layer(),
+                Architecture::paper_default(),
+                fam,
+            );
+            session.evaluate(&req).unwrap();
+        }
+        let again = session.evaluate(&paper_request()).unwrap();
+        assert!(
+            !Arc::ptr_eq(&first, &again),
+            "the AdvWS entry must have been evicted by the sweep"
+        );
+        assert_eq!(*first, *again);
+        assert_eq!(first.overall_j.to_bits(), again.overall_j.to_bits());
+    }
+
+    #[test]
+    fn byte_cap_bounds_the_result_cache() {
+        let one = approx_result_bytes(
+            &Session::builder()
+                .threads(1)
+                .build()
+                .evaluate(&paper_request())
+                .unwrap(),
+        );
+        // Room for roughly two results (plus key overhead slack).
+        let session =
+            Session::builder().threads(1).max_result_bytes(one * 5 / 2).build();
+        for fam in Family::ALL {
+            let req = EvalRequest::new(
+                SnnModel::paper_layer(),
+                Architecture::paper_default(),
+                fam,
+            );
+            session.evaluate(&req).unwrap();
+        }
+        let stats = session.cache_stats();
+        assert!(stats.result_bytes <= one * 5 / 2);
+        assert!(stats.result_evictions >= 2, "{stats:?}");
+    }
+
+    /// A panicked critical section must not poison later cache traffic:
+    /// the locks recover and the session keeps serving.
+    #[test]
+    fn poisoned_cache_locks_recover() {
+        let session = Session::builder().threads(1).build();
+        let warm = session.evaluate(&paper_request()).unwrap();
+        let inner = session.inner.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = inner.results.lock().unwrap();
+            panic!("poison the results lock");
+        })
+        .join();
+        assert!(session.inner.results.lock().is_err(), "lock really is poisoned");
+        let hit = session.evaluate(&paper_request()).unwrap();
+        assert!(Arc::ptr_eq(&warm, &hit), "still a cache hit after recovery");
+        assert!(session
+            .evaluate(&EvalRequest::new(
+                SnnModel::paper_layer(),
+                Architecture::paper_default(),
+                Family::Os,
+            ))
+            .is_ok());
+    }
+
+    /// A caught evaluation panic (fault injection) degrades that request
+    /// only; the session stays fully usable afterwards.
+    #[test]
+    fn caught_panic_leaves_the_session_usable() {
+        let session = Session::builder()
+            .threads(2)
+            .fault_injection_label("__boom__")
+            .build();
+        let mut bad = paper_request();
+        bad.options.label = Some("__boom__".into());
+        let out = session.evaluate_many(&[bad, paper_request()]);
+        let err = out[0].as_ref().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        let ok = out[1].as_ref().unwrap();
+        // The panicked slot did not poison its neighbour or the caches.
+        let fresh = Session::builder().threads(1).build();
+        let oracle = fresh.evaluate(&paper_request()).unwrap();
+        assert_eq!(ok.overall_j.to_bits(), oracle.overall_j.to_bits());
+        assert_eq!(
+            session.evaluate(&paper_request()).unwrap().overall_j.to_bits(),
+            oracle.overall_j.to_bits()
+        );
+    }
+
+    /// Regression: a dead worker used to panic the batch caller at
+    /// `slot.expect("worker delivered every result")`. Now the affected
+    /// slots come back as per-request errors and the caller survives.
+    #[test]
+    fn dead_workers_yield_per_slot_errors_not_a_panic() {
+        let session = Session::builder().threads(1).build();
+        // Kill the pool's only worker with a raw panicking job.
+        session.pool().submit(Box::new(|| panic!("die"))).unwrap();
+        for _ in 0..400 {
+            if session.pool().alive() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(session.pool().alive(), 0);
+        let reqs: Vec<EvalRequest> = Family::ALL
+            .iter()
+            .map(|&fam| {
+                EvalRequest::new(
+                    SnnModel::paper_layer(),
+                    Architecture::paper_default(),
+                    fam,
+                )
+            })
+            .collect();
+        let out = session.evaluate_many(&reqs);
+        assert_eq!(out.len(), reqs.len());
+        for slot in &out {
+            let err = slot.as_ref().unwrap_err().to_string();
+            assert!(err.contains("worker died"), "{err}");
+        }
+        // The single-request path does not need the pool at all.
+        assert!(session.evaluate(&paper_request()).is_ok());
     }
 
     #[test]

@@ -5,10 +5,26 @@
 //! pool here is created once (lazily, on first use) and reused. Plain
 //! `mpsc` + `Mutex<Receiver>` work distribution — no external crates in
 //! the offline vendor set.
+//!
+//! Fault model: a [`Job`] that panics unwinds out of the worker loop and
+//! kills that one thread (the session's evaluation jobs catch their own
+//! panics, so this only happens to raw jobs injected for fault testing —
+//! or to bugs). The pool degrades instead of cascading:
+//!
+//! * the shared job-queue lock is poison-recovering, so one dead worker
+//!   never wedges the survivors ([`crate::util::sync::lock_recover`]);
+//! * [`WorkerPool::alive`] reports how many workers remain;
+//! * [`WorkerPool::submit`] returns an error (instead of panicking) once
+//!   every worker is gone, which `evaluate_many` converts into per-slot
+//!   "worker died" results for the caller.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+use crate::util::error::Result;
+use crate::util::sync::lock_recover;
 
 /// A unit of work shipped to a worker thread.
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -18,6 +34,17 @@ pub struct WorkerPool {
     tx: Option<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     size: usize,
+    alive: Arc<AtomicUsize>,
+}
+
+/// Decrements the live-worker count however the worker exits — clean
+/// channel shutdown or a panicking job.
+struct AliveGuard(Arc<AtomicUsize>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Chunk size for batched job submission: aim for several chunks per
@@ -45,34 +72,48 @@ impl WorkerPool {
         let size = resolve_threads(threads);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let alive = Arc::new(AtomicUsize::new(size));
         let handles = (0..size)
             .map(|_| {
                 let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
-                std::thread::spawn(move || loop {
-                    // Hold the lock only while dequeuing, not while running.
-                    let job = match rx.lock().unwrap().recv() {
-                        Ok(job) => job,
-                        Err(_) => break, // all senders dropped: shut down
-                    };
-                    job();
+                let guard = AliveGuard(alive.clone());
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    loop {
+                        // Hold the lock only while dequeuing, not while
+                        // running; recover it if a sibling died mid-recv.
+                        let job = match lock_recover(&rx).recv() {
+                            Ok(job) => job,
+                            Err(_) => break, // all senders dropped: shut down
+                        };
+                        job();
+                    }
                 })
             })
             .collect();
-        WorkerPool { tx: Some(tx), handles, size }
+        WorkerPool { tx: Some(tx), handles, size, alive }
     }
 
-    /// Number of worker threads.
+    /// Number of worker threads spawned.
     pub fn size(&self) -> usize {
         self.size
     }
 
-    /// Enqueue a job; it runs on the first free worker.
-    pub fn submit(&self, job: Job) {
-        self.tx
+    /// Workers still running (spawned minus panicked/exited).
+    pub fn alive(&self) -> usize {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// Enqueue a job; it runs on the first free worker. Errors when no
+    /// worker is left to receive it (every thread has died) — the caller
+    /// decides whether that degrades a batch or aborts a run.
+    pub fn submit(&self, job: Job) -> Result<()> {
+        let tx = self
+            .tx
             .as_ref()
-            .expect("worker pool already shut down")
-            .send(job)
-            .expect("worker threads exited unexpectedly");
+            .ok_or_else(|| crate::err!("worker pool already shut down"))?;
+        tx.send(job)
+            .map_err(|_| crate::err!("all {} worker threads have died", self.size))
     }
 }
 
@@ -102,7 +143,8 @@ mod tests {
             pool.submit(Box::new(move || {
                 counter.fetch_add(1, Ordering::Relaxed);
                 let _ = tx.send(());
-            }));
+            }))
+            .unwrap();
         }
         drop(tx);
         assert_eq!(rx.iter().count(), 50);
@@ -117,7 +159,8 @@ mod tests {
             let counter = counter.clone();
             pool.submit(Box::new(move || {
                 counter.fetch_add(1, Ordering::Relaxed);
-            }));
+            }))
+            .unwrap();
         }
         drop(pool); // must drain the queue before joining
         assert_eq!(counter.load(Ordering::Relaxed), 10);
@@ -127,6 +170,51 @@ mod tests {
     fn zero_means_available_parallelism() {
         let pool = WorkerPool::new(0);
         assert!(pool.size() >= 1);
+    }
+
+    #[test]
+    fn a_panicking_job_kills_one_worker_not_the_pool() {
+        let pool = WorkerPool::new(2);
+        pool.submit(Box::new(|| panic!("deliberate worker death"))).unwrap();
+        // Wait for the panicked thread to unwind.
+        for _ in 0..200 {
+            if pool.alive() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(pool.alive(), 1, "exactly one worker died");
+        // The survivor still serves jobs (and the queue lock recovered).
+        let (tx, rx) = channel();
+        pool.submit(Box::new(move || {
+            let _ = tx.send(42);
+        }))
+        .unwrap();
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(5)), Ok(42));
+    }
+
+    #[test]
+    fn submit_errors_once_every_worker_is_dead() {
+        let pool = WorkerPool::new(1);
+        pool.submit(Box::new(|| panic!("kill the only worker"))).unwrap();
+        for _ in 0..200 {
+            if pool.alive() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(pool.alive(), 0);
+        // The channel's receiver died with the worker: submit must report
+        // an error, not panic the caller.
+        let mut refused = false;
+        for _ in 0..200 {
+            if pool.submit(Box::new(|| {})).is_err() {
+                refused = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(refused, "a dead pool must refuse jobs with an error");
     }
 
     #[test]

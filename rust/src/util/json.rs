@@ -139,7 +139,7 @@ impl Json {
 
     /// Parse a JSON document. Strict: trailing garbage is an error.
     pub fn parse(text: &str) -> Result<Json, String> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -150,9 +150,18 @@ impl Json {
     }
 }
 
+/// Maximum container nesting accepted by [`Json::parse`]. The parser is
+/// recursive-descent, so without a cap a hostile `[[[[…` document would
+/// overflow the stack and abort the whole process — fatal for a
+/// long-lived daemon. Every legitimate EOCAS document nests fewer than
+/// ten levels deep.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current container nesting depth (see [`MAX_PARSE_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -262,12 +271,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            return Err(format!("nesting deeper than {MAX_PARSE_DEPTH} levels"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, String> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -279,6 +298,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 other => return Err(format!("expected , or ] got {other:?}")),
@@ -288,10 +308,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, String> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -308,6 +330,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 other => return Err(format!("expected , or }} got {other:?}")),
@@ -359,5 +382,17 @@ mod tests {
     fn escapes_control_chars() {
         let s = Json::Str("a\"b\\c\n".into()).dumps();
         assert_eq!(s, r#""a\"b\\c\n""#);
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // A hostile `[[[[…` must come back as Err, not abort the process.
+        let hostile = "[".repeat(100_000);
+        assert!(Json::parse(&hostile).unwrap_err().contains("nesting"));
+        let mixed = "{\"a\":".repeat(50_000) + "1" + &"}".repeat(50_000);
+        assert!(Json::parse(&mixed).unwrap_err().contains("nesting"));
+        // Legitimate nesting well under the cap still parses.
+        let fine = "[".repeat(64) + &"]".repeat(64);
+        assert!(Json::parse(&fine).is_ok());
     }
 }

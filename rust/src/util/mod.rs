@@ -8,6 +8,7 @@ pub mod error;
 pub mod json;
 pub mod prng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 
 /// Human-readable byte size ("2.03 MB" style, powers of 10 to match the

@@ -1,0 +1,42 @@
+//! Poison-recovering synchronization helpers.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked critical section into a
+//! process-wide cascade: every later `lock()` returns `Err(Poisoned)`
+//! and the `unwrap` re-panics. For a long-lived daemon that is exactly
+//! backwards — a panicking evaluation must degrade *that request*, not
+//! every future cache access. The data guarded by the session and
+//! worker-pool mutexes is a cache or a queue: a panic mid-update can at
+//! worst leave a stale or missing entry, never an invariant violation
+//! that later readers cannot tolerate, so recovering the guard is safe.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Use for locks whose protected state stays valid under abandonment
+/// (caches, counters, work queues) — i.e. where every critical section
+/// leaves the data structurally sound at every await/panic point.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(7));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex really is poisoned");
+        assert_eq!(*lock_recover(&m), 7, "the data survives");
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

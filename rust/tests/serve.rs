@@ -1,0 +1,446 @@
+//! End-to-end tests for the `eocas serve` daemon: protocol round-trips,
+//! hostile input, deadlines, admission control, fault isolation — and
+//! the survival criterion: after absorbing all of that, the daemon still
+//! answers bit-identically to a fresh in-process `Session`.
+//!
+//! Every server here binds 127.0.0.1:0 (a fresh ephemeral port), so the
+//! tests are parallel-safe and never collide with a real daemon.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use eocas::arch::Architecture;
+use eocas::dataflow::templates::Family;
+use eocas::model::SnnModel;
+use eocas::serve::client::Client;
+use eocas::serve::{ServeConfig, Server, FAULT_INJECTION_LABEL};
+use eocas::session::{Dataflow, EvalRequest, Session};
+use eocas::sparsity::SparsityProfile;
+use eocas::util::json::Json;
+
+fn small_req(fam: Family, act: f64) -> EvalRequest {
+    EvalRequest::new(SnnModel::paper_layer(), Architecture::paper_default(), fam)
+        .with_sparsity(SparsityProfile::nominal(1, act))
+}
+
+/// A request expensive enough to hold the batcher busy for a while: a
+/// full mapper schedule search (up to 200k candidate mappings priced).
+fn slow_req(i: usize) -> EvalRequest {
+    EvalRequest::new(
+        SnnModel::paper_layer(),
+        Architecture::paper_default(),
+        Dataflow::MapperOptimal,
+    )
+    // Distinct activity per call: distinct cache keys, always cold.
+    .with_activity(0.31 + 0.01 * i as f64)
+}
+
+fn test_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        io_timeout: Duration::from_secs(2),
+        ..ServeConfig::default()
+    }
+}
+
+fn stat(doc: &Json, path: &[&str]) -> f64 {
+    let mut at = doc;
+    for k in path {
+        at = at.get(k).unwrap_or_else(|| panic!("stats missing {path:?}"));
+    }
+    at.as_f64().unwrap_or_else(|| panic!("stats {path:?} not a number"))
+}
+
+fn kind(resp: &Json) -> Option<&str> {
+    resp.get("kind").and_then(Json::as_str)
+}
+
+/// Poll `/stats` until `pred` holds (30 s cap).
+fn wait_for_stat(watch: &mut Client, pred: impl Fn(&Json) -> bool, what: &str) -> Json {
+    for _ in 0..3000 {
+        let s = watch.stats().expect("stats poll");
+        if pred(&s) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for: {what}");
+}
+
+// ---------------------------------------------------------------------------
+// Round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ndjson_roundtrip_is_bit_identical_to_a_direct_session() {
+    let server = Server::start(test_cfg()).unwrap();
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(60)).unwrap();
+    assert_eq!(
+        c.ping().unwrap().get("status").and_then(Json::as_str),
+        Some("ok")
+    );
+    let req = small_req(Family::AdvWs, 0.75);
+    let served = Client::decode(&c.evaluate(&req).unwrap()).unwrap();
+    let oracle = Session::builder().threads(1).build().evaluate(&req).unwrap();
+    assert_eq!(served, *oracle, "served result must equal a direct evaluation");
+    // Second call is served from the result cache — still identical.
+    let again = Client::decode(&c.evaluate(&req).unwrap()).unwrap();
+    assert_eq!(again, *oracle);
+    let s = c.stats().unwrap();
+    assert_eq!(stat(&s, &["requests", "ok"]), 2.0);
+    assert!(stat(&s, &["cache", "result_hits"]) >= 1.0, "second call must hit");
+    assert_eq!(stat(&s, &["requests", "received"]), 2.0);
+    server.stop();
+}
+
+#[test]
+fn http_endpoints_serve_single_shot_clients() {
+    let server = Server::start(test_cfg()).unwrap();
+    let addr = server.addr().to_string();
+    let http = |raw: &[u8]| -> (String, String) {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        s.write_all(raw).unwrap();
+        let mut text = String::new();
+        // The server closes after one response (connection: close).
+        s.read_to_string(&mut text).unwrap();
+        let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+        (head.to_string(), body.to_string())
+    };
+
+    let (head, body) = http(b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+    assert!(head.contains("content-length:"), "{head}");
+    assert_eq!(
+        Json::parse(&body).unwrap().get("status").and_then(Json::as_str),
+        Some("ok")
+    );
+
+    let req = small_req(Family::Os, 0.6);
+    let payload = req.to_json().dumps();
+    let raw = format!(
+        "POST /evaluate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{payload}",
+        payload.len()
+    );
+    let (head, body) = http(raw.as_bytes());
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+    let served = Client::decode(&Json::parse(&body).unwrap()).unwrap();
+    let oracle = Session::builder().threads(1).build().evaluate(&req).unwrap();
+    assert_eq!(served, *oracle, "HTTP path must match a direct evaluation");
+
+    let (head, body) = http(b"GET /stats HTTP/1.1\r\n\r\n");
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+    let s = Json::parse(&body).unwrap();
+    assert!(stat(&s, &["requests", "ok"]) >= 1.0);
+
+    let (head, _) = http(b"GET /no-such-route HTTP/1.1\r\n\r\n");
+    assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+    let (head, body) = http(b"POST /evaluate HTTP/1.1\r\ncontent-length: 3\r\n\r\nnop");
+    assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+    assert_eq!(kind(&Json::parse(&body).unwrap()), Some("malformed"));
+    let (head, _) = http(b"PUT /evaluate HTTP/1.1\r\ncontent-length: 0\r\n\r\n");
+    assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Hostile input
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hostile_corpus_degrades_one_request_never_the_connection() {
+    // Every corpus entry must (a) be a clean Err from the parsing layer
+    // directly, and (b) come back as an in-protocol `malformed` error on
+    // a persistent connection that then keeps serving.
+    let valid = small_req(Family::AdvWs, 0.8).to_json().dumps();
+    let corpus: Vec<String> = vec![
+        "not json at all".into(),
+        "{".into(),
+        "[1,2".into(),
+        "123".into(),
+        "\"just a string\"".into(),
+        "[]".into(),
+        "{\"schema\":1}".into(),                       // right version, no payload
+        valid.replacen("\"schema\":4", "\"schema\":99", 1), // future schema
+        valid[..valid.len() / 2].to_string(),          // truncated mid-document
+        "[".repeat(10_000),                            // nesting bomb
+        "{\"op\":\"nuke\"}".into(),                    // unknown control op
+    ];
+    // (a) the session JSON layer: errors, never panics.
+    for text in &corpus {
+        assert!(
+            EvalRequest::from_json_str(text).is_err(),
+            "corpus entry parsed as a request: {}",
+            &text[..text.len().min(60)]
+        );
+    }
+    // (b) the daemon, all on ONE connection.
+    let server = Server::start(test_cfg()).unwrap();
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(60)).unwrap();
+    for text in &corpus {
+        let resp = c.roundtrip(text).unwrap();
+        assert_eq!(
+            kind(&resp),
+            Some("malformed"),
+            "entry {}",
+            &text[..text.len().min(60)]
+        );
+    }
+    // The same connection still evaluates correctly afterwards.
+    let req = small_req(Family::Rs, 0.7);
+    let served = Client::decode(&c.evaluate(&req).unwrap()).unwrap();
+    let oracle = Session::builder().threads(1).build().evaluate(&req).unwrap();
+    assert_eq!(served, *oracle);
+    let s = c.stats().unwrap();
+    assert_eq!(stat(&s, &["requests", "malformed"]), corpus.len() as f64);
+    server.stop();
+}
+
+#[test]
+fn non_utf8_bytes_get_an_in_protocol_error() {
+    let server = Server::start(test_cfg()).unwrap();
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(&[0xFF, 0xFE, b'{', b'}', b'\n']).unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim_end()).unwrap();
+    assert_eq!(kind(&resp), Some("malformed"));
+    assert!(
+        resp.get("error").and_then(Json::as_str).unwrap().contains("UTF-8"),
+        "{resp:?}"
+    );
+    server.stop();
+}
+
+#[test]
+fn oversized_frames_are_refused_with_too_large() {
+    let cfg = ServeConfig { max_body_bytes: 64 * 1024, ..test_cfg() };
+    let server = Server::start(cfg).unwrap();
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(30)).unwrap();
+    // The server refuses after reading one cap's worth and closes without
+    // draining the flood, so the client-side view races between "got the
+    // too_large line" and "connection reset"; either is a refusal.
+    if let Ok(resp) = c.roundtrip(&"x".repeat(128 * 1024)) {
+        assert_eq!(kind(&resp), Some("too_large"));
+    }
+    // The authoritative signal is the server's ledger — and a fresh
+    // connection still works.
+    let mut c2 = Client::connect(&server.addr().to_string(), Duration::from_secs(30)).unwrap();
+    assert!(Client::decode(&c2.evaluate(&small_req(Family::Ws2, 0.5)).unwrap()).is_ok());
+    wait_for_stat(
+        &mut c2,
+        |s| stat(s, &["requests", "too_large"]) >= 1.0,
+        "oversized frame counted",
+    );
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Deadlines and admission control
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadlines_yield_explicit_errors_not_hung_connections() {
+    let server = Server::start(test_cfg()).unwrap();
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(60)).unwrap();
+    let req = small_req(Family::Ws1, 0.42);
+    // An impossible deadline: explicit, immediate deadline_exceeded.
+    let resp = c.evaluate_with_deadline(&req, 0).unwrap();
+    assert_eq!(kind(&resp), Some("deadline_exceeded"));
+    // The same connection then serves the same request with a sane
+    // deadline, bit-identical to a fresh session.
+    let served = Client::decode(&c.evaluate_with_deadline(&req, 60_000).unwrap()).unwrap();
+    let oracle = Session::builder().threads(1).build().evaluate(&req).unwrap();
+    assert_eq!(served, *oracle);
+    let s = c.stats().unwrap();
+    assert!(stat(&s, &["requests", "deadline_exceeded"]) >= 1.0);
+    assert!(stat(&s, &["requests", "ok"]) >= 1.0);
+    server.stop();
+}
+
+#[test]
+fn admission_control_sheds_load_with_an_overloaded_error() {
+    // queue_cap=1, batch_max=1: one request being evaluated, one queued,
+    // the third must be shed.
+    let cfg = ServeConfig {
+        threads: 1,
+        queue_cap: 1,
+        batch_max: 1,
+        deadline: Duration::from_secs(300),
+        io_timeout: Duration::from_secs(300),
+        ..test_cfg()
+    };
+    let server = Server::start(cfg).unwrap();
+    let addr = server.addr().to_string();
+    let mut watch = Client::connect(&addr, Duration::from_secs(30)).unwrap();
+    let base_batches = stat(&watch.stats().unwrap(), &["queue", "batches"]);
+
+    // A occupies the batcher (popped from the queue, evaluating).
+    let a = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr, Duration::from_secs(300)).unwrap();
+            c.evaluate(&slow_req(0)).unwrap()
+        })
+    };
+    wait_for_stat(
+        &mut watch,
+        |s| stat(s, &["queue", "batches"]) > base_batches,
+        "batcher picked up the first slow request",
+    );
+    // B fills the single queue slot.
+    let b = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr, Duration::from_secs(300)).unwrap();
+            c.evaluate(&slow_req(1)).unwrap()
+        })
+    };
+    wait_for_stat(
+        &mut watch,
+        |s| stat(s, &["queue", "depth"]) >= 1.0,
+        "second slow request queued",
+    );
+    // C must be shed — immediately, not after a timeout.
+    let mut c3 = Client::connect(&addr, Duration::from_secs(30)).unwrap();
+    let resp = c3.evaluate(&slow_req(2)).unwrap();
+    assert_eq!(kind(&resp), Some("overloaded"));
+    let s = watch.stats().unwrap();
+    assert!(stat(&s, &["requests", "shed"]) >= 1.0);
+    // The admitted requests still complete with real results.
+    for handle in [a, b] {
+        let resp = handle.join().unwrap();
+        assert_eq!(resp.get("status").and_then(Json::as_str), Some("ok"), "{resp:?}");
+    }
+    server.stop();
+}
+
+#[test]
+fn connection_cap_refuses_excess_clients() {
+    let cfg = ServeConfig { max_connections: 2, ..test_cfg() };
+    let server = Server::start(cfg).unwrap();
+    let addr = server.addr().to_string();
+    let mut c1 = Client::connect(&addr, Duration::from_secs(30)).unwrap();
+    let mut c2 = Client::connect(&addr, Duration::from_secs(30)).unwrap();
+    // Round-trips prove both connections are registered server-side.
+    c1.ping().unwrap();
+    c2.ping().unwrap();
+    // The third client is refused with an in-protocol notice.
+    let s3 = TcpStream::connect(&addr).unwrap();
+    s3.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut line = String::new();
+    BufReader::new(s3).read_line(&mut line).unwrap();
+    assert_eq!(kind(&Json::parse(line.trim_end()).unwrap()), Some("overloaded"));
+    let s = c1.stats().unwrap();
+    assert!(stat(&s, &["requests", "rejected_conns"]) >= 1.0);
+    // Freeing a slot admits new clients again.
+    drop(c2);
+    let mut c4 = wait_for_connect(&addr);
+    c4.ping().unwrap();
+    server.stop();
+}
+
+/// Connect, retrying until the server has released a connection slot.
+fn wait_for_connect(addr: &str) -> Client {
+    for _ in 0..3000 {
+        if let Ok(mut c) = Client::connect(addr, Duration::from_secs(30)) {
+            // A refused connection still answers one line — an
+            // `overloaded` error doc — so check for a real pong.
+            if let Ok(pong) = c.ping() {
+                if pong.get("status").and_then(Json::as_str) == Some("ok") {
+                    return c;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("connection slot never freed");
+}
+
+// ---------------------------------------------------------------------------
+// The survival criterion
+// ---------------------------------------------------------------------------
+
+#[test]
+fn daemon_survives_mixed_hostility_and_stays_bit_identical() {
+    let cfg = ServeConfig {
+        max_body_bytes: 64 * 1024,
+        fault_injection: true,
+        ..test_cfg()
+    };
+    let server = Server::start(cfg).unwrap();
+    let addr = server.addr().to_string();
+    let mut watch = Client::connect(&addr, Duration::from_secs(60)).unwrap();
+
+    // Malformed frames (separate connections, like real broken clients).
+    for line in ["not json", "{]", "{\"schema\":999,\"model\":{}}"] {
+        let mut c = Client::connect(&addr, Duration::from_secs(30)).unwrap();
+        assert_eq!(kind(&c.roundtrip(line).unwrap()), Some("malformed"), "{line}");
+    }
+    // A panicking evaluation, caught and answered in-protocol.
+    {
+        let mut c = Client::connect(&addr, Duration::from_secs(60)).unwrap();
+        let mut req = small_req(Family::AdvWs, 0.5);
+        req.options.label = Some(FAULT_INJECTION_LABEL.into());
+        let resp = c.evaluate(&req).unwrap();
+        assert_eq!(kind(&resp), Some("eval_panic"), "{resp:?}");
+        assert!(
+            resp.get("error").and_then(Json::as_str).unwrap().contains("panicked"),
+            "{resp:?}"
+        );
+    }
+    // An oversized frame (client-side view races with the close; the
+    // stats assertion below is the authoritative check).
+    {
+        let mut c = Client::connect(&addr, Duration::from_secs(30)).unwrap();
+        if let Ok(resp) = c.roundtrip(&"z".repeat(80 * 1024)) {
+            assert_eq!(kind(&resp), Some("too_large"));
+        }
+    }
+    wait_for_stat(
+        &mut watch,
+        |s| stat(s, &["requests", "too_large"]) >= 1.0,
+        "oversized frame counted",
+    );
+    // A client that vanishes mid-request (HTTP body cut short).
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"POST /evaluate HTTP/1.1\r\ncontent-length: 1000\r\n\r\npartial")
+            .unwrap();
+        drop(s); // hang up with 993 bytes owed
+    }
+    wait_for_stat(
+        &mut watch,
+        |s| stat(s, &["requests", "disconnects"]) >= 1.0,
+        "mid-body disconnect registered",
+    );
+
+    // After all of that: every family evaluates on one fresh connection,
+    // each bit-identical to a brand-new in-process session.
+    let oracle_session = Session::builder().threads(1).build();
+    let mut c = Client::connect(&addr, Duration::from_secs(120)).unwrap();
+    for (i, &fam) in Family::ALL.iter().enumerate() {
+        let req = small_req(fam, 0.60 + 0.01 * i as f64);
+        let served = Client::decode(&c.evaluate(&req).unwrap()).unwrap();
+        let oracle = oracle_session.evaluate(&req).unwrap();
+        assert_eq!(served, *oracle, "family {}", fam.name());
+    }
+
+    // The stats ledger reflects every failure mode it absorbed.
+    let s = c.stats().unwrap();
+    assert!(stat(&s, &["requests", "malformed"]) >= 3.0);
+    assert!(stat(&s, &["requests", "panics"]) >= 1.0);
+    assert!(stat(&s, &["requests", "too_large"]) >= 1.0);
+    assert!(stat(&s, &["requests", "disconnects"]) >= 1.0);
+    assert_eq!(stat(&s, &["requests", "ok"]), Family::ALL.len() as f64);
+    assert!(stat(&s, &["latency", "count"]) >= Family::ALL.len() as f64);
+    assert!(stat(&s, &["latency", "p99_us"]) > 0.0);
+    assert!(stat(&s, &["uptime_s"]) >= 0.0);
+
+    // stop() returns the final ledger.
+    let last = server.stop();
+    assert!(stat(&last, &["requests", "received"]) >= Family::ALL.len() as f64);
+}
