@@ -1,23 +1,30 @@
-//! Bench: the architecture-space search — exhaustive vs guided over the
-//! reference space (`configs/space_reference.toml`).
+//! Bench: the architecture-space search — scalar vs fast exhaustive, plus
+//! guided annealing, over the reference space
+//! (`configs/space_reference.toml`).
 //!
 //! Measures, and emits as machine-readable `BENCH_archsearch.json`:
-//! * exhaustive search throughput over the 162 feasible points of the
-//!   reference space (candidates/s, cold caches),
-//! * the guided (annealing) strategy on the same space with a fraction
-//!   of the evaluation budget,
-//! * headline ratios for the CI regression gate: `speedup.evals_saved`
-//!   (exhaustive candidates ÷ guided proposal budget — deterministic by
-//!   construction) and `quality.guided_vs_exhaustive` (exhaustive best
-//!   energy ÷ guided best energy; 1.0 = the guided run found the
-//!   optimum), plus the frontier size and the wall-clock ratio as
-//!   untracked info fields.
+//! * the scalar per-candidate baseline (pruning and the batched SoA
+//!   kernel both disabled — the pre-fast-path code path), cold caches,
+//! * the fast path (branch-and-bound pruning + struct-of-arrays batch
+//!   kernel, the defaults) on the same space, asserted bit-identical,
+//! * the guided (annealing) strategy with a fraction of the budget,
+//! * headline ratios for the CI regression gate:
+//!   `speedup.candidates_per_s` (fast candidates/s ÷ scalar
+//!   candidates/s), `speedup.evals_saved` (exhaustive candidates ÷
+//!   guided proposal budget — deterministic by construction) and
+//!   `quality.guided_vs_exhaustive` (exhaustive best energy ÷ guided
+//!   best energy; 1.0 = the guided run found the optimum), plus the
+//!   frontier size and wall-clock ratio as untracked info fields.
 //!
 //! Flags: `--quick` (CI smoke mode: paper layer, short windows),
-//! `--json PATH` (default `BENCH_archsearch.json`).
+//! `--json PATH` (default `BENCH_archsearch.json`), `--shards K`
+//! (additionally run a K-way `--shard` split of the exhaustive search
+//! and assert the merged frontier is bit-identical to the single run).
 
 use eocas::arch::space::ArchSpace;
-use eocas::dse::archsearch::{search, ArchSearchConfig, ArchSearchResult, Strategy};
+use eocas::dse::archsearch::{
+    merge_checkpoints, search, ArchSearchConfig, ArchSearchResult, Strategy,
+};
 use eocas::model::SnnModel;
 use eocas::session::Session;
 use eocas::sparsity::SparsityProfile;
@@ -27,7 +34,7 @@ use eocas::util::json::Json;
 struct Case {
     key: &'static str,
     stats: BenchStats,
-    /// Candidates priced per timed iteration.
+    /// Candidates decided (priced or pruned) per timed iteration.
     items_per_iter: f64,
 }
 
@@ -77,6 +84,58 @@ fn emit(
     }
 }
 
+/// K-way `--shard` split of the exhaustive search, merged and resumed as
+/// an unsharded checkpoint — must reproduce `full` bit-for-bit.
+fn check_sharded(
+    shards: u32,
+    session: &Session,
+    model: &SnnModel,
+    sparsity: &SparsityProfile,
+    space: &ArchSpace,
+    full: &ArchSearchResult,
+) {
+    let dir = std::env::temp_dir().join(format!("eocas_bench_shards_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create shard scratch dir");
+    let mut paths = Vec::new();
+    let mut decided = 0usize;
+    for i in 0..shards {
+        let ck = dir.join(format!("shard_{i}.json"));
+        let cfg = ArchSearchConfig {
+            strategy: Strategy::Exhaustive,
+            checkpoint: Some(ck.clone()),
+            resume: false,
+            shard: Some((i, shards)),
+            ..ArchSearchConfig::default()
+        };
+        session.clear_caches();
+        let r = search(session, model, sparsity, space, &cfg).unwrap();
+        assert!(r.complete, "shard {}/{shards} must run to completion", i + 1);
+        decided += r.evaluated + r.pruned;
+        paths.push(ck);
+    }
+    let merged = merge_checkpoints(&paths).expect("merge the finished shards");
+    let mk = dir.join("merged.json");
+    std::fs::write(&mk, format!("{}\n", merged.dumps())).expect("write merged checkpoint");
+    let cfg = ArchSearchConfig {
+        strategy: Strategy::Exhaustive,
+        checkpoint: Some(mk),
+        ..ArchSearchConfig::default()
+    };
+    let rm = search(session, model, sparsity, space, &cfg).unwrap();
+    assert_eq!(rm.frontier, full.frontier, "sharded frontier must be bit-identical");
+    assert_eq!(
+        rm.best.as_ref().map(|b| b.energy_j.to_bits()),
+        full.best.as_ref().map(|b| b.energy_j.to_bits()),
+        "sharded best must be bit-identical"
+    );
+    assert_eq!(decided, full.evaluated + full.pruned, "shards must cover the space exactly");
+    println!(
+        "sharded:    {shards}-way split-and-merge decided {decided} candidates; \
+         frontier bit-identical\n"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -85,6 +144,12 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1).cloned())
         .unwrap_or_else(|| "BENCH_archsearch.json".to_string());
+    let shards: u32 = args
+        .iter()
+        .position(|a| a == "--shards")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
     let w = if quick { 0.05 } else { 1.0 };
 
     let model = if quick { SnnModel::paper_layer() } else { SnnModel::cifar100_snn() };
@@ -103,22 +168,44 @@ fn main() {
         cases.push(Case { key, stats, items_per_iter: items });
     };
 
-    // (a) exhaustive over the reference space, cold caches per run.
+    // (a) the scalar baseline: per-candidate session pricing, no
+    // branch-and-bound — the code path before the fast kernel landed.
     let session = Session::builder().threads(0).build();
-    let ex_cfg = ArchSearchConfig {
+    let scalar_cfg = ArchSearchConfig {
         strategy: Strategy::Exhaustive,
+        prune: false,
+        fast_eval: false,
         ..ArchSearchConfig::default()
     };
-    let mut exhaustive: Option<ArchSearchResult> = None;
-    let s = time_it("arch-search exhaustive (reference space)", 2, w, || {
+    let mut scalar: Option<ArchSearchResult> = None;
+    let s = time_it("arch-search exhaustive scalar (reference space)", 2, w, || {
         session.clear_caches();
-        exhaustive =
-            Some(black_box(search(&session, &model, &sparsity, &space, &ex_cfg).unwrap()));
+        scalar =
+            Some(black_box(search(&session, &model, &sparsity, &space, &scalar_cfg).unwrap()));
     });
-    let exhaustive = exhaustive.expect("timed at least once");
-    push("exhaustive_reference", s, exhaustive.evaluated as f64);
+    let scalar = scalar.expect("timed at least once");
+    push("exhaustive_scalar_baseline", s, scalar.evaluated as f64);
 
-    // (b) guided annealing on the same space, same dataflows, a fraction
+    // (b) the fast path: SoA batch kernel + frontier-aware pruning (the
+    // defaults). Bit-identical to (a) — asserted live on every run.
+    let fast_cfg =
+        ArchSearchConfig { strategy: Strategy::Exhaustive, ..ArchSearchConfig::default() };
+    let mut fast: Option<ArchSearchResult> = None;
+    let s = time_it("arch-search exhaustive fast (SoA + pruning)", 2, w, || {
+        session.clear_caches();
+        fast = Some(black_box(search(&session, &model, &sparsity, &space, &fast_cfg).unwrap()));
+    });
+    let fast = fast.expect("timed at least once");
+    assert_eq!(fast.frontier, scalar.frontier, "fast path must be bit-transparent");
+    assert_eq!(
+        fast.best.as_ref().map(|b| b.energy_j.to_bits()),
+        scalar.best.as_ref().map(|b| b.energy_j.to_bits())
+    );
+    assert_eq!(fast.evaluated + fast.pruned, scalar.evaluated, "every candidate decided");
+    assert!(fast.pruned > 0, "the bound must prune on the reference space");
+    push("exhaustive_fast", s, (fast.evaluated + fast.pruned) as f64);
+
+    // (c) guided annealing on the same space, same dataflows, a fraction
     // of the budget. The seeded run is deterministic, so the quality
     // ratio below is a stable, machine-independent number.
     let g_session = Session::builder().threads(0).build();
@@ -139,33 +226,44 @@ fn main() {
         ));
     });
     let guided = guided.expect("timed at least once");
-    push("guided_reference", s, guided.evaluated as f64);
+    push("guided_reference", s, (guided.evaluated + guided.pruned) as f64);
+
+    if shards > 1 {
+        check_sharded(shards, &session, &model, &sparsity, &space, &fast);
+    }
 
     // Headline ratios for the CI gate.
-    let evals_saved = exhaustive.evaluated as f64 / budget as f64;
-    let ex_best = exhaustive.best.as_ref().expect("feasible space").energy_j;
+    let kernel_speedup = cases[1].per_s() / cases[0].per_s().max(f64::MIN_POSITIVE);
+    let decided = fast.evaluated + fast.pruned;
+    let evals_saved = decided as f64 / budget as f64;
+    let ex_best = fast.best.as_ref().expect("feasible space").energy_j;
     let g_best = guided.best.as_ref().expect("guided found a point").energy_j;
     let quality = ex_best / g_best;
-    let wall_speedup =
-        cases[0].stats.mean_ns / cases[1].stats.mean_ns.max(f64::MIN_POSITIVE);
+    let wall_speedup = cases[0].stats.mean_ns / cases[1].stats.mean_ns.max(f64::MIN_POSITIVE);
     println!(
-        "exhaustive: {} candidates, frontier {} points, best {:.3} uJ",
-        exhaustive.evaluated,
-        exhaustive.frontier.len(),
+        "scalar:     {} candidates, frontier {} points, best {:.3} uJ",
+        scalar.evaluated,
+        scalar.frontier.len(),
         ex_best * 1e6
     );
     println!(
-        "guided:     budget {budget} ({} scored), best {:.3} uJ  => quality {quality:.3}",
+        "fast:       {} priced + {} pruned of {decided}, {kernel_speedup:.1}x candidates/s",
+        fast.evaluated, fast.pruned
+    );
+    println!(
+        "guided:     budget {budget} ({} scored, {} pruned), best {:.3} uJ  \
+         => quality {quality:.3}",
         guided.evaluated,
+        guided.pruned,
         g_best * 1e6
     );
     println!("evals saved (exhaustive / guided budget): {evals_saved:.2}x");
     emit(
         &cases,
-        &[("evals_saved", evals_saved)],
+        &[("candidates_per_s", kernel_speedup), ("evals_saved", evals_saved)],
         &[("guided_vs_exhaustive", quality)],
         &[
-            ("frontier_size", exhaustive.frontier.len() as f64),
+            ("frontier_size", fast.frontier.len() as f64),
             ("wall_speedup", wall_speedup),
         ],
         quick,

@@ -27,6 +27,31 @@
 //!   Every evaluated point still folds into the frontier, so the guided
 //!   run's frontier is a genuine (partial) Pareto set.
 //!
+//! Three throughput layers sit on top (all on by default, all
+//! bit-transparent to the frontier):
+//!
+//! * **SoA fast path** — when every dataflow is a family template, the
+//!   encoding is raw, and the space is single-core, batches are priced
+//!   by the struct-of-arrays kernel ([`crate::energy::batch`]) across
+//!   session worker threads instead of one `EvalRequest` per
+//!   `(candidate, dataflow)`. Scores are bit-identical to the session
+//!   path (pinned by `tests/kernel_equivalence.rs`); `--no-fast`
+//!   disables it.
+//! * **Branch-and-bound pruning** — an admissible lower bound
+//!   ([`crate::energy::bound::ModelBound`]) skips candidates that
+//!   provably cannot improve the current frontier or best. Exhaustive
+//!   pruning is frontier-preserving by dominance; annealing pruning
+//!   additionally pre-draws the Metropolis variate so the RNG stream —
+//!   and therefore the trajectory — is identical with pruning on or
+//!   off. `--no-prune` disables it; pruned candidates are counted in
+//!   [`ArchSearchResult::pruned`].
+//! * **Sharding** — `--shard i/K` runs a disjoint slice (exhaustive:
+//!   flat-index range; annealing: restart range, each restart seeded
+//!   independently) writing a mergeable checkpoint;
+//!   [`merge_checkpoints`] (CLI `eocas arch-search-merge`) combines K
+//!   completed shards into one finished checkpoint whose frontier and
+//!   best are bit-identical to the unsharded run's.
+//!
 //! Runs are deterministic for a `(space, config)` pair — including
 //! across session thread counts — and checkpoint to JSON
 //! ([`ArchSearchConfig::checkpoint`]): a run resumed from its checkpoint
@@ -41,6 +66,8 @@ use std::sync::Arc;
 use crate::arch::space::{ArchSpace, Coords, NUM_AXES};
 use crate::arch::Architecture;
 use crate::dataflow::templates::Family;
+use crate::energy::batch::{family_model_batch, BatchScore};
+use crate::energy::bound::ModelBound;
 use crate::err;
 use crate::model::SnnModel;
 use crate::session::{Dataflow, EvalRequest, EvalResult, Session};
@@ -50,6 +77,7 @@ use crate::spike::traffic::SpikeEncoding;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 use crate::util::prng::SplitMix64;
+use crate::workload::LayerWorkload;
 
 /// Largest space the exhaustive strategy will walk.
 pub const EXHAUSTIVE_LIMIT: u128 = 1 << 22;
@@ -60,8 +88,25 @@ pub const AUTO_EXHAUSTIVE_POINTS: u128 = 4096;
 /// Feasible-start draws before the annealer gives up on a space.
 const MAX_START_DRAWS: usize = 64;
 
-/// Checkpoint JSON schema version.
-pub const CHECKPOINT_SCHEMA: u32 = 1;
+/// Checkpoint JSON schema version. Version 2 adds the `pruned` counter
+/// and the `shard` descriptor; version-1 checkpoints are still read
+/// (`pruned` = 0, unsharded).
+pub const CHECKPOINT_SCHEMA: u32 = 2;
+
+/// Per-restart RNG stream constant: restart `r` of an annealing run
+/// draws from `SplitMix64::new(seed ^ r·GOLDEN)`. Restart 0 keeps the
+/// bare seed; later restarts get independent deterministic streams, so
+/// a shard that starts at restart `r` replays exactly the trajectory
+/// the unsharded run gives that restart.
+const RESTART_STREAM: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Safety margin on the pruner's Metropolis upper-bound probability:
+/// a proposal is only pruned when the pre-drawn uniform exceeds the
+/// bound-derived acceptance ceiling by at least this much, guarding the
+/// (libm-dependent) `exp` against non-monotone rounding at the exact
+/// threshold. The margin only makes pruning *less* eager — trajectory
+/// preservation never depends on it.
+const PRUNE_REJECT_MARGIN: f64 = 1e-9;
 
 /// Search strategy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -131,7 +176,22 @@ pub struct ArchSearchConfig {
     /// to family requests — a mapper request keeps raw pricing.
     pub spike_encoding: SpikeEncoding,
     /// Candidates per `evaluate_many` batch in the exhaustive walk.
+    /// `0` (the default) sizes batches from the session's worker-pool
+    /// width: `4 × threads`, clamped to `[1, 256]`.
     pub batch: usize,
+    /// Branch-and-bound pruning via the admissible lower bound
+    /// ([`crate::energy::bound::ModelBound`]). Frontier-preserving; off
+    /// with `--no-prune`.
+    pub prune: bool,
+    /// Struct-of-arrays batch kernel for eligible searches (family-only
+    /// dataflows, raw encoding, single-core space). Bit-identical to the
+    /// session path; off with `--no-fast`.
+    pub fast_eval: bool,
+    /// Run only shard `i` of `K` (0-based internally; the CLI takes
+    /// 1-based `--shard i/K`). Exhaustive shards split the flat index
+    /// range, annealing shards split the restart range. Completed shard
+    /// checkpoints merge via [`merge_checkpoints`].
+    pub shard: Option<(u32, u32)>,
     /// Stop after scoring this many candidates in this call (batch
     /// granularity). The partial result is returned either way, but only
     /// a configured `checkpoint` persists the progress for a resumed
@@ -155,7 +215,10 @@ impl Default for ArchSearchConfig {
             seed: 0xA2C5_EA2C,
             temporal: None,
             spike_encoding: SpikeEncoding::Raw,
-            batch: 64,
+            batch: 0,
+            prune: true,
+            fast_eval: true,
+            shard: None,
             limit: None,
             checkpoint: None,
             checkpoint_every: 256,
@@ -174,8 +237,13 @@ impl ArchSearchConfig {
         if self.spike_encoding == SpikeEncoding::Auto && self.temporal.is_none() {
             return Err(err!("spike_encoding=auto requires a temporal sparsity source"));
         }
-        if self.batch == 0 {
-            return Err(err!("batch size must be >= 1"));
+        if let Some((i, k)) = self.shard {
+            if k == 0 {
+                return Err(err!("shard count must be >= 1"));
+            }
+            if i >= k {
+                return Err(err!("shard index {} out of range for {} shards", i + 1, k));
+            }
         }
         if let Strategy::Annealing { iters, restarts, t0, cooling } = self.strategy {
             if iters == 0 || restarts == 0 {
@@ -226,6 +294,9 @@ pub struct ArchSearchResult {
     pub total_points: u128,
     /// Candidates scored (annealing counts repeated visits).
     pub evaluated: usize,
+    /// Candidates killed by the branch-and-bound lower bound before full
+    /// pricing. `evaluated + pruned` is the decided candidate count.
+    pub pruned: usize,
     /// Points skipped as infeasible.
     pub infeasible: usize,
     /// `EvalRequest`s issued (evaluated × dataflows).
@@ -270,6 +341,7 @@ enum Cursor {
 struct Restored {
     done: bool,
     evaluated: usize,
+    pruned: usize,
     infeasible: usize,
     evaluations: usize,
     best: Option<ScoredPoint>,
@@ -277,9 +349,38 @@ struct Restored {
     cursor: Cursor,
 }
 
+/// The exhaustive shard's flat-index slice (or the annealing shard's
+/// restart slice): shard `i` of `k` owns `[total·i/k, total·(i+1)/k)`.
+/// Slices are disjoint, cover the range, and are monotone in `i`.
+fn shard_range(total: u128, shard: Option<(u32, u32)>) -> (u128, u128) {
+    match shard {
+        None => (0, total),
+        Some((i, k)) => {
+            let (i, k) = (i as u128, k as u128);
+            (total * i / k, total * (i + 1) / k)
+        }
+    }
+}
+
+/// The deterministic RNG stream of one annealing restart. Every restart
+/// reseeds from the config seed (not from wherever the previous restart
+/// left the stream), which is what makes restart ranges shardable.
+fn restart_rng(seed: u64, restart: usize) -> SplitMix64 {
+    SplitMix64::new(seed ^ (restart as u64).wrapping_mul(RESTART_STREAM))
+}
+
 // ---------------------------------------------------------------------------
 // The run
 // ---------------------------------------------------------------------------
+
+/// Precomputed state of the struct-of-arrays fast path: the memoized
+/// workloads the session would price from, and the family list in
+/// dataflow order (so the argmin tie-break matches the session's
+/// first-wins scan).
+struct FastPath {
+    wls: Arc<Vec<LayerWorkload>>,
+    families: Vec<Family>,
+}
 
 struct Run<'a> {
     session: &'a Session,
@@ -290,7 +391,12 @@ struct Run<'a> {
     dataflows: Vec<Dataflow>,
     fingerprint: String,
     strategy: String,
+    /// Lower-bound tables when pruning is on.
+    bound: Option<ModelBound>,
+    /// SoA kernel state when the search is fast-path eligible.
+    fast: Option<FastPath>,
     evaluated: usize,
+    pruned: usize,
     infeasible: usize,
     evaluations: usize,
     best: Option<ScoredPoint>,
@@ -302,6 +408,42 @@ struct Run<'a> {
 impl<'a> Run<'a> {
     fn limit_reached(&self) -> bool {
         self.cfg.limit.is_some_and(|l| self.scored_this_call >= l)
+    }
+
+    /// Candidates per batch: the configured size, or (at 0 = auto) four
+    /// per session worker so the scoring pool stays saturated.
+    fn batch_size(&self) -> usize {
+        if self.cfg.batch > 0 {
+            self.cfg.batch
+        } else {
+            (self.session.threads().max(1) * 4).clamp(1, 256)
+        }
+    }
+
+    /// The admissible floor of a candidate's energy, when pruning is on.
+    fn lower_bound(&self, coords: Coords, arch: &Architecture) -> Option<f64> {
+        let b = self.bound.as_ref()?;
+        let mut lb = b.lower_bound(arch, self.session.energy_config());
+        // A multi-core score sums per-core partition energies plus NoC
+        // traffic: mathematically ≥ the whole-layer floor (partitions
+        // cover the extents, NoC is non-negative), but the per-core
+        // terms round independently, so shave one-sided slack — far
+        // below any real partition/NoC overhead — to keep the floor
+        // admissible in f64 as well.
+        if self.space.cores[coords[7]] > 1 {
+            lb *= 1.0 - 1e-9;
+        }
+        Some(lb)
+    }
+
+    /// Exhaustive-walk prune test: a candidate whose floor is dominated
+    /// by a frontier point (energy floor no better, capacity no better)
+    /// cannot enter the frontier or beat the best — the frontier point
+    /// already dominates anything the candidate could score.
+    fn frontier_dominates_bound(&self, lb: f64, onchip_bytes: u64) -> bool {
+        self.frontier.iter().any(|q| {
+            q.energy_j.total_cmp(&lb) != Ordering::Greater && q.onchip_bytes <= onchip_bytes
+        })
     }
 
     fn request(&self, coords: Coords, arch: &Architecture, dataflow: Dataflow) -> EvalRequest {
@@ -327,10 +469,13 @@ impl<'a> Run<'a> {
         arch.hier.onchip_bytes() * space.cores[coords[7]] as u64
     }
 
-    /// Price a batch of candidates (one `evaluate_many` across candidates
-    /// × dataflows), score each by its best dataflow, fold into the
-    /// frontier.
-    fn score_batch(&mut self, batch: &[(Coords, Architecture)]) -> Result<Vec<ScoredPoint>> {
+    /// Score a batch through the session (one `evaluate_many` across
+    /// candidates × dataflows): per candidate, the winning dataflow's
+    /// `(label, energy, cycles)`.
+    fn session_scores(
+        &self,
+        batch: &[(Coords, Architecture)],
+    ) -> Result<Vec<(String, f64, u64)>> {
         let nd = self.dataflows.len();
         let mut reqs = Vec::with_capacity(batch.len() * nd);
         for (coords, arch) in batch {
@@ -340,7 +485,7 @@ impl<'a> Run<'a> {
         }
         let results = self.session.evaluate_many(&reqs);
         let mut out = Vec::with_capacity(batch.len());
-        for (i, (coords, arch)) in batch.iter().enumerate() {
+        for (i, (coords, _)) in batch.iter().enumerate() {
             let mut win: Option<Arc<EvalResult>> = None;
             for res in &results[i * nd..(i + 1) * nd] {
                 let r = match res {
@@ -361,13 +506,83 @@ impl<'a> Run<'a> {
                 }
             }
             let r = win.expect("config guarantees at least one dataflow");
+            out.push((r.dataflow.clone(), r.overall_j, r.cycles));
+        }
+        Ok(out)
+    }
+
+    /// Score a batch through the struct-of-arrays kernel, parallelized
+    /// over candidate chunks on plain scoped threads (the per-candidate
+    /// work is embarrassingly parallel and deterministic, so the chunking
+    /// cannot affect the scores). The winner per candidate is the first
+    /// family attaining the minimum energy, in dataflow order — the same
+    /// tie-break as the session scan.
+    fn fast_scores(
+        &self,
+        fp: &FastPath,
+        batch: &[(Coords, Architecture)],
+    ) -> Vec<(String, f64, u64)> {
+        let cfg = self.session.energy_config();
+        let chunk = batch.len().div_ceil(self.session.threads().max(1)).max(1);
+        let mut out = Vec::with_capacity(batch.len());
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for part in batch.chunks(chunk) {
+                let families = &fp.families;
+                let wls = &fp.wls;
+                handles.push(scope.spawn(move || {
+                    let archs: Vec<&Architecture> =
+                        part.iter().map(|(_, a)| a).collect();
+                    let mut scores: Vec<Option<(usize, BatchScore)>> =
+                        vec![None; part.len()];
+                    for (fi, &fam) in families.iter().enumerate() {
+                        let col = family_model_batch(wls, fam, &archs, cfg);
+                        for (c, s) in col.into_iter().enumerate() {
+                            let better = match &scores[c] {
+                                None => true,
+                                Some((_, w)) => {
+                                    s.overall_j.total_cmp(&w.overall_j)
+                                        == Ordering::Less
+                                }
+                            };
+                            if better {
+                                scores[c] = Some((fi, s));
+                            }
+                        }
+                    }
+                    scores
+                        .into_iter()
+                        .map(|s| {
+                            let (fi, s) = s.expect("families are non-empty");
+                            (families[fi].name().to_string(), s.overall_j, s.cycles)
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                out.extend(h.join().expect("batch-kernel worker panicked"));
+            }
+        });
+        out
+    }
+
+    /// Price a batch of candidates, score each by its best dataflow, fold
+    /// into the frontier.
+    fn score_batch(&mut self, batch: &[(Coords, Architecture)]) -> Result<Vec<ScoredPoint>> {
+        let nd = self.dataflows.len();
+        let scores = match &self.fast {
+            Some(fp) => self.fast_scores(fp, batch),
+            None => self.session_scores(batch)?,
+        };
+        let mut out = Vec::with_capacity(batch.len());
+        for ((coords, arch), (dataflow, energy_j, cycles)) in batch.iter().zip(scores) {
             let p = ScoredPoint {
                 coords: *coords,
                 arch: arch.clone(),
-                dataflow: r.dataflow.clone(),
-                energy_j: r.overall_j,
+                dataflow,
+                energy_j,
                 onchip_bytes: Run::onchip_bytes(self.space, *coords, arch),
-                cycles: r.cycles,
+                cycles,
             };
             self.evaluated += 1;
             self.scored_this_call += 1;
@@ -421,20 +636,35 @@ impl<'a> Run<'a> {
                 self.space.name
             ));
         }
-        let total = total as u64;
-        let mut flat = start_flat;
-        while flat < total {
+        let (lo, hi) = shard_range(total, self.cfg.shard);
+        let (lo, hi) = (lo as u64, hi as u64);
+        let batch_size = self.batch_size();
+        let mut flat = start_flat.max(lo);
+        while flat < hi {
             if self.limit_reached() {
                 self.save_checkpoint(&Cursor::Exhaustive { next_flat: flat }, false)?;
                 return Ok(false);
             }
-            let mut batch: Vec<(Coords, Architecture)> =
-                Vec::with_capacity(self.cfg.batch);
-            while flat < total && batch.len() < self.cfg.batch {
+            let mut batch: Vec<(Coords, Architecture)> = Vec::with_capacity(batch_size);
+            while flat < hi && batch.len() < batch_size {
                 let coords = self.space.coords_of(flat);
                 flat += 1;
                 match self.space.candidate(coords) {
-                    Ok(a) => batch.push((coords, a)),
+                    Ok(a) => {
+                        // Branch-and-bound: a candidate whose admissible
+                        // floor is already dominated by a frontier point
+                        // can neither enter the frontier nor improve the
+                        // best — decide it without pricing.
+                        let ob = Run::onchip_bytes(self.space, coords, &a);
+                        let prunable = self
+                            .lower_bound(coords, &a)
+                            .is_some_and(|lb| self.frontier_dominates_bound(lb, ob));
+                        if prunable {
+                            self.pruned += 1;
+                        } else {
+                            batch.push((coords, a));
+                        }
+                    }
                     Err(_) => self.infeasible += 1,
                 }
             }
@@ -444,7 +674,7 @@ impl<'a> Run<'a> {
             self.score_batch(&batch)?;
             self.maybe_checkpoint(&Cursor::Exhaustive { next_flat: flat })?;
         }
-        self.save_checkpoint(&Cursor::Exhaustive { next_flat: total }, true)?;
+        self.save_checkpoint(&Cursor::Exhaustive { next_flat: hi }, true)?;
         Ok(true)
     }
 
@@ -456,13 +686,23 @@ impl<'a> Run<'a> {
         cooling: f64,
         mut st: AnnealState,
     ) -> Result<bool> {
-        while st.restart < restarts {
+        let (lo, hi) = shard_range(restarts as u128, self.cfg.shard);
+        let (lo, hi) = (lo as usize, hi as usize);
+        // A fresh cursor starts at restart 0; a shard owns `[lo, hi)`.
+        if st.restart < lo {
+            st.restart = lo;
+        }
+        while st.restart < hi {
             if self.limit_reached() {
                 self.save_checkpoint(&Cursor::Annealing(st), false)?;
                 return Ok(false);
             }
             let Some((cur_coords, cur_energy)) = st.cur else {
-                // Fresh restart: draw a feasible start point.
+                // Fresh restart: every restart draws from its own
+                // seed-derived stream (see `restart_rng`), so restart
+                // trajectories are independent of each other — the
+                // property that makes restart ranges shardable.
+                st.rng = restart_rng(self.cfg.seed, st.restart);
                 let mut found = None;
                 for _ in 0..MAX_START_DRAWS {
                     let c = self.space.random_point(&mut st.rng);
@@ -501,15 +741,52 @@ impl<'a> Run<'a> {
                     st.temp *= cooling;
                 }
                 Ok(arch) => {
+                    // Branch-and-bound, trajectory-preserving: when the
+                    // admissible floor already exceeds the current
+                    // energy, the proposal can only be accepted through
+                    // the Metropolis draw. Pre-draw that variate (so the
+                    // RNG stream is identical with pruning on or off),
+                    // bound the acceptance probability from above via
+                    // the floor, and skip pricing only when (a) even
+                    // the ceiling cannot accept and (b) the floor is
+                    // frontier-dominated — the skipped point could
+                    // neither move the trajectory nor the frontier.
+                    let mut predrawn: Option<f64> = None;
+                    if let Some(lb) = self.lower_bound(prop, &arch) {
+                        if lb.total_cmp(&cur_energy) == Ordering::Greater {
+                            let u = st.rng.next_f64();
+                            let lb_rel = (lb - cur_energy)
+                                / cur_energy.abs().max(f64::MIN_POSITIVE);
+                            let ceiling = (-lb_rel / st.temp.max(1e-12)).exp();
+                            let ob = Run::onchip_bytes(self.space, prop, &arch);
+                            if u >= ceiling + PRUNE_REJECT_MARGIN
+                                && self.frontier_dominates_bound(lb, ob)
+                            {
+                                self.pruned += 1;
+                                st.temp *= cooling;
+                                self.maybe_checkpoint(&Cursor::Annealing(st.clone()))?;
+                                continue;
+                            }
+                            predrawn = Some(u);
+                        }
+                    }
                     let p = self.score_one(prop, arch)?;
                     let accept = if p.energy_j <= cur_energy {
+                        debug_assert!(
+                            predrawn.is_none(),
+                            "admissible floor above the price it floors"
+                        );
                         true
                     } else {
                         // Metropolis on the relative increase, so the
                         // schedule is workload-scale free.
                         let rel = (p.energy_j - cur_energy)
                             / cur_energy.abs().max(f64::MIN_POSITIVE);
-                        st.rng.next_f64() < (-rel / st.temp.max(1e-12)).exp()
+                        let u = match predrawn {
+                            Some(u) => u,
+                            None => st.rng.next_f64(),
+                        };
+                        u < (-rel / st.temp.max(1e-12)).exp()
                     };
                     if accept {
                         st.cur = Some((prop, p.energy_j));
@@ -529,6 +806,7 @@ impl<'a> Run<'a> {
             strategy: self.strategy,
             total_points: self.space.num_points(),
             evaluated: self.evaluated,
+            pruned: self.pruned,
             infeasible: self.infeasible,
             evaluations: self.evaluations,
             complete,
@@ -548,8 +826,10 @@ impl<'a> Run<'a> {
             .set("fingerprint", Json::Str(self.fingerprint.clone()))
             .set("done", Json::Bool(done))
             .set("evaluated", Json::Num(self.evaluated as f64))
+            .set("pruned", Json::Num(self.pruned as f64))
             .set("infeasible", Json::Num(self.infeasible as f64))
             .set("evaluations", Json::Num(self.evaluations as f64))
+            .set("shard", shard_json(self.cfg.shard))
             .set("cursor", cursor_json(cursor))
             .set(
                 "best",
@@ -572,6 +852,32 @@ impl<'a> Run<'a> {
             .map_err(|e| err!("write checkpoint {}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, path)
             .map_err(|e| err!("commit checkpoint {}: {e}", path.display()))
+    }
+}
+
+fn shard_json(shard: Option<(u32, u32)>) -> Json {
+    match shard {
+        None => Json::Null,
+        Some((i, k)) => {
+            let mut j = Json::obj();
+            j.set("index", Json::Num(i as f64)).set("count", Json::Num(k as f64));
+            j
+        }
+    }
+}
+
+fn shard_from_json(doc: &Json) -> Result<Option<(u32, u32)>> {
+    match doc.get("shard") {
+        // Schema-1 checkpoints predate sharding: always unsharded.
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => {
+            let i = jcount(j, "index")?;
+            let k = jcount(j, "count")?;
+            if k == 0 || i >= k || k > u32::MAX as usize {
+                return Err(err!("checkpoint: bad shard {i}/{k}"));
+            }
+            Ok(Some((i as u32, k as u32)))
+        }
     }
 }
 
@@ -631,6 +937,7 @@ pub fn result_json(res: &ArchSearchResult) -> Json {
         .set("strategy", Json::Str(res.strategy.clone()))
         .set("total_points", Json::Str(res.total_points.to_string()))
         .set("evaluated", Json::Num(res.evaluated as f64))
+        .set("pruned", Json::Num(res.pruned as f64))
         .set("infeasible", Json::Num(res.infeasible as f64))
         .set("evaluations", Json::Num(res.evaluations as f64))
         .set("complete", Json::Bool(res.complete))
@@ -701,7 +1008,12 @@ fn point_from_json(space: &ArchSpace, j: &Json) -> Result<ScoredPoint> {
     Ok(ScoredPoint { coords, arch, dataflow, energy_j, onchip_bytes, cycles })
 }
 
-fn load_checkpoint(path: &Path, fingerprint: &str, space: &ArchSpace) -> Result<Option<Restored>> {
+fn load_checkpoint(
+    path: &Path,
+    fingerprint: &str,
+    space: &ArchSpace,
+    expected_shard: Option<(u32, u32)>,
+) -> Result<Option<Restored>> {
     if !path.exists() {
         return Ok(None);
     }
@@ -709,10 +1021,26 @@ fn load_checkpoint(path: &Path, fingerprint: &str, space: &ArchSpace) -> Result<
         .map_err(|e| err!("read checkpoint {}: {e}", path.display()))?;
     let doc = Json::parse(&text).map_err(|e| err!("checkpoint {}: {e}", path.display()))?;
     let schema = jnum(&doc, "schema")? as u32;
-    if schema != CHECKPOINT_SCHEMA {
+    // Schema 1 is the pre-sharding layout: identical except that
+    // `pruned` and `shard` are absent (read as 0 / unsharded).
+    if schema != CHECKPOINT_SCHEMA && schema != 1 {
         return Err(err!(
             "checkpoint {}: schema {schema} (this build reads {CHECKPOINT_SCHEMA})",
             path.display()
+        ));
+    }
+    let shard = shard_from_json(&doc)?;
+    if shard != expected_shard {
+        let show = |s: Option<(u32, u32)>| match s {
+            None => "unsharded".to_string(),
+            Some((i, k)) => format!("shard {}/{}", i + 1, k),
+        };
+        return Err(err!(
+            "checkpoint {} was written by {} but this run is {} — change --shard \
+             or rerun with --fresh to discard it",
+            path.display(),
+            show(shard),
+            show(expected_shard)
         ));
     }
     let stored_fp = doc
@@ -776,12 +1104,181 @@ fn load_checkpoint(path: &Path, fingerprint: &str, space: &ArchSpace) -> Result<
     Ok(Some(Restored {
         done,
         evaluated: jcount(&doc, "evaluated")?,
+        pruned: if doc.get("pruned").is_some() { jcount(&doc, "pruned")? } else { 0 },
         infeasible: jcount(&doc, "infeasible")?,
         evaluations: jcount(&doc, "evaluations")?,
         best,
         frontier,
         cursor,
     }))
+}
+
+// ---------------------------------------------------------------------------
+// Shard merging
+// ---------------------------------------------------------------------------
+
+fn raw_dominates(a: &(f64, u64, Json), b: &(f64, u64, Json)) -> bool {
+    a.0.total_cmp(&b.0) != Ordering::Greater && a.1 <= b.1
+}
+
+/// `Run::fold`'s frontier step over raw checkpoint points.
+fn raw_fold(frontier: &mut Vec<(f64, u64, Json)>, p: (f64, u64, Json)) {
+    if frontier.iter().any(|q| raw_dominates(q, &p)) {
+        return;
+    }
+    frontier.retain(|q| !raw_dominates(&p, q));
+    let pos = frontier.partition_point(|q| q.0.total_cmp(&p.0) == Ordering::Less);
+    frontier.insert(pos, p);
+}
+
+/// Merge the completed checkpoints of a full K-way shard set into one
+/// finished, unsharded checkpoint document (CLI: `eocas
+/// arch-search-merge`).
+///
+/// Inputs must all be `done`, carry the same fingerprint, and form a
+/// complete shard set `1/K … K/K`. The merge works on the raw JSON — no
+/// space or session needed — and reproduces the unsharded run's frontier
+/// and best bit-identically: the shard slices partition the walk in
+/// order, so folding the shard frontiers in shard-index order replays
+/// the unsharded fold's dominance decisions (exact ties keep the
+/// first-seen point, exactly as the search does), and the first shard
+/// attaining the minimum energy contributes the best point.
+pub fn merge_checkpoints(inputs: &[PathBuf]) -> Result<Json> {
+    if inputs.is_empty() {
+        return Err(err!("arch-search-merge needs at least one shard checkpoint"));
+    }
+    let mut shards: Vec<(u32, Json)> = Vec::with_capacity(inputs.len());
+    let mut fingerprint: Option<String> = None;
+    for path in inputs {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err!("read checkpoint {}: {e}", path.display()))?;
+        let doc =
+            Json::parse(&text).map_err(|e| err!("checkpoint {}: {e}", path.display()))?;
+        let schema = jnum(&doc, "schema")? as u32;
+        if schema != CHECKPOINT_SCHEMA {
+            return Err(err!(
+                "checkpoint {}: schema {schema} (merge reads {CHECKPOINT_SCHEMA})",
+                path.display()
+            ));
+        }
+        if doc.get("done").and_then(Json::as_bool) != Some(true) {
+            return Err(err!(
+                "checkpoint {}: shard is not finished — resume it to completion before \
+                 merging",
+                path.display()
+            ));
+        }
+        let fp = doc
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("checkpoint {}: missing fingerprint", path.display()))?
+            .to_string();
+        match &fingerprint {
+            None => fingerprint = Some(fp),
+            Some(f) if *f == fp => {}
+            Some(_) => {
+                return Err(err!(
+                    "checkpoint {}: fingerprint differs from the other shards \
+                     (different space, model, dataflows, strategy or seed)",
+                    path.display()
+                ))
+            }
+        }
+        let Some((i, k)) = shard_from_json(&doc)? else {
+            return Err(err!(
+                "checkpoint {} is unsharded — nothing to merge",
+                path.display()
+            ));
+        };
+        if k as usize != inputs.len() {
+            return Err(err!(
+                "checkpoint {} is shard {}/{k}, but {} checkpoint(s) were given — pass \
+                 the complete shard set",
+                path.display(),
+                i + 1,
+                inputs.len()
+            ));
+        }
+        shards.push((i, doc));
+    }
+    let k = inputs.len();
+    shards.sort_by_key(|(i, _)| *i);
+    for (want, (got, _)) in shards.iter().enumerate() {
+        if *got as usize != want {
+            return Err(err!(
+                "shard set is incomplete or duplicated: expected shard {}/{k}, found \
+                 shard {}/{k}",
+                want + 1,
+                *got + 1
+            ));
+        }
+    }
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+    let mut infeasible = 0usize;
+    let mut evaluations = 0usize;
+    let mut best: Option<(f64, Json)> = None;
+    let mut frontier: Vec<(f64, u64, Json)> = Vec::new();
+    for (_, doc) in &shards {
+        evaluated += jcount(doc, "evaluated")?;
+        pruned += jcount(doc, "pruned")?;
+        infeasible += jcount(doc, "infeasible")?;
+        evaluations += jcount(doc, "evaluations")?;
+        match doc.get("best") {
+            None | Some(Json::Null) => {}
+            Some(b) => {
+                let e = jnum(b, "energy_j")?;
+                let better = match &best {
+                    None => true,
+                    Some((be, _)) => e.total_cmp(be) == Ordering::Less,
+                };
+                if better {
+                    best = Some((e, b.clone()));
+                }
+            }
+        }
+        let points = doc
+            .get("frontier")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err!("checkpoint: missing frontier"))?;
+        for p in points {
+            let e = jnum(p, "energy_j")?;
+            let ob = jnum(p, "onchip_bytes")? as u64;
+            raw_fold(&mut frontier, (e, ob, p.clone()));
+        }
+    }
+    // The last shard ends exactly where the unsharded walk ends (the
+    // slices partition the range in order), so its cursor is the
+    // unsharded done-cursor verbatim.
+    let cursor = shards
+        .last()
+        .expect("validated non-empty")
+        .1
+        .get("cursor")
+        .cloned()
+        .ok_or_else(|| err!("checkpoint: missing cursor"))?;
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(CHECKPOINT_SCHEMA as f64))
+        .set("fingerprint", Json::Str(fingerprint.expect("validated non-empty")))
+        .set("done", Json::Bool(true))
+        .set("evaluated", Json::Num(evaluated as f64))
+        .set("pruned", Json::Num(pruned as f64))
+        .set("infeasible", Json::Num(infeasible as f64))
+        .set("evaluations", Json::Num(evaluations as f64))
+        .set("shard", Json::Null)
+        .set("cursor", cursor)
+        .set(
+            "best",
+            match best {
+                Some((_, j)) => j,
+                None => Json::Null,
+            },
+        )
+        .set(
+            "frontier",
+            Json::Arr(frontier.into_iter().map(|(_, _, j)| j).collect()),
+        );
+    Ok(doc)
 }
 
 // ---------------------------------------------------------------------------
@@ -810,6 +1307,11 @@ fn search_fingerprint(
     let _ = write!(key, "st{};sd{:x};", strategy.label(), cfg.seed);
     if let Strategy::Annealing { t0, cooling, .. } = *strategy {
         let _ = write!(key, "t{:x},{:x};", t0.to_bits(), cooling.to_bits());
+        // Restart-reseed revision: each restart draws from its own
+        // seed-derived stream (shardable restarts). Trajectories differ
+        // from the pre-revision walk, so old annealing checkpoints must
+        // not resume into this build.
+        key.push_str("rs2;");
     }
     for f in &cfg.families {
         let _ = write!(key, "f{},", *f as u64);
@@ -865,6 +1367,31 @@ pub fn search(
     }
     let strategy = cfg.strategy.resolve(space);
     let fingerprint = search_fingerprint(session, space, cfg, &strategy, model, sparsity);
+    // Both throughput layers price the exact workloads the session
+    // would: a temporal source supplies its time-averaged rates,
+    // otherwise the scalar profile applies.
+    let wls = {
+        let profile = match &cfg.temporal {
+            Some(t) => SparsityProfile {
+                source: "temporal".into(),
+                per_layer: t.mean_rates(),
+            },
+            None => sparsity.clone(),
+        };
+        session.workloads(model, &profile, session.energy_config().nominal_activity)?
+    };
+    let bound = cfg
+        .prune
+        .then(|| ModelBound::new(&wls, session.energy_config(), cfg.spike_encoding));
+    // The SoA kernel prices family templates under raw spike traffic on
+    // single-core chips — exactly the session's scalar chain for that
+    // shape. Anything else goes through the session.
+    let fast_eligible = cfg.fast_eval
+        && !cfg.include_mapper
+        && !cfg.families.is_empty()
+        && cfg.spike_encoding == SpikeEncoding::Raw
+        && space.cores.iter().all(|&c| c == 1);
+    let fast = fast_eligible.then(|| FastPath { wls, families: cfg.families.clone() });
     let mut run = Run {
         session,
         model,
@@ -874,7 +1401,10 @@ pub fn search(
         dataflows: cfg.dataflows(),
         fingerprint: fingerprint.clone(),
         strategy: strategy.label(),
+        bound,
+        fast,
         evaluated: 0,
+        pruned: 0,
         infeasible: 0,
         evaluations: 0,
         best: None,
@@ -883,12 +1413,13 @@ pub fn search(
         last_checkpoint: 0,
     };
     let restored = match &cfg.checkpoint {
-        Some(path) if cfg.resume => load_checkpoint(path, &fingerprint, space)?,
+        Some(path) if cfg.resume => load_checkpoint(path, &fingerprint, space, cfg.shard)?,
         _ => None,
     };
     let cursor = match restored {
         Some(r) => {
             run.evaluated = r.evaluated;
+            run.pruned = r.pruned;
             run.infeasible = r.infeasible;
             run.evaluations = r.evaluations;
             run.best = r.best;
@@ -946,7 +1477,10 @@ mod tests {
         assert!(res.complete);
         assert_eq!(res.strategy, "exhaustive");
         assert_eq!(res.total_points, 4);
+        // All four candidates fit one auto-sized batch, so the frontier
+        // is empty at collection time and nothing can be pruned.
         assert_eq!(res.evaluated, 4);
+        assert_eq!(res.pruned, 0);
         assert_eq!(res.infeasible, 0);
         assert_eq!(res.evaluations, 4 * 5);
         let best = res.best.as_ref().unwrap();
@@ -968,7 +1502,9 @@ mod tests {
         let res =
             search(&session, &model, &sparsity, &ArchSpace::reference(), &cfg).unwrap();
         assert!(res.complete);
-        assert_eq!(res.evaluated, 162);
+        // Pruning may decide candidates without pricing them, but every
+        // feasible point is decided exactly once.
+        assert_eq!(res.evaluated + res.pruned, 162);
         assert_eq!(res.infeasible, 54);
         assert!(!res.frontier.is_empty());
         for pair in res.frontier.windows(2) {
@@ -1271,7 +1807,7 @@ mod tests {
         assert_eq!(res.total_points, 16);
         // Single-core points reject the non-default partitioning coord.
         assert_eq!(res.infeasible, 4);
-        assert_eq!(res.evaluated, 12);
+        assert_eq!(res.evaluated + res.pruned, 12);
         // Multi-core points pay the whole-chip area proxy.
         let single = ArchSpace::paper();
         let sres = search(&session, &model, &sparsity, &single, &cfg).unwrap();
@@ -1346,6 +1882,395 @@ mod tests {
         let fresh = ArchSearchConfig { resume: false, ..other };
         let res = search(&session, &model, &sparsity, &ArchSpace::paper(), &fresh).unwrap();
         assert!(res.complete);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prune_and_fast_are_bit_transparent_on_the_reference_space() {
+        let (session, model, sparsity) = setup();
+        let space = ArchSpace::reference();
+        let mk = |prune: bool, fast: bool| {
+            let cfg = ArchSearchConfig {
+                families: vec![Family::AdvWs],
+                prune,
+                fast_eval: fast,
+                ..ArchSearchConfig::default()
+            };
+            search(&session, &model, &sparsity, &space, &cfg).unwrap()
+        };
+        let off = mk(false, false);
+        assert_eq!(off.evaluated, 162);
+        assert_eq!(off.pruned, 0);
+        // The fast path on its own changes nothing at all.
+        assert_eq!(mk(false, true), off);
+        // Pruning may decide candidates without pricing them, but the
+        // frontier and the best point are preserved bit-for-bit.
+        for on in [mk(true, false), mk(true, true)] {
+            assert_eq!(on.evaluated + on.pruned, 162);
+            assert_eq!(on.frontier, off.frontier);
+            assert_eq!(on.best, off.best);
+            assert_eq!(on.infeasible, off.infeasible);
+        }
+    }
+
+    #[test]
+    fn pruning_is_bit_transparent_on_multicore_spaces() {
+        let (session, model, sparsity) = setup();
+        let space = multicore_space();
+        let mk = |prune: bool| {
+            let cfg = ArchSearchConfig {
+                families: vec![Family::AdvWs],
+                prune,
+                ..ArchSearchConfig::default()
+            };
+            search(&session, &model, &sparsity, &space, &cfg).unwrap()
+        };
+        let off = mk(false);
+        let on = mk(true);
+        assert_eq!(on.evaluated + on.pruned, off.evaluated);
+        assert_eq!(on.frontier, off.frontier);
+        assert_eq!(on.best, off.best);
+    }
+
+    #[test]
+    fn annealing_trajectory_is_identical_with_pruning_on_or_off() {
+        let (session, model, sparsity) = setup();
+        let space = ArchSpace::reference();
+        let mk = |prune: bool, fast: bool| {
+            let cfg = ArchSearchConfig {
+                strategy: Strategy::Annealing {
+                    iters: 20,
+                    restarts: 3,
+                    t0: 0.08,
+                    cooling: 0.9,
+                },
+                families: vec![Family::AdvWs],
+                seed: 5,
+                prune,
+                fast_eval: fast,
+                ..ArchSearchConfig::default()
+            };
+            search(&session, &model, &sparsity, &space, &cfg).unwrap()
+        };
+        let off = mk(false, false);
+        let on = mk(true, true);
+        // The pre-drawn Metropolis variate keeps the walk identical, so
+        // everything except the evaluated/pruned split must match.
+        assert_eq!(on.evaluated + on.pruned, off.evaluated);
+        assert_eq!(on.frontier, off.frontier);
+        assert_eq!(on.best, off.best);
+        assert_eq!(on.infeasible, off.infeasible);
+    }
+
+    #[test]
+    fn batch_size_cannot_affect_results() {
+        let (session, model, sparsity) = setup();
+        let space = ArchSpace::reference();
+        let mk = |batch: usize| {
+            let cfg = ArchSearchConfig {
+                families: vec![Family::AdvWs],
+                prune: false,
+                batch,
+                ..ArchSearchConfig::default()
+            };
+            search(&session, &model, &sparsity, &space, &cfg).unwrap()
+        };
+        let auto = mk(0);
+        assert_eq!(mk(64), auto);
+        assert_eq!(mk(1), auto);
+    }
+
+    #[test]
+    fn exhaustive_shards_merge_bit_identically() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = ArchSpace::reference();
+        let base = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            ..ArchSearchConfig::default()
+        };
+        let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+        let k = 3u32;
+        let mut paths = Vec::new();
+        let mut decided = 0;
+        let mut infeasible = 0;
+        for i in 0..k {
+            let ck = dir.join(format!("shard{i}.json"));
+            let cfg = ArchSearchConfig {
+                shard: Some((i, k)),
+                checkpoint: Some(ck.clone()),
+                ..base.clone()
+            };
+            let res = search(&session, &model, &sparsity, &space, &cfg).unwrap();
+            assert!(res.complete);
+            decided += res.evaluated + res.pruned;
+            infeasible += res.infeasible;
+            paths.push(ck);
+        }
+        // The slices partition the walk: every point is decided in
+        // exactly one shard.
+        assert_eq!(decided, full.evaluated + full.pruned);
+        assert_eq!(infeasible, full.infeasible);
+        let merged = merge_checkpoints(&paths).unwrap();
+        let out = dir.join("merged.json");
+        std::fs::write(&out, format!("{}\n", merged.dumps())).unwrap();
+        // A search pointed at the merged checkpoint returns it as done —
+        // frontier and best bit-identical to the unsharded run.
+        let cfg = ArchSearchConfig { checkpoint: Some(out), ..base };
+        let res = search(&session, &model, &sparsity, &space, &cfg).unwrap();
+        assert!(res.complete);
+        assert_eq!(res.frontier, full.frontier);
+        assert_eq!(res.best, full.best);
+        assert_eq!(res.evaluated + res.pruned, decided);
+        assert_eq!(res.infeasible, full.infeasible);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn annealing_shards_merge_bit_identically_across_cursor_histories() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_ash_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = ArchSpace::reference();
+        let base = ArchSearchConfig {
+            strategy: Strategy::Annealing { iters: 8, restarts: 4, t0: 0.08, cooling: 0.9 },
+            families: vec![Family::AdvWs],
+            seed: 13,
+            checkpoint_every: 1,
+            ..ArchSearchConfig::default()
+        };
+        let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+        // Shard 1/2 is interrupted mid-flight and resumed, so its
+        // checkpoint passes through a different cursor history than a
+        // straight run; shard 2/2 runs straight through.
+        let ck0 = dir.join("s0.json");
+        let cfg0 = ArchSearchConfig {
+            shard: Some((0, 2)),
+            checkpoint: Some(ck0.clone()),
+            limit: Some(3),
+            ..base.clone()
+        };
+        assert!(!search(&session, &model, &sparsity, &space, &cfg0).unwrap().complete);
+        let cfg0 = ArchSearchConfig { limit: None, ..cfg0 };
+        assert!(search(&session, &model, &sparsity, &space, &cfg0).unwrap().complete);
+        let ck1 = dir.join("s1.json");
+        let cfg1 = ArchSearchConfig {
+            shard: Some((1, 2)),
+            checkpoint: Some(ck1.clone()),
+            ..base.clone()
+        };
+        assert!(search(&session, &model, &sparsity, &space, &cfg1).unwrap().complete);
+        let merged = merge_checkpoints(&[ck0, ck1]).unwrap();
+        let out = dir.join("merged.json");
+        std::fs::write(&out, format!("{}\n", merged.dumps())).unwrap();
+        let res = search(
+            &session,
+            &model,
+            &sparsity,
+            &space,
+            &ArchSearchConfig { checkpoint: Some(out), ..base },
+        )
+        .unwrap();
+        assert!(res.complete);
+        // Per-restart reseeding makes the shard trajectories replay the
+        // unsharded restarts exactly; only the evaluated/pruned split
+        // may differ (each shard prunes against its own frontier).
+        assert_eq!(res.frontier, full.frontier);
+        assert_eq!(res.best, full.best);
+        assert_eq!(res.evaluated + res.pruned, full.evaluated + full.pruned);
+        assert_eq!(res.infeasible, full.infeasible);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_shards_of_a_wide_split_still_merge() {
+        // More shards than annealing restarts: the tail shards own empty
+        // restart ranges, complete instantly, and still merge cleanly.
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_es_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = ArchSpace::reference();
+        let base = ArchSearchConfig {
+            strategy: Strategy::Annealing { iters: 6, restarts: 2, t0: 0.08, cooling: 0.9 },
+            families: vec![Family::AdvWs],
+            seed: 29,
+            ..ArchSearchConfig::default()
+        };
+        let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+        let k = 4u32;
+        let mut paths = Vec::new();
+        for i in 0..k {
+            let ck = dir.join(format!("s{i}.json"));
+            let cfg = ArchSearchConfig {
+                shard: Some((i, k)),
+                checkpoint: Some(ck.clone()),
+                ..base.clone()
+            };
+            let res = search(&session, &model, &sparsity, &space, &cfg).unwrap();
+            assert!(res.complete);
+            paths.push(ck);
+        }
+        let merged = merge_checkpoints(&paths).unwrap();
+        let out = dir.join("merged.json");
+        std::fs::write(&out, format!("{}\n", merged.dumps())).unwrap();
+        let res = search(
+            &session,
+            &model,
+            &sparsity,
+            &space,
+            &ArchSearchConfig { checkpoint: Some(out), ..base },
+        )
+        .unwrap();
+        assert_eq!(res.frontier, full.frontier);
+        assert_eq!(res.best, full.best);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_rejects_malformed_shard_sets() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_me_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let space = ArchSpace::paper();
+        let base = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            ..ArchSearchConfig::default()
+        };
+        let run = |cfg: &ArchSearchConfig| {
+            search(&session, &model, &sparsity, &space, cfg).unwrap()
+        };
+        let a = dir.join("a.json");
+        run(&ArchSearchConfig {
+            shard: Some((0, 2)),
+            checkpoint: Some(a.clone()),
+            ..base.clone()
+        });
+        let b = dir.join("b.json");
+        run(&ArchSearchConfig {
+            shard: Some((1, 2)),
+            checkpoint: Some(b.clone()),
+            ..base.clone()
+        });
+        // The happy path works...
+        merge_checkpoints(&[a.clone(), b.clone()]).unwrap();
+        // ...and each malformation is refused with a pointed message.
+        let e = merge_checkpoints(&[]).unwrap_err().to_string();
+        assert!(e.contains("at least one"), "{e}");
+        let e = merge_checkpoints(&[a.clone()]).unwrap_err().to_string();
+        assert!(e.contains("complete shard set"), "{e}");
+        let e = merge_checkpoints(&[a.clone(), a.clone()]).unwrap_err().to_string();
+        assert!(e.contains("incomplete or duplicated"), "{e}");
+        // An unsharded checkpoint has nothing to merge.
+        let u = dir.join("u.json");
+        run(&ArchSearchConfig { checkpoint: Some(u.clone()), ..base.clone() });
+        let e = merge_checkpoints(&[u.clone(), u]).unwrap_err().to_string();
+        assert!(e.contains("unsharded"), "{e}");
+        // A shard that has not finished cannot merge.
+        let p = dir.join("p.json");
+        let partial = ArchSearchConfig {
+            shard: Some((0, 2)),
+            checkpoint: Some(p.clone()),
+            limit: Some(0),
+            ..base.clone()
+        };
+        assert!(!search(&session, &model, &sparsity, &space, &partial).unwrap().complete);
+        let e = merge_checkpoints(&[p, b.clone()]).unwrap_err().to_string();
+        assert!(e.contains("not finished"), "{e}");
+        // A shard from a different search (other seed) cannot merge.
+        let c = dir.join("c.json");
+        run(&ArchSearchConfig {
+            shard: Some((0, 2)),
+            seed: 999,
+            checkpoint: Some(c.clone()),
+            ..base.clone()
+        });
+        let e = merge_checkpoints(&[c, b]).unwrap_err().to_string();
+        assert!(e.contains("fingerprint"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_mismatched_checkpoint_is_refused() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_sm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("s.json");
+        let base = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            shard: Some((0, 2)),
+            checkpoint: Some(ck.clone()),
+            ..ArchSearchConfig::default()
+        };
+        search(&session, &model, &sparsity, &ArchSpace::paper(), &base).unwrap();
+        // Same file, different shard assignment: refused.
+        let other = ArchSearchConfig { shard: Some((1, 2)), ..base.clone() };
+        let e = search(&session, &model, &sparsity, &ArchSpace::paper(), &other)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("shard"), "{e}");
+        assert!(e.contains("--fresh"), "{e}");
+        // And so is an unsharded resume of a sharded checkpoint.
+        let unsharded = ArchSearchConfig { shard: None, ..base };
+        let e = search(&session, &model, &sparsity, &ArchSpace::paper(), &unsharded)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unsharded"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn schema_1_checkpoints_still_resume() {
+        let (session, model, sparsity) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("eocas_archsearch_v1_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("v1.json");
+        let space = ArchSpace::reference();
+        let base = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            prune: false,
+            batch: 1,
+            checkpoint_every: 1,
+            ..ArchSearchConfig::default()
+        };
+        let full = search(&session, &model, &sparsity, &space, &base).unwrap();
+        let partial_cfg = ArchSearchConfig {
+            limit: Some(5),
+            checkpoint: Some(ck.clone()),
+            ..base.clone()
+        };
+        assert!(!search(&session, &model, &sparsity, &space, &partial_cfg)
+            .unwrap()
+            .complete);
+        // Rewrite the checkpoint in the pre-sharding schema-1 layout
+        // (no `pruned`, no `shard`).
+        let doc = Json::parse(&std::fs::read_to_string(&ck).unwrap()).unwrap();
+        let keys = [
+            "fingerprint",
+            "done",
+            "evaluated",
+            "infeasible",
+            "evaluations",
+            "cursor",
+            "best",
+            "frontier",
+        ];
+        let mut v1 = Json::obj();
+        v1.set("schema", Json::Num(1.0));
+        for key in keys {
+            v1.set(key, doc.get(key).unwrap().clone());
+        }
+        std::fs::write(&ck, format!("{}\n", v1.dumps())).unwrap();
+        let resume_cfg = ArchSearchConfig { checkpoint: Some(ck), ..base };
+        let resumed = search(&session, &model, &sparsity, &space, &resume_cfg).unwrap();
+        assert!(resumed.complete);
+        assert_eq!(resumed, full, "schema-1 resume must stay bit-identical");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,212 @@
+//! Struct-of-arrays batch pricing: one dataflow family across many
+//! candidate architectures at once.
+//!
+//! The scalar hot path ([`super::conv_energy_into`] /
+//! [`super::price_operand`]) prices one `(mapping, architecture)` pair at
+//! a time: per chain position it multiplies a fill count by a per-level
+//! picojoule rule and folds the products. When the architecture search
+//! prices a *batch* of candidates under the same workload, every
+//! candidate evaluates the same expression shape over different factor
+//! values — a transpose away from a vectorizable kernel.
+//!
+//! [`family_model_batch`] performs that transpose. Per `(layer, phase)`
+//! it scatters each candidate's per-operand chain into fixed-position
+//! *columns* — `fills × bits` and picojoule-rule factors, laid out
+//! position-major / candidate-minor — and then runs one tight
+//! multiply-add loop over contiguous `f64` slices that the compiler
+//! autovectorizes. The per-candidate work that cannot be columnized
+//! (template generation, reuse analysis, the fixed-function units) stays
+//! scalar; the arch-invariant compute energy (eqs. 17–19) is computed
+//! once per phase instead of once per candidate.
+//!
+//! The kernel prices **raw** spike traffic (unit boundary costs), which
+//! is the only encoding the search's fast path dispatches here. Every
+//! arithmetic step mirrors the scalar kernel's expression shapes —
+//! multiplication order, fold order, the `× 1e-12` per position — so the
+//! result is bit-identical to the session's scalar chain
+//! ([`super::model_energy_for_family`] summed the way
+//! `session::EvalResult` sums it). `tests/kernel_equivalence.rs` pins
+//! this across families, hierarchies and models.
+
+use crate::arch::{Architecture, MAX_LEVELS};
+use crate::config::EnergyConfig;
+use crate::dataflow::templates::{self, Family};
+use crate::dataflow::MappingView;
+use crate::reuse::{operand_fills, operand_specs, OperandSpec, Role};
+use crate::workload::LayerWorkload;
+
+use super::{compute_energy, unit_energy};
+
+/// Headline score of one candidate under one family: exactly the two
+/// fields the architecture search folds into its frontier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchScore {
+    /// Overall training energy (eq. 15 summed over layers), bit-identical
+    /// to the scalar evaluation path.
+    pub overall_j: f64,
+    pub cycles: u64,
+}
+
+/// Operand slots per candidate: three operands × up to `MAX_LEVELS` chain
+/// positions each.
+const SLOTS: usize = 3 * MAX_LEVELS;
+
+/// The transposed factor columns of one phase. Each chain position of
+/// each operand owns two term slots (`t0`, `t1` — e.g. a read per inner
+/// fill and a write per own fill at an intermediate level); a slot is a
+/// `(fills × bits, picojoule rule)` pair and unused slots stay zero, so
+/// the reduce loop needs no per-candidate control flow.
+struct Columns {
+    n: usize,
+    t0_fb: Vec<f64>,
+    t0_pj: Vec<f64>,
+    t1_fb: Vec<f64>,
+    t1_pj: Vec<f64>,
+}
+
+impl Columns {
+    fn new(n: usize) -> Columns {
+        Columns {
+            n,
+            t0_fb: vec![0.0; SLOTS * n],
+            t0_pj: vec![0.0; SLOTS * n],
+            t1_fb: vec![0.0; SLOTS * n],
+            t1_pj: vec![0.0; SLOTS * n],
+        }
+    }
+
+    fn clear(&mut self) {
+        self.t0_fb.fill(0.0);
+        self.t0_pj.fill(0.0);
+        self.t1_fb.fill(0.0);
+        self.t1_pj.fill(0.0);
+    }
+
+    fn idx(&self, operand: usize, pos: usize, cand: usize) -> usize {
+        (operand * MAX_LEVELS + pos) * self.n + cand
+    }
+}
+
+/// Scatter one candidate's operand chain into the columns, mirroring
+/// [`super::price_operand_encoded`]'s raw-cost branches term by term.
+fn scatter_operand(
+    cols: &mut Columns,
+    operand: usize,
+    cand: usize,
+    spec: &OperandSpec,
+    view: &MappingView,
+    arch: &Architecture,
+    cfg: &EnergyConfig,
+) {
+    let hier = &arch.hier;
+    let f = operand_fills(spec, view, hier);
+    let bits = spec.bits as f64;
+    let total = view.scheduled_total as f64;
+    let cl = f.chain_len as usize;
+    for i in 0..cl {
+        let l = f.chain[i] as usize;
+        let rd = hier.read_pj(l, spec.sram, cfg);
+        let wr = hier.write_pj(l, spec.sram, cfg);
+        // Read operands take a write per fill at the innermost level;
+        // the accumulated output swaps reads and writes.
+        let (fill_in, fill_out) = match spec.role {
+            Role::Input | Role::Stationary => (wr, rd),
+            Role::Output => (rd, wr),
+        };
+        let s = cols.idx(operand, i, cand);
+        if i == 0 {
+            cols.t0_fb[s] = f.fills[0] * bits;
+            cols.t0_pj[s] = fill_in;
+            if cfg.count_reg_reads {
+                cols.t1_fb[s] = total * bits;
+                cols.t1_pj[s] = fill_out;
+            }
+        } else if i < cl - 1 {
+            cols.t0_fb[s] = f.fills[i - 1] * bits;
+            cols.t0_pj[s] = fill_out;
+            cols.t1_fb[s] = f.fills[i] * bits;
+            cols.t1_pj[s] = fill_in;
+        } else {
+            cols.t0_fb[s] = f.fills[i - 1] * bits;
+            cols.t0_pj[s] = fill_out;
+        }
+    }
+}
+
+/// The vector loop: fold every slot's `t0·pj + t1·pj` into the
+/// per-operand accumulators (layout `[operand][candidate]`), position by
+/// position so the fold order matches the scalar kernel's level walk.
+/// Zero slots contribute an exact `+0.0`, which is a bit-exact identity
+/// on the non-negative partial sums — this is what lets one loop shape
+/// serve every chain length.
+fn reduce(cols: &Columns, op_acc: &mut [f64]) {
+    let n = cols.n;
+    for s in 0..SLOTS {
+        let operand = s / MAX_LEVELS;
+        let base = s * n;
+        let acc = &mut op_acc[operand * n..(operand + 1) * n];
+        let t0f = &cols.t0_fb[base..base + n];
+        let t0p = &cols.t0_pj[base..base + n];
+        let t1f = &cols.t1_fb[base..base + n];
+        let t1p = &cols.t1_pj[base..base + n];
+        for c in 0..n {
+            let e = t0f[c] * t0p[c] + t1f[c] * t1p[c];
+            acc[c] += e * 1e-12;
+        }
+    }
+}
+
+/// Price a whole model under `family` for every candidate architecture,
+/// struct-of-arrays. Returns one [`BatchScore`] per candidate, in input
+/// order, bit-identical to scoring each candidate through the scalar
+/// session path (raw spike pricing, no chip partitioning).
+pub fn family_model_batch(
+    wls: &[LayerWorkload],
+    family: Family,
+    archs: &[&Architecture],
+    cfg: &EnergyConfig,
+) -> Vec<BatchScore> {
+    let n = archs.len();
+    let mut out = vec![BatchScore { overall_j: 0.0, cycles: 0 }; n];
+    if n == 0 {
+        return out;
+    }
+    let mut cols = Columns::new(n);
+    // [operand][candidate] and [phase][candidate] accumulators.
+    let mut op_acc = vec![0.0f64; 3 * n];
+    let mut phase_total = vec![0.0f64; 3 * n];
+    let mut phase_cycles = vec![0u64; 3 * n];
+    for wl in wls {
+        for (pi, w) in [&wl.fp, &wl.bp, &wl.wg].into_iter().enumerate() {
+            let compute_j = compute_energy(w, cfg);
+            let specs = operand_specs(w);
+            cols.clear();
+            for (c, arch) in archs.iter().enumerate() {
+                let m = templates::generate(family, w, arch);
+                let v = m.view();
+                phase_cycles[pi * n + c] = v.cycles;
+                for (o, spec) in specs.iter().enumerate() {
+                    scatter_operand(&mut cols, o, c, spec, &v, arch, cfg);
+                }
+            }
+            op_acc.fill(0.0);
+            reduce(&cols, &mut op_acc);
+            for c in 0..n {
+                // `ConvEnergy::total_j` shape: compute + ((I + S) + O).
+                let mem = op_acc[c] + op_acc[n + c] + op_acc[2 * n + c];
+                phase_total[pi * n + c] = compute_j + mem;
+            }
+        }
+        for (c, arch) in archs.iter().enumerate() {
+            let u = unit_energy(&wl.units, arch, cfg);
+            // `LayerBreakdown::overall_j` shape:
+            // (fp + soma) + (bp + grad) + wg, left-associated.
+            let layer = (phase_total[c] + u.soma_j())
+                + (phase_total[n + c] + u.grad_j())
+                + phase_total[2 * n + c];
+            out[c].overall_j += layer;
+            out[c].cycles += phase_cycles[c] + phase_cycles[n + c] + phase_cycles[2 * n + c];
+        }
+    }
+    out
+}

@@ -1,0 +1,231 @@
+//! Admissible lower bound on a candidate's overall training energy — the
+//! branch-and-bound oracle of the architecture search.
+//!
+//! For a fixed workload, the expensive part of pricing a candidate is
+//! mapping-dependent: the per-boundary fill counts. But two quantities
+//! are *mapping-invariant* per `(layer, phase, operand)`:
+//!
+//! * the compute energy (eqs. 17–19) depends only on the op counts;
+//! * every fill count is at least [`crate::reuse::min_fills`] — the
+//!   product of the operand-relevant dim extents (compulsory traffic no
+//!   reuse can remove) — and the scheduled total is at least
+//!   `dims.total()`.
+//!
+//! [`ModelBound::lower_bound`] therefore replays the scalar pricing
+//! kernel ([`super::price_operand_encoded`]) with every `fills[b]`
+//! replaced by that floor and `scheduled_total` by `dims.total()`,
+//! walking the candidate's real residency chains with its real per-level
+//! picojoule rules. Because every replayed expression has the same shape
+//! as the exact one with term-wise `≤` inputs, and `f64`
+//! multiply/add/divide round monotonically on non-negative operands, the
+//! bound is admissible *in floating point*, not merely in exact
+//! arithmetic — no epsilon margin is needed for the frontier-preservation
+//! guarantee. Under `Auto` spike encoding the compressible 1-bit
+//! operands' fill terms are dropped entirely (their boundary cost
+//! factors are ≤ 1 but mapping-dependent); the never-compressed
+//! register-read term is kept. The fixed-function soma/grad units are
+//! mapping-invariant and priced exactly.
+//!
+//! The bound holds for every dataflow family, for the mapper optimum
+//! (the mapper minimizes over mappings — the bound is below all of
+//! them), and for multi-core chip partitionings (each core's partition
+//! covers at least its slice of the extents and NoC energy is
+//! non-negative; `dse::archsearch`'s property tests pin this
+//! empirically). Admissibility across families × hierarchies × chip
+//! configs is asserted by the test suite here and in
+//! `tests/kernel_equivalence.rs`.
+
+use crate::arch::{Architecture, HierarchySpec, SramId, MAX_LEVELS};
+use crate::config::EnergyConfig;
+use crate::reuse::{min_fills, operand_specs, Role};
+use crate::spike::traffic::SpikeEncoding;
+use crate::workload::{ConvWorkload, LayerWorkload, UnitWork};
+
+use super::{compute_energy, unit_energy};
+
+/// Mapping-invariant floor data of one operand.
+#[derive(Debug, Clone, Copy)]
+struct OperandBound {
+    role: Role,
+    sram: SramId,
+    bits: f64,
+    /// [`min_fills`]: compulsory elements across any chain boundary.
+    fmin: f64,
+    /// `dims.total()`: floor of any mapping's scheduled total.
+    total: f64,
+    /// 1-bit spike map — may be compressed under `Auto` encoding.
+    compressible: bool,
+}
+
+/// Mapping-invariant floor data of one convolution phase.
+#[derive(Debug, Clone, Copy)]
+struct PhaseBound {
+    compute_j: f64,
+    operands: [OperandBound; 3],
+}
+
+/// Precomputed per-model floor tables: build once per search, evaluate
+/// per candidate in microseconds (no template generation, no mapper).
+#[derive(Debug, Clone)]
+pub struct ModelBound {
+    layers: Vec<(PhaseBound, PhaseBound, PhaseBound, UnitWork)>,
+    drop_spike_fills: bool,
+}
+
+fn phase_bound(w: &ConvWorkload, cfg: &EnergyConfig) -> PhaseBound {
+    let specs = operand_specs(w);
+    PhaseBound {
+        compute_j: compute_energy(w, cfg),
+        operands: specs.map(|s| OperandBound {
+            role: s.role,
+            sram: s.sram,
+            bits: s.bits as f64,
+            fmin: min_fills(&s, &w.dims),
+            total: w.dims.total() as f64,
+            compressible: s.bits == 1,
+        }),
+    }
+}
+
+/// Floor energy of one operand on `hier`: the scalar kernel's chain walk
+/// with `fills → fmin`, `scheduled_total → dims.total()`, and raw (unit)
+/// boundary costs.
+fn operand_lb(
+    ob: &OperandBound,
+    hier: &HierarchySpec,
+    cfg: &EnergyConfig,
+    drop_fills: bool,
+) -> f64 {
+    let mut chain = [0usize; MAX_LEVELS];
+    let mut cl = 0usize;
+    for l in 0..hier.num_levels() {
+        if hier.resident(l, ob.sram) {
+            chain[cl] = l;
+            cl += 1;
+        }
+    }
+    let fill = if drop_fills { 0.0 } else { ob.fmin };
+    let mut t = 0.0;
+    for (i, &l) in chain.iter().enumerate().take(cl) {
+        let rd = hier.read_pj(l, ob.sram, cfg);
+        let wr = hier.write_pj(l, ob.sram, cfg);
+        let (fill_in, fill_out) = match ob.role {
+            Role::Input | Role::Stationary => (wr, rd),
+            Role::Output => (rd, wr),
+        };
+        let e = if i == 0 {
+            let mut e = fill * ob.bits * fill_in;
+            if cfg.count_reg_reads {
+                // Register-internal accesses are never compressed.
+                e += ob.total * ob.bits * fill_out;
+            }
+            e
+        } else if i < cl - 1 {
+            fill * ob.bits * fill_out + fill * ob.bits * fill_in
+        } else {
+            fill * ob.bits * fill_out
+        };
+        t += e * 1e-12;
+    }
+    t
+}
+
+impl ModelBound {
+    /// Build the floor tables for a model's workloads under `cfg` and the
+    /// search's spike-encoding mode.
+    pub fn new(wls: &[LayerWorkload], cfg: &EnergyConfig, encoding: SpikeEncoding) -> ModelBound {
+        ModelBound {
+            layers: wls
+                .iter()
+                .map(|wl| {
+                    (
+                        phase_bound(&wl.fp, cfg),
+                        phase_bound(&wl.bp, cfg),
+                        phase_bound(&wl.wg, cfg),
+                        wl.units,
+                    )
+                })
+                .collect(),
+            drop_spike_fills: encoding == SpikeEncoding::Auto,
+        }
+    }
+
+    fn phase_lb(&self, pb: &PhaseBound, hier: &HierarchySpec, cfg: &EnergyConfig) -> f64 {
+        let mut mem = 0.0;
+        for ob in &pb.operands {
+            mem += operand_lb(ob, hier, cfg, self.drop_spike_fills && ob.compressible);
+        }
+        pb.compute_j + mem
+    }
+
+    /// Admissible floor of `arch`'s overall training energy: no mapping,
+    /// family, mapper schedule, encoding, or chip partitioning priced by
+    /// the session can score below this (in exact bits, not just within
+    /// a tolerance).
+    pub fn lower_bound(&self, arch: &Architecture, cfg: &EnergyConfig) -> f64 {
+        let hier = &arch.hier;
+        let mut total = 0.0;
+        for (fp, bp, wg, units) in &self.layers {
+            let u = unit_energy(units, arch, cfg);
+            let layer = (self.phase_lb(fp, hier, cfg) + u.soma_j())
+                + (self.phase_lb(bp, hier, cfg) + u.grad_j())
+                + self.phase_lb(wg, hier, cfg);
+            total += layer;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArrayScheme;
+    use crate::model::SnnModel;
+    use crate::workload::generate;
+
+    fn archs() -> Vec<Architecture> {
+        vec![
+            Architecture::paper_default(),
+            Architecture::with_array(ArrayScheme::new(8, 32)),
+            Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+            Architecture::with_hierarchy(HierarchySpec::unified_sram()),
+        ]
+    }
+
+    #[test]
+    fn bound_floors_every_family_on_every_hierarchy() {
+        use crate::energy::model_energy_for_family;
+        use crate::dataflow::templates::Family;
+        let cfg = EnergyConfig::default();
+        for model in [SnnModel::paper_layer(), SnnModel::cifar100_snn()] {
+            let wls = generate(&model, &[], 0.75).unwrap();
+            let mb = ModelBound::new(&wls, &cfg, SpikeEncoding::Raw);
+            for arch in archs() {
+                let lb = mb.lower_bound(&arch, &cfg);
+                assert!(lb > 0.0 && lb.is_finite());
+                for fam in Family::ALL {
+                    let layers = model_energy_for_family(&wls, fam, &arch, &cfg);
+                    let actual: f64 = layers.iter().map(|l| l.overall_j()).sum();
+                    assert!(
+                        lb <= actual,
+                        "{} {}: bound {lb} above actual {actual}",
+                        model.name,
+                        fam.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_encoding_bound_drops_spike_fill_terms() {
+        let cfg = EnergyConfig::default();
+        let wls = generate(&SnnModel::paper_layer(), &[], 0.75).unwrap();
+        let raw = ModelBound::new(&wls, &cfg, SpikeEncoding::Raw);
+        let auto = ModelBound::new(&wls, &cfg, SpikeEncoding::Auto);
+        let arch = Architecture::paper_default();
+        let (r, a) = (raw.lower_bound(&arch, &cfg), auto.lower_bound(&arch, &cfg));
+        assert!(a < r, "auto bound {a} must undercut raw bound {r}");
+        assert!(a > 0.0);
+    }
+}

@@ -12,6 +12,8 @@
 //! traffic for the BPTT state they save and restore.
 
 pub mod ablation;
+pub mod batch;
+pub mod bound;
 
 use crate::arch::{Architecture, MAX_LEVELS};
 use crate::config::EnergyConfig;

@@ -87,11 +87,23 @@ USAGE:
                  [--model paper|cifar100|tiny] [--sparsity PATH]
                  [--temporal PATH] [--encoding raw|auto] [--seed N]
                  [--threads N] [--limit N] [--checkpoint PATH] [--fresh]
+                 [--shard i/K] [--batch N] [--no-prune] [--no-fast]
                  [--config PATH] [--json]
                  (searches the generated architecture space described by
                   the space file — see configs/README.md; `--checkpoint`
                   makes long runs resumable, `--limit` time-boxes one call
-                  and therefore requires `--checkpoint`)
+                  and therefore requires `--checkpoint`; `--shard i/K`
+                  searches the i-th of K disjoint slices into its own
+                  checkpoint for `arch-search-merge`; `--no-prune` and
+                  `--no-fast` disable branch-and-bound pruning and the
+                  batched fast kernel — results are bit-identical either
+                  way, only slower)
+  eocas arch-search-merge --out PATH SHARD1.json SHARD2.json ... [--json]
+                 (combines the finished checkpoints of a complete
+                  `--shard i/K` set into one unsharded checkpoint whose
+                  frontier is bit-identical to the single-run result;
+                  resume it with `arch-search --checkpoint PATH` or
+                  inspect it with --json)
   eocas train    [--steps N] [--lr X] [--seed N] [--log PATH]
   eocas pipeline [--steps N] [--out DIR] [--reuse] [--threads N]
   eocas serve    [--addr HOST:PORT] [--threads N] [--queue-cap N]
@@ -212,6 +224,22 @@ fn pick_dataflow(name: &str) -> Result<Dataflow> {
         return Ok(Dataflow::MapperOptimal);
     }
     pick_family(name).map(Dataflow::Family)
+}
+
+/// `--shard i/K` (1-based on the CLI, 0-based internally).
+fn parse_shard(s: &str) -> Result<(u32, u32)> {
+    let (i, k) = s
+        .split_once('/')
+        .ok_or_else(|| err!("--shard expects i/K, e.g. --shard 2/4 (got `{s}`)"))?;
+    let i: u32 = i.trim().parse().map_err(|_| err!("--shard index `{i}` is not a number"))?;
+    let k: u32 = k.trim().parse().map_err(|_| err!("--shard count `{k}` is not a number"))?;
+    if k == 0 {
+        bail!("--shard count must be >= 1");
+    }
+    if i == 0 || i > k {
+        bail!("--shard index {i} out of range 1..={k}");
+    }
+    Ok((i - 1, k))
 }
 
 fn energy_config(flags: &HashMap<String, String>) -> Result<EnergyConfig> {
@@ -455,6 +483,19 @@ fn run(args: &[String]) -> Result<()> {
                      add --checkpoint PATH to make the run resumable"
                 );
             }
+            scfg.batch = parse_num(&flags, "batch", 0usize)?;
+            scfg.prune = !flags.contains_key("no-prune");
+            scfg.fast_eval = !flags.contains_key("no-fast");
+            if let Some(s) = flags.get("shard") {
+                scfg.shard = Some(parse_shard(s)?);
+                if scfg.checkpoint.is_none() {
+                    bail!(
+                        "--shard writes one mergeable checkpoint per shard; add \
+                         --checkpoint PATH (then combine the finished shards with \
+                         `eocas arch-search-merge`)"
+                    );
+                }
+            }
             let iters = flags
                 .get("iters")
                 .map(|_| parse_num(&flags, "iters", 0usize))
@@ -524,33 +565,73 @@ fn run(args: &[String]) -> Result<()> {
             }
             let dt = start.elapsed();
             println!(
-                "searched `{}` [{}]: {} of {} points priced ({} infeasible, \
+                "searched `{}` [{}]: {} of {} points priced ({} pruned, {} infeasible, \
                  {} evaluations) in {:.1} ms ({:.0} candidates/s)",
                 res.space,
                 res.strategy,
                 res.evaluated,
                 res.total_points,
+                res.pruned,
                 res.infeasible,
                 res.evaluations,
                 dt.as_secs_f64() * 1e3,
-                res.evaluated as f64 / dt.as_secs_f64().max(1e-9)
+                (res.evaluated + res.pruned) as f64 / dt.as_secs_f64().max(1e-9)
             );
             if !res.complete {
                 println!(
                     "(stopped at --limit; rerun with the same --checkpoint to resume)"
                 );
             }
-            let best = res
-                .best
-                .as_ref()
-                .ok_or_else(|| err!("search priced no feasible candidate"))?;
-            println!(
-                "optimum: {} + {} @ {:.3} uJ",
-                best.arch.label(),
-                best.dataflow,
-                best.energy_j * 1e6
-            );
+            if let Some((i, k)) = scfg.shard {
+                println!(
+                    "(shard {}/{k}: combine the finished shard checkpoints with \
+                     `eocas arch-search-merge`)",
+                    i + 1
+                );
+            }
+            match res.best.as_ref() {
+                Some(best) => println!(
+                    "optimum: {} + {} @ {:.3} uJ",
+                    best.arch.label(),
+                    best.dataflow,
+                    best.energy_j * 1e6
+                ),
+                None if scfg.shard.is_some() => {
+                    println!("(this shard priced no feasible candidate)");
+                }
+                None => bail!("search priced no feasible candidate"),
+            }
             print!("{}", report::table_archsearch(&res).render());
+            Ok(())
+        }
+        "arch-search-merge" => {
+            let out = flags
+                .get("out")
+                .ok_or_else(|| err!("arch-search-merge needs --out PATH"))?;
+            let inputs: Vec<PathBuf> = pos[1..].iter().map(PathBuf::from).collect();
+            if inputs.is_empty() {
+                bail!(
+                    "arch-search-merge needs the finished shard checkpoint files as \
+                     positional arguments"
+                );
+            }
+            let doc = archsearch::merge_checkpoints(&inputs)?;
+            std::fs::write(out, format!("{}\n", doc.dumps()))
+                .map_err(|e| err!("write {out}: {e}"))?;
+            if flags.contains_key("json") {
+                println!("{}", doc.dumps());
+                return Ok(());
+            }
+            let count = |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            println!(
+                "merged {} shards into {out}: {} priced, {} pruned, {} infeasible, \
+                 frontier of {} points",
+                inputs.len(),
+                count("evaluated"),
+                count("pruned"),
+                count("infeasible"),
+                doc.get("frontier").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0)
+            );
             Ok(())
         }
         "chip-sim" => {
@@ -965,6 +1046,28 @@ mod tests {
         // A missing space file reports the path.
         let e = run(&args(&["arch-search", "--space", "/no/such/space.toml"])).unwrap_err();
         assert!(e.to_string().contains("space.toml"), "{e}");
+    }
+
+    #[test]
+    fn shard_flag_parses_and_rejects_cleanly() {
+        assert_eq!(parse_shard("1/4").unwrap(), (0, 4));
+        assert_eq!(parse_shard("4/4").unwrap(), (3, 4));
+        assert_eq!(parse_shard(" 2 / 3 ").unwrap(), (1, 3));
+        for bad in ["", "2", "0/4", "5/4", "a/4", "2/b", "2/0"] {
+            assert!(parse_shard(bad).is_err(), "`{bad}` should not parse");
+        }
+        // --shard needs a checkpoint to write the shard into.
+        let space = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/space_paper.toml");
+        let e = run(&args(&["arch-search", "--space", space, "--shard", "1/2"])).unwrap_err();
+        assert!(e.to_string().contains("--checkpoint"), "{e}");
+    }
+
+    #[test]
+    fn arch_search_merge_flag_errors_are_clean() {
+        let e = run(&args(&["arch-search-merge"])).unwrap_err();
+        assert!(e.to_string().contains("--out"), "{e}");
+        let e = run(&args(&["arch-search-merge", "--out", "/tmp/x.json"])).unwrap_err();
+        assert!(e.to_string().contains("positional"), "{e}");
     }
 
     #[test]

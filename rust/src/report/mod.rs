@@ -428,8 +428,8 @@ pub fn table_archsearch(res: &crate::dse::archsearch::ArchSearchResult) -> Table
     let mut t = Table::new(
         format!(
             "Architecture search `{}` [{}]: Pareto frontier ({} of {} points priced, \
-             {} infeasible)",
-            res.space, res.strategy, res.evaluated, res.total_points, res.infeasible
+             {} pruned, {} infeasible)",
+            res.space, res.strategy, res.evaluated, res.total_points, res.pruned, res.infeasible
         ),
         &["rank", "array", "hierarchy", "dataflow", "overall (uJ)", "on-chip", "cycles"],
     )

@@ -23,7 +23,7 @@
 
 use crate::arch::{HierarchySpec, SramId, MAX_LEVELS};
 use crate::dataflow::{Mapping, MappingView};
-use crate::workload::{ConvWorkload, Dim, Phase};
+use crate::workload::{ConvDims, ConvWorkload, Dim, Phase};
 
 /// The three operand roles of a convolution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -334,6 +334,31 @@ pub fn operand_fills(
     out
 }
 
+/// Mapping-independent lower bound on `fills[b]` at *every* chain
+/// boundary of `spec`: the product of the operand-relevant dim extents.
+///
+/// Why it holds: `fills[b] = scheduled_total / ru[b]`, the scheduled
+/// total is the product of **all** loop factors (each dim's factors
+/// multiply out to at least its extent — padding only rounds up), and
+/// `ru[b]` collects factors of irrelevant dims only (plus `R`/`S` of
+/// halo operands, excluded here too). Dividing out at most the full
+/// factor product of the irrelevant/halo dims leaves at least the
+/// relevant extents' product. All quantities are exact integers below
+/// 2^53, and `f64` division rounds monotonically, so the bound also
+/// holds bit-rigorously in floating point. This is the per-boundary
+/// "compulsory traffic" floor the branch-and-bound pruner
+/// ([`crate::energy::bound`]) prices.
+pub fn min_fills(spec: &OperandSpec, dims: &ConvDims) -> f64 {
+    let mut f = 1.0;
+    for d in Dim::ALL {
+        let halo = spec.halo && matches!(d, Dim::R | Dim::S);
+        if !spec.irr[d.idx()] && !halo {
+            f *= dims.get(d) as f64;
+        }
+    }
+    f
+}
+
 /// Bitmask (by [`Dim::idx`]) of the dims whose tile factors can change
 /// this operand's reuse factors — i.e. the dims irrelevant to it at some
 /// boundary. The mapper's incremental re-pricer recomputes an operand
@@ -603,5 +628,45 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn min_fills_floors_every_template_boundary() {
+        use crate::arch::Architecture;
+        use crate::dataflow::templates::{self, Family};
+        let archs = [
+            Architecture::paper_default(),
+            Architecture::with_array(ArrayScheme::new(8, 32)),
+            Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+            Architecture::with_hierarchy(HierarchySpec::unified_sram()),
+        ];
+        for model in [SnnModel::paper_layer(), SnnModel::cifar100_snn()] {
+            for wl in generate(&model, &[], 0.75).unwrap().iter() {
+                for w in [&wl.fp, &wl.bp, &wl.wg] {
+                    for spec in operand_specs(w) {
+                        let floor = min_fills(&spec, &w.dims);
+                        assert!(floor >= 1.0);
+                        for arch in &archs {
+                            for fam in Family::ALL {
+                                let m = templates::generate(fam, w, arch);
+                                let v = m.view();
+                                let f = operand_fills(&spec, &v, &arch.hier);
+                                for b in 0..f.boundaries() {
+                                    assert!(
+                                        f.fills[b] >= floor,
+                                        "{} {:?} {}: fills[{b}] = {} < floor {}",
+                                        spec.tensor,
+                                        w.phase,
+                                        fam.name(),
+                                        f.fills[b],
+                                        floor
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -118,7 +118,7 @@ fn guided_search_is_competitive_on_the_reference_space() {
         },
     )
     .unwrap();
-    assert_eq!(exhaustive.evaluated, 162);
+    assert_eq!(exhaustive.evaluated + exhaustive.pruned, 162);
     let guided = search(
         &session,
         &model,

@@ -156,6 +156,127 @@ fn toml_loaded_paper_arch_is_bit_identical_too() {
 }
 
 #[test]
+fn soa_batch_kernel_is_bit_identical_to_the_scalar_model_chain() {
+    // The architecture search's struct-of-arrays fast path must price a
+    // batch of candidates bit-for-bit like the scalar per-candidate
+    // chain, across models, dataflow families, and hierarchy shapes
+    // (including 4-level and unified-SRAM variants the columns must pad
+    // with exact `+0.0` identities).
+    use eocas::energy::batch::family_model_batch;
+    use eocas::energy::model_energy_for_family;
+    let cfg = EnergyConfig::default();
+    let archs = vec![
+        Architecture::paper_default(),
+        Architecture::with_array(ArrayScheme::new(8, 32)),
+        Architecture::with_array(ArrayScheme::new(32, 8)),
+        Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+        Architecture::with_hierarchy(HierarchySpec::unified_sram()),
+    ];
+    let arch_refs: Vec<&Architecture> = archs.iter().collect();
+    for model in [SnnModel::paper_layer(), SnnModel::cifar100_snn()] {
+        let wls = generate(&model, &[], cfg.nominal_activity).unwrap();
+        for fam in Family::ALL {
+            let batch = family_model_batch(&wls, fam, &arch_refs, &cfg);
+            assert_eq!(batch.len(), archs.len());
+            for (arch, score) in archs.iter().zip(&batch) {
+                let layers = model_energy_for_family(&wls, fam, arch, &cfg);
+                let scalar_j: f64 = layers.iter().map(|l| l.overall_j()).sum();
+                let scalar_cycles: u64 = layers.iter().map(|l| l.cycles()).sum();
+                assert_eq!(
+                    score.overall_j.to_bits(),
+                    scalar_j.to_bits(),
+                    "{} {} {}: batch {} vs scalar {}",
+                    model.name,
+                    fam.name(),
+                    arch.hier.name,
+                    score.overall_j,
+                    scalar_j
+                );
+                assert_eq!(score.cycles, scalar_cycles, "{} {}", model.name, fam.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn soa_batch_kernel_matches_the_session_headline() {
+    // And the same through the public session path: the headline the
+    // search's frontier is built from is exactly what `evaluate` returns.
+    use eocas::energy::batch::family_model_batch;
+    use eocas::session::{EvalRequest, Session};
+    let session = Session::builder().threads(1).build();
+    let cfg = EnergyConfig::default();
+    let model = SnnModel::paper_layer();
+    let wls = generate(&model, &[], cfg.nominal_activity).unwrap();
+    let archs = vec![
+        Architecture::paper_default(),
+        Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+    ];
+    let arch_refs: Vec<&Architecture> = archs.iter().collect();
+    for fam in Family::ALL {
+        let batch = family_model_batch(&wls, fam, &arch_refs, &cfg);
+        for (arch, score) in archs.iter().zip(&batch) {
+            let req = EvalRequest::new(model.clone(), arch.clone(), fam);
+            let res = session.evaluate(&req).unwrap();
+            assert_eq!(
+                res.overall_j.to_bits(),
+                score.overall_j.to_bits(),
+                "{} {}: session {} vs batch {}",
+                fam.name(),
+                arch.hier.name,
+                res.overall_j,
+                score.overall_j
+            );
+            assert_eq!(res.cycles, score.cycles);
+        }
+    }
+}
+
+#[test]
+fn search_lower_bound_floors_chip_partitioned_scores() {
+    // The branch-and-bound floor must hold for multi-core chip
+    // evaluations too: partitions cover the layer extents and NoC
+    // energy is non-negative, so the whole-layer floor (with the
+    // search's one-sided f64 slack) stays below every partitioned
+    // score the session can produce.
+    use eocas::chip::{ChipConfig, NocSpec, Partitioning};
+    use eocas::energy::bound::ModelBound;
+    use eocas::session::{EvalRequest, Session};
+    use eocas::spike::traffic::SpikeEncoding;
+    let session = Session::builder().threads(1).build();
+    let cfg = EnergyConfig::default();
+    let model = SnnModel::cifar100_snn();
+    let wls = generate(&model, &[], cfg.nominal_activity).unwrap();
+    let mb = ModelBound::new(&wls, &cfg, SpikeEncoding::Raw);
+    let noc = NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 };
+    for arch in [
+        Architecture::paper_default(),
+        Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+    ] {
+        let lb = mb.lower_bound(&arch, &cfg) * (1.0 - 1e-9);
+        for (rows, cols) in [(1u32, 2u32), (2, 2)] {
+            for part in [Partitioning::LayerWise, Partitioning::ChannelWise] {
+                let chip = ChipConfig {
+                    mesh_rows: rows,
+                    mesh_cols: cols,
+                    noc: noc.clone(),
+                    partitioning: part,
+                };
+                let req = EvalRequest::new(model.clone(), arch.clone(), Family::AdvWs)
+                    .with_chip(chip);
+                let res = session.evaluate(&req).unwrap();
+                assert!(
+                    lb <= res.overall_j,
+                    "{} {rows}x{cols} {part:?}: floor {lb} above score {}",
+                    arch.hier.name,
+                    res.overall_j
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn n_level_engine_is_self_consistent_on_custom_hierarchies() {
     // The reference oracle is 3-level-only; for deeper/shared
     // hierarchies pin the wrapper to the scratch kernel (same engine,
