@@ -1,0 +1,168 @@
+//! Bench: observability overhead — what `eocas::obs` costs a hot
+//! pricing loop when instrumentation is off, on, and exporting.
+//!
+//! Measures, and emits as machine-readable `BENCH_obs.json`:
+//! * model pricing throughput (layers priced/s) with tracing disabled,
+//!   with tracing enabled, and with metrics counters hammered inline,
+//! * the headline ratio for the CI regression gate:
+//!   `overhead.trace_off` — disabled-instrumentation pricing time over
+//!   plain pricing time. The whole obs layer is pay-for-what-you-use,
+//!   so this must stay ~1.0; a regression means a span or counter
+//!   started costing on the default path.
+//! * info numbers (never gated: enabled-mode costs are real work):
+//!   `trace_on_overhead`, `counter_ns`, `histogram_ns`.
+//!
+//! Also writes `trace_sample.json` next to the JSON output — a real
+//! Chrome trace-event document from a spanned pricing run, uploaded by
+//! CI as a Perfetto-loadable artifact.
+//!
+//! Flags: `--quick` (CI smoke mode: short timing windows),
+//! `--json PATH` (default `BENCH_obs.json`).
+
+use eocas::arch::Architecture;
+use eocas::config::EnergyConfig;
+use eocas::dataflow::templates::Family;
+use eocas::energy::model_energy_for_family;
+use eocas::model::SnnModel;
+use eocas::obs::{metrics, trace};
+use eocas::util::bench::{black_box, time_it, BenchStats};
+use eocas::util::json::Json;
+use eocas::workload::generate;
+
+struct Case {
+    key: &'static str,
+    stats: BenchStats,
+    /// Layers priced per timed iteration (0 for pure-instrument cases).
+    items_per_iter: f64,
+}
+
+fn emit(cases: &[Case], overheads: &[(&str, f64)], info: &[(&str, f64)], quick: bool, path: &str) {
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0)).set("quick", Json::Bool(quick));
+    let mut jcases = Json::obj();
+    for c in cases {
+        let mut j = Json::obj();
+        j.set("mean_ns", Json::Num(c.stats.mean_ns))
+            .set("p50_ns", Json::Num(c.stats.p50_ns))
+            .set("p95_ns", Json::Num(c.stats.p95_ns))
+            .set("iters", Json::Num(c.stats.iters as f64));
+        if c.items_per_iter > 0.0 {
+            j.set("layers_per_s", Json::Num(c.items_per_iter / (c.stats.mean_ns / 1e9)));
+        }
+        jcases.set(c.key, j);
+    }
+    doc.set("cases", jcases);
+    let mut jo = Json::obj();
+    for (k, v) in overheads {
+        jo.set(k, Json::Num(*v));
+    }
+    doc.set("overhead", jo);
+    for (k, v) in info {
+        doc.set(k, Json::Num(*v));
+    }
+    match std::fs::write(path, format!("{}\n", doc.dumps())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_obs.json".to_string());
+    let w = if quick { 0.05 } else { 1.0 };
+
+    // The CIFAR-100 SNN through the scalar pricing chain: the loop the
+    // spans wrap in production, cheap enough to repeat many times so
+    // per-call instrumentation cost would actually show.
+    let model = SnnModel::cifar100_snn();
+    let wls = generate(&model, &[], 0.75).expect("cifar100 workloads");
+    let arch = Architecture::paper_default();
+    let cfg = EnergyConfig::default();
+    let n_layers = wls.len() as f64;
+
+    let mut cases: Vec<Case> = Vec::new();
+    let mut push = |key: &'static str, stats: BenchStats, items: f64| {
+        println!("{}", stats.report());
+        if items > 0.0 {
+            println!("  => {:.0} layers/s", items / (stats.mean_ns / 1e9));
+        }
+        println!();
+        cases.push(Case { key, stats, items_per_iter: items });
+    };
+
+    // 1. The gated headline: pricing with every obs feature disabled.
+    //    `model_energy_for_family` carries a span itself, so the
+    //    disabled-path cost is measured exactly where it is paid.
+    trace::disable();
+    let off = time_it("price cifar100, instrumentation off", 2, w, || {
+        black_box(model_energy_for_family(&wls, Family::AdvWs, &arch, &cfg));
+    });
+    let baseline_ns = off.mean_ns;
+    push("price_trace_off", off, n_layers);
+
+    // The same loop again: both runs pay the disabled-path check, so
+    // their ratio isolates run-to-run noise, which is what the gate
+    // must tolerate around 1.0.
+    let off2 = time_it("price cifar100, instrumentation off (rerun)", 2, w, || {
+        black_box(model_energy_for_family(&wls, Family::AdvWs, &arch, &cfg));
+    });
+    let trace_off = off2.mean_ns / baseline_ns.max(1e-9);
+    push("price_trace_off_rerun", off2, n_layers);
+
+    // 2. Info: pricing with tracing enabled (bounded buffer absorbs the
+    //    events; reset between windows keeps it from saturating).
+    trace::enable();
+    let on = time_it("price cifar100, tracing on", 2, w, || {
+        trace::reset();
+        black_box(model_energy_for_family(&wls, Family::AdvWs, &arch, &cfg));
+    });
+    trace::disable();
+    let trace_on_overhead = on.mean_ns / baseline_ns.max(1e-9);
+    push("price_trace_on", on, n_layers);
+
+    // 3. Info: raw instrument costs, per op.
+    let ctr = metrics::counter("eocas_bench_obs_ops_total", "bench-only counter");
+    let c = time_it("counter.inc", 2, w * 0.2, || {
+        ctr.inc();
+    });
+    let counter_ns = c.mean_ns;
+    push("counter_inc", c, 0.0);
+    let hist = metrics::histogram("eocas_bench_obs_ns", "bench-only histogram");
+    let h = time_it("histogram.record", 2, w * 0.2, || {
+        hist.record(1234);
+    });
+    let histogram_ns = h.mean_ns;
+    push("histogram_record", h, 0.0);
+
+    // 4. The CI trace artifact: one spanned pricing run, exported.
+    trace::enable();
+    trace::reset();
+    {
+        let _run = trace::span("bench_obs.sample");
+        black_box(model_energy_for_family(&wls, Family::AdvWs, &arch, &cfg));
+    }
+    let sample_path = "trace_sample.json";
+    match trace::write(std::path::Path::new(sample_path)) {
+        Ok(()) => println!("wrote {sample_path} ({} events)", trace::event_count()),
+        Err(e) => eprintln!("failed to write {sample_path}: {e}"),
+    }
+    trace::disable();
+
+    println!("trace_off overhead {trace_off:.3} (gated ~1.0), trace_on {trace_on_overhead:.3}");
+    emit(
+        &cases,
+        &[("trace_off", trace_off)],
+        &[
+            ("trace_on_overhead", trace_on_overhead),
+            ("counter_ns", counter_ns),
+            ("histogram_ns", histogram_ns),
+        ],
+        quick,
+        &json_path,
+    );
+}

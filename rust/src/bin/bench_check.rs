@@ -167,12 +167,18 @@ fn run(args: &[String]) -> Result<bool, String> {
             g.baseline,
             current,
             g.rule,
-            if g.ok { "OK" } else { "REGRESSED" }
+            if g.ok { "PASS" } else { "REGRESSED" }
         );
     }
     if gates.is_empty() {
         return Err("baselines gate no metrics — refusing to vacuously pass".into());
     }
+    let passed = gates.iter().filter(|g| g.ok).count();
+    println!(
+        "bench gate: {passed}/{} metrics within tolerance across {} file(s)",
+        gates.len(),
+        files.len()
+    );
     Ok(all_ok)
 }
 

@@ -174,6 +174,7 @@ pub fn evaluate_chip(
     temporal: Option<&TemporalSparsity>,
     encoding: SpikeEncoding,
 ) -> ChipEvaluation {
+    let _span = crate::obs::trace::span("chip.evaluate");
     let cores = chip.cores();
     let layer_energy = |wl: &LayerWorkload, i: usize| {
         layer_energy_for_family_temporal(
@@ -204,7 +205,17 @@ pub fn evaluate_chip(
                 }
                 let bits = packet_bits(temporal, encoding, i - 1, input_raster_bits(&wls[i]));
                 let hops = noc::manhattan_hops(src, dst, chip.mesh_cols);
-                noc_j += chip.noc.transfer_j(bits, hops);
+                let j = chip.noc.transfer_j(bits, hops);
+                if crate::obs::explain::enabled() {
+                    crate::obs::explain::record_noc(crate::obs::explain::NocTerm {
+                        src,
+                        dst,
+                        hops,
+                        bits,
+                        joules: j,
+                    });
+                }
+                noc_j += j;
             }
         }
         Partitioning::ChannelWise => {
@@ -254,7 +265,17 @@ pub fn evaluate_chip(
                                 packet_bits(temporal, encoding, i - 1, raster * frac);
                             let hops =
                                 noc::manhattan_hops(src as u32, dst as u32, chip.mesh_cols);
-                            noc_j += chip.noc.transfer_j(bits, hops);
+                            let j = chip.noc.transfer_j(bits, hops);
+                            if crate::obs::explain::enabled() {
+                                crate::obs::explain::record_noc(crate::obs::explain::NocTerm {
+                                    src: src as u32,
+                                    dst: dst as u32,
+                                    hops,
+                                    bits,
+                                    joules: j,
+                                });
+                            }
+                            noc_j += j;
                         }
                     }
                 }

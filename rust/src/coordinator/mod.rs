@@ -63,7 +63,7 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineOutcome> {
 
     // 1. Train (or reuse) — real BPTT through PJRT.
     let run_log = if cfg.reuse_run_log && log_path.exists() {
-        eprintln!("[pipeline] reusing {}", log_path.display());
+        crate::log_info!("[pipeline] reusing {}", log_path.display());
         let text = std::fs::read_to_string(&log_path)?;
         let j = crate::util::json::Json::parse(&text)
             .map_err(|e| err!("parse run log: {e}"))?;
@@ -87,7 +87,7 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineOutcome> {
     } else {
         let rt = Runtime::cpu().context("create PJRT runtime")?;
         let mut trainer = Trainer::new(&rt, cfg.trainer.seed)?;
-        eprintln!(
+        crate::log_info!(
             "[pipeline] training tiny-snn for {} steps (B={}, T={}) on {}",
             cfg.trainer.steps,
             trainer.spec.batch,
@@ -96,14 +96,14 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineOutcome> {
         );
         let log = trainer.train(&cfg.trainer)?;
         log.save(&log_path)?;
-        eprintln!("[pipeline] run log -> {}", log_path.display());
+        crate::log_info!("[pipeline] run log -> {}", log_path.display());
         log
     };
 
     // 2. Measured sparsity profile.
     let sparsity = SparsityProfile::from_run_log(&run_log.to_json())
         .map_err(|e| err!("sparsity from run log: {e}"))?;
-    eprintln!(
+    crate::log_info!(
         "[pipeline] measured firing rates: {:?} (source {})",
         sparsity.per_layer, sparsity.source
     );
@@ -119,7 +119,7 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineOutcome> {
     let best = res.best().ok_or_else(|| {
         err!("design space is empty (no architectures or dataflow families configured)")
     })?;
-    eprintln!(
+    crate::log_info!(
         "[pipeline] optimum: {} + {} @ {:.2} uJ ({} candidates)",
         best.arch.array.label(),
         best.dataflow,

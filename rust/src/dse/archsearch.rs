@@ -369,6 +369,15 @@ fn restart_rng(seed: u64, restart: usize) -> SplitMix64 {
     SplitMix64::new(seed ^ (restart as u64).wrapping_mul(RESTART_STREAM))
 }
 
+/// Records how tight the admissible lower bound was for a priced point:
+/// `actual / bound`, fixed-point x64 so the integer histogram resolves
+/// ratios near 1. Skipped when the bound was absent or degenerate.
+fn record_bound_tightness(energy_j: f64, lb: f64) {
+    if lb.is_finite() && lb > 0.0 && energy_j.is_finite() {
+        crate::obs::metrics::archsearch_bound_tightness().record((energy_j / lb * 64.0) as u64);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The run
 // ---------------------------------------------------------------------------
@@ -569,6 +578,8 @@ impl<'a> Run<'a> {
     /// Price a batch of candidates, score each by its best dataflow, fold
     /// into the frontier.
     fn score_batch(&mut self, batch: &[(Coords, Architecture)]) -> Result<Vec<ScoredPoint>> {
+        let _span = crate::obs::trace::span("archsearch.score_batch");
+        crate::obs::metrics::archsearch_batch_occupancy().record(batch.len() as u64);
         let nd = self.dataflows.len();
         let scores = match &self.fast {
             Some(fp) => self.fast_scores(fp, batch),
@@ -590,6 +601,7 @@ impl<'a> Run<'a> {
             self.fold(p.clone());
             out.push(p);
         }
+        crate::obs::metrics::archsearch_evaluated().add(out.len() as u64);
         Ok(out)
     }
 
@@ -609,11 +621,17 @@ impl<'a> Run<'a> {
         if self.frontier.iter().any(|q| dominates(q, &p)) {
             return;
         }
+        let before = self.frontier.len();
         self.frontier.retain(|q| !dominates(&p, q));
+        let evicted = before - self.frontier.len();
+        if evicted > 0 {
+            crate::obs::metrics::archsearch_frontier_evictions().add(evicted as u64);
+        }
         let pos = self
             .frontier
             .partition_point(|q| q.energy_j.total_cmp(&p.energy_j) == Ordering::Less);
         self.frontier.insert(pos, p);
+        crate::obs::metrics::archsearch_frontier_inserts().inc();
     }
 
     fn maybe_checkpoint(&mut self, cursor: &Cursor) -> Result<()> {
@@ -646,6 +664,7 @@ impl<'a> Run<'a> {
                 return Ok(false);
             }
             let mut batch: Vec<(Coords, Architecture)> = Vec::with_capacity(batch_size);
+            let mut lbs: Vec<f64> = Vec::with_capacity(batch_size);
             while flat < hi && batch.len() < batch_size {
                 let coords = self.space.coords_of(flat);
                 flat += 1;
@@ -656,22 +675,30 @@ impl<'a> Run<'a> {
                         // can neither enter the frontier nor improve the
                         // best — decide it without pricing.
                         let ob = Run::onchip_bytes(self.space, coords, &a);
-                        let prunable = self
-                            .lower_bound(coords, &a)
-                            .is_some_and(|lb| self.frontier_dominates_bound(lb, ob));
+                        let lb = self.lower_bound(coords, &a);
+                        let prunable =
+                            lb.is_some_and(|lb| self.frontier_dominates_bound(lb, ob));
                         if prunable {
                             self.pruned += 1;
+                            crate::obs::metrics::archsearch_pruned().inc();
                         } else {
                             batch.push((coords, a));
+                            lbs.push(lb.unwrap_or(f64::NAN));
                         }
                     }
-                    Err(_) => self.infeasible += 1,
+                    Err(_) => {
+                        self.infeasible += 1;
+                        crate::obs::metrics::archsearch_infeasible().inc();
+                    }
                 }
             }
             if batch.is_empty() {
                 continue;
             }
-            self.score_batch(&batch)?;
+            let scored = self.score_batch(&batch)?;
+            for (p, lb) in scored.iter().zip(&lbs) {
+                record_bound_tightness(p.energy_j, *lb);
+            }
             self.maybe_checkpoint(&Cursor::Exhaustive { next_flat: flat })?;
         }
         self.save_checkpoint(&Cursor::Exhaustive { next_flat: hi }, true)?;
@@ -711,7 +738,10 @@ impl<'a> Run<'a> {
                             found = Some((c, a));
                             break;
                         }
-                        Err(_) => self.infeasible += 1,
+                        Err(_) => {
+                            self.infeasible += 1;
+                            crate::obs::metrics::archsearch_infeasible().inc();
+                        }
                     }
                 }
                 let Some((c, a)) = found else {
@@ -738,6 +768,7 @@ impl<'a> Run<'a> {
             match self.space.candidate(prop) {
                 Err(_) => {
                     self.infeasible += 1;
+                    crate::obs::metrics::archsearch_infeasible().inc();
                     st.temp *= cooling;
                 }
                 Ok(arch) => {
@@ -752,7 +783,8 @@ impl<'a> Run<'a> {
                     // frontier-dominated — the skipped point could
                     // neither move the trajectory nor the frontier.
                     let mut predrawn: Option<f64> = None;
-                    if let Some(lb) = self.lower_bound(prop, &arch) {
+                    let lb_opt = self.lower_bound(prop, &arch);
+                    if let Some(lb) = lb_opt {
                         if lb.total_cmp(&cur_energy) == Ordering::Greater {
                             let u = st.rng.next_f64();
                             let lb_rel = (lb - cur_energy)
@@ -763,6 +795,7 @@ impl<'a> Run<'a> {
                                 && self.frontier_dominates_bound(lb, ob)
                             {
                                 self.pruned += 1;
+                                crate::obs::metrics::archsearch_pruned().inc();
                                 st.temp *= cooling;
                                 self.maybe_checkpoint(&Cursor::Annealing(st.clone()))?;
                                 continue;
@@ -771,6 +804,7 @@ impl<'a> Run<'a> {
                         }
                     }
                     let p = self.score_one(prop, arch)?;
+                    record_bound_tightness(p.energy_j, lb_opt.unwrap_or(f64::NAN));
                     let accept = if p.energy_j <= cur_energy {
                         debug_assert!(
                             predrawn.is_none(),
@@ -821,6 +855,12 @@ impl<'a> Run<'a> {
         let Some(path) = &self.cfg.checkpoint else {
             return Ok(());
         };
+        let _span = crate::obs::trace::span("archsearch.checkpoint.save");
+        crate::log_debug!(
+            "archsearch checkpoint: {} evaluated, done={done}, -> {}",
+            self.evaluated,
+            path.display()
+        );
         let mut doc = Json::obj();
         doc.set("schema", Json::Num(CHECKPOINT_SCHEMA as f64))
             .set("fingerprint", Json::Str(self.fingerprint.clone()))
@@ -1017,6 +1057,7 @@ fn load_checkpoint(
     if !path.exists() {
         return Ok(None);
     }
+    let _span = crate::obs::trace::span("archsearch.checkpoint.load");
     let text = std::fs::read_to_string(path)
         .map_err(|e| err!("read checkpoint {}: {e}", path.display()))?;
     let doc = Json::parse(&text).map_err(|e| err!("checkpoint {}: {e}", path.display()))?;
@@ -1356,6 +1397,7 @@ pub fn search(
     space: &ArchSpace,
     cfg: &ArchSearchConfig,
 ) -> Result<ArchSearchResult> {
+    let _span = crate::obs::trace::span("archsearch.search");
     space.validate().map_err(Error::new)?;
     cfg.validate()?;
     if cfg.include_mapper && space.cores.iter().any(|&c| c > 1) {
@@ -1380,9 +1422,10 @@ pub fn search(
         };
         session.workloads(model, &profile, session.energy_config().nominal_activity)?
     };
-    let bound = cfg
-        .prune
-        .then(|| ModelBound::new(&wls, session.energy_config(), cfg.spike_encoding));
+    let bound = cfg.prune.then(|| {
+        let _span = crate::obs::trace::span("archsearch.bound");
+        ModelBound::new(&wls, session.energy_config(), cfg.spike_encoding)
+    });
     // The SoA kernel prices family templates under raw spike traffic on
     // single-core chips — exactly the session's scalar chain for that
     // shape. Anything else goes through the session.
@@ -1418,6 +1461,11 @@ pub fn search(
     };
     let cursor = match restored {
         Some(r) => {
+            crate::log_info!(
+                "archsearch: resumed from checkpoint ({} evaluated, {} pruned)",
+                r.evaluated,
+                r.pruned
+            );
             run.evaluated = r.evaluated;
             run.pruned = r.pruned;
             run.infeasible = r.infeasible;

@@ -276,6 +276,7 @@ pub fn search(
     cfg: &EnergyConfig,
     mc: &MapperConfig,
 ) -> MapperResult {
+    let _span = crate::obs::trace::span("mapper.search");
     let n_onchip = arch.hier.num_levels() - 1;
     let mut best: Option<(f64, [[u64; 8]; MAX_LEVELS], (Dim, u64, Dim, u64))> = None;
     let mut evaluated = 0usize;

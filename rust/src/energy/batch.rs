@@ -166,6 +166,7 @@ pub fn family_model_batch(
     archs: &[&Architecture],
     cfg: &EnergyConfig,
 ) -> Vec<BatchScore> {
+    let _span = crate::obs::trace::span("energy.batch_price");
     let n = archs.len();
     let mut out = vec![BatchScore { overall_j: 0.0, cycles: 0 }; n];
     if n == 0 {

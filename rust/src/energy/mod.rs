@@ -558,6 +558,7 @@ pub fn model_energy_for_family(
     arch: &Architecture,
     cfg: &EnergyConfig,
 ) -> Vec<LayerEnergy> {
+    let _span = crate::obs::trace::span("energy.price_model");
     wls.iter().map(|wl| layer_energy_for_family(wl, family, arch, cfg)).collect()
 }
 

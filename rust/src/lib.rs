@@ -43,6 +43,7 @@ pub mod dataflow;
 pub mod dse;
 pub mod energy;
 pub mod model;
+pub mod obs;
 pub mod perfmodel;
 pub mod report;
 pub mod reuse;

@@ -57,7 +57,11 @@ USAGE:
                  [--dataflow advws|ws1|ws2|os|rs|mapper]
                  [--arch-file PATH] [--activity X] [--config PATH]
                  [--sparsity PATH] [--temporal PATH] [--encoding raw|auto]
-                 [--json]
+                 [--json] [--explain]
+                 (--explain prints the per-term energy audit — every
+                  compute/memory/NoC cost term, summing bit-exactly to
+                  the headline joules; with --json it rides along as an
+                  `explain` object)
   eocas chip-sim --chip-file PATH.toml
                  [--model paper|cifar100|tiny]
                  [--dataflow advws|ws1|ws2|os|rs]
@@ -113,10 +117,20 @@ USAGE:
                  [--stats-every SECS] [--fault-injection] [--config PATH]
                  (long-lived evaluation daemon: NDJSON request-per-line
                   and single-shot HTTP — POST /evaluate, GET /stats,
-                  GET /healthz — on one port, multiplexing all clients
-                  onto one bounded-cache session; see DESIGN.md §14)
+                  GET /metrics, GET /healthz — on one port, multiplexing
+                  all clients onto one bounded-cache session; see
+                  DESIGN.md §14)
   eocas serve-stats --addr HOST:PORT [--json]
                  (fetch and render a running daemon's /stats)
+  eocas version  (also --version / -V: crate version, eval schema,
+                  enabled features)
+
+Observability (DESIGN.md §16): `--trace PATH` on simulate, dse,
+arch-search, chip-sim or serve writes a Chrome trace-event JSON of the
+run's spans (load it in Perfetto or chrome://tracing); `--metrics-json
+PATH` dumps the process metrics registry after the run; the serve
+daemon additionally exposes Prometheus text at GET /metrics. Progress
+logging is quiet by default — set EOCAS_LOG=info (or debug) on stderr.
 
 Flags take values as `--key value` or `--key=value`; a flag with no value
 is boolean true. Repeating a flag is an error.
@@ -307,6 +321,38 @@ fn report_ctx(flags: &HashMap<String, String>) -> Result<ReportCtx> {
 fn run(args: &[String]) -> Result<()> {
     let (pos, flags) = parse_flags(args)?;
     let cmd = pos.first().map(|s| s.as_str()).unwrap_or("help");
+    if cmd == "version" || cmd == "-V" || flags.contains_key("version") {
+        println!("{}", eocas::obs::version_string());
+        return Ok(());
+    }
+    // `--trace` spans the whole dispatch; the export runs after it so
+    // the file appears even when the command itself errors.
+    let trace_path = flags.get("trace").map(PathBuf::from);
+    if trace_path.is_some() {
+        eocas::obs::trace::enable();
+    }
+    let metrics_path = flags.get("metrics-json").map(PathBuf::from);
+    let outcome = dispatch(cmd, &pos, &flags);
+    if let Some(path) = &trace_path {
+        match eocas::obs::trace::write(path) {
+            Ok(()) => eocas::log_info!(
+                "trace -> {} ({} events)",
+                path.display(),
+                eocas::obs::trace::event_count()
+            ),
+            Err(e) => eocas::log_warn!("trace export failed: {e}"),
+        }
+    }
+    if let Some(path) = &metrics_path {
+        let doc = eocas::obs::metrics::metrics_json();
+        if let Err(e) = std::fs::write(path, format!("{}\n", doc.dumps())) {
+            eocas::log_warn!("metrics export failed ({}): {e}", path.display());
+        }
+    }
+    outcome
+}
+
+fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     match cmd {
         "help" | "-h" | "--help" => {
             print!("{USAGE}");
@@ -314,7 +360,7 @@ fn run(args: &[String]) -> Result<()> {
         }
         "report" => {
             let what = pos.get(1).map(|s| s.as_str()).unwrap_or("all");
-            let ctx = report_ctx(&flags)?;
+            let ctx = report_ctx(flags)?;
             match what {
                 "workload" => print!("{}", report::workload_table(&ctx).render()),
                 "table1" => print!("{}", report::table1_reuse_factors(&ctx).render()),
@@ -345,11 +391,11 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "simulate" => {
-            let cfg = energy_config(&flags)?;
-            let model = pick_model(&flags)?;
+            let cfg = energy_config(flags)?;
+            let model = pick_model(flags)?;
             let fam = pick_dataflow(flags.get("dataflow").map(|s| s.as_str()).unwrap_or("advws"))?;
-            let activity = parse_num(&flags, "activity", cfg.nominal_activity)?;
-            let arch = match arch_file_flag(&flags)? {
+            let activity = parse_num(flags, "activity", cfg.nominal_activity)?;
+            let arch = match arch_file_flag(flags)? {
                 None => Architecture::paper_default(),
                 Some(mut v) if v.len() == 1 => v.remove(0),
                 Some(v) => bail!("simulate takes one --arch-file, got {}", v.len()),
@@ -358,7 +404,7 @@ fn run(args: &[String]) -> Result<()> {
             // No --sparsity: leave the profile empty so --activity applies
             // to every layer (the request's default-activity path).
             let mut req = EvalRequest::new(model.clone(), arch, fam).with_activity(activity);
-            if let Some(sp) = sparsity_flag(&flags)? {
+            if let Some(sp) = sparsity_flag(flags)? {
                 req = req.with_sparsity(sp);
             }
             if let Some(p) = flags.get("temporal") {
@@ -374,9 +420,23 @@ fn run(args: &[String]) -> Result<()> {
                     .ok_or_else(|| err!("unknown --encoding `{enc}` (raw|auto)"))?;
                 req = req.with_spike_encoding(e);
             }
+            let explain_on = flags.contains_key("explain");
+            if explain_on {
+                eocas::obs::explain::enable();
+            }
             let res = session.evaluate(&req)?;
+            let explain = explain_on.then(|| {
+                let terms = eocas::obs::explain::take_noc_terms();
+                eocas::obs::explain::disable();
+                eocas::obs::explain::Explain::from_result(&res, terms)
+            });
             if flags.contains_key("json") {
-                println!("{}", res.to_json().dumps());
+                let mut doc = res.to_json();
+                doc.set("build", eocas::obs::build_info());
+                if let Some(e) = &explain {
+                    doc.set("explain", e.to_json());
+                }
+                println!("{}", doc.dumps());
                 return Ok(());
             }
             println!("{model}");
@@ -401,14 +461,17 @@ fn run(args: &[String]) -> Result<()> {
                 metrics.area_mm2,
                 metrics.utilization * 100.0
             );
+            if let Some(e) = &explain {
+                print!("{}", e.table());
+            }
             Ok(())
         }
         "dse" => {
-            let cfg = energy_config(&flags)?;
-            let model = pick_model(&flags)?;
-            let sparsity = pick_sparsity(&flags, &model, &cfg)?;
+            let cfg = energy_config(flags)?;
+            let model = pick_model(flags)?;
+            let sparsity = pick_sparsity(flags, &model, &cfg)?;
             let mut dse_cfg = DseConfig {
-                random_samples: parse_num(&flags, "samples", 0usize)?,
+                random_samples: parse_num(flags, "samples", 0usize)?,
                 ..Default::default()
             };
             match flags.get("dataflow").map(|s| s.as_str()) {
@@ -418,14 +481,14 @@ fn run(args: &[String]) -> Result<()> {
                 Some("mapper") => dse_cfg.include_mapper = true,
                 Some(other) => dse_cfg.families = vec![pick_family(other)?],
             }
-            let pool = match arch_file_flag(&flags)? {
+            let pool = match arch_file_flag(flags)? {
                 Some(candidates) => ArchPool { candidates },
                 None => ArchPool::paper_pool(),
             };
             let session = Session::builder()
                 .energy_config(cfg)
                 .arch_pool(pool)
-                .threads(parse_num(&flags, "threads", 0usize)?)
+                .threads(parse_num(flags, "threads", 0usize)?)
                 .build();
             let start = std::time::Instant::now();
             let res = dse::explore(&session, &model, &sparsity, &dse_cfg)?;
@@ -459,19 +522,19 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "arch-search" => {
-            let cfg = energy_config(&flags)?;
-            let model = pick_model(&flags)?;
-            let sparsity = pick_sparsity(&flags, &model, &cfg)?;
+            let cfg = energy_config(flags)?;
+            let model = pick_model(flags)?;
+            let sparsity = pick_sparsity(flags, &model, &cfg)?;
             let space_path = flags.get("space").ok_or_else(|| {
                 err!("arch-search needs --space PATH (see configs/README.md)")
             })?;
             let space = spacefile::load_space(std::path::Path::new(space_path))
                 .map_err(|e| err!("space file: {e}"))?;
             let mut scfg = ArchSearchConfig {
-                seed: parse_num(&flags, "seed", ArchSearchConfig::default().seed)?,
+                seed: parse_num(flags, "seed", ArchSearchConfig::default().seed)?,
                 limit: flags
                     .get("limit")
-                    .map(|_| parse_num(&flags, "limit", 0usize))
+                    .map(|_| parse_num(flags, "limit", 0usize))
                     .transpose()?,
                 checkpoint: flags.get("checkpoint").map(PathBuf::from),
                 resume: !flags.contains_key("fresh"),
@@ -483,7 +546,7 @@ fn run(args: &[String]) -> Result<()> {
                      add --checkpoint PATH to make the run resumable"
                 );
             }
-            scfg.batch = parse_num(&flags, "batch", 0usize)?;
+            scfg.batch = parse_num(flags, "batch", 0usize)?;
             scfg.prune = !flags.contains_key("no-prune");
             scfg.fast_eval = !flags.contains_key("no-fast");
             if let Some(s) = flags.get("shard") {
@@ -498,11 +561,11 @@ fn run(args: &[String]) -> Result<()> {
             }
             let iters = flags
                 .get("iters")
-                .map(|_| parse_num(&flags, "iters", 0usize))
+                .map(|_| parse_num(flags, "iters", 0usize))
                 .transpose()?;
             let restarts = flags
                 .get("restarts")
-                .map(|_| parse_num(&flags, "restarts", 0usize))
+                .map(|_| parse_num(flags, "restarts", 0usize))
                 .transpose()?;
             let anneal_with = |iters: Option<usize>, restarts: Option<usize>| {
                 let Strategy::Annealing { iters: di, restarts: dr, t0, cooling } =
@@ -555,12 +618,14 @@ fn run(args: &[String]) -> Result<()> {
             }
             let session = Session::builder()
                 .energy_config(cfg)
-                .threads(parse_num(&flags, "threads", 0usize)?)
+                .threads(parse_num(flags, "threads", 0usize)?)
                 .build();
             let start = std::time::Instant::now();
             let res = archsearch::search(&session, &model, &sparsity, &space, &scfg)?;
             if flags.contains_key("json") {
-                println!("{}", archsearch::result_json(&res).dumps());
+                let mut doc = archsearch::result_json(&res);
+                doc.set("build", eocas::obs::build_info());
+                println!("{}", doc.dumps());
                 return Ok(());
             }
             let dt = start.elapsed();
@@ -619,7 +684,11 @@ fn run(args: &[String]) -> Result<()> {
             std::fs::write(out, format!("{}\n", doc.dumps()))
                 .map_err(|e| err!("write {out}: {e}"))?;
             if flags.contains_key("json") {
-                println!("{}", doc.dumps());
+                // The checkpoint file keeps the pure checkpoint schema;
+                // only the printed copy carries the build header.
+                let mut printed = doc.clone();
+                printed.set("build", eocas::obs::build_info());
+                println!("{}", printed.dumps());
                 return Ok(());
             }
             let count = |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
@@ -635,8 +704,8 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "chip-sim" => {
-            let cfg = energy_config(&flags)?;
-            let model = pick_model(&flags)?;
+            let cfg = energy_config(flags)?;
+            let model = pick_model(flags)?;
             let chip_path = flags.get("chip-file").ok_or_else(|| {
                 err!("chip-sim needs --chip-file PATH (see configs/README.md)")
             })?;
@@ -655,7 +724,7 @@ fn run(args: &[String]) -> Result<()> {
                 base_chip.partitioning = Partitioning::from_key(p)
                     .ok_or_else(|| err!("unknown --partition `{p}` (layer|channel)"))?;
             }
-            let sparsity = sparsity_flag(&flags)?;
+            let sparsity = sparsity_flag(flags)?;
             let temporal = match flags.get("temporal") {
                 None => None,
                 Some(p) => {
@@ -677,7 +746,7 @@ fn run(args: &[String]) -> Result<()> {
                 .transpose()?;
             let session = Session::builder()
                 .energy_config(cfg)
-                .threads(parse_num(&flags, "threads", 0usize)?)
+                .threads(parse_num(flags, "threads", 0usize)?)
                 .build();
             // Core-count sweep: 1, 2, 4, ... capped at the file's mesh.
             // The 1-core row goes through the plain single-hierarchy
@@ -731,6 +800,7 @@ fn run(args: &[String]) -> Result<()> {
             if flags.contains_key("json") {
                 let mut doc = Json::obj();
                 doc.set("schema", Json::Num(1.0))
+                    .set("build", eocas::obs::build_info())
                     .set("chip", Json::Str(spec.name.clone()))
                     .set("partitioning", Json::Str(base_chip.partitioning.key().into()))
                     .set("dataflow", Json::Str(fam.name().into()))
@@ -769,15 +839,15 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "spike-sim" => {
-            let mut model = pick_model(&flags)?;
-            model.timesteps = parse_num(&flags, "timesteps", model.timesteps)?;
+            let mut model = pick_model(flags)?;
+            model.timesteps = parse_num(flags, "timesteps", model.timesteps)?;
             let d = LifConfig::default();
             let lif = LifConfig {
-                threshold: parse_num(&flags, "threshold", d.threshold)?,
-                decay: parse_num(&flags, "decay", d.decay)?,
-                input_rate: parse_num(&flags, "input-rate", d.input_rate)?,
+                threshold: parse_num(flags, "threshold", d.threshold)?,
+                decay: parse_num(flags, "decay", d.decay)?,
+                input_rate: parse_num(flags, "input-rate", d.input_rate)?,
                 soft_reset: flags.contains_key("soft-reset"),
-                seed: parse_num(&flags, "seed", d.seed)?,
+                seed: parse_num(flags, "seed", d.seed)?,
             };
             let start = std::time::Instant::now();
             let trace = spike::simulate(&model, &lif)?;
@@ -787,7 +857,9 @@ fn run(args: &[String]) -> Result<()> {
             );
             temporal.save(&log_path)?;
             if flags.contains_key("json") {
-                println!("{}", temporal.run_log_json().dumps());
+                let mut doc = temporal.run_log_json();
+                doc.set("build", eocas::obs::build_info());
+                println!("{}", doc.dumps());
                 return Ok(());
             }
             println!(
@@ -833,10 +905,10 @@ fn run(args: &[String]) -> Result<()> {
         }
         "train" => {
             let tcfg = TrainerConfig {
-                steps: parse_num(&flags, "steps", 300usize)?,
-                lr: parse_num(&flags, "lr", 0.1f32)?,
-                seed: parse_num(&flags, "seed", 42u64)?,
-                log_every: parse_num(&flags, "log-every", 25usize)?,
+                steps: parse_num(flags, "steps", 300usize)?,
+                lr: parse_num(flags, "lr", 0.1f32)?,
+                seed: parse_num(flags, "seed", 42u64)?,
+                log_every: parse_num(flags, "log-every", 25usize)?,
             };
             let rt = Runtime::cpu()?;
             let mut trainer = Trainer::new(&rt, tcfg.seed)?;
@@ -866,10 +938,10 @@ fn run(args: &[String]) -> Result<()> {
         "pipeline" => {
             let cfg = PipelineConfig {
                 trainer: TrainerConfig {
-                    steps: parse_num(&flags, "steps", 200usize)?,
+                    steps: parse_num(flags, "steps", 200usize)?,
                     ..Default::default()
                 },
-                threads: parse_num(&flags, "threads", 0usize)?,
+                threads: parse_num(flags, "threads", 0usize)?,
                 out_dir: PathBuf::from(flags.get("out").cloned().unwrap_or("reports".into())),
                 reuse_run_log: flags.contains_key("reuse"),
                 ..Default::default()
@@ -888,37 +960,37 @@ fn run(args: &[String]) -> Result<()> {
             let d = ServeConfig::default();
             let cfg = ServeConfig {
                 addr: flags.get("addr").cloned().unwrap_or(d.addr),
-                threads: parse_num(&flags, "threads", 0usize)?,
-                queue_cap: parse_num(&flags, "queue-cap", d.queue_cap)?,
-                batch_max: parse_num(&flags, "batch-max", d.batch_max)?,
+                threads: parse_num(flags, "threads", 0usize)?,
+                queue_cap: parse_num(flags, "queue-cap", d.queue_cap)?,
+                batch_max: parse_num(flags, "batch-max", d.batch_max)?,
                 deadline: std::time::Duration::from_millis(parse_num(
-                    &flags,
+                    flags,
                     "deadline-ms",
                     d.deadline.as_millis() as u64,
                 )?),
                 io_timeout: std::time::Duration::from_millis(parse_num(
-                    &flags,
+                    flags,
                     "io-timeout-ms",
                     d.io_timeout.as_millis() as u64,
                 )?),
-                max_body_bytes: parse_num(&flags, "max-body-bytes", d.max_body_bytes)?,
-                max_connections: parse_num(&flags, "max-connections", d.max_connections)?,
+                max_body_bytes: parse_num(flags, "max-body-bytes", d.max_body_bytes)?,
+                max_connections: parse_num(flags, "max-connections", d.max_connections)?,
                 max_cached_results: parse_num(
-                    &flags,
+                    flags,
                     "max-cached-results",
                     d.max_cached_results,
                 )?,
                 max_result_bytes: parse_num(
-                    &flags,
+                    flags,
                     "max-result-mb",
                     d.max_result_bytes >> 20,
                 )? << 20,
                 fault_injection: flags.contains_key("fault-injection"),
             };
-            let stats_every = parse_num(&flags, "stats-every", 0u64)?;
+            let stats_every = parse_num(flags, "stats-every", 0u64)?;
             // Built here (not via Server::start) so --config applies.
             let mut builder = Session::builder()
-                .energy_config(energy_config(&flags)?)
+                .energy_config(energy_config(flags)?)
                 .threads(cfg.threads)
                 .max_cached_results(cfg.max_cached_results)
                 .max_result_bytes(cfg.max_result_bytes);
@@ -926,9 +998,9 @@ fn run(args: &[String]) -> Result<()> {
                 builder = builder.fault_injection_label(serve::FAULT_INJECTION_LABEL);
             }
             let server = serve::Server::start_with_session(cfg, builder.build())?;
-            println!(
+            eocas::log_info!(
                 "eocas serve listening on {} (NDJSON lines or HTTP: \
-                 POST /evaluate, GET /stats, GET /healthz)",
+                 POST /evaluate, GET /stats, GET /metrics, GET /healthz)",
                 server.addr()
             );
             if stats_every > 0 {
@@ -1020,9 +1092,9 @@ mod tests {
     #[test]
     fn parse_num_names_the_flag_in_errors() {
         let (_, flags) = parse_flags(&args(&["dse", "--samples", "many"])).unwrap();
-        let e = parse_num(&flags, "samples", 0usize).unwrap_err();
+        let e = parse_num(flags, "samples", 0usize).unwrap_err();
         assert!(e.to_string().contains("--samples many"), "{e}");
-        assert_eq!(parse_num(&flags, "threads", 4usize).unwrap(), 4);
+        assert_eq!(parse_num(flags, "threads", 4usize).unwrap(), 4);
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Energy provenance: a structured audit trail whose terms sum
+//! **bit-exactly** to the headline joules.
+//!
+//! An [`Explain`] decomposes one [`crate::session::EvalResult`] into
+//! every cost term the energy model priced — per layer × phase ×
+//! operand × hierarchy level, the phase compute terms, the soma/grad
+//! unit terms, and each inter-core NoC transfer — and reduces them
+//! bottom-up in *exactly the association order* the session uses
+//! (`OperandBreakdown::total_j` → `PhaseEnergy::mem_j`/`total_j` →
+//! `LayerBreakdown::overall_j` → `EvalResult::overall_j`). f64 addition
+//! is not associative, so a flat left-fold over the leaves would drift
+//! in the last ulps; mirroring the fold tree instead makes
+//! `Explain::total_j().to_bits() == result.overall_j.to_bits()` an
+//! invariant the tests assert.
+//!
+//! The per-level conv terms are the retained output of
+//! `energy::price_operand`/`conv_energy_into` (the session keeps the
+//! full breakdown on every result). NoC transfers are not retained per
+//! hop, so they are collected live: `chip::evaluate_chip` reports each
+//! transfer through [`record_noc`] while [`enable`]d — the collector is
+//! process-global because session evaluations run on worker-pool
+//! threads. With the collector off (the default) the hook is one
+//! relaxed atomic load.
+
+use crate::session::EvalResult;
+use crate::util::json::Json;
+use crate::util::sync::lock_recover;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// One inter-core spike-map transfer priced on the NoC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NocTerm {
+    pub src: u32,
+    pub dst: u32,
+    pub hops: u32,
+    pub bits: f64,
+    pub joules: f64,
+}
+
+static EXPLAIN_ON: AtomicBool = AtomicBool::new(false);
+static NOC_TERMS: Mutex<Vec<NocTerm>> = Mutex::new(Vec::new());
+
+/// Is the live NoC-term collector on? Hot-path hooks check this before
+/// building a term.
+pub fn enabled() -> bool {
+    EXPLAIN_ON.load(Ordering::Relaxed)
+}
+
+/// Turn the collector on and clear any previously collected terms.
+pub fn enable() {
+    lock_recover(&NOC_TERMS).clear();
+    EXPLAIN_ON.store(true, Ordering::SeqCst);
+}
+
+/// Turn the collector off (collected terms are kept until taken).
+pub fn disable() {
+    EXPLAIN_ON.store(false, Ordering::SeqCst);
+}
+
+/// Record one NoC transfer (no-op while disabled).
+pub fn record_noc(term: NocTerm) {
+    if enabled() {
+        lock_recover(&NOC_TERMS).push(term);
+    }
+}
+
+/// Drain the collected NoC terms, in pricing order.
+pub fn take_noc_terms() -> Vec<NocTerm> {
+    std::mem::take(&mut *lock_recover(&NOC_TERMS))
+}
+
+/// One `(hierarchy level, joules)` leaf of an operand's breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelTerm {
+    pub level: String,
+    pub joules: f64,
+}
+
+/// All level terms of one tensor operand within a phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OperandTerms {
+    pub tensor: String,
+    pub levels: Vec<LevelTerm>,
+}
+
+impl OperandTerms {
+    /// Mirrors `session::OperandBreakdown::total_j` exactly.
+    pub fn total_j(&self) -> f64 {
+        self.levels.iter().map(|l| l.joules).sum()
+    }
+}
+
+/// One conv phase: its compute term plus per-operand memory terms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseTerms {
+    pub phase: &'static str,
+    pub compute_j: f64,
+    pub operands: Vec<OperandTerms>,
+}
+
+impl PhaseTerms {
+    /// Mirrors `session::PhaseEnergy::mem_j` exactly.
+    pub fn mem_j(&self) -> f64 {
+        self.operands.iter().map(|o| o.total_j()).sum()
+    }
+    /// Mirrors `session::PhaseEnergy::total_j` exactly.
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.mem_j()
+    }
+}
+
+/// The non-conv unit terms of one layer (soma and surrogate gradient).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitTerms {
+    pub soma_compute_j: f64,
+    pub soma_mem_j: f64,
+    pub grad_compute_j: f64,
+    pub grad_mem_j: f64,
+}
+
+/// Every cost term of one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerTerms {
+    pub layer: usize,
+    pub fp: PhaseTerms,
+    pub bp: PhaseTerms,
+    pub wg: PhaseTerms,
+    pub units: UnitTerms,
+}
+
+impl LayerTerms {
+    /// Mirrors `session::LayerBreakdown::overall_j` exactly, including
+    /// the per-phase grouping of the soma/grad unit terms.
+    pub fn overall_j(&self) -> f64 {
+        let fp_total = self.fp.total_j() + (self.units.soma_compute_j + self.units.soma_mem_j);
+        let bp_total = self.bp.total_j() + (self.units.grad_compute_j + self.units.grad_mem_j);
+        let wg_total = self.wg.total_j();
+        fp_total + bp_total + wg_total
+    }
+}
+
+/// A complete energy audit trail for one evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Explain {
+    pub layers: Vec<LayerTerms>,
+    pub noc: Vec<NocTerm>,
+    /// The headline this trail must reproduce (`EvalResult::overall_j`).
+    pub headline_j: f64,
+}
+
+impl Explain {
+    /// Build the audit trail for `res`. `noc_terms` is the live
+    /// collection from [`take_noc_terms`]; if it does not reproduce
+    /// `res.noc_j` bit-exactly (e.g. the result came from the cache, so
+    /// no transfers were priced live), it is replaced by one aggregate
+    /// NoC term so the headline invariant always holds.
+    pub fn from_result(res: &EvalResult, noc_terms: Vec<NocTerm>) -> Explain {
+        let layers = res
+            .layers
+            .iter()
+            .map(|lb| LayerTerms {
+                layer: lb.layer,
+                fp: phase_terms("fp", &lb.fp),
+                bp: phase_terms("bp", &lb.bp),
+                wg: phase_terms("wg", &lb.wg),
+                units: UnitTerms {
+                    soma_compute_j: lb.soma_compute_j,
+                    soma_mem_j: lb.soma_mem_j,
+                    grad_compute_j: lb.grad_compute_j,
+                    grad_mem_j: lb.grad_mem_j,
+                },
+            })
+            .collect();
+        let collected: f64 = noc_terms.iter().map(|t| t.joules).sum();
+        let noc = if collected.to_bits() == res.noc_j.to_bits() {
+            noc_terms
+        } else if res.noc_j == 0.0 {
+            Vec::new()
+        } else {
+            vec![NocTerm { src: 0, dst: 0, hops: 0, bits: 0.0, joules: res.noc_j }]
+        };
+        Explain { layers, noc, headline_j: res.overall_j }
+    }
+
+    /// Sum of the NoC terms in pricing order (mirrors the `noc_j`
+    /// accumulation in `chip::evaluate_chip` exactly).
+    pub fn noc_j(&self) -> f64 {
+        self.noc.iter().map(|t| t.joules).sum()
+    }
+
+    /// Bottom-up reduction of every term; bit-identical to the
+    /// `EvalResult::overall_j` headline by construction.
+    pub fn total_j(&self) -> f64 {
+        self.layers.iter().map(|l| l.overall_j()).sum::<f64>() + self.noc_j()
+    }
+
+    /// Flat `(layer, phase, term, joules)` rows for rendering — every
+    /// leaf term exactly once.
+    pub fn rows(&self) -> Vec<(usize, &'static str, String, f64)> {
+        let mut rows = Vec::new();
+        for l in &self.layers {
+            for p in [&l.fp, &l.bp, &l.wg] {
+                rows.push((l.layer, p.phase, "compute".to_string(), p.compute_j));
+                for o in &p.operands {
+                    for lv in &o.levels {
+                        rows.push((
+                            l.layer,
+                            p.phase,
+                            format!("{} @ {}", o.tensor, lv.level),
+                            lv.joules,
+                        ));
+                    }
+                }
+            }
+            rows.push((l.layer, "fp", "soma compute".to_string(), l.units.soma_compute_j));
+            rows.push((l.layer, "fp", "soma mem".to_string(), l.units.soma_mem_j));
+            rows.push((l.layer, "bp", "grad compute".to_string(), l.units.grad_compute_j));
+            rows.push((l.layer, "bp", "grad mem".to_string(), l.units.grad_mem_j));
+        }
+        rows
+    }
+
+    /// Human-readable table: every term, per-layer subtotals, the NoC
+    /// terms, the grand total and the headline it must match.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<7} {:<6} {:<26} {:>16}\n",
+            "layer", "phase", "term", "energy (uJ)"
+        ));
+        let line = |out: &mut String, layer: String, phase: &str, term: &str, j: f64| {
+            out.push_str(&format!("{layer:<7} {phase:<6} {term:<26} {:>16.6}\n", j * 1e6));
+        };
+        for l in &self.layers {
+            for (layer, phase, term, j) in
+                self.rows().into_iter().filter(|(ly, _, _, _)| *ly == l.layer)
+            {
+                line(&mut out, layer.to_string(), phase, &term, j);
+            }
+            line(&mut out, l.layer.to_string(), "all", "layer subtotal", l.overall_j());
+        }
+        for t in &self.noc {
+            line(
+                &mut out,
+                "-".to_string(),
+                "noc",
+                &format!("core {} -> {} ({} hops)", t.src, t.dst, t.hops),
+                t.joules,
+            );
+        }
+        out.push_str(&format!(
+            "total {:.6} uJ == headline {:.6} uJ (bit-exact: {})\n",
+            self.total_j() * 1e6,
+            self.headline_j * 1e6,
+            self.total_j().to_bits() == self.headline_j.to_bits(),
+        ));
+        out
+    }
+
+    /// Machine-readable audit trail.
+    pub fn to_json(&self) -> Json {
+        let mut jlayers = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            let mut jl = Json::obj();
+            let mut phases = Vec::with_capacity(3);
+            for p in [&l.fp, &l.bp, &l.wg] {
+                let mut jp = Json::obj();
+                let mut ops = Vec::with_capacity(p.operands.len());
+                for o in &p.operands {
+                    let mut jo = Json::obj();
+                    let mut levels = Vec::with_capacity(o.levels.len());
+                    for lv in &o.levels {
+                        let mut jlv = Json::obj();
+                        jlv.set("level", Json::Str(lv.level.clone()))
+                            .set("j", Json::Num(lv.joules));
+                        levels.push(jlv);
+                    }
+                    jo.set("tensor", Json::Str(o.tensor.clone())).set("levels", Json::Arr(levels));
+                    ops.push(jo);
+                }
+                jp.set("phase", Json::Str(p.phase.to_string()))
+                    .set("compute_j", Json::Num(p.compute_j))
+                    .set("operands", Json::Arr(ops));
+                phases.push(jp);
+            }
+            let mut units = Json::obj();
+            units
+                .set("soma_compute_j", Json::Num(l.units.soma_compute_j))
+                .set("soma_mem_j", Json::Num(l.units.soma_mem_j))
+                .set("grad_compute_j", Json::Num(l.units.grad_compute_j))
+                .set("grad_mem_j", Json::Num(l.units.grad_mem_j));
+            jl.set("layer", Json::Num(l.layer as f64))
+                .set("overall_j", Json::Num(l.overall_j()))
+                .set("phases", Json::Arr(phases))
+                .set("units", units);
+            jlayers.push(jl);
+        }
+        let mut jnoc = Vec::with_capacity(self.noc.len());
+        for t in &self.noc {
+            let mut jt = Json::obj();
+            jt.set("src", Json::Num(t.src as f64))
+                .set("dst", Json::Num(t.dst as f64))
+                .set("hops", Json::Num(t.hops as f64))
+                .set("bits", Json::Num(t.bits))
+                .set("j", Json::Num(t.joules));
+            jnoc.push(jt);
+        }
+        let mut doc = Json::obj();
+        doc.set("schema", Json::Num(1.0))
+            .set("headline_j", Json::Num(self.headline_j))
+            .set("total_j", Json::Num(self.total_j()))
+            .set("noc_j", Json::Num(self.noc_j()))
+            .set("layers", Json::Arr(jlayers))
+            .set("noc", Json::Arr(jnoc));
+        doc
+    }
+}
+
+fn phase_terms(name: &'static str, pe: &crate::session::PhaseEnergy) -> PhaseTerms {
+    PhaseTerms {
+        phase: name,
+        compute_j: pe.compute_j,
+        operands: pe
+            .operands
+            .iter()
+            .map(|o| OperandTerms {
+                tensor: o.tensor.clone(),
+                levels: o
+                    .levels
+                    .iter()
+                    .map(|(level, joules)| LevelTerm { level: level.clone(), joules: *joules })
+                    .collect(),
+            })
+            .collect(),
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal leveled stderr logger.
+//!
+//! The simulator is a library first: it must never spam stderr unless
+//! asked. Progress and diagnostic lines therefore go through one tiny
+//! leveled gate instead of scattered `eprintln!`s. The level comes from
+//! the `EOCAS_LOG` environment variable (`warn` | `info` | `debug`,
+//! default `warn` — i.e. quiet), parsed once and cached in an atomic,
+//! or is set programmatically with [`set_level`]. Output is one line
+//! per message on stderr, tagged `[warn]`/`[info]`/`[debug]` so daemon
+//! logs stay grep-able.
+//!
+//! Call sites use the crate-root macros `log_warn!`, `log_info!` and
+//! `log_debug!`, which skip formatting entirely when the level is off.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered: a configured level enables itself and
+/// everything more severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Something surprising that does not stop the run.
+    Warn = 1,
+    /// Coarse progress lines (pipeline stages, daemon startup).
+    Info = 2,
+    /// Fine-grained diagnostics (checkpoint writes, cache churn).
+    Debug = 3,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// 0 = not yet initialised from the environment.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn level_from_env() -> Level {
+    match std::env::var("EOCAS_LOG").ok().as_deref() {
+        Some("debug") => Level::Debug,
+        Some("info") => Level::Info,
+        _ => Level::Warn,
+    }
+}
+
+fn current() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => {
+            let l = level_from_env();
+            // Benign race: every thread parses the same environment.
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Override the level programmatically (wins over `EOCAS_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Would a message at `level` be emitted right now?
+pub fn enabled(level: Level) -> bool {
+    level <= current()
+}
+
+/// Emit one pre-formatted line (use the `log_*!` macros instead, which
+/// gate the formatting itself on [`enabled`]).
+pub fn write(level: Level, msg: &str) {
+    eprintln!("[{}] {msg}", level.tag());
+}
+
+/// Log at warn level. Arguments are only formatted when enabled.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::write($crate::obs::log::Level::Warn, &format!($($arg)*));
+        }
+    };
+}
+
+/// Log at info level. Arguments are only formatted when enabled.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::write($crate::obs::log::Level::Info, &format!($($arg)*));
+        }
+    };
+}
+
+/// Log at debug level. Arguments are only formatted when enabled.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::write($crate::obs::log::Level::Debug, &format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_gate() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Info));
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

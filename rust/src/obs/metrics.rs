@@ -1,0 +1,463 @@
+//! Process-wide metrics: named counters, gauges and log₂ histograms.
+//!
+//! One registry serves every subsystem. Instruments are registered once
+//! (first use) and returned as `&'static` handles, so a hot-path
+//! increment is a single relaxed atomic op with no lock and no lookup —
+//! call sites cache the handle in a `OnceLock` via the accessors in
+//! this module. The registry renders to the Prometheus text exposition
+//! format ([`render_prometheus`], served by `eocas serve` at
+//! `GET /metrics`) and to a JSON document ([`metrics_json`], dumped by
+//! the batch CLIs with `--metrics-json`).
+//!
+//! [`Histogram`] uses power-of-two buckets over `u64` samples — the
+//! same layout `serve::stats::LatencyHistogram` pioneered, which is now
+//! a thin wrapper over this type.
+
+use crate::util::json::Json;
+use crate::util::sync::lock_recover;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level that can move both ways (queue depths etc.).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count: powers of two from `[1,2)` up to `[2^31, ∞)`.
+pub const BUCKETS: usize = 32;
+
+/// Lock-free log₂ histogram over `u64` samples. Bucket `i` holds
+/// samples whose floor(log₂) is `i` (sample 0 counts as 1); quantiles
+/// come back as the bucket's upper bound, i.e. within 2× of the truth.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+
+    pub(crate) fn bucket_of(v: u64) -> usize {
+        (63 - v.max(1).leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of all recorded sample values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (`q` in `[0, 1]`): the upper bound of the
+    /// bucket holding the target sample, or 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return upper_bound(i);
+            }
+        }
+        u64::MAX
+    }
+
+    fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+/// Inclusive upper bound of bucket `i`, as reported by quantiles and
+/// the Prometheus `le` labels.
+fn upper_bound(i: usize) -> u64 {
+    1u64 << (i as u32 + 1)
+}
+
+/// A registered instrument (handles are `&'static`, so this is `Copy`).
+#[derive(Clone, Copy)]
+enum Instrument {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+struct Entry {
+    name: &'static str,
+    help: &'static str,
+    inst: Instrument,
+}
+
+static REGISTRY: Mutex<Vec<Entry>> = Mutex::new(Vec::new());
+
+/// Get or register an instrument under one registry guard, so two
+/// threads racing on the same name always end with the same handle.
+fn get_or_register<T>(
+    name: &'static str,
+    help: &'static str,
+    pick: impl Fn(Instrument) -> Option<&'static T>,
+    make: impl FnOnce() -> (&'static T, Instrument),
+) -> &'static T {
+    let mut reg = lock_recover(&REGISTRY);
+    if let Some(e) = reg.iter().find(|e| e.name == name) {
+        return pick(e.inst)
+            .unwrap_or_else(|| panic!("metric {name} already registered with a different type"));
+    }
+    let (handle, inst) = make();
+    reg.push(Entry { name, help, inst });
+    handle
+}
+
+/// Get or register the counter `name` (stable `&'static` handle).
+pub fn counter(name: &'static str, help: &'static str) -> &'static Counter {
+    get_or_register(
+        name,
+        help,
+        |i| if let Instrument::Counter(c) = i { Some(c) } else { None },
+        || {
+            let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+            (c, Instrument::Counter(c))
+        },
+    )
+}
+
+/// Get or register the gauge `name` (stable `&'static` handle).
+pub fn gauge(name: &'static str, help: &'static str) -> &'static Gauge {
+    get_or_register(
+        name,
+        help,
+        |i| if let Instrument::Gauge(g) = i { Some(g) } else { None },
+        || {
+            let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+            (g, Instrument::Gauge(g))
+        },
+    )
+}
+
+/// Get or register the histogram `name` (stable `&'static` handle).
+pub fn histogram(name: &'static str, help: &'static str) -> &'static Histogram {
+    get_or_register(
+        name,
+        help,
+        |i| if let Instrument::Histogram(h) = i { Some(h) } else { None },
+        || {
+            let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+            (h, Instrument::Histogram(h))
+        },
+    )
+}
+
+/// Declare a cached accessor for a well-known instrument: one registry
+/// lookup per process, then a plain `&'static` handle.
+macro_rules! well_known {
+    ($(#[$doc:meta])* $fn_name:ident, $ctor:ident, $ty:ty, $name:expr, $help:expr) => {
+        $(#[$doc])*
+        pub fn $fn_name() -> &'static $ty {
+            static H: OnceLock<&'static $ty> = OnceLock::new();
+            H.get_or_init(|| $ctor($name, $help))
+        }
+    };
+}
+
+well_known!(
+    /// Candidates fully priced by arch-search.
+    archsearch_evaluated, counter, Counter,
+    "eocas_archsearch_evaluated_total",
+    "architecture candidates fully priced by arch-search"
+);
+well_known!(
+    /// Candidates cut by the branch-and-bound lower bound.
+    archsearch_pruned, counter, Counter,
+    "eocas_archsearch_pruned_total",
+    "architecture candidates pruned by the branch-and-bound lower bound"
+);
+well_known!(
+    /// Candidates rejected by the feasibility filter.
+    archsearch_infeasible, counter, Counter,
+    "eocas_archsearch_infeasible_total",
+    "architecture candidates rejected as infeasible before pricing"
+);
+well_known!(
+    /// Points inserted into the Pareto frontier.
+    archsearch_frontier_inserts, counter, Counter,
+    "eocas_archsearch_frontier_inserts_total",
+    "points inserted into the arch-search Pareto frontier"
+);
+well_known!(
+    /// Frontier points evicted by a dominating insert (churn).
+    archsearch_frontier_evictions, counter, Counter,
+    "eocas_archsearch_frontier_evictions_total",
+    "frontier points evicted by a newly dominating arch-search point"
+);
+well_known!(
+    /// Scored-batch sizes (occupancy of the SoA batch kernel).
+    archsearch_batch_occupancy, histogram, Histogram,
+    "eocas_archsearch_batch_occupancy",
+    "candidates per scored arch-search batch (SoA kernel occupancy)"
+);
+well_known!(
+    /// Bound tightness: actual/lower-bound energy ratio × 64.
+    archsearch_bound_tightness, histogram, Histogram,
+    "eocas_archsearch_bound_tightness_x64",
+    "actual energy over admissible lower bound, in 64ths (64 = tight)"
+);
+well_known!(
+    /// Session workload-cache hits.
+    session_workload_hits, counter, Counter,
+    "eocas_session_workload_cache_hits_total",
+    "session workload cache hits"
+);
+well_known!(
+    /// Session workload-cache misses (each one runs generation).
+    session_workload_misses, counter, Counter,
+    "eocas_session_workload_cache_misses_total",
+    "session workload cache misses (workload generation runs)"
+);
+well_known!(
+    /// Session result-cache hits.
+    session_result_hits, counter, Counter,
+    "eocas_session_result_cache_hits_total",
+    "session result cache hits"
+);
+well_known!(
+    /// Session result-cache misses (each one runs an evaluation).
+    session_result_misses, counter, Counter,
+    "eocas_session_result_cache_misses_total",
+    "session result cache misses (full evaluations)"
+);
+well_known!(
+    /// Session cache evictions (workload + result LRU).
+    session_cache_evictions, counter, Counter,
+    "eocas_session_cache_evictions_total",
+    "entries evicted from the session LRU caches"
+);
+well_known!(
+    /// Worker-pool jobs queued but not yet started.
+    session_pool_queue_depth, gauge, Gauge,
+    "eocas_session_pool_queue_depth",
+    "worker-pool jobs submitted and not yet picked up"
+);
+well_known!(
+    /// Chip makespan imbalance: makespan/mean core cycles × 64.
+    chip_makespan_imbalance, histogram, Histogram,
+    "eocas_chip_makespan_imbalance_x64",
+    "multi-core makespan over mean per-core cycles, in 64ths (64 = balanced)"
+);
+
+fn push_line(out: &mut String, s: &str) {
+    out.push_str(s);
+    out.push('\n');
+}
+
+fn write_header(out: &mut String, name: &str, help: &str, kind: &str) {
+    push_line(out, &format!("# HELP {name} {help}"));
+    push_line(out, &format!("# TYPE {name} {kind}"));
+}
+
+/// Append one counter in Prometheus text format.
+pub fn write_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    write_header(out, name, help, "counter");
+    push_line(out, &format!("{name} {v}"));
+}
+
+/// Append one gauge in Prometheus text format.
+pub fn write_gauge(out: &mut String, name: &str, help: &str, v: i64) {
+    write_header(out, name, help, "gauge");
+    push_line(out, &format!("{name} {v}"));
+}
+
+/// Append one histogram in Prometheus text format (cumulative
+/// `_bucket{le=...}` series plus `_sum` and `_count`).
+pub fn write_histogram_raw(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    buckets: &[u64; BUCKETS],
+    sum: u64,
+) {
+    write_header(out, name, help, "histogram");
+    let mut cum = 0u64;
+    for (i, c) in buckets.iter().enumerate() {
+        cum += c;
+        // Prometheus scrapers expect a stable bucket layout, so every
+        // boundary is emitted even when its count is zero.
+        push_line(out, &format!("{name}_bucket{{le=\"{}\"}} {cum}", upper_bound(i)));
+    }
+    push_line(out, &format!("{name}_bucket{{le=\"+Inf\"}} {cum}"));
+    push_line(out, &format!("{name}_sum {sum}"));
+    push_line(out, &format!("{name}_count {cum}"));
+}
+
+/// Append a [`Histogram`] in Prometheus text format.
+pub fn write_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    write_histogram_raw(out, name, help, &h.bucket_counts(), h.sum());
+}
+
+/// Render every registered instrument in Prometheus text exposition
+/// format, sorted by metric name for stable output.
+pub fn render_prometheus() -> String {
+    let entries: Vec<(&'static str, &'static str, Instrument)> =
+        lock_recover(&REGISTRY).iter().map(|e| (e.name, e.help, e.inst)).collect();
+    let mut sorted = entries;
+    sorted.sort_by_key(|(name, _, _)| *name);
+    let mut out = String::new();
+    for (name, help, inst) in sorted {
+        match inst {
+            Instrument::Counter(c) => write_counter(&mut out, name, help, c.get()),
+            Instrument::Gauge(g) => write_gauge(&mut out, name, help, g.get()),
+            Instrument::Histogram(h) => write_histogram(&mut out, name, help, h),
+        }
+    }
+    out
+}
+
+/// Render every registered instrument as a JSON document (the
+/// `--metrics-json` dump of the batch CLIs).
+pub fn metrics_json() -> Json {
+    let entries: Vec<(&'static str, Instrument)> =
+        lock_recover(&REGISTRY).iter().map(|e| (e.name, e.inst)).collect();
+    let mut counters = Json::obj();
+    let mut gauges = Json::obj();
+    let mut histograms = Json::obj();
+    for (name, inst) in entries {
+        match inst {
+            Instrument::Counter(c) => {
+                counters.set(name, Json::Num(c.get() as f64));
+            }
+            Instrument::Gauge(g) => {
+                gauges.set(name, Json::Num(g.get() as f64));
+            }
+            Instrument::Histogram(h) => {
+                let mut j = Json::obj();
+                j.set("count", Json::Num(h.count() as f64))
+                    .set("sum", Json::Num(h.sum() as f64))
+                    .set("p50", Json::Num(h.quantile(0.5) as f64))
+                    .set("p99", Json::Num(h.quantile(0.99) as f64));
+                histograms.set(name, j);
+            }
+        }
+    }
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0))
+        .set("counters", counters)
+        .set("gauges", gauges)
+        .set("histograms", histograms);
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_register_once_and_share_state() {
+        let c1 = counter("eocas_test_counter_total", "test counter");
+        let c2 = counter("eocas_test_counter_total", "test counter");
+        assert!(std::ptr::eq(c1, c2), "same name must return the same handle");
+        let before = c1.get();
+        c2.add(3);
+        assert_eq!(c1.get(), before + 3);
+
+        let g = gauge("eocas_test_gauge", "test gauge");
+        g.set(0);
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_quantiles_match_the_latency_histogram_semantics() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram reports 0");
+        h.record(1000);
+        // Single sample: every quantile lands in its bucket, upper
+        // bound 1024.
+        assert_eq!(h.quantile(0.0), 1024);
+        assert_eq!(h.quantile(0.5), 1024);
+        assert_eq!(h.quantile(1.0), 1024);
+        // Top-bucket saturation: u64::MAX lands in bucket 31, whose
+        // reported upper bound is 2^32.
+        h.record(u64::MAX);
+        assert_eq!(h.quantile(1.0), 1u64 << 32);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn prometheus_text_has_help_type_and_cumulative_buckets() {
+        let h = histogram("eocas_test_hist", "test histogram");
+        h.record(3);
+        h.record(100);
+        let text = render_prometheus();
+        assert!(text.contains("# HELP eocas_test_hist test histogram"));
+        assert!(text.contains("# TYPE eocas_test_hist histogram"));
+        assert!(text.contains("eocas_test_hist_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("eocas_test_hist_sum"));
+        assert!(text.contains("eocas_test_hist_count"));
+        // Counters registered by other tests render with headers too.
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# ") || line.starts_with("eocas_"),
+                "unexpected exposition line: {line}"
+            );
+        }
+
+        let doc = metrics_json();
+        assert!(doc.get("histograms").and_then(|h| h.get("eocas_test_hist")).is_some());
+    }
+}

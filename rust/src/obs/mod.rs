@@ -1,0 +1,83 @@
+//! `eocas::obs` — the observability layer: tracing, metrics, logging
+//! and energy provenance, unified across session, search, chip and
+//! serve.
+//!
+//! Four pillars, all zero-dependency and pay-for-what-you-use:
+//!
+//! * [`trace`] — scoped RAII spans over the load-bearing phases
+//!   (workload generation, scalar vs SoA pricing, mapper descent, bound
+//!   computation, checkpoint I/O, serve admission/batch/eval, NoC
+//!   pricing), exported as Chrome trace-event JSON via `--trace`.
+//! * [`metrics`] — a process-wide registry of counters/gauges/
+//!   histograms, rendered as Prometheus text (`GET /metrics` on
+//!   `eocas serve`) and JSON (`--metrics-json` on the batch CLIs).
+//! * [`log`] — a leveled stderr logger (`EOCAS_LOG=warn|info|debug`)
+//!   behind the crate-root `log_warn!`/`log_info!`/`log_debug!` macros.
+//! * [`explain`] — an opt-in energy audit trail whose terms sum
+//!   bit-exactly to the headline joules (`simulate --explain`).
+//!
+//! With everything off (the default), evaluation results are pinned
+//! bit-identical to the uninstrumented simulator and the hot paths keep
+//! their speed — `bench_obs` gates the disabled-span overhead in CI.
+//!
+//! DESIGN.md §16 documents the span model, the registry, the
+//! Prometheus exposition and the explain invariant.
+
+pub mod explain;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+use crate::util::json::Json;
+
+/// Compiled-in cargo features that affect behaviour.
+fn features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    if cfg!(feature = "pjrt") {
+        f.push("pjrt");
+    }
+    f
+}
+
+/// Build identity — crate version, evaluation JSON schema version and
+/// enabled features — embedded in `eocas --version`, `serve /healthz`
+/// and every `--json` document so traces, checkpoints and results are
+/// attributable to a build.
+pub fn build_info() -> Json {
+    let mut j = Json::obj();
+    j.set("version", Json::Str(env!("CARGO_PKG_VERSION").to_string()))
+        .set("eval_schema", Json::Num(crate::session::SCHEMA_VERSION as f64))
+        .set(
+            "features",
+            Json::Arr(features().into_iter().map(|f| Json::Str(f.to_string())).collect()),
+        );
+    j
+}
+
+/// One-line human-readable build identity (`eocas --version`).
+pub fn version_string() -> String {
+    let feats = features();
+    let feats = if feats.is_empty() { "none".to_string() } else { feats.join(",") };
+    format!(
+        "eocas {} (eval schema v{}, features: {feats})",
+        env!("CARGO_PKG_VERSION"),
+        crate::session::SCHEMA_VERSION
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_info_names_the_crate_version_and_schema() {
+        let j = build_info();
+        assert_eq!(j.get("version").and_then(|v| v.as_str()), Some(env!("CARGO_PKG_VERSION")));
+        assert_eq!(
+            j.get("eval_schema").and_then(|v| v.as_f64()),
+            Some(crate::session::SCHEMA_VERSION as f64)
+        );
+        assert!(j.get("features").and_then(|f| f.as_arr()).is_some());
+        assert!(version_string().starts_with("eocas "));
+    }
+}

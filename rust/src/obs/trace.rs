@@ -1,0 +1,220 @@
+//! Scoped spans exported as Chrome trace-event JSON.
+//!
+//! Tracing is pay-for-what-you-use: while disabled (the default), a
+//! [`span`] call is one relaxed atomic load and the returned guard's
+//! drop is a no-op — the hot paths it instruments keep their speed
+//! (gated by `bench_obs`'s `overhead.trace_off` headline). When enabled
+//! (`--trace out.json` on the CLI, or [`enable`] programmatically),
+//! each guard records a complete `X` (duration) event — name, start
+//! timestamp and duration in microseconds off one process-wide
+//! monotonic anchor, a stable per-thread id, and the thread-local span
+//! depth — into a bounded in-process buffer (events past the cap are
+//! counted, not stored, so a runaway loop cannot exhaust memory).
+//!
+//! [`export_json`] renders the buffer in the Chrome trace-event format
+//! (an object with a `traceEvents` array), which `chrome://tracing` and
+//! Perfetto load directly.
+
+use crate::util::json::Json;
+use crate::util::sync::lock_recover;
+use crate::util::Result;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Buffer cap: ~64k events is minutes of dense tracing and a few MB of
+/// JSON — plenty for a profiling session, bounded for a daemon.
+const MAX_EVENTS: usize = 65_536;
+
+struct Event {
+    name: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    tid: u64,
+    depth: u32,
+}
+
+struct State {
+    /// Monotonic zero point for all `ts` values, fixed at first use.
+    anchor: Instant,
+    events: Mutex<Vec<Event>>,
+    dropped: AtomicU64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: OnceLock<State> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Stable small thread id (std's ThreadId has no stable integer
+    /// accessor on the MSRV).
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    /// Thread-local span stack depth, recorded per event.
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+fn state() -> &'static State {
+    STATE.get_or_init(|| State {
+        anchor: Instant::now(),
+        events: Mutex::new(Vec::new()),
+        dropped: AtomicU64::new(0),
+    })
+}
+
+/// Turn span recording on (idempotent). The timestamp anchor is fixed
+/// the first time tracing is touched.
+pub fn enable() {
+    state();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn span recording off. Already-buffered events are kept.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Is recording currently on?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Drop all buffered events and the dropped-event count.
+pub fn reset() {
+    let st = state();
+    lock_recover(&st.events).clear();
+    st.dropped.store(0, Ordering::Relaxed);
+}
+
+/// Number of events currently buffered.
+pub fn event_count() -> usize {
+    lock_recover(&state().events).len()
+}
+
+/// Events discarded because the buffer was full.
+pub fn dropped_count() -> u64 {
+    state().dropped.load(Ordering::Relaxed)
+}
+
+/// RAII guard for one span: records a duration event on drop. Inert
+/// (and nearly free) when tracing is disabled.
+#[must_use = "a span measures the scope holding the guard"]
+pub struct SpanGuard {
+    live: Option<(&'static str, Instant)>,
+}
+
+/// Open a span named `name` covering the guard's lifetime.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard { live: None };
+    }
+    DEPTH.with(|d| d.set(d.get() + 1));
+    SpanGuard { live: Some((name, Instant::now())) }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some((name, start)) = self.live.take() else { return };
+        let end = Instant::now();
+        let depth = DEPTH.with(|d| {
+            let v = d.get();
+            d.set(v.saturating_sub(1));
+            v
+        });
+        let st = state();
+        let ts_us = start.saturating_duration_since(st.anchor).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        let tid = TID.with(|t| *t);
+        let mut events = lock_recover(&st.events);
+        if events.len() < MAX_EVENTS {
+            events.push(Event { name, ts_us, dur_us, tid, depth });
+        } else {
+            st.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Render the buffer as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...], ...}`), loadable by Perfetto.
+pub fn export_json() -> Json {
+    let st = state();
+    let events = lock_recover(&st.events);
+    let mut arr = Vec::with_capacity(events.len());
+    for e in events.iter() {
+        let mut j = Json::obj();
+        let mut args = Json::obj();
+        args.set("depth", Json::Num(e.depth as f64));
+        j.set("name", Json::Str(e.name.to_string()))
+            .set("ph", Json::Str("X".to_string()))
+            .set("ts", Json::Num(e.ts_us as f64))
+            .set("dur", Json::Num(e.dur_us as f64))
+            .set("pid", Json::Num(1.0))
+            .set("tid", Json::Num(e.tid as f64))
+            .set("args", args);
+        arr.push(j);
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(arr))
+        .set("displayTimeUnit", Json::Str("ms".to_string()))
+        .set("droppedEventCount", Json::Num(st.dropped.load(Ordering::Relaxed) as f64));
+    doc
+}
+
+/// Write [`export_json`] to `path`.
+pub fn write(path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, format!("{}\n", export_json().dumps()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Trace state is process-global; run the suite as one test so
+    // enable/reset from concurrent tests cannot interleave.
+    #[test]
+    fn spans_record_only_when_enabled_and_export_chrome_json() {
+        disable();
+        reset();
+        {
+            let _g = span("off");
+        }
+        assert_eq!(event_count(), 0, "disabled spans must not record");
+
+        enable();
+        {
+            let _outer = span("outer");
+            let _inner = span("inner");
+        }
+        disable();
+        assert_eq!(event_count(), 2);
+
+        let doc = export_json();
+        let text = doc.dumps();
+        let parsed = Json::parse(&text).expect("trace JSON parses");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+        assert_eq!(events.len(), 2);
+        let names: Vec<&str> =
+            events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+        assert!(names.contains(&"outer") && names.contains(&"inner"));
+        for e in events {
+            assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
+            assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+            assert!(e.get("dur").and_then(|d| d.as_f64()).is_some());
+        }
+        // Inner closes first at depth 2, under outer at depth 1.
+        let depth_of = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(|n| n.as_str()) == Some(name))
+                .and_then(|e| e.get("args"))
+                .and_then(|a| a.get("depth"))
+                .and_then(|d| d.as_f64())
+                .unwrap()
+        };
+        assert_eq!(depth_of("inner"), 2.0);
+        assert_eq!(depth_of("outer"), 1.0);
+        reset();
+        assert_eq!(event_count(), 0);
+    }
+}

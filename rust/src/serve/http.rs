@@ -207,9 +207,21 @@ pub fn write_http_response(
     reason: &str,
     body: &str,
 ) -> std::io::Result<()> {
+    write_http_response_typed(w, code, reason, "application/json", body)
+}
+
+/// Like [`write_http_response`] with an explicit content type (the
+/// `/metrics` endpoint serves Prometheus text, not JSON).
+pub fn write_http_response_typed(
+    w: &mut impl Write,
+    code: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {code} {reason}\r\ncontent-type: application/json\r\n\
+        "HTTP/1.1 {code} {reason}\r\ncontent-type: {content_type}\r\n\
          content-length: {}\r\nconnection: close\r\n\r\n{body}",
         body.len()
     )?;

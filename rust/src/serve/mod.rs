@@ -285,7 +285,7 @@ fn accept_loop(listener: TcpListener, jobs_tx: SyncSender<Pending>, shared: &Arc
             Err(_) => continue,
         };
         if shared.conns.load(Ordering::Relaxed) >= shared.cfg.max_connections.max(1) {
-            shared.stats.rejected_conns.fetch_add(1, Ordering::Relaxed);
+            shared.stats.rejected_conns.inc();
             // Best-effort refusal notice; never block the accept loop.
             let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
             let _ = write_line(&mut stream, &err_doc("overloaded", "connection limit reached"));
@@ -328,11 +328,11 @@ fn connection_loop(stream: TcpStream, jobs_tx: &SyncSender<Pending>, shared: &Sh
                     continue; // idle between frames: poll shutdown, keep waiting
                 }
                 // Stalled mid-frame: the slow client loses its slot.
-                shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                shared.stats.disconnects.inc();
                 break;
             }
             Err(http::FrameError::TooLarge) => {
-                shared.stats.too_large.fetch_add(1, Ordering::Relaxed);
+                shared.stats.too_large.inc();
                 let _ = write_line(
                     &mut writer,
                     &err_doc("too_large", "frame exceeds the configured byte cap"),
@@ -340,7 +340,7 @@ fn connection_loop(stream: TcpStream, jobs_tx: &SyncSender<Pending>, shared: &Sh
                 break;
             }
             Err(http::FrameError::Bad(msg)) => {
-                shared.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                shared.stats.malformed.inc();
                 let _ = http::write_http_response(
                     &mut writer,
                     400,
@@ -351,7 +351,7 @@ fn connection_loop(stream: TcpStream, jobs_tx: &SyncSender<Pending>, shared: &Sh
             }
             Err(http::FrameError::Io { mid_frame, .. }) => {
                 if mid_frame {
-                    shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.disconnects.inc();
                 }
                 break;
             }
@@ -370,7 +370,7 @@ fn write_line(w: &mut TcpStream, line: &str) -> std::io::Result<()> {
 /// failure = slow or vanished reader).
 fn reply_line(w: &mut TcpStream, line: &str, shared: &Shared) -> bool {
     if write_line(w, line).is_err() {
-        shared.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+        shared.stats.disconnects.inc();
         return false;
     }
     true
@@ -384,7 +384,7 @@ fn handle_line(
 ) -> bool {
     let stats = &shared.stats;
     let Ok(text) = std::str::from_utf8(bytes) else {
-        stats.malformed.fetch_add(1, Ordering::Relaxed);
+        stats.malformed.inc();
         return reply_line(w, &err_doc("malformed", "request is not UTF-8"), shared);
     };
     if text.trim().is_empty() {
@@ -393,7 +393,7 @@ fn handle_line(
     let doc = match Json::parse(text) {
         Ok(d) => d,
         Err(e) => {
-            stats.malformed.fetch_add(1, Ordering::Relaxed);
+            stats.malformed.inc();
             return reply_line(w, &err_doc("malformed", &format!("request JSON: {e}")), shared);
         }
     };
@@ -407,7 +407,7 @@ fn handle_line(
                 j.dumps()
             }
             other => {
-                stats.malformed.fetch_add(1, Ordering::Relaxed);
+                stats.malformed.inc();
                 err_doc("malformed", &format!("unknown op {other:?}"))
             }
         };
@@ -425,7 +425,7 @@ fn handle_line(
     let req = match EvalRequest::from_json(req_doc) {
         Ok(r) => r,
         Err(e) => {
-            stats.malformed.fetch_add(1, Ordering::Relaxed);
+            stats.malformed.inc();
             return reply_line(w, &err_doc("malformed", &e.to_string()), shared);
         }
     };
@@ -443,21 +443,37 @@ fn handle_http(
     shared: &Shared,
 ) {
     let stats = &shared.stats;
+    if (method, path) == ("GET", "/metrics") {
+        // Prometheus text exposition, not JSON: serve-local ledger
+        // first, then the process-global instrument registry.
+        let mut body = shared
+            .stats
+            .prometheus_text(&shared.session.cache_stats(), shared.cfg.queue_cap.max(1));
+        body.push_str(&crate::obs::metrics::render_prometheus());
+        let _ = http::write_http_response_typed(
+            w,
+            200,
+            "OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            &body,
+        );
+        return;
+    }
     let (code, reason, doc) = match (method, path) {
         ("GET", "/stats") => (200, "OK", stats_doc(shared).dumps()),
         ("GET", "/healthz") => {
-            let mut j = Json::obj();
+            let mut j = crate::obs::build_info();
             j.set("status", Json::Str("ok".into()));
             (200, "OK", j.dumps())
         }
         ("POST", "/evaluate") => match std::str::from_utf8(body) {
             Err(_) => {
-                stats.malformed.fetch_add(1, Ordering::Relaxed);
+                stats.malformed.inc();
                 (400, "Bad Request", err_doc("malformed", "body is not UTF-8"))
             }
             Ok(text) => match EvalRequest::from_json_str(text) {
                 Err(e) => {
-                    stats.malformed.fetch_add(1, Ordering::Relaxed);
+                    stats.malformed.inc();
                     (400, "Bad Request", err_doc("malformed", &e.to_string()))
                 }
                 Ok(req) => submit_and_wait(req, deadline_ms, jobs_tx, shared).into_http(),
@@ -522,7 +538,8 @@ fn submit_and_wait(
     shared: &Shared,
 ) -> Outcome {
     let stats = &shared.stats;
-    stats.received.fetch_add(1, Ordering::Relaxed);
+    stats.received.inc();
+    let _span = crate::obs::trace::span("serve.request");
     // Clamp hostile deadlines (u64::MAX ms would overflow Instant math).
     const MAX_DEADLINE: Duration = Duration::from_secs(86_400);
     let deadline = deadline_ms
@@ -538,38 +555,38 @@ fn submit_and_wait(
     };
     // Raise the gauge before the send so the batcher's decrement (which
     // can race ahead of this thread) can never observe depth 0.
-    stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+    stats.queue_depth.add(1);
     match jobs_tx.try_send(pending) {
         Ok(()) => {}
         Err(TrySendError::Full(_)) => {
-            stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
-            stats.shed.fetch_add(1, Ordering::Relaxed);
+            stats.queue_depth.sub(1);
+            stats.shed.inc();
             return Outcome::Overloaded;
         }
         Err(TrySendError::Disconnected(_)) => {
-            stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            stats.queue_depth.sub(1);
             return Outcome::Unavailable;
         }
     }
     match reply_rx.recv_timeout(deadline) {
         Ok(Reply::Done(Ok(res))) => {
             stats.latency.record_us(start.elapsed().as_micros() as u64);
-            stats.ok.fetch_add(1, Ordering::Relaxed);
+            stats.ok.inc();
             Outcome::Ok(res)
         }
         Ok(Reply::Done(Err(e))) => {
             stats.latency.record_us(start.elapsed().as_micros() as u64);
             let msg = e.to_string();
             if msg.contains("panicked") {
-                stats.panics.fetch_add(1, Ordering::Relaxed);
+                stats.panics.inc();
                 Outcome::Panicked(msg)
             } else {
-                stats.eval_errors.fetch_add(1, Ordering::Relaxed);
+                stats.eval_errors.inc();
                 Outcome::EvalError(msg)
             }
         }
         Ok(Reply::Expired) | Err(mpsc::RecvTimeoutError::Timeout) => {
-            stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            stats.deadline_exceeded.inc();
             Outcome::DeadlineExceeded
         }
         Err(mpsc::RecvTimeoutError::Disconnected) => Outcome::Unavailable,
@@ -600,8 +617,9 @@ fn batcher_loop(jobs_rx: Receiver<Pending>, shared: &Shared) {
                 Err(_) => break,
             }
         }
-        stats.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
-        stats.batches.fetch_add(1, Ordering::Relaxed);
+        let _span = crate::obs::trace::span("serve.batch");
+        stats.queue_depth.sub(batch.len() as i64);
+        stats.batches.inc();
         // Requests whose deadline passed while queued are never
         // evaluated — shedding compute, not just the reply.
         let now = Instant::now();

@@ -1,66 +1,64 @@
 //! Serving-side observability: lock-free counters and a fixed-size
-//! latency histogram behind the `/stats` endpoint.
+//! latency histogram behind the `/stats` and `/metrics` endpoints.
 //!
 //! Everything here is updated from connection threads and the batcher on
-//! the hot path, so the whole structure is plain relaxed atomics — no
-//! locks, no allocation, O(1) memory regardless of uptime. The histogram
-//! trades resolution for that boundedness: power-of-two microsecond
-//! buckets, which pins any quantile to within 2× — plenty for "did p99
-//! blow up", useless for microbenchmarking (that is `util::bench`'s
-//! job).
+//! the hot path, so the whole structure rides the relaxed-atomic
+//! instruments from [`crate::obs::metrics`] — no locks, no allocation,
+//! O(1) memory regardless of uptime. The instruments are per-`ServeStats`
+//! (a process can host several servers in tests), not the global
+//! registry; [`ServeStats::prometheus_text`] renders them with the same
+//! exposition helpers the registry uses, and `GET /metrics` serves both.
+//!
+//! The histogram trades resolution for boundedness: power-of-two
+//! microsecond buckets, which pins any quantile to within 2× — plenty
+//! for "did p99 blow up", useless for microbenchmarking (that is
+//! `util::bench`'s job).
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::obs::metrics::{self, Counter, Gauge, Histogram};
 use crate::session::CacheStats;
 use crate::util::json::Json;
 
-/// Log₂-bucketed latency histogram over microseconds.
+/// Log₂-bucketed latency histogram over microseconds: a thin wrapper
+/// over [`crate::obs::metrics::Histogram`] keeping the original
+/// microsecond-flavoured API.
 ///
 /// Bucket `i` counts samples in `[2^i, 2^(i+1))` µs (bucket 0 also takes
 /// sub-microsecond samples, the last bucket takes everything above
 /// ~2^31 µs ≈ 36 min). Fixed size: recording never allocates, so an
 /// arbitrarily long-lived daemon cannot grow it.
 #[derive(Default)]
-pub struct LatencyHistogram {
-    buckets: [AtomicU64; Self::BUCKETS],
-}
+pub struct LatencyHistogram(Histogram);
 
 impl LatencyHistogram {
-    pub const BUCKETS: usize = 32;
+    pub const BUCKETS: usize = metrics::BUCKETS;
 
     pub fn new() -> LatencyHistogram {
-        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+        LatencyHistogram(Histogram::new())
     }
 
     fn bucket_of(us: u64) -> usize {
-        (63 - us.max(1).leading_zeros() as usize).min(Self::BUCKETS - 1)
+        Histogram::bucket_of(us)
     }
 
     pub fn record_us(&self, us: u64) {
-        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.0.record(us);
     }
 
     pub fn count(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+        self.0.count()
     }
 
     /// Upper bound (µs) of the bucket holding the `q`-quantile sample
     /// (`q` in `[0, 1]`); 0 when empty. Overestimates by at most 2×.
     pub fn quantile_us(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
-        let mut acc = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return 1u64 << (i as u32 + 1);
-            }
-        }
-        u64::MAX
+        self.0.quantile(q)
+    }
+
+    /// The underlying instrument (for Prometheus exposition).
+    pub fn histogram(&self) -> &Histogram {
+        &self.0
     }
 }
 
@@ -69,29 +67,29 @@ impl LatencyHistogram {
 pub struct ServeStats {
     started: Instant,
     /// Requests admitted to parsing (any protocol, before validation).
-    pub received: AtomicU64,
+    pub received: Counter,
     /// Successful evaluations answered.
-    pub ok: AtomicU64,
+    pub ok: Counter,
     /// Requests that parsed but failed evaluation (bad scenario).
-    pub eval_errors: AtomicU64,
+    pub eval_errors: Counter,
     /// Evaluations that panicked (caught and degraded to errors).
-    pub panics: AtomicU64,
+    pub panics: Counter,
     /// Frames/documents that failed parsing or validation.
-    pub malformed: AtomicU64,
+    pub malformed: Counter,
     /// Frames refused for exceeding the byte cap.
-    pub too_large: AtomicU64,
+    pub too_large: Counter,
     /// Requests shed by admission control (bounded queue full).
-    pub shed: AtomicU64,
+    pub shed: Counter,
     /// Requests that missed their deadline (in queue or mid-evaluation).
-    pub deadline_exceeded: AtomicU64,
+    pub deadline_exceeded: Counter,
     /// Clients that vanished or stalled mid-frame.
-    pub disconnects: AtomicU64,
+    pub disconnects: Counter,
     /// Connections refused at accept (connection cap).
-    pub rejected_conns: AtomicU64,
+    pub rejected_conns: Counter,
     /// Current admission-queue occupancy (gauge).
-    pub queue_depth: AtomicU64,
+    pub queue_depth: Gauge,
     /// `evaluate_many` batches dispatched.
-    pub batches: AtomicU64,
+    pub batches: Counter,
     /// End-to-end service latency of answered evaluations (admission to
     /// reply handoff), including queue wait.
     pub latency: LatencyHistogram,
@@ -107,25 +105,25 @@ impl ServeStats {
     pub fn new() -> ServeStats {
         ServeStats {
             started: Instant::now(),
-            received: AtomicU64::new(0),
-            ok: AtomicU64::new(0),
-            eval_errors: AtomicU64::new(0),
-            panics: AtomicU64::new(0),
-            malformed: AtomicU64::new(0),
-            too_large: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
-            deadline_exceeded: AtomicU64::new(0),
-            disconnects: AtomicU64::new(0),
-            rejected_conns: AtomicU64::new(0),
-            queue_depth: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
+            received: Counter::new(),
+            ok: Counter::new(),
+            eval_errors: Counter::new(),
+            panics: Counter::new(),
+            malformed: Counter::new(),
+            too_large: Counter::new(),
+            shed: Counter::new(),
+            deadline_exceeded: Counter::new(),
+            disconnects: Counter::new(),
+            rejected_conns: Counter::new(),
+            queue_depth: Gauge::new(),
+            batches: Counter::new(),
             latency: LatencyHistogram::new(),
         }
     }
 
     /// The `/stats` document (see DESIGN.md §14 for the schema).
     pub fn snapshot_json(&self, cache: &CacheStats, queue_capacity: usize) -> Json {
-        let load = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        let load = |c: &Counter| Json::Num(c.get() as f64);
         let mut requests = Json::obj();
         requests
             .set("received", load(&self.received))
@@ -140,7 +138,7 @@ impl ServeStats {
             .set("rejected_conns", load(&self.rejected_conns));
         let mut queue = Json::obj();
         queue
-            .set("depth", load(&self.queue_depth))
+            .set("depth", Json::Num(self.queue_depth.get() as f64))
             .set("capacity", Json::Num(queue_capacity as f64))
             .set("batches", load(&self.batches));
         let mut latency = Json::obj();
@@ -177,6 +175,116 @@ impl ServeStats {
             .set("cache", jc);
         doc
     }
+
+    /// The ledger in Prometheus text exposition format — the
+    /// serve-local half of `GET /metrics` (the caller appends the
+    /// process-global registry).
+    pub fn prometheus_text(&self, cache: &CacheStats, queue_capacity: usize) -> String {
+        let mut out = String::new();
+        let c = |out: &mut String, name, help, counter: &Counter| {
+            metrics::write_counter(out, name, help, counter.get());
+        };
+        c(&mut out, "eocas_serve_received_total", "requests admitted to parsing", &self.received);
+        c(&mut out, "eocas_serve_ok_total", "successful evaluations answered", &self.ok);
+        c(
+            &mut out,
+            "eocas_serve_eval_errors_total",
+            "requests that parsed but failed evaluation",
+            &self.eval_errors,
+        );
+        c(&mut out, "eocas_serve_panics_total", "evaluations that panicked", &self.panics);
+        c(
+            &mut out,
+            "eocas_serve_malformed_total",
+            "frames that failed parsing or validation",
+            &self.malformed,
+        );
+        c(
+            &mut out,
+            "eocas_serve_too_large_total",
+            "frames refused for exceeding the byte cap",
+            &self.too_large,
+        );
+        c(&mut out, "eocas_serve_shed_total", "requests shed by admission control", &self.shed);
+        c(
+            &mut out,
+            "eocas_serve_deadline_exceeded_total",
+            "requests that missed their deadline",
+            &self.deadline_exceeded,
+        );
+        c(
+            &mut out,
+            "eocas_serve_disconnects_total",
+            "clients that vanished or stalled mid-frame",
+            &self.disconnects,
+        );
+        c(
+            &mut out,
+            "eocas_serve_rejected_conns_total",
+            "connections refused at accept",
+            &self.rejected_conns,
+        );
+        c(&mut out, "eocas_serve_batches_total", "evaluate_many batches dispatched", &self.batches);
+        metrics::write_gauge(
+            &mut out,
+            "eocas_serve_queue_depth",
+            "current admission-queue occupancy",
+            self.queue_depth.get(),
+        );
+        metrics::write_gauge(
+            &mut out,
+            "eocas_serve_queue_capacity",
+            "admission-queue capacity",
+            queue_capacity as i64,
+        );
+        metrics::write_gauge(
+            &mut out,
+            "eocas_serve_uptime_seconds",
+            "seconds since the daemon started",
+            self.started.elapsed().as_secs() as i64,
+        );
+        metrics::write_histogram(
+            &mut out,
+            "eocas_serve_latency_us",
+            "end-to-end service latency in microseconds",
+            self.latency.histogram(),
+        );
+        let sc = |out: &mut String, name, help, v: u64| {
+            metrics::write_counter(out, name, help, v);
+        };
+        sc(&mut out, "eocas_serve_cache_result_hits_total", "result cache hits", cache.result_hits);
+        sc(
+            &mut out,
+            "eocas_serve_cache_result_misses_total",
+            "result cache misses",
+            cache.result_misses,
+        );
+        sc(
+            &mut out,
+            "eocas_serve_cache_result_evictions_total",
+            "result cache evictions",
+            cache.result_evictions,
+        );
+        sc(
+            &mut out,
+            "eocas_serve_cache_workload_hits_total",
+            "workload cache hits",
+            cache.workload_hits,
+        );
+        sc(
+            &mut out,
+            "eocas_serve_cache_workload_misses_total",
+            "workload cache misses",
+            cache.workload_misses,
+        );
+        sc(
+            &mut out,
+            "eocas_serve_cache_workload_evictions_total",
+            "workload cache evictions",
+            cache.workload_evictions,
+        );
+        out
+    }
 }
 
 #[cfg(test)]
@@ -212,11 +320,34 @@ mod tests {
     }
 
     #[test]
+    fn quantile_edge_cases_empty_single_and_saturated() {
+        // Empty: every quantile is 0.
+        let h = LatencyHistogram::new();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_us(q), 0);
+        }
+        // A single sample answers every quantile with its bucket's
+        // upper bound (the clamp pins target to sample 1).
+        h.record_us(1000);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_us(q), 1024);
+        }
+        // Top-bucket saturation: u64::MAX µs lands in the last bucket,
+        // whose reported upper bound is 2^32 (the histogram saturates
+        // rather than overflowing the shift).
+        let h = LatencyHistogram::new();
+        h.record_us(u64::MAX);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile_us(1.0), 1u64 << 32);
+        assert_eq!(h.quantile_us(0.0), 1u64 << 32);
+    }
+
+    #[test]
     fn snapshot_has_the_headline_keys() {
         let s = ServeStats::new();
-        s.received.fetch_add(3, Ordering::Relaxed);
-        s.ok.fetch_add(2, Ordering::Relaxed);
-        s.shed.fetch_add(1, Ordering::Relaxed);
+        s.received.add(3);
+        s.ok.add(2);
+        s.shed.inc();
         s.latency.record_us(100);
         let cache = CacheStats { result_hits: 3, result_misses: 1, ..Default::default() };
         let doc = s.snapshot_json(&cache, 128);
@@ -229,5 +360,23 @@ mod tests {
         assert!(doc.get("latency").unwrap().get("p99_us").unwrap().as_f64().unwrap() >= 128.0);
         // The document is wire-stable: it must round-trip through dumps.
         assert!(Json::parse(&doc.dumps()).is_ok());
+    }
+
+    #[test]
+    fn prometheus_text_carries_the_ledger() {
+        let s = ServeStats::new();
+        s.received.add(5);
+        s.ok.add(4);
+        s.queue_depth.set(2);
+        s.latency.record_us(100);
+        let cache = CacheStats { result_hits: 7, ..Default::default() };
+        let text = s.prometheus_text(&cache, 64);
+        assert!(text.contains("# TYPE eocas_serve_received_total counter"));
+        assert!(text.contains("eocas_serve_received_total 5"));
+        assert!(text.contains("eocas_serve_queue_depth 2"));
+        assert!(text.contains("eocas_serve_queue_capacity 64"));
+        assert!(text.contains("# TYPE eocas_serve_latency_us histogram"));
+        assert!(text.contains("eocas_serve_latency_us_count 1"));
+        assert!(text.contains("eocas_serve_cache_result_hits_total 7"));
     }
 }

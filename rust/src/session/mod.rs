@@ -740,12 +740,24 @@ impl Inner {
         let _ = write!(key, "|{:x}", activity.to_bits());
         if let Some(hit) = lock_recover(&self.workloads).get(&key) {
             self.workload_hits.fetch_add(1, Ordering::Relaxed);
+            crate::obs::metrics::session_workload_hits().inc();
             return Ok(hit);
         }
         self.workload_misses.fetch_add(1, Ordering::Relaxed);
-        let wls = Arc::new(generate(model, sparsity, activity)?);
+        crate::obs::metrics::session_workload_misses().inc();
+        let wls = {
+            let _span = crate::obs::trace::span("session.workloads");
+            Arc::new(generate(model, sparsity, activity)?)
+        };
         let bytes = key.len() + approx_workload_bytes(&wls);
-        lock_recover(&self.workloads).insert(key, wls.clone(), bytes);
+        let mut cache = lock_recover(&self.workloads);
+        let before = cache.evictions();
+        cache.insert(key, wls.clone(), bytes);
+        let evicted = cache.evictions() - before;
+        drop(cache);
+        if evicted > 0 {
+            crate::obs::metrics::session_cache_evictions().add(evicted);
+        }
         Ok(wls)
     }
 
@@ -753,12 +765,24 @@ impl Inner {
         let key = req.cache_key();
         if let Some(hit) = lock_recover(&self.results).get(&key) {
             self.result_hits.fetch_add(1, Ordering::Relaxed);
+            crate::obs::metrics::session_result_hits().inc();
             return Ok(hit);
         }
         self.result_misses.fetch_add(1, Ordering::Relaxed);
-        let res = Arc::new(self.compute(req)?);
+        crate::obs::metrics::session_result_misses().inc();
+        let res = {
+            let _span = crate::obs::trace::span("session.compute");
+            Arc::new(self.compute(req)?)
+        };
         let bytes = key.len() + approx_result_bytes(&res);
-        lock_recover(&self.results).insert(key, res.clone(), bytes);
+        let mut cache = lock_recover(&self.results);
+        let before = cache.evictions();
+        cache.insert(key, res.clone(), bytes);
+        let evicted = cache.evictions() - before;
+        drop(cache);
+        if evicted > 0 {
+            crate::obs::metrics::session_cache_evictions().add(evicted);
+        }
         Ok(res)
     }
 
@@ -802,6 +826,17 @@ impl Inner {
                 req.temporal.as_ref(),
                 req.options.spike_encoding,
             );
+            // Partitioning-quality instrument: makespan over mean
+            // per-core load, in 64ths (64 = perfectly balanced).
+            if ev.core_cycles.len() > 1 {
+                let max = ev.core_cycles.iter().copied().max().unwrap_or(0);
+                let sum: u64 = ev.core_cycles.iter().sum();
+                if sum > 0 {
+                    let mean = sum as f64 / ev.core_cycles.len() as f64;
+                    crate::obs::metrics::chip_makespan_imbalance()
+                        .record((max as f64 / mean * 64.0) as u64);
+                }
+            }
             let metrics = chip_metrics(&ev.layers, &req.arch, &self.cfg, &self.area);
             let activity = wls.iter().map(|wl| wl.fp.activity).collect();
             return Ok(EvalResult::from_layers(req, activity, &ev.layers, metrics, ev.noc_j));
@@ -966,6 +1001,7 @@ impl Session {
         if reqs.is_empty() {
             return Vec::new();
         }
+        let _span = crate::obs::trace::span("session.evaluate_many");
         let chunk = workers::chunk_size(reqs.len(), self.threads());
         let (tx, rx) = mpsc::channel();
         for (ci, slice) in reqs.chunks(chunk).enumerate() {
@@ -973,7 +1009,9 @@ impl Session {
             let batch: Vec<EvalRequest> = slice.to_vec();
             let tx = tx.clone();
             let start = ci * chunk;
+            crate::obs::metrics::session_pool_queue_depth().add(1);
             let submitted = self.pool().submit(Box::new(move || {
+                crate::obs::metrics::session_pool_queue_depth().sub(1);
                 let results: Vec<Result<Arc<EvalResult>>> = batch
                     .iter()
                     .map(|req| {
@@ -1002,6 +1040,7 @@ impl Session {
                 // Every worker is dead: stop submitting; the slots of
                 // this and all later chunks are filled with per-slot
                 // errors below instead of panicking the caller.
+                crate::obs::metrics::session_pool_queue_depth().sub(1);
                 break;
             }
         }

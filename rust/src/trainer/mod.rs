@@ -229,7 +229,7 @@ impl Trainer {
             }
             if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
                 last_acc = self.eval_accuracy(&xt, &y)?;
-                eprintln!(
+                crate::log_info!(
                     "step {step:>4}  loss {loss:.4}  acc {last_acc:.2}  rates {:?}",
                     rates.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>()
                 );

@@ -1,0 +1,256 @@
+//! Integration pins for `eocas::obs` — the observability layer's two
+//! hard promises, checked from the outside:
+//!
+//! * pay-for-what-you-use: with tracing and explain enabled, every
+//!   evaluation is bit-identical to the uninstrumented run, across
+//!   dataflow families × architectures × chip configurations;
+//! * provenance: the `--explain` audit's terms sum bit-exactly to the
+//!   headline joules, including the NoC terms of a multi-core chip.
+//!
+//! Plus the export surfaces: a traced arch-search emits valid Chrome
+//! trace-event JSON covering pricing/bound/checkpoint spans, and the
+//! serve daemon answers `GET /metrics` in Prometheus text while its
+//! `/stats` JSON stays intact.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use eocas::arch::space::ArchSpace;
+use eocas::arch::{ArchPool, Architecture};
+use eocas::chip::{ChipConfig, NocSpec, Partitioning};
+use eocas::dataflow::templates::Family;
+use eocas::dse::archsearch::{search, ArchSearchConfig};
+use eocas::model::SnnModel;
+use eocas::obs::{explain, trace};
+use eocas::serve::client::Client;
+use eocas::serve::{ServeConfig, Server};
+use eocas::session::{Dataflow, EvalRequest, Session};
+use eocas::sparsity::SparsityProfile;
+use eocas::util::json::Json;
+
+/// Trace and explain state is process-global; every test in this file
+/// takes the guard so enable/disable cannot interleave.
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn chip_variants() -> Vec<Option<ChipConfig>> {
+    vec![
+        None,
+        Some(ChipConfig::single()),
+        Some(ChipConfig {
+            mesh_rows: 2,
+            mesh_cols: 2,
+            noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+            partitioning: Partitioning::LayerWise,
+        }),
+        Some(ChipConfig {
+            mesh_rows: 2,
+            mesh_cols: 2,
+            noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+            partitioning: Partitioning::ChannelWise,
+        }),
+    ]
+}
+
+fn requests() -> Vec<(String, EvalRequest)> {
+    let model = SnnModel::cifar100_snn();
+    let n_layers = eocas::workload::generate(&model, &[], 0.75).unwrap().len();
+    let mut archs = vec![Architecture::paper_default()];
+    // A second hierarchy from the paper pool, when one differs.
+    if let Some(other) = ArchPool::paper_pool()
+        .candidates
+        .into_iter()
+        .find(|a| a.hier.name != archs[0].hier.name)
+    {
+        archs.push(other);
+    }
+    let mut out = Vec::new();
+    for arch in &archs {
+        for fam in Family::ALL {
+            for (ci, chip) in chip_variants().into_iter().enumerate() {
+                let mut req =
+                    EvalRequest::new(model.clone(), arch.clone(), Dataflow::Family(fam))
+                        .with_sparsity(SparsityProfile::nominal(n_layers, 0.75));
+                if let Some(c) = chip {
+                    req = req.with_chip(c);
+                }
+                out.push((format!("{} {} chip#{ci}", arch.hier.name, fam.name()), req));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn instrumentation_on_is_bit_identical_to_instrumentation_off() {
+    let _g = guard();
+    let reqs = requests();
+
+    trace::disable();
+    explain::disable();
+    let session = Session::builder().threads(1).build();
+    let baseline: Vec<u64> = reqs
+        .iter()
+        .map(|(tag, r)| session.evaluate(r).unwrap_or_else(|e| panic!("{tag}: {e}")).overall_j)
+        .map(f64::to_bits)
+        .collect();
+
+    trace::enable();
+    explain::enable();
+    // A fresh session: the comparison must re-run the pricing chain,
+    // not replay the first session's result cache.
+    let session = Session::builder().threads(1).build();
+    for ((tag, r), base) in reqs.iter().zip(&baseline) {
+        let res = session.evaluate(r).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert_eq!(
+            res.overall_j.to_bits(),
+            *base,
+            "{tag}: instrumented {} vs plain {}",
+            res.overall_j,
+            f64::from_bits(*base)
+        );
+        explain::take_noc_terms();
+    }
+    trace::disable();
+    explain::disable();
+    assert!(trace::event_count() > 0, "tracing was on but recorded nothing");
+    trace::reset();
+}
+
+#[test]
+fn explain_terms_sum_bit_exactly_to_the_headline() {
+    let _g = guard();
+    trace::disable();
+
+    // Single-core (no NoC) and a 2x2 mesh whose NoC energy is strictly
+    // positive — the audit must account for both shapes exactly.
+    let model = SnnModel::cifar100_snn();
+    let arch = Architecture::paper_default();
+    let plain = EvalRequest::new(model.clone(), arch.clone(), Dataflow::Family(Family::AdvWs));
+    let meshed = plain.clone().with_chip(ChipConfig {
+        mesh_rows: 2,
+        mesh_cols: 2,
+        noc: NocSpec { hop_pj_per_bit: 0.05, router_pj_per_bit: 0.02 },
+        partitioning: Partitioning::LayerWise,
+    });
+
+    for (tag, req, expect_noc) in [("plain", plain, false), ("meshed", meshed, true)] {
+        let session = Session::builder().threads(1).build();
+        explain::enable();
+        let res = session.evaluate(&req).unwrap();
+        let terms = explain::take_noc_terms();
+        explain::disable();
+        let ex = explain::Explain::from_result(&res, terms);
+        assert_eq!(
+            ex.total_j().to_bits(),
+            res.overall_j.to_bits(),
+            "{tag}: audit total {} vs headline {}",
+            ex.total_j(),
+            res.overall_j
+        );
+        assert_eq!(ex.noc_j().to_bits(), res.noc_j.to_bits(), "{tag}");
+        if expect_noc {
+            assert!(res.noc_j > 0.0, "{tag}: mesh produced no NoC energy");
+            assert!(!ex.noc.is_empty(), "{tag}: NoC energy without NoC terms");
+        } else {
+            assert!(ex.noc.is_empty(), "{tag}: NoC terms without a mesh");
+        }
+        assert!(!ex.table().is_empty());
+        assert!(ex.to_json().get("layers").is_some());
+    }
+}
+
+#[test]
+fn traced_arch_search_exports_valid_chrome_trace_json() {
+    let _g = guard();
+    let ckpt = std::env::temp_dir().join(format!("eocas_obs_ckpt_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&ckpt);
+
+    trace::enable();
+    trace::reset();
+    let session = Session::builder().threads(1).build();
+    let cfg = ArchSearchConfig { checkpoint: Some(ckpt.clone()), ..Default::default() };
+    let res = search(
+        &session,
+        &SnnModel::paper_layer(),
+        &SparsityProfile::nominal(1, 0.75),
+        &ArchSpace::paper(),
+        &cfg,
+    )
+    .unwrap();
+    trace::disable();
+    assert!(res.complete);
+
+    let doc = trace::export_json();
+    // Round-trip through the wire format: what `--trace` writes.
+    let back = Json::parse(&doc.dumps()).unwrap();
+    let events = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!events.is_empty());
+    let names: Vec<&str> =
+        events.iter().filter_map(|e| e.get("name").and_then(Json::as_str)).collect();
+    for want in ["archsearch.search", "archsearch.score_batch", "archsearch.bound",
+        "archsearch.checkpoint.save"]
+    {
+        assert!(names.contains(&want), "no `{want}` span in {names:?}");
+    }
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+    }
+    trace::reset();
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn serve_answers_prometheus_metrics_beside_intact_stats() {
+    let _g = guard();
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        io_timeout: Duration::from_secs(2),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    // One served evaluation so the ledger has something to export.
+    let mut c = Client::connect(&addr, Duration::from_secs(60)).unwrap();
+    let req = EvalRequest::new(
+        SnnModel::paper_layer(),
+        Architecture::paper_default(),
+        Family::AdvWs,
+    );
+    Client::decode(&c.evaluate(&req).unwrap()).unwrap();
+
+    let http = |raw: &str| -> (String, String) {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        let (head, body) = resp.split_once("\r\n\r\n").unwrap();
+        (head.to_string(), body.to_string())
+    };
+
+    let (head, body) = http("GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.to_lowercase().contains("content-type: text/plain"), "{head}");
+    assert!(body.contains("# TYPE eocas_serve_received_total counter"), "{body}");
+    assert!(body.contains("eocas_serve_ok_total 1"), "{body}");
+    assert!(body.contains("eocas_serve_latency_us_bucket"), "{body}");
+    assert!(body.contains("eocas_serve_latency_us_count"), "{body}");
+
+    // The migrated ledger still serves its JSON shape on /stats.
+    let (head, body) = http("GET /stats HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    let doc = Json::parse(body.trim()).unwrap();
+    let ok = doc.get("requests").and_then(|r| r.get("ok")).and_then(Json::as_f64);
+    assert_eq!(ok, Some(1.0), "{doc:?}");
+    server.stop();
+}
