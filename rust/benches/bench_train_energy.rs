@@ -1,0 +1,185 @@
+//! Bench: training-step energy — one surrogate-gradient BPTT step
+//! (Fp + Bp + Wg with measured forward and gradient-support sparsity
+//! from a LIF trace) priced end-to-end, against the dense-ANN baseline
+//! of identical shape (DESIGN.md §17).
+//!
+//! Measures, and emits as machine-readable `BENCH_train.json`:
+//! * train-step pricing throughput (steps priced/s) for the paper layer
+//!   and the CIFAR-100 SNN, plus the dense-ANN step,
+//! * headlines for the CI regression gate:
+//!   `speedup.steps_per_s` — paper-layer train-step pricings per second
+//!   (a lost fast path in the phase-chain kernel shows up here) — and
+//!   `quality.ann_vs_snn_ratio` — dense-ANN training-step energy over
+//!   the SNN training-step energy on `paper_28nm` (pure deterministic
+//!   model arithmetic: the dense baseline prices every MAC at activity
+//!   1.0 with real multiplies, so the ratio must stay comfortably above
+//!   1.0; a drop means spike sparsity stopped being priced).
+//!
+//! Flags: `--quick` (CI smoke mode: short timing windows),
+//! `--json PATH` (default `BENCH_train.json`).
+
+use eocas::arch::Architecture;
+use eocas::config::EnergyConfig;
+use eocas::dataflow::templates::Family;
+use eocas::energy::model_energy_for_family;
+use eocas::model::SnnModel;
+use eocas::session::{EvalRequest, Session, TrainStepSpec, WorkloadKind};
+use eocas::spike::{self, LifConfig, TemporalSparsity};
+use eocas::util::bench::{black_box, time_it, BenchStats};
+use eocas::util::json::Json;
+use eocas::workload::{generate, generate_dense_ann, LayerWorkload};
+
+struct Case {
+    key: &'static str,
+    stats: BenchStats,
+    /// Training steps priced per timed iteration.
+    items_per_iter: f64,
+}
+
+impl Case {
+    fn per_s(&self) -> f64 {
+        self.items_per_iter / (self.stats.mean_ns / 1e9)
+    }
+}
+
+fn emit(
+    cases: &[Case],
+    speedups: &[(&str, f64)],
+    qualities: &[(&str, f64)],
+    info: &[(&str, f64)],
+    quick: bool,
+    path: &str,
+) {
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0)).set("quick", Json::Bool(quick));
+    let mut jcases = Json::obj();
+    for c in cases {
+        let mut j = Json::obj();
+        j.set("mean_ns", Json::Num(c.stats.mean_ns))
+            .set("p50_ns", Json::Num(c.stats.p50_ns))
+            .set("p95_ns", Json::Num(c.stats.p95_ns))
+            .set("iters", Json::Num(c.stats.iters as f64))
+            .set("steps_per_s", Json::Num(c.per_s()));
+        jcases.set(c.key, j);
+    }
+    doc.set("cases", jcases);
+    let mut js = Json::obj();
+    for (k, v) in speedups {
+        js.set(k, Json::Num(*v));
+    }
+    doc.set("speedup", js);
+    let mut jq = Json::obj();
+    for (k, v) in qualities {
+        jq.set(k, Json::Num(*v));
+    }
+    doc.set("quality", jq);
+    for (k, v) in info {
+        doc.set(k, Json::Num(*v));
+    }
+    match std::fs::write(path, format!("{}\n", doc.dumps())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+/// Train-step workloads: forward rates and gradient support measured
+/// from one LIF trace, applied as the session would apply them.
+fn train_step_workloads(
+    model: &SnnModel,
+    cfg: &EnergyConfig,
+) -> (Vec<LayerWorkload>, TemporalSparsity, TemporalSparsity) {
+    let trace = spike::simulate(model, &LifConfig::default()).expect("lif trace");
+    let forward = TemporalSparsity::from_trace(&trace);
+    let grad = TemporalSparsity::from_trace_gradients(&trace);
+    let rates: Vec<f64> = forward.layers.iter().map(|l| l.mean_rate()).collect();
+    let base = generate(model, &rates, cfg.nominal_activity).expect("workloads");
+    let wls = TrainStepSpec::full(grad.clone()).apply(&base);
+    (wls, forward, grad)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_train.json".to_string());
+    let w = if quick { 0.05 } else { 1.0 };
+
+    let arch = Architecture::paper_default();
+    let cfg = EnergyConfig::default();
+    let paper = SnnModel::paper_layer();
+    let cifar = SnnModel::cifar100_snn();
+
+    let (wls_paper, _, _) = train_step_workloads(&paper, &cfg);
+    let (wls_cifar, _, _) = train_step_workloads(&cifar, &cfg);
+    let wls_ann = generate_dense_ann(&paper).expect("dense-ANN workloads");
+
+    let mut cases: Vec<Case> = Vec::new();
+    let mut push = |key: &'static str, stats: BenchStats, items: f64| {
+        println!("{}", stats.report());
+        println!("  => {:.0} steps/s\n", items / (stats.mean_ns / 1e9));
+        cases.push(Case { key, stats, items_per_iter: items });
+    };
+
+    for (key, wls) in [
+        ("snn_train_step_paper", &wls_paper),
+        ("snn_train_step_cifar100", &wls_cifar),
+        ("dense_ann_step_paper", &wls_ann),
+    ] {
+        let label = format!("train-step pricing {key}");
+        let s = time_it(&label, 2, w, || {
+            black_box(model_energy_for_family(wls, Family::AdvWs, &arch, &cfg));
+        });
+        push(key, s, 1.0);
+    }
+    let steps_per_s = cases[0].per_s();
+
+    // Headlines through the public session path — the exact request the
+    // `report snn-vs-ann` table prices (deterministic model arithmetic,
+    // machine-independent).
+    let session = Session::builder().threads(1).build();
+    let trace = spike::simulate(&paper, &LifConfig::default()).expect("lif trace");
+    let forward = TemporalSparsity::from_trace(&trace);
+    let grad = TemporalSparsity::from_trace_gradients(&trace);
+    let snn = session
+        .evaluate(
+            &EvalRequest::new(paper.clone(), arch.clone(), Family::AdvWs)
+                .with_temporal(forward)
+                .with_train_step(TrainStepSpec::full(grad)),
+        )
+        .expect("SNN train-step evaluation");
+    let ann = session
+        .evaluate(
+            &EvalRequest::new(paper.clone(), arch.clone(), Family::AdvWs)
+                .with_workload_kind(WorkloadKind::DenseAnn),
+        )
+        .expect("dense-ANN evaluation");
+    let ratio = ann.overall_j / snn.overall_j;
+    let snn_infer: f64 = snn.layers.iter().map(|l| l.fp_total_j()).sum();
+    let ann_infer: f64 = ann.layers.iter().map(|l| l.fp_total_j()).sum();
+    println!(
+        "paper_28nm: SNN step {:.3} uJ, dense-ANN step {:.3} uJ => ann_vs_snn_ratio {ratio:.3}",
+        snn.overall_j * 1e6,
+        ann.overall_j * 1e6
+    );
+    println!(
+        "paper_28nm: SNN inference {:.3} uJ, dense-ANN inference {:.3} uJ",
+        snn_infer * 1e6,
+        ann_infer * 1e6
+    );
+    emit(
+        &cases,
+        &[("steps_per_s", steps_per_s)],
+        &[("ann_vs_snn_ratio", ratio)],
+        &[
+            ("snn_step_uj", snn.overall_j * 1e6),
+            ("ann_step_uj", ann.overall_j * 1e6),
+            ("snn_infer_uj", snn_infer * 1e6),
+            ("ann_infer_uj", ann_infer * 1e6),
+        ],
+        quick,
+        &json_path,
+    );
+}

@@ -77,9 +77,15 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineOutcome> {
             .and_then(|v| v.as_arr())
             .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
             .unwrap_or_default();
+        let grad_rates = j
+            .get("grad_rates")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
         RunLog {
             losses,
             firing_rates: rates,
+            grad_rates,
             steps: j.get("step").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize,
             train_accuracy: j.get("train_accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0),
             wall_secs: j.get("wall_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),

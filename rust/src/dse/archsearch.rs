@@ -70,7 +70,7 @@ use crate::energy::batch::{family_model_batch, BatchScore};
 use crate::energy::bound::ModelBound;
 use crate::err;
 use crate::model::SnnModel;
-use crate::session::{Dataflow, EvalRequest, EvalResult, Session};
+use crate::session::{Dataflow, EvalRequest, EvalResult, Session, TrainStepSpec};
 use crate::sparsity::SparsityProfile;
 use crate::spike::temporal::TemporalSparsity;
 use crate::spike::traffic::SpikeEncoding;
@@ -175,6 +175,12 @@ pub struct ArchSearchConfig {
     /// Spike-map traffic pricing; `Auto` (requires `temporal`) applies
     /// to family requests — a mapper request keeps raw pricing.
     pub spike_encoding: SpikeEncoding,
+    /// Score candidates by the energy of one surrogate-gradient BPTT
+    /// training step with measured per-phase sparsity instead of the
+    /// default (nominal-phase) training energy. Applied to every
+    /// request; the fast path and the pruning bound price the same
+    /// overridden workloads, so both stay bit-transparent.
+    pub train_step: Option<TrainStepSpec>,
     /// Candidates per `evaluate_many` batch in the exhaustive walk.
     /// `0` (the default) sizes batches from the session's worker-pool
     /// width: `4 × threads`, clamped to `[1, 256]`.
@@ -215,6 +221,7 @@ impl Default for ArchSearchConfig {
             seed: 0xA2C5_EA2C,
             temporal: None,
             spike_encoding: SpikeEncoding::Raw,
+            train_step: None,
             batch: 0,
             prune: true,
             fast_eval: true,
@@ -236,6 +243,9 @@ impl ArchSearchConfig {
         }
         if self.spike_encoding == SpikeEncoding::Auto && self.temporal.is_none() {
             return Err(err!("spike_encoding=auto requires a temporal sparsity source"));
+        }
+        if let Some(ts) = &self.train_step {
+            ts.validate()?;
         }
         if let Some((i, k)) = self.shard {
             if k == 0 {
@@ -468,6 +478,9 @@ impl<'a> Run<'a> {
             {
                 r = r.with_spike_encoding(SpikeEncoding::Auto);
             }
+        }
+        if let Some(ts) = &self.cfg.train_step {
+            r = r.with_train_step(ts.clone());
         }
         r
     }
@@ -1382,6 +1395,19 @@ fn search_fingerprint(
         SpikeEncoding::Raw => "kR",
         SpikeEncoding::Auto => "kA",
     });
+    // Appended only when present, so pre-train-step fingerprints (which
+    // always end at the encoding marker) stay byte-identical.
+    if let Some(ts) = &cfg.train_step {
+        let _ = write!(
+            key,
+            ";TS{}{}{};",
+            ts.phases.fp as u8, ts.phases.bp as u8, ts.phases.wg as u8
+        );
+        match &ts.grad {
+            Some(g) => g.fingerprint_into(&mut key),
+            None => key.push_str("g-;"),
+        }
+    }
     key
 }
 
@@ -1421,6 +1447,14 @@ pub fn search(
             None => sparsity.clone(),
         };
         session.workloads(model, &profile, session.energy_config().nominal_activity)?
+    };
+    // Train-step scoring rewrites the Bp/Wg activities; building the
+    // bound and the fast path from the same overridden list keeps both
+    // bit-transparent to the session path (which applies the identical
+    // overrides inside `compute`).
+    let wls = match &cfg.train_step {
+        Some(ts) if ts.overrides_phases() => Arc::new(ts.apply(&wls)),
+        _ => wls,
     };
     let bound = cfg.prune.then(|| {
         let _span = crate::obs::trace::span("archsearch.bound");
@@ -1959,6 +1993,52 @@ mod tests {
             assert_eq!(on.best, off.best);
             assert_eq!(on.infeasible, off.infeasible);
         }
+    }
+
+    #[test]
+    fn train_step_objective_is_bit_transparent_to_fast_and_prune() {
+        // Scoring by train-step energy must keep the fast path and the
+        // pruning bound bit-transparent (they price the same overridden
+        // workloads the session does), and must actually change the
+        // objective relative to the nominal-phase search.
+        let (session, model, sparsity) = setup();
+        let space = ArchSpace::reference();
+        let ts = TrainStepSpec::full(TemporalSparsity::constant(1, 6, 0.25));
+        let mk = |prune: bool, fast: bool| {
+            let cfg = ArchSearchConfig {
+                families: vec![Family::AdvWs],
+                train_step: Some(ts.clone()),
+                prune,
+                fast_eval: fast,
+                ..ArchSearchConfig::default()
+            };
+            search(&session, &model, &sparsity, &space, &cfg).unwrap()
+        };
+        let off = mk(false, false);
+        assert_eq!(mk(false, true), off);
+        for on in [mk(true, false), mk(true, true)] {
+            assert_eq!(on.evaluated + on.pruned, off.evaluated);
+            assert_eq!(on.frontier, off.frontier);
+            assert_eq!(on.best, off.best);
+        }
+        // The measured-gradient objective prices below nominal BP/WG.
+        let nominal_cfg = ArchSearchConfig {
+            families: vec![Family::AdvWs],
+            ..ArchSearchConfig::default()
+        };
+        let nominal = search(&session, &model, &sparsity, &space, &nominal_cfg).unwrap();
+        assert!(
+            off.best.as_ref().unwrap().energy_j < nominal.best.as_ref().unwrap().energy_j
+        );
+        // And an invalid spec is rejected up front.
+        let bad = ArchSearchConfig {
+            train_step: Some(TrainStepSpec {
+                phases: crate::session::PhaseSet { fp: true, bp: true, wg: true },
+                grad: None,
+            }),
+            ..ArchSearchConfig::default()
+        };
+        assert!(search(&session, &model, &sparsity, &space, &bad).is_err());
     }
 
     #[test]

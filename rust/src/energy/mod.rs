@@ -116,7 +116,7 @@ impl ConvEnergy {
 /// Compute energy per eqs. (17)–(19): `Mux×o₀ + Add×o₁ + Mul×o₂`.
 pub fn compute_energy(w: &ConvWorkload, cfg: &EnergyConfig) -> f64 {
     let ops = w.op_counts();
-    (ops.mux as f64 * cfg.op_mux_pj + ops.add * cfg.op_add_pj + ops.mul as f64 * cfg.op_mul_pj)
+    (ops.mux as f64 * cfg.op_mux_pj + ops.add * cfg.op_add_pj + ops.mul * cfg.op_mul_pj)
         * 1e-12
 }
 

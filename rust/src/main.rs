@@ -51,8 +51,12 @@ const USAGE: &str = "\
 eocas — Energy-Oriented Computing Architecture Simulator for SNN training
 
 USAGE:
-  eocas report <workload|table1|table3|table4|table5|table6|table7|spike|fig5|fig6|all>
+  eocas report <workload|table1|table3|table4|table5|table6|table7|spike|snn-vs-ann|fig5|fig6|all>
                [--out DIR] [--model paper|cifar100|tiny] [--sparsity PATH]
+               (`snn-vs-ann` prices one surrogate-gradient BPTT training
+                step — Fp + Bp + Wg with measured forward and gradient
+                sparsity from a LIF trace — against a dense-ANN baseline
+                on the same hierarchies; see DESIGN.md §17)
   eocas simulate [--model paper|cifar100|tiny]
                  [--dataflow advws|ws1|ws2|os|rs|mapper]
                  [--arch-file PATH] [--activity X] [--config PATH]
@@ -75,7 +79,7 @@ USAGE:
                   configs/README.md)
   eocas spike-sim [--model paper|cifar100|tiny] [--timesteps N] [--seed N]
                   [--threshold X] [--decay X] [--input-rate X] [--soft-reset]
-                  [--log PATH] [--json]
+                  [--surrogate-window X] [--log PATH] [--json]
                   (writes a run log consumable by --sparsity AND --temporal;
                    --json prints the temporal-sparsity document instead)
   eocas dse      [--samples N] [--threads N] [--model ...]
@@ -373,6 +377,7 @@ fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Resul
                     let temporal = report::spike_temporal(&ctx)?;
                     print!("{}", report::table_spike_modes(&ctx, &temporal).render());
                 }
+                "snn-vs-ann" => print!("{}", report::table_snn_vs_ann(&ctx)?.render()),
                 "fig5" => {
                     let (t, txt) = report::fig5_energy_intervals(&ctx, 4);
                     println!("{txt}");
@@ -847,6 +852,7 @@ fn dispatch(cmd: &str, pos: &[String], flags: &HashMap<String, String>) -> Resul
                 decay: parse_num(flags, "decay", d.decay)?,
                 input_rate: parse_num(flags, "input-rate", d.input_rate)?,
                 soft_reset: flags.contains_key("soft-reset"),
+                surrogate_window: parse_num(flags, "surrogate-window", d.surrogate_window)?,
                 seed: parse_num(flags, "seed", d.seed)?,
             };
             let start = std::time::Instant::now();

@@ -11,14 +11,14 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::arch::{Architecture, ArrayScheme};
+use crate::arch::{Architecture, ArrayScheme, HierarchySpec};
 use crate::compare;
 use crate::config::EnergyConfig;
 use crate::dataflow::templates::{self, Family};
 use crate::dse::{self, DseConfig};
 use crate::model::SnnModel;
 use crate::perfmodel::FpgaModel;
-use crate::session::{EvalRequest, EvalResult, Session};
+use crate::session::{EvalRequest, EvalResult, Session, TrainStepSpec, WorkloadKind};
 use crate::sparsity::SparsityProfile;
 use crate::spike::{self, LifConfig, SpikeEncoding, TemporalSparsity, TrafficModel};
 use crate::util::error::Result;
@@ -420,6 +420,77 @@ pub fn table_spike_modes(ctx: &ReportCtx, temporal: &TemporalSparsity) -> Table 
     t
 }
 
+/// SNN-vs-ANN head-to-head (`eocas report snn-vs-ann`): one surrogate-
+/// gradient BPTT training step of the SNN — forward rates and gradient
+/// support both measured from the same LIF trace — against a dense-ANN
+/// baseline of identical shape flowing through the identical
+/// hierarchy/NoC machinery with activity pinned to 1.0. Reported per
+/// hierarchy: energy per training step (Fp + Bp + Wg) and energy per
+/// inference (forward pass only), with ANN/SNN ratios.
+pub fn table_snn_vs_ann(ctx: &ReportCtx) -> Result<Table> {
+    let trace = spike::simulate(&ctx.model, &LifConfig::default())?;
+    let forward = TemporalSparsity::from_trace(&trace);
+    let grad = TemporalSparsity::from_trace_gradients(&trace);
+    let hiers = [
+        HierarchySpec::paper_28nm(),
+        HierarchySpec::four_level_spike_buffer(),
+        HierarchySpec::unified_sram(),
+    ];
+    let mut reqs = Vec::with_capacity(hiers.len() * 2);
+    for h in &hiers {
+        let arch = Architecture::with_hierarchy(h.clone());
+        reqs.push(
+            EvalRequest::new(ctx.model.clone(), arch.clone(), Family::AdvWs)
+                .with_sparsity(ctx.sparsity.clone())
+                .with_temporal(forward.clone())
+                .with_train_step(TrainStepSpec::full(grad.clone())),
+        );
+        reqs.push(
+            EvalRequest::new(ctx.model.clone(), arch, Family::AdvWs)
+                .with_workload_kind(WorkloadKind::DenseAnn),
+        );
+    }
+    let results: Vec<Arc<EvalResult>> =
+        ctx.session.evaluate_many(&reqs).into_iter().collect::<Result<Vec<_>, _>>()?;
+    let mut t = Table::new(
+        format!("SNN vs dense-ANN training energy (Advanced WS) [{}]", grad.source),
+        &[
+            "hierarchy",
+            "SNN step (uJ)",
+            "ANN step (uJ)",
+            "step ANN/SNN",
+            "SNN infer (uJ)",
+            "ANN infer (uJ)",
+            "infer ANN/SNN",
+        ],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let infer = |r: &EvalResult| -> f64 { r.layers.iter().map(|l| l.fp_total_j()).sum() };
+    for (k, h) in hiers.iter().enumerate() {
+        let snn = &results[2 * k];
+        let ann = &results[2 * k + 1];
+        let (snn_inf, ann_inf) = (infer(snn), infer(ann));
+        t.add_row(vec![
+            h.name.clone(),
+            fmt_uj(snn.overall_j),
+            fmt_uj(ann.overall_j),
+            format!("{:.2}x", ann.overall_j / snn.overall_j),
+            fmt_uj(snn_inf),
+            fmt_uj(ann_inf),
+            format!("{:.2}x", ann_inf / snn_inf),
+        ]);
+    }
+    Ok(t)
+}
+
 /// Architecture-search frontier table (`eocas arch-search`): the Pareto
 /// points of a `dse::archsearch` run over (energy, on-chip capacity),
 /// energy-ascending — the trade-off curve the generative DSE exists to
@@ -670,6 +741,9 @@ pub fn write_all(ctx: &ReportCtx, dir: &Path) -> std::io::Result<Vec<std::path::
         .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))?;
     let t = table_spike_modes(ctx, &temporal);
     dump("table8_spike_modes", t.render(), Some(t.to_csv()))?;
+    let t = table_snn_vs_ann(ctx)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))?;
+    dump("table9_snn_vs_ann", t.render(), Some(t.to_csv()))?;
     let (t, txt) = fig5_energy_intervals(ctx, 4);
     dump("fig5_energy_intervals", format!("{txt}\n{}", t.render()), Some(t.to_csv()))?;
     dump("fig6_dataflow_breakdown", fig6_dataflow_breakdown(ctx), None)?;
@@ -731,6 +805,24 @@ mod tests {
         let measured = spike_temporal(&ctx).unwrap();
         assert_eq!(measured.layers.len(), 1);
         assert!(table_spike_modes(&ctx, &measured).n_rows() == 5);
+    }
+
+    #[test]
+    fn snn_vs_ann_table_prices_both_sides_across_hierarchies() {
+        let ctx = ReportCtx::paper_default();
+        let t = table_snn_vs_ann(&ctx).unwrap();
+        assert_eq!(t.n_rows(), 3);
+        let txt = t.render();
+        assert!(txt.contains("paper_28nm"), "{txt}");
+        assert!(txt.contains("4level_spikebuf"), "{txt}");
+        assert!(txt.contains("unified_sram"), "{txt}");
+        // The dense baseline prices every MAC at full activity with real
+        // multiplies, so it must cost strictly more than the sparse SNN
+        // on every hierarchy, for both the step and the inference column.
+        for line in txt.lines().skip(4).take(3) {
+            assert!(line.contains('x'), "{line}");
+            assert!(!line.contains("0.0x"), "{line}");
+        }
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! JSON encoding of [`EvalRequest`]/[`EvalResult`] — the stable wire
 //! schema (`DESIGN.md` documents it; `SCHEMA_VERSION` gates evolution).
 //!
-//! Schema v4 adds an optional `chip` object to requests (mesh geometry,
+//! Schema v5 adds an optional `train_step` object to requests (which
+//! BPTT phases carry measured sparsity + the gradient-support temporal
+//! profile) and an optional `workload` kind (`"snn"`/`"dense-ann"`);
+//! both default when absent, so v4 documents parse unchanged. Schema v4
+//! adds an optional `chip` object to requests (mesh geometry,
 //! NoC energy rules, partitioning) and a `noc_j` total to results; both
 //! default when absent, so v3 documents parse unchanged. Schema v3 adds
 //! an optional `temporal` sparsity object and a `spike_encoding` option
@@ -10,7 +14,7 @@
 //! architectures and a per-level energy list on operand breakdowns. v1
 //! documents (the fixed Reg/SRAM/DRAM shape: an eight-macro `mem` list,
 //! `reg_j`/`sram_j`/`dram_j` operand fields) are still parsed and mapped
-//! onto the equivalent 3-level hierarchy; output is always v4.
+//! onto the equivalent 3-level hierarchy; output is always v5.
 //!
 //! No `serde` offline; encodings are hand-rolled over
 //! [`crate::util::json::Json`], whose object keys are sorted so `dumps`
@@ -18,7 +22,7 @@
 
 use super::{
     Dataflow, EvalOptions, EvalRequest, EvalResult, LayerBreakdown, OperandBreakdown,
-    PhaseEnergy, MIN_SCHEMA_VERSION, SCHEMA_VERSION,
+    PhaseEnergy, PhaseSet, TrainStepSpec, WorkloadKind, MIN_SCHEMA_VERSION, SCHEMA_VERSION,
 };
 use crate::arch::{
     Architecture, ArrayScheme, HierarchySpec, LevelCapacity, LevelEnergy, LevelSpec,
@@ -485,6 +489,52 @@ fn options_from_json(j: &Json) -> Result<EvalOptions> {
     Ok(EvalOptions { activity, jitter_seed, label, spike_encoding })
 }
 
+/// Stable lowercase key of a workload kind.
+pub fn workload_kind_key(k: WorkloadKind) -> &'static str {
+    match k {
+        WorkloadKind::Snn => "snn",
+        WorkloadKind::DenseAnn => "dense-ann",
+    }
+}
+
+pub fn workload_kind_from_key(s: &str) -> Result<WorkloadKind> {
+    match s {
+        "snn" => Ok(WorkloadKind::Snn),
+        "dense-ann" => Ok(WorkloadKind::DenseAnn),
+        other => Err(err!("unknown workload kind `{other}`")),
+    }
+}
+
+fn train_step_to_json(ts: &TrainStepSpec) -> Json {
+    let mut phases = Json::obj();
+    phases
+        .set("fp", Json::Bool(ts.phases.fp))
+        .set("bp", Json::Bool(ts.phases.bp))
+        .set("wg", Json::Bool(ts.phases.wg));
+    let mut j = Json::obj();
+    j.set("phases", phases)
+        .set("grad", ts.grad.as_ref().map(|g| g.to_json()).unwrap_or(Json::Null));
+    j
+}
+
+fn train_step_from_json(j: &Json) -> Result<TrainStepSpec> {
+    let p = get(j, "phases")?;
+    let flag = |k: &str| -> Result<bool> {
+        match get(p, k)? {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(err!("train_step phase `{k}` is not a boolean")),
+        }
+    };
+    let grad = match j.get("grad") {
+        None | Some(Json::Null) => None,
+        Some(g) => Some(TemporalSparsity::from_json(g)?),
+    };
+    Ok(TrainStepSpec {
+        phases: PhaseSet { fp: flag("fp")?, bp: flag("bp")?, wg: flag("wg")? },
+        grad,
+    })
+}
+
 // ---------------------------------------------------------------------------
 // EvalRequest
 // ---------------------------------------------------------------------------
@@ -505,6 +555,11 @@ impl EvalRequest {
                 "chip",
                 self.chip.as_ref().map(chip_config_to_json).unwrap_or(Json::Null),
             )
+            .set(
+                "train_step",
+                self.train_step.as_ref().map(train_step_to_json).unwrap_or(Json::Null),
+            )
+            .set("workload", Json::Str(workload_kind_key(self.workload).into()))
             .set("options", options_to_json(&self.options));
         j
     }
@@ -521,6 +576,18 @@ impl EvalRequest {
             None | Some(Json::Null) => None,
             Some(c) => Some(chip_config_from_json(c)?),
         };
+        // Optional since v5; absent in v1–v4 documents.
+        let train_step = match j.get("train_step") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(train_step_from_json(t)?),
+        };
+        let workload = match j.get("workload") {
+            None | Some(Json::Null) => WorkloadKind::Snn,
+            Some(w) => {
+                let s = w.as_str().ok_or_else(|| err!("`workload` is not a string"))?;
+                workload_kind_from_key(s)?
+            }
+        };
         Ok(EvalRequest {
             model: model_from_json(get(j, "model")?)?,
             arch: arch_from_json(get(j, "arch")?)?,
@@ -528,6 +595,8 @@ impl EvalRequest {
             sparsity: sparsity_from_json(get(j, "sparsity")?)?,
             temporal,
             chip,
+            train_step,
+            workload,
             options: options_from_json(get(j, "options")?)?,
         })
     }
@@ -899,6 +968,62 @@ mod tests {
         let bad = text.replacen("\"mesh_rows\":2", "\"mesh_rows\":0", 1);
         let e = EvalRequest::from_json_str(&bad).unwrap_err();
         assert!(e.to_string().contains("degenerate"), "{e}");
+    }
+
+    #[test]
+    fn train_step_requests_round_trip_and_v4_documents_still_parse() {
+        let grad = TemporalSparsity::constant(1, 6, 0.25);
+        let req = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        )
+        .with_train_step(TrainStepSpec::full(grad.clone()));
+        let text = req.to_json().dumps();
+        let back = EvalRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(req, back);
+        assert_eq!(back.train_step, Some(TrainStepSpec::full(grad)));
+        assert_eq!(back.workload, WorkloadKind::Snn);
+
+        let dense = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        )
+        .with_workload_kind(WorkloadKind::DenseAnn);
+        let back =
+            EvalRequest::from_json(&Json::parse(&dense.to_json().dumps()).unwrap()).unwrap();
+        assert_eq!(dense, back);
+
+        // A v4-shaped document: no `train_step`, no `workload`, explicit
+        // schema 4 — must parse with the v5 defaults.
+        let plain = EvalRequest::new(
+            SnnModel::paper_layer(),
+            Architecture::paper_default(),
+            Family::AdvWs,
+        );
+        let mut v4 = plain.to_json();
+        if let Json::Obj(m) = &mut v4 {
+            m.remove("train_step");
+            m.remove("workload");
+            m.insert("schema".into(), Json::Num(4.0));
+        }
+        let back = EvalRequest::from_json(&v4).unwrap();
+        assert_eq!(back.train_step, None);
+        assert_eq!(back.workload, WorkloadKind::Snn);
+        assert_eq!(back.model, plain.model);
+
+        // Unknown workload kinds and non-boolean phase flags are
+        // rejected by name.
+        let text = dense.to_json().dumps();
+        let bad = text.replacen("\"workload\":\"dense-ann\"", "\"workload\":\"csr\"", 1);
+        let e = EvalRequest::from_json_str(&bad).unwrap_err();
+        assert!(e.to_string().contains("csr"), "{e}");
+        let text = req.to_json().dumps();
+        let bad = text.replacen("\"bp\":true", "\"bp\":1", 1);
+        assert_ne!(bad, text, "the replacement must have applied");
+        let e = EvalRequest::from_json_str(&bad).unwrap_err();
+        assert!(e.to_string().contains("boolean"), "{e}");
     }
 
     #[test]

@@ -59,6 +59,7 @@ use crate::energy::{
     conv_energy, layer_energy_for_family_temporal, model_energy_for_family, unit_energy,
     ConvEnergy, LayerEnergy,
 };
+use crate::err;
 use crate::model::SnnModel;
 use crate::perfmodel::{chip_metrics, AreaModel, ChipMetrics};
 use crate::sparsity::SparsityProfile;
@@ -67,11 +68,17 @@ use crate::spike::traffic::SpikeEncoding;
 use crate::util::error::Result;
 use crate::util::prng::SplitMix64;
 use crate::util::sync::lock_recover;
-use crate::workload::{generate, LayerWorkload};
+use crate::workload::{generate, generate_dense_ann, LayerWorkload};
 
 /// Version of the `EvalRequest`/`EvalResult` JSON schema.
 ///
-/// * **v4** (current): requests may carry an optional `chip` object
+/// * **v5** (current): requests may carry an optional `train_step`
+///   object (which BPTT phases carry measured sparsity + the
+///   gradient-support temporal profile harvested from surrogate-gradient
+///   maps) and an optional `workload` kind (`"snn"` default, or
+///   `"dense-ann"` for the dense FP16 baseline). Both default when
+///   absent, so v4 documents parse unchanged.
+/// * **v4** (accepted on input): requests may carry an optional `chip` object
 ///   (mesh geometry, NoC energy rules, partitioning scheme) that
 ///   evaluates the model on a multi-core chip of identical cores;
 ///   results gain a `noc_j` total (inter-core NoC energy, `0` for
@@ -88,7 +95,7 @@ use crate::workload::{generate, LayerWorkload};
 ///   eight-macro `mem` list on architectures and `reg_j`/`sram_j`/
 ///   `dram_j` fields on operands. Parsed into the equivalent 3-level
 ///   hierarchy; see DESIGN.md for the compatibility rules.
-pub const SCHEMA_VERSION: u32 = 4;
+pub const SCHEMA_VERSION: u32 = 5;
 
 /// Oldest input schema still parsed.
 pub const MIN_SCHEMA_VERSION: u32 = 1;
@@ -129,6 +136,117 @@ impl From<Family> for Dataflow {
     }
 }
 
+/// Which BPTT phases of a [`TrainStepSpec`] carry *measured* temporal
+/// sparsity. All three phases are always priced (the workload generator
+/// emits Fp + Bp + Wg unconditionally); a phase bit here says "override
+/// this phase's activity with the measured rate" rather than "include
+/// this phase".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseSet {
+    /// Forward pass: spike rates from the forward rasters (these flow in
+    /// through `temporal`/`sparsity` exactly as today — the bit exists so
+    /// a spec can state which phases it believes are measured).
+    pub fp: bool,
+    /// Backward pass: the BP convolution's FP16 MACs are gated by the
+    /// gradient-support rate (fraction of neurons inside the surrogate
+    /// window, hence with nonzero `dL/dV`).
+    pub bp: bool,
+    /// Weight-gradient pass: a WG MAC contributes only where the input
+    /// spiked AND the local gradient is nonzero, so the existing forward
+    /// spike activity is *multiplied* by the gradient-support rate.
+    pub wg: bool,
+}
+
+/// Prices one surrogate-gradient BPTT training step as distinct
+/// Fp + Bp + Wg phases, each with its own measured temporal sparsity.
+///
+/// The forward rates ride in on the request's existing `temporal` /
+/// `sparsity` axes; this spec adds the *gradient-support* profile
+/// (harvested from surrogate-gradient maps via
+/// [`crate::spike::temporal::from_trace_gradients`], or from a trainer
+/// run log) that gates the backward and weight-gradient phases.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainStepSpec {
+    pub phases: PhaseSet,
+    /// Gradient-support temporal sparsity. Required whenever `phases.bp`
+    /// or `phases.wg` is set; layers beyond the profile reuse its last
+    /// entry (same convention as the forward temporal source).
+    pub grad: Option<TemporalSparsity>,
+}
+
+impl TrainStepSpec {
+    /// A forward-only training step: no phase overrides at all. The
+    /// pinned oracle: evaluating this spec is bit-identical to the same
+    /// request without a spec.
+    pub fn fp_only() -> TrainStepSpec {
+        TrainStepSpec { phases: PhaseSet { fp: true, bp: false, wg: false }, grad: None }
+    }
+
+    /// A full BPTT step with all three phases measured.
+    pub fn full(grad: TemporalSparsity) -> TrainStepSpec {
+        TrainStepSpec { phases: PhaseSet { fp: true, bp: true, wg: true }, grad: Some(grad) }
+    }
+
+    /// Structural validation: the forward phase is mandatory (a training
+    /// step without a forward pass prices nothing meaningful) and any
+    /// backward/weight-gradient override needs a gradient profile.
+    pub fn validate(&self) -> Result<()> {
+        if !self.phases.fp {
+            return Err(err!("train_step: the fp phase is mandatory"));
+        }
+        if (self.phases.bp || self.phases.wg) && self.grad.is_none() {
+            return Err(err!(
+                "train_step: bp/wg phase sparsity requires a gradient-support profile"
+            ));
+        }
+        if let Some(g) = &self.grad {
+            g.validate()?;
+        }
+        Ok(())
+    }
+
+    /// True when evaluating this spec actually rewrites workload
+    /// activities (fp-only specs leave the workload list untouched).
+    pub fn overrides_phases(&self) -> bool {
+        self.phases.bp || self.phases.wg
+    }
+
+    /// Apply the measured per-phase gradient sparsity to a generated
+    /// workload list. Layers beyond the profile reuse its last rate.
+    pub fn apply(&self, wls: &[LayerWorkload]) -> Vec<LayerWorkload> {
+        let mut out = wls.to_vec();
+        let grad = match &self.grad {
+            Some(g) => g,
+            None => return out,
+        };
+        for (i, wl) in out.iter_mut().enumerate() {
+            let g = grad.layer_for(i).mean_rate();
+            if self.phases.bp {
+                wl.bp.activity = g;
+            }
+            if self.phases.wg {
+                // Joint gating (eq. 12): forward spike activity × grad
+                // support — a WG MAC fires only where both are nonzero.
+                wl.wg.activity *= g;
+            }
+        }
+        out
+    }
+}
+
+/// Which workload family a request prices: the spiking model (default)
+/// or the dense-ANN baseline that flows through the identical
+/// hierarchy/NoC machinery with sparsity pinned to 1.0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum WorkloadKind {
+    #[default]
+    Snn,
+    /// Dense FP16 ANN equivalent: every layer is a fully-dense `FpMacc`
+    /// convolution evaluated once per step (T collapsed to 1), with no
+    /// LIF soma/grad fixed-function work and spike encodings refused.
+    DenseAnn,
+}
+
 /// Per-request evaluation switches.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct EvalOptions {
@@ -166,6 +284,12 @@ pub struct EvalRequest {
     /// spike traffic is priced over the NoC (`noc_j` on the result).
     /// `None` is the plain single-hierarchy evaluation.
     pub chip: Option<crate::chip::ChipConfig>,
+    /// Optional BPTT training-step spec: which phases carry measured
+    /// temporal sparsity and the gradient-support profile gating Bp/Wg.
+    /// `None` (and a fp-only spec) price exactly as before.
+    pub train_step: Option<TrainStepSpec>,
+    /// Spiking model (default) or the dense-ANN baseline.
+    pub workload: WorkloadKind,
     pub options: EvalOptions,
 }
 
@@ -185,8 +309,23 @@ impl EvalRequest {
             sparsity: SparsityProfile { source: "default".into(), per_layer: Vec::new() },
             temporal: None,
             chip: None,
+            train_step: None,
+            workload: WorkloadKind::default(),
             options: EvalOptions::default(),
         }
+    }
+
+    /// Price one surrogate-gradient BPTT training step with per-phase
+    /// measured sparsity.
+    pub fn with_train_step(mut self, spec: TrainStepSpec) -> EvalRequest {
+        self.train_step = Some(spec);
+        self
+    }
+
+    /// Select the workload family (SNN vs dense-ANN baseline).
+    pub fn with_workload_kind(mut self, kind: WorkloadKind) -> EvalRequest {
+        self.workload = kind;
+        self
     }
 
     pub fn with_sparsity(mut self, sparsity: SparsityProfile) -> EvalRequest {
@@ -286,6 +425,25 @@ impl EvalRequest {
             // `c{rows}x{cols};…` cannot collide with the absent marker.
             Some(c) => c.fingerprint_into(&mut key),
             None => key.push_str("c-;"),
+        }
+        // v5 axes are appended only when present / non-default so every
+        // pre-v5 request keeps its exact historical key (cache
+        // continuity), and injectivity holds because pre-v5 keys always
+        // end at the chip marker: a `T…`/`w…` suffix can only mean the
+        // new axes.
+        if let Some(ts) = &self.train_step {
+            let _ = write!(
+                key,
+                "T{}{}{};",
+                ts.phases.fp as u8, ts.phases.bp as u8, ts.phases.wg as u8
+            );
+            match &ts.grad {
+                Some(g) => g.fingerprint_into(&mut key),
+                None => key.push_str("g-;"),
+            }
+        }
+        if self.workload == WorkloadKind::DenseAnn {
+            key.push_str("wD;");
         }
         key
     }
@@ -730,6 +888,7 @@ impl Inner {
         model: &SnnModel,
         sparsity: &[f64],
         activity: f64,
+        kind: WorkloadKind,
     ) -> Result<Arc<Vec<LayerWorkload>>> {
         use std::fmt::Write as _;
         let mut key = String::with_capacity(128);
@@ -738,6 +897,11 @@ impl Inner {
             let _ = write!(key, "{:x},", v.to_bits());
         }
         let _ = write!(key, "|{:x}", activity.to_bits());
+        // Appended only for the non-default kind so SNN keys (which end
+        // with activity bits, never `|D`) stay byte-identical.
+        if kind == WorkloadKind::DenseAnn {
+            key.push_str("|D");
+        }
         if let Some(hit) = lock_recover(&self.workloads).get(&key) {
             self.workload_hits.fetch_add(1, Ordering::Relaxed);
             crate::obs::metrics::session_workload_hits().inc();
@@ -747,7 +911,10 @@ impl Inner {
         crate::obs::metrics::session_workload_misses().inc();
         let wls = {
             let _span = crate::obs::trace::span("session.workloads");
-            Arc::new(generate(model, sparsity, activity)?)
+            match kind {
+                WorkloadKind::Snn => Arc::new(generate(model, sparsity, activity)?),
+                WorkloadKind::DenseAnn => Arc::new(generate_dense_ann(model)?),
+            }
         };
         let bytes = key.len() + approx_workload_bytes(&wls);
         let mut cache = lock_recover(&self.workloads);
@@ -793,6 +960,25 @@ impl Inner {
             }
         }
         let default_activity = req.options.activity.unwrap_or(self.cfg.nominal_activity);
+        if req.workload == WorkloadKind::DenseAnn {
+            // The dense baseline carries no spike maps, so every
+            // spike-derived axis is refused rather than silently ignored.
+            if req.options.spike_encoding == SpikeEncoding::Auto {
+                return Err(crate::util::error::Error::new(
+                    "dense-ANN workloads carry no spike maps; spike_encoding=auto is refused",
+                ));
+            }
+            if req.temporal.is_some() {
+                return Err(crate::util::error::Error::new(
+                    "dense-ANN workloads have no temporal spike sparsity; drop the temporal source",
+                ));
+            }
+            if req.train_step.is_some() {
+                return Err(crate::util::error::Error::new(
+                    "train-step phase sparsity applies to SNN workloads, not the dense-ANN baseline",
+                ));
+            }
+        }
         // A temporal source supplies the per-layer activity (its exact
         // time-averaged rates); otherwise the scalar profile does.
         let temporal_rates = req.temporal.as_ref().map(|t| t.mean_rates());
@@ -800,7 +986,16 @@ impl Inner {
             Some(r) => r,
             None => &req.sparsity.per_layer,
         };
-        let wls = self.workloads_for(&req.model, rates, default_activity)?;
+        let mut wls = self.workloads_for(&req.model, rates, default_activity, req.workload)?;
+        if let Some(ts) = &req.train_step {
+            ts.validate()?;
+            // Fp-only specs leave the Arc untouched, so downstream
+            // pricing is trivially bit-identical to the plain forward
+            // request (the pinned oracle).
+            if ts.overrides_phases() {
+                wls = Arc::new(ts.apply(&wls));
+            }
+        }
         if let Some(chip) = &req.chip {
             chip.validate().map_err(crate::util::error::Error::new)?;
             let (Dataflow::Family(fam), None) = (req.dataflow, req.options.jitter_seed) else {
@@ -981,7 +1176,7 @@ impl Session {
         sparsity: &SparsityProfile,
         default_activity: f64,
     ) -> Result<Arc<Vec<LayerWorkload>>> {
-        self.inner.workloads_for(model, &sparsity.per_layer, default_activity)
+        self.inner.workloads_for(model, &sparsity.per_layer, default_activity, WorkloadKind::Snn)
     }
 
     /// Evaluate one request (cached).
@@ -1594,5 +1789,146 @@ mod tests {
             raw.overall_j
         );
         assert_eq!(auto.compute_j, raw.compute_j, "compression is a traffic effect");
+    }
+
+    /// The pinned train-step oracle: a Fp-only `TrainStepSpec` must be
+    /// bit-identical to the same request without one — across families,
+    /// scalar and temporal activity sources.
+    #[test]
+    fn fp_only_train_step_is_bit_identical_to_the_forward_request() {
+        let session = Session::builder().threads(1).build();
+        let rate = 0.1 + 0.2;
+        for fam in Family::ALL {
+            for temporal in [None, Some(crate::spike::TemporalSparsity::constant(1, 6, rate))] {
+                let mut base = paper_request().with_sparsity(SparsityProfile::nominal(1, rate));
+                base.dataflow = Dataflow::Family(fam);
+                if let Some(t) = temporal {
+                    base = base.with_temporal(t);
+                }
+                let plain = session.evaluate(&base).unwrap();
+                let fp_only = session
+                    .evaluate(&base.clone().with_train_step(TrainStepSpec::fp_only()))
+                    .unwrap();
+                assert!(
+                    !Arc::ptr_eq(&plain, &fp_only),
+                    "train-step requests must occupy their own cache entries"
+                );
+                assert_eq!(*plain, *fp_only, "{}", fam.name());
+                assert_eq!(plain.overall_j.to_bits(), fp_only.overall_j.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn full_train_step_reprices_bp_and_wg_but_not_fp() {
+        let session = Session::builder().threads(1).build();
+        let grad = crate::spike::TemporalSparsity::constant(1, 6, 0.25);
+        let plain = session.evaluate(&paper_request()).unwrap();
+        let train = session
+            .evaluate(&paper_request().with_train_step(TrainStepSpec::full(grad)))
+            .unwrap();
+        for (p, t) in plain.layers.iter().zip(&train.layers) {
+            assert_eq!(p.fp, t.fp, "forward phase must be untouched");
+            assert!(
+                t.bp.compute_j < p.bp.compute_j,
+                "grad support 0.25 must gate BP MACs: {} !< {}",
+                t.bp.compute_j,
+                p.bp.compute_j
+            );
+            assert!(
+                t.wg.compute_j < p.wg.compute_j,
+                "joint spike x grad gating must shrink WG: {} !< {}",
+                t.wg.compute_j,
+                p.wg.compute_j
+            );
+        }
+        assert!(train.overall_j < plain.overall_j);
+    }
+
+    #[test]
+    fn train_step_requires_a_gradient_profile_for_bp_wg() {
+        let session = Session::builder().threads(1).build();
+        let spec = TrainStepSpec {
+            phases: PhaseSet { fp: true, bp: true, wg: false },
+            grad: None,
+        };
+        let err = session
+            .evaluate(&paper_request().with_train_step(spec))
+            .unwrap_err();
+        assert!(err.to_string().contains("gradient-support"), "{err}");
+        let no_fp = TrainStepSpec {
+            phases: PhaseSet { fp: false, bp: false, wg: false },
+            grad: None,
+        };
+        assert!(session
+            .evaluate(&paper_request().with_train_step(no_fp))
+            .is_err());
+    }
+
+    #[test]
+    fn dense_ann_refuses_spike_machinery() {
+        let session = Session::builder().threads(1).build();
+        let dense = paper_request().with_workload_kind(WorkloadKind::DenseAnn);
+        let enc = session
+            .evaluate(
+                &dense.clone().with_spike_encoding(crate::spike::SpikeEncoding::Auto),
+            )
+            .unwrap_err();
+        assert!(enc.to_string().contains("dense-ANN"), "{enc}");
+        let temporal = session
+            .evaluate(
+                &dense
+                    .clone()
+                    .with_temporal(crate::spike::TemporalSparsity::constant(1, 6, 0.1)),
+            )
+            .unwrap_err();
+        assert!(temporal.to_string().contains("temporal"), "{temporal}");
+        let train = session
+            .evaluate(&dense.with_train_step(TrainStepSpec::fp_only()))
+            .unwrap_err();
+        assert!(train.to_string().contains("train-step"), "{train}");
+    }
+
+    #[test]
+    fn dense_ann_flows_through_the_same_hierarchy() {
+        let session = Session::builder().threads(1).build();
+        let dense = paper_request().with_workload_kind(WorkloadKind::DenseAnn);
+        let res = session.evaluate(&dense).unwrap();
+        assert!(res.overall_j.is_finite() && res.overall_j > 0.0);
+        assert!(res.activity.iter().all(|&a| a == 1.0), "dense activity is pinned to 1.0");
+        for l in &res.layers {
+            assert_eq!(l.soma_compute_j, 0.0, "no LIF soma work on the ANN baseline");
+            assert_eq!(l.grad_compute_j, 0.0, "no surrogate-grad unit on the ANN baseline");
+        }
+        // The identical chip machinery applies: a 1-core zero-NoC chip
+        // is bit-identical to the plain dense evaluation.
+        let on_chip = session
+            .evaluate(&dense.clone().with_chip(crate::chip::ChipConfig::single()))
+            .unwrap();
+        assert_eq!(on_chip.overall_j.to_bits(), res.overall_j.to_bits());
+        // And the dense baseline out-spends the sparse SNN at nominal
+        // activity (the head-to-head's whole point).
+        let snn = session.evaluate(&paper_request()).unwrap();
+        assert!(res.overall_j > snn.overall_j, "{} !> {}", res.overall_j, snn.overall_j);
+    }
+
+    #[test]
+    fn cache_keys_fingerprint_train_step_and_workload_kind() {
+        let grad = crate::spike::TemporalSparsity::constant(1, 6, 0.25);
+        let mut bp_only = TrainStepSpec::full(grad.clone());
+        bp_only.phases.wg = false;
+        let reqs = [
+            paper_request(),
+            paper_request().with_train_step(TrainStepSpec::fp_only()),
+            paper_request().with_train_step(TrainStepSpec::full(grad)),
+            paper_request().with_train_step(bp_only),
+            paper_request().with_workload_kind(WorkloadKind::DenseAnn),
+        ];
+        let keys: Vec<String> = reqs.iter().map(|r| r.cache_key()).collect();
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j], "requests {i} and {j} must not collide");
+            }
+        }
     }
 }

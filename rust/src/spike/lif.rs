@@ -33,6 +33,13 @@ pub struct LifConfig {
     /// `true`: subtract `V_th` on spike (soft reset); `false`: reset the
     /// membrane to zero (the paper's hard reset).
     pub soft_reset: bool,
+    /// Half-width of the surrogate-gradient window around the threshold:
+    /// a neuron whose pre-reset membrane satisfies `|v − V_th| <
+    /// surrogate_window` has a nonzero surrogate derivative, hence a
+    /// nonzero `dL/dV` flowing through it in BPTT. These neurons form the
+    /// gradient-support raster the train-step pricing harvests its BP/WG
+    /// sparsity from. `0.0` means an empty support (no gradient flows).
+    pub surrogate_window: f64,
     /// Seed for input intensities, input spike trains and weights.
     pub seed: u64,
 }
@@ -44,6 +51,7 @@ impl Default for LifConfig {
             decay: 0.5,
             input_rate: 0.5,
             soft_reset: false,
+            surrogate_window: 0.5,
             seed: 0xE0CA5,
         }
     }
@@ -59,6 +67,12 @@ impl LifConfig {
         }
         if !(0.0..=1.0).contains(&self.input_rate) {
             return Err(err!("lif: input_rate {} outside [0, 1]", self.input_rate));
+        }
+        if !(self.surrogate_window.is_finite() && self.surrogate_window >= 0.0) {
+            return Err(err!(
+                "lif: surrogate_window {} must be finite and >= 0",
+                self.surrogate_window
+            ));
         }
         Ok(())
     }
@@ -138,6 +152,12 @@ pub struct SpikeTrace {
     pub timesteps: usize,
     pub config: LifConfig,
     pub rasters: Vec<SpikeRaster>,
+    /// Gradient-support rasters, aligned with `rasters`: bit `(t, i)` is
+    /// set when neuron `i`'s pre-reset membrane at timestep `t` fell
+    /// inside the surrogate window (`|v − V_th| < surrogate_window`), so
+    /// its surrogate derivative — and therefore its BPTT `dL/dV` — is
+    /// nonzero. The raw material for per-phase BP/WG temporal sparsity.
+    pub grad_rasters: Vec<SpikeRaster>,
 }
 
 /// Per-layer simulation state: weights + persistent membrane.
@@ -206,6 +226,8 @@ pub fn simulate(model: &SnnModel, cfg: &LifConfig) -> Result<SpikeTrace> {
             )
         })
         .collect();
+    let mut grad_rasters: Vec<SpikeRaster> =
+        rasters.iter().map(|r| SpikeRaster::new(r.layer, r.neurons, r.timesteps)).collect();
 
     for t in 0..timesteps {
         // Rate-encode the input: Bernoulli(intensity · input_rate).
@@ -227,7 +249,14 @@ pub fn simulate(model: &SnnModel, cfg: &LifConfig) -> Result<SpikeTrace> {
                 }
                 LayerSpec::Conv { .. } | LayerSpec::Linear { .. } => {
                     let current = forward_layer(&act, state);
-                    act = lif_step(state, &current, cfg, t, &mut rasters[compute_idx]);
+                    act = lif_step(
+                        state,
+                        &current,
+                        cfg,
+                        t,
+                        &mut rasters[compute_idx],
+                        &mut grad_rasters[compute_idx],
+                    );
                     compute_idx += 1;
                 }
             }
@@ -239,6 +268,7 @@ pub fn simulate(model: &SnnModel, cfg: &LifConfig) -> Result<SpikeTrace> {
         timesteps,
         config: cfg.clone(),
         rasters,
+        grad_rasters,
     })
 }
 
@@ -311,19 +341,29 @@ fn forward_layer(act: &[f32], state: &LayerState) -> Vec<f32> {
 }
 
 /// One LIF integrate-fire-reset step; returns the layer's output spike
-/// map (1.0 / 0.0) and records it into the raster.
+/// map (1.0 / 0.0), records it into the raster, and records the
+/// surrogate-gradient support (pre-reset `|v − V_th| < window`) into the
+/// gradient raster.
 fn lif_step(
     state: &mut LayerState,
     current: &[f32],
     cfg: &LifConfig,
     t: usize,
     raster: &mut SpikeRaster,
+    grad: &mut SpikeRaster,
 ) -> Vec<f32> {
     let decay = cfg.decay as f32;
     let th = cfg.threshold as f32;
+    let window = cfg.surrogate_window as f32;
     let mut out = vec![0.0f32; current.len()];
     for (i, (&inp, u)) in current.iter().zip(state.membrane.iter_mut()).enumerate() {
         let mut v = decay * *u + inp;
+        // Gradient support is judged on the pre-reset membrane: the
+        // surrogate derivative is a function of the comparator input,
+        // evaluated before the fire/reset branch rewrites it.
+        if (v - th).abs() < window {
+            grad.set(t, i);
+        }
         if v >= th {
             raster.set(t, i);
             out[i] = 1.0;
@@ -426,6 +466,39 @@ mod tests {
         assert!(simulate(&m, &LifConfig { threshold: 0.0, ..Default::default() }).is_err());
         assert!(simulate(&m, &LifConfig { decay: 1.5, ..Default::default() }).is_err());
         assert!(simulate(&m, &LifConfig { input_rate: -0.1, ..Default::default() }).is_err());
+        assert!(
+            simulate(&m, &LifConfig { surrogate_window: -0.5, ..Default::default() }).is_err()
+        );
+        assert!(simulate(&m, &LifConfig { surrogate_window: f64::NAN, ..Default::default() })
+            .is_err());
+    }
+
+    #[test]
+    fn grad_rasters_track_the_surrogate_window() {
+        let m = SnnModel::tiny_snn(1, 4, 10);
+        let trace = simulate(&m, &eager()).unwrap();
+        assert_eq!(trace.grad_rasters.len(), trace.rasters.len());
+        for (g, r) in trace.grad_rasters.iter().zip(&trace.rasters) {
+            assert_eq!(g.layer, r.layer);
+            assert_eq!(g.neurons, r.neurons);
+            assert_eq!(g.timesteps, r.timesteps);
+        }
+        // Some neuron somewhere must land inside the (generous) default
+        // window around an eager threshold.
+        let total: u64 = trace.grad_rasters.iter().map(|g| g.total_events()).sum();
+        assert!(total > 0, "no gradient support recorded");
+        // A zero window means no neuron ever has a nonzero surrogate
+        // derivative — empty support, identical forward spikes.
+        let closed =
+            simulate(&m, &LifConfig { surrogate_window: 0.0, ..eager() }).unwrap();
+        assert_eq!(closed.rasters, trace.rasters, "window must not perturb spiking");
+        let none: u64 = closed.grad_rasters.iter().map(|g| g.total_events()).sum();
+        assert_eq!(none, 0);
+        // Widening the window can only grow the support.
+        let wide =
+            simulate(&m, &LifConfig { surrogate_window: 10.0, ..eager() }).unwrap();
+        let wide_total: u64 = wide.grad_rasters.iter().map(|g| g.total_events()).sum();
+        assert!(wide_total >= total, "{wide_total} < {total}");
     }
 
     #[test]

@@ -200,6 +200,20 @@ impl TemporalSparsity {
         }
     }
 
+    /// Measure a simulated trace's *gradient-support* rasters: the
+    /// per-layer × per-timestep fraction of neurons inside the surrogate
+    /// window (nonzero `dL/dV`). This is the temporal sparsity a
+    /// train-step request attaches to its BP/WG phases.
+    pub fn from_trace_gradients(trace: &SpikeTrace) -> TemporalSparsity {
+        TemporalSparsity {
+            source: format!(
+                "spike-sim-grad({}, seed={}, T={}, win={})",
+                trace.model, trace.config.seed, trace.timesteps, trace.config.surrogate_window
+            ),
+            layers: trace.grad_rasters.iter().map(LayerTemporal::from_raster).collect(),
+        }
+    }
+
     /// The degenerate constant-rate profile (scalar lifted to temporal).
     /// `neurons` is a nominal per-layer population for the statistics.
     pub fn constant(layers: usize, timesteps: usize, rate: f64) -> TemporalSparsity {
@@ -440,6 +454,23 @@ mod tests {
             assert_eq!(lt.timesteps(), trace.timesteps);
         }
         t.validate().unwrap();
+    }
+
+    #[test]
+    fn from_trace_gradients_measures_the_grad_rasters() {
+        let m = SnnModel::tiny_snn(1, 4, 10);
+        let trace = simulate(&m, &eager()).unwrap();
+        let g = TemporalSparsity::from_trace_gradients(&trace);
+        assert_eq!(g.layers.len(), trace.grad_rasters.len());
+        for (lt, r) in g.layers.iter().zip(&trace.grad_rasters) {
+            assert_eq!(lt.layer, r.layer);
+            assert_eq!(lt.total_events(), r.total_events());
+        }
+        g.validate().unwrap();
+        // Forward and gradient profiles come from different rasters and
+        // fingerprint differently in cache keys.
+        let f = TemporalSparsity::from_trace(&trace);
+        assert_ne!(f.source, g.source);
     }
 
     #[test]

@@ -118,11 +118,18 @@ impl SyntheticDataset {
 
 /// The result of a training run; serializes to the run-log JSON that
 /// `sparsity::SparsityProfile::load` consumes.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunLog {
     pub losses: Vec<f64>,
-    /// Final-step firing rate per spiking layer.
+    /// Final-step firing rate per spiking layer (the forward `Spar^l`).
     pub firing_rates: Vec<f64>,
+    /// Final-step gradient-support rate per spiking layer: the fraction
+    /// of neurons inside the surrogate window, hence with nonzero
+    /// `dL/dV` — the measured sparsity of the BP/WG training phases.
+    /// Empty when the run's artifacts do not report it (the PJRT
+    /// train-step predates the field); the spike simulator's
+    /// gradient-support harvest is the offline source in that case.
+    pub grad_rates: Vec<f64>,
     pub steps: usize,
     pub train_accuracy: f64,
     pub wall_secs: f64,
@@ -133,10 +140,40 @@ impl RunLog {
         let mut j = Json::obj();
         j.set("losses", Json::from_f64s(&self.losses))
             .set("firing_rates", Json::from_f64s(&self.firing_rates))
+            .set("grad_rates", Json::from_f64s(&self.grad_rates))
             .set("step", Json::Num(self.steps as f64))
             .set("train_accuracy", Json::Num(self.train_accuracy))
             .set("wall_secs", Json::Num(self.wall_secs));
         j
+    }
+
+    /// Parse a run-log document. `grad_rates` is optional (older logs
+    /// predate it) and defaults to empty — a strict superset of the
+    /// historical schema, so every existing log still loads.
+    pub fn from_json(j: &Json) -> Result<RunLog> {
+        let f64s = |k: &str| -> Result<Vec<f64>> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| err!("run log missing `{k}`"))?
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| err!("run log `{k}` holds a non-number")))
+                .collect()
+        };
+        let num = |k: &str| -> Result<f64> {
+            j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| err!("run log missing `{k}`"))
+        };
+        let grad_rates = match j.get("grad_rates") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(_) => f64s("grad_rates")?,
+        };
+        Ok(RunLog {
+            losses: f64s("losses")?,
+            firing_rates: f64s("firing_rates")?,
+            grad_rates,
+            steps: num("step")? as usize,
+            train_accuracy: num("train_accuracy")?,
+            wall_secs: num("wall_secs")?,
+        })
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -238,6 +275,10 @@ impl Trainer {
         Ok(RunLog {
             losses,
             firing_rates: rates,
+            // The AOT train-step artifact reports forward rates only;
+            // gradient-support rates come from the spike simulator's
+            // surrogate-window harvest (`eocas spike-sim`).
+            grad_rates: Vec::new(),
             steps: cfg.steps,
             train_accuracy: last_acc,
             wall_secs: start.elapsed().as_secs_f64(),
@@ -369,6 +410,7 @@ mod tests {
         let log = RunLog {
             losses: vec![2.3, 1.9],
             firing_rates: vec![0.22, 0.11],
+            grad_rates: vec![0.4, 0.3],
             steps: 2,
             train_accuracy: 0.5,
             wall_secs: 1.0,
@@ -376,6 +418,28 @@ mod tests {
         let j = log.to_json();
         let prof = crate::sparsity::SparsityProfile::from_run_log(&j).unwrap();
         assert_eq!(prof.per_layer, vec![0.22, 0.11]);
+    }
+
+    #[test]
+    fn run_log_round_trips_with_and_without_grad_rates() {
+        let log = RunLog {
+            losses: vec![2.3, 1.9],
+            firing_rates: vec![0.22, 0.11],
+            grad_rates: vec![0.4, 0.3],
+            steps: 2,
+            train_accuracy: 0.5,
+            wall_secs: 1.0,
+        };
+        let text = log.to_json().dumps();
+        let back = RunLog::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(log, back);
+        // Logs written before the field existed still load, with empty
+        // gradient rates.
+        let old = text.replacen("\"grad_rates\":[0.4,0.3],", "", 1);
+        assert_ne!(old, text, "the replacement must have applied");
+        let back = RunLog::from_json(&Json::parse(&old).unwrap()).unwrap();
+        assert!(back.grad_rates.is_empty());
+        assert_eq!(back.firing_rates, log.firing_rates);
     }
 
     // End-to-end training through PJRT is exercised by

@@ -165,7 +165,13 @@ pub enum OpKind {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OpCounts {
     pub mux: u64,
-    pub mul: u64,
+    /// FP16 multiplies actually executed. For the BP convolution this is
+    /// activity-scaled: a measured gradient-support rate (the fraction of
+    /// neurons inside the surrogate window, hence with nonzero `dL/dV`)
+    /// gates the dense MACs. Stored as f64 because the factor is
+    /// fractional; at the default activity of 1.0 the scaling is the
+    /// exact `× 1.0` identity.
+    pub mul: f64,
     /// FP16 additions actually executed. For spike convolutions this is
     /// activity-scaled (eq. 5 / eq. 12); stored as f64 because the
     /// activity factor is fractional.
@@ -188,8 +194,10 @@ pub struct ConvWorkload {
     pub in_bits: u32,
     pub w_bits: u32,
     pub out_bits: u32,
-    /// Spike-activity multiplier `Spar^l` applied to FP16 adds for
-    /// spike convolutions (eq. 5 / 12). Ignored for `FpMacc`.
+    /// Activity multiplier. For spike convolutions this is `Spar^l`
+    /// applied to FP16 adds (eq. 5 / 12); for `FpMacc` it is the
+    /// gradient-support rate gating both muls and adds (1.0 = fully
+    /// dense, the historical behaviour).
     pub activity: f64,
 }
 
@@ -197,13 +205,19 @@ impl ConvWorkload {
     /// Operation counts per the paper's equations.
     ///
     /// * FP  (eqs. 4–5):  `Mux = Π dims`, `Add = Π dims × Spar`
-    /// * BP  (eq. 9):     `Mul = Add = Π dims`
+    /// * BP  (eq. 9):     `Mul = Add = Π dims × activity` (activity is
+    ///   1.0 — the paper's dense count — unless a measured
+    ///   gradient-support rate is attached by a train-step request)
     /// * WG  (eqs. 11–12):`Mux = Π dims`, `Add = Π(without P) × (C·P·Spar·Q + 1)`
     ///   — which we evaluate exactly, including the `+1` bias-like term.
     pub fn op_counts(&self) -> OpCounts {
         let total = self.dims.total();
         match (self.kind, self.phase) {
-            (OpKind::FpMacc, _) => OpCounts { mux: 0, mul: total, add: total as f64 },
+            (OpKind::FpMacc, _) => OpCounts {
+                mux: 0,
+                mul: total as f64 * self.activity,
+                add: total as f64 * self.activity,
+            },
             (OpKind::SpikeMuxAdd, Phase::Wg) => {
                 // eq. (12): B*T*R*S*M * (C*H*Spar*W + 1)
                 let d = &self.dims;
@@ -214,10 +228,10 @@ impl ConvWorkload {
                     * d.get(Dim::Q) as f64
                     * self.activity
                     + 1.0;
-                OpCounts { mux: total, mul: 0, add: outer as f64 * inner }
+                OpCounts { mux: total, mul: 0.0, add: outer as f64 * inner }
             }
             (OpKind::SpikeMuxAdd, _) => {
-                OpCounts { mux: total, mul: 0, add: total as f64 * self.activity }
+                OpCounts { mux: total, mul: 0.0, add: total as f64 * self.activity }
             }
         }
     }
@@ -292,6 +306,11 @@ impl LayerWorkload {
         out.fp.dims.sizes[Dim::M.idx()] = m;
         out.wg.dims.sizes[Dim::M.idx()] = m;
         out.bp.dims.sizes[Dim::C.idx()] = m;
+        // Dense-ANN layers carry no LIF soma/grad units (all-zero
+        // `UnitWork`); a channel slice of nothing stays nothing.
+        if self.units.soma_ops == 0 && self.units.grad_ops == 0 {
+            return out;
+        }
         let d = &out.fp.dims;
         let somas = d.get(Dim::N) * d.get(Dim::T) * m * d.get(Dim::P) * d.get(Dim::Q);
         out.units = UnitWork {
@@ -329,6 +348,56 @@ pub fn generate(
             .unwrap_or(default_activity);
         compute_idx += 1;
         out.push(layer_workload(l, n, t, act)?);
+    }
+    Ok(out)
+}
+
+/// Generate a dense-ANN baseline workload for `model`: the same layer
+/// shapes run as one conventional FP16 training step. Every phase is an
+/// [`OpKind::FpMacc`] convolution at activity 1.0 (no spike gating, no
+/// sparsity), activations move as 16-bit tensors instead of 1-bit spike
+/// maps, the timestep axis collapses to 1 (an ANN evaluates each layer
+/// once per step, not once per SNN timestep), and there is no LIF
+/// soma/grad fixed-function work. This is the head-to-head the
+/// `snn-vs-ann` report prices through the identical hierarchy machinery.
+pub fn generate_dense_ann(model: &SnnModel) -> Result<Vec<LayerWorkload>> {
+    let shaped = model.shaped_layers()?;
+    let n = model.batch as u64;
+    let mut out = Vec::new();
+    for l in shaped.iter().filter(|l| l.is_compute()) {
+        let (m, c) = (l.out_c as u64, l.in_c as u64);
+        let (p, q) = (l.out_h as u64, l.out_w as u64);
+        let k = l.kernel() as u64;
+        let dense = |phase: Phase, dims: ConvDims| ConvWorkload {
+            layer: l.index,
+            phase,
+            dims,
+            kind: OpKind::FpMacc,
+            in_bits: 16,
+            w_bits: 16,
+            out_bits: 16,
+            activity: 1.0,
+        };
+        let fp = dense(Phase::Fp, ConvDims::new(n, 1, m, c, p, q, k, k));
+        let bp = dense(Phase::Bp, ConvDims::new(n, 1, c, m, p, q, k, k));
+        let wg = dense(Phase::Wg, ConvDims::new(n, 1, m, c, p, q, k, k));
+        for (phase, dims) in [("FP", &fp.dims), ("BP", &bp.dims), ("WG", &wg.dims)] {
+            check_grid(l.index, phase, dims)?;
+        }
+        out.push(LayerWorkload {
+            layer: l.index,
+            fp,
+            bp,
+            wg,
+            units: UnitWork {
+                soma_ops: 0,
+                grad_ops: 0,
+                soma_sram_bits: 0,
+                soma_dram_bits: 0,
+                grad_sram_bits: 0,
+                grad_dram_bits: 0,
+            },
+        });
     }
     Ok(out)
 }
@@ -439,7 +508,7 @@ mod tests {
         assert_eq!(fp.mux, expect);
         assert!((fp.add - expect as f64 * 0.75).abs() < 1.0); // eq. (5)
         let bp = wl.bp.op_counts();
-        assert_eq!(bp.mul, expect); // eq. (9)
+        assert_eq!(bp.mul, expect as f64); // eq. (9), exact at activity 1.0
         assert!((bp.add - expect as f64).abs() < 1.0);
         let wg = wl.wg.op_counts();
         assert_eq!(wg.mux, expect); // eq. (11)
@@ -552,6 +621,49 @@ mod tests {
         assert_eq!(half.fp.dims.get(Dim::C), wl.fp.dims.get(Dim::C));
         assert_eq!(half.units.soma_ops, wl.units.soma_ops / 2);
         assert_eq!(half.units.soma_sram_bits, wl.units.soma_sram_bits / 2);
+    }
+
+    #[test]
+    fn fpmacc_activity_gates_mul_and_add() {
+        let wl = paper_wl();
+        // Activity 1.0 (the default BP workload) is the exact dense count.
+        let dense = wl.bp.op_counts();
+        assert_eq!(dense.mul, wl.bp.dims.total() as f64);
+        // A measured gradient-support rate gates both muls and adds.
+        let mut gated = wl.bp.clone();
+        gated.activity = 0.25;
+        let g = gated.op_counts();
+        assert_eq!(g.mul, wl.bp.dims.total() as f64 * 0.25);
+        assert_eq!(g.add, wl.bp.dims.total() as f64 * 0.25);
+        assert_eq!(g.mux, 0);
+    }
+
+    #[test]
+    fn dense_ann_workloads_are_dense_fp16_with_no_units() {
+        let m = SnnModel::paper_layer();
+        let wls = generate_dense_ann(&m).unwrap();
+        assert_eq!(wls.len(), generate(&m, &[], 0.75).unwrap().len());
+        for wl in &wls {
+            for w in wl.convs() {
+                assert_eq!(w.kind, OpKind::FpMacc);
+                assert_eq!(w.activity, 1.0);
+                assert_eq!((w.in_bits, w.w_bits, w.out_bits), (16, 16, 16));
+                // One pass per step, not one per SNN timestep.
+                assert_eq!(w.dims.get(Dim::T), 1);
+            }
+            assert_eq!(wl.units.soma_ops, 0);
+            assert_eq!(wl.units.grad_ops, 0);
+            assert_eq!(wl.units.soma_sram_bits, 0);
+            assert_eq!(wl.units.grad_sram_bits, 0);
+            // Channel slicing (the chip partitioner) must preserve the
+            // no-units invariant rather than re-deriving LIF work.
+            let half = wl.with_out_channels(wl.out_channels() / 2);
+            assert_eq!(half.units.soma_ops, 0);
+            assert_eq!(half.units.soma_sram_bits, 0);
+        }
+        // BP still transposes channels in the dense grid.
+        let snn = generate(&m, &[], 0.75).unwrap();
+        assert_eq!(wls[0].bp.dims.get(Dim::M), snn[0].bp.dims.get(Dim::M));
     }
 
     #[test]

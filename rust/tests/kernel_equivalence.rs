@@ -233,6 +233,96 @@ fn soa_batch_kernel_matches_the_session_headline() {
 }
 
 #[test]
+fn soa_batch_kernel_is_bit_identical_on_train_step_phase_chains() {
+    // Train-step pricing rewrites Bp/Wg activities per layer from the
+    // measured gradient-support rates — a non-uniform per-phase chain
+    // the SoA fast path must still price bit-for-bit like the scalar
+    // kernel, or the architecture search's fast path would silently
+    // diverge from the session on train-step objectives.
+    use eocas::energy::batch::family_model_batch;
+    use eocas::energy::model_energy_for_family;
+    use eocas::session::TrainStepSpec;
+    use eocas::spike::{self, LifConfig, TemporalSparsity};
+    let cfg = EnergyConfig::default();
+    let archs = vec![
+        Architecture::paper_default(),
+        Architecture::with_array(ArrayScheme::new(8, 32)),
+        Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+        Architecture::with_hierarchy(HierarchySpec::unified_sram()),
+    ];
+    let arch_refs: Vec<&Architecture> = archs.iter().collect();
+    for model in [SnnModel::paper_layer(), SnnModel::cifar100_snn()] {
+        let trace = spike::simulate(&model, &LifConfig::default()).unwrap();
+        let spec = TrainStepSpec::full(TemporalSparsity::from_trace_gradients(&trace));
+        let base = generate(&model, &[], cfg.nominal_activity).unwrap();
+        let wls = spec.apply(&base);
+        // The override must actually change the phase chain (otherwise
+        // this test degenerates into the nominal-activity pin above).
+        assert!(
+            wls.iter().zip(&base).any(|(w, b)| w.bp.activity != b.bp.activity
+                || w.wg.activity != b.wg.activity),
+            "{}: gradient overrides were a no-op",
+            model.name
+        );
+        for fam in Family::ALL {
+            let batch = family_model_batch(&wls, fam, &arch_refs, &cfg);
+            assert_eq!(batch.len(), archs.len());
+            for (arch, score) in archs.iter().zip(&batch) {
+                let layers = model_energy_for_family(&wls, fam, arch, &cfg);
+                let scalar_j: f64 = layers.iter().map(|l| l.overall_j()).sum();
+                let scalar_cycles: u64 = layers.iter().map(|l| l.cycles()).sum();
+                assert_eq!(
+                    score.overall_j.to_bits(),
+                    scalar_j.to_bits(),
+                    "{} {} {}: batch {} vs scalar {}",
+                    model.name,
+                    fam.name(),
+                    arch.hier.name,
+                    score.overall_j,
+                    scalar_j
+                );
+                assert_eq!(score.cycles, scalar_cycles, "{} {}", model.name, fam.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn fp_only_train_step_matches_the_forward_headline_through_the_session() {
+    // The oracle pin from ISSUE/DESIGN §17: a TrainStep that prices only
+    // the forward phase is byte-for-byte the existing forward request —
+    // same headline joules, same per-layer breakdowns, same cycles.
+    use eocas::session::{EvalRequest, Session, TrainStepSpec};
+    let session = Session::builder().threads(1).build();
+    let model = SnnModel::paper_layer();
+    for arch in [
+        Architecture::paper_default(),
+        Architecture::with_hierarchy(HierarchySpec::four_level_spike_buffer()),
+    ] {
+        for fam in Family::ALL {
+            let plain = session
+                .evaluate(&EvalRequest::new(model.clone(), arch.clone(), fam))
+                .unwrap();
+            let fp = session
+                .evaluate(
+                    &EvalRequest::new(model.clone(), arch.clone(), fam)
+                        .with_train_step(TrainStepSpec::fp_only()),
+                )
+                .unwrap();
+            assert_eq!(
+                plain.overall_j.to_bits(),
+                fp.overall_j.to_bits(),
+                "{} {}",
+                fam.name(),
+                arch.hier.name
+            );
+            assert_eq!(plain.layers, fp.layers, "{}", fam.name());
+            assert_eq!(plain.cycles, fp.cycles);
+        }
+    }
+}
+
+#[test]
 fn search_lower_bound_floors_chip_partitioned_scores() {
     // The branch-and-bound floor must hold for multi-core chip
     // evaluations too: partitions cover the layer extents and NoC
